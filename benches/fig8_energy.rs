@@ -1,0 +1,82 @@
+//! Bench F8: regenerate Fig. 8 (normalized energy, ADC/DAC/RRAM
+//! breakdown) for all three datasets, plus ablation A1 (OU-size sweep).
+//!
+//! Run: `cargo bench --bench fig8_energy`
+
+use rram_pattern_accel::config::{HardwareConfig, SimConfig};
+use rram_pattern_accel::mapping::{naive::NaiveMapping, pattern::PatternMapping, MappingScheme};
+use rram_pattern_accel::pruning::synthetic::ALL_PROFILES;
+use rram_pattern_accel::report;
+use rram_pattern_accel::sim;
+use rram_pattern_accel::util::json::Json;
+use rram_pattern_accel::util::threadpool;
+use rram_pattern_accel::xbar::CellGeometry;
+
+const PAPER_ENERGY: [f64; 3] = [2.13, 2.15, 1.98];
+
+fn main() {
+    let threads = threadpool::default_threads();
+    let sim_cfg = SimConfig::default();
+
+    println!("FIG. 8 — NORMALIZED ENERGY (baseline = 1.0)\n");
+    let mut rows = Vec::new();
+    for (pi, profile) in ALL_PROFILES.iter().enumerate() {
+        let hw = HardwareConfig::default();
+        let geom = CellGeometry::from_hw(&hw);
+        let nw = profile.generate(42);
+        let spec = nw.spec.clone();
+        let naive = NaiveMapping.map_network(&nw, &geom, threads);
+        let ours = PatternMapping.map_network(&nw, &geom, threads);
+        let base = sim::simulate_network(&naive, &spec, &hw, &sim_cfg, threads);
+        let mine = sim::simulate_network(&ours, &spec, &hw, &sim_cfg, threads);
+        let row = report::Fig8Row {
+            dataset: profile.name.to_string(),
+            baseline: base.total_energy(),
+            ours: mine.total_energy(),
+            paper_efficiency: PAPER_ENERGY[pi],
+        };
+        println!("{}", row.lines());
+        // paper's key observation: ADC dominates both stacks
+        let be = base.total_energy();
+        let oe = mine.total_energy();
+        assert!(be.adc_pj > be.dac_pj + be.rram_pj, "ADC must dominate baseline");
+        assert!(oe.adc_pj > oe.dac_pj + oe.rram_pj, "ADC must dominate ours");
+        // band: ~2x energy efficiency
+        assert!(
+            row.efficiency() > 1.4 && row.efficiency() < 3.5,
+            "{}: energy efficiency {:.2} out of band",
+            profile.name,
+            row.efficiency()
+        );
+        rows.push(row.to_json());
+    }
+    report::write_json("fig8.json", &Json::Arr(rows)).expect("write");
+    println!("\nwrote results/fig8.json");
+
+    // --- Ablation A1: OU-size sweep (cifar10) ---
+    println!("\nABLATION A1 — OU size sweep (cifar10, energy efficiency)\n");
+    let nw = ALL_PROFILES[0].generate(42);
+    let spec = nw.spec.clone();
+    let mut ablation = Vec::new();
+    for (our, ouc) in [(4usize, 4usize), (8, 8), (9, 8), (16, 16)] {
+        let hw = HardwareConfig { ou_rows: our, ou_cols: ouc, ..Default::default() };
+        let geom = CellGeometry::from_hw(&hw);
+        let naive = NaiveMapping.map_network(&nw, &geom, threads);
+        let ours = PatternMapping.map_network(&nw, &geom, threads);
+        let base = sim::simulate_network(&naive, &spec, &hw, &sim_cfg, threads);
+        let mine = sim::simulate_network(&ours, &spec, &hw, &sim_cfg, threads);
+        let cmp = sim::Comparison { baseline: base, ours: mine };
+        println!(
+            "  OU {:>2}x{:<2}: energy {:.2}x  speedup {:.2}x",
+            our, ouc, cmp.energy_efficiency(), cmp.speedup(),
+        );
+        ablation.push(rram_pattern_accel::util::json::obj(vec![
+            ("ou_rows", our.into()),
+            ("ou_cols", ouc.into()),
+            ("energy_efficiency", cmp.energy_efficiency().into()),
+            ("speedup", cmp.speedup().into()),
+        ]));
+    }
+    report::write_json("ablation_ou_size.json", &Json::Arr(ablation)).expect("write");
+    println!("\nwrote results/ablation_ou_size.json");
+}

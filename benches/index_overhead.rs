@@ -1,0 +1,83 @@
+//! Bench X1: regenerate §V-D index overhead analysis for all three
+//! datasets (KB of out-channel indexes + pattern shapes, vs model size).
+//!
+//! Run: `cargo bench --bench index_overhead`
+
+use rram_pattern_accel::config::HardwareConfig;
+use rram_pattern_accel::mapping::{index, pattern::PatternMapping, MappingScheme};
+use rram_pattern_accel::pruning::synthetic::ALL_PROFILES;
+use rram_pattern_accel::report;
+use rram_pattern_accel::util::json::{obj, Json};
+use rram_pattern_accel::util::threadpool;
+use rram_pattern_accel::xbar::CellGeometry;
+
+const PAPER_INDEX_KB: [f64; 3] = [729.5, 1013.5, 990.6];
+const PAPER_ZERO_RATIO: [f64; 3] = [0.409, 0.274, 0.285];
+
+fn main() {
+    let hw = HardwareConfig::default();
+    let geom = CellGeometry::from_hw(&hw);
+    let threads = threadpool::default_threads();
+
+    println!("§V-D — INDEX OVERHEAD ANALYSIS\n");
+    let mut rows = Vec::new();
+    for (pi, profile) in ALL_PROFILES.iter().enumerate() {
+        let nw = profile.generate(42);
+        let mapped = PatternMapping.map_network(&nw, &geom, threads);
+        let kernel_bits: usize = mapped
+            .layers
+            .iter()
+            .map(|l| index::overhead(l).kernel_index_bits)
+            .sum();
+        let shape_bits: usize = mapped
+            .layers
+            .iter()
+            .map(|l| index::overhead(l).shape_bits)
+            .sum();
+        let kb = (kernel_bits + shape_bits) as f64 / 8.0 / 1000.0;
+        let stored_weights: usize = mapped
+            .layers
+            .iter()
+            .flat_map(|l| l.blocks.iter())
+            .map(|b| b.kernels() * b.rows())
+            .sum();
+        let dense_mb = nw.spec.total_weights() as f64 * 2.0 / 1e6;
+        let pruned_mb = stored_weights as f64 * 2.0 / 1e6;
+        let zr = nw.stats().all_zero_kernel_ratio;
+        println!(
+            "{:<10} index {:>7.1} KB (paper {:>7.1} KB)  kernel-idx {:>7.1} KB \
+             shapes {:>5.1} KB  model {:>5.1}->{:4.1} MB  index/model {:>4.1}%  \
+             zero-kernels {:.1}% (paper {:.1}%)",
+            profile.name,
+            kb,
+            PAPER_INDEX_KB[pi],
+            kernel_bits as f64 / 8e3,
+            shape_bits as f64 / 8e3,
+            dense_mb,
+            pruned_mb,
+            100.0 * kb / 1000.0 / pruned_mb,
+            100.0 * zr,
+            100.0 * PAPER_ZERO_RATIO[pi],
+        );
+        // shape check: the dataset ordering of overhead follows the
+        // paper (cifar10 smallest — highest all-zero ratio).
+        rows.push(obj(vec![
+            ("dataset", profile.name.into()),
+            ("index_kb", kb.into()),
+            ("paper_index_kb", PAPER_INDEX_KB[pi].into()),
+            ("kernel_index_kb", (kernel_bits as f64 / 8e3).into()),
+            ("shape_kb", (shape_bits as f64 / 8e3).into()),
+            ("model_pruned_mb", pruned_mb.into()),
+        ]));
+    }
+    let kbs: Vec<f64> = rows
+        .iter()
+        .map(|r| r.get("index_kb").as_f64().unwrap())
+        .collect();
+    assert!(
+        kbs[0] < kbs[1] && kbs[0] < kbs[2],
+        "cifar10 must have the smallest index overhead (highest zero ratio): {kbs:?}"
+    );
+    report::write_json("index_overhead.json", &Json::Arr(rows)).expect("write");
+    println!("\nwrote results/index_overhead.json");
+}

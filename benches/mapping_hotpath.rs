@@ -1,0 +1,61 @@
+//! Bench P1 (§Perf): mapping-engine hot path throughput.
+//!
+//! Measures kernel-reordering mapping end to end (group → compress →
+//! place) per layer and for the full VGG16/ImageNet network, in
+//! kernels/second — the L3 target in DESIGN.md §8 is mapping the full
+//! ImageNet VGG16 in under a second.
+//!
+//! Run: `cargo bench --bench mapping_hotpath`
+
+use rram_pattern_accel::config::HardwareConfig;
+use rram_pattern_accel::mapping::{pattern::PatternMapping, MappingScheme};
+use rram_pattern_accel::nn::ConvLayer;
+use rram_pattern_accel::pruning::synthetic::{generate_layer, IMAGENET};
+use rram_pattern_accel::util::bench::{bb, bench, throughput, BenchConfig};
+use rram_pattern_accel::util::rng::Rng;
+use rram_pattern_accel::util::threadpool;
+use rram_pattern_accel::xbar::CellGeometry;
+
+fn main() {
+    let hw = HardwareConfig::default();
+    let geom = CellGeometry::from_hw(&hw);
+    let cfg = BenchConfig::default();
+
+    println!("§Perf P1 — MAPPING HOT PATH\n");
+
+    // single hot layer: VGG conv5_x-scale (512x512 kernels)
+    let mut rng = Rng::seed_from(1);
+    let w = generate_layer(512, 512, 8, 0.86, 0.41, &mut rng);
+    let layer = ConvLayer { name: "conv8".into(), cout: 512, cin: 512, fmap: 4 };
+    let r = bench("map 512x512 layer (262k kernels)", &cfg, || {
+        let ml = PatternMapping.map_layer(0, &layer, &w, &geom);
+        bb(ml.n_crossbars);
+    });
+    println!(
+        "  -> {:.1} M kernels/s\n",
+        throughput(&r, (512 * 512) as u64) / 1e6
+    );
+
+    // full ImageNet VGG16 network, serial vs parallel
+    let nw = IMAGENET.generate(42);
+    let total_kernels = nw.spec.total_kernels() as u64;
+    let r1 = bench("map vgg16-imagenet (1 thread)", &cfg, || {
+        bb(PatternMapping.map_network(&nw, &geom, 1).total_crossbars());
+    });
+    let nthreads = threadpool::default_threads();
+    let rn = bench(
+        &format!("map vgg16-imagenet ({nthreads} threads)"),
+        &cfg,
+        || {
+            bb(PatternMapping.map_network(&nw, &geom, nthreads).total_crossbars());
+        },
+    );
+    println!(
+        "\n  -> serial {:.1} M kernels/s, parallel {:.1} M kernels/s \
+         ({:.2}x scaling); target: full network < 1 s ({})",
+        throughput(&r1, total_kernels) / 1e6,
+        throughput(&rn, total_kernels) / 1e6,
+        r1.mean_ns / rn.mean_ns,
+        if rn.mean_ns < 1e9 { "MET" } else { "MISSED" },
+    );
+}

@@ -1,0 +1,64 @@
+//! Bench P2 (§Perf): cycle/energy simulator inner-loop throughput.
+//!
+//! Measures simulated OU-operations per second over the VGG16/cifar10
+//! network — the DESIGN.md §8 target is ≥ 10 M OU-ops/s.
+//!
+//! Run: `cargo bench --bench sim_hotpath`
+
+use rram_pattern_accel::config::{HardwareConfig, SimConfig};
+use rram_pattern_accel::mapping::{naive::NaiveMapping, pattern::PatternMapping, MappingScheme};
+use rram_pattern_accel::pruning::synthetic::CIFAR10;
+use rram_pattern_accel::sim;
+use rram_pattern_accel::util::bench::{bb, bench, BenchConfig};
+use rram_pattern_accel::util::threadpool;
+use rram_pattern_accel::xbar::CellGeometry;
+
+fn main() {
+    let hw = HardwareConfig::default();
+    let geom = CellGeometry::from_hw(&hw);
+    let threads = threadpool::default_threads();
+    let cfg = BenchConfig::default();
+
+    println!("§Perf P2 — SIMULATOR HOT PATH\n");
+    let nw = CIFAR10.generate(42);
+    let spec = nw.spec.clone();
+    let naive = NaiveMapping.map_network(&nw, &geom, threads);
+    let ours = PatternMapping.map_network(&nw, &geom, threads);
+    let sim_cfg = SimConfig::default();
+
+    // how many OU ops does one full simulation visit?
+    let probe = sim::simulate_network(&ours, &spec, &hw, &sim_cfg, threads);
+    let ou_ops_visited: f64 = probe
+        .layers
+        .iter()
+        .map(|l| {
+            let samples = sim_cfg.sample_positions.unwrap_or(1) as f64;
+            let positions = spec.layers[l.layer_idx].positions() as f64;
+            (l.ou_ops + l.skipped_ou_ops) * samples / positions
+        })
+        .sum();
+
+    for (name, mapped) in [("pattern", &ours), ("naive", &naive)] {
+        let r1 = bench(&format!("simulate {name} (1 thread)"), &cfg, || {
+            bb(sim::simulate_network(mapped, &spec, &hw, &sim_cfg, 1).total_cycles());
+        });
+        let rn = bench(
+            &format!("simulate {name} ({threads} threads)"),
+            &cfg,
+            || {
+                bb(sim::simulate_network(mapped, &spec, &hw, &sim_cfg, threads)
+                    .total_cycles());
+            },
+        );
+        if name == "pattern" {
+            let mops = ou_ops_visited / (rn.mean_ns / 1e9) / 1e6;
+            println!(
+                "  -> {:.1} M simulated OU-ops/s (target >= 10 M/s: {}), \
+                 thread scaling {:.2}x\n",
+                mops,
+                if mops >= 10.0 { "MET" } else { "MISSED" },
+                r1.mean_ns / rn.mean_ns,
+            );
+        }
+    }
+}

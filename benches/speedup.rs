@@ -1,0 +1,83 @@
+//! Bench S1: regenerate §V-C performance speedup for all three datasets,
+//! plus ablation A2 (activation-sparsity sweep) showing how the Input
+//! Preprocessing Unit's all-zero detection drives the gain.
+//!
+//! Run: `cargo bench --bench speedup`
+
+use rram_pattern_accel::config::{HardwareConfig, SimConfig};
+use rram_pattern_accel::mapping::{naive::NaiveMapping, pattern::PatternMapping, MappingScheme};
+use rram_pattern_accel::pruning::synthetic::ALL_PROFILES;
+use rram_pattern_accel::report;
+use rram_pattern_accel::sim;
+use rram_pattern_accel::util::json::{obj, Json};
+use rram_pattern_accel::util::threadpool;
+use rram_pattern_accel::xbar::CellGeometry;
+
+const PAPER_SPEEDUP: [f64; 3] = [1.35, 1.15, 1.17];
+
+fn main() {
+    let hw = HardwareConfig::default();
+    let geom = CellGeometry::from_hw(&hw);
+    let threads = threadpool::default_threads();
+    let sim_cfg = SimConfig::default();
+
+    println!("§V-C — PERFORMANCE SPEEDUP (cycles, naive / pattern)\n");
+    let mut rows = Vec::new();
+    let mut speedups = Vec::new();
+    for (pi, profile) in ALL_PROFILES.iter().enumerate() {
+        let nw = profile.generate(42);
+        let spec = nw.spec.clone();
+        let naive = NaiveMapping.map_network(&nw, &geom, threads);
+        let ours = PatternMapping.map_network(&nw, &geom, threads);
+        let base = sim::simulate_network(&naive, &spec, &hw, &sim_cfg, threads);
+        let mine = sim::simulate_network(&ours, &spec, &hw, &sim_cfg, threads);
+        let cmp = sim::Comparison { baseline: base, ours: mine };
+        println!("{}", report::speedup_line(profile.name, &cmp, PAPER_SPEEDUP[pi]));
+        assert!(cmp.speedup() > 1.0, "{}: must win", profile.name);
+        speedups.push(cmp.speedup());
+        rows.push(obj(vec![
+            ("dataset", profile.name.into()),
+            ("naive_cycles", cmp.baseline.total_cycles().into()),
+            ("pattern_cycles", cmp.ours.total_cycles().into()),
+            ("speedup", cmp.speedup().into()),
+            ("paper_speedup", PAPER_SPEEDUP[pi].into()),
+        ]));
+    }
+    // shape check: cifar10 (highest all-zero ratio) wins the most,
+    // as in the paper (1.35 > 1.17 > 1.15).
+    assert!(
+        speedups[0] > speedups[1] && speedups[0] > speedups[2],
+        "cifar10 should have the largest speedup: {speedups:?}"
+    );
+    report::write_json("speedup.json", &Json::Arr(rows)).expect("write");
+    println!("\nwrote results/speedup.json");
+
+    // --- Ablation A2: activation zero-blob ratio sweep (cifar10) ---
+    println!("\nABLATION A2 — activation sparsity sweep (cifar10)\n");
+    let nw = ALL_PROFILES[0].generate(42);
+    let spec = nw.spec.clone();
+    let naive = NaiveMapping.map_network(&nw, &geom, threads);
+    let ours = PatternMapping.map_network(&nw, &geom, threads);
+    let mut ablation = Vec::new();
+    for blob in [0.0, 0.15, 0.3, 0.45, 0.6, 0.75, 0.9] {
+        let cfg = SimConfig {
+            zero_blob_ratio: blob,
+            dead_channel_ratio: 0.0,
+            ..Default::default()
+        };
+        let base = sim::simulate_network(&naive, &spec, &hw, &cfg, threads);
+        let mine = sim::simulate_network(&ours, &spec, &hw, &cfg, threads);
+        let cmp = sim::Comparison { baseline: base, ours: mine };
+        println!(
+            "  zero-blob {:.2}: speedup {:.2}x  energy {:.2}x",
+            blob, cmp.speedup(), cmp.energy_efficiency()
+        );
+        ablation.push(obj(vec![
+            ("zero_blob_ratio", blob.into()),
+            ("speedup", cmp.speedup().into()),
+            ("energy_efficiency", cmp.energy_efficiency().into()),
+        ]));
+    }
+    report::write_json("ablation_activation.json", &Json::Arr(ablation)).expect("write");
+    println!("\nwrote results/ablation_activation.json");
+}

@@ -1,0 +1,45 @@
+//! Bench T2: regenerate Table II (pattern pruning results) from the
+//! Table-II-calibrated synthetic networks + report generator timing.
+//!
+//! Run: `cargo bench --bench table2_pruning`
+
+use rram_pattern_accel::pruning::synthetic::ALL_PROFILES;
+use rram_pattern_accel::report;
+use rram_pattern_accel::util::bench::{bench, BenchConfig};
+use rram_pattern_accel::util::json::{obj, Json};
+
+fn main() {
+    println!("TABLE II — PATTERN PRUNING RESULTS (measured vs paper)\n");
+    let mut rows = Vec::new();
+    for profile in ALL_PROFILES {
+        let nw = profile.generate(42);
+        let stats = nw.stats();
+        println!("{}", report::table2_row(profile, &stats));
+        assert_eq!(
+            stats.patterns_per_layer,
+            profile.patterns_per_layer.to_vec(),
+            "{}: per-layer pattern counts must match Table II exactly",
+            profile.name
+        );
+        rows.push(obj(vec![
+            ("dataset", profile.name.into()),
+            ("sparsity", stats.sparsity.into()),
+            ("paper_sparsity", profile.sparsity.into()),
+            (
+                "patterns_per_layer",
+                rram_pattern_accel::util::json::arr_usize(&stats.patterns_per_layer),
+            ),
+            ("all_zero_ratio", stats.all_zero_kernel_ratio.into()),
+            ("paper_all_zero_ratio", profile.all_zero_ratio.into()),
+        ]));
+    }
+    report::write_json("table2.json", &Json::Arr(rows)).expect("write");
+    println!("\nwrote results/table2.json\n");
+
+    // perf: generator throughput (it sits on the bench critical path)
+    let cfg = BenchConfig::default();
+    bench("generate vgg16-cifar10 (synthetic)", &cfg, || {
+        let nw = ALL_PROFILES[0].generate(7);
+        std::hint::black_box(nw.layers.len());
+    });
+}

@@ -1,0 +1,158 @@
+//! End-to-end validation (DESIGN.md §6): the full three-layer stack on a
+//! real trained-and-pattern-pruned network.
+//!
+//! `make artifacts` trained SmallCNN on the synthetic 10-class dataset,
+//! ran the paper's iterative prune→project→retrain pipeline (L2/L1,
+//! JAX + Pallas), and exported weights + golden logits + HLO. This
+//! example closes the loop in Rust:
+//!
+//!   1. PJRT executes the AOT artifact; logits must match the python
+//!      golden file (runtime equivalence).
+//!   2. The mapper lays the pruned weights onto crossbars; the index
+//!      buffer must reconstruct the placement (paper §IV-C).
+//!   3. The functional OU simulator classifies real test images through
+//!      the *mapped* crossbars; accuracy must match the python
+//!      crossbar-mode accuracy (mapping preserves the computation).
+//!   4. The cycle/energy simulator reports the paper's metrics for this
+//!      network under naive vs pattern mapping.
+//!
+//! Run: `make artifacts && cargo run --release --example e2e_train_map`
+
+use std::path::Path;
+
+use rram_pattern_accel::config::{HardwareConfig, SimConfig};
+use rram_pattern_accel::mapping::{
+    index, naive::NaiveMapping, pattern::PatternMapping, MappingScheme,
+};
+use rram_pattern_accel::report;
+use rram_pattern_accel::runtime::Engine;
+use rram_pattern_accel::sim::{self, smallcnn};
+use rram_pattern_accel::util::cli::Args;
+use rram_pattern_accel::util::json::obj;
+
+fn main() {
+    let args = Args::new("end-to-end train->prune->map->simulate validation")
+        .opt("artifacts", "artifacts", "artifacts directory")
+        .opt("images", "128", "test images for the accuracy check")
+        .parse(std::env::args().skip(1))
+        .unwrap_or_else(|e| {
+            eprintln!("{e}");
+            std::process::exit(2)
+        });
+    let dir = Path::new(args.get("artifacts"));
+    let n_images = args.get_usize("images").unwrap();
+
+    let model = smallcnn::SmallCnn::load(dir).expect("run `make artifacts` first");
+    let td = smallcnn::TestData::load(dir).expect("test data");
+    let hw = HardwareConfig::smallcnn_functional();
+
+    println!("== training pipeline (from smallcnn_meta.json) ==");
+    let acc = model.meta.get("accuracy");
+    println!(
+        "  dense {:.2}% -> projected {:.2}% -> retrained {:.2}% \
+         (crossbar-quantized {:.2}%)",
+        100.0 * acc.get("dense").as_f64().unwrap_or(0.0),
+        100.0 * acc.get("projected").as_f64().unwrap_or(0.0),
+        100.0 * acc.get("retrained_float").as_f64().unwrap_or(0.0),
+        100.0 * acc.get("crossbar").as_f64().unwrap_or(0.0),
+    );
+    let stats = model.weights.stats();
+    println!(
+        "  sparsity {:.2}%, patterns/layer {:?}, all-zero kernels {:.1}%",
+        100.0 * stats.sparsity,
+        stats.patterns_per_layer,
+        100.0 * stats.all_zero_kernel_ratio
+    );
+
+    // ---- 1. PJRT vs golden ----
+    let engine = Engine::load(&dir.join("smallcnn_b1.hlo.txt")).expect("load HLO");
+    let n_golden = td.golden_x.shape[0];
+    let mut max_err = 0.0f32;
+    for i in 0..n_golden {
+        let img = smallcnn::image(&td.golden_x, i);
+        let out = engine
+            .run_f32(&[(&[1usize, 3, 32, 32], &img.data)])
+            .expect("execute");
+        for (o, g) in out
+            .iter()
+            .zip(td.golden_logits.data[i * 10..(i + 1) * 10].iter())
+        {
+            max_err = max_err.max((o - g).abs());
+        }
+    }
+    println!("\n== 1. runtime equivalence ==");
+    println!("  PJRT vs python golden logits over {n_golden} images: max |err| = {max_err:.2e}");
+    assert!(max_err < 1e-3, "golden mismatch");
+
+    // ---- 2. mapping + index round-trip ----
+    let mapped = model.map(&PatternMapping, &hw);
+    mapped.validate().expect("mapping invariants");
+    let geom = rram_pattern_accel::xbar::CellGeometry::from_hw(&hw);
+    let mut idx_bytes = 0usize;
+    for ml in &mapped.layers {
+        let buf = index::encode(ml);
+        let decoded = index::decode(&buf).expect("decode");
+        let replay = index::reconstruct_placements(&decoded, &geom);
+        assert_eq!(replay, ml.placements, "placement reconstruction");
+        idx_bytes += buf.bytes.len();
+    }
+    println!("\n== 2. mapping ==");
+    println!(
+        "  {} crossbars ({} naive), {} pattern blocks, index buffers {} bytes, \
+         placement reconstruction from indexes: OK",
+        mapped.total_crossbars(),
+        NaiveMapping.map_network(&model.weights, &geom, 4).total_crossbars(),
+        mapped.layers.iter().map(|l| l.blocks.len()).sum::<usize>(),
+        idx_bytes
+    );
+
+    // ---- 3. mapped functional accuracy ----
+    let n = n_images.min(td.test_x.shape[0]);
+    let mut correct = 0usize;
+    for i in 0..n {
+        let img = smallcnn::image(&td.test_x, i);
+        let logits = model.forward(&mapped, &img, &hw, true);
+        if smallcnn::argmax(&logits) as i32 == td.test_y[i] {
+            correct += 1;
+        }
+    }
+    let sim_acc = correct as f64 / n as f64;
+    let py_acc = model.meta.get("accuracy").get("crossbar").as_f64().unwrap_or(0.0);
+    println!("\n== 3. mapped-crossbar functional accuracy ==");
+    println!(
+        "  rust OU simulator: {:.2}% on {} images (python crossbar mode: {:.2}%)",
+        100.0 * sim_acc,
+        n,
+        100.0 * py_acc
+    );
+    assert!(
+        (sim_acc - py_acc).abs() < 0.12,
+        "mapped accuracy diverged from python crossbar accuracy"
+    );
+
+    // ---- 4. accelerator metrics for this network ----
+    let sim_cfg = SimConfig { sample_positions: None, ..Default::default() };
+    let naive = NaiveMapping.map_network(&model.weights, &geom, 4);
+    let base = sim::simulate_network(&naive, &model.spec, &hw, &sim_cfg, 4);
+    let mine = sim::simulate_network(&mapped, &model.spec, &hw, &sim_cfg, 4);
+    let cmp = sim::Comparison { baseline: base, ours: mine };
+    println!("\n== 4. accelerator metrics (SmallCNN) ==");
+    println!(
+        "  area {:.2}x | energy {:.2}x | speedup {:.2}x",
+        cmp.area_efficiency(),
+        cmp.energy_efficiency(),
+        cmp.speedup()
+    );
+
+    let j = obj(vec![
+        ("golden_max_err", (max_err as f64).into()),
+        ("mapped_accuracy", sim_acc.into()),
+        ("python_crossbar_accuracy", py_acc.into()),
+        ("area_efficiency", cmp.area_efficiency().into()),
+        ("energy_efficiency", cmp.energy_efficiency().into()),
+        ("speedup", cmp.speedup().into()),
+        ("sparsity", stats.sparsity.into()),
+    ]);
+    report::write_json("e2e_train_map.json", &j).expect("write results");
+    println!("\nwrote results/e2e_train_map.json — all e2e checks passed");
+}

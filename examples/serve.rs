@@ -1,0 +1,122 @@
+//! Serving demo: the L3 coordinator batches concurrent inference
+//! requests over the AOT-compiled SmallCNN artifact (PJRT, no Python),
+//! while the accelerator simulator reports what the same workload costs
+//! on the RRAM chip under naive vs pattern mapping.
+//!
+//! Run: `make artifacts && cargo run --release --example serve -- --requests 64`
+
+use std::path::Path;
+use std::sync::atomic::Ordering;
+use std::time::{Duration, Instant};
+
+use rram_pattern_accel::config::{HardwareConfig, SimConfig};
+use rram_pattern_accel::coordinator::{Coordinator, PjrtBackend};
+use rram_pattern_accel::mapping::{
+    naive::NaiveMapping, pattern::PatternMapping, MappingScheme,
+};
+use rram_pattern_accel::runtime::Engine;
+use rram_pattern_accel::sim::{self, smallcnn};
+use rram_pattern_accel::util::cli::Args;
+
+fn main() {
+    let args = Args::new("serving demo over the SmallCNN artifact")
+        .opt("artifacts", "artifacts", "artifacts directory")
+        .opt("requests", "64", "demo request count")
+        .opt("max-wait-ms", "2", "batcher max wait")
+        .parse(std::env::args().skip(1))
+        .unwrap_or_else(|e| {
+            eprintln!("{e}");
+            std::process::exit(2)
+        });
+    let dir = args.get("artifacts").to_string();
+    let n = args.get_usize("requests").unwrap();
+    let wait = Duration::from_millis(args.get_usize("max-wait-ms").unwrap() as u64);
+
+    let td = smallcnn::TestData::load(Path::new(&dir))
+        .expect("test data (run `make artifacts` first)");
+    let model = smallcnn::SmallCnn::load(Path::new(&dir)).expect("model bundle");
+
+    // --- serving path: PJRT functional model behind the batcher ---
+    let hlo = format!("{dir}/smallcnn_b8.hlo.txt");
+    let coord = Coordinator::start(
+        move || {
+            let engine = Engine::load(Path::new(&hlo)).expect("load artifact");
+            println!("[serve] engine up on platform {}", engine.platform());
+            PjrtBackend {
+                engine,
+                batch: 8,
+                input_shape: vec![3, 32, 32],
+                output_len: 10,
+            }
+        },
+        wait,
+    );
+
+    let img_len = 3 * 32 * 32;
+    let avail = td.test_x.shape[0];
+    let t0 = Instant::now();
+    // Submit from 4 client threads to exercise the router.
+    let replies: Vec<(usize, smallcnn::TestData)> = Vec::new();
+    drop(replies);
+    let mut correct = 0usize;
+    std::thread::scope(|scope| {
+        let coord = &coord;
+        let td = &td;
+        let mut handles = Vec::new();
+        for t in 0..4usize {
+            handles.push(scope.spawn(move || {
+                let mut ok = 0usize;
+                for i in (t..n).step_by(4) {
+                    let idx = i % avail;
+                    let img =
+                        &td.test_x.data[idx * img_len..(idx + 1) * img_len];
+                    let rx = coord.submit(img.to_vec());
+                    let reply = rx.recv().expect("reply");
+                    if smallcnn::argmax(&reply.logits) as i32 == td.test_y[idx] {
+                        ok += 1;
+                    }
+                }
+                ok
+            }));
+        }
+        for h in handles {
+            correct += h.join().unwrap();
+        }
+    });
+    let elapsed = t0.elapsed();
+    let lat = coord.metrics.latency_summary();
+    println!(
+        "[serve] {n} requests, {:.1} req/s, accuracy {:.1}%, {} batches \
+         ({} padded slots), latency mean {:.2} ms p50 {:.2} p99 {:.2}",
+        n as f64 / elapsed.as_secs_f64(),
+        100.0 * correct as f64 / n as f64,
+        coord.metrics.batches.load(Ordering::Relaxed),
+        coord.metrics.padded_slots.load(Ordering::Relaxed),
+        lat.mean() / 1000.0,
+        lat.median() / 1000.0,
+        lat.percentile(99.0) / 1000.0,
+    );
+    coord.shutdown();
+
+    // --- accelerator cost of the same workload (per the simulator) ---
+    let hw = HardwareConfig::smallcnn_functional();
+    let geom = rram_pattern_accel::xbar::CellGeometry::from_hw(&hw);
+    let sim_cfg = SimConfig { sample_positions: None, ..Default::default() };
+    let naive = NaiveMapping.map_network(&model.weights, &geom, 4);
+    let ours = PatternMapping.map_network(&model.weights, &geom, 4);
+    let base = sim::simulate_network(&naive, &model.spec, &hw, &sim_cfg, 4);
+    let mine = sim::simulate_network(&ours, &model.spec, &hw, &sim_cfg, 4);
+    let cmp = sim::Comparison { baseline: base, ours: mine };
+    println!(
+        "[accel] per-image on-chip cost: naive {:.1} nJ / {:.0} cycles; \
+         pattern {:.1} nJ / {:.0} cycles -> {:.2}x energy, {:.2}x speedup, \
+         {:.2}x crossbar area",
+        cmp.baseline.total_energy().total_pj() / 1000.0,
+        cmp.baseline.total_cycles(),
+        cmp.ours.total_energy().total_pj() / 1000.0,
+        cmp.ours.total_cycles(),
+        cmp.energy_efficiency(),
+        cmp.speedup(),
+        cmp.area_efficiency(),
+    );
+}

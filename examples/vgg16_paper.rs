@@ -1,0 +1,124 @@
+//! Full paper reproduction driver: Table II, Fig. 7, Fig. 8, §V-C
+//! speedup and §V-D index overhead for all three datasets, written to
+//! `results/*.json` and printed in the paper's units.
+//!
+//! Run: `cargo run --release --example vgg16_paper`
+
+use rram_pattern_accel::config::{HardwareConfig, SimConfig};
+use rram_pattern_accel::mapping::{
+    index, kmeans::KmeansMapping, naive::NaiveMapping, ou_sparse::OuSparseMapping,
+    pattern::PatternMapping, MappingScheme,
+};
+use rram_pattern_accel::pruning::synthetic::ALL_PROFILES;
+use rram_pattern_accel::report;
+use rram_pattern_accel::sim;
+use rram_pattern_accel::util::json::{obj, Json};
+use rram_pattern_accel::util::threadpool;
+use rram_pattern_accel::xbar::CellGeometry;
+
+const PAPER_AREA: [f64; 3] = [4.67, 5.20, 4.16];
+const PAPER_ENERGY: [f64; 3] = [2.13, 2.15, 1.98];
+const PAPER_SPEEDUP: [f64; 3] = [1.35, 1.15, 1.17];
+const PAPER_INDEX_KB: [f64; 3] = [729.5, 1013.5, 990.6];
+
+fn main() {
+    let seed = 42u64;
+    let hw = HardwareConfig::default();
+    let geom = CellGeometry::from_hw(&hw);
+    let threads = threadpool::default_threads();
+    let sim_cfg = SimConfig::default();
+
+    println!("{}", report::table1(&hw));
+    let mut out_rows = Vec::new();
+
+    for (pi, profile) in ALL_PROFILES.iter().enumerate() {
+        println!("==== {} ====", profile.name);
+        let nw = profile.generate(seed);
+        let spec = nw.spec.clone();
+
+        // --- Table II ---
+        let stats = nw.stats();
+        println!("{}", report::table2_row(profile, &stats));
+
+        // --- mappings ---
+        let naive = NaiveMapping.map_network(&nw, &geom, threads);
+        let ours = PatternMapping.map_network(&nw, &geom, threads);
+        let km = KmeansMapping::default().map_network(&nw, &geom, threads);
+        let sre = OuSparseMapping.map_network(&nw, &geom, threads);
+        ours.validate().expect("mapping invariants");
+
+        // --- Fig. 7 ---
+        let f7 = report::Fig7Row {
+            dataset: profile.name.to_string(),
+            naive_crossbars: naive.total_crossbars(),
+            pattern_crossbars: ours.total_crossbars(),
+            kmeans_crossbars: km.total_crossbars(),
+            ou_sparse_crossbars: sre.total_crossbars(),
+            theoretical_best: 1.0 / (1.0 - profile.sparsity),
+            paper_efficiency: PAPER_AREA[pi],
+        };
+        println!("{}", f7.line());
+
+        // --- Fig. 8 + §V-C ---
+        let base = sim::simulate_network(&naive, &spec, &hw, &sim_cfg, threads);
+        let mine = sim::simulate_network(&ours, &spec, &hw, &sim_cfg, threads);
+        let f8 = report::Fig8Row {
+            dataset: profile.name.to_string(),
+            baseline: base.total_energy(),
+            ours: mine.total_energy(),
+            paper_efficiency: PAPER_ENERGY[pi],
+        };
+        println!("{}", f8.lines());
+        let cmp = sim::Comparison { baseline: base, ours: mine };
+        println!(
+            "{}",
+            report::speedup_line(profile.name, &cmp, PAPER_SPEEDUP[pi])
+        );
+
+        // --- §V-D index overhead ---
+        let idx_bits: usize = ours
+            .layers
+            .iter()
+            .map(|l| index::overhead(l).total_bits())
+            .sum();
+        let idx_kb = idx_bits as f64 / 8.0 / 1000.0;
+        let model_mb_dense = spec.total_weights() as f64 * 2.0 / 1e6; // 16-bit
+        let stored: usize = ours
+            .layers
+            .iter()
+            .flat_map(|l| l.blocks.iter())
+            .map(|b| b.kernels() * b.rows())
+            .sum();
+        let model_mb_pruned = stored as f64 * 2.0 / 1e6;
+        println!(
+            "index overhead: {:.1} KB (paper {:.1} KB); model {:.1} MB -> {:.1} MB; \
+             index/model = {:.1}%",
+            idx_kb,
+            PAPER_INDEX_KB[pi],
+            model_mb_dense,
+            model_mb_pruned,
+            100.0 * idx_kb / 1000.0 / model_mb_pruned,
+        );
+        println!();
+
+        out_rows.push(obj(vec![
+            ("dataset", profile.name.into()),
+            ("table2_sparsity", stats.sparsity.into()),
+            (
+                "table2_patterns",
+                rram_pattern_accel::util::json::arr_usize(&stats.patterns_per_layer),
+            ),
+            ("table2_zero_ratio", stats.all_zero_kernel_ratio.into()),
+            ("fig7", f7.to_json()),
+            ("fig8", f8.to_json()),
+            ("speedup", cmp.speedup().into()),
+            ("paper_speedup", PAPER_SPEEDUP[pi].into()),
+            ("index_kb", idx_kb.into()),
+            ("paper_index_kb", PAPER_INDEX_KB[pi].into()),
+        ]));
+    }
+
+    let j = Json::Arr(out_rows);
+    report::write_json("vgg16_paper.json", &j).expect("write results");
+    println!("wrote results/vgg16_paper.json");
+}

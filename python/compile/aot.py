@@ -1,0 +1,173 @@
+"""AOT build: train + prune SmallCNN, export weights/golden data, lower
+inference graphs to HLO text for the Rust runtime.
+
+Python runs ONLY here (``make artifacts``); the Rust binary is
+self-contained afterwards.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version behind the `xla` crate) rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model, trainer, weights_io
+from .kernels.ou_mvm import ou_mvm
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants: the default printer elides big constants as
+    # "{...}", which the rust-side HLO text parser would silently read
+    # as zeros — the baked SmallCNN weights must survive the round-trip.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def export_smallcnn_hlo(params, scales, batch: int, out_path: str) -> None:
+    """Lower the crossbar-mode SmallCNN forward (weights baked as
+    constants) for a fixed batch size."""
+    jparams = {k: jnp.asarray(v) for k, v in params.items()}
+
+    def infer(x):
+        return (model.forward(jparams, x, mode="crossbar", scales=scales),)
+
+    spec = jax.ShapeDtypeStruct((batch,) + model.SMALLCNN_INPUT, jnp.float32)
+    lowered = jax.jit(infer).lower(spec)
+    text = to_hlo_text(lowered)
+    with open(out_path, "w") as f:
+        f.write(text)
+    print(f"[aot] wrote {out_path} ({len(text)} chars)")
+
+
+def export_ou_mvm_hlo(b: int, r: int, c: int, out_path: str) -> None:
+    """Lower the standalone OU-MVM kernel (x, w, sx, sw all parameters)."""
+
+    def mvm(x, w, sx, sw):
+        return (ou_mvm(x, w, sx, sw, cfg=model.MODEL_QUANT),)
+
+    lowered = jax.jit(mvm).lower(
+        jax.ShapeDtypeStruct((b, r), jnp.float32),
+        jax.ShapeDtypeStruct((r, c), jnp.float32),
+        jax.ShapeDtypeStruct((), jnp.float32),
+        jax.ShapeDtypeStruct((), jnp.float32),
+    )
+    text = to_hlo_text(lowered)
+    with open(out_path, "w") as f:
+        f.write(text)
+    print(f"[aot] wrote {out_path} ({len(text)} chars)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--epochs", type=int, default=6)
+    ap.add_argument("--retrain-epochs", type=int, default=4)
+    ap.add_argument("--n-train", type=int, default=4096)
+    ap.add_argument("--sparsity", type=float, default=0.80)
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    res = trainer.train_pipeline(
+        n_train=args.n_train,
+        epochs=args.epochs,
+        retrain_epochs=args.retrain_epochs,
+        sparsity=args.sparsity,
+    )
+    params = res["params"]
+    layer_names = model.conv_layer_names()
+
+    # Static per-layer calibration scales from a training-distribution batch.
+    from . import dataset
+    xcal, _ = dataset.make_dataset(256, seed=7)
+    scales = model.calibrate_scales(params, xcal)
+
+    xte, yte = res["test_x"], res["test_y"]
+    float_acc = model.accuracy(params, jnp.asarray(xte[:512]), yte[:512],
+                               mode="float")
+    xbar_acc = model.accuracy(params, jnp.asarray(xte[:512]), yte[:512],
+                              mode="crossbar", scales=scales)
+    print(f"[aot] retrained float acc={float_acc:.4f} "
+          f"crossbar acc={xbar_acc:.4f}")
+
+    # ---- weights + test data + golden logits (RPAT1 container) ----
+    weights_io.save_tensors(
+        os.path.join(args.out_dir, "smallcnn_weights.bin"),
+        {k: np.asarray(v) for k, v in params.items()},
+    )
+    n_golden = 16
+    golden = np.asarray(model.forward(
+        {k: jnp.asarray(v) for k, v in params.items()},
+        jnp.asarray(xte[:n_golden]), mode="crossbar", scales=scales))
+    weights_io.save_tensors(
+        os.path.join(args.out_dir, "test_data.bin"),
+        {
+            "test_x": xte[:256],
+            "test_y": yte[:256].astype(np.int32),
+            "golden_x": xte[:n_golden],
+            "golden_logits": golden.astype(np.float32),
+        },
+    )
+
+    # ---- metadata JSON (read by rust util::json) ----
+    meta = {
+        "arch": [list(a) if a != "M" else "M" for a in model.SMALLCNN_ARCH],
+        "n_classes": model.SMALLCNN_CLASSES,
+        "input_shape": list(model.SMALLCNN_INPUT),
+        "layer_names": layer_names,
+        "scales": {k: [float(v[0]), float(v[1])] for k, v in scales.items()},
+        "candidates": {k: [int(p) for p in v]
+                       for k, v in res["candidates"].items()},
+        "stats": {
+            "sparsity": res["stats"]["sparsity"],
+            "patterns_per_layer": res["stats"]["patterns_per_layer"],
+            "total_patterns": res["stats"]["total_patterns"],
+            "all_zero_kernel_ratio": res["stats"]["all_zero_kernel_ratio"],
+        },
+        "accuracy": {
+            "dense": float(res["dense_acc"]),
+            "projected": float(res["projected_acc"]),
+            "retrained_float": float(float_acc),
+            "crossbar": float(xbar_acc),
+        },
+        "quant": {
+            "x_bits": model.MODEL_QUANT.x_bits,
+            "w_bits": model.MODEL_QUANT.w_bits,
+            "cell_bits": model.MODEL_QUANT.cell_bits,
+            "adc_bits": model.MODEL_QUANT.adc_bits,
+            "ou_rows": model.MODEL_QUANT.ou_rows,
+            "ou_cols": model.MODEL_QUANT.ou_cols,
+        },
+        "vgg16_conv": [list(s) for s in model.VGG16_CONV],
+        "vgg16_fmap_cifar": model.VGG16_FMAP_CIFAR,
+        "vgg16_fmap_imagenet": model.VGG16_FMAP_IMAGENET,
+    }
+    with open(os.path.join(args.out_dir, "smallcnn_meta.json"), "w") as f:
+        json.dump(meta, f, indent=2)
+    print(f"[aot] wrote smallcnn_meta.json")
+
+    # ---- HLO artifacts ----
+    export_smallcnn_hlo(params, scales, 1,
+                        os.path.join(args.out_dir, "smallcnn_b1.hlo.txt"))
+    export_smallcnn_hlo(params, scales, 8,
+                        os.path.join(args.out_dir, "smallcnn_b8.hlo.txt"))
+    export_ou_mvm_hlo(64, 288, 64,
+                      os.path.join(args.out_dir, "ou_mvm_b64_r288_c64.hlo.txt"))
+    print("[aot] done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,123 @@
+"""L1 Pallas kernel: OU-granular quantized crossbar matrix multiply.
+
+This is the compute hot-spot of the whole stack: every convolution in the
+L2 model lowers to im2col + this kernel.  It simulates the analog RRAM
+crossbar executing one Operation Unit (``ou_rows`` wordlines ×
+``ou_cols`` bitlines) per step, with DAC input quantization, 4-bit cell
+bit-slicing of offset-encoded weights, per-OU-slice ADC quantization,
+shift-add recombination, and digital offset correction — exactly the
+semantics of ``ref.ou_mvm_ref``.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): one grid step owns a
+``block_b × block_c`` output tile resident in VMEM; the fori_loop over
+row groups is the HBM→VMEM OU schedule the paper implements with its
+crossbar controller; the per-slice ``xr @ nib`` matmuls are the MXU work.
+``interpret=True`` is mandatory on CPU (Mosaic custom-calls cannot run
+on the CPU PJRT plugin).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import quant
+from .quant import QuantConfig
+
+
+def _ou_mvm_kernel(x_ref, w_ref, sx_ref, sw_ref, o_ref, *, cfg: QuantConfig,
+                   n_groups: int):
+    """One (block_b, block_c) output tile; reduces over all row groups."""
+    x = x_ref[...]                       # [TB, R]
+    w = w_ref[...]                       # [R, TC]
+    sx = sx_ref[0, 0]
+    sw = sw_ref[0, 0]
+
+    tb = x.shape[0]
+    tc = w.shape[1]
+
+    # DAC input quantization (signed, symmetric).
+    xq = jnp.clip(jnp.round(x / sx), -cfg.x_max, cfg.x_max)
+    # Weight quantization; cells store differential (G+/G-) nibble pairs,
+    # i.e. slice s carries sign(wq) * nibble_s(|wq|).
+    w_max = (1 << (cfg.w_bits - 1)) - 1
+    wq = jnp.clip(jnp.round(w / sw), -w_max, w_max).astype(jnp.int32)
+    wsign = jnp.sign(wq)
+    wmag = jnp.abs(wq)
+
+    lsb = cfg.adc_lsb()
+
+    def group_body(g, acc):
+        # One OU row-group: ou_rows wordlines activated at once.
+        xr = jax.lax.dynamic_slice(xq, (0, g * cfg.ou_rows), (tb, cfg.ou_rows))
+        sr = jax.lax.dynamic_slice(wsign, (g * cfg.ou_rows, 0),
+                                   (cfg.ou_rows, tc))
+        mr = jax.lax.dynamic_slice(wmag, (g * cfg.ou_rows, 0),
+                                   (cfg.ou_rows, tc))
+        gacc = jnp.zeros((tb, tc), jnp.float32)
+        for s in range(cfg.n_slices):    # static: one 4-bit cell slice each
+            nib = (sr * ((mr >> (s * cfg.cell_bits)) & cfg.cell_max)) \
+                .astype(jnp.float32)
+            partial = xr @ nib           # analog bitline sums (MXU work)
+            code = jnp.clip(jnp.round(partial / lsb), -cfg.adc_levels,
+                            cfg.adc_levels)
+            gacc = gacc + float(1 << (cfg.cell_bits * s)) * (code * lsb)
+        return acc + gacc
+
+    acc = jax.lax.fori_loop(0, n_groups, group_body,
+                            jnp.zeros((tb, tc), jnp.float32))
+    o_ref[...] = acc * (sx * sw)
+
+
+def _pad_to(a, multiple, axis):
+    pad = (-a.shape[axis]) % multiple
+    if pad == 0:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(a, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "block_b", "block_c"))
+def ou_mvm(x, w, sx, sw, cfg: QuantConfig = quant.DEFAULT,
+           block_b: int = 64, block_c: int = 64):
+    """OU-granular crossbar matmul: ``[B,R] @ [R,C] -> [B,C]``.
+
+    ``sx``/``sw`` are scalar (or 0-d array) calibration scales; they are
+    traced (not baked), so one compiled artifact serves any calibration.
+    """
+    B, R = x.shape
+    Rw, C = w.shape
+    assert R == Rw, (x.shape, w.shape)
+
+    xp = _pad_to(x.astype(jnp.float32), cfg.ou_rows, axis=1)
+    wp = _pad_to(w.astype(jnp.float32), cfg.ou_rows, axis=0)
+    # Zero-padded rows are exact no-ops: xq=0 there, so both the analog
+    # term and the offset correction vanish.
+    xp = _pad_to(xp, block_b, axis=0)
+    wp = _pad_to(wp, block_c, axis=1)
+    Bp, Rp = xp.shape
+    Cp = wp.shape[1]
+    n_groups = Rp // cfg.ou_rows
+
+    sx_arr = jnp.asarray(sx, jnp.float32).reshape(1, 1)
+    sw_arr = jnp.asarray(sw, jnp.float32).reshape(1, 1)
+
+    kernel = functools.partial(_ou_mvm_kernel, cfg=cfg, n_groups=n_groups)
+    out = pl.pallas_call(
+        kernel,
+        grid=(Bp // block_b, Cp // block_c),
+        in_specs=[
+            pl.BlockSpec((block_b, Rp), lambda i, j: (i, 0)),
+            pl.BlockSpec((Rp, block_c), lambda i, j: (0, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, block_c), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Bp, Cp), jnp.float32),
+        interpret=True,
+    )(xp, wp, sx_arr, sw_arr)
+    return out[:B, :C]

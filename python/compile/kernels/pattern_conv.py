@@ -1,0 +1,109 @@
+"""L1 Pallas kernel: pattern-block sparse convolution.
+
+Executes the paper's *mapped* compute: after kernel reordering, each
+(input-channel, pattern) group is a dense ``pattern_size × n_kernels``
+block on the crossbar.  The kernel walks pattern blocks on the grid;
+each step gathers the im2col rows selected by the pattern (the Input
+Preprocessing Unit), multiplies by the compressed block weights, and
+scatters into output channels via a one-hot matmul (the Output Indexing
+Unit).  Scatter-as-matmul keeps the whole step on the MXU.
+
+Blocks are padded to a uniform ``(p_max, k_max)`` so shapes stay static;
+padding rows/cols carry zero weights and are exact no-ops.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+
+def pack_blocks(blocks, p_max=None, k_max=None):
+    """Pack a list of pattern-block dicts into padded dense arrays.
+
+    Each block dict has ``rows`` [P], ``out_idx`` [K], ``w`` [P, K]
+    (see ``ref.pattern_conv_ref``).  Returns
+    ``(rows, out_idx, w)`` with shapes ``[NB, p_max]``, ``[NB, k_max]``,
+    ``[NB, p_max, k_max]``.  Padded entries index row/channel 0 but have
+    zero weight.
+    """
+    nb = len(blocks)
+    p_max = p_max or max(len(b["rows"]) for b in blocks)
+    k_max = k_max or max(len(b["out_idx"]) for b in blocks)
+    rows = np.zeros((nb, p_max), np.int32)
+    oidx = np.zeros((nb, k_max), np.int32)
+    w = np.zeros((nb, p_max, k_max), np.float32)
+    for i, b in enumerate(blocks):
+        p, k = len(b["rows"]), len(b["out_idx"])
+        assert p <= p_max and k <= k_max
+        rows[i, :p] = b["rows"]
+        oidx[i, :k] = b["out_idx"]
+        w[i, :p, :k] = b["w"]
+    return jnp.asarray(rows), jnp.asarray(oidx), jnp.asarray(w)
+
+
+def _pattern_conv_kernel(cols_ref, rows_ref, oidx_ref, w_ref, o_ref, *,
+                         cout: int):
+    """One pattern block: gather rows -> dense matmul -> one-hot scatter."""
+    blk = pl.program_id(0)
+
+    @pl.when(blk == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    cols = cols_ref[...]                    # [N, R]
+    rows = rows_ref[0]                      # [p_max]
+    oidx = oidx_ref[0]                      # [k_max]
+    w = w_ref[0]                            # [p_max, k_max]
+
+    # Input Preprocessing Unit: select the activations the pattern needs.
+    gathered = jnp.take(cols, rows, axis=1)         # [N, p_max]
+    contrib = gathered @ w                          # [N, k_max]
+    # Output Indexing Unit: scatter to out channels (one-hot matmul).
+    onehot = (oidx[:, None] == jnp.arange(cout)[None, :]).astype(jnp.float32)
+    # Padded kernels have zero weight columns, so contrib[:, pad] == 0 and
+    # double-scatter to channel 0 is harmless.
+    o_ref[...] += contrib @ onehot                  # [N, cout]
+
+
+@functools.partial(jax.jit, static_argnames=("cout",))
+def pattern_conv_cols(cols, rows, oidx, w, cout: int):
+    """Pattern-block sparse matmul over an im2col matrix.
+
+    Args:
+      cols: ``[N, R]`` im2col patch matrix.
+      rows/oidx/w: packed blocks from :func:`pack_blocks`.
+      cout: number of output channels.
+    Returns ``[N, cout]``.
+    """
+    nb = rows.shape[0]
+    n, r = cols.shape
+    p_max, k_max = w.shape[1], w.shape[2]
+    kernel = functools.partial(_pattern_conv_kernel, cout=cout)
+    return pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((n, r), lambda b: (0, 0)),
+            pl.BlockSpec((1, p_max), lambda b: (b, 0)),
+            pl.BlockSpec((1, k_max), lambda b: (b, 0)),
+            pl.BlockSpec((1, p_max, k_max), lambda b: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((n, cout), lambda b: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, cout), jnp.float32),
+        interpret=True,
+    )(cols, rows, oidx, w)
+
+
+def pattern_conv(x, blocks, cout: int, pad=1, stride=1):
+    """NCHW pattern-block sparse convolution (wrapper over the kernel)."""
+    from . import ref  # local import to avoid cycle
+
+    cols, (b, oh, ow) = ref.im2col(x, 3, 3, pad, stride)
+    rows, oidx, w = pack_blocks(blocks)
+    out = pattern_conv_cols(cols.astype(jnp.float32), rows, oidx, w, cout)
+    return out.reshape(b, oh, ow, cout).transpose(0, 3, 1, 2)

@@ -1,0 +1,132 @@
+"""Shared quantization model for the RRAM crossbar functional simulation.
+
+This module defines the *numerical contract* between every layer of the
+stack: the Pallas kernel (`ou_mvm.py`), the pure-jnp oracle (`ref.py`),
+and the Rust fixed-point simulator all implement the same arithmetic.
+
+Model (paper Table I + §II-A):
+
+- Inputs pass through a DAC with ``x_bits`` (default 4) resolution:
+  symmetric signed quantization to ``[-(2^(b-1)-1), 2^(b-1)-1]``.
+- Weights are quantized to ``w_bits`` (default 8) symmetric signed
+  integers and stored *differentially* (PRIME-style G+/G- cell pairs,
+  subtracted in analog on the bitline) across ``w_bits / cell_bits``
+  cell-pair slices of ``cell_bits`` (default 4) each — the paper's
+  "4 bits per cell" bit-slicing.  Differential pairs mean a zero weight
+  contributes an exact analog zero (no offset current through the ADC).
+- An Operation Unit activates ``ou_rows`` wordlines at once; the analog
+  partial sum of one OU row-group and one cell slice is digitized by an
+  ``adc_bits`` ADC.  The ADC step (LSB) is fixed at design time from the
+  worst-case OU partial sum, so quantization is static and AOT-friendly.
+- Slice partial sums are recombined by shift-add and rescaled by the
+  weight and input scales.
+
+With ``adc_bits`` large the model is exact (equals the float matmul up to
+input/weight quantization); with the paper's 8-bit ADC it reproduces the
+partial-sum truncation error real OU-based accelerators see.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    """Static quantization parameters (mirror of rust `config::QuantConfig`)."""
+
+    x_bits: int = 4          # DAC resolution (paper Table I: 4 bits)
+    w_bits: int = 8          # weight precision stored across cells
+    cell_bits: int = 4       # bits per RRAM cell (paper Table I: 4)
+    adc_bits: int = 8        # ADC resolution (paper Table I: 8 bits)
+    ou_rows: int = 9         # wordlines activated per cycle (paper: 9)
+    ou_cols: int = 8         # bitlines activated per cycle (paper: 8)
+
+    @property
+    def n_slices(self) -> int:
+        assert self.w_bits % self.cell_bits == 0
+        return self.w_bits // self.cell_bits
+
+    @property
+    def x_max(self) -> int:
+        return (1 << (self.x_bits - 1)) - 1  # 7 for 4-bit DAC
+
+    @property
+    def cell_max(self) -> int:
+        return (1 << self.cell_bits) - 1  # 15 for 4-bit cells
+
+    @property
+    def cells_per_weight(self) -> int:
+        return 2 * self.n_slices  # differential pair per slice
+
+    @property
+    def adc_levels(self) -> int:
+        return (1 << (self.adc_bits - 1)) - 1  # symmetric levels
+
+    def adc_lsb(self) -> float:
+        """Static ADC step sized for the worst-case OU/slice partial sum.
+
+        One OU slice partial sum is ``sum_{r<ou_rows} cell(u) * xq`` with
+        ``cell in [0, cell_max]`` and ``xq in [-x_max, x_max]``, so the
+        magnitude is bounded by ``ou_rows * cell_max * x_max``.
+        """
+        max_abs = float(self.ou_rows * self.cell_max * self.x_max)
+        lsb = max_abs / float(self.adc_levels)
+        return max(lsb, 1.0)
+
+
+DEFAULT = QuantConfig()
+
+
+def x_scale(x, cfg: QuantConfig = DEFAULT):
+    """Per-tensor symmetric input scale (calibration helper)."""
+    m = jnp.max(jnp.abs(x))
+    return jnp.where(m > 0, m / cfg.x_max, 1.0)
+
+
+def w_scale(w, cfg: QuantConfig = DEFAULT):
+    """Per-tensor symmetric weight scale (calibration helper)."""
+    m = jnp.max(jnp.abs(w))
+    w_max = (1 << (cfg.w_bits - 1)) - 1
+    return jnp.where(m > 0, m / w_max, 1.0)
+
+
+def quantize_x(x, sx, cfg: QuantConfig = DEFAULT):
+    """DAC input quantization: float -> signed integers in [-x_max, x_max]."""
+    q = jnp.round(x / sx)
+    return jnp.clip(q, -cfg.x_max, cfg.x_max)
+
+
+def quantize_w(w, sw, cfg: QuantConfig = DEFAULT):
+    """Weight quantization: float -> signed integers, symmetric w_bits."""
+    w_max = (1 << (cfg.w_bits - 1)) - 1
+    q = jnp.round(w / sw)
+    return jnp.clip(q, -w_max, w_max)
+
+
+def signed_cell_slices(wq, cfg: QuantConfig = DEFAULT):
+    """Split signed quantized weights into differential cell slices.
+
+    Each weight is stored as G+/G- cell pairs per slice; the bitline
+    subtracts them in analog, so slice ``s`` contributes
+    ``sign(wq) * nibble_s(|wq|)`` in ``[-cell_max, cell_max]``.
+    Returns an array with a new leading axis of length ``n_slices``,
+    LSB slice first.
+    """
+    wq = wq.astype(jnp.int32)
+    sign = jnp.sign(wq)
+    mag = jnp.abs(wq)
+    slices = []
+    for s in range(cfg.n_slices):
+        nib = (mag >> (s * cfg.cell_bits)) & cfg.cell_max
+        slices.append(sign * nib)
+    return jnp.stack(slices, axis=0)
+
+
+def adc_quantize(v, cfg: QuantConfig = DEFAULT):
+    """Static symmetric ADC transfer function on a partial sum."""
+    lsb = cfg.adc_lsb()
+    code = jnp.clip(jnp.round(v / lsb), -cfg.adc_levels, cfg.adc_levels)
+    return code * lsb

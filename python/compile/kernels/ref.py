@@ -1,0 +1,143 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the CORE correctness anchors: slow, obviously-correct
+implementations of the OU-granular crossbar MVM and the pattern-block
+sparse convolution.  pytest (``python/tests/``) asserts the Pallas
+kernels match these bit-for-bit (same float ops, same quantization).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import quant
+from .quant import QuantConfig
+
+
+def _pad_rows(a, multiple, axis=0):
+    r = a.shape[axis]
+    pad = (-r) % multiple
+    if pad == 0:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(a, widths)
+
+
+def ou_mvm_ref(x, w, sx, sw, cfg: QuantConfig = quant.DEFAULT):
+    """Reference OU-granular quantized crossbar matmul.
+
+    Args:
+      x: ``[B, R]`` float inputs (im2col rows).
+      w: ``[R, C]`` float weights.
+      sx, sw: scalar input/weight scales (static calibration values).
+      cfg: quantization config.
+
+    Returns ``[B, C]`` float outputs of the simulated analog compute.
+
+    Semantics: inputs are DAC-quantized; weights are quantized and
+    bit-sliced into differential (G+/G-) cell pairs; rows are processed
+    ``ou_rows`` at a time; each (row-group, slice) partial sum passes
+    through the ADC; slices recombine by shift-add; finally the result
+    is rescaled to float.
+    """
+    B, R = x.shape
+    Rw, C = w.shape
+    assert R == Rw, (x.shape, w.shape)
+
+    xq = quant.quantize_x(x, sx, cfg)              # [B, R] signed
+    wq = quant.quantize_w(w, sw, cfg)              # [R, C] signed
+    slices = quant.signed_cell_slices(wq, cfg)     # [S, R, C] signed nibbles
+
+    xq = _pad_rows(xq, cfg.ou_rows, axis=1)
+    slices = _pad_rows(slices, cfg.ou_rows, axis=1)
+    Rp = xq.shape[1]
+    G = Rp // cfg.ou_rows
+
+    xg = xq.reshape(B, G, cfg.ou_rows)             # [B, G, r]
+    sg = slices.reshape(cfg.n_slices, G, cfg.ou_rows, C)
+
+    # Analog partial sums per (slice, group): [S, B, G, C]
+    partial = jnp.einsum("bgr,sgrc->sbgc", xg.astype(jnp.float32),
+                         sg.astype(jnp.float32))
+    partial = quant.adc_quantize(partial, cfg)
+
+    # Shift-add slice recombination: [B, G, C]
+    shift = (1 << (cfg.cell_bits * np.arange(cfg.n_slices))).astype(np.float32)
+    acc = jnp.einsum("s,sbgc->bgc", shift, partial)
+
+    out = jnp.sum(acc, axis=1)                     # [B, C]
+    return out * (sx * sw)
+
+
+def mvm_float_ref(x, w):
+    """Quantization-free oracle: plain matmul (ADC->inf bits limit)."""
+    return x @ w
+
+
+def im2col(x, kh=3, kw=3, pad=1, stride=1):
+    """NCHW -> [B*OH*OW, Cin*kh*kw] patch matrix (row order: cin, kh, kw).
+
+    The column order (cin-major, then kernel position) matches the
+    paper's Fig. 1 weight unrolling and the rust `nn::im2col`.
+    """
+    b, cin, h, wd = x.shape
+    xp = jnp.pad(x, ((0, 0), (0, 0), (pad, pad), (pad, pad)))
+    oh = (h + 2 * pad - kh) // stride + 1
+    ow = (wd + 2 * pad - kw) // stride + 1
+    cols = []
+    for i in range(kh):
+        for j in range(kw):
+            patch = xp[:, :, i : i + stride * oh : stride, j : j + stride * ow : stride]
+            cols.append(patch.reshape(b, cin, oh * ow))
+    # [kh*kw, B, Cin, OH*OW] -> [B, OH*OW, Cin, kh*kw]
+    stacked = jnp.stack(cols, axis=0).transpose(1, 3, 2, 0)
+    return stacked.reshape(b * oh * ow, cin * kh * kw), (b, oh, ow)
+
+
+def conv2d_ref(x, w, pad=1, stride=1):
+    """Dense conv oracle via im2col + float matmul.
+
+    Args:
+      x: ``[B, Cin, H, W]``; w: ``[Cout, Cin, KH, KW]``.
+    Returns ``[B, Cout, OH, OW]``.
+    """
+    cout, cin, kh, kw = w.shape
+    cols, (b, oh, ow) = im2col(x, kh, kw, pad, stride)
+    wmat = w.reshape(cout, cin * kh * kw).T          # [Cin*KH*KW, Cout]
+    out = cols @ wmat                                # [B*OH*OW, Cout]
+    return out.reshape(b, oh, ow, cout).transpose(0, 3, 1, 2)
+
+
+def conv2d_ou_ref(x, w, sx, sw, cfg: QuantConfig = quant.DEFAULT, pad=1, stride=1):
+    """Conv through the simulated OU crossbar (reference path)."""
+    cout, cin, kh, kw = w.shape
+    cols, (b, oh, ow) = im2col(x, kh, kw, pad, stride)
+    wmat = w.reshape(cout, cin * kh * kw).T
+    out = ou_mvm_ref(cols, wmat, sx, sw, cfg)
+    return out.reshape(b, oh, ow, cout).transpose(0, 3, 1, 2)
+
+
+def pattern_conv_ref(x, blocks, cout, pad=1, stride=1):
+    """Reference pattern-block sparse convolution.
+
+    ``blocks`` is a list of dicts (one per pattern block, i.e. one
+    (input-channel, pattern) group after kernel reordering):
+      ``rows``: [P] int — rows of the im2col matrix (cin*9 + position).
+      ``out_idx``: [K] int — output channel of each kernel in the block.
+      ``w``: [P, K] float — compressed nonzero weights.
+
+    Computes ``out[:, out_idx] += cols[:, rows] @ w`` per block — exactly
+    what the mapped crossbar computes pattern-block by pattern-block,
+    with the Output Indexing Unit doing the scatter.
+    """
+    cols, (b, oh, ow) = im2col(x, 3, 3, pad, stride)
+    out = jnp.zeros((cols.shape[0], cout), dtype=cols.dtype)
+    for blk in blocks:
+        rows = jnp.asarray(blk["rows"], dtype=jnp.int32)
+        oidx = jnp.asarray(blk["out_idx"], dtype=jnp.int32)
+        wm = jnp.asarray(blk["w"])
+        contrib = cols[:, rows] @ wm                  # [N, K]
+        out = out.at[:, oidx].add(contrib)
+    return out.reshape(b, oh, ow, cout).transpose(0, 3, 1, 2)

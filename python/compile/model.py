@@ -1,0 +1,169 @@
+"""L2: JAX model definitions built on the L1 crossbar kernels.
+
+Two forward modes:
+
+- ``mode="float"``: pure-jnp float conv (training path, gradients flow).
+- ``mode="crossbar"``: every conv runs through the Pallas OU crossbar
+  kernel (``kernels.ou_mvm``) — the functional model of the accelerator.
+  This is the graph that ``aot.py`` lowers to HLO for the Rust runtime.
+
+Networks:
+
+- ``SmallCNN`` — 5 conv layers + GAP + FC, ~36k conv weights; used for
+  the real end-to-end train→prune→map pipeline (paper's VGG16 stands in
+  at the statistics level, see DESIGN.md §3).
+- ``vgg16_conv_shapes`` — the paper's modified VGG16 (13 conv layers,
+  one FC); used for shape/inventory checks and by the Rust synthetic
+  generator (it reads these shapes from the metadata JSON).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import quant, ref
+from .kernels.ou_mvm import ou_mvm
+from .kernels.quant import QuantConfig
+
+# The model runs inputs at 8 effective bits: a 4-bit DAC driven
+# bit-serially over two cycles (ISAAC-style). The energy model (rust
+# `xbar::energy`) accounts x_bits/dac_bits DAC conversions per input.
+MODEL_QUANT = QuantConfig(x_bits=8)
+
+# (cout, cin) for each 3x3 conv layer of SmallCNN; 'M' = 2x2 maxpool.
+SMALLCNN_ARCH: List = [(16, 3), (16, 16), "M", (32, 16), (32, 32), "M",
+                       (64, 32), "M"]
+SMALLCNN_CLASSES = 10
+SMALLCNN_INPUT = (3, 32, 32)
+
+# The paper's modified VGG16: 13 conv layers (Simonyan config D) and a
+# single FC layer. (cout, cin) per conv layer, CIFAR-sized input.
+VGG16_CONV: List[Tuple[int, int]] = [
+    (64, 3), (64, 64),
+    (128, 64), (128, 128),
+    (256, 128), (256, 256), (256, 256),
+    (512, 256), (512, 512), (512, 512),
+    (512, 512), (512, 512), (512, 512),
+]
+# Feature-map spatial size entering each VGG16 conv layer.
+VGG16_FMAP_CIFAR = [32, 32, 16, 16, 8, 8, 8, 4, 4, 4, 2, 2, 2]
+VGG16_FMAP_IMAGENET = [224, 224, 112, 112, 56, 56, 56, 28, 28, 28, 14, 14, 14]
+
+
+def conv_layer_names(arch=SMALLCNN_ARCH) -> List[str]:
+    names = []
+    i = 0
+    for item in arch:
+        if item == "M":
+            continue
+        names.append(f"conv{i}")
+        i += 1
+    return names
+
+
+def init_params(rng: np.random.Generator, arch=SMALLCNN_ARCH,
+                n_classes=SMALLCNN_CLASSES) -> Dict[str, np.ndarray]:
+    """He-normal init. Params dict: conv{i}/w [Cout,Cin,3,3], conv{i}/b,
+    fc/w [Cfeat, n_classes], fc/b."""
+    params: Dict[str, np.ndarray] = {}
+    i = 0
+    last_c = None
+    for item in arch:
+        if item == "M":
+            continue
+        cout, cin = item
+        fan_in = cin * 9
+        params[f"conv{i}/w"] = (rng.standard_normal((cout, cin, 3, 3))
+                                * np.sqrt(2.0 / fan_in)).astype(np.float32)
+        params[f"conv{i}/b"] = np.zeros((cout,), np.float32)
+        last_c = cout
+        i += 1
+    params["fc/w"] = (rng.standard_normal((last_c, n_classes))
+                      * np.sqrt(1.0 / last_c)).astype(np.float32)
+    params["fc/b"] = np.zeros((n_classes,), np.float32)
+    return params
+
+
+def _maxpool2(x):
+    b, c, h, w = x.shape
+    x = x.reshape(b, c, h // 2, 2, w // 2, 2)
+    return jnp.max(x, axis=(3, 5))
+
+
+def _conv_float(x, w):
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding=((1, 1), (1, 1)),
+        dimension_numbers=("NCHW", "OIHW", "NCHW"))
+
+
+def _conv_crossbar(x, w, scales, cfg: QuantConfig):
+    """Conv through the OU crossbar Pallas kernel via im2col."""
+    sx, sw = scales
+    cout = w.shape[0]
+    cols, (b, oh, ow) = ref.im2col(x, 3, 3, 1, 1)
+    wmat = w.reshape(cout, -1).T
+    out = ou_mvm(cols, wmat, sx, sw, cfg)
+    return out.reshape(b, oh, ow, cout).transpose(0, 3, 1, 2)
+
+
+def forward(params, x, mode: str = "float", scales=None,
+            cfg: QuantConfig = MODEL_QUANT, arch=SMALLCNN_ARCH):
+    """SmallCNN forward. ``scales``: {layer_name: (sx, sw)} for crossbar
+    mode (static calibration, see ``calibrate_scales``)."""
+    i = 0
+    for item in arch:
+        if item == "M":
+            x = _maxpool2(x)
+            continue
+        w = params[f"conv{i}/w"]
+        b = params[f"conv{i}/b"]
+        if mode == "float":
+            x = _conv_float(x, w)
+        elif mode == "crossbar":
+            x = _conv_crossbar(x, w, scales[f"conv{i}"], cfg)
+        else:
+            raise ValueError(mode)
+        x = jax.nn.relu(x + b[None, :, None, None])
+        i += 1
+    x = jnp.mean(x, axis=(2, 3))                    # global average pool
+    return x @ params["fc/w"] + params["fc/b"]
+
+
+def calibrate_scales(params, x_batch, arch=SMALLCNN_ARCH,
+                     cfg: QuantConfig = MODEL_QUANT):
+    """Run a float forward on calibration data, record per-layer input
+    max and weight max -> static (sx, sw) per conv layer."""
+    scales = {}
+    x = jnp.asarray(x_batch)
+    i = 0
+    for item in arch:
+        if item == "M":
+            x = _maxpool2(x)
+            continue
+        w = params[f"conv{i}/w"]
+        b = params[f"conv{i}/b"]
+        # im2col rows see the padded input, same max as x.
+        sx = float(jnp.max(jnp.abs(x))) / cfg.x_max
+        sw = float(jnp.max(jnp.abs(w))) / ((1 << (cfg.w_bits - 1)) - 1)
+        scales[f"conv{i}"] = (max(sx, 1e-8), max(sw, 1e-8))
+        x = jax.nn.relu(_conv_float(x, w) + b[None, :, None, None])
+        i += 1
+    return scales
+
+
+def loss_fn(params, x, y, arch=SMALLCNN_ARCH):
+    logits = forward(params, x, mode="float", arch=arch)
+    logp = jax.nn.log_softmax(logits)
+    nll = -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+    return nll
+
+
+def accuracy(params, x, y, mode="float", scales=None, arch=SMALLCNN_ARCH,
+             cfg: QuantConfig = MODEL_QUANT):
+    logits = forward(params, x, mode=mode, scales=scales, cfg=cfg, arch=arch)
+    return float(jnp.mean(jnp.argmax(logits, axis=1) == y))

@@ -1,0 +1,191 @@
+"""Pattern pruning pipeline (paper §III-A).
+
+Implements the ADMM-flavoured pattern compression of Wang et al. [11] as
+used by the paper:
+
+1. start from an irregularly (magnitude-) pruned network;
+2. compute the PDF of kernel patterns per layer;
+3. pick the top-N patterns per layer as candidates (N is the per-layer
+   knob — Table II uses 2..12);
+4. project every kernel onto its nearest candidate pattern
+   (element-wise multiply with the pattern mask);
+5. retrain with masks frozen to regain accuracy;
+6. repeat until accuracy converges.
+
+A *pattern* is a 9-bit mask over the 3x3 kernel positions, bit ``i`` =
+position ``(i // 3, i % 3)`` — identical encoding to rust
+``pruning::Pattern``.
+"""
+
+from __future__ import annotations
+
+from collections import Counter
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def kernel_pattern(k: np.ndarray) -> int:
+    """9-bit pattern id of a 3x3 kernel (bit i = position i nonzero)."""
+    flat = k.reshape(9)
+    pid = 0
+    for i in range(9):
+        if flat[i] != 0.0:
+            pid |= 1 << i
+    return pid
+
+
+def pattern_mask(pid: int) -> np.ndarray:
+    """Pattern id -> float 3x3 mask."""
+    m = np.zeros(9, np.float32)
+    for i in range(9):
+        if pid >> i & 1:
+            m[i] = 1.0
+    return m.reshape(3, 3)
+
+
+def pattern_size(pid: int) -> int:
+    return bin(pid).count("1")
+
+
+def layer_patterns(w: np.ndarray) -> Counter:
+    """PDF (counts) of patterns over all [Cout, Cin] kernels of a layer."""
+    cout, cin = w.shape[:2]
+    c: Counter = Counter()
+    for o in range(cout):
+        for i in range(cin):
+            c[kernel_pattern(w[o, i])] += 1
+    return c
+
+
+def magnitude_prune(w: np.ndarray, sparsity: float) -> np.ndarray:
+    """Irregular magnitude pruning of a conv weight tensor [Cout,Cin,3,3]."""
+    flat = np.abs(w).reshape(-1)
+    k = int(np.ceil(sparsity * flat.size))
+    if k <= 0:
+        return w.copy()
+    thresh = np.partition(flat, k - 1)[k - 1]
+    out = w.copy()
+    out[np.abs(out) <= thresh] = 0.0
+    return out
+
+
+def select_candidates(counts: Counter, n: int,
+                      keep_all_zero: bool = True) -> List[int]:
+    """Top-n patterns by probability (paper: PDF-based selection).
+
+    The all-zero pattern (id 0), when present, is always kept: pruned
+    kernels must stay prunable (they are *deleted* from the crossbar).
+    """
+    ranked = [p for p, _ in counts.most_common()]
+    cands = ranked[:n]
+    if keep_all_zero and 0 in counts and 0 not in cands:
+        cands = cands[: n - 1] + [0]
+    return cands
+
+
+def _hamming(a: int, b: int) -> int:
+    return bin(a ^ b).count("1")
+
+
+def project_kernel(k: np.ndarray, candidates: List[int],
+                   distance: str = "magnitude") -> Tuple[np.ndarray, int]:
+    """Project one 3x3 kernel onto its best candidate pattern.
+
+    ``magnitude``: keep the candidate retaining the largest L2 energy
+    (ties -> smaller pattern). ``hamming``: nearest mask by hamming
+    distance, as mentioned in the paper.
+    """
+    own = kernel_pattern(k)
+    best, best_key = None, None
+    for pid in candidates:
+        if distance == "magnitude":
+            m = pattern_mask(pid)
+            kept = float(np.sum((k * m) ** 2))
+            key = (-kept, pattern_size(pid))
+        elif distance == "hamming":
+            key = (_hamming(own, pid), pattern_size(pid))
+        else:
+            raise ValueError(distance)
+        if best_key is None or key < best_key:
+            best, best_key = pid, key
+    return k * pattern_mask(best), best
+
+
+def project_layer(w: np.ndarray, candidates: List[int],
+                  distance: str = "magnitude"):
+    """Project all kernels of a layer. Returns (projected_w, assigned)
+    where ``assigned[cout, cin]`` is the candidate pattern id chosen for
+    each kernel (the pattern the mapper will group by)."""
+    out = np.empty_like(w)
+    cout, cin = w.shape[:2]
+    assigned = np.zeros((cout, cin), np.int32)
+    for o in range(cout):
+        for i in range(cin):
+            out[o, i], assigned[o, i] = project_kernel(
+                w[o, i], candidates, distance)
+    return out, assigned
+
+
+def prune_network(params: Dict[str, np.ndarray], layer_names: List[str],
+                  sparsity: float, patterns_per_layer: List[int],
+                  distance: str = "magnitude"):
+    """Irregular prune + pattern projection over all conv layers.
+
+    Returns (new_params, masks, per_layer_candidates).
+    ``masks[name]`` is the float mask to freeze during retraining — the
+    *assigned candidate pattern* per kernel (paper semantics: retraining
+    may regrow any weight inside the kernel's pattern).
+    """
+    new = dict(params)
+    masks: Dict[str, np.ndarray] = {}
+    cands: Dict[str, List[int]] = {}
+    for li, name in enumerate(layer_names):
+        w = params[f"{name}/w"]
+        wp = magnitude_prune(w, sparsity)
+        counts = layer_patterns(wp)
+        cand = select_candidates(counts, patterns_per_layer[li])
+        wproj, assigned = project_layer(wp, cand, distance)
+        new[f"{name}/w"] = wproj
+        cout, cin = w.shape[:2]
+        mask = np.zeros_like(w)
+        for o in range(cout):
+            for i in range(cin):
+                mask[o, i] = pattern_mask(int(assigned[o, i]))
+        masks[name] = mask.astype(np.float32)
+        cands[name] = cand
+    return new, masks, cands
+
+
+def apply_masks(params, masks):
+    """Re-impose pattern masks (after an unconstrained gradient step)."""
+    out = dict(params)
+    for name, m in masks.items():
+        out[f"{name}/w"] = out[f"{name}/w"] * m
+    return out
+
+
+def network_stats(params: Dict[str, np.ndarray], layer_names: List[str]):
+    """Table-II-style statistics: overall conv sparsity, per-layer pattern
+    counts, total patterns, all-zero kernel ratio."""
+    total, zeros = 0, 0
+    per_layer_patterns: List[int] = []
+    all_kernels, zero_kernels = 0, 0
+    for name in layer_names:
+        w = np.asarray(params[f"{name}/w"])
+        total += w.size
+        zeros += int(np.sum(w == 0.0))
+        counts = layer_patterns(w)
+        per_layer_patterns.append(len(counts))
+        for pid, c in counts.items():
+            all_kernels += c
+            if pid == 0:
+                zero_kernels += c
+    return {
+        "sparsity": zeros / max(total, 1),
+        "patterns_per_layer": per_layer_patterns,
+        "total_patterns": int(sum(per_layer_patterns)),
+        "all_zero_kernel_ratio": zero_kernels / max(all_kernels, 1),
+    }

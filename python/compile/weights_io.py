@@ -1,0 +1,74 @@
+"""Binary tensor container shared with rust `nn::tensor_io` (format RPAT1).
+
+Layout (all little-endian):
+
+    magic   b"RPAT1\\0"          (6 bytes)
+    version u16                  (currently 1)
+    count   u32                  number of tensors
+    per tensor:
+      name_len u16, name utf-8 bytes
+      dtype    u8   (0 = f32, 1 = i32, 2 = u8)
+      ndim     u8
+      dims     u32 * ndim
+      nbytes   u64
+      data     raw bytes
+"""
+
+from __future__ import annotations
+
+import struct
+from typing import Dict
+
+import numpy as np
+
+MAGIC = b"RPAT1\x00"
+VERSION = 1
+_DTYPES = {0: np.float32, 1: np.int32, 2: np.uint8}
+_DTYPE_IDS = {np.dtype(np.float32): 0, np.dtype(np.int32): 1,
+              np.dtype(np.uint8): 2}
+
+
+def save_tensors(path: str, tensors: Dict[str, np.ndarray]) -> None:
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<HI", VERSION, len(tensors)))
+        for name, arr in tensors.items():
+            # note: np.ascontiguousarray would promote 0-d to 1-d;
+            # np.asarray + tobytes (always C-order) preserves shape.
+            arr = np.asarray(arr)
+            if arr.dtype not in _DTYPE_IDS:
+                raise TypeError(f"{name}: unsupported dtype {arr.dtype}")
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BB", _DTYPE_IDS[arr.dtype], arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            data = arr.tobytes()
+            f.write(struct.pack("<Q", len(data)))
+            f.write(data)
+
+
+def load_tensors(path: str) -> Dict[str, np.ndarray]:
+    with open(path, "rb") as f:
+        blob = f.read()
+    if blob[:6] != MAGIC:
+        raise ValueError("bad magic")
+    (version, count) = struct.unpack_from("<HI", blob, 6)
+    if version != VERSION:
+        raise ValueError(f"unsupported version {version}")
+    off = 12
+    out: Dict[str, np.ndarray] = {}
+    for _ in range(count):
+        (nlen,) = struct.unpack_from("<H", blob, off); off += 2
+        name = blob[off : off + nlen].decode("utf-8"); off += nlen
+        dtype_id, ndim = struct.unpack_from("<BB", blob, off); off += 2
+        dims = struct.unpack_from(f"<{ndim}I", blob, off); off += 4 * ndim
+        (nbytes,) = struct.unpack_from("<Q", blob, off); off += 8
+        n_elem = int(np.prod(dims)) if ndim else 1
+        arr = np.frombuffer(blob, dtype=_DTYPES[dtype_id], count=n_elem,
+                            offset=off)
+        arr = np.array(arr).reshape(dims)
+        out[name] = arr
+        off += nbytes
+    return out

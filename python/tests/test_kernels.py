@@ -1,0 +1,212 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracle (the CORE signal).
+
+hypothesis sweeps shapes and quant configs; assert_allclose against
+ref.py per the session contract.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import quant, ref
+from compile.kernels.ou_mvm import ou_mvm
+from compile.kernels.pattern_conv import pattern_conv, pack_blocks, \
+    pattern_conv_cols
+
+
+def _scales(x, w, cfg):
+    sx = float(np.abs(x).max()) / cfg.x_max or 1.0
+    sw = float(np.abs(w).max()) / ((1 << (cfg.w_bits - 1)) - 1) or 1.0
+    return max(sx, 1e-8), max(sw, 1e-8)
+
+
+def _rand(rng, *shape):
+    return rng.standard_normal(shape).astype(np.float32)
+
+
+class TestOuMvmVsRef:
+    @pytest.mark.parametrize("b,r,c", [
+        (1, 9, 1), (2, 27, 16), (10, 27, 16), (7, 30, 5),
+        (64, 288, 64), (3, 8, 3), (5, 100, 33),
+    ])
+    def test_matches_ref_default_cfg(self, b, r, c):
+        rng = np.random.default_rng(b * 1000 + r + c)
+        x, w = _rand(rng, b, r), _rand(rng, r, c)
+        sx, sw = _scales(x, w, quant.DEFAULT)
+        got = ou_mvm(jnp.asarray(x), jnp.asarray(w), sx, sw)
+        want = ref.ou_mvm_ref(jnp.asarray(x), jnp.asarray(w), sx, sw)
+        assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5,
+                        atol=1e-5)
+
+    @pytest.mark.parametrize("cfg", [
+        quant.QuantConfig(x_bits=8),
+        quant.QuantConfig(adc_bits=6),
+        quant.QuantConfig(adc_bits=16),
+        quant.QuantConfig(ou_rows=4, ou_cols=4),
+        quant.QuantConfig(ou_rows=16, ou_cols=16),
+        quant.QuantConfig(w_bits=4, cell_bits=4),
+        quant.QuantConfig(w_bits=16, cell_bits=4, adc_bits=12),
+    ])
+    def test_matches_ref_across_configs(self, cfg):
+        rng = np.random.default_rng(42)
+        x, w = _rand(rng, 6, 45), _rand(rng, 45, 12)
+        sx, sw = _scales(x, w, cfg)
+        got = ou_mvm(jnp.asarray(x), jnp.asarray(w), sx, sw, cfg)
+        want = ref.ou_mvm_ref(jnp.asarray(x), jnp.asarray(w), sx, sw, cfg)
+        assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5,
+                        atol=1e-5)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        b=st.integers(1, 20),
+        r=st.integers(1, 64),
+        c=st.integers(1, 24),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref_hypothesis(self, b, r, c, seed):
+        rng = np.random.default_rng(seed)
+        x, w = _rand(rng, b, r), _rand(rng, r, c)
+        sx, sw = _scales(x, w, quant.DEFAULT)
+        got = ou_mvm(jnp.asarray(x), jnp.asarray(w), sx, sw,
+                     block_b=16, block_c=16)
+        want = ref.ou_mvm_ref(jnp.asarray(x), jnp.asarray(w), sx, sw)
+        assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5,
+                        atol=1e-5)
+
+    def test_block_size_invariance(self):
+        rng = np.random.default_rng(3)
+        x, w = _rand(rng, 30, 54), _rand(rng, 54, 20)
+        sx, sw = _scales(x, w, quant.DEFAULT)
+        outs = [
+            np.asarray(ou_mvm(jnp.asarray(x), jnp.asarray(w), sx, sw,
+                              block_b=bb, block_c=bc))
+            for bb, bc in [(8, 8), (16, 32), (64, 64)]
+        ]
+        for o in outs[1:]:
+            assert_allclose(o, outs[0], rtol=1e-6, atol=1e-6)
+
+    def test_high_adc_bits_approaches_float(self):
+        """With a very fine ADC the only error left is input/weight quant."""
+        rng = np.random.default_rng(5)
+        x, w = _rand(rng, 16, 27), _rand(rng, 27, 8)
+        cfg = quant.QuantConfig(x_bits=16, w_bits=16, cell_bits=4,
+                                adc_bits=28)
+        sx, sw = _scales(x, w, cfg)
+        got = np.asarray(ou_mvm(jnp.asarray(x), jnp.asarray(w), sx, sw, cfg))
+        want = x @ w
+        assert_allclose(got, want, rtol=5e-3, atol=5e-3)
+
+    def test_zero_inputs_give_zero(self):
+        x = np.zeros((4, 18), np.float32)
+        w = np.ones((18, 6), np.float32)
+        got = np.asarray(ou_mvm(jnp.asarray(x), jnp.asarray(w), 1.0, 1.0))
+        assert_allclose(got, np.zeros((4, 6)), atol=0)
+
+    def test_zero_weights_give_zero(self):
+        rng = np.random.default_rng(6)
+        x = _rand(rng, 4, 18)
+        w = np.zeros((18, 6), np.float32)
+        got = np.asarray(ou_mvm(jnp.asarray(x), jnp.asarray(w), 1.0, 1.0))
+        assert_allclose(got, np.zeros((4, 6)), atol=0)
+
+
+class TestRefSelfConsistency:
+    def test_adc_inf_equals_quantized_matmul(self):
+        """ref with huge ADC == exact integer matmul of quantized values."""
+        rng = np.random.default_rng(7)
+        x, w = _rand(rng, 5, 36), _rand(rng, 36, 9)
+        cfg = quant.QuantConfig(adc_bits=30)
+        sx, sw = _scales(x, w, cfg)
+        got = np.asarray(ref.ou_mvm_ref(jnp.asarray(x), jnp.asarray(w),
+                                        sx, sw, cfg))
+        xq = np.clip(np.round(x / sx), -cfg.x_max, cfg.x_max)
+        wq = np.clip(np.round(w / sw), -127, 127)
+        want = (xq @ wq) * sx * sw
+        assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_conv2d_ref_matches_lax_conv(self):
+        import jax
+        rng = np.random.default_rng(8)
+        x = _rand(rng, 2, 3, 8, 8)
+        w = _rand(rng, 5, 3, 3, 3)
+        want = jax.lax.conv_general_dilated(
+            jnp.asarray(x), jnp.asarray(w), (1, 1), ((1, 1), (1, 1)),
+            dimension_numbers=("NCHW", "OIHW", "NCHW"))
+        got = ref.conv2d_ref(jnp.asarray(x), jnp.asarray(w))
+        assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4,
+                        atol=1e-4)
+
+
+def _random_blocks(rng, cin, cout, n_patterns=3):
+    """Random pattern-block structure covering every out channel once per
+    input channel (valid mapping of a dense kernel-reordered layer)."""
+    blocks = []
+    for ci in range(cin):
+        perm = rng.permutation(cout)
+        splits = np.array_split(perm, n_patterns)
+        for ks in splits:
+            if len(ks) == 0:
+                continue
+            psize = int(rng.integers(1, 10))
+            pos = sorted(rng.choice(9, size=psize, replace=False).tolist())
+            blocks.append({
+                "rows": [ci * 9 + p for p in pos],
+                "out_idx": ks.tolist(),
+                "w": rng.standard_normal((psize, len(ks))).astype(np.float32),
+            })
+    return blocks
+
+
+def _blocks_to_dense(blocks, cout, cin):
+    wd = np.zeros((cout, cin, 3, 3), np.float32)
+    for b in blocks:
+        for j, oc in enumerate(b["out_idx"]):
+            for i, r in enumerate(b["rows"]):
+                ci, pos = r // 9, r % 9
+                wd[oc, ci, pos // 3, pos % 3] = b["w"][i][j]
+    return wd
+
+
+class TestPatternConv:
+    @pytest.mark.parametrize("cin,cout,hw", [(1, 4, 6), (2, 5, 8), (3, 8, 5)])
+    def test_matches_ref(self, cin, cout, hw):
+        rng = np.random.default_rng(cin * 100 + cout)
+        x = _rand(rng, 2, cin, hw, hw)
+        blocks = _random_blocks(rng, cin, cout)
+        got = pattern_conv(jnp.asarray(x), blocks, cout)
+        want = ref.pattern_conv_ref(jnp.asarray(x), blocks, cout)
+        assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5,
+                        atol=1e-5)
+
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), cin=st.integers(1, 4),
+           cout=st.integers(1, 10))
+    def test_equals_dense_conv_hypothesis(self, seed, cin, cout):
+        """Pattern-block compute == dense conv with the equivalent dense
+        weights — the paper's functional-correctness claim for the
+        reordered mapping."""
+        rng = np.random.default_rng(seed)
+        x = _rand(rng, 1, cin, 6, 6)
+        blocks = _random_blocks(rng, cin, cout)
+        wd = _blocks_to_dense(blocks, cout, cin)
+        got = pattern_conv(jnp.asarray(x), blocks, cout)
+        want = ref.conv2d_ref(jnp.asarray(x), jnp.asarray(wd))
+        assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4,
+                        atol=1e-4)
+
+    def test_pack_blocks_padding(self):
+        rng = np.random.default_rng(11)
+        blocks = [
+            {"rows": [0, 1], "out_idx": [0], "w": np.ones((2, 1), np.float32)},
+            {"rows": [3], "out_idx": [1, 2, 3],
+             "w": np.ones((1, 3), np.float32)},
+        ]
+        rows, oidx, w = pack_blocks(blocks)
+        assert rows.shape == (2, 2)
+        assert oidx.shape == (2, 3)
+        assert w.shape == (2, 2, 3)
+        # padded weights must be exactly zero
+        assert float(w[0, :, 1:].sum()) == 0.0
+        assert float(w[1, 1:, :].sum()) == 0.0

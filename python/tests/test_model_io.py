@@ -1,0 +1,109 @@
+"""L2 model shape/behaviour tests + weights_io round-trip."""
+
+import os
+import tempfile
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import dataset, model, weights_io
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params(np.random.default_rng(0))
+
+
+class TestModel:
+    def test_forward_shapes(self, params):
+        x = jnp.zeros((4, 3, 32, 32), jnp.float32)
+        out = model.forward(params, x, mode="float")
+        assert out.shape == (4, 10)
+
+    def test_crossbar_mode_close_to_float(self, params):
+        rng = np.random.default_rng(1)
+        x = rng.standard_normal((2, 3, 32, 32)).astype(np.float32) * 0.5
+        scales = model.calibrate_scales(params, x)
+        f = model.forward(params, jnp.asarray(x), mode="float")
+        q = model.forward(params, jnp.asarray(x), mode="crossbar",
+                          scales=scales)
+        # 8-bit inputs / 8-bit weights / 8-bit ADC: same ballpark logits
+        err = float(jnp.max(jnp.abs(f - q)) / (jnp.max(jnp.abs(f)) + 1e-9))
+        assert err < 0.5
+
+    def test_calibrate_scales_positive(self, params):
+        x = np.random.default_rng(2).standard_normal((4, 3, 32, 32)) \
+            .astype(np.float32)
+        scales = model.calibrate_scales(params, x)
+        assert set(scales) == set(model.conv_layer_names())
+        for sx, sw in scales.values():
+            assert sx > 0 and sw > 0
+
+    def test_loss_decreases_one_step(self, params):
+        import jax
+        x, y = dataset.make_dataset(64, seed=3)
+        g = jax.grad(model.loss_fn)(
+            {k: jnp.asarray(v) for k, v in params.items()},
+            jnp.asarray(x), jnp.asarray(y))
+        l0 = model.loss_fn({k: jnp.asarray(v) for k, v in params.items()},
+                           jnp.asarray(x), jnp.asarray(y))
+        stepped = {k: jnp.asarray(v) - 0.05 * g[k] for k, v in params.items()}
+        l1 = model.loss_fn(stepped, jnp.asarray(x), jnp.asarray(y))
+        assert float(l1) < float(l0)
+
+    def test_vgg16_inventory(self):
+        assert len(model.VGG16_CONV) == 13
+        assert len(model.VGG16_FMAP_CIFAR) == 13
+        assert len(model.VGG16_FMAP_IMAGENET) == 13
+        assert model.VGG16_CONV[0] == (64, 3)
+        assert model.VGG16_CONV[-1] == (512, 512)
+
+
+class TestDataset:
+    def test_deterministic(self):
+        x1, y1 = dataset.make_dataset(16, seed=5)
+        x2, y2 = dataset.make_dataset(16, seed=5)
+        assert np.array_equal(x1, x2) and np.array_equal(y1, y2)
+
+    def test_shapes_and_range(self):
+        x, y = dataset.make_dataset(8, seed=6)
+        assert x.shape == (8, 3, 32, 32)
+        assert y.shape == (8,)
+        assert y.min() >= 0 and y.max() < dataset.N_CLASSES
+        assert np.abs(x).max() < 5.0
+
+
+class TestWeightsIO:
+    def test_roundtrip(self):
+        rng = np.random.default_rng(7)
+        tensors = {
+            "a/w": rng.standard_normal((3, 4, 3, 3)).astype(np.float32),
+            "b": np.arange(10, dtype=np.int32),
+            "c_bytes": rng.integers(0, 255, size=(5,)).astype(np.uint8),
+            "scalar": np.float32(3.5).reshape(()),
+        }
+        with tempfile.TemporaryDirectory() as d:
+            p = os.path.join(d, "t.bin")
+            weights_io.save_tensors(p, tensors)
+            back = weights_io.load_tensors(p)
+        assert set(back) == set(tensors)
+        for k in tensors:
+            assert back[k].dtype == tensors[k].dtype
+            assert back[k].shape == tensors[k].shape
+            assert np.array_equal(back[k], tensors[k])
+
+    def test_bad_magic_rejected(self):
+        with tempfile.TemporaryDirectory() as d:
+            p = os.path.join(d, "bad.bin")
+            with open(p, "wb") as f:
+                f.write(b"NOTRPAT000")
+            with pytest.raises(ValueError):
+                weights_io.load_tensors(p)
+
+    def test_empty_container(self):
+        with tempfile.TemporaryDirectory() as d:
+            p = os.path.join(d, "e.bin")
+            weights_io.save_tensors(p, {})
+            assert weights_io.load_tensors(p) == {}

@@ -1,0 +1,138 @@
+"""Pattern-pruning pipeline invariants (paper §III-A)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import pruning
+
+
+class TestPatternBasics:
+    def test_pattern_roundtrip(self):
+        for pid in [0, 1, 0b101010101, 511, 0b100000000]:
+            mask = pruning.pattern_mask(pid)
+            k = mask * 3.14
+            assert pruning.kernel_pattern(k) == pid
+
+    def test_pattern_size(self):
+        assert pruning.pattern_size(0) == 0
+        assert pruning.pattern_size(511) == 9
+        assert pruning.pattern_size(0b101) == 2
+
+    @settings(max_examples=50, deadline=None)
+    @given(pid=st.integers(0, 511))
+    def test_mask_matches_bits(self, pid):
+        m = pruning.pattern_mask(pid).reshape(9)
+        for i in range(9):
+            assert (m[i] == 1.0) == bool(pid >> i & 1)
+
+
+class TestMagnitudePrune:
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 10_000),
+           sparsity=st.floats(0.0, 0.95))
+    def test_sparsity_reached(self, seed, sparsity):
+        rng = np.random.default_rng(seed)
+        w = rng.standard_normal((8, 4, 3, 3)).astype(np.float32)
+        wp = pruning.magnitude_prune(w, sparsity)
+        achieved = np.mean(wp == 0.0)
+        assert achieved >= sparsity - 1e-9
+        # no more than necessary beyond ties
+        assert achieved <= sparsity + 0.05
+
+    def test_keeps_largest(self):
+        w = np.arange(1, 10, dtype=np.float32).reshape(1, 1, 3, 3)
+        wp = pruning.magnitude_prune(w, 5 / 9)
+        assert set(np.nonzero(wp.reshape(9))[0]) == {5, 6, 7, 8}
+
+    def test_zero_sparsity_identity(self):
+        w = np.random.default_rng(0).standard_normal((2, 2, 3, 3))
+        assert np.array_equal(pruning.magnitude_prune(w, 0.0), w)
+
+
+class TestCandidateSelection:
+    def test_top_n_by_count(self):
+        from collections import Counter
+        counts = Counter({7: 100, 3: 50, 1: 10, 0: 5})
+        assert pruning.select_candidates(counts, 2) == [7, 0]
+        assert pruning.select_candidates(counts, 3) == [7, 3, 0]
+        assert pruning.select_candidates(counts, 4) == [7, 3, 1, 0]
+
+    def test_all_zero_always_kept_when_present(self):
+        from collections import Counter
+        counts = Counter({7: 100, 3: 50, 0: 1})
+        cands = pruning.select_candidates(counts, 2)
+        assert 0 in cands
+
+
+class TestProjection:
+    def test_projection_selects_subset(self):
+        rng = np.random.default_rng(1)
+        k = rng.standard_normal((3, 3)).astype(np.float32)
+        out, pid = pruning.project_kernel(k, [0b111, 0b111000000])
+        assert pruning.kernel_pattern(out) in (0b111, 0b111000000, 0)
+        # projected kernel is k masked
+        mask = pruning.pattern_mask(pid)
+        assert np.array_equal(out, k * mask)
+
+    def test_magnitude_projection_picks_max_energy(self):
+        k = np.zeros((3, 3), np.float32)
+        k[0, 0] = 10.0
+        k[2, 2] = 1.0
+        out, pid = pruning.project_kernel(k, [1, 1 << 8])  # pos 0 vs pos 8
+        assert pid == 1
+        assert out[0, 0] == 10.0 and out[2, 2] == 0.0
+
+    def test_hamming_projection(self):
+        k = np.ones((3, 3), np.float32)  # pattern 511
+        _, pid = pruning.project_kernel(k, [0b111111110, 0b1], "hamming")
+        assert pid == 0b111111110
+
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 10_000))
+    def test_layer_patterns_after_projection_within_candidates(self, seed):
+        rng = np.random.default_rng(seed)
+        w = rng.standard_normal((6, 3, 3, 3)).astype(np.float32)
+        wp = pruning.magnitude_prune(w, 0.7)
+        counts = pruning.layer_patterns(wp)
+        cands = pruning.select_candidates(counts, 4)
+        wproj, assigned = pruning.project_layer(wp, cands)
+        # every assigned pattern is a candidate, and every projected
+        # kernel's observed pattern is a SUBSET of its assigned pattern
+        # (zeros inside the pattern stay zero until retraining regrows).
+        cout, cin = wp.shape[:2]
+        for o in range(cout):
+            for i in range(cin):
+                pid = int(assigned[o, i])
+                assert pid in cands
+                obs = pruning.kernel_pattern(wproj[o, i])
+                assert obs & ~pid == 0
+
+
+class TestPruneNetwork:
+    def test_full_pipeline_stats(self):
+        rng = np.random.default_rng(2)
+        params = {
+            "conv0/w": rng.standard_normal((8, 3, 3, 3)).astype(np.float32),
+            "conv1/w": rng.standard_normal((16, 8, 3, 3)).astype(np.float32),
+        }
+        new, masks, cands = pruning.prune_network(
+            params, ["conv0", "conv1"], 0.75, [4, 4])
+        stats = pruning.network_stats(new, ["conv0", "conv1"])
+        assert stats["sparsity"] >= 0.5
+        # <=4 distinct patterns + possible all-zero per layer
+        for n in stats["patterns_per_layer"]:
+            assert n <= 5
+        for name in ["conv0", "conv1"]:
+            w = new[f"{name}/w"]
+            # nonzeros always live inside the assigned pattern mask
+            assert np.all((w != 0) <= (masks[name] != 0))
+
+    def test_masks_freeze_zeros(self):
+        rng = np.random.default_rng(3)
+        params = {"conv0/w": rng.standard_normal((4, 2, 3, 3)).astype(np.float32)}
+        new, masks, _ = pruning.prune_network(params, ["conv0"], 0.6, [2])
+        grown = {k: v + 1.0 for k, v in new.items()}
+        masked = pruning.apply_masks(grown, masks)
+        w = masked["conv0/w"]
+        assert np.all(w[masks["conv0"] == 0] == 0.0)

@@ -1,0 +1,123 @@
+//! Accelerator architecture units (paper §IV, Fig. 6).
+//!
+//! The dataflow is: input register → **Input Preprocessing Unit** (select
+//! the activations each pattern needs; detect all-zero inputs) → DACs →
+//! RRAM crossbar OUs → ADCs → shift-add → **Output Indexing Unit**
+//! (reorder out-of-sequence bitline outputs using the weight index
+//! buffer) → output register. The cycle/energy simulator ([`crate::sim`])
+//! and the functional simulator drive these units directly.
+
+use crate::mapping::PatternBlock;
+
+/// Input Preprocessing Unit (paper §IV-A).
+///
+/// Holds one im2col row (the receptive-field window of one output
+/// position) and serves pattern-selected slices of it to the crossbar
+/// wordlines, plus the all-zero detection that gates useless OU work.
+#[derive(Debug, Clone)]
+pub struct InputPreprocessor<'a> {
+    /// im2col row, length `cin * 9`, ordering as `nn::im2col`.
+    row: &'a [f32],
+}
+
+impl<'a> InputPreprocessor<'a> {
+    pub fn new(row: &'a [f32]) -> InputPreprocessor<'a> {
+        InputPreprocessor { row }
+    }
+
+    /// Select the inputs a pattern block's wordlines need (paper: "we
+    /// only send the input activations corresponding to the nonzero
+    /// weights").
+    pub fn select(&self, block: &PatternBlock) -> Vec<f32> {
+        block
+            .input_rows()
+            .into_iter()
+            .map(|r| self.row[r])
+            .collect()
+    }
+
+    /// All-zero detection (paper §IV-A): true when every input the block
+    /// would consume is zero, so the whole block's OUs can be skipped.
+    pub fn all_zero(&self, block: &PatternBlock) -> bool {
+        block.input_rows().into_iter().all(|r| self.row[r] == 0.0)
+    }
+}
+
+/// Output Indexing Unit (paper §IV-B).
+///
+/// Accumulates out-of-sequence bitline results into the correct output
+/// channel addresses using the index buffer's out-channel indexes.
+#[derive(Debug, Clone)]
+pub struct OutputIndexer {
+    out: Vec<f32>,
+}
+
+impl OutputIndexer {
+    pub fn new(cout: usize) -> OutputIndexer {
+        OutputIndexer { out: vec![0.0; cout] }
+    }
+
+    /// Scatter one block's column results (`values[k]` = column `k` of
+    /// the block) into their true output channels.
+    pub fn scatter(&mut self, block: &PatternBlock, values: &[f32]) {
+        debug_assert_eq!(values.len(), block.kernels());
+        for (v, &oc) in values.iter().zip(block.out_channels.iter()) {
+            self.out[oc as usize] += v;
+        }
+    }
+
+    pub fn finish(self) -> Vec<f32> {
+        self.out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pruning::Pattern;
+
+    fn block(cin: usize, pattern: u16, outs: &[u32]) -> PatternBlock {
+        let p = Pattern(pattern);
+        PatternBlock {
+            cin,
+            pattern: p,
+            out_channels: outs.to_vec(),
+            weights: vec![1.0; p.size() * outs.len()],
+        }
+    }
+
+    #[test]
+    fn preprocessor_selects_pattern_inputs() {
+        // two channels; row = [0..18)
+        let row: Vec<f32> = (0..18).map(|i| i as f32).collect();
+        let ipp = InputPreprocessor::new(&row);
+        let b = block(1, 0b100000101, &[0]); // positions 0, 2, 8 of ch 1
+        assert_eq!(ipp.select(&b), vec![9.0, 11.0, 17.0]);
+    }
+
+    #[test]
+    fn all_zero_detection() {
+        let mut row = vec![1.0f32; 18];
+        row[9] = 0.0;
+        row[11] = 0.0;
+        row[17] = 0.0;
+        let ipp = InputPreprocessor::new(&row);
+        let b = block(1, 0b100000101, &[0]);
+        assert!(ipp.all_zero(&b)); // its three inputs are all zero
+        let b2 = block(1, 0b100000111, &[0]); // adds position 1 (= 1.0)
+        assert!(!ipp.all_zero(&b2));
+        let b3 = block(0, 0b100000101, &[0]); // channel 0 is nonzero
+        assert!(!ipp.all_zero(&b3));
+    }
+
+    #[test]
+    fn indexer_scatters_and_accumulates() {
+        let mut oi = OutputIndexer::new(5);
+        let b1 = block(0, 0b1, &[3, 1]);
+        let b2 = block(1, 0b1, &[3]);
+        oi.scatter(&b1, &[0.5, 2.0]);
+        oi.scatter(&b2, &[1.5]);
+        let out = oi.finish();
+        assert_eq!(out, vec![0.0, 2.0, 0.0, 2.0, 0.0]);
+    }
+}

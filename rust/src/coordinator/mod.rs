@@ -1,0 +1,341 @@
+//! L3 serving coordinator: request router + dynamic batcher.
+//!
+//! Requests are submitted from any thread; a worker thread collects them
+//! into fixed-size batches (padding the tail), executes the AOT-compiled
+//! functional model through [`crate::runtime::Engine`], and routes each
+//! logit vector back to its requester. std::thread + mpsc throughout
+//! (no async runtime exists in this offline image — and the paper's
+//! contribution is the accelerator, so L3 stays a thin driver per the
+//! architecture note in DESIGN.md §2).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::util::stats::Summary;
+
+/// Inference backend abstraction — the PJRT engine in production, mocks
+/// in tests. Backends are constructed *inside* the worker thread (the
+/// PJRT client is not `Send`), so the trait itself needs no `Send`.
+pub trait InferBackend: 'static {
+    /// Input element count per request (e.g. 3*32*32).
+    fn input_len(&self) -> usize;
+    /// Output element count per request (e.g. 10 logits).
+    fn output_len(&self) -> usize;
+    /// Batch capacity of the compiled executable.
+    fn batch_size(&self) -> usize;
+    /// Run a full batch (`batch_size * input_len` floats, zero-padded);
+    /// returns `batch_size * output_len` floats.
+    fn run_batch(&self, batch: &[f32]) -> Result<Vec<f32>, String>;
+}
+
+/// PJRT-backed backend for the SmallCNN artifact.
+pub struct PjrtBackend {
+    pub engine: crate::runtime::Engine,
+    pub batch: usize,
+    pub input_shape: Vec<usize>,
+    pub output_len: usize,
+}
+
+impl InferBackend for PjrtBackend {
+    fn input_len(&self) -> usize {
+        self.input_shape.iter().product()
+    }
+
+    fn output_len(&self) -> usize {
+        self.output_len
+    }
+
+    fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    fn run_batch(&self, batch: &[f32]) -> Result<Vec<f32>, String> {
+        let mut shape = vec![self.batch];
+        shape.extend_from_slice(&self.input_shape);
+        self.engine
+            .run_f32(&[(&shape, batch)])
+            .map_err(|e| e.to_string())
+    }
+}
+
+/// One inference request.
+struct Request {
+    image: Vec<f32>,
+    submitted: Instant,
+    reply: Sender<Reply>,
+}
+
+/// Reply with logits + timing.
+#[derive(Debug, Clone)]
+pub struct Reply {
+    pub logits: Vec<f32>,
+    pub queue_us: u64,
+    pub batch_fill: usize,
+}
+
+/// Aggregate serving metrics.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub batches: AtomicU64,
+    pub padded_slots: AtomicU64,
+    latencies_us: Mutex<Summary>,
+}
+
+impl Metrics {
+    pub fn latency_summary(&self) -> Summary {
+        self.latencies_us.lock().unwrap().clone()
+    }
+}
+
+/// Handle to a running coordinator.
+pub struct Coordinator {
+    tx: Option<Sender<Request>>,
+    pub metrics: Arc<Metrics>,
+    worker: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Coordinator {
+    /// Start the batching worker. The backend is built by `make_backend`
+    /// *inside* the worker thread (the PJRT client is not `Send`).
+    /// `max_wait` bounds how long a partial batch waits for more
+    /// requests before executing padded.
+    pub fn start<B, F>(make_backend: F, max_wait: Duration) -> Coordinator
+    where
+        B: InferBackend,
+        F: FnOnce() -> B + Send + 'static,
+    {
+        let (tx, rx) = channel::<Request>();
+        let metrics = Arc::new(Metrics::default());
+        let m = metrics.clone();
+        let worker = std::thread::spawn(move || {
+            let backend = make_backend();
+            batch_loop(backend, rx, max_wait, m)
+        });
+        Coordinator { tx: Some(tx), metrics, worker: Some(worker) }
+    }
+
+    /// Submit one image; returns the channel the reply arrives on.
+    pub fn submit(&self, image: Vec<f32>) -> Receiver<Reply> {
+        let (rtx, rrx) = channel();
+        let req = Request { image, submitted: Instant::now(), reply: rtx };
+        // A send failure means the worker exited; the caller sees it as
+        // a closed reply channel.
+        if let Some(tx) = &self.tx {
+            let _ = tx.send(req);
+        }
+        rrx
+    }
+
+    /// Stop the worker (drains in-flight requests first).
+    pub fn shutdown(mut self) {
+        drop(self.tx.take());
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+fn batch_loop<B: InferBackend>(
+    backend: B,
+    rx: Receiver<Request>,
+    max_wait: Duration,
+    metrics: Arc<Metrics>,
+) {
+    let bs = backend.batch_size();
+    let in_len = backend.input_len();
+    let out_len = backend.output_len();
+
+    loop {
+        // Block for the first request of a batch.
+        let first = match rx.recv() {
+            Ok(r) => r,
+            Err(_) => return, // all senders dropped
+        };
+        let mut pending = vec![first];
+        let deadline = Instant::now() + max_wait;
+        // Fill the batch until full or the deadline passes.
+        while pending.len() < bs {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(r) => pending.push(r),
+                Err(_) => break,
+            }
+        }
+
+        // Assemble padded batch.
+        let mut batch = vec![0.0f32; bs * in_len];
+        for (i, r) in pending.iter().enumerate() {
+            debug_assert_eq!(r.image.len(), in_len);
+            batch[i * in_len..(i + 1) * in_len].copy_from_slice(&r.image);
+        }
+        let fill = pending.len();
+        metrics.batches.fetch_add(1, Ordering::Relaxed);
+        metrics
+            .padded_slots
+            .fetch_add((bs - fill) as u64, Ordering::Relaxed);
+
+        match backend.run_batch(&batch) {
+            Ok(out) => {
+                for (i, r) in pending.into_iter().enumerate() {
+                    let logits = out[i * out_len..(i + 1) * out_len].to_vec();
+                    let queue_us = r.submitted.elapsed().as_micros() as u64;
+                    metrics.requests.fetch_add(1, Ordering::Relaxed);
+                    metrics
+                        .latencies_us
+                        .lock()
+                        .unwrap()
+                        .push(queue_us as f64);
+                    let _ = r.reply.send(Reply {
+                        logits,
+                        queue_us,
+                        batch_fill: fill,
+                    });
+                }
+            }
+            Err(e) => {
+                // Drop replies; requesters observe closed channels.
+                eprintln!("[coordinator] batch failed: {e}");
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Identity-ish mock: logit k = sum(image) + k.
+    struct MockBackend {
+        in_len: usize,
+        out_len: usize,
+        batch: usize,
+        calls: Arc<AtomicU64>,
+    }
+
+    impl InferBackend for MockBackend {
+        fn input_len(&self) -> usize {
+            self.in_len
+        }
+        fn output_len(&self) -> usize {
+            self.out_len
+        }
+        fn batch_size(&self) -> usize {
+            self.batch
+        }
+        fn run_batch(&self, batch: &[f32]) -> Result<Vec<f32>, String> {
+            self.calls.fetch_add(1, Ordering::Relaxed);
+            assert_eq!(batch.len(), self.batch * self.in_len);
+            let mut out = Vec::with_capacity(self.batch * self.out_len);
+            for i in 0..self.batch {
+                let s: f32 = batch[i * self.in_len..(i + 1) * self.in_len]
+                    .iter()
+                    .sum();
+                for k in 0..self.out_len {
+                    out.push(s + k as f32);
+                }
+            }
+            Ok(out)
+        }
+    }
+
+    fn mock(batch: usize, calls: Arc<AtomicU64>) -> MockBackend {
+        MockBackend { in_len: 4, out_len: 3, batch, calls }
+    }
+
+    #[test]
+    fn single_request_roundtrip() {
+        let calls = Arc::new(AtomicU64::new(0));
+        let calls2 = calls.clone();
+        let c = Coordinator::start(move || mock(4, calls2), Duration::from_millis(5));
+        let rx = c.submit(vec![1.0, 2.0, 3.0, 4.0]);
+        let reply = rx.recv().unwrap();
+        assert_eq!(reply.logits, vec![10.0, 11.0, 12.0]);
+        assert_eq!(reply.batch_fill, 1);
+        c.shutdown();
+        assert_eq!(calls.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn batching_coalesces_requests() {
+        let calls = Arc::new(AtomicU64::new(0));
+        let calls2 = calls.clone();
+        let c = Coordinator::start(move || mock(4, calls2), Duration::from_millis(200));
+        let rxs: Vec<_> = (0..4)
+            .map(|i| c.submit(vec![i as f32; 4]))
+            .collect();
+        let replies: Vec<Reply> = rxs.iter().map(|r| r.recv().unwrap()).collect();
+        for (i, rep) in replies.iter().enumerate() {
+            assert_eq!(rep.logits[0], 4.0 * i as f32);
+            assert_eq!(rep.batch_fill, 4);
+        }
+        c.shutdown();
+        // all four requests fit one batch
+        assert_eq!(calls.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn partial_batch_fires_on_timeout() {
+        let calls = Arc::new(AtomicU64::new(0));
+        let calls2 = calls.clone();
+        let c = Coordinator::start(move || mock(8, calls2), Duration::from_millis(10));
+        let rx = c.submit(vec![0.5; 4]);
+        let reply = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(reply.batch_fill, 1);
+        c.shutdown();
+        let m = calls.load(Ordering::Relaxed);
+        assert_eq!(m, 1);
+    }
+
+    #[test]
+    fn metrics_track_requests_and_padding() {
+        let calls = Arc::new(AtomicU64::new(0));
+        let c = Coordinator::start(move || mock(4, calls), Duration::from_millis(10));
+        for _ in 0..2 {
+            let rx = c.submit(vec![0.0; 4]);
+            rx.recv().unwrap();
+        }
+        let reqs = c.metrics.requests.load(Ordering::Relaxed);
+        let pads = c.metrics.padded_slots.load(Ordering::Relaxed);
+        assert_eq!(reqs, 2);
+        assert!(pads >= 4, "pads={pads}"); // two batches of fill 1
+        assert!(c.metrics.latency_summary().len() == 2);
+        c.shutdown();
+    }
+
+    #[test]
+    fn many_threads_submit_concurrently() {
+        let calls = Arc::new(AtomicU64::new(0));
+        let c = Arc::new(Coordinator::start(
+            move || mock(4, calls),
+            Duration::from_millis(2),
+        ));
+        let mut handles = Vec::new();
+        for t in 0..8 {
+            let c2 = c.clone();
+            handles.push(std::thread::spawn(move || {
+                let rx = c2.submit(vec![t as f32; 4]);
+                let rep = rx.recv().unwrap();
+                assert_eq!(rep.logits[0], 4.0 * t as f32);
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(c.metrics.requests.load(Ordering::Relaxed), 8);
+    }
+}

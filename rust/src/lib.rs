@@ -1,0 +1,30 @@
+//! # rram-pattern-accel
+//!
+//! Reproduction of *"High Area/Energy Efficiency RRAM CNN Accelerator with
+//! Kernel-Reordering Weight Mapping Scheme Based on Pattern Pruning"*
+//! (CS.AR 2020).
+//!
+//! The crate hosts the paper's contribution — the pattern-pruned,
+//! kernel-reordered weight mapping scheme ([`mapping`]) and the
+//! accelerator architecture that executes it ([`arch`], [`sim`]) — plus
+//! every substrate it needs: the RRAM crossbar / ADC / DAC models
+//! ([`xbar`]), pattern analysis ([`pruning`]), network + tensor handling
+//! ([`nn`]), the PJRT runtime that executes the AOT-compiled JAX
+//! functional model ([`runtime`]), a serving coordinator
+//! ([`coordinator`]), report generation for every paper table and figure
+//! ([`report`]), and small from-scratch utilities ([`util`]) standing in
+//! for crates unavailable in this offline image.
+//!
+//! See `DESIGN.md` for the full system inventory and experiment index.
+
+pub mod arch;
+pub mod config;
+pub mod coordinator;
+pub mod mapping;
+pub mod nn;
+pub mod pruning;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+pub mod xbar;

@@ -1,0 +1,372 @@
+//! `rram-accel` — CLI for the RRAM pattern-pruned CNN accelerator
+//! reproduction.
+//!
+//! Subcommands:
+//!   map       — map a network (synthetic VGG16 or artifacts SmallCNN)
+//!               with a scheme; print crossbar/area/index stats
+//!   simulate  — cycle/energy simulation + scheme comparison (Fig7/8/§V-C)
+//!   serve     — start the batching coordinator over the PJRT artifact
+//!   e2e       — run the SmallCNN end-to-end check (golden + accuracy)
+//!   report    — regenerate every paper table/figure into results/
+
+use std::path::Path;
+use std::time::Duration;
+
+use rram_pattern_accel::config::{HardwareConfig, SimConfig};
+use rram_pattern_accel::coordinator::{Coordinator, PjrtBackend};
+use rram_pattern_accel::mapping::{
+    index, kmeans::KmeansMapping, naive::NaiveMapping, ou_sparse::OuSparseMapping,
+    pattern::{BlockOrder, PatternMapping, PatternMappingOrdered},
+    MappingScheme,
+};
+use rram_pattern_accel::nn::NetworkSpec;
+use rram_pattern_accel::pruning::synthetic::{DatasetProfile, ALL_PROFILES};
+use rram_pattern_accel::report;
+use rram_pattern_accel::runtime::Engine;
+use rram_pattern_accel::sim::{self, smallcnn::SmallCnn};
+use rram_pattern_accel::util::cli::Args;
+use rram_pattern_accel::util::threadpool;
+use rram_pattern_accel::xbar::CellGeometry;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let sub = argv.first().cloned().unwrap_or_else(|| "help".to_string());
+    let rest: Vec<String> = argv.into_iter().skip(1).collect();
+    let code = match sub.as_str() {
+        "map" => cmd_map(rest),
+        "simulate" => cmd_simulate(rest),
+        "serve" => cmd_serve(rest),
+        "e2e" => cmd_e2e(rest),
+        "report" => cmd_report(rest),
+        _ => {
+            eprintln!(
+                "usage: rram-accel <map|simulate|serve|e2e|report> [options]\n\
+                 run a subcommand with --help for its options"
+            );
+            if sub == "help" { 0 } else { 2 }
+        }
+    };
+    std::process::exit(code);
+}
+
+fn scheme_by_name(name: &str) -> Option<Box<dyn MappingScheme>> {
+    match name {
+        "naive" => Some(Box::new(NaiveMapping)),
+        "pattern" => Some(Box::new(PatternMapping)),
+        "kmeans" => Some(Box::new(KmeansMapping::default())),
+        "ou_sparse" => Some(Box::new(OuSparseMapping)),
+        "pattern-widthsort" => {
+            Some(Box::new(PatternMappingOrdered(BlockOrder::SizeThenWidth)))
+        }
+        "pattern-sizeorder" => {
+            Some(Box::new(PatternMappingOrdered(BlockOrder::SizeThenChannel)))
+        }
+        _ => None,
+    }
+}
+
+fn cmd_map(rest: Vec<String>) -> i32 {
+    let args = match Args::new("map a network onto RRAM crossbars")
+        .opt("dataset", "cifar10", "cifar10|cifar100|imagenet (synthetic VGG16)")
+        .opt("scheme", "pattern", "naive|pattern|kmeans|ou_sparse")
+        .opt("seed", "42", "synthetic weight seed")
+        .opt("threads", "0", "worker threads (0 = auto)")
+        .parse(rest)
+    {
+        Ok(a) => a,
+        Err(e) => return usage(e),
+    };
+    let hw = HardwareConfig::default();
+    let geom = CellGeometry::from_hw(&hw);
+    let profile = match DatasetProfile::by_name(args.get("dataset")) {
+        Some(p) => p,
+        None => return usage(format!("unknown dataset {}", args.get("dataset"))),
+    };
+    let scheme = match scheme_by_name(args.get("scheme")) {
+        Some(s) => s,
+        None => return usage(format!("unknown scheme {}", args.get("scheme"))),
+    };
+    let threads = auto_threads(&args);
+    let seed = args.get_usize("seed").unwrap_or(42) as u64;
+
+    println!("{}", report::table1(&hw));
+    let nw = profile.generate(seed);
+    let mapped = scheme.map_network(&nw, &geom, threads);
+    println!(
+        "network {} scheme {}: {} crossbars, {} used cells, utilization {:.1}%",
+        mapped.network,
+        mapped.scheme,
+        mapped.total_crossbars(),
+        mapped.total_used_cells(),
+        100.0 * mapped.total_used_cells() as f64
+            / (mapped.total_crossbars() * hw.xbar_rows * hw.xbar_cols).max(1) as f64,
+    );
+    let mut idx_bits = 0usize;
+    for (li, ml) in mapped.layers.iter().enumerate() {
+        let oh = index::overhead(ml);
+        idx_bits += oh.total_bits();
+        println!(
+            "  layer {:>2}: {:>5} blocks {:>4} xbars  {:>9} cells  \
+             {:>6} zero-kernels  index {:>8.1} KiB",
+            li,
+            ml.blocks.len(),
+            ml.n_crossbars,
+            ml.used_cells,
+            ml.zero_kernels,
+            oh.total_kib(),
+        );
+    }
+    println!(
+        "total index overhead: {:.1} KiB",
+        idx_bits as f64 / 8.0 / 1024.0
+    );
+    0
+}
+
+fn cmd_simulate(rest: Vec<String>) -> i32 {
+    let args = match Args::new("cycle/energy simulation vs the naive baseline")
+        .opt("dataset", "cifar10", "cifar10|cifar100|imagenet")
+        .opt("seed", "42", "synthetic weight seed")
+        .opt("samples", "64", "sampled positions per layer")
+        .opt("threads", "0", "worker threads (0 = auto)")
+        .flag("no-zero-detect", "disable all-zero input detection")
+        .parse(rest)
+    {
+        Ok(a) => a,
+        Err(e) => return usage(e),
+    };
+    let hw = HardwareConfig::default();
+    let geom = CellGeometry::from_hw(&hw);
+    let threads = auto_threads(&args);
+    let profile = match DatasetProfile::by_name(args.get("dataset")) {
+        Some(p) => p,
+        None => return usage(format!("unknown dataset {}", args.get("dataset"))),
+    };
+    let sim_cfg = SimConfig {
+        sample_positions: Some(args.get_usize("samples").unwrap_or(64)),
+        zero_detection: !args.get_flag("no-zero-detect"),
+        ..Default::default()
+    };
+    let seed = args.get_usize("seed").unwrap_or(42) as u64;
+
+    let nw = profile.generate(seed);
+    let spec = nw.spec.clone();
+    let naive = NaiveMapping.map_network(&nw, &geom, threads);
+    let ours = PatternMapping.map_network(&nw, &geom, threads);
+    let base = sim::simulate_network(&naive, &spec, &hw, &sim_cfg, threads);
+    let mine = sim::simulate_network(&ours, &spec, &hw, &sim_cfg, threads);
+    let cmp = sim::Comparison { baseline: base, ours: mine };
+    println!("{}", report::table1(&hw));
+    println!(
+        "{:<10} area {:.2}x | energy {:.2}x | speedup {:.2}x",
+        profile.name,
+        cmp.area_efficiency(),
+        cmp.energy_efficiency(),
+        cmp.speedup(),
+    );
+    0
+}
+
+fn cmd_serve(rest: Vec<String>) -> i32 {
+    let args = match Args::new("serve batched inference over the AOT artifact")
+        .opt("artifacts", "artifacts", "artifacts directory")
+        .opt("requests", "32", "number of demo requests to run")
+        .opt("max-wait-ms", "2", "batcher max wait")
+        .parse(rest)
+    {
+        Ok(a) => a,
+        Err(e) => return usage(e),
+    };
+    let dir = args.get("artifacts").to_string();
+    let n = args.get_usize("requests").unwrap_or(32);
+    let wait = Duration::from_millis(args.get_usize("max-wait-ms").unwrap_or(2) as u64);
+
+    let td = match sim::smallcnn::TestData::load(Path::new(&dir)) {
+        Ok(t) => t,
+        Err(e) => return usage(format!("load test data: {e} (run `make artifacts`)")),
+    };
+    let path = format!("{dir}/smallcnn_b8.hlo.txt");
+    let coord = Coordinator::start(
+        move || {
+            let engine = Engine::load(Path::new(&path)).expect("load HLO artifact");
+            println!("[serve] engine up on {}", engine.platform());
+            PjrtBackend {
+                engine,
+                batch: 8,
+                input_shape: vec![3, 32, 32],
+                output_len: 10,
+            }
+        },
+        wait,
+    );
+
+    let img_len = 3 * 32 * 32;
+    let avail = td.test_x.shape[0];
+    let t0 = std::time::Instant::now();
+    let rxs: Vec<_> = (0..n)
+        .map(|i| {
+            let img = &td.test_x.data[(i % avail) * img_len..((i % avail) + 1) * img_len];
+            coord.submit(img.to_vec())
+        })
+        .collect();
+    let mut correct = 0usize;
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let reply = rx.recv().expect("reply");
+        let pred = sim::smallcnn::argmax(&reply.logits);
+        if pred as i32 == td.test_y[i % avail] {
+            correct += 1;
+        }
+    }
+    let elapsed = t0.elapsed();
+    let lat = coord.metrics.latency_summary();
+    println!(
+        "[serve] {} requests in {:?} ({:.0} req/s), accuracy {:.1}%, \
+         batches {}, mean queue+exec {:.2} ms, p99 {:.2} ms",
+        n,
+        elapsed,
+        n as f64 / elapsed.as_secs_f64(),
+        100.0 * correct as f64 / n as f64,
+        coord.metrics.batches.load(std::sync::atomic::Ordering::Relaxed),
+        lat.mean() / 1000.0,
+        lat.percentile(99.0) / 1000.0,
+    );
+    coord.shutdown();
+    0
+}
+
+fn cmd_e2e(rest: Vec<String>) -> i32 {
+    let args = match Args::new("end-to-end SmallCNN check (golden + accuracy)")
+        .opt("artifacts", "artifacts", "artifacts directory")
+        .opt("images", "64", "test images for accuracy")
+        .parse(rest)
+    {
+        Ok(a) => a,
+        Err(e) => return usage(e),
+    };
+    let dir = Path::new(args.get("artifacts"));
+    match run_e2e(dir, args.get_usize("images").unwrap_or(64)) {
+        Ok(()) => 0,
+        Err(e) => usage(e),
+    }
+}
+
+fn run_e2e(dir: &Path, n_images: usize) -> Result<(), String> {
+    let model = SmallCnn::load(dir)?;
+    let td = sim::smallcnn::TestData::load(dir)?;
+    let hw = HardwareConfig::smallcnn_functional();
+
+    // 1. PJRT execution matches the python golden logits.
+    let engine = Engine::load(&dir.join("smallcnn_b1.hlo.txt"))
+        .map_err(|e| e.to_string())?;
+    let n_golden = td.golden_x.shape[0];
+    let mut max_err = 0.0f32;
+    for i in 0..n_golden {
+        let img = sim::smallcnn::image(&td.golden_x, i);
+        let out = engine
+            .run_f32(&[(&[1usize, 3, 32, 32], &img.data)])
+            .map_err(|e| e.to_string())?;
+        for (o, g) in out.iter().zip(
+            td.golden_logits.data[i * 10..(i + 1) * 10].iter(),
+        ) {
+            max_err = max_err.max((o - g).abs());
+        }
+    }
+    println!("[e2e] PJRT vs python golden logits: max |err| = {max_err:.2e}");
+    if max_err > 1e-3 {
+        return Err("golden check failed".to_string());
+    }
+
+    // 2. Rust functional simulator accuracy on test images.
+    let mapped = model.map(&PatternMapping, &hw);
+    mapped.validate().map_err(|e| e.to_string())?;
+    let n = n_images.min(td.test_x.shape[0]);
+    let mut correct = 0usize;
+    for i in 0..n {
+        let img = sim::smallcnn::image(&td.test_x, i);
+        let logits = model.forward(&mapped, &img, &hw, true);
+        if sim::smallcnn::argmax(&logits) as i32 == td.test_y[i] {
+            correct += 1;
+        }
+    }
+    let acc = correct as f64 / n as f64;
+    let meta_acc = model.meta.get("accuracy").get("crossbar").as_f64().unwrap_or(0.0);
+    println!(
+        "[e2e] mapped-crossbar simulator accuracy: {:.1}% on {} images \
+         (python crossbar-mode: {:.1}%)",
+        acc * 100.0,
+        n,
+        meta_acc * 100.0
+    );
+    Ok(())
+}
+
+fn cmd_report(rest: Vec<String>) -> i32 {
+    let args = match Args::new("regenerate every paper table & figure")
+        .opt("seed", "42", "synthetic weight seed")
+        .opt("samples", "64", "sampled positions per layer")
+        .opt("threads", "0", "worker threads (0 = auto)")
+        .parse(rest)
+    {
+        Ok(a) => a,
+        Err(e) => return usage(e),
+    };
+    let threads = auto_threads(&args);
+    let seed = args.get_usize("seed").unwrap_or(42) as u64;
+    let samples = args.get_usize("samples").unwrap_or(64);
+    let hw = HardwareConfig::default();
+    let geom = CellGeometry::from_hw(&hw);
+    let sim_cfg = SimConfig {
+        sample_positions: Some(samples),
+        ..Default::default()
+    };
+
+    println!("{}", report::table1(&hw));
+    let paper_area = [4.67, 5.20, 4.16];
+    let paper_energy = [2.13, 2.15, 1.98];
+    let paper_speed = [1.35, 1.15, 1.17];
+    for (pi, profile) in ALL_PROFILES.iter().enumerate() {
+        let nw = profile.generate(seed);
+        let spec: NetworkSpec = nw.spec.clone();
+        let stats = nw.stats();
+        println!("{}", report::table2_row(profile, &stats));
+        let naive = NaiveMapping.map_network(&nw, &geom, threads);
+        let ours = PatternMapping.map_network(&nw, &geom, threads);
+        let km = KmeansMapping::default().map_network(&nw, &geom, threads);
+        let sre = OuSparseMapping.map_network(&nw, &geom, threads);
+        let f7 = report::Fig7Row {
+            dataset: profile.name.to_string(),
+            naive_crossbars: naive.total_crossbars(),
+            pattern_crossbars: ours.total_crossbars(),
+            kmeans_crossbars: km.total_crossbars(),
+            ou_sparse_crossbars: sre.total_crossbars(),
+            theoretical_best: 1.0 / (1.0 - profile.sparsity),
+            paper_efficiency: paper_area[pi],
+        };
+        println!("{}", f7.line());
+        let base = sim::simulate_network(&naive, &spec, &hw, &sim_cfg, threads);
+        let mine = sim::simulate_network(&ours, &spec, &hw, &sim_cfg, threads);
+        let f8 = report::Fig8Row {
+            dataset: profile.name.to_string(),
+            baseline: base.total_energy(),
+            ours: mine.total_energy(),
+            paper_efficiency: paper_energy[pi],
+        };
+        println!("{}", f8.lines());
+        let cmp = sim::Comparison { baseline: base, ours: mine };
+        println!("{}", report::speedup_line(profile.name, &cmp, paper_speed[pi]));
+        println!();
+    }
+    0
+}
+
+fn auto_threads(args: &Args) -> usize {
+    match args.get_usize("threads") {
+        Ok(0) | Err(_) => threadpool::default_threads(),
+        Ok(n) => n,
+    }
+}
+
+fn usage(e: String) -> i32 {
+    eprintln!("{e}");
+    2
+}

@@ -1,0 +1,296 @@
+//! Weight index buffer (paper §III-B storage, §IV-C decode, §V-D cost).
+//!
+//! Because kernels are reordered, the accelerator must store, "pattern by
+//! pattern in the same order as mapping the pattern blocks to the
+//! crossbar", (a) the pattern shape (9-bit mask, which encodes the size)
+//! and (b) the output-channel index of every stored kernel. §IV-C shows
+//! the weights' *placement* is recoverable from just this sequence plus
+//! the crossbar geometry — the decoder here replays the Fig. 5 placement
+//! walk, which the round-trip tests pin against the actual placements.
+//!
+//! Overhead model (§V-D): one `ceil(log2(cout))`-bit (≤ 9 for 512
+//! channels) index per stored kernel; all-zero-pattern kernels are never
+//! stored, so their indexes are saved too. Pattern shapes cost 9 + 16
+//! bits per block ("this overhead can be ignored" — we count it anyway).
+
+use super::placement::place_blocks;
+use super::{MappedLayer, Placement};
+use crate::pruning::Pattern;
+use crate::xbar::CellGeometry;
+
+/// Bit-packed writer (MSB-first within each byte).
+#[derive(Debug, Default)]
+pub struct BitWriter {
+    bytes: Vec<u8>,
+    bit: usize,
+}
+
+impl BitWriter {
+    pub fn new() -> BitWriter {
+        BitWriter::default()
+    }
+
+    pub fn push(&mut self, value: u32, bits: usize) {
+        debug_assert!(bits <= 32);
+        debug_assert!(bits == 32 || value < (1u32 << bits));
+        for i in (0..bits).rev() {
+            let b = (value >> i) & 1;
+            if self.bit == 0 {
+                self.bytes.push(0);
+            }
+            let last = self.bytes.len() - 1;
+            self.bytes[last] |= (b as u8) << (7 - self.bit);
+            self.bit = (self.bit + 1) % 8;
+        }
+    }
+
+    pub fn bit_len(&self) -> usize {
+        if self.bytes.is_empty() {
+            0
+        } else {
+            (self.bytes.len() - 1) * 8 + if self.bit == 0 { 8 } else { self.bit }
+        }
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.bytes
+    }
+}
+
+/// Bit-packed reader matching [`BitWriter`].
+#[derive(Debug)]
+pub struct BitReader<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> BitReader<'a> {
+    pub fn new(bytes: &'a [u8]) -> BitReader<'a> {
+        BitReader { bytes, pos: 0 }
+    }
+
+    pub fn read(&mut self, bits: usize) -> Option<u32> {
+        let mut v = 0u32;
+        for _ in 0..bits {
+            let byte = self.bytes.get(self.pos / 8)?;
+            let b = (byte >> (7 - self.pos % 8)) & 1;
+            v = (v << 1) | b as u32;
+            self.pos += 1;
+        }
+        Some(v)
+    }
+}
+
+/// Bits needed for an output-channel index ("no more than 9 bits for
+/// 512 output channels").
+pub fn index_bits(cout: usize) -> usize {
+    (usize::BITS - (cout.max(2) - 1).leading_zeros()) as usize
+}
+
+/// Encoded index buffer of one mapped layer.
+#[derive(Debug, Clone, PartialEq)]
+pub struct IndexBuffer {
+    pub bytes: Vec<u8>,
+    pub n_blocks: usize,
+    pub cout: usize,
+    pub cin: usize,
+}
+
+/// Serialize a mapped layer's index stream (block placement order):
+/// per block `[pattern mask: 9][cin: 16][kernel count: 16]`, then
+/// `index_bits(cout)` bits per kernel.
+pub fn encode(layer: &MappedLayer) -> IndexBuffer {
+    let kbits = index_bits(layer.cout);
+    let mut w = BitWriter::new();
+    for b in &layer.blocks {
+        w.push(b.pattern.0 as u32, 9);
+        w.push(b.cin as u32, 16);
+        w.push(b.kernels() as u32, 16);
+        for &oc in &b.out_channels {
+            w.push(oc, kbits);
+        }
+    }
+    IndexBuffer {
+        bytes: w.into_bytes(),
+        n_blocks: layer.blocks.len(),
+        cout: layer.cout,
+        cin: layer.cin,
+    }
+}
+
+/// One decoded index-buffer entry.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DecodedBlock {
+    pub pattern: Pattern,
+    pub cin: usize,
+    pub out_channels: Vec<u32>,
+}
+
+/// Parse the index stream back into block descriptors.
+pub fn decode(buf: &IndexBuffer) -> Result<Vec<DecodedBlock>, String> {
+    let kbits = index_bits(buf.cout);
+    let mut r = BitReader::new(&buf.bytes);
+    let mut out = Vec::with_capacity(buf.n_blocks);
+    for i in 0..buf.n_blocks {
+        let pat = r.read(9).ok_or(format!("truncated at block {i}"))?;
+        let cin = r.read(16).ok_or("truncated cin")? as usize;
+        let count = r.read(16).ok_or("truncated count")? as usize;
+        let mut ocs = Vec::with_capacity(count);
+        for _ in 0..count {
+            ocs.push(r.read(kbits).ok_or("truncated kernel index")?);
+        }
+        out.push(DecodedBlock {
+            pattern: Pattern(pat as u16),
+            cin,
+            out_channels: ocs,
+        });
+    }
+    Ok(out)
+}
+
+/// §IV-C: reconstruct every block's placement from the decoded index
+/// stream alone (pattern size + kernel count) by replaying the Fig. 5
+/// placement walk.
+pub fn reconstruct_placements(
+    blocks: &[DecodedBlock],
+    geom: &CellGeometry,
+) -> Vec<Placement> {
+    let extents: Vec<(usize, usize)> = blocks
+        .iter()
+        .map(|b| (b.pattern.size(), geom.weight_cols(b.out_channels.len())))
+        .collect();
+    place_blocks(&extents, geom).placements
+}
+
+/// §V-D index overhead of a mapped layer, in bits: per-kernel indexes
+/// plus per-block shape descriptors.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct IndexOverhead {
+    pub kernel_index_bits: usize,
+    pub shape_bits: usize,
+}
+
+impl IndexOverhead {
+    pub fn total_bits(&self) -> usize {
+        self.kernel_index_bits + self.shape_bits
+    }
+
+    pub fn total_kib(&self) -> f64 {
+        self.total_bits() as f64 / 8.0 / 1024.0
+    }
+}
+
+/// Compute §V-D overhead for one mapped layer. The paper counts 9 bits
+/// per stored kernel; we use `index_bits(cout)` (≤ 9) which matches at
+/// 512 channels.
+pub fn overhead(layer: &MappedLayer) -> IndexOverhead {
+    let kbits = index_bits(layer.cout);
+    let stored: usize = layer.blocks.iter().map(|b| b.kernels()).sum();
+    IndexOverhead {
+        kernel_index_bits: stored * kbits,
+        shape_bits: layer.blocks.len() * (9 + 16 + 16),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::HardwareConfig;
+    use crate::mapping::pattern::PatternMapping;
+    use crate::mapping::MappingScheme;
+    use crate::nn::ConvLayer;
+    use crate::pruning::synthetic::generate_layer;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn geom() -> CellGeometry {
+        CellGeometry::from_hw(&HardwareConfig::default())
+    }
+
+    #[test]
+    fn bit_roundtrip() {
+        let mut w = BitWriter::new();
+        w.push(0b101, 3);
+        w.push(0xFFFF, 16);
+        w.push(0, 1);
+        w.push(511, 9);
+        assert_eq!(w.bit_len(), 29);
+        let bytes = w.into_bytes();
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.read(3), Some(0b101));
+        assert_eq!(r.read(16), Some(0xFFFF));
+        assert_eq!(r.read(1), Some(0));
+        assert_eq!(r.read(9), Some(511));
+        // padding bits readable as zero, then EOF
+        assert_eq!(r.read(3), Some(0));
+        assert_eq!(r.read(8), None);
+    }
+
+    #[test]
+    fn index_bits_paper_claim() {
+        assert_eq!(index_bits(512), 9); // "no more than 9 bits"
+        assert_eq!(index_bits(256), 8);
+        assert_eq!(index_bits(64), 6);
+        assert_eq!(index_bits(2), 1);
+        assert_eq!(index_bits(1), 1);
+        assert_eq!(index_bits(513), 10);
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let mut rng = Rng::seed_from(4);
+        let w = generate_layer(64, 8, 6, 0.84, 0.35, &mut rng);
+        let l = ConvLayer { name: "t".into(), cout: 64, cin: 8, fmap: 8 };
+        let ml = PatternMapping.map_layer(0, &l, &w, &geom());
+        let buf = encode(&ml);
+        let blocks = decode(&buf).unwrap();
+        assert_eq!(blocks.len(), ml.blocks.len());
+        for (d, b) in blocks.iter().zip(ml.blocks.iter()) {
+            assert_eq!(d.pattern, b.pattern);
+            assert_eq!(d.cin, b.cin);
+            assert_eq!(d.out_channels, b.out_channels);
+        }
+    }
+
+    #[test]
+    fn placement_reconstruction_matches_mapper() {
+        // the paper's §IV-C claim: indexes alone recover the placement
+        let mut rng = Rng::seed_from(5);
+        let w = generate_layer(96, 12, 8, 0.86, 0.4, &mut rng);
+        let l = ConvLayer { name: "t".into(), cout: 96, cin: 12, fmap: 8 };
+        let ml = PatternMapping.map_layer(0, &l, &w, &geom());
+        let decoded = decode(&encode(&ml)).unwrap();
+        let placements = reconstruct_placements(&decoded, &geom());
+        assert_eq!(placements, ml.placements);
+    }
+
+    #[test]
+    fn overhead_counts() {
+        let mut rng = Rng::seed_from(6);
+        let w = generate_layer(512, 2, 5, 0.85, 0.4, &mut rng);
+        let l = ConvLayer { name: "t".into(), cout: 512, cin: 2, fmap: 8 };
+        let ml = PatternMapping.map_layer(0, &l, &w, &geom());
+        let stored: usize = ml.blocks.iter().map(|b| b.kernels()).sum();
+        let oh = overhead(&ml);
+        assert_eq!(oh.kernel_index_bits, stored * 9);
+        assert_eq!(oh.shape_bits, ml.blocks.len() * 41);
+        assert!(oh.total_kib() > 0.0);
+        // deleted all-zero kernels don't pay for indexes
+        assert!(stored < 1024);
+    }
+
+    #[test]
+    fn prop_index_roundtrip() {
+        prop::check("index roundtrip", 24, |rng: &mut Rng| {
+            let cout = rng.range(1, 80);
+            let cin = rng.range(1, 6);
+            let n_pat = rng.range(1, 9).min(cout * cin);
+            let w = generate_layer(cout, cin, n_pat, 0.75, 0.3, rng);
+            let l = ConvLayer { name: "t".into(), cout, cin, fmap: 4 };
+            let ml = PatternMapping.map_layer(0, &l, &w, &geom());
+            let decoded = decode(&encode(&ml)).unwrap();
+            let placements = reconstruct_placements(&decoded, &geom());
+            assert_eq!(placements, ml.placements, "placement reconstruction");
+        });
+    }
+}

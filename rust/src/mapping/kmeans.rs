@@ -1,0 +1,278 @@
+//! Baseline [15] (Lin et al., ASP-DAC'19): k-means column clustering +
+//! crossbar-grained pruning.
+//!
+//! Filter columns of the dense weight matrix are clustered by their
+//! zero-structure and reordered so that zero-heavy columns gather;
+//! crossbars whose entire region is zero are then pruned. The paper
+//! reports this saves only 6–22% of crossbars — the comparison series in
+//! Fig. 7's reproduction.
+
+use super::{MappedLayer, MappingScheme, PatternBlock, Placement};
+use crate::nn::{ConvLayer, Tensor};
+use crate::pruning::{kernel_slice, Pattern};
+use crate::util::rng::Rng;
+use crate::xbar::CellGeometry;
+
+/// k-means column-clustered crossbar-pruned mapping.
+#[derive(Debug, Clone)]
+pub struct KmeansMapping {
+    pub iterations: usize,
+    pub seed: u64,
+}
+
+impl Default for KmeansMapping {
+    fn default() -> Self {
+        KmeansMapping { iterations: 10, seed: 0xC10C }
+    }
+}
+
+impl KmeansMapping {
+    /// Cluster filter columns by zero-mask; returns the column order.
+    fn column_order(&self, layer: &ConvLayer, w: &Tensor, k: usize) -> Vec<usize> {
+        let cout = layer.cout;
+        let dim = layer.cin; // per-channel nonzero count as the feature
+        // Feature: for each filter, fraction of nonzeros per input channel
+        // (compact stand-in for the full 9*cin zero-mask; preserves the
+        // structure k-means needs at VGG scale).
+        let feats: Vec<Vec<f32>> = (0..cout)
+            .map(|oc| {
+                (0..dim)
+                    .map(|ic| {
+                        let ker = kernel_slice(w, oc, ic);
+                        ker.iter().filter(|v| **v != 0.0).count() as f32 / 9.0
+                    })
+                    .collect()
+            })
+            .collect();
+
+        let k = k.clamp(1, cout);
+        let mut rng = Rng::seed_from(self.seed);
+        // init: sample k distinct columns as centroids
+        let mut centroids: Vec<Vec<f32>> = rng
+            .sample_indices(cout, k)
+            .into_iter()
+            .map(|i| feats[i].clone())
+            .collect();
+        let mut assign = vec![0usize; cout];
+        for _ in 0..self.iterations {
+            // assign
+            for (i, f) in feats.iter().enumerate() {
+                let mut best = 0;
+                let mut best_d = f32::INFINITY;
+                for (c, cent) in centroids.iter().enumerate() {
+                    let d: f32 = f
+                        .iter()
+                        .zip(cent.iter())
+                        .map(|(a, b)| (a - b) * (a - b))
+                        .sum();
+                    if d < best_d {
+                        best_d = d;
+                        best = c;
+                    }
+                }
+                assign[i] = best;
+            }
+            // update
+            for (c, cent) in centroids.iter_mut().enumerate() {
+                let members: Vec<&Vec<f32>> = feats
+                    .iter()
+                    .zip(assign.iter())
+                    .filter(|(_, a)| **a == c)
+                    .map(|(f, _)| f)
+                    .collect();
+                if members.is_empty() {
+                    continue;
+                }
+                for (d, slot) in cent.iter_mut().enumerate() {
+                    *slot = members.iter().map(|m| m[d]).sum::<f32>()
+                        / members.len() as f32;
+                }
+            }
+        }
+        // order columns cluster by cluster, sparsest cluster first
+        let mut cluster_density: Vec<(usize, f32)> = (0..k)
+            .map(|c| {
+                let members: Vec<usize> = (0..cout).filter(|i| assign[*i] == c).collect();
+                let dens = members
+                    .iter()
+                    .map(|&i| feats[i].iter().sum::<f32>())
+                    .sum::<f32>()
+                    / members.len().max(1) as f32;
+                (c, dens)
+            })
+            .collect();
+        cluster_density.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        let mut order = Vec::with_capacity(cout);
+        for (c, _) in cluster_density {
+            for i in 0..cout {
+                if assign[i] == c {
+                    order.push(i);
+                }
+            }
+        }
+        order
+    }
+}
+
+impl MappingScheme for KmeansMapping {
+    fn name(&self) -> &'static str {
+        "kmeans"
+    }
+
+    fn map_layer(
+        &self,
+        layer_idx: usize,
+        layer: &ConvLayer,
+        weights: &Tensor,
+        geom: &CellGeometry,
+    ) -> MappedLayer {
+        let stripes_per_xbar = (geom.xbar_rows / 9).max(1);
+        let kernels_per_tile = geom.weights_per_row().max(1);
+        let col_tiles = layer.cout.div_ceil(kernels_per_tile);
+        let xbar_rows_needed = layer.cin.div_ceil(stripes_per_xbar);
+        let order = self.column_order(layer, weights, col_tiles);
+
+        // Decide which crossbars survive: a crossbar (xr, tile) is
+        // pruned iff all its weights are zero.
+        let mut live = vec![vec![false; col_tiles]; xbar_rows_needed];
+        for xr in 0..xbar_rows_needed {
+            let c0 = xr * stripes_per_xbar;
+            let c1 = (c0 + stripes_per_xbar).min(layer.cin);
+            for tile in 0..col_tiles {
+                let k0 = tile * kernels_per_tile;
+                let k1 = (k0 + kernels_per_tile).min(layer.cout);
+                'scan: for cin in c0..c1 {
+                    for &oc in &order[k0..k1] {
+                        if kernel_slice(weights, oc, cin)
+                            .iter()
+                            .any(|v| *v != 0.0)
+                        {
+                            live[xr][tile] = true;
+                            break 'scan;
+                        }
+                    }
+                }
+            }
+        }
+        // Renumber surviving crossbars densely.
+        let mut xbar_id = vec![vec![usize::MAX; col_tiles]; xbar_rows_needed];
+        let mut n_crossbars = 0;
+        for xr in 0..xbar_rows_needed {
+            for tile in 0..col_tiles {
+                if live[xr][tile] {
+                    xbar_id[xr][tile] = n_crossbars;
+                    n_crossbars += 1;
+                }
+            }
+        }
+
+        let mut blocks = Vec::new();
+        let mut placements = Vec::new();
+        let mut used_cells = 0usize;
+        for cin in 0..layer.cin {
+            let xr = cin / stripes_per_xbar;
+            let stripe = cin % stripes_per_xbar;
+            for tile in 0..col_tiles {
+                if !live[xr][tile] {
+                    continue;
+                }
+                let k0 = tile * kernels_per_tile;
+                let k1 = (k0 + kernels_per_tile).min(layer.cout);
+                let outs: Vec<u32> = order[k0..k1].iter().map(|&o| o as u32).collect();
+                let mut wv = Vec::with_capacity(9 * outs.len());
+                for pos in 0..9 {
+                    for &oc in &outs {
+                        wv.push(kernel_slice(weights, oc as usize, cin)[pos]);
+                    }
+                }
+                let cols = geom.weight_cols(outs.len());
+                used_cells += 9 * cols;
+                blocks.push(PatternBlock {
+                    cin,
+                    pattern: Pattern::FULL,
+                    out_channels: outs,
+                    weights: wv,
+                });
+                placements.push(Placement {
+                    xbar: xbar_id[xr][tile],
+                    row: stripe * 9,
+                    col: 0,
+                    rows: 9,
+                    cols,
+                });
+            }
+        }
+
+        MappedLayer {
+            layer_idx,
+            cout: layer.cout,
+            cin: layer.cin,
+            geom: *geom,
+            blocks,
+            placements,
+            n_crossbars,
+            used_cells,
+            zero_kernels: 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::HardwareConfig;
+    use crate::mapping::naive::NaiveMapping;
+    use crate::mapping::reconstruct_dense;
+    use crate::pruning::synthetic::generate_layer;
+    use crate::util::rng::Rng;
+
+    fn geom() -> CellGeometry {
+        CellGeometry::from_hw(&HardwareConfig::default())
+    }
+
+    fn layer(cout: usize, cin: usize) -> ConvLayer {
+        ConvLayer { name: "t".into(), cout, cin, fmap: 8 }
+    }
+
+    #[test]
+    fn column_order_is_permutation() {
+        let mut rng = Rng::seed_from(1);
+        let w = generate_layer(64, 8, 6, 0.85, 0.4, &mut rng);
+        let km = KmeansMapping::default();
+        let order = km.column_order(&layer(64, 8), &w, 4);
+        let mut s = order.clone();
+        s.sort_unstable();
+        assert_eq!(s, (0..64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn reconstruction_lossless() {
+        let mut rng = Rng::seed_from(2);
+        let w = generate_layer(48, 6, 6, 0.8, 0.3, &mut rng);
+        let ml = KmeansMapping::default().map_layer(0, &layer(48, 6), &w, &geom());
+        ml.validate().unwrap();
+        assert_eq!(reconstruct_dense(&ml).data, w.data);
+    }
+
+    #[test]
+    fn never_more_crossbars_than_naive() {
+        let mut rng = Rng::seed_from(3);
+        let w = generate_layer(256, 128, 8, 0.86, 0.41, &mut rng);
+        let g = geom();
+        let l = layer(256, 128);
+        let naive = NaiveMapping.map_layer(0, &l, &w, &g);
+        let km = KmeansMapping::default().map_layer(0, &l, &w, &g);
+        km.validate().unwrap();
+        assert!(km.n_crossbars <= naive.n_crossbars);
+    }
+
+    #[test]
+    fn dense_weights_prune_nothing() {
+        let w = Tensor::from_vec(&[16, 8, 3, 3], vec![1.0; 16 * 8 * 9]);
+        let g = geom();
+        let l = layer(16, 8);
+        let naive = NaiveMapping.map_layer(0, &l, &w, &g);
+        let km = KmeansMapping::default().map_layer(0, &l, &w, &g);
+        assert_eq!(km.n_crossbars, naive.n_crossbars);
+    }
+}

@@ -1,0 +1,308 @@
+//! Weight mapping schemes (the paper's core contribution and baselines).
+//!
+//! A mapped layer is a list of [`PatternBlock`]s with [`Placement`]s on
+//! crossbar arrays. Every scheme (naive Fig. 1 baseline, the paper's
+//! kernel-reordering pattern scheme §III, the k-means baseline [15] and
+//! the SRE-style OU row-compression baseline [12]) lowers to this same
+//! representation, so OU enumeration, energy accounting and the
+//! functional simulator are shared.
+
+pub mod index;
+pub mod kmeans;
+pub mod naive;
+pub mod ou;
+pub mod ou_sparse;
+pub mod pattern;
+pub mod placement;
+
+use crate::nn::{ConvLayer, Tensor};
+use crate::pruning::{NetworkWeights, Pattern};
+use crate::util::threadpool;
+use crate::xbar::CellGeometry;
+
+/// One pattern block: the kernels of input channel `cin` sharing
+/// `pattern`, compressed to `pattern.size()` rows × `out_channels.len()`
+/// weight columns (paper Fig. 4).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PatternBlock {
+    pub cin: usize,
+    pub pattern: Pattern,
+    /// Output channel of each kernel column, in stored order.
+    pub out_channels: Vec<u32>,
+    /// Compressed weights, row-major `[pattern.size()][out_channels.len()]`.
+    pub weights: Vec<f32>,
+}
+
+impl PatternBlock {
+    pub fn rows(&self) -> usize {
+        self.pattern.size()
+    }
+
+    pub fn kernels(&self) -> usize {
+        self.out_channels.len()
+    }
+
+    #[inline]
+    pub fn weight(&self, row: usize, kernel: usize) -> f32 {
+        self.weights[row * self.kernels() + kernel]
+    }
+
+    /// im2col row indices this block's wordlines consume
+    /// (`cin * 9 + position` for each pattern position, ascending).
+    pub fn input_rows(&self) -> Vec<usize> {
+        self.pattern
+            .positions()
+            .into_iter()
+            .map(|p| self.cin * 9 + p)
+            .collect()
+    }
+}
+
+/// Where a block landed: crossbar id + top-left cell + extent in cells.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Placement {
+    pub xbar: usize,
+    pub row: usize,
+    pub col: usize,
+    /// Rows used (== block pattern size).
+    pub rows: usize,
+    /// Physical columns used (== kernels × cells_per_weight).
+    pub cols: usize,
+}
+
+/// A conv layer mapped onto crossbars.
+#[derive(Debug, Clone)]
+pub struct MappedLayer {
+    pub layer_idx: usize,
+    pub cout: usize,
+    pub cin: usize,
+    pub geom: CellGeometry,
+    pub blocks: Vec<PatternBlock>,
+    /// Parallel to `blocks`.
+    pub placements: Vec<Placement>,
+    pub n_crossbars: usize,
+    /// Cells actually storing weights.
+    pub used_cells: usize,
+    /// Kernels deleted because their pattern was all-zero.
+    pub zero_kernels: usize,
+}
+
+impl MappedLayer {
+    pub fn total_cells(&self) -> usize {
+        self.n_crossbars * self.geom.xbar_rows * self.geom.xbar_cols
+    }
+
+    pub fn utilization(&self) -> f64 {
+        if self.n_crossbars == 0 {
+            return 0.0;
+        }
+        self.used_cells as f64 / self.total_cells() as f64
+    }
+
+    /// OU operations per input vector (one output position), without
+    /// input skipping.
+    pub fn ou_ops_per_position(&self) -> usize {
+        self.blocks
+            .iter()
+            .map(|b| {
+                self.geom
+                    .ou_ops_for_block(b.rows(), self.geom.weight_cols(b.kernels()))
+            })
+            .sum()
+    }
+
+    /// Sanity invariants: placements in bounds, no overlaps, one
+    /// placement per block with matching extents.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.blocks.len() != self.placements.len() {
+            return Err("blocks/placements length mismatch".into());
+        }
+        for (b, p) in self.blocks.iter().zip(self.placements.iter()) {
+            if p.rows != b.rows() || p.cols != self.geom.weight_cols(b.kernels()) {
+                return Err(format!("extent mismatch for block {b:?}"));
+            }
+            if p.row + p.rows > self.geom.xbar_rows
+                || p.col + p.cols > self.geom.xbar_cols
+            {
+                return Err(format!("placement out of bounds: {p:?}"));
+            }
+            if p.xbar >= self.n_crossbars {
+                return Err(format!("crossbar id out of range: {p:?}"));
+            }
+        }
+        // overlap check via per-crossbar occupancy grids
+        let cells = self.geom.xbar_rows * self.geom.xbar_cols;
+        let mut grids = vec![vec![false; cells]; self.n_crossbars];
+        for p in &self.placements {
+            for r in p.row..p.row + p.rows {
+                for c in p.col..p.col + p.cols {
+                    let idx = r * self.geom.xbar_cols + c;
+                    if grids[p.xbar][idx] {
+                        return Err(format!("overlap at xbar {} ({r},{c})", p.xbar));
+                    }
+                    grids[p.xbar][idx] = true;
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// A fully mapped network plus scheme-level aggregates.
+#[derive(Debug, Clone)]
+pub struct MappedNetwork {
+    pub scheme: String,
+    pub network: String,
+    pub layers: Vec<MappedLayer>,
+}
+
+impl MappedNetwork {
+    pub fn total_crossbars(&self) -> usize {
+        self.layers.iter().map(|l| l.n_crossbars).sum()
+    }
+
+    pub fn total_used_cells(&self) -> usize {
+        self.layers.iter().map(|l| l.used_cells).sum()
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        for (i, l) in self.layers.iter().enumerate() {
+            l.validate().map_err(|e| format!("layer {i}: {e}"))?;
+        }
+        Ok(())
+    }
+}
+
+/// A weight-mapping scheme: maps one conv layer's weights to crossbars.
+pub trait MappingScheme: Sync {
+    fn name(&self) -> &'static str;
+
+    fn map_layer(
+        &self,
+        layer_idx: usize,
+        layer: &ConvLayer,
+        weights: &Tensor,
+        geom: &CellGeometry,
+    ) -> MappedLayer;
+
+    /// Map a whole network (layers in parallel).
+    fn map_network(
+        &self,
+        nw: &NetworkWeights,
+        geom: &CellGeometry,
+        threads: usize,
+    ) -> MappedNetwork {
+        let items: Vec<(usize, &ConvLayer, &Tensor)> = nw
+            .spec
+            .layers
+            .iter()
+            .zip(nw.layers.iter())
+            .enumerate()
+            .map(|(i, (l, w))| (i, l, w))
+            .collect();
+        let layers = threadpool::parallel_map(&items, threads, |(i, l, w)| {
+            self.map_layer(*i, l, w, geom)
+        });
+        MappedNetwork {
+            scheme: self.name().to_string(),
+            network: nw.spec.name.clone(),
+            layers,
+        }
+    }
+}
+
+/// Reconstruct the dense `[cout, cin, 3, 3]` weights from a mapped
+/// layer (inverse of the compression — used by equivalence tests).
+pub fn reconstruct_dense(layer: &MappedLayer) -> Tensor {
+    let mut w = Tensor::zeros(&[layer.cout, layer.cin, 3, 3]);
+    for b in &layer.blocks {
+        let positions = b.pattern.positions();
+        for (ki, &oc) in b.out_channels.iter().enumerate() {
+            for (ri, &pos) in positions.iter().enumerate() {
+                let v = b.weight(ri, ki);
+                let idx = w.idx4(oc as usize, b.cin, pos / 3, pos % 3);
+                // Schemes may store explicit zeros (naive); sum is safe
+                // because each (oc, cin, pos) cell appears at most once.
+                w.data[idx] += v;
+            }
+        }
+    }
+    w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::HardwareConfig;
+
+    fn geom() -> CellGeometry {
+        CellGeometry::from_hw(&HardwareConfig::default())
+    }
+
+    #[test]
+    fn block_accessors() {
+        let b = PatternBlock {
+            cin: 2,
+            pattern: Pattern(0b000010011), // positions 0, 1, 4
+            out_channels: vec![3, 7],
+            weights: vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0],
+        };
+        assert_eq!(b.rows(), 3);
+        assert_eq!(b.kernels(), 2);
+        assert_eq!(b.weight(0, 1), 2.0);
+        assert_eq!(b.weight(2, 0), 5.0);
+        assert_eq!(b.input_rows(), vec![18, 19, 22]);
+    }
+
+    #[test]
+    fn validate_catches_overlap() {
+        let g = geom();
+        let b = PatternBlock {
+            cin: 0,
+            pattern: Pattern(0b11),
+            out_channels: vec![0],
+            weights: vec![1.0, 2.0],
+        };
+        let p = Placement { xbar: 0, row: 0, col: 0, rows: 2, cols: 4 };
+        let ml = MappedLayer {
+            layer_idx: 0,
+            cout: 1,
+            cin: 1,
+            geom: g,
+            blocks: vec![b.clone(), b],
+            placements: vec![p, p], // identical -> overlap
+            n_crossbars: 1,
+            used_cells: 16,
+            zero_kernels: 0,
+        };
+        assert!(ml.validate().is_err());
+    }
+
+    #[test]
+    fn reconstruct_roundtrip_simple() {
+        let g = geom();
+        let b = PatternBlock {
+            cin: 1,
+            pattern: Pattern(0b100000001), // pos 0 and 8
+            out_channels: vec![2, 0],
+            weights: vec![1.5, 2.5, -1.0, -2.0],
+        };
+        let ml = MappedLayer {
+            layer_idx: 0,
+            cout: 3,
+            cin: 2,
+            geom: g,
+            blocks: vec![b],
+            placements: vec![Placement { xbar: 0, row: 0, col: 0, rows: 2, cols: 8 }],
+            n_crossbars: 1,
+            used_cells: 16,
+            zero_kernels: 0,
+        };
+        let w = reconstruct_dense(&ml);
+        assert_eq!(w.at4(2, 1, 0, 0), 1.5);
+        assert_eq!(w.at4(0, 1, 0, 0), 2.5);
+        assert_eq!(w.at4(2, 1, 2, 2), -1.0);
+        assert_eq!(w.at4(0, 1, 2, 2), -2.0);
+        assert_eq!(w.at4(1, 0, 1, 1), 0.0);
+    }
+}

@@ -1,0 +1,159 @@
+//! Baseline: the naive weight mapping of Fig. 1.
+//!
+//! The layer's dense weight matrix (rows = `cin * 9` unrolled kernel
+//! inputs, columns = `cout` filters) is tiled directly onto crossbars.
+//! Zero weights still occupy cells ("If a weight is zero, it still needs
+//! to occupy an RRAM cell"). Channel stripes (9 rows) are kept whole
+//! within a crossbar so OUs stay aligned with kernel patches — the same
+//! alignment [13]'s 9-wordline OU implies.
+//!
+//! Represented with the shared [`PatternBlock`] model: one FULL-pattern
+//! block per (input channel, column tile), placed on a regular grid.
+
+use super::{MappedLayer, MappingScheme, PatternBlock, Placement};
+use crate::nn::{ConvLayer, Tensor};
+use crate::pruning::{kernel_slice, Pattern};
+use crate::xbar::CellGeometry;
+
+/// The Fig. 1 naive dense mapping.
+#[derive(Debug, Clone, Default)]
+pub struct NaiveMapping;
+
+impl MappingScheme for NaiveMapping {
+    fn name(&self) -> &'static str {
+        "naive"
+    }
+
+    fn map_layer(
+        &self,
+        layer_idx: usize,
+        layer: &ConvLayer,
+        weights: &Tensor,
+        geom: &CellGeometry,
+    ) -> MappedLayer {
+        let stripes_per_xbar = (geom.xbar_rows / 9).max(1);
+        let kernels_per_tile = geom.weights_per_row().max(1);
+        let col_tiles = layer.cout.div_ceil(kernels_per_tile);
+        // Crossbar grid: rows of crossbars cover input-channel stripes,
+        // columns of crossbars cover filter tiles.
+        let xbar_rows_needed = layer.cin.div_ceil(stripes_per_xbar);
+
+        let mut blocks = Vec::with_capacity(layer.cin * col_tiles);
+        let mut placements = Vec::with_capacity(layer.cin * col_tiles);
+
+        for cin in 0..layer.cin {
+            let xbar_r = cin / stripes_per_xbar;
+            let stripe = cin % stripes_per_xbar;
+            for tile in 0..col_tiles {
+                let k0 = tile * kernels_per_tile;
+                let k1 = (k0 + kernels_per_tile).min(layer.cout);
+                let outs: Vec<u32> = (k0 as u32..k1 as u32).collect();
+                // Dense 9 x n_kernels block (zeros stored explicitly).
+                let mut w = Vec::with_capacity(9 * outs.len());
+                for pos in 0..9 {
+                    for &oc in &outs {
+                        w.push(kernel_slice(weights, oc as usize, cin)[pos]);
+                    }
+                }
+                let cols = geom.weight_cols(outs.len());
+                blocks.push(PatternBlock {
+                    cin,
+                    pattern: Pattern::FULL,
+                    out_channels: outs,
+                    weights: w,
+                });
+                placements.push(Placement {
+                    xbar: xbar_r * col_tiles + tile,
+                    row: stripe * 9,
+                    col: 0,
+                    rows: 9,
+                    cols,
+                });
+            }
+        }
+
+        MappedLayer {
+            layer_idx,
+            cout: layer.cout,
+            cin: layer.cin,
+            geom: *geom,
+            blocks,
+            placements,
+            n_crossbars: xbar_rows_needed * col_tiles,
+            used_cells: layer.cin * 9 * geom.weight_cols(layer.cout),
+            zero_kernels: 0, // naive never deletes anything
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::HardwareConfig;
+    use crate::mapping::reconstruct_dense;
+    use crate::pruning::synthetic::generate_layer;
+    use crate::util::rng::Rng;
+
+    fn geom() -> CellGeometry {
+        CellGeometry::from_hw(&HardwareConfig::default())
+    }
+
+    fn layer(cout: usize, cin: usize) -> ConvLayer {
+        ConvLayer { name: "t".into(), cout, cin, fmap: 8 }
+    }
+
+    #[test]
+    fn small_layer_single_crossbar() {
+        let mut rng = Rng::seed_from(1);
+        let w = generate_layer(16, 4, 4, 0.7, 0.2, &mut rng);
+        let ml = NaiveMapping.map_layer(0, &layer(16, 4), &w, &geom());
+        ml.validate().unwrap();
+        assert_eq!(ml.n_crossbars, 1);
+        assert_eq!(ml.blocks.len(), 4); // one stripe per channel
+        // used cells: 4 channels * 9 rows * 16 kernels * 4 cells
+        assert_eq!(ml.used_cells, 4 * 9 * 64);
+        // reconstruction is exact (zeros included)
+        assert_eq!(reconstruct_dense(&ml).data, w.data);
+    }
+
+    #[test]
+    fn vgg_conv1_crossbar_count() {
+        // conv1 of VGG16: 64x64 kernels. rows = 576 -> 2 crossbar rows
+        // (56 stripes each); cols = 64*4 = 256 cells -> 1 tile.
+        let mut rng = Rng::seed_from(2);
+        let w = generate_layer(64, 64, 4, 0.8, 0.3, &mut rng);
+        let ml = NaiveMapping.map_layer(0, &layer(64, 64), &w, &geom());
+        ml.validate().unwrap();
+        assert_eq!(ml.n_crossbars, 2);
+    }
+
+    #[test]
+    fn big_layer_crossbar_grid() {
+        // 512x512: stripes 512/56 = 10 xbar-rows; cols 512*4/512 = 4 tiles
+        let w = Tensor::zeros(&[512, 512, 3, 3]);
+        let ml = NaiveMapping.map_layer(0, &layer(512, 512), &w, &geom());
+        assert_eq!(ml.n_crossbars, 10 * 4);
+        // every block is a full 9-row stripe
+        assert!(ml.placements.iter().all(|p| p.rows == 9));
+        ml.validate().unwrap();
+    }
+
+    #[test]
+    fn zero_weights_still_occupy_cells() {
+        let w = Tensor::zeros(&[8, 2, 3, 3]);
+        let ml = NaiveMapping.map_layer(0, &layer(8, 2), &w, &geom());
+        assert_eq!(ml.zero_kernels, 0);
+        assert_eq!(ml.used_cells, 2 * 9 * 8 * 4);
+        assert!(ml.ou_ops_per_position() > 0);
+    }
+
+    #[test]
+    fn ou_ops_match_dense_formula() {
+        let w = Tensor::zeros(&[64, 16, 3, 3]);
+        let g = geom();
+        let ml = NaiveMapping.map_layer(0, &layer(64, 16), &w, &g);
+        // per position: cin stripes (1 row-group each) x ceil(cout*cpw/8)
+        let want = 16 * (64 * 4usize).div_ceil(8);
+        assert_eq!(ml.ou_ops_per_position(), want);
+    }
+}

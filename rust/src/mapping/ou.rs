@@ -1,0 +1,190 @@
+//! Operation Unit organization (paper §IV-C, Fig. 5c).
+//!
+//! Every OU activation must lie inside one pattern block: different
+//! patterns put different inputs on the same wordline, so they can never
+//! be activated together. This module statically enumerates the OU
+//! schedule of a mapped layer — the red boxes of Fig. 5c — which both
+//! the cycle/energy simulator and the functional simulator execute.
+
+use super::MappedLayer;
+use crate::xbar::CellGeometry;
+
+/// One scheduled OU activation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct OuTask {
+    /// Index of the owning pattern block within the layer.
+    pub block: usize,
+    /// Crossbar the OU fires on.
+    pub xbar: usize,
+    /// Row offset *within the block* (0, ou_rows, 2*ou_rows, ...).
+    pub row_off: usize,
+    /// Active rows (<= ou_rows; == block rows for single-group blocks).
+    pub rows: usize,
+    /// Column offset within the block, in cells.
+    pub col_off: usize,
+    /// Active columns in cells (<= ou_cols).
+    pub cols: usize,
+}
+
+/// Enumerate the OU schedule of a mapped layer, block-major (the order
+/// the control unit walks the index buffer).
+pub fn enumerate_ous(layer: &MappedLayer) -> Vec<OuTask> {
+    let geom = &layer.geom;
+    let mut out = Vec::new();
+    for (bi, (block, place)) in layer
+        .blocks
+        .iter()
+        .zip(layer.placements.iter())
+        .enumerate()
+    {
+        let h = block.rows();
+        let w_cells = geom.weight_cols(block.kernels());
+        debug_assert_eq!(place.rows, h);
+        debug_assert_eq!(place.cols, w_cells);
+        let mut row_off = 0;
+        while row_off < h {
+            let rows = (h - row_off).min(geom.ou_rows);
+            let mut col_off = 0;
+            while col_off < w_cells {
+                let cols = (w_cells - col_off).min(geom.ou_cols);
+                out.push(OuTask {
+                    block: bi,
+                    xbar: place.xbar,
+                    row_off,
+                    rows,
+                    col_off,
+                    cols,
+                });
+                col_off += cols;
+            }
+            row_off += rows;
+        }
+    }
+    out
+}
+
+/// Check the §IV-C constraint set on a schedule.
+pub fn validate_schedule(
+    layer: &MappedLayer,
+    tasks: &[OuTask],
+    geom: &CellGeometry,
+) -> Result<(), String> {
+    let mut covered = vec![0usize; layer.blocks.len()];
+    for t in tasks {
+        let block = layer
+            .blocks
+            .get(t.block)
+            .ok_or_else(|| format!("task {t:?}: bad block"))?;
+        if t.rows == 0 || t.cols == 0 {
+            return Err(format!("task {t:?}: empty OU"));
+        }
+        if t.rows > geom.ou_rows || t.cols > geom.ou_cols {
+            return Err(format!("task {t:?}: exceeds OU size"));
+        }
+        // strictly inside one pattern block
+        let h = block.rows();
+        let w = geom.weight_cols(block.kernels());
+        if t.row_off + t.rows > h || t.col_off + t.cols > w {
+            return Err(format!("task {t:?}: leaves its pattern block"));
+        }
+        covered[t.block] += t.rows * t.cols;
+    }
+    // full coverage, no double-coverage
+    for (bi, block) in layer.blocks.iter().enumerate() {
+        let want = block.rows() * geom.weight_cols(block.kernels());
+        if covered[bi] != want {
+            return Err(format!(
+                "block {bi}: covered {} of {want} cells",
+                covered[bi]
+            ));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::HardwareConfig;
+    use crate::mapping::pattern::PatternMapping;
+    use crate::mapping::MappingScheme;
+    use crate::nn::ConvLayer;
+    use crate::pruning::synthetic::generate_layer;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+    use crate::xbar::CellGeometry;
+
+    fn geom() -> CellGeometry {
+        CellGeometry::from_hw(&HardwareConfig::default())
+    }
+
+    #[test]
+    fn fig5c_ou_boxes() {
+        // A 3-row x 20-kernel block with cpw=1, OU 4x4 -> 1 row-group x
+        // 5 col-groups.
+        let g = CellGeometry {
+            cells_per_weight: 1,
+            ou_rows: 4,
+            ou_cols: 4,
+            ..geom()
+        };
+        let mut rng = Rng::seed_from(1);
+        let w = generate_layer(20, 1, 1, 1.0 - 3.0 / 9.0, 0.0, &mut rng);
+        let l = ConvLayer { name: "t".into(), cout: 20, cin: 1, fmap: 4 };
+        let ml = PatternMapping.map_layer(0, &l, &w, &g);
+        assert_eq!(ml.blocks.len(), 1);
+        assert_eq!(ml.blocks[0].rows(), 3);
+        let tasks = enumerate_ous(&ml);
+        assert_eq!(tasks.len(), 5);
+        assert!(tasks.iter().all(|t| t.rows == 3));
+        assert_eq!(tasks[4].cols, 4);
+        validate_schedule(&ml, &tasks, &g).unwrap();
+    }
+
+    #[test]
+    fn tall_block_multiple_row_groups() {
+        // OU 4 rows; a FULL pattern (9 rows) block needs 3 row groups.
+        let g = CellGeometry { ou_rows: 4, ..geom() };
+        let w = crate::nn::Tensor::from_vec(&[2, 1, 3, 3], vec![1.0; 18]);
+        let l = ConvLayer { name: "t".into(), cout: 2, cin: 1, fmap: 4 };
+        let ml = PatternMapping.map_layer(0, &l, &w, &g);
+        let tasks = enumerate_ous(&ml);
+        // 9 rows -> groups of 4,4,1; 8 cells wide -> 1 col group
+        assert_eq!(tasks.len(), 3);
+        assert_eq!(tasks[0].rows, 4);
+        assert_eq!(tasks[2].rows, 1);
+        validate_schedule(&ml, &tasks, &g).unwrap();
+    }
+
+    #[test]
+    fn count_matches_layer_helper() {
+        let mut rng = Rng::seed_from(5);
+        let w = generate_layer(48, 6, 6, 0.82, 0.35, &mut rng);
+        let l = ConvLayer { name: "t".into(), cout: 48, cin: 6, fmap: 8 };
+        let ml = PatternMapping.map_layer(0, &l, &w, &geom());
+        let tasks = enumerate_ous(&ml);
+        assert_eq!(tasks.len(), ml.ou_ops_per_position());
+        validate_schedule(&ml, &tasks, &geom()).unwrap();
+    }
+
+    /// Property: the schedule always tiles every block exactly, for
+    /// arbitrary OU sizes and layers.
+    #[test]
+    fn prop_schedule_exact_cover() {
+        prop::check("ou schedule exact cover", 32, |rng: &mut Rng| {
+            let g = CellGeometry {
+                ou_rows: rng.range(1, 12),
+                ou_cols: rng.range(1, 12),
+                ..geom()
+            };
+            let cout = rng.range(1, 40);
+            let cin = rng.range(1, 5);
+            let n_pat = rng.range(1, 8).min(cout * cin);
+            let w = generate_layer(cout, cin, n_pat, 0.7, 0.2, rng);
+            let l = ConvLayer { name: "t".into(), cout, cin, fmap: 4 };
+            let ml = PatternMapping.map_layer(0, &l, &w, &g);
+            let tasks = enumerate_ous(&ml);
+            validate_schedule(&ml, &tasks, &g).unwrap();
+        });
+    }
+}

@@ -1,0 +1,162 @@
+//! Baseline [12] (Yang et al., ISCA'19 "Sparse ReRAM Engine")-style
+//! OU-granular row compression, without pattern regularity.
+//!
+//! For each input-channel stripe and each OU-wide group of filters, only
+//! the kernel-position rows that carry at least one nonzero weight
+//! across the group are stored. No kernel reordering happens, so blocks
+//! inherit the *union* pattern of their filter group — which is why the
+//! paper's pattern-regular reordering packs tighter (ablation A3/A4).
+
+use std::collections::BTreeMap;
+
+use super::placement::place_blocks;
+use super::{MappedLayer, MappingScheme, PatternBlock};
+use crate::nn::{ConvLayer, Tensor};
+use crate::pruning::{kernel_slice, Pattern};
+use crate::xbar::CellGeometry;
+
+/// SRE-style OU row compression.
+#[derive(Debug, Clone, Default)]
+pub struct OuSparseMapping;
+
+impl MappingScheme for OuSparseMapping {
+    fn name(&self) -> &'static str {
+        "ou_sparse"
+    }
+
+    fn map_layer(
+        &self,
+        layer_idx: usize,
+        layer: &ConvLayer,
+        weights: &Tensor,
+        geom: &CellGeometry,
+    ) -> MappedLayer {
+        // Filters per OU column group.
+        let group_w = (geom.ou_cols / geom.cells_per_weight).max(1);
+        let mut blocks = Vec::new();
+        let mut zero_kernels = 0usize;
+
+        for cin in 0..layer.cin {
+            for k0 in (0..layer.cout).step_by(group_w) {
+                let k1 = (k0 + group_w).min(layer.cout);
+                // Union pattern over the group for this channel.
+                let mut union = 0u16;
+                for oc in k0..k1 {
+                    union |= Pattern::from_kernel(kernel_slice(weights, oc, cin)).0;
+                }
+                let pat = Pattern(union);
+                if pat.is_zero() {
+                    zero_kernels += k1 - k0;
+                    continue;
+                }
+                // Count kernels that are individually all-zero (they still
+                // occupy columns here — SRE compresses rows, not columns).
+                let positions = pat.positions();
+                let outs: Vec<u32> = (k0 as u32..k1 as u32).collect();
+                let mut wv = Vec::with_capacity(positions.len() * outs.len());
+                for &pos in &positions {
+                    for &oc in &outs {
+                        wv.push(kernel_slice(weights, oc as usize, cin)[pos]);
+                    }
+                }
+                blocks.push(PatternBlock {
+                    cin,
+                    pattern: pat,
+                    out_channels: outs,
+                    weights: wv,
+                });
+            }
+        }
+
+        // Pack blocks with the same Fig. 5 placer (row-major order; SRE
+        // packs groups contiguously).
+        let extents: Vec<(usize, usize)> = blocks
+            .iter()
+            .map(|b| (b.rows(), geom.weight_cols(b.kernels())))
+            .collect();
+        let placed = place_blocks(&extents, geom);
+        let used_cells = extents.iter().map(|(h, w)| h * w).sum();
+
+        MappedLayer {
+            layer_idx,
+            cout: layer.cout,
+            cin: layer.cin,
+            geom: *geom,
+            blocks,
+            placements: placed.placements,
+            n_crossbars: placed.n_crossbars,
+            used_cells,
+            zero_kernels,
+        }
+    }
+}
+
+/// Group-size statistics used by the ablation report.
+pub fn union_row_stats(layer: &MappedLayer) -> BTreeMap<usize, usize> {
+    let mut hist = BTreeMap::new();
+    for b in &layer.blocks {
+        *hist.entry(b.rows()).or_insert(0) += 1;
+    }
+    hist
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::HardwareConfig;
+    use crate::mapping::pattern::PatternMapping;
+    use crate::mapping::{naive::NaiveMapping, reconstruct_dense};
+    use crate::pruning::synthetic::generate_layer;
+    use crate::util::rng::Rng;
+
+    fn geom() -> CellGeometry {
+        CellGeometry::from_hw(&HardwareConfig::default())
+    }
+
+    fn layer(cout: usize, cin: usize) -> ConvLayer {
+        ConvLayer { name: "t".into(), cout, cin, fmap: 8 }
+    }
+
+    #[test]
+    fn reconstruction_lossless() {
+        let mut rng = Rng::seed_from(1);
+        let w = generate_layer(32, 4, 6, 0.8, 0.3, &mut rng);
+        let ml = OuSparseMapping.map_layer(0, &layer(32, 4), &w, &geom());
+        ml.validate().unwrap();
+        assert_eq!(reconstruct_dense(&ml).data, w.data);
+    }
+
+    #[test]
+    fn between_naive_and_pattern() {
+        // union-pattern compression sits between naive (no compression)
+        // and the paper's pattern reordering on pattern-pruned weights
+        let mut rng = Rng::seed_from(2);
+        let w = generate_layer(128, 64, 8, 0.86, 0.4, &mut rng);
+        let g = geom();
+        let l = layer(128, 64);
+        let naive = NaiveMapping.map_layer(0, &l, &w, &g).used_cells;
+        let sre = OuSparseMapping.map_layer(0, &l, &w, &g).used_cells;
+        let pat = PatternMapping.map_layer(0, &l, &w, &g).used_cells;
+        assert!(sre < naive, "sre {sre} vs naive {naive}");
+        assert!(pat < sre, "pattern {pat} vs sre {sre}");
+    }
+
+    #[test]
+    fn whole_zero_groups_deleted() {
+        let w = Tensor::zeros(&[8, 2, 3, 3]);
+        let ml = OuSparseMapping.map_layer(0, &layer(8, 2), &w, &geom());
+        assert!(ml.blocks.is_empty());
+        assert_eq!(ml.zero_kernels, 16);
+    }
+
+    #[test]
+    fn union_stats_histogram() {
+        let mut rng = Rng::seed_from(3);
+        let w = generate_layer(64, 8, 6, 0.85, 0.35, &mut rng);
+        let ml = OuSparseMapping.map_layer(0, &layer(64, 8), &w, &geom());
+        let hist = union_row_stats(&ml);
+        let total: usize = hist.values().sum();
+        assert_eq!(total, ml.blocks.len());
+        assert!(hist.keys().all(|k| (1..=9).contains(k)));
+    }
+}

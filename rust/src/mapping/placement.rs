@@ -1,0 +1,225 @@
+//! The paper's Fig. 5 block placement strategy.
+//!
+//! Blocks arrive ordered (channel-major, pattern size descending within
+//! a channel — see `pattern.rs`). The placer maintains a current
+//! *column group*: blocks stack downward, left-aligned to the group's
+//! left edge ("place it there and align it left"), as long as the rows
+//! remaining below the current block fit the next block and the block
+//! fits the crossbar's columns; the group's width is the maximum block
+//! width seen. When the rows run out (Fig. 5b) the group is closed —
+//! cells right of narrower blocks and rows left below are wasted, the
+//! grey cells — and a new group opens to the right of the old one's
+//! full width, or on a fresh crossbar when the columns run out.
+
+use super::Placement;
+use crate::xbar::CellGeometry;
+
+/// Outcome of placing a sequence of `(rows, cols_cells)` block extents.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlacementResult {
+    pub placements: Vec<Placement>,
+    pub n_crossbars: usize,
+    /// Cells wasted inside closed column groups (Fig. 5's grey cells):
+    /// side waste from narrower stacked blocks + bottom waste below the
+    /// last block of each group.
+    pub internal_waste_cells: usize,
+}
+
+/// Place blocks with the Fig. 5 strategy. `extents` are `(rows, cols)`
+/// in cells; every extent must fit a single crossbar.
+pub fn place_blocks(extents: &[(usize, usize)], geom: &CellGeometry) -> PlacementResult {
+    let (xr, xc) = (geom.xbar_rows, geom.xbar_cols);
+    let mut placements = Vec::with_capacity(extents.len());
+    let mut waste = 0usize;
+
+    // Current column group state.
+    let mut xbar = 0usize;
+    let mut col = 0usize; // left edge of current group
+    let mut width = 0usize; // max block width in the group (0 = closed)
+    let mut row = 0usize; // next free row within the group
+    let mut group_used = 0usize; // cells used by the group's blocks
+    let mut any = false;
+
+    for &(h, w) in extents {
+        assert!(h <= xr && w <= xc, "block {h}x{w} exceeds crossbar {xr}x{xc}");
+        assert!(h > 0 && w > 0, "degenerate block {h}x{w}");
+        any = true;
+        if width > 0 && row + h <= xr && col + w <= xc {
+            // Stack below the previous block, left-aligned (Fig. 5a).
+            placements.push(Placement { xbar, row, col, rows: h, cols: w });
+            row += h;
+            width = width.max(w);
+            group_used += h * w;
+        } else {
+            // Close the current group (Fig. 5b grey cells), open a new
+            // one to the right — or on a fresh crossbar.
+            waste += (width * xr).saturating_sub(group_used);
+            let mut new_col = col + width;
+            if new_col + w > xc {
+                xbar += 1;
+                new_col = 0;
+            }
+            col = new_col;
+            width = w;
+            row = h;
+            group_used = h * w;
+            placements.push(Placement { xbar, row: 0, col, rows: h, cols: w });
+        }
+    }
+    if any {
+        waste += (width * xr).saturating_sub(group_used); // final group
+    }
+
+    PlacementResult {
+        placements,
+        n_crossbars: if any { xbar + 1 } else { 0 },
+        internal_waste_cells: waste,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn geom(rows: usize, cols: usize) -> CellGeometry {
+        CellGeometry {
+            xbar_rows: rows,
+            xbar_cols: cols,
+            cells_per_weight: 1,
+            ou_rows: 9,
+            ou_cols: 8,
+        }
+    }
+
+    #[test]
+    fn paper_fig5_sequence() {
+        // Fig. 5: blocks sorted by size desc on a small crossbar.
+        // Crossbar 8 rows: blocks (5,4), (3,4), (2,3), (1,2), (1,2).
+        let g = geom(8, 16);
+        let r = place_blocks(&[(5, 4), (3, 4), (2, 3), (1, 2), (1, 2)], &g);
+        // (5,4) opens group at col 0; (3,4) stacks below (rows 5..8 full);
+        // (2,3) doesn't fit (0 rows left) -> new group at col 4;
+        // (1,2) stacks below it; (1,2) again below.
+        assert_eq!(
+            r.placements,
+            vec![
+                Placement { xbar: 0, row: 0, col: 0, rows: 5, cols: 4 },
+                Placement { xbar: 0, row: 5, col: 0, rows: 3, cols: 4 },
+                Placement { xbar: 0, row: 0, col: 4, rows: 2, cols: 3 },
+                Placement { xbar: 0, row: 2, col: 4, rows: 1, cols: 2 },
+                Placement { xbar: 0, row: 3, col: 4, rows: 1, cols: 2 },
+            ]
+        );
+        assert_eq!(r.n_crossbars, 1);
+        // waste: group 2 side cells: (3-2)*1 * 2 blocks = 2; bottom:
+        // (8-4)*3 = 12 -> 14
+        assert_eq!(r.internal_waste_cells, 14);
+    }
+
+    #[test]
+    fn fig5b_insufficient_rows_opens_new_columns() {
+        // One row left behind the current block; next block needs 2 ->
+        // new columns, the leftover row is wasted (paper Fig. 5b).
+        let g = geom(4, 16);
+        let r = place_blocks(&[(3, 4), (2, 4)], &g);
+        assert_eq!(r.placements[1], Placement { xbar: 0, row: 0, col: 4, rows: 2, cols: 4 });
+        // waste = 1 row * 4 cols (first group) + 2 rows * 4 (second)
+        assert_eq!(r.internal_waste_cells, 4 + 8);
+    }
+
+    #[test]
+    fn wider_block_stacks_and_expands_group() {
+        let g = geom(16, 16);
+        let r = place_blocks(&[(4, 2), (4, 3)], &g);
+        // "align it left": a wider block stacks below while the crossbar
+        // has the columns; the group width grows to 3.
+        assert_eq!(r.placements[1].col, 0);
+        assert_eq!(r.placements[1].row, 4);
+        // waste = group width 3 * 16 rows - (8 + 12) used
+        assert_eq!(r.internal_waste_cells, 48 - 20);
+    }
+
+    #[test]
+    fn wider_block_opens_group_when_columns_exhausted() {
+        let g = geom(16, 8);
+        // first group at col 0 width 6; block (4,6) stacks; next (4,3)
+        // still stacks (col 0 + 3 <= 8); then fill rows so a (10, 6)
+        // cannot stack -> new group would be at col 6, 6+6 > 8 -> xbar 1
+        let r = place_blocks(&[(8, 6), (4, 6), (4, 3), (10, 6)], &g);
+        assert_eq!(r.placements[3].xbar, 1);
+        assert_eq!(r.placements[3].col, 0);
+    }
+
+    #[test]
+    fn spills_to_next_crossbar() {
+        let g = geom(8, 8);
+        let r = place_blocks(&[(8, 6), (8, 6)], &g);
+        assert_eq!(r.placements[0].xbar, 0);
+        assert_eq!(r.placements[1].xbar, 1);
+        assert_eq!(r.n_crossbars, 2);
+    }
+
+    #[test]
+    fn empty_input() {
+        let g = geom(8, 8);
+        let r = place_blocks(&[], &g);
+        assert_eq!(r.n_crossbars, 0);
+        assert!(r.placements.is_empty());
+        assert_eq!(r.internal_waste_cells, 0);
+    }
+
+    #[test]
+    fn exact_fill_no_waste() {
+        let g = geom(8, 8);
+        let r = place_blocks(&[(4, 8), (4, 8)], &g);
+        assert_eq!(r.n_crossbars, 1);
+        assert_eq!(r.internal_waste_cells, 0);
+    }
+
+    /// Property: placements never overlap, never leave the crossbar, and
+    /// used + internal waste <= total area of open groups.
+    #[test]
+    fn prop_no_overlap_in_bounds() {
+        prop::check("placement no overlap", 64, |rng: &mut Rng| {
+            let g = geom(32, 32);
+            let n = rng.range(1, 40);
+            let extents: Vec<(usize, usize)> = (0..n)
+                .map(|_| (rng.range(1, 10), rng.range(1, 12)))
+                .collect();
+            let r = place_blocks(&extents, &g);
+            // occupancy check
+            let mut grids =
+                vec![vec![false; g.xbar_rows * g.xbar_cols]; r.n_crossbars];
+            for p in &r.placements {
+                assert!(p.row + p.rows <= g.xbar_rows);
+                assert!(p.col + p.cols <= g.xbar_cols);
+                for rr in p.row..p.row + p.rows {
+                    for cc in p.col..p.col + p.cols {
+                        let i = rr * g.xbar_cols + cc;
+                        assert!(!grids[p.xbar][i], "overlap");
+                        grids[p.xbar][i] = true;
+                    }
+                }
+            }
+            // conservation: used + waste never exceeds allocated area
+            let used: usize = extents.iter().map(|(h, w)| h * w).sum();
+            let total = r.n_crossbars * g.xbar_rows * g.xbar_cols;
+            assert!(used + r.internal_waste_cells <= total);
+        });
+    }
+
+    /// Property: identical extents => deterministic placements.
+    #[test]
+    fn prop_deterministic() {
+        prop::check("placement deterministic", 16, |rng: &mut Rng| {
+            let g = geom(64, 64);
+            let n = rng.range(1, 30);
+            let extents: Vec<(usize, usize)> = (0..n)
+                .map(|_| (rng.range(1, 10), rng.range(1, 20)))
+                .collect();
+            assert_eq!(place_blocks(&extents, &g), place_blocks(&extents, &g));
+        });
+    }
+}

@@ -1,0 +1,369 @@
+//! Network & tensor substrate: a small dense tensor type, the RPAT1
+//! binary container shared with `python/compile/weights_io.py`, conv
+//! layer/network descriptions (SmallCNN + the paper's modified VGG16),
+//! and float reference convolution used as the functional oracle.
+
+pub mod tensor_io;
+
+use crate::util::json::Json;
+
+/// Dense row-major f32 tensor (up to 4-D is what this crate needs).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn ndim(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Flat index for a 4-D tensor.
+    #[inline]
+    pub fn idx4(&self, a: usize, b: usize, c: usize, d: usize) -> usize {
+        debug_assert_eq!(self.shape.len(), 4);
+        ((a * self.shape[1] + b) * self.shape[2] + c) * self.shape[3] + d
+    }
+
+    #[inline]
+    pub fn at4(&self, a: usize, b: usize, c: usize, d: usize) -> f32 {
+        self.data[self.idx4(a, b, c, d)]
+    }
+
+    #[inline]
+    pub fn set4(&mut self, a: usize, b: usize, c: usize, d: usize, v: f32) {
+        let i = self.idx4(a, b, c, d);
+        self.data[i] = v;
+    }
+
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, v| m.max(v.abs()))
+    }
+
+    pub fn count_zeros(&self) -> usize {
+        self.data.iter().filter(|v| **v == 0.0).count()
+    }
+}
+
+/// One 3×3 convolution layer description.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ConvLayer {
+    pub name: String,
+    pub cin: usize,
+    pub cout: usize,
+    /// Spatial size of the input feature map (H == W assumed).
+    pub fmap: usize,
+}
+
+impl ConvLayer {
+    pub fn kernels(&self) -> usize {
+        self.cin * self.cout
+    }
+
+    pub fn weights(&self) -> usize {
+        self.kernels() * 9
+    }
+
+    /// Output positions per image (3×3, pad 1, stride 1 -> same size).
+    pub fn positions(&self) -> usize {
+        self.fmap * self.fmap
+    }
+}
+
+/// A CNN as the mapper sees it: an ordered list of 3×3 conv layers.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NetworkSpec {
+    pub name: String,
+    pub layers: Vec<ConvLayer>,
+}
+
+impl NetworkSpec {
+    /// The paper's modified VGG16 (13 conv layers, Simonyan config D),
+    /// CIFAR-sized feature maps.
+    pub fn vgg16_cifar(name: &str) -> NetworkSpec {
+        Self::vgg16(name, &VGG16_FMAP_CIFAR)
+    }
+
+    /// Modified VGG16 with ImageNet-sized feature maps.
+    pub fn vgg16_imagenet(name: &str) -> NetworkSpec {
+        Self::vgg16(name, &VGG16_FMAP_IMAGENET)
+    }
+
+    fn vgg16(name: &str, fmaps: &[usize; 13]) -> NetworkSpec {
+        let chans: [(usize, usize); 13] = [
+            (64, 3),
+            (64, 64),
+            (128, 64),
+            (128, 128),
+            (256, 128),
+            (256, 256),
+            (256, 256),
+            (512, 256),
+            (512, 512),
+            (512, 512),
+            (512, 512),
+            (512, 512),
+            (512, 512),
+        ];
+        NetworkSpec {
+            name: name.to_string(),
+            layers: chans
+                .iter()
+                .zip(fmaps.iter())
+                .enumerate()
+                .map(|(i, (&(cout, cin), &fmap))| ConvLayer {
+                    name: format!("conv{i}"),
+                    cin,
+                    cout,
+                    fmap,
+                })
+                .collect(),
+        }
+    }
+
+    /// SmallCNN conv stack (mirror of `python/compile/model.py`).
+    pub fn smallcnn() -> NetworkSpec {
+        let spec: [(usize, usize, usize); 5] = [
+            (16, 3, 32),
+            (16, 16, 32),
+            (32, 16, 16),
+            (32, 32, 16),
+            (64, 32, 8),
+        ];
+        NetworkSpec {
+            name: "smallcnn".into(),
+            layers: spec
+                .iter()
+                .enumerate()
+                .map(|(i, &(cout, cin, fmap))| ConvLayer {
+                    name: format!("conv{i}"),
+                    cin,
+                    cout,
+                    fmap,
+                })
+                .collect(),
+        }
+    }
+
+    /// Parse the layer inventory from `smallcnn_meta.json`'s arch field.
+    pub fn from_meta(meta: &Json) -> Result<NetworkSpec, String> {
+        let arch = meta
+            .get("arch")
+            .as_arr()
+            .ok_or("meta missing arch")?;
+        let input = meta.get("input_shape");
+        let mut fmap = input.idx(1).as_usize().ok_or("bad input_shape")?;
+        let mut layers = Vec::new();
+        let mut i = 0;
+        for item in arch {
+            if item.as_str() == Some("M") {
+                fmap /= 2;
+                continue;
+            }
+            let cout = item.idx(0).as_usize().ok_or("bad arch entry")?;
+            let cin = item.idx(1).as_usize().ok_or("bad arch entry")?;
+            layers.push(ConvLayer { name: format!("conv{i}"), cin, cout, fmap });
+            i += 1;
+        }
+        Ok(NetworkSpec { name: "smallcnn".into(), layers })
+    }
+
+    pub fn total_kernels(&self) -> usize {
+        self.layers.iter().map(|l| l.kernels()).sum()
+    }
+
+    pub fn total_weights(&self) -> usize {
+        self.layers.iter().map(|l| l.weights()).sum()
+    }
+}
+
+/// Feature-map sizes entering each VGG16 conv layer (CIFAR, 32×32 input).
+pub const VGG16_FMAP_CIFAR: [usize; 13] =
+    [32, 32, 16, 16, 8, 8, 8, 4, 4, 4, 2, 2, 2];
+/// Feature-map sizes entering each VGG16 conv layer (ImageNet, 224×224).
+pub const VGG16_FMAP_IMAGENET: [usize; 13] =
+    [224, 224, 112, 112, 56, 56, 56, 28, 28, 28, 14, 14, 14];
+
+/// Reference dense 3×3 conv, pad 1, stride 1 (NCHW x, OIHW w).
+///
+/// The functional oracle for the mapped-crossbar simulator.
+pub fn conv2d_ref(x: &Tensor, w: &Tensor) -> Tensor {
+    assert_eq!(x.ndim(), 4);
+    assert_eq!(w.ndim(), 4);
+    let (b, cin, h, wd) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let (cout, cin2, kh, kw) = (w.shape[0], w.shape[1], w.shape[2], w.shape[3]);
+    assert_eq!(cin, cin2);
+    assert_eq!((kh, kw), (3, 3));
+    let mut out = Tensor::zeros(&[b, cout, h, wd]);
+    for bi in 0..b {
+        for oc in 0..cout {
+            for oy in 0..h {
+                for ox in 0..wd {
+                    let mut acc = 0.0f32;
+                    for ic in 0..cin {
+                        for ky in 0..3usize {
+                            for kx in 0..3usize {
+                                let iy = oy as isize + ky as isize - 1;
+                                let ix = ox as isize + kx as isize - 1;
+                                if iy < 0 || ix < 0 || iy >= h as isize || ix >= wd as isize {
+                                    continue;
+                                }
+                                acc += x.at4(bi, ic, iy as usize, ix as usize)
+                                    * w.at4(oc, ic, ky, kx);
+                            }
+                        }
+                    }
+                    out.set4(bi, oc, oy, ox, acc);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// im2col patch extraction for one image: returns `[positions][cin*9]`
+/// rows in the same (cin-major, then kernel-position) order as
+/// `python/compile/kernels/ref.im2col` and the paper's Fig. 1 unrolling.
+pub fn im2col(x: &Tensor, img: usize) -> Vec<Vec<f32>> {
+    let (cin, h, w) = (x.shape[1], x.shape[2], x.shape[3]);
+    let mut rows = Vec::with_capacity(h * w);
+    for oy in 0..h {
+        for ox in 0..w {
+            let mut row = vec![0.0f32; cin * 9];
+            for ic in 0..cin {
+                for ky in 0..3usize {
+                    for kx in 0..3usize {
+                        let iy = oy as isize + ky as isize - 1;
+                        let ix = ox as isize + kx as isize - 1;
+                        if iy < 0 || ix < 0 || iy >= h as isize || ix >= w as isize {
+                            continue;
+                        }
+                        row[ic * 9 + ky * 3 + kx] =
+                            x.at4(img, ic, iy as usize, ix as usize);
+                    }
+                }
+            }
+            rows.push(row);
+        }
+    }
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_indexing() {
+        let mut t = Tensor::zeros(&[2, 3, 4, 5]);
+        t.set4(1, 2, 3, 4, 7.5);
+        assert_eq!(t.at4(1, 2, 3, 4), 7.5);
+        assert_eq!(t.numel(), 120);
+        assert_eq!(t.count_zeros(), 119);
+        assert_eq!(t.max_abs(), 7.5);
+    }
+
+    #[test]
+    fn vgg16_inventory() {
+        let n = NetworkSpec::vgg16_cifar("vgg16-cifar10");
+        assert_eq!(n.layers.len(), 13);
+        assert_eq!(n.layers[0].cin, 3);
+        assert_eq!(n.layers[0].cout, 64);
+        assert_eq!(n.layers[12].cout, 512);
+        // total conv weights of VGG16 ≈ 14.7M
+        assert_eq!(n.total_weights(), 14_710_464);
+        assert_eq!(n.total_kernels(), 1_634_496);
+    }
+
+    #[test]
+    fn smallcnn_inventory() {
+        let n = NetworkSpec::smallcnn();
+        assert_eq!(n.layers.len(), 5);
+        assert_eq!(n.layers[0].cin, 3);
+        assert_eq!(n.layers[4].cout, 64);
+        assert_eq!(n.layers[2].fmap, 16);
+    }
+
+    #[test]
+    fn conv_identity_kernel() {
+        // center-tap identity kernel returns the input
+        let mut x = Tensor::zeros(&[1, 1, 4, 4]);
+        for i in 0..16 {
+            x.data[i] = i as f32;
+        }
+        let mut w = Tensor::zeros(&[1, 1, 3, 3]);
+        w.set4(0, 0, 1, 1, 1.0);
+        let y = conv2d_ref(&x, &w);
+        assert_eq!(y.data, x.data);
+    }
+
+    #[test]
+    fn conv_sum_kernel_interior() {
+        // all-ones 3x3 kernel on all-ones input: interior = 9, corner = 4
+        let x = Tensor::from_vec(&[1, 1, 4, 4], vec![1.0; 16]);
+        let w = Tensor::from_vec(&[1, 1, 3, 3], vec![1.0; 9]);
+        let y = conv2d_ref(&x, &w);
+        assert_eq!(y.at4(0, 0, 1, 1), 9.0);
+        assert_eq!(y.at4(0, 0, 0, 0), 4.0);
+        assert_eq!(y.at4(0, 0, 0, 1), 6.0);
+    }
+
+    #[test]
+    fn im2col_matches_conv() {
+        // conv via im2col rows == conv2d_ref
+        let mut rngv = 0.3f32;
+        let mut x = Tensor::zeros(&[1, 2, 5, 5]);
+        for v in x.data.iter_mut() {
+            rngv = (rngv * 1.7 + 0.31) % 1.0;
+            *v = rngv - 0.5;
+        }
+        let mut w = Tensor::zeros(&[3, 2, 3, 3]);
+        for v in w.data.iter_mut() {
+            rngv = (rngv * 1.9 + 0.17) % 1.0;
+            *v = rngv - 0.5;
+        }
+        let want = conv2d_ref(&x, &w);
+        let rows = im2col(&x, 0);
+        for (pos, row) in rows.iter().enumerate() {
+            for oc in 0..3 {
+                let mut acc = 0.0f32;
+                for ic in 0..2 {
+                    for k in 0..9 {
+                        acc += row[ic * 9 + k] * w.at4(oc, ic, k / 3, k % 3);
+                    }
+                }
+                let (oy, ox) = (pos / 5, pos % 5);
+                let diff = (acc - want.at4(0, oc, oy, ox)).abs();
+                assert!(diff < 1e-5, "pos {pos} oc {oc} diff {diff}");
+            }
+        }
+    }
+
+    #[test]
+    fn from_meta_parses_arch() {
+        let meta = Json::parse(
+            r#"{"arch": [[16,3],[16,16],"M",[32,16]],
+                "input_shape": [3,32,32]}"#,
+        )
+        .unwrap();
+        let n = NetworkSpec::from_meta(&meta).unwrap();
+        assert_eq!(n.layers.len(), 3);
+        assert_eq!(n.layers[2].fmap, 16);
+        assert_eq!(n.layers[2].cin, 16);
+    }
+}

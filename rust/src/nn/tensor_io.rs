@@ -1,0 +1,259 @@
+//! RPAT1 binary tensor container — byte-compatible with
+//! `python/compile/weights_io.py` (see that file for the layout).
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use super::Tensor;
+
+const MAGIC: &[u8; 6] = b"RPAT1\x00";
+const VERSION: u16 = 1;
+
+/// A loaded tensor of any supported dtype.
+#[derive(Debug, Clone, PartialEq)]
+pub enum AnyTensor {
+    F32(Tensor),
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+    U8 { shape: Vec<usize>, data: Vec<u8> },
+}
+
+impl AnyTensor {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            AnyTensor::F32(t) => &t.shape,
+            AnyTensor::I32 { shape, .. } => shape,
+            AnyTensor::U8 { shape, .. } => shape,
+        }
+    }
+
+    pub fn as_f32(&self) -> Option<&Tensor> {
+        match self {
+            AnyTensor::F32(t) => Some(t),
+            _ => None,
+        }
+    }
+
+    pub fn as_i32(&self) -> Option<&[i32]> {
+        match self {
+            AnyTensor::I32 { data, .. } => Some(data),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Debug)]
+pub enum IoError {
+    Io(std::io::Error),
+    Format(String),
+}
+
+impl std::fmt::Display for IoError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            IoError::Io(e) => write!(f, "io error: {e}"),
+            IoError::Format(m) => write!(f, "format error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for IoError {}
+
+impl From<std::io::Error> for IoError {
+    fn from(e: std::io::Error) -> Self {
+        IoError::Io(e)
+    }
+}
+
+fn fmt_err<T>(msg: &str) -> Result<T, IoError> {
+    Err(IoError::Format(msg.to_string()))
+}
+
+/// Load every tensor in an RPAT1 file.
+pub fn load_tensors(path: &Path) -> Result<BTreeMap<String, AnyTensor>, IoError> {
+    let mut blob = Vec::new();
+    std::fs::File::open(path)?.read_to_end(&mut blob)?;
+    parse_tensors(&blob)
+}
+
+/// Parse an RPAT1 blob.
+pub fn parse_tensors(blob: &[u8]) -> Result<BTreeMap<String, AnyTensor>, IoError> {
+    let mut c = Cursor { b: blob, i: 0 };
+    if c.take(6)? != MAGIC {
+        return fmt_err("bad magic");
+    }
+    let version = c.u16()?;
+    if version != VERSION {
+        return fmt_err(&format!("unsupported version {version}"));
+    }
+    let count = c.u32()? as usize;
+    let mut out = BTreeMap::new();
+    for _ in 0..count {
+        let name_len = c.u16()? as usize;
+        let name = String::from_utf8(c.take(name_len)?.to_vec())
+            .map_err(|_| IoError::Format("bad utf8 name".into()))?;
+        let dtype = c.u8()?;
+        let ndim = c.u8()? as usize;
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(c.u32()? as usize);
+        }
+        let nbytes = c.u64()? as usize;
+        let data = c.take(nbytes)?;
+        let n_elem: usize = shape.iter().product();
+        let t = match dtype {
+            0 => {
+                if nbytes != n_elem * 4 {
+                    return fmt_err("f32 size mismatch");
+                }
+                let v = data
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                    .collect();
+                AnyTensor::F32(Tensor { shape, data: v })
+            }
+            1 => {
+                if nbytes != n_elem * 4 {
+                    return fmt_err("i32 size mismatch");
+                }
+                let v = data
+                    .chunks_exact(4)
+                    .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+                    .collect();
+                AnyTensor::I32 { shape, data: v }
+            }
+            2 => {
+                if nbytes != n_elem {
+                    return fmt_err("u8 size mismatch");
+                }
+                AnyTensor::U8 { shape, data: data.to_vec() }
+            }
+            d => return fmt_err(&format!("unknown dtype {d}")),
+        };
+        out.insert(name, t);
+    }
+    Ok(out)
+}
+
+/// Save tensors to an RPAT1 file (f32 only — all this crate emits).
+pub fn save_tensors(
+    path: &Path,
+    tensors: &BTreeMap<String, Tensor>,
+) -> Result<(), IoError> {
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(MAGIC)?;
+    f.write_all(&VERSION.to_le_bytes())?;
+    f.write_all(&(tensors.len() as u32).to_le_bytes())?;
+    for (name, t) in tensors {
+        let nb = name.as_bytes();
+        f.write_all(&(nb.len() as u16).to_le_bytes())?;
+        f.write_all(nb)?;
+        f.write_all(&[0u8, t.shape.len() as u8])?;
+        for d in &t.shape {
+            f.write_all(&(*d as u32).to_le_bytes())?;
+        }
+        f.write_all(&((t.data.len() * 4) as u64).to_le_bytes())?;
+        for v in &t.data {
+            f.write_all(&v.to_le_bytes())?;
+        }
+    }
+    Ok(())
+}
+
+struct Cursor<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], IoError> {
+        if self.i + n > self.b.len() {
+            return fmt_err("truncated file");
+        }
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, IoError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16, IoError> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32, IoError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, IoError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_f32() {
+        let mut m = BTreeMap::new();
+        m.insert(
+            "w".to_string(),
+            Tensor::from_vec(&[2, 3], vec![1.0, -2.0, 3.5, 0.0, 5.0, -6.25]),
+        );
+        m.insert("b".to_string(), Tensor::from_vec(&[3], vec![0.1, 0.2, 0.3]));
+        let dir = std::env::temp_dir().join("rpat_test_roundtrip");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.bin");
+        save_tensors(&p, &m).unwrap();
+        let back = load_tensors(&p).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back["w"].as_f32().unwrap(), &m["w"]);
+        assert_eq!(back["b"].as_f32().unwrap(), &m["b"]);
+    }
+
+    #[test]
+    fn parse_python_style_blob() {
+        // Hand-built blob: one i32 tensor "y" of shape [2] = [7, -1]
+        let mut blob = Vec::new();
+        blob.extend_from_slice(MAGIC);
+        blob.extend_from_slice(&1u16.to_le_bytes());
+        blob.extend_from_slice(&1u32.to_le_bytes());
+        blob.extend_from_slice(&1u16.to_le_bytes());
+        blob.push(b'y');
+        blob.push(1); // dtype i32
+        blob.push(1); // ndim
+        blob.extend_from_slice(&2u32.to_le_bytes());
+        blob.extend_from_slice(&8u64.to_le_bytes());
+        blob.extend_from_slice(&7i32.to_le_bytes());
+        blob.extend_from_slice(&(-1i32).to_le_bytes());
+        let m = parse_tensors(&blob).unwrap();
+        assert_eq!(m["y"].as_i32().unwrap(), &[7, -1]);
+        assert_eq!(m["y"].shape(), &[2]);
+    }
+
+    #[test]
+    fn rejects_bad_magic_and_truncation() {
+        assert!(parse_tensors(b"NOPE").is_err());
+        let mut blob = Vec::new();
+        blob.extend_from_slice(MAGIC);
+        blob.extend_from_slice(&1u16.to_le_bytes());
+        blob.extend_from_slice(&5u32.to_le_bytes()); // claims 5 tensors
+        assert!(parse_tensors(&blob).is_err());
+    }
+
+    #[test]
+    fn scalar_tensor() {
+        let mut m = BTreeMap::new();
+        m.insert("s".to_string(), Tensor::from_vec(&[], vec![2.5]));
+        let dir = std::env::temp_dir().join("rpat_test_scalar");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("s.bin");
+        save_tensors(&p, &m).unwrap();
+        let back = load_tensors(&p).unwrap();
+        assert_eq!(back["s"].as_f32().unwrap().data, vec![2.5]);
+        assert!(back["s"].shape().is_empty());
+    }
+}

@@ -1,0 +1,335 @@
+//! Pattern analysis & pruning (paper §II-B, §III-A).
+//!
+//! A *pattern* is the boolean nonzero-mask of a 3×3 kernel, encoded as a
+//! 9-bit id (bit `i` = kernel position `(i / 3, i % 3)`), identical to
+//! `python/compile/pruning.py`. This module provides extraction and
+//! statistics over real weight tensors, a rust-side magnitude-prune +
+//! pattern-projection pipeline (used by tests and standalone tools), and
+//! the Table-II-calibrated synthetic VGG16 generator ([`synthetic`]).
+
+pub mod synthetic;
+
+use std::collections::BTreeMap;
+
+use crate::nn::{NetworkSpec, Tensor};
+
+/// A 3×3 kernel pattern: 9-bit nonzero mask.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct Pattern(pub u16);
+
+impl Pattern {
+    pub const ALL_ZERO: Pattern = Pattern(0);
+    pub const FULL: Pattern = Pattern(0x1FF);
+
+    /// Pattern of a 3×3 kernel slice (9 contiguous f32s).
+    pub fn from_kernel(k: &[f32]) -> Pattern {
+        debug_assert_eq!(k.len(), 9);
+        let mut id = 0u16;
+        for (i, v) in k.iter().enumerate() {
+            if *v != 0.0 {
+                id |= 1 << i;
+            }
+        }
+        Pattern(id)
+    }
+
+    /// Number of nonzero positions ("pattern size" in the paper).
+    pub fn size(&self) -> usize {
+        self.0.count_ones() as usize
+    }
+
+    pub fn is_zero(&self) -> bool {
+        self.0 == 0
+    }
+
+    /// Kernel positions (0..9) present in this pattern, ascending.
+    pub fn positions(&self) -> Vec<usize> {
+        (0..9).filter(|i| self.0 >> i & 1 == 1).collect()
+    }
+
+    pub fn contains(&self, pos: usize) -> bool {
+        pos < 9 && self.0 >> pos & 1 == 1
+    }
+
+    /// Is `other` a subset of `self`?
+    pub fn superset_of(&self, other: Pattern) -> bool {
+        other.0 & !self.0 == 0
+    }
+
+    pub fn hamming(&self, other: Pattern) -> usize {
+        (self.0 ^ other.0).count_ones() as usize
+    }
+}
+
+/// Per-kernel view of a conv layer: `kernel(cout, cin)` slices.
+pub fn kernel_slice<'a>(w: &'a Tensor, cout: usize, cin: usize) -> &'a [f32] {
+    let base = w.idx4(cout, cin, 0, 0);
+    &w.data[base..base + 9]
+}
+
+/// Pattern PDF of one layer's `[cout, cin, 3, 3]` weights.
+pub fn layer_pattern_counts(w: &Tensor) -> BTreeMap<Pattern, usize> {
+    let (cout, cin) = (w.shape[0], w.shape[1]);
+    let mut counts = BTreeMap::new();
+    for o in 0..cout {
+        for i in 0..cin {
+            let p = Pattern::from_kernel(kernel_slice(w, o, i));
+            *counts.entry(p).or_insert(0) += 1;
+        }
+    }
+    counts
+}
+
+/// Top-n candidate patterns by probability; the all-zero pattern, when
+/// present, is always kept (its kernels are deleted from the crossbar).
+pub fn select_candidates(
+    counts: &BTreeMap<Pattern, usize>,
+    n: usize,
+) -> Vec<Pattern> {
+    let mut ranked: Vec<(Pattern, usize)> =
+        counts.iter().map(|(p, c)| (*p, *c)).collect();
+    // by count desc, pattern id asc for determinism
+    ranked.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+    let mut cands: Vec<Pattern> =
+        ranked.iter().take(n).map(|(p, _)| *p).collect();
+    if counts.contains_key(&Pattern::ALL_ZERO)
+        && !cands.contains(&Pattern::ALL_ZERO)
+    {
+        cands.pop();
+        cands.push(Pattern::ALL_ZERO);
+    }
+    cands
+}
+
+/// Magnitude-prune a layer to at least `sparsity` zeros (global threshold
+/// over the layer, mirroring `pruning.magnitude_prune`).
+pub fn magnitude_prune(w: &Tensor, sparsity: f64) -> Tensor {
+    let mut mags: Vec<f32> = w.data.iter().map(|v| v.abs()).collect();
+    let k = (sparsity * mags.len() as f64).ceil() as usize;
+    let mut out = w.clone();
+    if k == 0 {
+        return out;
+    }
+    let k = k.min(mags.len());
+    mags.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let thresh = mags[k - 1];
+    for v in out.data.iter_mut() {
+        if v.abs() <= thresh {
+            *v = 0.0;
+        }
+    }
+    out
+}
+
+/// Project one kernel onto the candidate retaining the most L2 energy
+/// (ties → smaller pattern). Returns (projected kernel, assigned pattern).
+pub fn project_kernel(k: &[f32], candidates: &[Pattern]) -> ([f32; 9], Pattern) {
+    let mut best = Pattern::ALL_ZERO;
+    let mut best_key = (f64::NEG_INFINITY, usize::MAX);
+    for p in candidates {
+        let kept: f64 = p
+            .positions()
+            .iter()
+            .map(|&i| (k[i] as f64) * (k[i] as f64))
+            .sum();
+        let key = (kept, usize::MAX - p.size());
+        if key.0 > best_key.0
+            || (key.0 == best_key.0 && key.1 > best_key.1)
+        {
+            best_key = key;
+            best = *p;
+        }
+    }
+    let mut out = [0.0f32; 9];
+    for i in best.positions() {
+        out[i] = k[i];
+    }
+    (out, best)
+}
+
+/// Project every kernel of a layer; returns the projected tensor and the
+/// per-kernel pattern assignment `[cout * cin]` (cin-minor).
+pub fn project_layer(w: &Tensor, candidates: &[Pattern]) -> (Tensor, Vec<Pattern>) {
+    let (cout, cin) = (w.shape[0], w.shape[1]);
+    let mut out = w.clone();
+    let mut assigned = Vec::with_capacity(cout * cin);
+    for o in 0..cout {
+        for i in 0..cin {
+            let (proj, pat) = project_kernel(kernel_slice(w, o, i), candidates);
+            let base = out.idx4(o, i, 0, 0);
+            out.data[base..base + 9].copy_from_slice(&proj);
+            assigned.push(pat);
+        }
+    }
+    (out, assigned)
+}
+
+/// A network's weights aligned with a [`NetworkSpec`].
+#[derive(Debug, Clone)]
+pub struct NetworkWeights {
+    pub spec: NetworkSpec,
+    /// One `[cout, cin, 3, 3]` tensor per conv layer.
+    pub layers: Vec<Tensor>,
+}
+
+impl NetworkWeights {
+    pub fn new(spec: NetworkSpec, layers: Vec<Tensor>) -> NetworkWeights {
+        assert_eq!(spec.layers.len(), layers.len());
+        for (l, w) in spec.layers.iter().zip(layers.iter()) {
+            assert_eq!(w.shape, vec![l.cout, l.cin, 3, 3], "layer {}", l.name);
+        }
+        NetworkWeights { spec, layers }
+    }
+
+    /// Table-II-style statistics.
+    pub fn stats(&self) -> NetworkStats {
+        let mut total_w = 0usize;
+        let mut zero_w = 0usize;
+        let mut total_k = 0usize;
+        let mut zero_k = 0usize;
+        let mut patterns_per_layer = Vec::new();
+        for w in &self.layers {
+            total_w += w.numel();
+            zero_w += w.count_zeros();
+            let counts = layer_pattern_counts(w);
+            patterns_per_layer.push(counts.len());
+            for (p, c) in &counts {
+                total_k += c;
+                if p.is_zero() {
+                    zero_k += c;
+                }
+            }
+        }
+        NetworkStats {
+            sparsity: zero_w as f64 / total_w.max(1) as f64,
+            patterns_per_layer: patterns_per_layer.clone(),
+            total_patterns: patterns_per_layer.iter().sum(),
+            all_zero_kernel_ratio: zero_k as f64 / total_k.max(1) as f64,
+        }
+    }
+}
+
+/// Summary statistics matching the paper's Table II columns.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NetworkStats {
+    pub sparsity: f64,
+    pub patterns_per_layer: Vec<usize>,
+    pub total_patterns: usize,
+    pub all_zero_kernel_ratio: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kernel(vals: [f32; 9]) -> Vec<f32> {
+        vals.to_vec()
+    }
+
+    #[test]
+    fn pattern_from_kernel_roundtrip() {
+        let k = kernel([1.0, 0.0, 0.0, 0.0, 2.0, 0.0, 0.0, 0.0, -3.0]);
+        let p = Pattern::from_kernel(&k);
+        assert_eq!(p.0, 0b100010001);
+        assert_eq!(p.size(), 3);
+        assert_eq!(p.positions(), vec![0, 4, 8]);
+        assert!(p.contains(4));
+        assert!(!p.contains(1));
+    }
+
+    #[test]
+    fn pattern_relations() {
+        let a = Pattern(0b111);
+        let b = Pattern(0b101);
+        assert!(a.superset_of(b));
+        assert!(!b.superset_of(a));
+        assert_eq!(a.hamming(b), 1);
+        assert!(Pattern::FULL.superset_of(a));
+        assert_eq!(Pattern::ALL_ZERO.size(), 0);
+        assert!(Pattern::ALL_ZERO.is_zero());
+    }
+
+    #[test]
+    fn layer_counts_and_candidates() {
+        // 4 kernels: two with pattern A, one B, one all-zero
+        let mut w = Tensor::zeros(&[4, 1, 3, 3]);
+        w.set4(0, 0, 0, 0, 1.0); // A = {0}
+        w.set4(1, 0, 0, 0, 2.0); // A
+        w.set4(2, 0, 1, 1, 3.0); // B = {4}
+        // kernel 3 all-zero
+        let counts = layer_pattern_counts(&w);
+        assert_eq!(counts[&Pattern(1)], 2);
+        assert_eq!(counts[&Pattern(1 << 4)], 1);
+        assert_eq!(counts[&Pattern::ALL_ZERO], 1);
+
+        let cands = select_candidates(&counts, 2);
+        assert_eq!(cands.len(), 2);
+        assert!(cands.contains(&Pattern(1)));
+        assert!(cands.contains(&Pattern::ALL_ZERO)); // forced keep
+    }
+
+    #[test]
+    fn magnitude_prune_thresholds() {
+        let w = Tensor::from_vec(
+            &[1, 1, 3, 3],
+            vec![1.0, -2.0, 3.0, -4.0, 5.0, -6.0, 7.0, -8.0, 9.0],
+        );
+        let wp = magnitude_prune(&w, 5.0 / 9.0);
+        let nz: Vec<f32> = wp.data.iter().copied().filter(|v| *v != 0.0).collect();
+        assert_eq!(nz, vec![-6.0, 7.0, -8.0, 9.0]);
+        // zero sparsity = identity
+        assert_eq!(magnitude_prune(&w, 0.0).data, w.data);
+    }
+
+    #[test]
+    fn projection_retains_max_energy() {
+        let k = [10.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 1.0];
+        let cands = [Pattern(1), Pattern(1 << 8)];
+        let (out, pat) = project_kernel(&k, &cands);
+        assert_eq!(pat, Pattern(1));
+        assert_eq!(out[0], 10.0);
+        assert_eq!(out[8], 0.0);
+    }
+
+    #[test]
+    fn project_layer_assignments_within_candidates() {
+        let mut w = Tensor::zeros(&[3, 2, 3, 3]);
+        for (i, v) in w.data.iter_mut().enumerate() {
+            *v = ((i * 7919) % 13) as f32 - 6.0;
+        }
+        let wp = magnitude_prune(&w, 0.6);
+        let counts = layer_pattern_counts(&wp);
+        let cands = select_candidates(&counts, 3);
+        let (proj, assigned) = project_layer(&wp, &cands);
+        assert_eq!(assigned.len(), 6);
+        for (ki, pat) in assigned.iter().enumerate() {
+            assert!(cands.contains(pat), "kernel {ki}");
+            let (o, i) = (ki / 2, ki % 2);
+            let obs = Pattern::from_kernel(kernel_slice(&proj, o, i));
+            assert!(pat.superset_of(obs));
+        }
+    }
+
+    #[test]
+    fn stats_on_known_network() {
+        let spec = NetworkSpec {
+            name: "tiny".into(),
+            layers: vec![crate::nn::ConvLayer {
+                name: "conv0".into(),
+                cin: 1,
+                cout: 4,
+                fmap: 8,
+            }],
+        };
+        let mut w = Tensor::zeros(&[4, 1, 3, 3]);
+        w.set4(0, 0, 0, 0, 1.0);
+        w.set4(1, 0, 0, 0, 1.0);
+        w.set4(2, 0, 1, 1, 1.0);
+        let nw = NetworkWeights::new(spec, vec![w]);
+        let s = nw.stats();
+        assert_eq!(s.patterns_per_layer, vec![3]);
+        assert_eq!(s.total_patterns, 3);
+        assert!((s.all_zero_kernel_ratio - 0.25).abs() < 1e-12);
+        assert!((s.sparsity - 33.0 / 36.0).abs() < 1e-12);
+    }
+}

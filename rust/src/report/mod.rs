@@ -1,0 +1,222 @@
+//! Paper table & figure emitters.
+//!
+//! Every bench target prints its paper artifact through these helpers so
+//! the rows are formatted identically across `cargo bench`, the
+//! examples, and the CLI, and every result is also emitted as JSON under
+//! `results/` for EXPERIMENTS.md.
+
+use std::path::Path;
+
+use crate::pruning::synthetic::DatasetProfile;
+use crate::pruning::NetworkStats;
+use crate::sim::Comparison;
+use crate::util::json::{obj, Json};
+use crate::xbar::energy::EnergyLedger;
+
+/// Render Table I (hardware parameters) from the live config.
+pub fn table1(hw: &crate::config::HardwareConfig) -> String {
+    let mut s = String::new();
+    s.push_str("TABLE I — HARDWARE PARAMETERS\n");
+    s.push_str(&format!(
+        "  ADC   {} bits, {} GSps, {} pJ/op\n",
+        hw.adc_bits, hw.adc_gsps, hw.adc_pj_per_op
+    ));
+    s.push_str(&format!(
+        "  DAC   {} bits, {} MSps, {} pJ/op\n",
+        hw.dac_bits, hw.dac_msps, hw.dac_pj_per_op
+    ));
+    s.push_str(&format!(
+        "  RRAM  OU {}x{}, {} bits/cell, {}x{} array, {} pJ/OU/op\n",
+        hw.ou_rows, hw.ou_cols, hw.cell_bits, hw.xbar_rows, hw.xbar_cols,
+        hw.rram_pj_per_ou_op
+    ));
+    s
+}
+
+/// One Table II row: paper-published vs measured statistics.
+pub fn table2_row(profile: &DatasetProfile, measured: &NetworkStats) -> String {
+    format!(
+        "{:<10} sparsity {:.2}% (paper {:.2}%)  patterns {:?} (paper {:?})  \
+         total {} (paper {})  zero-kernels {:.1}% (paper {:.1}%)  \
+         top1 {} top5 {}",
+        profile.name,
+        measured.sparsity * 100.0,
+        profile.sparsity * 100.0,
+        measured.patterns_per_layer,
+        profile.patterns_per_layer,
+        measured.total_patterns,
+        profile.patterns_per_layer.iter().sum::<usize>(),
+        measured.all_zero_kernel_ratio * 100.0,
+        profile.all_zero_ratio * 100.0,
+        profile.top1,
+        profile.top5,
+    )
+}
+
+/// Fig. 7 series entry: crossbar counts + area efficiency.
+#[derive(Debug, Clone)]
+pub struct Fig7Row {
+    pub dataset: String,
+    pub naive_crossbars: usize,
+    pub pattern_crossbars: usize,
+    pub kmeans_crossbars: usize,
+    pub ou_sparse_crossbars: usize,
+    /// 1 / (1 - sparsity): the paper's "theoretical best".
+    pub theoretical_best: f64,
+    pub paper_efficiency: f64,
+}
+
+impl Fig7Row {
+    pub fn efficiency(&self) -> f64 {
+        self.naive_crossbars as f64 / self.pattern_crossbars.max(1) as f64
+    }
+
+    pub fn saved_fraction(&self) -> f64 {
+        1.0 - self.pattern_crossbars as f64 / self.naive_crossbars.max(1) as f64
+    }
+
+    pub fn line(&self) -> String {
+        format!(
+            "{:<10} naive {:>5}  pattern {:>4} ({:.2}x, saved {:.1}%; paper {:.2}x)  \
+             kmeans {:>5}  ou-sparse {:>4}  theoretical {:.2}x",
+            self.dataset,
+            self.naive_crossbars,
+            self.pattern_crossbars,
+            self.efficiency(),
+            self.saved_fraction() * 100.0,
+            self.paper_efficiency,
+            self.kmeans_crossbars,
+            self.ou_sparse_crossbars,
+            self.theoretical_best,
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("dataset", self.dataset.as_str().into()),
+            ("naive_crossbars", self.naive_crossbars.into()),
+            ("pattern_crossbars", self.pattern_crossbars.into()),
+            ("kmeans_crossbars", self.kmeans_crossbars.into()),
+            ("ou_sparse_crossbars", self.ou_sparse_crossbars.into()),
+            ("area_efficiency", self.efficiency().into()),
+            ("saved_fraction", self.saved_fraction().into()),
+            ("theoretical_best", self.theoretical_best.into()),
+            ("paper_efficiency", self.paper_efficiency.into()),
+        ])
+    }
+}
+
+/// Fig. 8 entry: normalized energy breakdown (baseline := 1.0).
+#[derive(Debug, Clone)]
+pub struct Fig8Row {
+    pub dataset: String,
+    pub baseline: EnergyLedger,
+    pub ours: EnergyLedger,
+    pub paper_efficiency: f64,
+}
+
+impl Fig8Row {
+    pub fn efficiency(&self) -> f64 {
+        self.baseline.total_pj() / self.ours.total_pj().max(1e-12)
+    }
+
+    fn norm(&self, e: &EnergyLedger) -> (f64, f64, f64, f64) {
+        let t = self.baseline.total_pj().max(1e-12);
+        (e.adc_pj / t, e.dac_pj / t, e.rram_pj / t, e.total_pj() / t)
+    }
+
+    pub fn lines(&self) -> String {
+        let (ba, bd, br, bt) = self.norm(&self.baseline);
+        let (oa, od, or_, ot) = self.norm(&self.ours);
+        format!(
+            "{:<10} baseline  ADC {:.3} DAC {:.4} RRAM {:.3} | total {:.3}\n\
+             {:<10} pattern   ADC {:.3} DAC {:.4} RRAM {:.3} | total {:.3}  \
+             -> {:.2}x energy efficiency (paper {:.2}x)",
+            self.dataset, ba, bd, br, bt, "", oa, od, or_, ot,
+            self.efficiency(), self.paper_efficiency,
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        let (ba, bd, br, _) = self.norm(&self.baseline);
+        let (oa, od, or_, ot) = self.norm(&self.ours);
+        obj(vec![
+            ("dataset", self.dataset.as_str().into()),
+            ("baseline_adc", ba.into()),
+            ("baseline_dac", bd.into()),
+            ("baseline_rram", br.into()),
+            ("ours_adc", oa.into()),
+            ("ours_dac", od.into()),
+            ("ours_rram", or_.into()),
+            ("ours_total_norm", ot.into()),
+            ("energy_efficiency", self.efficiency().into()),
+            ("paper_efficiency", self.paper_efficiency.into()),
+        ])
+    }
+}
+
+/// §V-C speedup row.
+pub fn speedup_line(dataset: &str, cmp: &Comparison, paper: f64) -> String {
+    format!(
+        "{:<10} cycles naive {:>14.0}  pattern {:>14.0}  speedup {:.2}x (paper {:.2}x)",
+        dataset,
+        cmp.baseline.total_cycles(),
+        cmp.ours.total_cycles(),
+        cmp.speedup(),
+        paper,
+    )
+}
+
+/// Write a JSON report under `results/`, creating the directory.
+pub fn write_json(path_under_results: &str, j: &Json) -> std::io::Result<()> {
+    let dir = Path::new("results");
+    std::fs::create_dir_all(dir)?;
+    std::fs::write(dir.join(path_under_results), j.to_string_pretty())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::HardwareConfig;
+
+    #[test]
+    fn table1_contains_constants() {
+        let s = table1(&HardwareConfig::default());
+        assert!(s.contains("1.67"));
+        assert!(s.contains("0.0182"));
+        assert!(s.contains("9x8"));
+        assert!(s.contains("4.8"));
+    }
+
+    #[test]
+    fn fig7_math() {
+        let r = Fig7Row {
+            dataset: "cifar10".into(),
+            naive_crossbars: 467,
+            pattern_crossbars: 100,
+            kmeans_crossbars: 430,
+            ou_sparse_crossbars: 200,
+            theoretical_best: 7.16,
+            paper_efficiency: 4.67,
+        };
+        assert!((r.efficiency() - 4.67).abs() < 0.01);
+        assert!((r.saved_fraction() - 0.7858).abs() < 0.001);
+        let j = r.to_json();
+        assert_eq!(j.get("naive_crossbars").as_usize(), Some(467));
+        assert!(r.line().contains("4.67x"));
+    }
+
+    #[test]
+    fn fig8_normalization() {
+        let r = Fig8Row {
+            dataset: "cifar10".into(),
+            baseline: EnergyLedger { adc_pj: 80.0, dac_pj: 2.0, rram_pj: 18.0 },
+            ours: EnergyLedger { adc_pj: 40.0, dac_pj: 0.5, rram_pj: 6.5 },
+            paper_efficiency: 2.13,
+        };
+        assert!((r.efficiency() - 100.0 / 47.0).abs() < 1e-9);
+        let j = r.to_json();
+        assert!((j.get("baseline_adc").as_f64().unwrap() - 0.8).abs() < 1e-12);
+        assert!((j.get("ours_total_norm").as_f64().unwrap() - 0.47).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,307 @@
+//! Functional (numerical) simulation of the mapped accelerator.
+//!
+//! Executes a mapped layer OU-by-OU with the full quantization chain —
+//! DAC input quantization, differential cell slicing, per-OU-slice ADC,
+//! shift-add — mirroring `python/compile/kernels/quant.py`, with the
+//! Input Preprocessing Unit selecting inputs and the Output Indexing
+//! Unit scattering results. This is equivalence-spine link #3
+//! (DESIGN.md §6): the *reordered, compressed, placed* weights compute
+//! the same convolution as the dense float oracle (up to quantization).
+
+use crate::arch::{InputPreprocessor, OutputIndexer};
+use crate::config::HardwareConfig;
+use crate::mapping::MappedLayer;
+use crate::nn::{im2col, Tensor};
+use crate::xbar;
+
+/// Per-layer static calibration scales (mirror of python `scales`).
+#[derive(Debug, Clone, Copy)]
+pub struct LayerScales {
+    pub sx: f32,
+    pub sw: f32,
+}
+
+/// Execute one mapped conv layer on one image (NCHW input), returning
+/// the pre-activation output `[cout, H, W]` flattened row-major.
+///
+/// `quantized = false` bypasses the converters (pure float MVM over the
+/// mapped blocks) — used to isolate mapping errors from quantization.
+pub fn conv_forward(
+    layer: &MappedLayer,
+    x: &Tensor,
+    img: usize,
+    scales: LayerScales,
+    hw: &HardwareConfig,
+    quantized: bool,
+) -> Tensor {
+    let (h, w) = (x.shape[2], x.shape[3]);
+    let rows = im2col(x, img);
+    let mut out = Tensor::zeros(&[layer.cout, h, w]);
+
+    for (pos, row) in rows.iter().enumerate() {
+        let ipp = InputPreprocessor::new(row);
+        let mut oi = OutputIndexer::new(layer.cout);
+        for block in &layer.blocks {
+            if ipp.all_zero(block) {
+                continue; // §IV-A skip — exact no-op either way
+            }
+            let inputs = ipp.select(block);
+            let vals = if quantized {
+                block_mvm_quantized(block, &inputs, scales, hw, layer)
+            } else {
+                block_mvm_float(block, &inputs)
+            };
+            oi.scatter(block, &vals);
+        }
+        let colv = oi.finish();
+        for (oc, v) in colv.into_iter().enumerate() {
+            out.data[oc * h * w + pos] = v;
+        }
+    }
+    out
+}
+
+/// Float MVM over one block: `out[k] = sum_r inputs[r] * w[r][k]`.
+fn block_mvm_float(block: &crate::mapping::PatternBlock, inputs: &[f32]) -> Vec<f32> {
+    let k = block.kernels();
+    let mut out = vec![0.0f32; k];
+    for (r, &xv) in inputs.iter().enumerate() {
+        if xv == 0.0 {
+            continue;
+        }
+        let row = &block.weights[r * k..(r + 1) * k];
+        for (o, wv) in out.iter_mut().zip(row.iter()) {
+            *o += xv * wv;
+        }
+    }
+    out
+}
+
+/// Quantized OU-granular MVM over one block, mirroring the Pallas
+/// kernel's arithmetic (`ou_mvm.py`): per OU row-group and cell slice,
+/// integer partial sums pass through the static ADC transfer function
+/// before shift-add recombination.
+fn block_mvm_quantized(
+    block: &crate::mapping::PatternBlock,
+    inputs: &[f32],
+    scales: LayerScales,
+    hw: &HardwareConfig,
+    layer: &MappedLayer,
+) -> Vec<f32> {
+    let geom = &layer.geom;
+    let k = block.kernels();
+    let n_slices = hw.weight_bits.div_ceil(hw.cell_bits);
+
+    // DAC quantization of the block's inputs.
+    let xq: Vec<i32> = inputs
+        .iter()
+        .map(|&v| xbar::quantize_input(v, scales.sx, hw.input_bits))
+        .collect();
+    // Weight quantization (cells store differential nibble pairs).
+    let wq: Vec<i32> = block
+        .weights
+        .iter()
+        .map(|&v| xbar::quantize_weight(v, scales.sw, hw.weight_bits))
+        .collect();
+
+    let mut out = vec![0.0f32; k];
+    let h = block.rows();
+    let mut row_off = 0;
+    while row_off < h {
+        let rows = (h - row_off).min(geom.ou_rows);
+        // One OU row-group: per slice, integer partials then ADC.
+        for (kk, o) in out.iter_mut().enumerate() {
+            let mut acc = 0.0f64;
+            for s in 0..n_slices {
+                let mut partial = 0i64;
+                for r in row_off..row_off + rows {
+                    let nib = xbar::signed_cell_slice(wq[r * k + kk], s, hw.cell_bits);
+                    partial += (xq[r] as i64) * (nib as i64);
+                }
+                let adc = xbar::adc_quantize(partial as f64, hw, hw.input_bits);
+                acc += ((1usize << (hw.cell_bits * s)) as f64) * adc;
+            }
+            *o += (acc * scales.sx as f64 * scales.sw as f64) as f32;
+        }
+        row_off += rows;
+    }
+    out
+}
+
+/// ReLU + bias, then 2×2 max-pool if requested — the digital tail of a
+/// conv stage in the SmallCNN network.
+pub fn relu_bias_pool(x: &Tensor, bias: &[f32], pool: bool) -> Tensor {
+    let (c, h, w) = (x.shape[0], x.shape[1], x.shape[2]);
+    let mut act = Tensor::zeros(&[c, h, w]);
+    for ch in 0..c {
+        for i in 0..h * w {
+            let v = x.data[ch * h * w + i] + bias[ch];
+            act.data[ch * h * w + i] = v.max(0.0);
+        }
+    }
+    if !pool {
+        return act;
+    }
+    let (ph, pw) = (h / 2, w / 2);
+    let mut out = Tensor::zeros(&[c, ph, pw]);
+    for ch in 0..c {
+        for y in 0..ph {
+            for xw in 0..pw {
+                let mut m = f32::NEG_INFINITY;
+                for dy in 0..2 {
+                    for dx in 0..2 {
+                        m = m.max(act.data[ch * h * w + (2 * y + dy) * w + 2 * xw + dx]);
+                    }
+                }
+                out.data[ch * ph * pw + y * pw + xw] = m;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::HardwareConfig;
+    use crate::mapping::naive::NaiveMapping;
+    use crate::mapping::pattern::PatternMapping;
+    use crate::mapping::MappingScheme;
+    use crate::nn::{conv2d_ref, ConvLayer};
+    use crate::pruning::synthetic::generate_layer;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+    use crate::xbar::CellGeometry;
+
+    fn rand_input(rng: &mut Rng, c: usize, hw: usize) -> Tensor {
+        let mut x = Tensor::zeros(&[1, c, hw, hw]);
+        for v in x.data.iter_mut() {
+            // post-ReLU-like: ~40% zeros, positive values
+            *v = if rng.chance(0.4) { 0.0 } else { rng.f32() };
+        }
+        x
+    }
+
+    fn scales_for(x: &Tensor, w: &Tensor, hw: &HardwareConfig) -> LayerScales {
+        let x_max = (1usize << (hw.input_bits - 1)) as f32 - 1.0;
+        let w_max = (1usize << (hw.weight_bits - 1)) as f32 - 1.0;
+        LayerScales {
+            sx: (x.max_abs() / x_max).max(1e-8),
+            sw: (w.max_abs() / w_max).max(1e-8),
+        }
+    }
+
+    /// Float-mode mapped compute == dense conv oracle, exactly.
+    #[test]
+    fn mapped_float_equals_dense_conv() {
+        let hw = HardwareConfig::smallcnn_functional();
+        let geom = CellGeometry::from_hw(&hw);
+        let mut rng = Rng::seed_from(1);
+        let w = generate_layer(12, 4, 5, 0.8, 0.3, &mut rng);
+        let l = ConvLayer { name: "t".into(), cout: 12, cin: 4, fmap: 6 };
+        let x = rand_input(&mut rng, 4, 6);
+        let want = conv2d_ref(&x, &w);
+        for scheme in [&PatternMapping as &dyn MappingScheme, &NaiveMapping] {
+            let ml = scheme.map_layer(0, &l, &w, &geom);
+            let got = conv_forward(
+                &ml,
+                &x,
+                0,
+                LayerScales { sx: 1.0, sw: 1.0 },
+                &hw,
+                false,
+            );
+            for (g, wv) in got.data.iter().zip(want.data.iter()) {
+                assert!((g - wv).abs() < 1e-4, "{} vs {} ({})", g, wv, scheme.name());
+            }
+        }
+    }
+
+    /// Quantized mapped compute tracks the float oracle within the
+    /// 8-bit-ADC error budget.
+    #[test]
+    fn mapped_quantized_close_to_dense_conv() {
+        let hw = HardwareConfig::smallcnn_functional();
+        let geom = CellGeometry::from_hw(&hw);
+        let mut rng = Rng::seed_from(2);
+        let w = generate_layer(16, 8, 6, 0.82, 0.35, &mut rng);
+        let l = ConvLayer { name: "t".into(), cout: 16, cin: 8, fmap: 8 };
+        let x = rand_input(&mut rng, 8, 8);
+        let sc = scales_for(&x, &w, &hw);
+        let ml = PatternMapping.map_layer(0, &l, &w, &geom);
+        let got = conv_forward(&ml, &x, 0, sc, &hw, true);
+        let want = conv2d_ref(&x, &w);
+        let max_ref = want.max_abs();
+        let mut max_err = 0.0f32;
+        for (g, wv) in got.data.iter().zip(want.data.iter()) {
+            max_err = max_err.max((g - wv).abs());
+        }
+        assert!(
+            max_err / max_ref < 0.25,
+            "relative error too high: {}",
+            max_err / max_ref
+        );
+    }
+
+    /// A very fine ADC leaves only input/weight quantization error.
+    #[test]
+    fn high_resolution_adc_near_exact() {
+        let hw = HardwareConfig {
+            adc_bits: 28,
+            weight_bits: 16,
+            input_bits: 16,
+            differential: true,
+            ..HardwareConfig::smallcnn_functional()
+        };
+        let geom = CellGeometry::from_hw(&hw);
+        let mut rng = Rng::seed_from(3);
+        let w = generate_layer(8, 4, 4, 0.75, 0.3, &mut rng);
+        let l = ConvLayer { name: "t".into(), cout: 8, cin: 4, fmap: 5 };
+        let x = rand_input(&mut rng, 4, 5);
+        let sc = scales_for(&x, &w, &hw);
+        let ml = PatternMapping.map_layer(0, &l, &w, &geom);
+        let got = conv_forward(&ml, &x, 0, sc, &hw, true);
+        let want = conv2d_ref(&x, &w);
+        for (g, wv) in got.data.iter().zip(want.data.iter()) {
+            assert!((g - wv).abs() < 2e-2 * want.max_abs().max(1.0));
+        }
+    }
+
+    /// Naive and pattern mappings agree bit-for-bit in float mode
+    /// (same math, different layout).
+    #[test]
+    fn prop_schemes_agree_float_mode() {
+        prop::check("schemes agree float", 16, |rng: &mut Rng| {
+            let hw = HardwareConfig::smallcnn_functional();
+            let geom = CellGeometry::from_hw(&hw);
+            let cout = rng.range(1, 20);
+            let cin = rng.range(1, 5);
+            let n_pat = rng.range(1, 7).min(cout * cin);
+            let w = generate_layer(cout, cin, n_pat, 0.7, 0.25, rng);
+            let l = ConvLayer { name: "t".into(), cout, cin, fmap: 5 };
+            let x = rand_input(rng, cin, 5);
+            let sc = LayerScales { sx: 1.0, sw: 1.0 };
+            let a = conv_forward(
+                &PatternMapping.map_layer(0, &l, &w, &geom),
+                &x, 0, sc, &hw, false,
+            );
+            let b = conv_forward(
+                &NaiveMapping.map_layer(0, &l, &w, &geom),
+                &x, 0, sc, &hw, false,
+            );
+            for (x1, x2) in a.data.iter().zip(b.data.iter()) {
+                assert!((x1 - x2).abs() < 1e-4);
+            }
+        });
+    }
+
+    #[test]
+    fn relu_bias_pool_behaviour() {
+        let x = Tensor::from_vec(&[1, 2, 2], vec![-1.0, 2.0, 3.0, -4.0]);
+        let act = relu_bias_pool(&x, &[1.0], false);
+        assert_eq!(act.data, vec![0.0, 3.0, 4.0, 0.0]);
+        let pooled = relu_bias_pool(&x, &[1.0], true);
+        assert_eq!(pooled.shape, vec![1, 1, 1]);
+        assert_eq!(pooled.data, vec![4.0]);
+    }
+}

@@ -1,0 +1,331 @@
+//! Cycle & energy simulator (paper §V).
+//!
+//! Model (documented in DESIGN.md §5 and EXPERIMENTS.md):
+//!
+//! - **Cycles** — the chip is ADC-throughput-limited: every executed OU
+//!   activation costs one cycle, plus `block_switch_cycles` control
+//!   overhead whenever the scheduler crosses a pattern-block boundary
+//!   (index decode + Input-Preprocessing reconfiguration; pattern scheme
+//!   only — naive's dense walk needs no index decode).
+//! - **Energy** — per executed OU, component-wise partial-activation
+//!   energy from [`crate::xbar::energy::ou_op_energy`].
+//! - **Skipping** — the pattern scheme never *stores* all-zero-pattern
+//!   kernels (they cost nothing by construction), and with
+//!   `zero_detection` skips blocks whose selected inputs are all zero.
+//!   The naive baseline executes everything (paper Fig. 1 baseline has
+//!   no Input Preprocessing Unit).
+//!
+//! Layers are simulated at `sample_positions` sampled output positions
+//! and scaled to the full feature map (exact mode: `None`).
+
+pub mod functional;
+pub mod smallcnn;
+pub mod workload;
+
+use crate::config::{HardwareConfig, SimConfig};
+use crate::mapping::{MappedLayer, MappedNetwork};
+use crate::nn::NetworkSpec;
+use crate::util::rng::Rng;
+use crate::util::threadpool;
+use crate::xbar::energy::{ou_op_energy, EnergyLedger};
+use workload::LayerTrace;
+
+/// Per-layer simulation result.
+#[derive(Debug, Clone, Default)]
+pub struct LayerSimResult {
+    pub layer_idx: usize,
+    /// Executed OU operations over the whole feature map.
+    pub ou_ops: f64,
+    /// OU operations skipped by all-zero input detection.
+    pub skipped_ou_ops: f64,
+    /// Total cycles (OU ops + block-switch overhead).
+    pub cycles: f64,
+    pub energy: EnergyLedger,
+    pub n_crossbars: usize,
+}
+
+/// Whole-network simulation result.
+#[derive(Debug, Clone, Default)]
+pub struct NetworkSimResult {
+    pub scheme: String,
+    pub network: String,
+    pub layers: Vec<LayerSimResult>,
+}
+
+impl NetworkSimResult {
+    pub fn total_cycles(&self) -> f64 {
+        self.layers.iter().map(|l| l.cycles).sum()
+    }
+
+    pub fn total_ou_ops(&self) -> f64 {
+        self.layers.iter().map(|l| l.ou_ops).sum()
+    }
+
+    pub fn total_energy(&self) -> EnergyLedger {
+        let mut e = EnergyLedger::default();
+        for l in &self.layers {
+            e.add(&l.energy);
+        }
+        e
+    }
+
+    pub fn total_crossbars(&self) -> usize {
+        self.layers.iter().map(|l| l.n_crossbars).sum()
+    }
+}
+
+/// Precomputed per-block OU cost (hot-path optimization: the OU schedule
+/// of a block does not depend on the position, only skipping does).
+#[derive(Debug, Clone, Copy)]
+struct BlockCost {
+    ou_ops: usize,
+    energy: EnergyLedger,
+    cin: usize,
+    pattern: crate::pruning::Pattern,
+}
+
+fn block_costs(layer: &MappedLayer, hw: &HardwareConfig) -> Vec<BlockCost> {
+    let geom = &layer.geom;
+    layer
+        .blocks
+        .iter()
+        .map(|b| {
+            let h = b.rows();
+            let w_cells = geom.weight_cols(b.kernels());
+            let mut ou_ops = 0usize;
+            let mut energy = EnergyLedger::default();
+            let mut row_off = 0;
+            while row_off < h {
+                let rows = (h - row_off).min(geom.ou_rows);
+                let mut col_off = 0;
+                while col_off < w_cells {
+                    let cols = (w_cells - col_off).min(geom.ou_cols);
+                    ou_ops += 1;
+                    energy.add(&ou_op_energy(hw, rows, cols));
+                    col_off += cols;
+                }
+                row_off += rows;
+            }
+            BlockCost { ou_ops, energy, cin: b.cin, pattern: b.pattern }
+        })
+        .collect()
+}
+
+/// Simulate one mapped layer against an activation trace.
+///
+/// `skip_zero_inputs` enables the Input Preprocessing Unit's all-zero
+/// detection; `block_switch_cycles` models the §IV-C index-decode walk.
+pub fn simulate_layer(
+    layer: &MappedLayer,
+    spec_positions: usize,
+    trace: &LayerTrace,
+    hw: &HardwareConfig,
+    skip_zero_inputs: bool,
+    block_switch_cycles: f64,
+) -> LayerSimResult {
+    let costs = block_costs(layer, hw);
+    let mut ou_ops = 0u64;
+    let mut skipped = 0u64;
+    let mut switches = 0u64;
+    let mut energy = EnergyLedger::default();
+
+    for pos in 0..trace.n_positions {
+        for c in &costs {
+            if skip_zero_inputs && trace.block_skippable(pos, c.cin, c.pattern) {
+                skipped += c.ou_ops as u64;
+                continue;
+            }
+            ou_ops += c.ou_ops as u64;
+            switches += 1;
+            energy.add(&c.energy);
+        }
+    }
+
+    // Scale from sampled positions to the full feature map.
+    let scale = spec_positions as f64 / trace.n_positions.max(1) as f64;
+    let ou_ops = ou_ops as f64 * scale;
+    let skipped = skipped as f64 * scale;
+    let cycles = ou_ops + switches as f64 * scale * block_switch_cycles;
+    LayerSimResult {
+        layer_idx: layer.layer_idx,
+        ou_ops,
+        skipped_ou_ops: skipped,
+        cycles,
+        energy: energy.scale(scale),
+        n_crossbars: layer.n_crossbars,
+    }
+}
+
+/// Simulate a whole mapped network with synthetic traces (layers in
+/// parallel). `zero_detection` only applies to schemes with an Input
+/// Preprocessing Unit (pattern / ou_sparse); the naive Fig. 1 baseline
+/// runs with it off regardless.
+pub fn simulate_network(
+    mapped: &MappedNetwork,
+    spec: &NetworkSpec,
+    hw: &HardwareConfig,
+    sim: &SimConfig,
+    threads: usize,
+) -> NetworkSimResult {
+    let has_ipu = mapped.scheme != "naive";
+    let skip = sim.zero_detection && has_ipu;
+    let switch_cycles = if has_ipu { sim.block_switch_cycles } else { 0.0 };
+
+    let items: Vec<(usize, &MappedLayer)> =
+        mapped.layers.iter().enumerate().collect();
+    let layers = threadpool::parallel_map(&items, threads, |(li, ml)| {
+        let layer = &spec.layers[*li];
+        let positions = layer.positions();
+        let n_samples = sim
+            .sample_positions
+            .map(|s| s.min(positions))
+            .unwrap_or(positions);
+        // Per-layer deterministic stream; the SAME trace must be used
+        // for every scheme, so seed only from (sim.seed, layer index).
+        let mut rng = Rng::seed_from(sim.seed ^ ((*li as u64 + 1) * 0x9E37));
+        let trace = LayerTrace::synthetic(layer.cin, n_samples, sim, &mut rng);
+        simulate_layer(ml, positions, &trace, hw, skip, switch_cycles)
+    });
+
+    NetworkSimResult {
+        scheme: mapped.scheme.clone(),
+        network: mapped.network.clone(),
+        layers,
+    }
+}
+
+/// Head-to-head comparison of two schemes (paper Fig. 8 / §V-C).
+#[derive(Debug, Clone)]
+pub struct Comparison {
+    pub baseline: NetworkSimResult,
+    pub ours: NetworkSimResult,
+}
+
+impl Comparison {
+    pub fn speedup(&self) -> f64 {
+        self.baseline.total_cycles() / self.ours.total_cycles().max(1.0)
+    }
+
+    pub fn energy_efficiency(&self) -> f64 {
+        self.baseline.total_energy().total_pj()
+            / self.ours.total_energy().total_pj().max(1e-12)
+    }
+
+    pub fn area_efficiency(&self) -> f64 {
+        self.baseline.total_crossbars() as f64
+            / self.ours.total_crossbars().max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mapping::naive::NaiveMapping;
+    use crate::mapping::pattern::PatternMapping;
+    use crate::mapping::MappingScheme;
+    use crate::nn::ConvLayer;
+    use crate::pruning::synthetic::generate_layer;
+    use crate::xbar::CellGeometry;
+
+    fn setup() -> (ConvLayer, crate::nn::Tensor, CellGeometry, HardwareConfig) {
+        let hw = HardwareConfig::default();
+        let geom = CellGeometry::from_hw(&hw);
+        let mut rng = Rng::seed_from(11);
+        // Large enough that the naive mapping spans several crossbars —
+        // area gains only materialize above one-crossbar scale.
+        let w = generate_layer(256, 64, 6, 0.85, 0.4, &mut rng);
+        let l = ConvLayer { name: "t".into(), cout: 256, cin: 64, fmap: 16 };
+        (l, w, geom, hw)
+    }
+
+    #[test]
+    fn dense_trace_matches_static_count() {
+        let (l, w, geom, hw) = setup();
+        let ml = PatternMapping.map_layer(0, &l, &w, &geom);
+        let trace = LayerTrace::dense(l.cin, 4);
+        let r = simulate_layer(&ml, l.positions(), &trace, &hw, true, 0.0);
+        let want = ml.ou_ops_per_position() * l.positions();
+        assert!((r.ou_ops - want as f64).abs() < 1e-6);
+        assert_eq!(r.skipped_ou_ops, 0.0);
+    }
+
+    #[test]
+    fn zero_detection_reduces_work() {
+        let (l, w, geom, hw) = setup();
+        let ml = PatternMapping.map_layer(0, &l, &w, &geom);
+        let sim = SimConfig {
+            zero_blob_ratio: 0.5,
+            dead_channel_ratio: 0.0,
+            ..Default::default()
+        };
+        let mut rng = Rng::seed_from(3);
+        let trace = LayerTrace::synthetic(l.cin, 64, &sim, &mut rng);
+        let off = simulate_layer(&ml, l.positions(), &trace, &hw, false, 0.0);
+        let on = simulate_layer(&ml, l.positions(), &trace, &hw, true, 0.0);
+        assert!(on.ou_ops < off.ou_ops * 0.8, "{} vs {}", on.ou_ops, off.ou_ops);
+        assert!(on.skipped_ou_ops > 0.0);
+        assert!(
+            (on.ou_ops + on.skipped_ou_ops - off.ou_ops).abs() < 1e-6,
+            "conservation"
+        );
+        assert!(on.energy.total_pj() < off.energy.total_pj());
+    }
+
+    #[test]
+    fn block_switch_penalty_adds_cycles() {
+        let (l, w, geom, hw) = setup();
+        let ml = PatternMapping.map_layer(0, &l, &w, &geom);
+        let trace = LayerTrace::dense(l.cin, 4);
+        let r0 = simulate_layer(&ml, l.positions(), &trace, &hw, false, 0.0);
+        let r5 = simulate_layer(&ml, l.positions(), &trace, &hw, false, 5.0);
+        let blocks_per_pos = ml.blocks.len() as f64;
+        let want = r0.cycles + 5.0 * blocks_per_pos * l.positions() as f64;
+        assert!((r5.cycles - want).abs() / want < 1e-9);
+    }
+
+    #[test]
+    fn pattern_beats_naive_on_pruned_weights() {
+        let (l, w, geom, hw) = setup();
+        let spec = NetworkSpec { name: "t".into(), layers: vec![l.clone()] };
+        let nw = crate::pruning::NetworkWeights::new(spec.clone(), vec![w]);
+        let sim = SimConfig::default();
+        let naive =
+            simulate_network(&NaiveMapping.map_network(&nw, &geom, 1), &spec, &hw, &sim, 1);
+        let ours = simulate_network(
+            &PatternMapping.map_network(&nw, &geom, 1),
+            &spec,
+            &hw,
+            &sim,
+            1,
+        );
+        let cmp = Comparison { baseline: naive, ours };
+        assert!(cmp.speedup() > 1.0, "speedup {}", cmp.speedup());
+        assert!(cmp.energy_efficiency() > 1.5, "energy {}", cmp.energy_efficiency());
+        assert!(cmp.area_efficiency() >= 1.0, "area {}", cmp.area_efficiency());
+    }
+
+    #[test]
+    fn sampled_and_exact_agree_on_dense_trace() {
+        // with a dense trace the sampling scale is exact
+        let (l, w, geom, hw) = setup();
+        let ml = PatternMapping.map_layer(0, &l, &w, &geom);
+        let exact = simulate_layer(
+            &ml,
+            l.positions(),
+            &LayerTrace::dense(l.cin, l.positions()),
+            &hw,
+            true,
+            1.0,
+        );
+        let sampled = simulate_layer(
+            &ml,
+            l.positions(),
+            &LayerTrace::dense(l.cin, 16),
+            &hw,
+            true,
+            1.0,
+        );
+        assert!((exact.ou_ops - sampled.ou_ops).abs() < 1e-6);
+        assert!((exact.cycles - sampled.cycles).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,225 @@
+//! Full SmallCNN forward on the simulated accelerator (e2e path).
+//!
+//! Loads the pattern-pruned weights trained by `make artifacts`, maps
+//! every conv layer with the paper's scheme, and runs images through the
+//! functional OU simulator (conv → bias+ReLU → pool, then GAP → FC in
+//! the digital domain), producing logits comparable to the PJRT
+//! execution of the AOT artifact and to the python golden logits.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use super::functional::{conv_forward, relu_bias_pool, LayerScales};
+use crate::config::HardwareConfig;
+use crate::mapping::{MappedNetwork, MappingScheme};
+use crate::nn::tensor_io::{load_tensors, AnyTensor};
+use crate::nn::{NetworkSpec, Tensor};
+use crate::pruning::NetworkWeights;
+use crate::util::json::Json;
+use crate::xbar::CellGeometry;
+
+/// SmallCNN model bundle: weights + metadata + mapped layers.
+pub struct SmallCnn {
+    pub spec: NetworkSpec,
+    pub weights: NetworkWeights,
+    pub biases: Vec<Vec<f32>>,
+    pub fc_w: Tensor,
+    pub fc_b: Vec<f32>,
+    pub scales: Vec<LayerScales>,
+    /// Which conv stages are followed by a 2×2 max-pool.
+    pub pool_after: Vec<bool>,
+    pub n_classes: usize,
+    pub meta: Json,
+}
+
+impl SmallCnn {
+    /// Load from `artifacts/` (weights bin + meta json).
+    pub fn load(artifacts_dir: &Path) -> Result<SmallCnn, String> {
+        let meta_text =
+            std::fs::read_to_string(artifacts_dir.join("smallcnn_meta.json"))
+                .map_err(|e| format!("read meta: {e}"))?;
+        let meta = Json::parse(&meta_text).map_err(|e| e.to_string())?;
+        let tensors = load_tensors(&artifacts_dir.join("smallcnn_weights.bin"))
+            .map_err(|e| e.to_string())?;
+        Self::from_parts(meta, &tensors)
+    }
+
+    pub fn from_parts(
+        meta: Json,
+        tensors: &BTreeMap<String, AnyTensor>,
+    ) -> Result<SmallCnn, String> {
+        let spec = NetworkSpec::from_meta(&meta)?;
+        let arch = meta.get("arch").as_arr().ok_or("meta missing arch")?;
+        // pool flags: 'M' entries pool the *previous* conv stage
+        let mut pool_after = Vec::new();
+        for item in arch {
+            if item.as_str() == Some("M") {
+                if let Some(last) = pool_after.last_mut() {
+                    *last = true;
+                }
+            } else {
+                pool_after.push(false);
+            }
+        }
+
+        let mut layers = Vec::new();
+        let mut biases = Vec::new();
+        let mut scales = Vec::new();
+        for (i, _l) in spec.layers.iter().enumerate() {
+            let name = format!("conv{i}");
+            let w = tensors
+                .get(&format!("{name}/w"))
+                .and_then(|t| t.as_f32())
+                .ok_or(format!("missing {name}/w"))?;
+            let b = tensors
+                .get(&format!("{name}/b"))
+                .and_then(|t| t.as_f32())
+                .ok_or(format!("missing {name}/b"))?;
+            layers.push(w.clone());
+            biases.push(b.data.clone());
+            let sc = meta.get("scales").get(&name);
+            scales.push(LayerScales {
+                sx: sc.idx(0).as_f64().ok_or("missing scale sx")? as f32,
+                sw: sc.idx(1).as_f64().ok_or("missing scale sw")? as f32,
+            });
+        }
+        let fc_w = tensors
+            .get("fc/w")
+            .and_then(|t| t.as_f32())
+            .ok_or("missing fc/w")?
+            .clone();
+        let fc_b = tensors
+            .get("fc/b")
+            .and_then(|t| t.as_f32())
+            .ok_or("missing fc/b")?
+            .data
+            .clone();
+        let n_classes = meta.get("n_classes").as_usize().unwrap_or(10);
+        let weights = NetworkWeights::new(spec.clone(), layers);
+        Ok(SmallCnn {
+            spec,
+            weights,
+            biases,
+            fc_w,
+            fc_b,
+            scales,
+            pool_after,
+            n_classes,
+            meta,
+        })
+    }
+
+    /// Map all conv layers with a given scheme.
+    pub fn map(&self, scheme: &dyn MappingScheme, hw: &HardwareConfig) -> MappedNetwork {
+        let geom = CellGeometry::from_hw(hw);
+        scheme.map_network(&self.weights, &geom, 1)
+    }
+
+    /// Run one image (NCHW `[1, 3, 32, 32]`) through the mapped
+    /// accelerator; returns logits.
+    pub fn forward(
+        &self,
+        mapped: &MappedNetwork,
+        x: &Tensor,
+        hw: &HardwareConfig,
+        quantized: bool,
+    ) -> Vec<f32> {
+        let mut cur = Tensor {
+            shape: vec![1, x.shape[1], x.shape[2], x.shape[3]],
+            data: x.data.clone(),
+        };
+        for (li, ml) in mapped.layers.iter().enumerate() {
+            let conv = conv_forward(ml, &cur, 0, self.scales[li], hw, quantized);
+            let staged = relu_bias_pool(&conv, &self.biases[li], self.pool_after[li]);
+            cur = Tensor {
+                shape: vec![1, staged.shape[0], staged.shape[1], staged.shape[2]],
+                data: staged.data,
+            };
+        }
+        // global average pool + FC (digital domain)
+        let (c, h, w) = (cur.shape[1], cur.shape[2], cur.shape[3]);
+        let mut feat = vec![0.0f32; c];
+        for ch in 0..c {
+            let s: f32 = cur.data[ch * h * w..(ch + 1) * h * w].iter().sum();
+            feat[ch] = s / (h * w) as f32;
+        }
+        let nc = self.n_classes;
+        let mut logits = self.fc_b.clone();
+        for ch in 0..c {
+            for k in 0..nc {
+                logits[k] += feat[ch] * self.fc_w.data[ch * nc + k];
+            }
+        }
+        logits
+    }
+}
+
+/// Test data bundle exported by `aot.py`.
+pub struct TestData {
+    pub test_x: Tensor,
+    pub test_y: Vec<i32>,
+    pub golden_x: Tensor,
+    pub golden_logits: Tensor,
+}
+
+impl TestData {
+    pub fn load(artifacts_dir: &Path) -> Result<TestData, String> {
+        let t = load_tensors(&artifacts_dir.join("test_data.bin"))
+            .map_err(|e| e.to_string())?;
+        let get_f32 = |k: &str| -> Result<Tensor, String> {
+            t.get(k)
+                .and_then(|a| a.as_f32())
+                .cloned()
+                .ok_or(format!("missing {k}"))
+        };
+        Ok(TestData {
+            test_x: get_f32("test_x")?,
+            test_y: t
+                .get("test_y")
+                .and_then(|a| a.as_i32())
+                .ok_or("missing test_y")?
+                .to_vec(),
+            golden_x: get_f32("golden_x")?,
+            golden_logits: get_f32("golden_logits")?,
+        })
+    }
+}
+
+/// Extract image `i` of an `[N, C, H, W]` batch as `[1, C, H, W]`.
+pub fn image(batch: &Tensor, i: usize) -> Tensor {
+    let (c, h, w) = (batch.shape[1], batch.shape[2], batch.shape[3]);
+    let n = c * h * w;
+    Tensor::from_vec(&[1, c, h, w], batch.data[i * n..(i + 1) * n].to_vec())
+}
+
+pub fn argmax(v: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, x) in v.iter().enumerate() {
+        if *x > v[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_basics() {
+        assert_eq!(argmax(&[0.1, 0.9, 0.5]), 1);
+        assert_eq!(argmax(&[3.0]), 0);
+        assert_eq!(argmax(&[1.0, 1.0]), 0);
+    }
+
+    #[test]
+    fn image_slicing() {
+        let b = Tensor::from_vec(&[2, 1, 2, 2],
+                                 vec![1., 2., 3., 4., 5., 6., 7., 8.]);
+        let i1 = image(&b, 1);
+        assert_eq!(i1.shape, vec![1, 1, 2, 2]);
+        assert_eq!(i1.data, vec![5., 6., 7., 8.]);
+    }
+    // full-bundle tests live in tests/e2e.rs (require artifacts/)
+}

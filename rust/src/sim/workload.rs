@@ -1,0 +1,170 @@
+//! Synthetic activation traces (DESIGN.md §3 substitution).
+//!
+//! The all-zero-detection gains of the Input Preprocessing Unit depend
+//! on *correlated* post-ReLU sparsity: dead channels and contiguous zero
+//! blobs, not iid zeros. A trace samples, per (layer, sampled position,
+//! input channel), a 9-bit mask of which receptive-field positions are
+//! zero; a block is skippable when the mask covers all of its pattern's
+//! positions.
+
+use crate::config::SimConfig;
+use crate::pruning::Pattern;
+use crate::util::rng::Rng;
+
+/// Activation zero-structure for one layer at a set of sampled output
+/// positions.
+#[derive(Debug, Clone)]
+pub struct LayerTrace {
+    pub n_positions: usize,
+    pub cin: usize,
+    /// `masks[pos * cin + ch]` = 9-bit zero mask of channel `ch`'s patch
+    /// at sampled position `pos` (bit i set = input at kernel position i
+    /// is zero).
+    pub masks: Vec<u16>,
+}
+
+impl LayerTrace {
+    /// Generate a synthetic trace for `cin` channels at `n_positions`
+    /// sampled output positions.
+    pub fn synthetic(
+        cin: usize,
+        n_positions: usize,
+        cfg: &SimConfig,
+        rng: &mut Rng,
+    ) -> LayerTrace {
+        let mut masks = Vec::with_capacity(n_positions * cin);
+        // Channel death is a per-channel property, shared by positions.
+        let dead: Vec<bool> = (0..cin)
+            .map(|_| rng.chance(cfg.dead_channel_ratio))
+            .collect();
+        // Baseline iid zero probability inside live channels (post-ReLU
+        // activations are ~half nonpositive before the blob structure).
+        const P_IID: f64 = 0.3;
+        for _pos in 0..n_positions {
+            for ch in 0..cin {
+                let mask = if dead[ch] {
+                    0x1FF // whole patch zero
+                } else if rng.chance(cfg.zero_blob_ratio) {
+                    // patch interior to a zero blob
+                    0x1FF
+                } else {
+                    let mut m = 0u16;
+                    for i in 0..9 {
+                        if rng.chance(P_IID) {
+                            m |= 1 << i;
+                        }
+                    }
+                    m
+                };
+                masks.push(mask);
+            }
+        }
+        LayerTrace { n_positions, cin, masks }
+    }
+
+    /// A trace from real feature-map data: `patches[pos][cin*9]` im2col
+    /// rows (used by the SmallCNN exact simulation).
+    pub fn from_rows(rows: &[Vec<f32>], cin: usize) -> LayerTrace {
+        let mut masks = Vec::with_capacity(rows.len() * cin);
+        for row in rows {
+            debug_assert_eq!(row.len(), cin * 9);
+            for ch in 0..cin {
+                let mut m = 0u16;
+                for i in 0..9 {
+                    if row[ch * 9 + i] == 0.0 {
+                        m |= 1 << i;
+                    }
+                }
+                masks.push(m);
+            }
+        }
+        LayerTrace { n_positions: rows.len(), cin, masks }
+    }
+
+    /// A dense (no zeros) trace.
+    pub fn dense(cin: usize, n_positions: usize) -> LayerTrace {
+        LayerTrace { n_positions, cin, masks: vec![0; n_positions * cin] }
+    }
+
+    #[inline]
+    pub fn mask(&self, pos: usize, ch: usize) -> u16 {
+        self.masks[pos * self.cin + ch]
+    }
+
+    /// Is a block with `pattern` on channel `ch` skippable at `pos`?
+    /// (All of the pattern's inputs are zero — paper §IV-A.)
+    #[inline]
+    pub fn block_skippable(&self, pos: usize, ch: usize, pattern: Pattern) -> bool {
+        let zeros = self.mask(pos, ch);
+        pattern.0 & !zeros == 0 && !pattern.is_zero()
+    }
+
+    /// Fraction of (position, channel) patches entirely zero.
+    pub fn full_zero_fraction(&self) -> f64 {
+        let z = self.masks.iter().filter(|m| **m == 0x1FF).count();
+        z as f64 / self.masks.len().max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_zero_fraction_tracks_config() {
+        let cfg = SimConfig {
+            dead_channel_ratio: 0.0,
+            zero_blob_ratio: 0.4,
+            ..Default::default()
+        };
+        let mut rng = Rng::seed_from(1);
+        let t = LayerTrace::synthetic(64, 128, &cfg, &mut rng);
+        let f = t.full_zero_fraction();
+        assert!((f - 0.4).abs() < 0.05, "blob fraction {f}");
+    }
+
+    #[test]
+    fn dead_channels_always_zero() {
+        let cfg = SimConfig {
+            dead_channel_ratio: 1.0,
+            zero_blob_ratio: 0.0,
+            ..Default::default()
+        };
+        let mut rng = Rng::seed_from(2);
+        let t = LayerTrace::synthetic(8, 16, &cfg, &mut rng);
+        assert_eq!(t.full_zero_fraction(), 1.0);
+    }
+
+    #[test]
+    fn skippable_requires_cover() {
+        let t = LayerTrace {
+            n_positions: 1,
+            cin: 1,
+            masks: vec![0b000000111],
+        };
+        assert!(t.block_skippable(0, 0, Pattern(0b101))); // ⊆ zeros
+        assert!(!t.block_skippable(0, 0, Pattern(0b1001))); // pos 3 nonzero
+        assert!(!t.block_skippable(0, 0, Pattern::ALL_ZERO)); // degenerate
+    }
+
+    #[test]
+    fn from_rows_marks_exact_zeros() {
+        let rows = vec![vec![
+            0.0, 1.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, // ch0
+            1.0, 1.0, 1.0, 1.0, 0.0, 1.0, 1.0, 1.0, 1.0, // ch1
+        ]];
+        let t = LayerTrace::from_rows(&rows, 2);
+        assert_eq!(t.mask(0, 0), 0b111111101);
+        assert_eq!(t.mask(0, 1), 0b000010000);
+    }
+
+    #[test]
+    fn dense_trace_never_skips() {
+        let t = LayerTrace::dense(4, 8);
+        for pos in 0..8 {
+            for ch in 0..4 {
+                assert!(!t.block_skippable(pos, ch, Pattern(0b1)));
+            }
+        }
+    }
+}

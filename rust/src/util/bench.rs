@@ -1,0 +1,148 @@
+//! Hand-rolled benchmark harness (criterion stand-in).
+//!
+//! Used by every target in `benches/` (`harness = false`). Provides
+//! warmup, timed iterations, and a stable one-line report with
+//! mean/median/stddev so paper-figure benches double as perf benches.
+
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+use super::stats::{fmt_ns, Summary};
+
+pub use std::hint::black_box as bb;
+
+#[derive(Debug, Clone)]
+pub struct BenchConfig {
+    pub warmup: Duration,
+    pub measure: Duration,
+    pub min_iters: u32,
+    pub max_iters: u32,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            warmup: Duration::from_millis(200),
+            measure: Duration::from_millis(800),
+            min_iters: 5,
+            max_iters: 10_000,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u32,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub stddev_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchResult {
+    pub fn report_line(&self) -> String {
+        format!(
+            "{:<44} {:>12}/iter (median {:>12}, sd {:>10}, n={})",
+            self.name,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.median_ns),
+            fmt_ns(self.stddev_ns),
+            self.iters
+        )
+    }
+}
+
+/// Time `f`, printing a criterion-style line. Returns stats in ns.
+pub fn bench<F: FnMut()>(name: &str, cfg: &BenchConfig, mut f: F) -> BenchResult {
+    // Warmup.
+    let start = Instant::now();
+    let mut warm_iters = 0u32;
+    while start.elapsed() < cfg.warmup || warm_iters < 1 {
+        f();
+        warm_iters += 1;
+        if warm_iters >= cfg.max_iters {
+            break;
+        }
+    }
+
+    // Measure.
+    let mut samples = Summary::new();
+    let measure_start = Instant::now();
+    let mut iters = 0u32;
+    while (measure_start.elapsed() < cfg.measure || iters < cfg.min_iters)
+        && iters < cfg.max_iters
+    {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_nanos() as f64);
+        iters += 1;
+    }
+
+    let result = BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_ns: samples.mean(),
+        median_ns: samples.median(),
+        stddev_ns: samples.stddev(),
+        min_ns: samples.min(),
+    };
+    println!("{}", result.report_line());
+    result
+}
+
+/// Time a single execution of `f` (for long-running whole-figure jobs).
+pub fn time_once<R, F: FnOnce() -> R>(name: &str, f: F) -> (R, Duration) {
+    let t = Instant::now();
+    let r = black_box(f());
+    let d = t.elapsed();
+    println!("{:<44} {:>12} (single run)", name, fmt_ns(d.as_nanos() as f64));
+    (r, d)
+}
+
+/// Throughput helper: items/second from a bench result.
+pub fn throughput(result: &BenchResult, items_per_iter: u64) -> f64 {
+    items_per_iter as f64 / (result.mean_ns / 1e9)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let cfg = BenchConfig {
+            warmup: Duration::from_millis(1),
+            measure: Duration::from_millis(10),
+            min_iters: 3,
+            max_iters: 1000,
+        };
+        let mut count = 0u64;
+        let r = bench("noop", &cfg, || {
+            count = bb(count + 1);
+        });
+        assert!(r.iters >= 3);
+        assert!(r.mean_ns >= 0.0);
+        assert!(count > 0);
+    }
+
+    #[test]
+    fn time_once_returns_value() {
+        let (v, d) = time_once("compute", || 21 * 2);
+        assert_eq!(v, 42);
+        assert!(d.as_nanos() > 0);
+    }
+
+    #[test]
+    fn throughput_math() {
+        let r = BenchResult {
+            name: "x".into(),
+            iters: 1,
+            mean_ns: 1e9,
+            median_ns: 1e9,
+            stddev_ns: 0.0,
+            min_ns: 1e9,
+        };
+        assert!((throughput(&r, 500) - 500.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,215 @@
+//! Tiny CLI argument parser (clap stand-in).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional args and
+//! subcommands. Unknown flags are errors; `--help` text is generated
+//! from registered options.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+struct OptSpec {
+    name: String,
+    help: String,
+    takes_value: bool,
+    default: Option<String>,
+}
+
+/// Declarative option set + parsed values.
+#[derive(Debug, Default)]
+pub struct Args {
+    specs: Vec<OptSpec>,
+    values: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+    positional: Vec<String>,
+    about: String,
+}
+
+impl Args {
+    pub fn new(about: &str) -> Args {
+        Args { about: about.to_string(), ..Default::default() }
+    }
+
+    /// Register `--name <value>` with a default.
+    pub fn opt(mut self, name: &str, default: &str, help: &str) -> Args {
+        self.specs.push(OptSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            takes_value: true,
+            default: Some(default.to_string()),
+        });
+        self
+    }
+
+    /// Register a boolean `--name` flag (default false).
+    pub fn flag(mut self, name: &str, help: &str) -> Args {
+        self.specs.push(OptSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            takes_value: false,
+            default: None,
+        });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{}\n\noptions:\n", self.about);
+        for spec in &self.specs {
+            if spec.takes_value {
+                s.push_str(&format!(
+                    "  --{} <v>  {} (default: {})\n",
+                    spec.name,
+                    spec.help,
+                    spec.default.as_deref().unwrap_or("")
+                ));
+            } else {
+                s.push_str(&format!("  --{}  {}\n", spec.name, spec.help));
+            }
+        }
+        s
+    }
+
+    /// Parse an iterator of argument strings (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(
+        mut self,
+        argv: I,
+    ) -> Result<Args, String> {
+        for spec in &self.specs {
+            if let Some(d) = &spec.default {
+                self.values.insert(spec.name.clone(), d.clone());
+            }
+            if !spec.takes_value {
+                self.flags.insert(spec.name.clone(), false);
+            }
+        }
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if a == "--help" || a == "-h" {
+                return Err(self.usage());
+            }
+            if let Some(stripped) = a.strip_prefix("--") {
+                let (name, inline) = match stripped.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == name)
+                    .ok_or_else(|| format!("unknown option --{name}\n\n{}", self.usage()))?
+                    .clone();
+                if spec.takes_value {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| format!("--{name} needs a value"))?,
+                    };
+                    self.values.insert(name, v);
+                } else {
+                    if inline.is_some() {
+                        return Err(format!("--{name} takes no value"));
+                    }
+                    self.flags.insert(name, true);
+                }
+            } else {
+                self.positional.push(a);
+            }
+        }
+        Ok(self)
+    }
+
+    pub fn get(&self, name: &str) -> &str {
+        self.values
+            .get(name)
+            .unwrap_or_else(|| panic!("option --{name} not registered"))
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<usize, String> {
+        self.get(name)
+            .parse()
+            .map_err(|_| format!("--{name} expects an integer"))
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<f64, String> {
+        self.get(name)
+            .parse()
+            .map_err(|_| format!("--{name} expects a number"))
+    }
+
+    pub fn get_flag(&self, name: &str) -> bool {
+        *self
+            .flags
+            .get(name)
+            .unwrap_or_else(|| panic!("flag --{name} not registered"))
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let a = Args::new("t")
+            .opt("n", "10", "count")
+            .opt("name", "abc", "label")
+            .flag("verbose", "chatty")
+            .parse(argv(&["--n", "20", "--verbose"]))
+            .unwrap();
+        assert_eq!(a.get_usize("n").unwrap(), 20);
+        assert_eq!(a.get("name"), "abc");
+        assert!(a.get_flag("verbose"));
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = Args::new("t")
+            .opt("x", "1", "")
+            .parse(argv(&["--x=5"]))
+            .unwrap();
+        assert_eq!(a.get_usize("x").unwrap(), 5);
+    }
+
+    #[test]
+    fn positional_collected() {
+        let a = Args::new("t")
+            .opt("x", "1", "")
+            .parse(argv(&["sub", "--x", "2", "path"]))
+            .unwrap();
+        assert_eq!(a.positional(), &["sub".to_string(), "path".to_string()]);
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(Args::new("t").parse(argv(&["--bogus"])).is_err());
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(Args::new("t").opt("x", "1", "").parse(argv(&["--x"])).is_err());
+    }
+
+    #[test]
+    fn help_returns_usage() {
+        let e = Args::new("about-me")
+            .opt("x", "1", "the x")
+            .parse(argv(&["--help"]))
+            .unwrap_err();
+        assert!(e.contains("about-me"));
+        assert!(e.contains("--x"));
+    }
+
+    #[test]
+    fn bad_number_reported() {
+        let a = Args::new("t").opt("n", "abc", "").parse(argv(&[])).unwrap();
+        assert!(a.get_usize("n").is_err());
+    }
+}

@@ -1,0 +1,13 @@
+//! From-scratch utility substrates.
+//!
+//! This offline image only ships the `xla` crate's dependency closure,
+//! so the usual ecosystem crates (serde/clap/criterion/proptest/rand/
+//! rayon) are re-implemented here at the scale this project needs.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;

@@ -1,0 +1,116 @@
+//! Property-testing micro-framework (proptest stand-in).
+//!
+//! `check(name, cases, |rng| ...)` runs a closure against many seeded
+//! RNG streams; failures report the exact case seed so the case can be
+//! replayed with `check_seed`. No shrinking — generators here are kept
+//! small and structured so raw counterexamples are already readable.
+
+use super::rng::Rng;
+
+pub const DEFAULT_CASES: u32 = 128;
+
+/// Run `body` for `cases` deterministic seeds. Panics (with the failing
+/// seed) on the first failure.
+pub fn check<F: Fn(&mut Rng)>(name: &str, cases: u32, body: F) {
+    for case in 0..cases {
+        let seed = derive_seed(name, case);
+        let mut rng = Rng::seed_from(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            body(&mut rng)
+        }));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .map(|s| s.as_str())
+                .or_else(|| payload.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic>");
+            panic!(
+                "property '{name}' failed at case {case} (seed {seed:#x}): {msg}\n\
+                 replay with: check_seed(\"{name}\", {seed:#x}, body)"
+            );
+        }
+    }
+}
+
+/// Replay a single failing case by seed.
+pub fn check_seed<F: Fn(&mut Rng)>(_name: &str, seed: u64, body: F) {
+    let mut rng = Rng::seed_from(seed);
+    body(&mut rng);
+}
+
+fn derive_seed(name: &str, case: u32) -> u64 {
+    // FNV-1a over the name, mixed with the case index.
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h ^ ((case as u64) << 32 | case as u64)
+}
+
+// ---- common generators ----
+
+/// Random f32 in [-scale, scale].
+pub fn gen_f32(rng: &mut Rng, scale: f32) -> f32 {
+    (rng.f32() * 2.0 - 1.0) * scale
+}
+
+/// Random vector of f32.
+pub fn gen_vec_f32(rng: &mut Rng, len: usize, scale: f32) -> Vec<f32> {
+    (0..len).map(|_| gen_f32(rng, scale)).collect()
+}
+
+/// Random sparse vector: each element zero with probability `p_zero`.
+pub fn gen_sparse_f32(rng: &mut Rng, len: usize, p_zero: f64, scale: f32) -> Vec<f32> {
+    (0..len)
+        .map(|_| if rng.chance(p_zero) { 0.0 } else { gen_f32(rng, scale) })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        check("addition commutes", 64, |rng| {
+            let a = rng.below(1000) as i64;
+            let b = rng.below(1000) as i64;
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    fn failing_property_reports_seed() {
+        let r = std::panic::catch_unwind(|| {
+            check("always fails", 4, |_| panic!("boom"));
+        });
+        let err = r.unwrap_err();
+        let msg = err.downcast_ref::<String>().unwrap();
+        assert!(msg.contains("always fails"));
+        assert!(msg.contains("seed"));
+        assert!(msg.contains("boom"));
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        use std::sync::Mutex;
+        let first: Mutex<Vec<u64>> = Mutex::new(Vec::new());
+        check("det", 8, |rng| {
+            first.lock().unwrap().push(rng.next_u64());
+        });
+        let second: Mutex<Vec<u64>> = Mutex::new(Vec::new());
+        check("det", 8, |rng| {
+            second.lock().unwrap().push(rng.next_u64());
+        });
+        assert_eq!(*first.lock().unwrap(), *second.lock().unwrap());
+    }
+
+    #[test]
+    fn sparse_generator_sparsity() {
+        let mut rng = Rng::seed_from(5);
+        let v = gen_sparse_f32(&mut rng, 10_000, 0.8, 1.0);
+        let zeros = v.iter().filter(|x| **x == 0.0).count();
+        assert!((7_500..8_500).contains(&zeros), "zeros={zeros}");
+    }
+}

@@ -1,0 +1,106 @@
+//! Component-level energy accounting (paper Table I, §V-A).
+//!
+//! The paper evaluates ADC + DAC + RRAM-array energy only ("RRAM related
+//! components consume more than 80% energy of the total chip" — ISAAC),
+//! so the ledger tracks exactly those three components.
+
+use crate::config::HardwareConfig;
+
+/// Energy ledger in picojoules, split by component (Fig. 8's stacking).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct EnergyLedger {
+    pub adc_pj: f64,
+    pub dac_pj: f64,
+    pub rram_pj: f64,
+}
+
+impl EnergyLedger {
+    pub fn total_pj(&self) -> f64 {
+        self.adc_pj + self.dac_pj + self.rram_pj
+    }
+
+    pub fn add(&mut self, other: &EnergyLedger) {
+        self.adc_pj += other.adc_pj;
+        self.dac_pj += other.dac_pj;
+        self.rram_pj += other.rram_pj;
+    }
+
+    pub fn scale(&self, k: f64) -> EnergyLedger {
+        EnergyLedger {
+            adc_pj: self.adc_pj * k,
+            dac_pj: self.dac_pj * k,
+            rram_pj: self.rram_pj * k,
+        }
+    }
+}
+
+/// Energy of one executed OU operation with `rows_active` wordlines and
+/// `cols_active` bitline cells actually used.
+///
+/// - DAC: one conversion per active wordline per bit-serial phase
+///   (`input_bits / dac_bits` phases).
+/// - RRAM: the Table-I 4.8 pJ figure is for a full `ou_rows × ou_cols`
+///   activation; partial activations scale by the active-cell fraction.
+/// - ADC: one conversion per active bitline.
+///
+/// The pattern scheme activates exactly the pattern-block rows/cols of
+/// the OU (paper §V-C: "less bitlines and wordlines, as well as the ADCs
+/// and DACs, are activated because of the pattern pruned compression");
+/// the naive scheme always activates full OUs except at array edges.
+pub fn ou_op_energy(
+    hw: &HardwareConfig,
+    rows_active: usize,
+    cols_active: usize,
+) -> EnergyLedger {
+    debug_assert!(rows_active <= hw.ou_rows);
+    debug_assert!(cols_active <= hw.ou_cols);
+    let phases = hw.dac_phases() as f64;
+    let full_cells = (hw.ou_rows * hw.ou_cols) as f64;
+    EnergyLedger {
+        dac_pj: rows_active as f64 * phases * hw.dac_pj_per_op,
+        rram_pj: hw.rram_pj_per_ou_op
+            * (rows_active * cols_active) as f64
+            / full_cells,
+        adc_pj: cols_active as f64 * hw.adc_pj_per_op,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_ou_energy_matches_table1() {
+        let hw = HardwareConfig::default();
+        let e = ou_op_energy(&hw, 9, 8);
+        // ADC: 8 conversions x 1.67 pJ
+        assert!((e.adc_pj - 8.0 * 1.67).abs() < 1e-12);
+        // DAC: 9 wordlines x 2 phases (8-bit input / 4-bit DAC) x 0.0182
+        assert!((e.dac_pj - 9.0 * 2.0 * 0.0182).abs() < 1e-12);
+        // RRAM: full OU = 4.8 pJ
+        assert!((e.rram_pj - 4.8).abs() < 1e-12);
+        // ADC dominates — the paper's Fig. 8 observation
+        assert!(e.adc_pj > e.rram_pj && e.rram_pj > e.dac_pj);
+    }
+
+    #[test]
+    fn partial_activation_scales() {
+        let hw = HardwareConfig::default();
+        let full = ou_op_energy(&hw, 9, 8);
+        let part = ou_op_energy(&hw, 3, 4);
+        assert!((part.adc_pj - full.adc_pj * 0.5).abs() < 1e-12);
+        assert!((part.dac_pj - full.dac_pj / 3.0).abs() < 1e-12);
+        assert!((part.rram_pj - full.rram_pj * 12.0 / 72.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ledger_arithmetic() {
+        let mut a = EnergyLedger { adc_pj: 1.0, dac_pj: 2.0, rram_pj: 3.0 };
+        let b = EnergyLedger { adc_pj: 0.5, dac_pj: 0.5, rram_pj: 0.5 };
+        a.add(&b);
+        assert_eq!(a.total_pj(), 7.5);
+        let s = a.scale(2.0);
+        assert_eq!(s.total_pj(), 15.0);
+        assert_eq!(EnergyLedger::default().total_pj(), 0.0);
+    }
+}

@@ -1,0 +1,146 @@
+//! RRAM crossbar substrate: cell quantization, geometry helpers, and the
+//! component-level energy model (paper Table I + §V-A).
+
+pub mod energy;
+
+use crate::config::HardwareConfig;
+
+/// Geometry of the mapped region of crossbars, in *cell* units.
+///
+/// Mapping works in weight columns; physical columns = weight columns ×
+/// `cells_per_weight` (bit-slicing, see [`HardwareConfig`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CellGeometry {
+    pub xbar_rows: usize,
+    pub xbar_cols: usize,
+    pub cells_per_weight: usize,
+    pub ou_rows: usize,
+    pub ou_cols: usize,
+}
+
+impl CellGeometry {
+    pub fn from_hw(hw: &HardwareConfig) -> CellGeometry {
+        CellGeometry {
+            xbar_rows: hw.xbar_rows,
+            xbar_cols: hw.xbar_cols,
+            cells_per_weight: hw.cells_per_weight(),
+            ou_rows: hw.ou_rows,
+            ou_cols: hw.ou_cols,
+        }
+    }
+
+    /// Physical column span of `n` weights.
+    pub fn weight_cols(&self, n_weights: usize) -> usize {
+        n_weights * self.cells_per_weight
+    }
+
+    /// Weight capacity of one crossbar row.
+    pub fn weights_per_row(&self) -> usize {
+        self.xbar_cols / self.cells_per_weight
+    }
+
+    /// OU operations needed to cover an `h × w_cells` dense block
+    /// (`h` rows, `w_cells` physical columns), per input vector.
+    pub fn ou_ops_for_block(&self, h: usize, w_cells: usize) -> usize {
+        h.div_ceil(self.ou_rows) * w_cells.div_ceil(self.ou_cols)
+    }
+}
+
+/// Signed fixed-point weight quantization mirroring
+/// `python/compile/kernels/quant.py` (`quantize_w`).
+pub fn quantize_weight(w: f32, scale: f32, w_bits: usize) -> i32 {
+    let w_max = (1i32 << (w_bits - 1)) - 1;
+    let q = (w / scale).round() as i64;
+    q.clamp(-(w_max as i64), w_max as i64) as i32
+}
+
+/// Signed input (DAC) quantization mirroring `quantize_x`.
+pub fn quantize_input(x: f32, scale: f32, x_bits: usize) -> i32 {
+    let x_max = (1i32 << (x_bits - 1)) - 1;
+    let q = (x / scale).round() as i64;
+    q.clamp(-(x_max as i64), x_max as i64) as i32
+}
+
+/// Static ADC step for the worst-case OU/slice partial sum, mirroring
+/// `QuantConfig.adc_lsb`.
+pub fn adc_lsb(hw: &HardwareConfig, x_bits: usize) -> f64 {
+    let cell_max = (1usize << hw.cell_bits) - 1;
+    let x_max = (1usize << (x_bits - 1)) - 1;
+    let max_abs = (hw.ou_rows * cell_max * x_max) as f64;
+    let levels = ((1usize << (hw.adc_bits - 1)) - 1) as f64;
+    (max_abs / levels).max(1.0)
+}
+
+/// Symmetric ADC transfer function (mirror of `adc_quantize`).
+pub fn adc_quantize(v: f64, hw: &HardwareConfig, x_bits: usize) -> f64 {
+    let lsb = adc_lsb(hw, x_bits);
+    let levels = ((1usize << (hw.adc_bits - 1)) - 1) as f64;
+    let code = (v / lsb).round().clamp(-levels, levels);
+    code * lsb
+}
+
+/// Differential signed cell slice of a quantized weight:
+/// `sign(wq) * nibble_s(|wq|)`, mirror of `signed_cell_slices`.
+pub fn signed_cell_slice(wq: i32, slice: usize, cell_bits: usize) -> i32 {
+    let cell_max = (1i32 << cell_bits) - 1;
+    let mag = wq.abs();
+    let nib = (mag >> (slice * cell_bits)) & cell_max;
+    nib * wq.signum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geometry_paper_defaults() {
+        let g = CellGeometry::from_hw(&HardwareConfig::default());
+        assert_eq!(g.cells_per_weight, 4);
+        assert_eq!(g.weights_per_row(), 128);
+        assert_eq!(g.weight_cols(16), 64);
+        // 9x8 OU over a full 512x512 crossbar
+        assert_eq!(g.ou_ops_for_block(512, 512), 57 * 64);
+        // one pattern block of 3 rows x 16 kernels (64 cells)
+        assert_eq!(g.ou_ops_for_block(3, 64), 8);
+        // narrow block still costs one OU
+        assert_eq!(g.ou_ops_for_block(1, 1), 1);
+    }
+
+    #[test]
+    fn weight_quantization_clamps() {
+        assert_eq!(quantize_weight(0.0, 1.0, 8), 0);
+        assert_eq!(quantize_weight(1.0, 1.0 / 127.0, 8), 127);
+        assert_eq!(quantize_weight(10.0, 1.0 / 127.0, 8), 127); // clamp
+        assert_eq!(quantize_weight(-10.0, 1.0 / 127.0, 8), -127);
+        assert_eq!(quantize_weight(0.5, 1.0 / 127.0, 8), 64); // round half up
+    }
+
+    #[test]
+    fn input_quantization() {
+        assert_eq!(quantize_input(7.0, 1.0, 4), 7);
+        assert_eq!(quantize_input(100.0, 1.0, 4), 7);
+        assert_eq!(quantize_input(-100.0, 1.0, 4), -7);
+    }
+
+    #[test]
+    fn adc_matches_python_constants() {
+        // Python: QuantConfig(x_bits=8) -> lsb = 9*15*127/127 = 135/... :
+        // max_abs = 9 * 15 * 127 = 17145, levels = 127 -> lsb = 135.0
+        let hw = HardwareConfig::smallcnn_functional();
+        let lsb = adc_lsb(&hw, 8);
+        assert!((lsb - 135.0).abs() < 1e-9, "lsb={lsb}");
+        assert_eq!(adc_quantize(0.0, &hw, 8), 0.0);
+        assert_eq!(adc_quantize(135.0 * 3.4, &hw, 8), 135.0 * 3.0);
+        // clamps at +/- 127 codes
+        assert_eq!(adc_quantize(1e9, &hw, 8), 135.0 * 127.0);
+    }
+
+    #[test]
+    fn cell_slices_reconstruct() {
+        for wq in [-127i32, -16, -1, 0, 1, 5, 16, 100, 127] {
+            let lo = signed_cell_slice(wq, 0, 4);
+            let hi = signed_cell_slice(wq, 1, 4);
+            assert_eq!(hi * 16 + lo, wq, "wq={wq}");
+        }
+    }
+}

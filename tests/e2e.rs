@@ -1,0 +1,159 @@
+//! End-to-end tests over the real AOT artifacts (require
+//! `make artifacts` to have run; they are skipped with a notice when
+//! artifacts/ is absent so `cargo test` works on a fresh checkout).
+
+use std::path::{Path, PathBuf};
+
+use rram_pattern_accel::config::HardwareConfig;
+use rram_pattern_accel::coordinator::{Coordinator, PjrtBackend};
+use rram_pattern_accel::mapping::{pattern::PatternMapping, MappingScheme};
+use rram_pattern_accel::pruning::Pattern;
+use rram_pattern_accel::runtime::Engine;
+use rram_pattern_accel::sim::smallcnn::{argmax, image, SmallCnn, TestData};
+use rram_pattern_accel::xbar::CellGeometry;
+
+fn artifacts() -> Option<PathBuf> {
+    let p = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if p.join("smallcnn_meta.json").exists() {
+        Some(p)
+    } else {
+        eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn model_bundle_loads_and_maps() {
+    let Some(dir) = artifacts() else { return };
+    let model = SmallCnn::load(&dir).expect("load bundle");
+    assert_eq!(model.spec.layers.len(), 5);
+    assert_eq!(model.n_classes, 10);
+    let hw = HardwareConfig::smallcnn_functional();
+    let mapped = model.map(&PatternMapping, &hw);
+    mapped.validate().expect("mapping invariants");
+    // pruned network must actually be pattern-sparse
+    let stats = model.weights.stats();
+    assert!(stats.sparsity > 0.5, "sparsity {}", stats.sparsity);
+    for (li, n) in stats.patterns_per_layer.iter().enumerate() {
+        assert!(*n <= 10, "layer {li} has {n} patterns");
+    }
+}
+
+#[test]
+fn python_candidates_match_rust_extraction() {
+    // The candidate patterns python selected must cover every kernel
+    // pattern rust extracts from the exported weights.
+    let Some(dir) = artifacts() else { return };
+    let model = SmallCnn::load(&dir).expect("load bundle");
+    for (li, w) in model.weights.layers.iter().enumerate() {
+        let name = format!("conv{li}");
+        let cands: Vec<Pattern> = model
+            .meta
+            .get("candidates")
+            .get(&name)
+            .as_arr()
+            .expect("candidates")
+            .iter()
+            .map(|p| Pattern(p.as_usize().unwrap() as u16))
+            .collect();
+        let counts = rram_pattern_accel::pruning::layer_pattern_counts(w);
+        for pat in counts.keys() {
+            let covered = pat.is_zero()
+                || cands.iter().any(|c| c.superset_of(*pat));
+            assert!(covered, "layer {li}: pattern {:#b} not covered", pat.0);
+        }
+    }
+}
+
+#[test]
+fn pjrt_matches_python_golden() {
+    let Some(dir) = artifacts() else { return };
+    let td = TestData::load(&dir).expect("test data");
+    let engine = Engine::load(&dir.join("smallcnn_b1.hlo.txt")).expect("engine");
+    let n = td.golden_x.shape[0];
+    for i in 0..n {
+        let img = image(&td.golden_x, i);
+        let out = engine
+            .run_f32(&[(&[1usize, 3, 32, 32], &img.data)])
+            .expect("run");
+        for (o, g) in out
+            .iter()
+            .zip(td.golden_logits.data[i * 10..(i + 1) * 10].iter())
+        {
+            assert!((o - g).abs() < 1e-3, "image {i}: {o} vs {g}");
+        }
+    }
+}
+
+#[test]
+fn mapped_simulator_accuracy_matches_python() {
+    let Some(dir) = artifacts() else { return };
+    let model = SmallCnn::load(&dir).expect("bundle");
+    let td = TestData::load(&dir).expect("test data");
+    let hw = HardwareConfig::smallcnn_functional();
+    let mapped = model.map(&PatternMapping, &hw);
+    let n = 48.min(td.test_x.shape[0]);
+    let mut correct = 0usize;
+    for i in 0..n {
+        let img = image(&td.test_x, i);
+        let logits = model.forward(&mapped, &img, &hw, true);
+        if argmax(&logits) as i32 == td.test_y[i] {
+            correct += 1;
+        }
+    }
+    let acc = correct as f64 / n as f64;
+    let py = model.meta.get("accuracy").get("crossbar").as_f64().unwrap();
+    assert!(
+        (acc - py).abs() < 0.15,
+        "rust mapped accuracy {acc} vs python crossbar {py}"
+    );
+}
+
+#[test]
+fn coordinator_serves_real_engine() {
+    let Some(dir) = artifacts() else { return };
+    let td = TestData::load(&dir).expect("test data");
+    let hlo = dir.join("smallcnn_b8.hlo.txt");
+    let coord = Coordinator::start(
+        move || {
+            let engine = Engine::load(&hlo).expect("engine");
+            PjrtBackend {
+                engine,
+                batch: 8,
+                input_shape: vec![3, 32, 32],
+                output_len: 10,
+            }
+        },
+        std::time::Duration::from_millis(5),
+    );
+    let img_len = 3 * 32 * 32;
+    let n = 16usize;
+    let rxs: Vec<_> = (0..n)
+        .map(|i| coord.submit(td.test_x.data[i * img_len..(i + 1) * img_len].to_vec()))
+        .collect();
+    let mut correct = 0;
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let reply = rx.recv_timeout(std::time::Duration::from_secs(60)).expect("reply");
+        assert_eq!(reply.logits.len(), 10);
+        if argmax(&reply.logits) as i32 == td.test_y[i] {
+            correct += 1;
+        }
+    }
+    // the pruned model is highly accurate on its test set
+    assert!(correct >= n * 6 / 10, "served accuracy too low: {correct}/{n}");
+    coord.shutdown();
+}
+
+#[test]
+fn scales_metadata_sane() {
+    let Some(dir) = artifacts() else { return };
+    let model = SmallCnn::load(&dir).expect("bundle");
+    for s in &model.scales {
+        assert!(s.sx > 0.0 && s.sx < 10.0);
+        assert!(s.sw > 0.0 && s.sw < 1.0);
+    }
+    // geometry check: mapping respects the functional hw config
+    let hw = HardwareConfig::smallcnn_functional();
+    let geom = CellGeometry::from_hw(&hw);
+    assert_eq!(geom.cells_per_weight, 4);
+}

@@ -1,0 +1,177 @@
+//! Cross-module integration tests: synthetic networks → all four
+//! mapping schemes → cycle/energy simulation → paper-band checks.
+
+use rram_pattern_accel::config::{HardwareConfig, SimConfig};
+use rram_pattern_accel::mapping::{
+    index, kmeans::KmeansMapping, naive::NaiveMapping, ou::enumerate_ous,
+    ou_sparse::OuSparseMapping, pattern::PatternMapping, reconstruct_dense,
+    MappingScheme,
+};
+use rram_pattern_accel::nn::NetworkSpec;
+use rram_pattern_accel::pruning::synthetic::{CIFAR10, CIFAR100, IMAGENET};
+use rram_pattern_accel::pruning::NetworkWeights;
+use rram_pattern_accel::sim;
+use rram_pattern_accel::util::threadpool;
+use rram_pattern_accel::xbar::CellGeometry;
+
+fn smallnet() -> NetworkWeights {
+    // scaled-down VGG-ish net for fast integration runs
+    let spec = NetworkSpec {
+        name: "testnet".into(),
+        layers: vec![
+            rram_pattern_accel::nn::ConvLayer { name: "c0".into(), cin: 3, cout: 32, fmap: 16 },
+            rram_pattern_accel::nn::ConvLayer { name: "c1".into(), cin: 32, cout: 64, fmap: 16 },
+            rram_pattern_accel::nn::ConvLayer { name: "c2".into(), cin: 64, cout: 64, fmap: 8 },
+        ],
+    };
+    let mut rng = rram_pattern_accel::util::rng::Rng::seed_from(99);
+    let layers = spec
+        .layers
+        .iter()
+        .map(|l| {
+            rram_pattern_accel::pruning::synthetic::generate_layer(
+                l.cout, l.cin, 6, 0.85, 0.38, &mut rng,
+            )
+        })
+        .collect();
+    NetworkWeights::new(spec, layers)
+}
+
+#[test]
+fn all_schemes_map_and_validate() {
+    let hw = HardwareConfig::default();
+    let geom = CellGeometry::from_hw(&hw);
+    let nw = smallnet();
+    let schemes: Vec<Box<dyn MappingScheme>> = vec![
+        Box::new(NaiveMapping),
+        Box::new(PatternMapping),
+        Box::new(KmeansMapping::default()),
+        Box::new(OuSparseMapping),
+    ];
+    for s in &schemes {
+        let mapped = s.map_network(&nw, &geom, 2);
+        mapped.validate().unwrap_or_else(|e| panic!("{}: {e}", s.name()));
+        // every scheme reconstructs the same dense weights
+        for (li, ml) in mapped.layers.iter().enumerate() {
+            let dense = reconstruct_dense(ml);
+            assert_eq!(dense.data, nw.layers[li].data, "{} layer {li}", s.name());
+        }
+    }
+}
+
+#[test]
+fn area_ordering_pattern_best() {
+    let hw = HardwareConfig::default();
+    let geom = CellGeometry::from_hw(&hw);
+    let nw = smallnet();
+    let naive = NaiveMapping.map_network(&nw, &geom, 2).total_crossbars();
+    let pat = PatternMapping.map_network(&nw, &geom, 2).total_crossbars();
+    let km = KmeansMapping::default().map_network(&nw, &geom, 2).total_crossbars();
+    let sre = OuSparseMapping.map_network(&nw, &geom, 2).total_crossbars();
+    assert!(pat <= sre && sre <= naive, "pattern {pat} sre {sre} naive {naive}");
+    assert!(km <= naive);
+    assert!(pat < naive, "pattern must save crossbars");
+}
+
+#[test]
+fn ou_schedules_valid_for_all_schemes() {
+    let hw = HardwareConfig::default();
+    let geom = CellGeometry::from_hw(&hw);
+    let nw = smallnet();
+    for s in [&PatternMapping as &dyn MappingScheme, &NaiveMapping, &OuSparseMapping] {
+        let mapped = s.map_network(&nw, &geom, 2);
+        for ml in &mapped.layers {
+            let tasks = enumerate_ous(ml);
+            rram_pattern_accel::mapping::ou::validate_schedule(ml, &tasks, &geom)
+                .unwrap_or_else(|e| panic!("{}: {e}", s.name()));
+        }
+    }
+}
+
+#[test]
+fn index_roundtrip_whole_network() {
+    let hw = HardwareConfig::default();
+    let geom = CellGeometry::from_hw(&hw);
+    let nw = smallnet();
+    let mapped = PatternMapping.map_network(&nw, &geom, 2);
+    for ml in &mapped.layers {
+        let decoded = index::decode(&index::encode(ml)).expect("decode");
+        assert_eq!(index::reconstruct_placements(&decoded, &geom), ml.placements);
+    }
+}
+
+#[test]
+fn simulation_comparison_bands() {
+    let hw = HardwareConfig::default();
+    let geom = CellGeometry::from_hw(&hw);
+    let nw = smallnet();
+    let spec = nw.spec.clone();
+    let sim_cfg = SimConfig::default();
+    let t = threadpool::default_threads();
+    let naive = NaiveMapping.map_network(&nw, &geom, t);
+    let ours = PatternMapping.map_network(&nw, &geom, t);
+    let base = sim::simulate_network(&naive, &spec, &hw, &sim_cfg, t);
+    let mine = sim::simulate_network(&ours, &spec, &hw, &sim_cfg, t);
+    let cmp = sim::Comparison { baseline: base, ours: mine };
+    assert!(cmp.speedup() > 1.0);
+    assert!(cmp.energy_efficiency() > 1.2);
+    assert!(cmp.area_efficiency() >= 1.0);
+    // skipping only ever removes work
+    for l in &cmp.ours.layers {
+        assert!(l.ou_ops >= 0.0 && l.skipped_ou_ops >= 0.0);
+    }
+}
+
+#[test]
+fn simulation_deterministic_across_runs() {
+    let hw = HardwareConfig::default();
+    let geom = CellGeometry::from_hw(&hw);
+    let nw = smallnet();
+    let spec = nw.spec.clone();
+    let sim_cfg = SimConfig::default();
+    let ours = PatternMapping.map_network(&nw, &geom, 2);
+    let a = sim::simulate_network(&ours, &spec, &hw, &sim_cfg, 1);
+    let b = sim::simulate_network(&ours, &spec, &hw, &sim_cfg, 4);
+    assert_eq!(a.total_cycles(), b.total_cycles());
+    assert_eq!(a.total_energy(), b.total_energy());
+}
+
+#[test]
+fn table2_profiles_generate_exact_pattern_counts() {
+    for profile in [&CIFAR10, &CIFAR100, &IMAGENET] {
+        let nw = profile.generate(42);
+        let stats = nw.stats();
+        assert_eq!(
+            stats.patterns_per_layer,
+            profile.patterns_per_layer.to_vec(),
+            "{}",
+            profile.name
+        );
+        assert!(
+            (stats.sparsity - profile.sparsity).abs() < 0.02,
+            "{}: sparsity {} vs {}",
+            profile.name,
+            stats.sparsity,
+            profile.sparsity
+        );
+        assert!(
+            (stats.all_zero_kernel_ratio - profile.all_zero_ratio).abs() < 0.02,
+            "{}: zero ratio",
+            profile.name
+        );
+    }
+}
+
+/// Fig. 7 headline band on the real (full-size) CIFAR-10 profile:
+/// 3–8x area efficiency, pattern < kmeans < ... ordering.
+#[test]
+fn fig7_band_cifar10_full_scale() {
+    let hw = HardwareConfig::default();
+    let geom = CellGeometry::from_hw(&hw);
+    let t = threadpool::default_threads();
+    let nw = CIFAR10.generate(42);
+    let naive = NaiveMapping.map_network(&nw, &geom, t).total_crossbars();
+    let pat = PatternMapping.map_network(&nw, &geom, t).total_crossbars();
+    let eff = naive as f64 / pat as f64;
+    assert!(eff > 3.0 && eff < 8.0, "area efficiency {eff} out of band");
+}

@@ -1,0 +1,127 @@
+//! Cross-module property tests on the mapping/simulation invariants the
+//! paper's correctness rests on (DESIGN.md §6).
+
+use rram_pattern_accel::config::{HardwareConfig, SimConfig};
+use rram_pattern_accel::mapping::{
+    index, naive::NaiveMapping, ou_sparse::OuSparseMapping,
+    pattern::PatternMapping, reconstruct_dense, MappingScheme,
+};
+use rram_pattern_accel::nn::{conv2d_ref, ConvLayer, Tensor};
+use rram_pattern_accel::pruning::synthetic::generate_layer;
+use rram_pattern_accel::sim::functional::{conv_forward, LayerScales};
+use rram_pattern_accel::sim::workload::LayerTrace;
+use rram_pattern_accel::sim::{simulate_layer};
+use rram_pattern_accel::util::prop;
+use rram_pattern_accel::util::rng::Rng;
+use rram_pattern_accel::xbar::CellGeometry;
+
+fn geom() -> CellGeometry {
+    CellGeometry::from_hw(&HardwareConfig::default())
+}
+
+fn rand_layer(rng: &mut Rng) -> (ConvLayer, Tensor) {
+    let cout = rng.range(1, 40);
+    let cin = rng.range(1, 6);
+    let n_pat = rng.range(1, 9).min(cout * cin);
+    let sparsity = 0.4 + rng.f64() * 0.55;
+    let zr = rng.f64() * 0.5;
+    let w = generate_layer(cout, cin, n_pat, sparsity, zr, rng);
+    (ConvLayer { name: "p".into(), cout, cin, fmap: 5 }, w)
+}
+
+/// Mapping is information-preserving for every scheme (zeros of the
+/// naive scheme included).
+#[test]
+fn prop_all_schemes_reconstruct() {
+    prop::check("all schemes reconstruct", 40, |rng| {
+        let (l, w) = rand_layer(rng);
+        for s in [
+            &PatternMapping as &dyn MappingScheme,
+            &NaiveMapping,
+            &OuSparseMapping,
+        ] {
+            let ml = s.map_layer(0, &l, &w, &geom());
+            ml.validate().unwrap();
+            assert_eq!(reconstruct_dense(&ml).data, w.data, "{}", s.name());
+        }
+    });
+}
+
+/// The paper's §IV-C decode: placements are recoverable from the index
+/// stream for arbitrary layers.
+#[test]
+fn prop_index_stream_recovers_placement() {
+    prop::check("index stream recovers placement", 40, |rng| {
+        let (l, w) = rand_layer(rng);
+        let ml = PatternMapping.map_layer(0, &l, &w, &geom());
+        let decoded = index::decode(&index::encode(&ml)).unwrap();
+        assert_eq!(
+            index::reconstruct_placements(&decoded, &geom()),
+            ml.placements
+        );
+    });
+}
+
+/// Functional spine: mapped float compute == dense conv for random
+/// sparse inputs (the Output Indexing Unit undoes the reorder exactly).
+#[test]
+fn prop_mapped_compute_equals_conv() {
+    prop::check("mapped compute equals conv", 24, |rng| {
+        let hw = HardwareConfig::smallcnn_functional();
+        let (l, w) = rand_layer(rng);
+        let mut x = Tensor::zeros(&[1, l.cin, 5, 5]);
+        for v in x.data.iter_mut() {
+            *v = if rng.chance(0.5) { 0.0 } else { rng.f32() * 2.0 - 1.0 };
+        }
+        let ml = PatternMapping.map_layer(0, &l, &w, &geom());
+        let got = conv_forward(&ml, &x, 0, LayerScales { sx: 1.0, sw: 1.0 }, &hw, false);
+        let want = conv2d_ref(&x, &w);
+        let scale = want.max_abs().max(1.0);
+        for (g, v) in got.data.iter().zip(want.data.iter()) {
+            assert!((g - v).abs() < 1e-4 * scale, "{g} vs {v}");
+        }
+    });
+}
+
+/// Energy/cycle accounting conservation: skipped + executed OU ops is
+/// exactly the static schedule size, and energy is monotone in work.
+#[test]
+fn prop_sim_conservation() {
+    prop::check("sim conservation", 24, |rng| {
+        let hw = HardwareConfig::default();
+        let (l, w) = rand_layer(rng);
+        let ml = PatternMapping.map_layer(0, &l, &w, &geom());
+        let sim_cfg = SimConfig {
+            zero_blob_ratio: rng.f64() * 0.8,
+            dead_channel_ratio: rng.f64() * 0.3,
+            ..Default::default()
+        };
+        let n_pos = rng.range(1, 20);
+        let trace = LayerTrace::synthetic(l.cin, n_pos, &sim_cfg, rng);
+        let on = simulate_layer(&ml, l.positions(), &trace, &hw, true, 0.0);
+        let off = simulate_layer(&ml, l.positions(), &trace, &hw, false, 0.0);
+        let static_total = (ml.ou_ops_per_position() * l.positions()) as f64;
+        assert!((off.ou_ops - static_total).abs() < 1e-6);
+        assert!((on.ou_ops + on.skipped_ou_ops - static_total).abs() < 1e-6);
+        assert!(on.energy.total_pj() <= off.energy.total_pj() + 1e-9);
+        assert!(on.cycles <= off.cycles + 1e-9);
+    });
+}
+
+/// Area monotonicity: higher weight sparsity never costs more pattern
+/// crossbar area (same pattern count, same shape).
+#[test]
+fn prop_area_monotone_in_sparsity() {
+    prop::check("area monotone in sparsity", 12, |rng| {
+        let cout = 64;
+        let cin = 16;
+        let seed_rng_a = &mut rng.fork(1);
+        let seed_rng_b = &mut rng.fork(2);
+        let w_dense = generate_layer(cout, cin, 6, 0.6, 0.2, seed_rng_a);
+        let w_sparse = generate_layer(cout, cin, 6, 0.9, 0.45, seed_rng_b);
+        let l = ConvLayer { name: "p".into(), cout, cin, fmap: 8 };
+        let a = PatternMapping.map_layer(0, &l, &w_dense, &geom()).used_cells;
+        let b = PatternMapping.map_layer(0, &l, &w_sparse, &geom()).used_cells;
+        assert!(b <= a, "sparser layer used more cells: {b} > {a}");
+    });
+}
