@@ -1,14 +1,17 @@
-//! Bench P2 (§Perf): cycle/energy simulator inner-loop throughput.
+//! Bench P2 (§Perf): cycle/energy simulator throughput — the
+//! trace-aggregated engine vs the per-position reference oracle on the
+//! VGG16/cifar10 layer sweep.
 //!
-//! Measures simulated OU-operations per second over the VGG16/cifar10
-//! network — the DESIGN.md §8 target is ≥ 10 M OU-ops/s.
+//! Targets: ≥ 10 M simulated OU-ops/s (DESIGN.md §8) and ≥ 5× the
+//! reference engine's throughput (ISSUE-1), with exact count parity.
 //!
 //! Run: `cargo bench --bench sim_hotpath`
 
 use rram_pattern_accel::config::{HardwareConfig, SimConfig};
 use rram_pattern_accel::mapping::{naive::NaiveMapping, pattern::PatternMapping, MappingScheme};
 use rram_pattern_accel::pruning::synthetic::CIFAR10;
-use rram_pattern_accel::sim;
+use rram_pattern_accel::report;
+use rram_pattern_accel::sim::{self, SimEngine};
 use rram_pattern_accel::util::bench::{bb, bench, BenchConfig};
 use rram_pattern_accel::util::threadpool;
 use rram_pattern_accel::xbar::CellGeometry;
@@ -26,8 +29,26 @@ fn main() {
     let ours = PatternMapping.map_network(&nw, &geom, threads);
     let sim_cfg = SimConfig::default();
 
-    // how many OU ops does one full simulation visit?
+    // Parity first: the engines must agree on the whole sweep before
+    // their speeds mean anything.
     let probe = sim::simulate_network(&ours, &spec, &hw, &sim_cfg, threads);
+    let refr = sim::simulate_network_with(
+        SimEngine::Reference,
+        &ours,
+        &spec,
+        &hw,
+        &sim_cfg,
+        threads,
+    );
+    assert_eq!(probe.total_cycles(), refr.total_cycles(), "cycle parity");
+    assert_eq!(probe.total_ou_ops(), refr.total_ou_ops(), "ou-op parity");
+    let e_rel = (probe.total_energy().total_pj() - refr.total_energy().total_pj())
+        .abs()
+        / refr.total_energy().total_pj().max(1e-12);
+    assert!(e_rel < 1e-9, "energy parity {e_rel}");
+    println!("engine parity on VGG16/cifar10: OK (energy rel err {e_rel:.1e})\n");
+
+    // how many OU ops does one full simulation visit?
     let ou_ops_visited: f64 = probe
         .layers
         .iter()
@@ -37,6 +58,23 @@ fn main() {
             (l.ou_ops + l.skipped_ou_ops) * samples / positions
         })
         .sum();
+
+    // Engine head-to-head (single thread: pure engine throughput).
+    let r_ref = bench("simulate pattern (reference, 1 thread)", &cfg, || {
+        bb(sim::simulate_network_with(
+            SimEngine::Reference,
+            &ours,
+            &spec,
+            &hw,
+            &sim_cfg,
+            1,
+        )
+        .total_cycles());
+    });
+    let r_agg = bench("simulate pattern (aggregated, 1 thread)", &cfg, || {
+        bb(sim::simulate_network(&ours, &spec, &hw, &sim_cfg, 1).total_cycles());
+    });
+    println!("{}\n", report::engine_speedup_line(r_ref.mean_ns, r_agg.mean_ns));
 
     for (name, mapped) in [("pattern", &ours), ("naive", &naive)] {
         let r1 = bench(&format!("simulate {name} (1 thread)"), &cfg, || {

@@ -58,6 +58,21 @@ fn main() {
     let spec = nw.spec.clone();
     let naive = NaiveMapping.map_network(&nw, &geom, threads);
     let ours = PatternMapping.map_network(&nw, &geom, threads);
+
+    // Engine parity spot check (ISSUE-1): the trace-aggregated engine
+    // must reproduce the per-position reference on a full paper sweep.
+    let agg = sim::simulate_network(&ours, &spec, &hw, &sim_cfg, threads);
+    let refr = sim::simulate_network_with(
+        sim::SimEngine::Reference,
+        &ours,
+        &spec,
+        &hw,
+        &sim_cfg,
+        threads,
+    );
+    assert_eq!(agg.total_cycles(), refr.total_cycles(), "engine parity");
+    println!("engine parity (aggregated vs reference, cifar10): OK\n");
+
     let mut ablation = Vec::new();
     for blob in [0.0, 0.15, 0.3, 0.45, 0.6, 0.75, 0.9] {
         let cfg = SimConfig {

@@ -72,7 +72,7 @@ fn main() {
                         &td.test_x.data[idx * img_len..(idx + 1) * img_len];
                     let rx = coord.submit(img.to_vec());
                     let reply = rx.recv().expect("reply");
-                    if smallcnn::argmax(&reply.logits) as i32 == td.test_y[idx] {
+                    if smallcnn::argmax(reply.logits()) as i32 == td.test_y[idx] {
                         ok += 1;
                     }
                 }

@@ -67,12 +67,24 @@ struct Request {
     reply: Sender<Reply>,
 }
 
-/// Reply with logits + timing.
+/// Reply with the batch outcome + timing. `result` carries the logits
+/// on success or the backend's error on failure — a failed batch is
+/// reported to every waiting requester instead of silently dropping
+/// their reply channels.
 #[derive(Debug, Clone)]
 pub struct Reply {
-    pub logits: Vec<f32>,
+    pub result: Result<Vec<f32>, String>,
     pub queue_us: u64,
     pub batch_fill: usize,
+}
+
+impl Reply {
+    /// Logits of a successful reply. Panics on a failed batch — a
+    /// convenience for demos and tests; production callers match on
+    /// [`Reply::result`].
+    pub fn logits(&self) -> &[f32] {
+        self.result.as_ref().expect("inference batch failed")
+    }
 }
 
 /// Aggregate serving metrics.
@@ -81,6 +93,9 @@ pub struct Metrics {
     pub requests: AtomicU64,
     pub batches: AtomicU64,
     pub padded_slots: AtomicU64,
+    /// Requests whose batch failed in the backend (each received the
+    /// error through its [`Reply::result`]).
+    pub failed_requests: AtomicU64,
     latencies_us: Mutex<Summary>,
 }
 
@@ -201,15 +216,26 @@ fn batch_loop<B: InferBackend>(
                         .unwrap()
                         .push(queue_us as f64);
                     let _ = r.reply.send(Reply {
-                        logits,
+                        result: Ok(logits),
                         queue_us,
                         batch_fill: fill,
                     });
                 }
             }
             Err(e) => {
-                // Drop replies; requesters observe closed channels.
+                // Deliver the cause to every waiting requester — a
+                // dropped sender would only show them an opaque closed
+                // channel.
                 eprintln!("[coordinator] batch failed: {e}");
+                for r in pending.into_iter() {
+                    let queue_us = r.submitted.elapsed().as_micros() as u64;
+                    metrics.failed_requests.fetch_add(1, Ordering::Relaxed);
+                    let _ = r.reply.send(Reply {
+                        result: Err(e.clone()),
+                        queue_us,
+                        batch_fill: fill,
+                    });
+                }
             }
         }
     }
@@ -264,7 +290,7 @@ mod tests {
         let c = Coordinator::start(move || mock(4, calls2), Duration::from_millis(5));
         let rx = c.submit(vec![1.0, 2.0, 3.0, 4.0]);
         let reply = rx.recv().unwrap();
-        assert_eq!(reply.logits, vec![10.0, 11.0, 12.0]);
+        assert_eq!(reply.logits(), &[10.0, 11.0, 12.0][..]);
         assert_eq!(reply.batch_fill, 1);
         c.shutdown();
         assert_eq!(calls.load(Ordering::Relaxed), 1);
@@ -280,7 +306,7 @@ mod tests {
             .collect();
         let replies: Vec<Reply> = rxs.iter().map(|r| r.recv().unwrap()).collect();
         for (i, rep) in replies.iter().enumerate() {
-            assert_eq!(rep.logits[0], 4.0 * i as f32);
+            assert_eq!(rep.logits()[0], 4.0 * i as f32);
             assert_eq!(rep.batch_fill, 4);
         }
         c.shutdown();
@@ -299,6 +325,41 @@ mod tests {
         c.shutdown();
         let m = calls.load(Ordering::Relaxed);
         assert_eq!(m, 1);
+    }
+
+    /// Backend that always fails; its error must reach every requester.
+    struct FailingBackend;
+
+    impl InferBackend for FailingBackend {
+        fn input_len(&self) -> usize {
+            2
+        }
+        fn output_len(&self) -> usize {
+            1
+        }
+        fn batch_size(&self) -> usize {
+            2
+        }
+        fn run_batch(&self, _batch: &[f32]) -> Result<Vec<f32>, String> {
+            Err("backend exploded".to_string())
+        }
+    }
+
+    #[test]
+    fn failed_batch_reports_error_to_requesters() {
+        let c = Coordinator::start(|| FailingBackend, Duration::from_millis(5));
+        let rx1 = c.submit(vec![1.0, 2.0]);
+        let rx2 = c.submit(vec![3.0, 4.0]);
+        for rx in [rx1, rx2] {
+            let reply = rx
+                .recv_timeout(Duration::from_secs(5))
+                .expect("reply must be delivered, not dropped");
+            let err = reply.result.expect_err("must carry the backend error");
+            assert!(err.contains("backend exploded"), "{err}");
+        }
+        assert_eq!(c.metrics.failed_requests.load(Ordering::Relaxed), 2);
+        assert_eq!(c.metrics.requests.load(Ordering::Relaxed), 0);
+        c.shutdown();
     }
 
     #[test]
@@ -330,7 +391,7 @@ mod tests {
             handles.push(std::thread::spawn(move || {
                 let rx = c2.submit(vec![t as f32; 4]);
                 let rep = rx.recv().unwrap();
-                assert_eq!(rep.logits[0], 4.0 * t as f32);
+                assert_eq!(rep.logits()[0], 4.0 * t as f32);
             }));
         }
         for h in handles {

@@ -212,7 +212,7 @@ fn cmd_serve(rest: Vec<String>) -> i32 {
     let mut correct = 0usize;
     for (i, rx) in rxs.into_iter().enumerate() {
         let reply = rx.recv().expect("reply");
-        let pred = sim::smallcnn::argmax(&reply.logits);
+        let pred = sim::smallcnn::argmax(reply.logits());
         if pred as i32 == td.test_y[i % avail] {
             correct += 1;
         }

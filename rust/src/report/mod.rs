@@ -155,6 +155,17 @@ impl Fig8Row {
     }
 }
 
+/// §Perf engine line: per-position reference vs trace-aggregated
+/// simulator engine (used by `benches/sim_hotpath.rs`).
+pub fn engine_speedup_line(reference_ns: f64, aggregated_ns: f64) -> String {
+    let ratio = reference_ns / aggregated_ns.max(1e-9);
+    format!(
+        "  -> aggregated engine {:.1}x reference throughput (target >= 5x: {})",
+        ratio,
+        if ratio >= 5.0 { "MET" } else { "MISSED" }
+    )
+}
+
 /// §V-C speedup row.
 pub fn speedup_line(dataset: &str, cmp: &Comparison, paper: f64) -> String {
     format!(
@@ -204,6 +215,16 @@ mod tests {
         let j = r.to_json();
         assert_eq!(j.get("naive_crossbars").as_usize(), Some(467));
         assert!(r.line().contains("4.67x"));
+    }
+
+    #[test]
+    fn engine_line_formats_ratio_and_verdict() {
+        let s = engine_speedup_line(1000.0, 100.0);
+        assert!(s.contains("10.0x"), "{s}");
+        assert!(s.contains("MET"), "{s}");
+        let s = engine_speedup_line(300.0, 100.0);
+        assert!(s.contains("3.0x"), "{s}");
+        assert!(s.contains("MISSED"), "{s}");
     }
 
     #[test]

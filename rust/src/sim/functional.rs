@@ -36,6 +36,22 @@ pub fn conv_forward(
 ) -> Tensor {
     let (h, w) = (x.shape[2], x.shape[3]);
     let rows = im2col(x, img);
+    conv_forward_rows(layer, &rows, h, w, scales, hw, quantized)
+}
+
+/// As [`conv_forward`] but over pre-extracted im2col rows, so callers
+/// that also need the rows (e.g. the exact-mode trace in
+/// `SmallCnn::simulate_exact`) extract them once.
+pub fn conv_forward_rows(
+    layer: &MappedLayer,
+    rows: &[Vec<f32>],
+    h: usize,
+    w: usize,
+    scales: LayerScales,
+    hw: &HardwareConfig,
+    quantized: bool,
+) -> Tensor {
+    debug_assert_eq!(rows.len(), h * w);
     let mut out = Tensor::zeros(&[layer.cout, h, w]);
 
     for (pos, row) in rows.iter().enumerate() {
@@ -293,6 +309,34 @@ mod tests {
                 assert!((x1 - x2).abs() < 1e-4);
             }
         });
+    }
+
+    /// The exact-mode trace (im2col rows → `LayerTrace::from_rows`)
+    /// skips exactly the blocks the Input Preprocessing Unit declares
+    /// all-zero — the analytic engine and the functional simulator
+    /// agree on what executes.
+    #[test]
+    fn exact_trace_matches_ipu_zero_detection() {
+        let mut rng = Rng::seed_from(5);
+        let w = generate_layer(10, 4, 5, 0.8, 0.3, &mut rng);
+        let l = ConvLayer { name: "t".into(), cout: 10, cin: 4, fmap: 6 };
+        let x = rand_input(&mut rng, 4, 6);
+        let hw = HardwareConfig::smallcnn_functional();
+        let geom = CellGeometry::from_hw(&hw);
+        let ml = PatternMapping.map_layer(0, &l, &w, &geom);
+        let rows = im2col(&x, 0);
+        let trace = crate::sim::workload::LayerTrace::from_rows(&rows, l.cin);
+        assert_eq!(trace.n_positions, rows.len());
+        for (pos, row) in rows.iter().enumerate() {
+            let ipp = InputPreprocessor::new(row);
+            for b in &ml.blocks {
+                assert_eq!(
+                    trace.block_skippable(pos, b.cin, b.pattern),
+                    ipp.all_zero(b),
+                    "pos {pos}"
+                );
+            }
+        }
     }
 
     #[test]

@@ -4,9 +4,13 @@
 //!
 //! - **Cycles** — the chip is ADC-throughput-limited: every executed OU
 //!   activation costs one cycle, plus `block_switch_cycles` control
-//!   overhead whenever the scheduler crosses a pattern-block boundary
-//!   (index decode + Input-Preprocessing reconfiguration; pattern scheme
-//!   only — naive's dense walk needs no index decode).
+//!   overhead whenever the scheduler crosses a pattern-block boundary —
+//!   i.e. only when the pattern block actually *changes* between two
+//!   consecutively executed blocks of a position's schedule (index
+//!   decode + Input-Preprocessing reconfiguration; pattern scheme only —
+//!   naive's dense walk needs no index decode). The first executed
+//!   block of a position is not a crossing, so a position executing
+//!   `B` blocks is charged `B - 1` switches.
 //! - **Energy** — per executed OU, component-wise partial-activation
 //!   energy from [`crate::xbar::energy::ou_op_energy`].
 //! - **Skipping** — the pattern scheme never *stores* all-zero-pattern
@@ -17,6 +21,16 @@
 //!
 //! Layers are simulated at `sample_positions` sampled output positions
 //! and scaled to the full feature map (exact mode: `None`).
+//!
+//! Two engines compute this model. [`simulate_layer_reference`] is the
+//! per-position oracle: it walks every (position × block) pair, which
+//! is readable but O(positions × blocks). [`simulate_layer`] is the
+//! production trace-aggregated engine: one O(positions × cin) histogram
+//! pass over the trace ([`workload::TraceAggregate`]) and then each
+//! block's executed/skipped OU counts, cycles and energy in closed form
+//! from its precomputed `BlockCost` — no per-position loop over blocks
+//! at all. `tests/prop_invariants.rs` pins the two engines to identical
+//! counts and 1e-9-relative energy.
 
 pub mod functional;
 pub mod smallcnn;
@@ -25,10 +39,12 @@ pub mod workload;
 use crate::config::{HardwareConfig, SimConfig};
 use crate::mapping::{MappedLayer, MappedNetwork};
 use crate::nn::NetworkSpec;
+use crate::pruning::Pattern;
 use crate::util::rng::Rng;
 use crate::util::threadpool;
-use crate::xbar::energy::{ou_op_energy, EnergyLedger};
-use workload::LayerTrace;
+use crate::xbar::energy::{ou_op_energy_batch, EnergyLedger};
+use crate::xbar::CellGeometry;
+use workload::{LayerTrace, TraceAggregate};
 
 /// Per-layer simulation result.
 #[derive(Debug, Clone, Default)]
@@ -81,7 +97,7 @@ struct BlockCost {
     ou_ops: usize,
     energy: EnergyLedger,
     cin: usize,
-    pattern: crate::pruning::Pattern,
+    pattern: Pattern,
 }
 
 fn block_costs(layer: &MappedLayer, hw: &HardwareConfig) -> Vec<BlockCost> {
@@ -90,32 +106,134 @@ fn block_costs(layer: &MappedLayer, hw: &HardwareConfig) -> Vec<BlockCost> {
         .blocks
         .iter()
         .map(|b| {
-            let h = b.rows();
-            let w_cells = geom.weight_cols(b.kernels());
-            let mut ou_ops = 0usize;
-            let mut energy = EnergyLedger::default();
-            let mut row_off = 0;
-            while row_off < h {
-                let rows = (h - row_off).min(geom.ou_rows);
-                let mut col_off = 0;
-                while col_off < w_cells {
-                    let cols = (w_cells - col_off).min(geom.ou_cols);
-                    ou_ops += 1;
-                    energy.add(&ou_op_energy(hw, rows, cols));
-                    col_off += cols;
-                }
-                row_off += rows;
-            }
+            let (ou_ops, energy) =
+                tile_cost(geom, hw, b.rows(), geom.weight_cols(b.kernels()));
             BlockCost { ou_ops, energy, cin: b.cin, pattern: b.pattern }
         })
         .collect()
 }
 
-/// Simulate one mapped layer against an activation trace.
+/// OU count and energy of one dense `h × w_cells` block in closed form:
+/// the OU tiling has at most four distinct tile shapes (interior, right
+/// edge, bottom edge, corner), each costed once through
+/// [`ou_op_energy_batch`] instead of per-tile ledger adds.
+fn tile_cost(
+    geom: &CellGeometry,
+    hw: &HardwareConfig,
+    h: usize,
+    w_cells: usize,
+) -> (usize, EnergyLedger) {
+    let full_r = h / geom.ou_rows;
+    let rem_r = h % geom.ou_rows;
+    let full_c = w_cells / geom.ou_cols;
+    let rem_c = w_cells % geom.ou_cols;
+    let shapes = [
+        (geom.ou_rows, geom.ou_cols, full_r * full_c),
+        (geom.ou_rows, rem_c, full_r),
+        (rem_r, geom.ou_cols, full_c),
+        (rem_r, rem_c, 1),
+    ];
+    let mut ou_ops = 0usize;
+    let mut energy = EnergyLedger::default();
+    for (rows, cols, n) in shapes {
+        if rows == 0 || cols == 0 || n == 0 {
+            continue;
+        }
+        ou_ops += n;
+        energy.add(&ou_op_energy_batch(hw, rows, cols, n as f64));
+    }
+    (ou_ops, energy)
+}
+
+/// Simulate one mapped layer against an activation trace with the
+/// trace-aggregated engine.
 ///
 /// `skip_zero_inputs` enables the Input Preprocessing Unit's all-zero
 /// detection; `block_switch_cycles` models the §IV-C index-decode walk.
 pub fn simulate_layer(
+    layer: &MappedLayer,
+    spec_positions: usize,
+    trace: &LayerTrace,
+    hw: &HardwareConfig,
+    skip_zero_inputs: bool,
+    block_switch_cycles: f64,
+) -> LayerSimResult {
+    let agg = layer_aggregate(layer, trace);
+    simulate_layer_aggregated(
+        layer,
+        spec_positions,
+        &agg,
+        hw,
+        skip_zero_inputs,
+        block_switch_cycles,
+    )
+}
+
+/// Build the [`TraceAggregate`] for exactly this layer's block keys.
+/// Reusable across [`simulate_layer_aggregated`] calls on the same
+/// trace (e.g. sweeping `block_switch_cycles` or toggling skipping).
+pub fn layer_aggregate(layer: &MappedLayer, trace: &LayerTrace) -> TraceAggregate {
+    let keys: Vec<(usize, Pattern)> =
+        layer.blocks.iter().map(|b| (b.cin, b.pattern)).collect();
+    trace.aggregate(&keys)
+}
+
+/// Closed-form simulation of one layer from a prebuilt aggregate: each
+/// block contributes `executed × BlockCost` with no per-position work.
+pub fn simulate_layer_aggregated(
+    layer: &MappedLayer,
+    spec_positions: usize,
+    agg: &TraceAggregate,
+    hw: &HardwareConfig,
+    skip_zero_inputs: bool,
+    block_switch_cycles: f64,
+) -> LayerSimResult {
+    let costs = block_costs(layer, hw);
+    let n_pos = agg.n_positions as u64;
+    let mut ou_ops = 0u64;
+    let mut skipped = 0u64;
+    let mut executed_blocks = 0u64;
+    let mut energy = EnergyLedger::default();
+    for c in &costs {
+        let sk = if skip_zero_inputs {
+            agg.skippable_positions(c.cin, c.pattern)
+        } else {
+            0
+        };
+        let exec = n_pos - sk;
+        ou_ops += c.ou_ops as u64 * exec;
+        skipped += c.ou_ops as u64 * sk;
+        executed_blocks += exec;
+        energy.add_scaled(&c.energy, exec as f64);
+    }
+    // Block switches: within a position's schedule every executed block
+    // after the first is a boundary crossing, so the total is the
+    // executed-block count minus the number of positions that execute
+    // anything at all.
+    let empty_positions = if costs.is_empty() {
+        n_pos
+    } else if skip_zero_inputs {
+        agg.fully_skippable_positions()
+    } else {
+        0
+    };
+    let switches = executed_blocks - (n_pos - empty_positions);
+    finish_result(
+        layer,
+        spec_positions,
+        agg.n_positions,
+        ou_ops,
+        skipped,
+        switches,
+        energy,
+        block_switch_cycles,
+    )
+}
+
+/// Per-position oracle engine: the original O(positions × blocks) walk,
+/// kept as the semantic reference the aggregated engine is pinned
+/// against (and as the baseline in `benches/sim_hotpath.rs`).
+pub fn simulate_layer_reference(
     layer: &MappedLayer,
     spec_positions: usize,
     trace: &LayerTrace,
@@ -130,19 +248,46 @@ pub fn simulate_layer(
     let mut energy = EnergyLedger::default();
 
     for pos in 0..trace.n_positions {
+        let mut executed_here = 0u64;
         for c in &costs {
             if skip_zero_inputs && trace.block_skippable(pos, c.cin, c.pattern) {
                 skipped += c.ou_ops as u64;
                 continue;
             }
             ou_ops += c.ou_ops as u64;
-            switches += 1;
+            executed_here += 1;
             energy.add(&c.energy);
         }
+        // a switch only where the block actually changes: B executed
+        // blocks cross B - 1 boundaries.
+        switches += executed_here.saturating_sub(1);
     }
+    finish_result(
+        layer,
+        spec_positions,
+        trace.n_positions,
+        ou_ops,
+        skipped,
+        switches,
+        energy,
+        block_switch_cycles,
+    )
+}
 
-    // Scale from sampled positions to the full feature map.
-    let scale = spec_positions as f64 / trace.n_positions.max(1) as f64;
+/// Scale sampled counts to the full feature map — shared by both
+/// engines so equal integer counts give bit-identical results.
+#[allow(clippy::too_many_arguments)]
+fn finish_result(
+    layer: &MappedLayer,
+    spec_positions: usize,
+    trace_positions: usize,
+    ou_ops: u64,
+    skipped: u64,
+    switches: u64,
+    energy: EnergyLedger,
+    block_switch_cycles: f64,
+) -> LayerSimResult {
+    let scale = spec_positions as f64 / trace_positions.max(1) as f64;
     let ou_ops = ou_ops as f64 * scale;
     let skipped = skipped as f64 * scale;
     let cycles = ou_ops + switches as f64 * scale * block_switch_cycles;
@@ -156,11 +301,34 @@ pub fn simulate_layer(
     }
 }
 
+/// Which `simulate_layer` implementation a network simulation uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SimEngine {
+    /// Trace-aggregated closed-form engine (production default).
+    Aggregated,
+    /// Per-position oracle loop (parity tests and perf baseline).
+    Reference,
+}
+
 /// Simulate a whole mapped network with synthetic traces (layers in
 /// parallel). `zero_detection` only applies to schemes with an Input
 /// Preprocessing Unit (pattern / ou_sparse); the naive Fig. 1 baseline
 /// runs with it off regardless.
 pub fn simulate_network(
+    mapped: &MappedNetwork,
+    spec: &NetworkSpec,
+    hw: &HardwareConfig,
+    sim: &SimConfig,
+    threads: usize,
+) -> NetworkSimResult {
+    simulate_network_with(SimEngine::Aggregated, mapped, spec, hw, sim, threads)
+}
+
+/// As [`simulate_network`] but with an explicit engine choice; both
+/// engines see identical per-layer traces (seeded only from
+/// `(sim.seed, layer index)`) so their results are directly comparable.
+pub fn simulate_network_with(
+    engine: SimEngine,
     mapped: &MappedNetwork,
     spec: &NetworkSpec,
     hw: &HardwareConfig,
@@ -181,10 +349,23 @@ pub fn simulate_network(
             .map(|s| s.min(positions))
             .unwrap_or(positions);
         // Per-layer deterministic stream; the SAME trace must be used
-        // for every scheme, so seed only from (sim.seed, layer index).
+        // for every scheme (and every engine), so seed only from
+        // (sim.seed, layer index).
         let mut rng = Rng::seed_from(sim.seed ^ ((*li as u64 + 1) * 0x9E37));
         let trace = LayerTrace::synthetic(layer.cin, n_samples, sim, &mut rng);
-        simulate_layer(ml, positions, &trace, hw, skip, switch_cycles)
+        match engine {
+            SimEngine::Aggregated => {
+                simulate_layer(ml, positions, &trace, hw, skip, switch_cycles)
+            }
+            SimEngine::Reference => simulate_layer_reference(
+                ml,
+                positions,
+                &trace,
+                hw,
+                skip,
+                switch_cycles,
+            ),
+        }
     });
 
     NetworkSimResult {
@@ -222,7 +403,7 @@ mod tests {
     use super::*;
     use crate::mapping::naive::NaiveMapping;
     use crate::mapping::pattern::PatternMapping;
-    use crate::mapping::MappingScheme;
+    use crate::mapping::{MappingScheme, PatternBlock, Placement};
     use crate::nn::ConvLayer;
     use crate::pruning::synthetic::generate_layer;
     use crate::xbar::CellGeometry;
@@ -278,9 +459,110 @@ mod tests {
         let trace = LayerTrace::dense(l.cin, 4);
         let r0 = simulate_layer(&ml, l.positions(), &trace, &hw, false, 0.0);
         let r5 = simulate_layer(&ml, l.positions(), &trace, &hw, false, 5.0);
+        // Documented semantics: a switch is charged only when the
+        // pattern block actually changes between consecutive executed
+        // blocks, so a position executing B blocks crosses B - 1
+        // boundaries — not B.
         let blocks_per_pos = ml.blocks.len() as f64;
-        let want = r0.cycles + 5.0 * blocks_per_pos * l.positions() as f64;
+        assert!(blocks_per_pos > 1.0, "need a multi-block layer");
+        let want = r0.cycles + 5.0 * (blocks_per_pos - 1.0) * l.positions() as f64;
         assert!((r5.cycles - want).abs() / want < 1e-9);
+        // the per-position oracle agrees exactly
+        let rr = simulate_layer_reference(&ml, l.positions(), &trace, &hw, false, 5.0);
+        assert_eq!(r5.cycles, rr.cycles);
+    }
+
+    #[test]
+    fn single_block_layer_never_switches() {
+        // One block means the scheduler never changes blocks, so switch
+        // cycles must not be charged at all.
+        let hw = HardwareConfig::default();
+        let geom = CellGeometry::from_hw(&hw);
+        let b = PatternBlock {
+            cin: 0,
+            pattern: Pattern(0b111),
+            out_channels: vec![0, 1],
+            weights: vec![1.0; 6],
+        };
+        let ml = MappedLayer {
+            layer_idx: 0,
+            cout: 2,
+            cin: 1,
+            geom,
+            blocks: vec![b],
+            placements: vec![Placement { xbar: 0, row: 0, col: 0, rows: 3, cols: 8 }],
+            n_crossbars: 1,
+            used_cells: 24,
+            zero_kernels: 0,
+        };
+        let trace = LayerTrace::dense(1, 8);
+        let r = simulate_layer(&ml, 8, &trace, &hw, false, 5.0);
+        assert_eq!(r.cycles, r.ou_ops);
+        let rr = simulate_layer_reference(&ml, 8, &trace, &hw, false, 5.0);
+        assert_eq!(r.cycles, rr.cycles);
+    }
+
+    #[test]
+    fn aggregated_engine_matches_reference() {
+        let (l, w, geom, hw) = setup();
+        let ml = PatternMapping.map_layer(0, &l, &w, &geom);
+        let sim = SimConfig {
+            zero_blob_ratio: 0.35,
+            dead_channel_ratio: 0.1,
+            ..Default::default()
+        };
+        let mut rng = Rng::seed_from(9);
+        let trace = LayerTrace::synthetic(l.cin, 48, &sim, &mut rng);
+        let a = simulate_layer(&ml, l.positions(), &trace, &hw, true, 2.0);
+        let r = simulate_layer_reference(&ml, l.positions(), &trace, &hw, true, 2.0);
+        assert_eq!(a.ou_ops, r.ou_ops);
+        assert_eq!(a.skipped_ou_ops, r.skipped_ou_ops);
+        assert_eq!(a.cycles, r.cycles);
+        let rel = (a.energy.total_pj() - r.energy.total_pj()).abs()
+            / r.energy.total_pj().max(1e-12);
+        assert!(rel < 1e-9, "energy rel err {rel}");
+    }
+
+    #[test]
+    fn prebuilt_aggregate_matches_inline_path() {
+        let (l, w, geom, hw) = setup();
+        let ml = PatternMapping.map_layer(0, &l, &w, &geom);
+        let sim = SimConfig::default();
+        let mut rng = Rng::seed_from(21);
+        let trace = LayerTrace::synthetic(l.cin, 32, &sim, &mut rng);
+        let agg = layer_aggregate(&ml, &trace);
+        let a = simulate_layer_aggregated(&ml, l.positions(), &agg, &hw, true, 2.0);
+        let b = simulate_layer(&ml, l.positions(), &trace, &hw, true, 2.0);
+        assert_eq!(a.ou_ops, b.ou_ops);
+        assert_eq!(a.cycles, b.cycles);
+        assert_eq!(a.energy, b.energy);
+    }
+
+    #[test]
+    fn network_engines_agree() {
+        let (l, w, geom, hw) = setup();
+        let spec = NetworkSpec { name: "t".into(), layers: vec![l.clone()] };
+        let nw = crate::pruning::NetworkWeights::new(spec.clone(), vec![w]);
+        let mapped = PatternMapping.map_network(&nw, &geom, 1);
+        let sim = SimConfig::default();
+        let a = simulate_network_with(
+            SimEngine::Aggregated,
+            &mapped,
+            &spec,
+            &hw,
+            &sim,
+            1,
+        );
+        let r = simulate_network_with(
+            SimEngine::Reference,
+            &mapped,
+            &spec,
+            &hw,
+            &sim,
+            2,
+        );
+        assert_eq!(a.total_cycles(), r.total_cycles());
+        assert_eq!(a.total_ou_ops(), r.total_ou_ops());
     }
 
     #[test]

@@ -9,11 +9,15 @@
 use std::collections::BTreeMap;
 use std::path::Path;
 
-use super::functional::{conv_forward, relu_bias_pool, LayerScales};
-use crate::config::HardwareConfig;
+use super::functional::{
+    conv_forward, conv_forward_rows, relu_bias_pool, LayerScales,
+};
+use super::workload::LayerTrace;
+use super::{layer_aggregate, simulate_layer_aggregated, LayerSimResult};
+use crate::config::{HardwareConfig, SimConfig};
 use crate::mapping::{MappedNetwork, MappingScheme};
 use crate::nn::tensor_io::{load_tensors, AnyTensor};
-use crate::nn::{NetworkSpec, Tensor};
+use crate::nn::{im2col, NetworkSpec, Tensor};
 use crate::pruning::NetworkWeights;
 use crate::util::json::Json;
 use crate::xbar::CellGeometry;
@@ -151,6 +155,57 @@ impl SmallCnn {
             }
         }
         logits
+    }
+
+    /// Exact-mode cycle/energy simulation of one image through every
+    /// mapped conv layer: activations come from the functional float
+    /// forward, each layer's real trace is aggregated once
+    /// ([`layer_aggregate`]) and costed in closed form — the same
+    /// trace-aggregated engine as the analytic VGG16 sweeps, with no
+    /// per-position accounting loop. Like [`crate::sim::simulate_network`],
+    /// zero-input skipping and block-switch cycles apply only to schemes
+    /// with an Input Preprocessing Unit (not the naive baseline), and
+    /// each layer's im2col rows are extracted once and shared between
+    /// the trace and the compute.
+    pub fn simulate_exact(
+        &self,
+        mapped: &MappedNetwork,
+        x: &Tensor,
+        hw: &HardwareConfig,
+        sim_cfg: &SimConfig,
+    ) -> Vec<LayerSimResult> {
+        assert_eq!(x.shape[0], 1, "simulate_exact takes a single image");
+        let has_ipu = mapped.scheme != "naive";
+        let skip = sim_cfg.zero_detection && has_ipu;
+        let switch_cycles = if has_ipu { sim_cfg.block_switch_cycles } else { 0.0 };
+        let mut cur = Tensor {
+            shape: vec![1, x.shape[1], x.shape[2], x.shape[3]],
+            data: x.data.clone(),
+        };
+        let mut results = Vec::with_capacity(mapped.layers.len());
+        for (li, ml) in mapped.layers.iter().enumerate() {
+            let (h, w) = (cur.shape[2], cur.shape[3]);
+            let rows = im2col(&cur, 0);
+            let trace = LayerTrace::from_rows(&rows, cur.shape[1]);
+            let agg = layer_aggregate(ml, &trace);
+            results.push(simulate_layer_aggregated(
+                ml,
+                trace.n_positions,
+                &agg,
+                hw,
+                skip,
+                switch_cycles,
+            ));
+            let conv =
+                conv_forward_rows(ml, &rows, h, w, self.scales[li], hw, false);
+            let staged =
+                relu_bias_pool(&conv, &self.biases[li], self.pool_after[li]);
+            cur = Tensor {
+                shape: vec![1, staged.shape[0], staged.shape[1], staged.shape[2]],
+                data: staged.data,
+            };
+        }
+        results
     }
 }
 

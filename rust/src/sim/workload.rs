@@ -6,6 +6,12 @@
 //! input channel), a 9-bit mask of which receptive-field positions are
 //! zero; a block is skippable when the mask covers all of its pattern's
 //! positions.
+//!
+//! [`TraceAggregate`] collapses a trace into the per-(channel, pattern)
+//! skippable-position histogram the trace-aggregated simulator engine
+//! consumes (`sim::simulate_layer_aggregated`), and [`TraceBuilder`] is
+//! the incremental feeder for exact-mode traces built position by
+//! position from real activations.
 
 use crate::config::SimConfig;
 use crate::pruning::Pattern;
@@ -65,20 +71,11 @@ impl LayerTrace {
     /// A trace from real feature-map data: `patches[pos][cin*9]` im2col
     /// rows (used by the SmallCNN exact simulation).
     pub fn from_rows(rows: &[Vec<f32>], cin: usize) -> LayerTrace {
-        let mut masks = Vec::with_capacity(rows.len() * cin);
+        let mut b = TraceBuilder::with_capacity(cin, rows.len());
         for row in rows {
-            debug_assert_eq!(row.len(), cin * 9);
-            for ch in 0..cin {
-                let mut m = 0u16;
-                for i in 0..9 {
-                    if row[ch * 9 + i] == 0.0 {
-                        m |= 1 << i;
-                    }
-                }
-                masks.push(m);
-            }
+            b.push_row(row);
         }
-        LayerTrace { n_positions: rows.len(), cin, masks }
+        b.finish()
     }
 
     /// A dense (no zeros) trace.
@@ -103,6 +100,175 @@ impl LayerTrace {
     pub fn full_zero_fraction(&self) -> f64 {
         let z = self.masks.iter().filter(|m| **m == 0x1FF).count();
         z as f64 / self.masks.len().max(1) as f64
+    }
+
+    /// Collapse this trace into the skippable-position histogram for a
+    /// layer's block keys, in O(positions × cin) bitmask work: one
+    /// mask→subset lookup table turns every (position, channel) visit
+    /// into a single probe plus a (usually empty) set-bit walk, instead
+    /// of a per-block subset test at every position.
+    pub fn aggregate(&self, keys: &[(usize, Pattern)]) -> TraceAggregate {
+        // Distinct nonzero patterns, plus the per-channel union of that
+        // channel's key patterns (`0` for channels without keys: they
+        // constrain nothing).
+        let mut patterns: Vec<Pattern> = Vec::new();
+        let mut has_zero_key = false;
+        let mut need = vec![0u16; self.cin];
+        for &(ch, p) in keys {
+            if p.is_zero() {
+                // A zero-pattern block is never skippable (§IV-A
+                // degenerate case), so it executes at every position.
+                has_zero_key = true;
+                continue;
+            }
+            if !patterns.contains(&p) {
+                patterns.push(p);
+            }
+            need[ch] |= p.0;
+        }
+
+        let np = patterns.len();
+        let mut skippable = vec![0u64; self.cin * np];
+        // ≤ 64 patterns per lookup-table pass; real layers have ≤ ~10.
+        for chunk_start in (0..np).step_by(64) {
+            let chunk = &patterns[chunk_start..np.min(chunk_start + 64)];
+            let mut table = [0u64; 512];
+            for (j, p) in chunk.iter().enumerate() {
+                for (m, bits) in table.iter_mut().enumerate() {
+                    if p.0 & !(m as u16) == 0 {
+                        *bits |= 1u64 << j;
+                    }
+                }
+            }
+            for pos in 0..self.n_positions {
+                let row = &self.masks[pos * self.cin..(pos + 1) * self.cin];
+                for (ch, &m) in row.iter().enumerate() {
+                    let mut bits = table[(m & 0x1FF) as usize];
+                    while bits != 0 {
+                        let j = bits.trailing_zeros() as usize;
+                        bits &= bits - 1;
+                        skippable[ch * np + chunk_start + j] += 1;
+                    }
+                }
+            }
+        }
+
+        // Fully skippable positions: every channel's needed union is
+        // covered at once (`p1 ⊆ m ∧ p2 ⊆ m ⟺ (p1|p2) ⊆ m`). With a
+        // zero-pattern key something always executes, so none qualify.
+        let mut fully = 0u64;
+        if !has_zero_key {
+            for pos in 0..self.n_positions {
+                let row = &self.masks[pos * self.cin..(pos + 1) * self.cin];
+                let covered = row
+                    .iter()
+                    .zip(need.iter())
+                    .all(|(&m, &nd)| nd & !m == 0);
+                if covered {
+                    fully += 1;
+                }
+            }
+        }
+
+        TraceAggregate {
+            n_positions: self.n_positions,
+            patterns,
+            skippable,
+            fully_skippable: fully,
+        }
+    }
+}
+
+/// Per-layer aggregate of a trace: for every (channel, pattern) block
+/// key, at how many positions the key is skippable, plus how many
+/// positions are *fully* skippable (every key covered at once — the
+/// only positions that execute nothing). This is the entire input the
+/// trace-aggregated engine needs: executed/skipped OU counts, cycles
+/// and energy all follow in closed form.
+#[derive(Debug, Clone)]
+pub struct TraceAggregate {
+    pub n_positions: usize,
+    /// Distinct nonzero key patterns, in first-seen order.
+    patterns: Vec<Pattern>,
+    /// `skippable[ch * patterns.len() + pi]` — positions where
+    /// `patterns[pi]` is covered by channel `ch`'s zero mask.
+    skippable: Vec<u64>,
+    fully_skippable: u64,
+}
+
+impl TraceAggregate {
+    /// Positions where a block keyed `(ch, pattern)` is skippable.
+    /// Zero patterns are never skippable.
+    pub fn skippable_positions(&self, ch: usize, pattern: Pattern) -> u64 {
+        if pattern.is_zero() {
+            return 0;
+        }
+        let pi = self
+            .patterns
+            .iter()
+            .position(|p| *p == pattern)
+            .expect("pattern not in the aggregate's key set");
+        self.skippable[ch * self.patterns.len() + pi]
+    }
+
+    /// Positions where every key is skippable simultaneously.
+    pub fn fully_skippable_positions(&self) -> u64 {
+        self.fully_skippable
+    }
+}
+
+/// Incremental trace construction: push one output position at a time
+/// (an im2col row or precomputed masks). Exact-mode traces over real
+/// activations are built through this as the rows are produced, so the
+/// feeder never needs a second copy of the feature map.
+#[derive(Debug, Clone)]
+pub struct TraceBuilder {
+    cin: usize,
+    masks: Vec<u16>,
+}
+
+impl TraceBuilder {
+    pub fn new(cin: usize) -> TraceBuilder {
+        TraceBuilder { cin, masks: Vec::new() }
+    }
+
+    pub fn with_capacity(cin: usize, n_positions: usize) -> TraceBuilder {
+        TraceBuilder { cin, masks: Vec::with_capacity(cin * n_positions) }
+    }
+
+    /// Append one position from a `cin * 9` im2col row (mask bit i set
+    /// ⟺ the input at kernel position i is exactly zero).
+    pub fn push_row(&mut self, row: &[f32]) {
+        debug_assert_eq!(row.len(), self.cin * 9);
+        for ch in 0..self.cin {
+            let mut m = 0u16;
+            for (i, v) in row[ch * 9..ch * 9 + 9].iter().enumerate() {
+                if *v == 0.0 {
+                    m |= 1 << i;
+                }
+            }
+            self.masks.push(m);
+        }
+    }
+
+    /// Append one position from precomputed per-channel zero masks.
+    pub fn push_masks(&mut self, masks: &[u16]) {
+        debug_assert_eq!(masks.len(), self.cin);
+        self.masks.extend_from_slice(masks);
+    }
+
+    pub fn n_positions(&self) -> usize {
+        if self.cin == 0 {
+            0
+        } else {
+            self.masks.len() / self.cin
+        }
+    }
+
+    pub fn finish(self) -> LayerTrace {
+        let n_positions =
+            if self.cin == 0 { 0 } else { self.masks.len() / self.cin };
+        LayerTrace { n_positions, cin: self.cin, masks: self.masks }
     }
 }
 
@@ -166,5 +332,91 @@ mod tests {
                 assert!(!t.block_skippable(pos, ch, Pattern(0b1)));
             }
         }
+    }
+
+    #[test]
+    fn aggregate_matches_bruteforce_counts() {
+        let cfg = SimConfig {
+            dead_channel_ratio: 0.2,
+            zero_blob_ratio: 0.3,
+            ..Default::default()
+        };
+        let mut rng = Rng::seed_from(9);
+        let t = LayerTrace::synthetic(6, 40, &cfg, &mut rng);
+        let keys = vec![
+            (0usize, Pattern(0b1)),
+            (0, Pattern(0b110)),
+            (3, Pattern(0b1)),
+            (5, Pattern(0x1FF)),
+        ];
+        let agg = t.aggregate(&keys);
+        assert_eq!(agg.n_positions, 40);
+        for &(ch, p) in &keys {
+            let brute = (0..t.n_positions)
+                .filter(|&pos| t.block_skippable(pos, ch, p))
+                .count() as u64;
+            assert_eq!(agg.skippable_positions(ch, p), brute, "key ({ch}, {p:?})");
+        }
+        let brute_full = (0..t.n_positions)
+            .filter(|&pos| {
+                keys.iter().all(|&(ch, p)| t.block_skippable(pos, ch, p))
+            })
+            .count() as u64;
+        assert_eq!(agg.fully_skippable_positions(), brute_full);
+    }
+
+    #[test]
+    fn aggregate_zero_pattern_key_never_skips() {
+        let t = LayerTrace {
+            n_positions: 3,
+            cin: 1,
+            masks: vec![0x1FF, 0x1FF, 0x1FF],
+        };
+        let agg = t.aggregate(&[(0, Pattern::ALL_ZERO), (0, Pattern(0b1))]);
+        assert_eq!(agg.skippable_positions(0, Pattern::ALL_ZERO), 0);
+        assert_eq!(agg.skippable_positions(0, Pattern(0b1)), 3);
+        // the zero-pattern block executes everywhere, so no position is
+        // fully skippable
+        assert_eq!(agg.fully_skippable_positions(), 0);
+    }
+
+    #[test]
+    fn aggregate_handles_many_pattern_chunks() {
+        // > 64 distinct patterns exercises the chunked lookup tables
+        let keys: Vec<(usize, Pattern)> =
+            (1u16..=100).map(|p| (0usize, Pattern(p))).collect();
+        let cfg = SimConfig {
+            dead_channel_ratio: 0.0,
+            zero_blob_ratio: 0.25,
+            ..Default::default()
+        };
+        let mut rng = Rng::seed_from(4);
+        let t = LayerTrace::synthetic(2, 32, &cfg, &mut rng);
+        let agg = t.aggregate(&keys);
+        for &(ch, p) in keys.iter().step_by(7) {
+            let brute = (0..t.n_positions)
+                .filter(|&pos| t.block_skippable(pos, ch, p))
+                .count() as u64;
+            assert_eq!(agg.skippable_positions(ch, p), brute, "{p:?}");
+        }
+    }
+
+    #[test]
+    fn builder_matches_from_rows() {
+        let rows = vec![
+            vec![
+                0.0, 1.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, // ch0
+                1.0, 1.0, 1.0, 1.0, 0.0, 1.0, 1.0, 1.0, 1.0, // ch1
+            ],
+            vec![0.0; 18],
+        ];
+        let direct = LayerTrace::from_rows(&rows, 2);
+        let mut b = TraceBuilder::new(2);
+        b.push_row(&rows[0]);
+        assert_eq!(b.n_positions(), 1);
+        b.push_masks(&[direct.mask(1, 0), direct.mask(1, 1)]);
+        let t = b.finish();
+        assert_eq!(t.n_positions, 2);
+        assert_eq!(t.masks, direct.masks);
     }
 }

@@ -25,6 +25,15 @@ impl EnergyLedger {
         self.rram_pj += other.rram_pj;
     }
 
+    /// `self += k × other` — closed-form accumulation of `k` identical
+    /// ledgers without `k` repeated [`EnergyLedger::add`] calls (the
+    /// trace-aggregated simulator's per-block energy step).
+    pub fn add_scaled(&mut self, other: &EnergyLedger, k: f64) {
+        self.adc_pj += other.adc_pj * k;
+        self.dac_pj += other.dac_pj * k;
+        self.rram_pj += other.rram_pj * k;
+    }
+
     pub fn scale(&self, k: f64) -> EnergyLedger {
         EnergyLedger {
             adc_pj: self.adc_pj * k,
@@ -65,6 +74,18 @@ pub fn ou_op_energy(
     }
 }
 
+/// Energy of `n` identical OU operations in one step — the batched
+/// accumulation the trace-aggregated simulator uses when it knows a
+/// tile shape repeats (`n` can be fractional after position scaling).
+pub fn ou_op_energy_batch(
+    hw: &HardwareConfig,
+    rows_active: usize,
+    cols_active: usize,
+    n: f64,
+) -> EnergyLedger {
+    ou_op_energy(hw, rows_active, cols_active).scale(n)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -91,6 +112,30 @@ mod tests {
         assert!((part.adc_pj - full.adc_pj * 0.5).abs() < 1e-12);
         assert!((part.dac_pj - full.dac_pj / 3.0).abs() < 1e-12);
         assert!((part.rram_pj - full.rram_pj * 12.0 / 72.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn batched_energy_matches_repeated_adds() {
+        let hw = HardwareConfig::default();
+        let single = ou_op_energy(&hw, 7, 5);
+        let mut acc = EnergyLedger::default();
+        for _ in 0..13 {
+            acc.add(&single);
+        }
+        let batch = ou_op_energy_batch(&hw, 7, 5, 13.0);
+        assert!((acc.adc_pj - batch.adc_pj).abs() < 1e-9);
+        assert!((acc.dac_pj - batch.dac_pj).abs() < 1e-9);
+        assert!((acc.rram_pj - batch.rram_pj).abs() < 1e-9);
+    }
+
+    #[test]
+    fn add_scaled_equals_scale_then_add() {
+        let mut a = EnergyLedger { adc_pj: 1.0, dac_pj: 2.0, rram_pj: 3.0 };
+        let mut a2 = a;
+        let b = EnergyLedger { adc_pj: 0.25, dac_pj: 0.5, rram_pj: 0.75 };
+        a.add_scaled(&b, 4.0);
+        a2.add(&b.scale(4.0));
+        assert_eq!(a, a2);
     }
 
     #[test]

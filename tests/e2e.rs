@@ -1,13 +1,17 @@
 //! End-to-end tests over the real AOT artifacts (require
 //! `make artifacts` to have run; they are skipped with a notice when
 //! artifacts/ is absent so `cargo test` works on a fresh checkout).
+//! The PJRT-backed tests additionally require the `xla-runtime`
+//! feature — the default build's stub engine cannot load artifacts.
 
 use std::path::{Path, PathBuf};
 
 use rram_pattern_accel::config::HardwareConfig;
+#[cfg(feature = "xla-runtime")]
 use rram_pattern_accel::coordinator::{Coordinator, PjrtBackend};
 use rram_pattern_accel::mapping::{pattern::PatternMapping, MappingScheme};
 use rram_pattern_accel::pruning::Pattern;
+#[cfg(feature = "xla-runtime")]
 use rram_pattern_accel::runtime::Engine;
 use rram_pattern_accel::sim::smallcnn::{argmax, image, SmallCnn, TestData};
 use rram_pattern_accel::xbar::CellGeometry;
@@ -65,6 +69,7 @@ fn python_candidates_match_rust_extraction() {
     }
 }
 
+#[cfg(feature = "xla-runtime")]
 #[test]
 fn pjrt_matches_python_golden() {
     let Some(dir) = artifacts() else { return };
@@ -109,6 +114,7 @@ fn mapped_simulator_accuracy_matches_python() {
     );
 }
 
+#[cfg(feature = "xla-runtime")]
 #[test]
 fn coordinator_serves_real_engine() {
     let Some(dir) = artifacts() else { return };
@@ -134,14 +140,34 @@ fn coordinator_serves_real_engine() {
     let mut correct = 0;
     for (i, rx) in rxs.into_iter().enumerate() {
         let reply = rx.recv_timeout(std::time::Duration::from_secs(60)).expect("reply");
-        assert_eq!(reply.logits.len(), 10);
-        if argmax(&reply.logits) as i32 == td.test_y[i] {
+        assert_eq!(reply.logits().len(), 10);
+        if argmax(reply.logits()) as i32 == td.test_y[i] {
             correct += 1;
         }
     }
     // the pruned model is highly accurate on its test set
     assert!(correct >= n * 6 / 10, "served accuracy too low: {correct}/{n}");
     coord.shutdown();
+}
+
+#[test]
+fn exact_simulation_over_real_image() {
+    // Trace-aggregated engine in exact mode: the real activations of
+    // one test image drive per-layer cycle/energy accounting.
+    let Some(dir) = artifacts() else { return };
+    let model = SmallCnn::load(&dir).expect("bundle");
+    let td = TestData::load(&dir).expect("test data");
+    let hw = HardwareConfig::smallcnn_functional();
+    let mapped = model.map(&PatternMapping, &hw);
+    let img = image(&td.test_x, 0);
+    let sim_cfg = rram_pattern_accel::config::SimConfig::default();
+    let results = model.simulate_exact(&mapped, &img, &hw, &sim_cfg);
+    assert_eq!(results.len(), mapped.layers.len());
+    for r in &results {
+        assert!(r.ou_ops > 0.0, "layer {} executes nothing", r.layer_idx);
+        assert!(r.energy.total_pj() > 0.0);
+        assert!(r.cycles >= r.ou_ops);
+    }
 }
 
 #[test]

@@ -10,7 +10,7 @@ use rram_pattern_accel::nn::{conv2d_ref, ConvLayer, Tensor};
 use rram_pattern_accel::pruning::synthetic::generate_layer;
 use rram_pattern_accel::sim::functional::{conv_forward, LayerScales};
 use rram_pattern_accel::sim::workload::LayerTrace;
-use rram_pattern_accel::sim::{simulate_layer};
+use rram_pattern_accel::sim::{simulate_layer, simulate_layer_reference};
 use rram_pattern_accel::util::prop;
 use rram_pattern_accel::util::rng::Rng;
 use rram_pattern_accel::xbar::CellGeometry;
@@ -105,6 +105,53 @@ fn prop_sim_conservation() {
         assert!((on.ou_ops + on.skipped_ou_ops - static_total).abs() < 1e-6);
         assert!(on.energy.total_pj() <= off.energy.total_pj() + 1e-9);
         assert!(on.cycles <= off.cycles + 1e-9);
+    });
+}
+
+/// Tentpole invariant (ISSUE-1): the trace-aggregated engine is
+/// bit-identical to the per-position reference on ou_ops / skipped /
+/// cycles and within 1e-9 relative on every energy component, across
+/// random layers, schemes, traces and sim configs.
+#[test]
+fn prop_aggregated_engine_matches_reference() {
+    prop::check("aggregated engine matches reference", 48, |rng| {
+        let hw = HardwareConfig::default();
+        let (l, w) = rand_layer(rng);
+        let ml = if rng.chance(0.5) {
+            PatternMapping.map_layer(0, &l, &w, &geom())
+        } else {
+            NaiveMapping.map_layer(0, &l, &w, &geom())
+        };
+        let sim_cfg = SimConfig {
+            zero_blob_ratio: rng.f64() * 0.9,
+            dead_channel_ratio: rng.f64() * 0.5,
+            ..Default::default()
+        };
+        let n_pos = rng.range(1, 48);
+        let trace = LayerTrace::synthetic(l.cin, n_pos, &sim_cfg, rng);
+        let skip = rng.chance(0.75);
+        let switch_cycles = rng.f64() * 8.0;
+        let a = simulate_layer(&ml, l.positions(), &trace, &hw, skip, switch_cycles);
+        let r = simulate_layer_reference(
+            &ml,
+            l.positions(),
+            &trace,
+            &hw,
+            skip,
+            switch_cycles,
+        );
+        assert_eq!(a.ou_ops, r.ou_ops, "ou_ops");
+        assert_eq!(a.skipped_ou_ops, r.skipped_ou_ops, "skipped");
+        assert_eq!(a.cycles, r.cycles, "cycles");
+        for (ae, re) in [
+            (a.energy.adc_pj, r.energy.adc_pj),
+            (a.energy.dac_pj, r.energy.dac_pj),
+            (a.energy.rram_pj, r.energy.rram_pj),
+            (a.energy.total_pj(), r.energy.total_pj()),
+        ] {
+            let rel = (ae - re).abs() / re.abs().max(1e-12);
+            assert!(rel < 1e-9, "energy component {ae} vs {re}");
+        }
     });
 }
 
