@@ -1,9 +1,11 @@
 //! Bench P2 (§Perf): cycle/energy simulator throughput — the
 //! trace-aggregated engine vs the per-position reference oracle on the
-//! VGG16/cifar10 layer sweep.
+//! VGG16/cifar10 layer sweep, plus the batched multi-image engine vs
+//! the looped per-image path (ISSUE-2).
 //!
-//! Targets: ≥ 10 M simulated OU-ops/s (DESIGN.md §8) and ≥ 5× the
-//! reference engine's throughput (ISSUE-1), with exact count parity.
+//! Targets: ≥ 10 M simulated OU-ops/s (DESIGN.md §8), ≥ 5× the
+//! reference engine's throughput (ISSUE-1), and the batch engine at
+//! least matching N looped per-image runs with bit-exact totals.
 //!
 //! Run: `cargo bench --bench sim_hotpath`
 
@@ -75,6 +77,34 @@ fn main() {
         bb(sim::simulate_network(&ours, &spec, &hw, &sim_cfg, 1).total_cycles());
     });
     println!("{}\n", report::engine_speedup_line(r_ref.mean_ns, r_agg.mean_ns));
+
+    // Batched multi-image engine: parity first, then the head-to-head
+    // against the looped per-image oracle.
+    let n_images = 4usize;
+    let batch = sim::simulate_network_batch(&ours, &spec, &hw, &sim_cfg, n_images, threads);
+    let looped_total =
+        sim::simulate_network_looped(&ours, &spec, &hw, &sim_cfg, n_images, threads);
+    assert_eq!(batch.total_cycles(), looped_total, "batch/looped parity");
+    println!("{}", report::batch_line(&batch));
+
+    let r_loop = bench(
+        &format!("simulate {n_images}-image batch (looped, 1 thread)"),
+        &cfg,
+        || {
+            bb(sim::simulate_network_looped(
+                &ours, &spec, &hw, &sim_cfg, n_images, 1,
+            ));
+        },
+    );
+    let r_batch = bench(
+        &format!("simulate {n_images}-image batch (batched, 1 thread)"),
+        &cfg,
+        || {
+            bb(sim::simulate_network_batch(&ours, &spec, &hw, &sim_cfg, n_images, 1)
+                .total_cycles());
+        },
+    );
+    println!("{}\n", report::batch_speedup_line(r_loop.mean_ns, r_batch.mean_ns));
 
     for (name, mapped) in [("pattern", &ours), ("naive", &naive)] {
         let r1 = bench(&format!("simulate {name} (1 thread)"), &cfg, || {

@@ -7,12 +7,29 @@
 //! (no async runtime exists in this offline image — and the paper's
 //! contribution is the accelerator, so L3 stays a thin driver per the
 //! architecture note in DESIGN.md §2).
+//!
+//! Serving policy (ISSUE-2 hardening):
+//!
+//! - **Cost estimates** — with a [`CostModel`] attached, every [`Reply`]
+//!   carries a cheap trace-derived per-request cost estimate (cycles +
+//!   energy from the request's own input zero fraction).
+//! - **Deadlines** — [`Coordinator::submit_with_deadline`] requests are
+//!   dispatched no later than their deadline (a near-deadline request
+//!   fires its batch early, padded); a request whose deadline already
+//!   passed while queued gets a timely deadline-exceeded error `Reply`
+//!   instead of a stale result.
+//! - **Retry** — a failed batch is re-run up to
+//!   [`CoordinatorConfig::max_retries`] times before the backend error
+//!   is delivered to every requester.
+//! - **Alarm** — [`Metrics::failed_alarm`] trips once
+//!   [`Metrics::failed_requests`] reaches the configured threshold.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
+use crate::sim::NetworkSimResult;
 use crate::util::stats::Summary;
 
 /// Inference backend abstraction — the PJRT engine in production, mocks
@@ -60,22 +77,117 @@ impl InferBackend for PjrtBackend {
     }
 }
 
+/// Cheap per-request cost estimate, attached to every [`Reply`] when
+/// the coordinator runs with a [`CostModel`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CostEstimate {
+    pub est_cycles: f64,
+    pub est_energy_pj: f64,
+    /// Zero fraction of the submitted image the estimate derives from.
+    pub input_zero_fraction: f64,
+}
+
+/// Trace-derived first-order request cost model: the dense (no-skip)
+/// per-image cost, discounted by the request's own input zero fraction
+/// times a skip slope calibrated from a traced simulation. Cheap enough
+/// for the submit path — one pass over the image, two multiplies.
+#[derive(Debug, Clone)]
+pub struct CostModel {
+    /// Cycles of the full (no skipping) schedule for one image.
+    pub dense_cycles: f64,
+    /// Energy (pJ) of the full schedule for one image.
+    pub dense_energy_pj: f64,
+    /// d(skipped work fraction) / d(input zero fraction), first order.
+    pub skip_slope: f64,
+}
+
+impl CostModel {
+    /// Calibrate from a simulated run with zero detection on:
+    /// `calib_zero_fraction` is the zero fraction of the calibration
+    /// trace the run was costed against (e.g. the synthetic trace's
+    /// dead-channel + zero-blob share).
+    pub fn from_sim(r: &NetworkSimResult, calib_zero_fraction: f64) -> CostModel {
+        let executed = r.total_ou_ops();
+        let skipped: f64 = r.layers.iter().map(|l| l.skipped_ou_ops).sum();
+        let dense_ops = (executed + skipped).max(1.0);
+        // scale the observed (post-skip) cycles/energy back up to the
+        // dense schedule
+        let dense_scale = dense_ops / executed.max(1.0);
+        let skip_frac = skipped / dense_ops;
+        CostModel {
+            dense_cycles: r.total_cycles() * dense_scale,
+            dense_energy_pj: r.total_energy().total_pj() * dense_scale,
+            skip_slope: if calib_zero_fraction > 1e-9 {
+                skip_frac / calib_zero_fraction
+            } else {
+                0.0
+            },
+        }
+    }
+
+    /// Estimate the cost of serving `image` (kept work is clamped to
+    /// `[0, 1]` of the dense schedule).
+    pub fn estimate(&self, image: &[f32]) -> CostEstimate {
+        let zeros = image.iter().filter(|v| **v == 0.0).count();
+        let zf = zeros as f64 / image.len().max(1) as f64;
+        let keep = (1.0 - self.skip_slope * zf).clamp(0.0, 1.0);
+        CostEstimate {
+            est_cycles: self.dense_cycles * keep,
+            est_energy_pj: self.dense_energy_pj * keep,
+            input_zero_fraction: zf,
+        }
+    }
+}
+
+/// Batching / retry / deadline policy for a [`Coordinator`].
+#[derive(Debug, Clone)]
+pub struct CoordinatorConfig {
+    /// How long a partial batch waits for more requests before
+    /// executing padded.
+    pub max_wait: Duration,
+    /// Re-runs of a failed batch before the error is delivered
+    /// (ISSUE-2 default: one retry).
+    pub max_retries: u32,
+    /// Deadline attached to plain [`Coordinator::submit`] requests
+    /// (`None` = no deadline).
+    pub default_deadline: Option<Duration>,
+    /// Failed-request count at which [`Metrics::failed_alarm`] trips
+    /// (0 disables the alarm).
+    pub alarm_threshold: u64,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig {
+            max_wait: Duration::from_millis(2),
+            max_retries: 1,
+            default_deadline: None,
+            alarm_threshold: 0,
+        }
+    }
+}
+
 /// One inference request.
 struct Request {
     image: Vec<f32>,
     submitted: Instant,
+    /// Latest instant at which the request may still be dispatched.
+    deadline: Option<Instant>,
     reply: Sender<Reply>,
 }
 
 /// Reply with the batch outcome + timing. `result` carries the logits
-/// on success or the backend's error on failure — a failed batch is
-/// reported to every waiting requester instead of silently dropping
-/// their reply channels.
+/// on success, or the error on failure (backend error after retries, or
+/// deadline exceeded) — a failed request is reported to its requester
+/// instead of silently dropping the reply channel.
 #[derive(Debug, Clone)]
 pub struct Reply {
     pub result: Result<Vec<f32>, String>,
     pub queue_us: u64,
     pub batch_fill: usize,
+    /// Trace-derived cost estimate (present when the coordinator was
+    /// started with a [`CostModel`]).
+    pub cost: Option<CostEstimate>,
 }
 
 impl Reply {
@@ -90,12 +202,23 @@ impl Reply {
 /// Aggregate serving metrics.
 #[derive(Debug, Default)]
 pub struct Metrics {
+    /// Requests that received a terminal reply — successes *and*
+    /// failures — so `failed_requests / requests` is a coherent failure
+    /// rate.
     pub requests: AtomicU64,
     pub batches: AtomicU64,
     pub padded_slots: AtomicU64,
-    /// Requests whose batch failed in the backend (each received the
-    /// error through its [`Reply::result`]).
+    /// Requests that failed — backend error after retries, or deadline
+    /// exceeded (each received the error through its [`Reply::result`]).
     pub failed_requests: AtomicU64,
+    /// Batch re-runs after a backend failure.
+    pub retried_batches: AtomicU64,
+    /// Requests whose deadline passed while queued (also counted in
+    /// `failed_requests`).
+    pub deadline_expired: AtomicU64,
+    /// Failed-request alarm threshold (0 = disabled).
+    alarm_threshold: AtomicU64,
+    alarm_logged: AtomicBool,
     latencies_us: Mutex<Summary>,
 }
 
@@ -103,39 +226,121 @@ impl Metrics {
     pub fn latency_summary(&self) -> Summary {
         self.latencies_us.lock().unwrap().clone()
     }
+
+    pub fn set_alarm_threshold(&self, n: u64) {
+        self.alarm_threshold.store(n, Ordering::Relaxed);
+    }
+
+    pub fn alarm_threshold(&self) -> u64 {
+        self.alarm_threshold.load(Ordering::Relaxed)
+    }
+
+    /// Has the failed-request count reached the alarm threshold?
+    pub fn failed_alarm(&self) -> bool {
+        let t = self.alarm_threshold.load(Ordering::Relaxed);
+        t > 0 && self.failed_requests.load(Ordering::Relaxed) >= t
+    }
+
+    /// Count one terminally-failed request (in both `requests` and
+    /// `failed_requests`) and raise (and log, once) the alarm if the
+    /// threshold is crossed.
+    fn record_failed(&self) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        self.failed_requests.fetch_add(1, Ordering::Relaxed);
+        if self.failed_alarm() && !self.alarm_logged.swap(true, Ordering::Relaxed) {
+            eprintln!(
+                "[coordinator] ALARM: failed requests reached threshold {}",
+                self.alarm_threshold()
+            );
+        }
+    }
 }
 
 /// Handle to a running coordinator.
 pub struct Coordinator {
     tx: Option<Sender<Request>>,
     pub metrics: Arc<Metrics>,
+    default_deadline: Option<Duration>,
     worker: Option<std::thread::JoinHandle<()>>,
 }
 
 impl Coordinator {
-    /// Start the batching worker. The backend is built by `make_backend`
-    /// *inside* the worker thread (the PJRT client is not `Send`).
-    /// `max_wait` bounds how long a partial batch waits for more
-    /// requests before executing padded.
+    /// Start the batching worker with the default retry/deadline policy.
+    /// The backend is built by `make_backend` *inside* the worker thread
+    /// (the PJRT client is not `Send`). `max_wait` bounds how long a
+    /// partial batch waits for more requests before executing padded.
     pub fn start<B, F>(make_backend: F, max_wait: Duration) -> Coordinator
+    where
+        B: InferBackend,
+        F: FnOnce() -> B + Send + 'static,
+    {
+        Self::start_with(
+            make_backend,
+            CoordinatorConfig { max_wait, ..Default::default() },
+            None,
+        )
+    }
+
+    /// Start with a full [`CoordinatorConfig`] and an optional
+    /// [`CostModel`]; with a model, every reply carries a per-request
+    /// cost estimate.
+    pub fn start_with<B, F>(
+        make_backend: F,
+        cfg: CoordinatorConfig,
+        cost_model: Option<CostModel>,
+    ) -> Coordinator
     where
         B: InferBackend,
         F: FnOnce() -> B + Send + 'static,
     {
         let (tx, rx) = channel::<Request>();
         let metrics = Arc::new(Metrics::default());
+        metrics.set_alarm_threshold(cfg.alarm_threshold);
         let m = metrics.clone();
+        let default_deadline = cfg.default_deadline;
         let worker = std::thread::spawn(move || {
             let backend = make_backend();
-            batch_loop(backend, rx, max_wait, m)
+            batch_loop(backend, rx, cfg, cost_model, m)
         });
-        Coordinator { tx: Some(tx), metrics, worker: Some(worker) }
+        Coordinator {
+            tx: Some(tx),
+            metrics,
+            default_deadline,
+            worker: Some(worker),
+        }
     }
 
     /// Submit one image; returns the channel the reply arrives on.
     pub fn submit(&self, image: Vec<f32>) -> Receiver<Reply> {
+        self.submit_inner(image, self.default_deadline)
+    }
+
+    /// Submit with an explicit completion deadline: the batcher
+    /// dispatches the request no later than `deadline` from now (firing
+    /// a partial batch early if needed), and a request that is already
+    /// overdue when considered gets a deadline-exceeded error instead
+    /// of a stale result.
+    pub fn submit_with_deadline(
+        &self,
+        image: Vec<f32>,
+        deadline: Duration,
+    ) -> Receiver<Reply> {
+        self.submit_inner(image, Some(deadline))
+    }
+
+    fn submit_inner(
+        &self,
+        image: Vec<f32>,
+        deadline: Option<Duration>,
+    ) -> Receiver<Reply> {
         let (rtx, rrx) = channel();
-        let req = Request { image, submitted: Instant::now(), reply: rtx };
+        let now = Instant::now();
+        let req = Request {
+            image,
+            submitted: now,
+            deadline: deadline.map(|d| now + d),
+            reply: rtx,
+        };
         // A send failure means the worker exited; the caller sees it as
         // a closed reply channel.
         if let Some(tx) = &self.tx {
@@ -162,10 +367,39 @@ impl Drop for Coordinator {
     }
 }
 
+/// If `r`'s deadline has already passed, deliver the deadline-exceeded
+/// error (with its cost estimate) and consume it; otherwise hand the
+/// request back for batching.
+fn admit(
+    r: Request,
+    cost_model: Option<&CostModel>,
+    metrics: &Metrics,
+) -> Option<Request> {
+    match r.deadline {
+        Some(d) if Instant::now() >= d => {
+            let queue_us = r.submitted.elapsed().as_micros() as u64;
+            metrics.deadline_expired.fetch_add(1, Ordering::Relaxed);
+            metrics.record_failed();
+            let cost = cost_model.map(|m| m.estimate(&r.image));
+            let _ = r.reply.send(Reply {
+                result: Err(format!(
+                    "deadline exceeded: request spent {queue_us} us queued"
+                )),
+                queue_us,
+                batch_fill: 0,
+                cost,
+            });
+            None
+        }
+        _ => Some(r),
+    }
+}
+
 fn batch_loop<B: InferBackend>(
     backend: B,
     rx: Receiver<Request>,
-    max_wait: Duration,
+    cfg: CoordinatorConfig,
+    cost_model: Option<CostModel>,
     metrics: Arc<Metrics>,
 ) {
     let bs = backend.batch_size();
@@ -173,23 +407,42 @@ fn batch_loop<B: InferBackend>(
     let out_len = backend.output_len();
 
     loop {
-        // Block for the first request of a batch.
+        // Block for the first request of a batch; a request that sat in
+        // a backed-up queue past its deadline is rejected right here.
         let first = match rx.recv() {
             Ok(r) => r,
             Err(_) => return, // all senders dropped
         };
-        let mut pending = vec![first];
-        let deadline = Instant::now() + max_wait;
-        // Fill the batch until full or the deadline passes.
+        let mut pending: Vec<Request> =
+            admit(first, cost_model.as_ref(), &metrics)
+                .into_iter()
+                .collect();
+        let fill_deadline = Instant::now() + cfg.max_wait;
+        // Fill until full, the batcher wait elapses, or the earliest
+        // pending request deadline arrives — a near-deadline request
+        // fires its batch early (padded) rather than waiting it out.
         while pending.len() < bs {
             let now = Instant::now();
-            if now >= deadline {
+            let mut until = fill_deadline;
+            for r in &pending {
+                if let Some(d) = r.deadline {
+                    until = until.min(d);
+                }
+            }
+            if now >= until {
                 break;
             }
-            match rx.recv_timeout(deadline - now) {
-                Ok(r) => pending.push(r),
-                Err(_) => break,
+            match rx.recv_timeout(until - now) {
+                Ok(r) => {
+                    if let Some(r) = admit(r, cost_model.as_ref(), &metrics) {
+                        pending.push(r);
+                    }
+                }
+                Err(_) => break, // timeout or disconnect: run what we have
             }
+        }
+        if pending.is_empty() {
+            continue;
         }
 
         // Assemble padded batch.
@@ -204,7 +457,22 @@ fn batch_loop<B: InferBackend>(
             .padded_slots
             .fetch_add((bs - fill) as u64, Ordering::Relaxed);
 
-        match backend.run_batch(&batch) {
+        // Execute; a failed batch is re-run up to `max_retries` times
+        // before the error is delivered to every requester.
+        let mut outcome = backend.run_batch(&batch);
+        let mut attempts = 0u32;
+        while outcome.is_err() && attempts < cfg.max_retries {
+            attempts += 1;
+            metrics.retried_batches.fetch_add(1, Ordering::Relaxed);
+            eprintln!(
+                "[coordinator] batch failed ({}); retry {attempts}/{}",
+                outcome.as_ref().err().map(String::as_str).unwrap_or(""),
+                cfg.max_retries
+            );
+            outcome = backend.run_batch(&batch);
+        }
+
+        match outcome {
             Ok(out) => {
                 for (i, r) in pending.into_iter().enumerate() {
                     let logits = out[i * out_len..(i + 1) * out_len].to_vec();
@@ -215,10 +483,12 @@ fn batch_loop<B: InferBackend>(
                         .lock()
                         .unwrap()
                         .push(queue_us as f64);
+                    let cost = cost_model.as_ref().map(|m| m.estimate(&r.image));
                     let _ = r.reply.send(Reply {
                         result: Ok(logits),
                         queue_us,
                         batch_fill: fill,
+                        cost,
                     });
                 }
             }
@@ -226,14 +496,19 @@ fn batch_loop<B: InferBackend>(
                 // Deliver the cause to every waiting requester — a
                 // dropped sender would only show them an opaque closed
                 // channel.
-                eprintln!("[coordinator] batch failed: {e}");
+                eprintln!(
+                    "[coordinator] batch failed after {} attempt(s): {e}",
+                    attempts + 1
+                );
                 for r in pending.into_iter() {
                     let queue_us = r.submitted.elapsed().as_micros() as u64;
-                    metrics.failed_requests.fetch_add(1, Ordering::Relaxed);
+                    metrics.record_failed();
+                    let cost = cost_model.as_ref().map(|m| m.estimate(&r.image));
                     let _ = r.reply.send(Reply {
                         result: Err(e.clone()),
                         queue_us,
                         batch_fill: fill,
+                        cost,
                     });
                 }
             }
@@ -358,7 +633,9 @@ mod tests {
             assert!(err.contains("backend exploded"), "{err}");
         }
         assert_eq!(c.metrics.failed_requests.load(Ordering::Relaxed), 2);
-        assert_eq!(c.metrics.requests.load(Ordering::Relaxed), 0);
+        // failures still count as terminally-replied requests, so the
+        // failure rate failed/requests stays coherent (2/2 here)
+        assert_eq!(c.metrics.requests.load(Ordering::Relaxed), 2);
         c.shutdown();
     }
 
@@ -376,6 +653,61 @@ mod tests {
         assert!(pads >= 4, "pads={pads}"); // two batches of fill 1
         assert!(c.metrics.latency_summary().len() == 2);
         c.shutdown();
+    }
+
+    #[test]
+    fn cost_model_estimates_scale_with_input_zeros() {
+        let m = CostModel {
+            dense_cycles: 1000.0,
+            dense_energy_pj: 400.0,
+            skip_slope: 1.0,
+        };
+        let dense = m.estimate(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(dense.input_zero_fraction, 0.0);
+        assert_eq!(dense.est_cycles, 1000.0);
+        let half = m.estimate(&[0.0, 0.0, 3.0, 4.0]);
+        assert!((half.input_zero_fraction - 0.5).abs() < 1e-12);
+        assert!((half.est_cycles - 500.0).abs() < 1e-9);
+        assert!(half.est_energy_pj < dense.est_energy_pj);
+        // kept work clamps at zero even for an extreme slope
+        let all = m.estimate(&[0.0; 4]);
+        assert_eq!(all.est_cycles, 0.0);
+    }
+
+    #[test]
+    fn cost_model_from_sim_restores_dense_schedule() {
+        use crate::sim::{LayerSimResult, NetworkSimResult};
+        use crate::xbar::energy::EnergyLedger;
+        let r = NetworkSimResult {
+            scheme: "pattern".into(),
+            network: "t".into(),
+            layers: vec![LayerSimResult {
+                layer_idx: 0,
+                ou_ops: 80.0,
+                skipped_ou_ops: 20.0,
+                cycles: 80.0,
+                energy: EnergyLedger { adc_pj: 8.0, dac_pj: 0.0, rram_pj: 0.0 },
+                n_crossbars: 1,
+            }],
+        };
+        // the calibration trace skipped 20% of the schedule at a 0.2
+        // input zero fraction -> slope 1, dense = observed / 0.8
+        let m = CostModel::from_sim(&r, 0.2);
+        assert!((m.dense_cycles - 100.0).abs() < 1e-9, "{}", m.dense_cycles);
+        assert!((m.dense_energy_pj - 10.0).abs() < 1e-9);
+        assert!((m.skip_slope - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn alarm_threshold_accessors() {
+        let m = Metrics::default();
+        assert!(!m.failed_alarm());
+        m.set_alarm_threshold(2);
+        assert_eq!(m.alarm_threshold(), 2);
+        m.record_failed();
+        assert!(!m.failed_alarm());
+        m.record_failed();
+        assert!(m.failed_alarm());
     }
 
     #[test]

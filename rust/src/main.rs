@@ -5,7 +5,10 @@
 //!   map       — map a network (synthetic VGG16 or artifacts SmallCNN)
 //!               with a scheme; print crossbar/area/index stats
 //!   simulate  — cycle/energy simulation + scheme comparison (Fig7/8/§V-C)
+//!   batch-sim — batched multi-image simulation (per-image + batch
+//!               totals, bit-exact with looped per-image runs)
 //!   serve     — start the batching coordinator over the PJRT artifact
+//!               (per-request cost estimates, deadlines, retry, alarm)
 //!   e2e       — run the SmallCNN end-to-end check (golden + accuracy)
 //!   report    — regenerate every paper table/figure into results/
 
@@ -13,13 +16,15 @@ use std::path::Path;
 use std::time::Duration;
 
 use rram_pattern_accel::config::{HardwareConfig, SimConfig};
-use rram_pattern_accel::coordinator::{Coordinator, PjrtBackend};
+use rram_pattern_accel::coordinator::{
+    Coordinator, CoordinatorConfig, CostModel, PjrtBackend,
+};
 use rram_pattern_accel::mapping::{
     index, kmeans::KmeansMapping, naive::NaiveMapping, ou_sparse::OuSparseMapping,
     pattern::{BlockOrder, PatternMapping, PatternMappingOrdered},
     MappingScheme,
 };
-use rram_pattern_accel::nn::NetworkSpec;
+use rram_pattern_accel::nn::{NetworkSpec, Tensor};
 use rram_pattern_accel::pruning::synthetic::{DatasetProfile, ALL_PROFILES};
 use rram_pattern_accel::report;
 use rram_pattern_accel::runtime::Engine;
@@ -35,12 +40,14 @@ fn main() {
     let code = match sub.as_str() {
         "map" => cmd_map(rest),
         "simulate" => cmd_simulate(rest),
+        "batch-sim" => cmd_batch_sim(rest),
         "serve" => cmd_serve(rest),
         "e2e" => cmd_e2e(rest),
         "report" => cmd_report(rest),
         _ => {
             eprintln!(
-                "usage: rram-accel <map|simulate|serve|e2e|report> [options]\n\
+                "usage: rram-accel <map|simulate|batch-sim|serve|e2e|report> \
+                 [options]\n\
                  run a subcommand with --help for its options"
             );
             if sub == "help" { 0 } else { 2 }
@@ -167,26 +174,159 @@ fn cmd_simulate(rest: Vec<String>) -> i32 {
     0
 }
 
+fn cmd_batch_sim(rest: Vec<String>) -> i32 {
+    let args = match Args::new(
+        "batched multi-image simulation: per-image + batch cycles/energy",
+    )
+    .opt("dataset", "cifar10", "cifar10|cifar100|imagenet")
+    .opt("images", "8", "batch size in images")
+    .opt("samples", "64", "sampled positions per layer")
+    .opt("seed", "42", "synthetic weight seed")
+    .opt("threads", "0", "worker threads (0 = auto)")
+    .flag("smallcnn", "also run the exact-mode synthetic SmallCNN batch")
+    .flag("json", "write results/batch_sim.json")
+    .parse(rest)
+    {
+        Ok(a) => a,
+        Err(e) => return usage(e),
+    };
+    let hw = HardwareConfig::default();
+    let geom = CellGeometry::from_hw(&hw);
+    let threads = auto_threads(&args);
+    let profile = match DatasetProfile::by_name(args.get("dataset")) {
+        Some(p) => p,
+        None => return usage(format!("unknown dataset {}", args.get("dataset"))),
+    };
+    let n_images = args.get_usize("images").unwrap_or(8).max(1);
+    let sim_cfg = SimConfig {
+        sample_positions: Some(args.get_usize("samples").unwrap_or(64)),
+        ..Default::default()
+    };
+    let seed = args.get_u64("seed").unwrap_or(42);
+
+    let nw = profile.generate(seed);
+    let spec = nw.spec.clone();
+    let naive = NaiveMapping.map_network(&nw, &geom, threads);
+    let ours = PatternMapping.map_network(&nw, &geom, threads);
+    let base = sim::simulate_network_batch(&naive, &spec, &hw, &sim_cfg, n_images, threads);
+    let mine = sim::simulate_network_batch(&ours, &spec, &hw, &sim_cfg, n_images, threads);
+    println!("{}", report::batch_line(&base));
+    println!("{}", report::batch_line(&mine));
+    for (i, r) in mine.per_image.iter().enumerate() {
+        println!(
+            "  image {:>3}: cycles {:>15.0}  ou-ops {:>15.0}  energy {:.3e} pJ",
+            i,
+            r.total_cycles(),
+            r.total_ou_ops(),
+            r.total_energy().total_pj(),
+        );
+    }
+    println!(
+        "batch speedup pattern vs naive: {:.2}x",
+        base.total_cycles() / mine.total_cycles().max(1.0)
+    );
+
+    // Cross-check the tentpole invariant on this exact run: the batch
+    // totals equal the looped per-image oracle bit for bit.
+    let looped =
+        sim::simulate_network_looped(&ours, &spec, &hw, &sim_cfg, n_images, threads);
+    let bit_exact = mine.total_cycles() == looped;
+    println!(
+        "batch-vs-looped cycle check: batch {} vs looped {} ({})",
+        mine.total_cycles(),
+        looped,
+        if bit_exact { "bit-exact" } else { "MISMATCH" },
+    );
+
+    if args.get_flag("smallcnn") {
+        let model = SmallCnn::synthetic(NetworkSpec::smallcnn(), seed);
+        let hw_s = HardwareConfig::smallcnn_functional();
+        let mapped = model.map(&PatternMapping, &hw_s);
+        let img_len = 3 * 32 * 32;
+        let mut rng = rram_pattern_accel::util::rng::Rng::seed_from(seed ^ 0xBA7C);
+        let mut batch_x = Tensor::zeros(&[n_images, 3, 32, 32]);
+        for v in batch_x.data.iter_mut() {
+            *v = if rng.chance(0.4) { 0.0 } else { rng.f32() };
+        }
+        debug_assert_eq!(batch_x.data.len(), n_images * img_len);
+        let exact = model.simulate_exact_batch(
+            &mapped,
+            &batch_x,
+            &hw_s,
+            &SimConfig::default(),
+            threads,
+        );
+        println!("exact-mode synthetic SmallCNN:");
+        println!("{}", report::batch_line(&exact));
+    }
+
+    if args.get_flag("json") {
+        let j = rram_pattern_accel::util::json::obj(vec![
+            ("naive", base.to_json()),
+            ("pattern", mine.to_json()),
+        ]);
+        match report::write_json("batch_sim.json", &j) {
+            Ok(()) => println!("wrote results/batch_sim.json"),
+            Err(e) => eprintln!("write results/batch_sim.json: {e}"),
+        }
+    }
+    if bit_exact {
+        0
+    } else {
+        eprintln!("batch-sim: batch/looped totals diverged — engine bug");
+        1
+    }
+}
+
 fn cmd_serve(rest: Vec<String>) -> i32 {
     let args = match Args::new("serve batched inference over the AOT artifact")
         .opt("artifacts", "artifacts", "artifacts directory")
         .opt("requests", "32", "number of demo requests to run")
         .opt("max-wait-ms", "2", "batcher max wait")
+        .opt("deadline-ms", "0", "per-request deadline (0 = none)")
+        .opt("alarm-threshold", "0", "failed-request alarm threshold (0 = off)")
         .parse(rest)
     {
         Ok(a) => a,
         Err(e) => return usage(e),
     };
+    if !Engine::available() {
+        return usage(
+            "PJRT runtime unavailable: rebuild with --features xla-runtime \
+             (see Cargo.toml)"
+                .to_string(),
+        );
+    }
     let dir = args.get("artifacts").to_string();
     let n = args.get_usize("requests").unwrap_or(32);
     let wait = Duration::from_millis(args.get_usize("max-wait-ms").unwrap_or(2) as u64);
+    let deadline_ms = args.get_usize("deadline-ms").unwrap_or(0);
+    let alarm_threshold = args.get_u64("alarm-threshold").unwrap_or(0);
 
     let td = match sim::smallcnn::TestData::load(Path::new(&dir)) {
         Ok(t) => t,
         Err(e) => return usage(format!("load test data: {e} (run `make artifacts`)")),
     };
+    // Per-request cost model: calibrate once from an analytic simulation
+    // of the pattern-mapped SmallCNN (first-order, trace-derived).
+    let cost_model = SmallCnn::load(Path::new(&dir)).ok().map(|m| {
+        let hw = HardwareConfig::smallcnn_functional();
+        let mapped = m.map(&PatternMapping, &hw);
+        let sim_cfg = SimConfig::default();
+        let r = sim::simulate_network(
+            &mapped,
+            &m.spec,
+            &hw,
+            &sim_cfg,
+            threadpool::default_threads(),
+        );
+        CostModel::from_sim(
+            &r,
+            sim_cfg.dead_channel_ratio + sim_cfg.zero_blob_ratio,
+        )
+    });
     let path = format!("{dir}/smallcnn_b8.hlo.txt");
-    let coord = Coordinator::start(
+    let coord = Coordinator::start_with(
         move || {
             let engine = Engine::load(Path::new(&path)).expect("load HLO artifact");
             println!("[serve] engine up on {}", engine.platform());
@@ -197,7 +337,17 @@ fn cmd_serve(rest: Vec<String>) -> i32 {
                 output_len: 10,
             }
         },
-        wait,
+        CoordinatorConfig {
+            max_wait: wait,
+            default_deadline: if deadline_ms == 0 {
+                None
+            } else {
+                Some(Duration::from_millis(deadline_ms as u64))
+            },
+            alarm_threshold,
+            ..Default::default()
+        },
+        cost_model,
     );
 
     let img_len = 3 * 32 * 32;
@@ -210,11 +360,23 @@ fn cmd_serve(rest: Vec<String>) -> i32 {
         })
         .collect();
     let mut correct = 0usize;
+    let mut failed = 0usize;
+    let mut est_cycles = Vec::new();
     for (i, rx) in rxs.into_iter().enumerate() {
         let reply = rx.recv().expect("reply");
-        let pred = sim::smallcnn::argmax(reply.logits());
-        if pred as i32 == td.test_y[i % avail] {
-            correct += 1;
+        if let Some(c) = reply.cost {
+            est_cycles.push(c.est_cycles);
+        }
+        match &reply.result {
+            Ok(logits) => {
+                if sim::smallcnn::argmax(logits) as i32 == td.test_y[i % avail] {
+                    correct += 1;
+                }
+            }
+            Err(e) => {
+                failed += 1;
+                eprintln!("[serve] request {i} failed: {e}");
+            }
         }
     }
     let elapsed = t0.elapsed();
@@ -229,6 +391,21 @@ fn cmd_serve(rest: Vec<String>) -> i32 {
         coord.metrics.batches.load(std::sync::atomic::Ordering::Relaxed),
         lat.mean() / 1000.0,
         lat.percentile(99.0) / 1000.0,
+    );
+    if !est_cycles.is_empty() {
+        let mean = est_cycles.iter().sum::<f64>() / est_cycles.len() as f64;
+        println!(
+            "[serve] per-request cost estimates: mean {:.0} cycles over {} replies",
+            mean,
+            est_cycles.len()
+        );
+    }
+    use std::sync::atomic::Ordering::Relaxed;
+    println!(
+        "[serve] failed {failed} (deadline-expired {}, retried batches {}), alarm {}",
+        coord.metrics.deadline_expired.load(Relaxed),
+        coord.metrics.retried_batches.load(Relaxed),
+        if coord.metrics.failed_alarm() { "TRIPPED" } else { "ok" },
     );
     coord.shutdown();
     0

@@ -166,6 +166,35 @@ pub fn engine_speedup_line(reference_ns: f64, aggregated_ns: f64) -> String {
     )
 }
 
+/// One-line summary of a batched multi-image simulation (the
+/// `batch-sim` subcommand and `benches/sim_hotpath.rs`).
+pub fn batch_line(r: &crate::sim::BatchSimResult) -> String {
+    format!(
+        "{:<10} batch of {:>3}: cycles {:>15.0} total  {:>13.0} mean/img  \
+         {:>13.0} max/img  energy {:.3e} pJ",
+        r.scheme,
+        r.n_images(),
+        r.total_cycles(),
+        r.mean_cycles_per_image(),
+        r.max_image_cycles(),
+        r.total_energy().total_pj(),
+    )
+}
+
+/// §Perf batched-vs-looped head-to-head line
+/// (`benches/sim_hotpath.rs`): the batch engine amortizes per-layer
+/// cost tables across images, so it should at least modestly beat N
+/// independent simulations.
+pub fn batch_speedup_line(looped_ns: f64, batched_ns: f64) -> String {
+    let ratio = looped_ns / batched_ns.max(1e-9);
+    format!(
+        "  -> batched engine {:.2}x looped per-image throughput \
+         (target >= 1.1x: {})",
+        ratio,
+        if ratio >= 1.1 { "MET" } else { "MISSED" }
+    )
+}
+
 /// §V-C speedup row.
 pub fn speedup_line(dataset: &str, cmp: &Comparison, paper: f64) -> String {
     format!(
@@ -215,6 +244,36 @@ mod tests {
         let j = r.to_json();
         assert_eq!(j.get("naive_crossbars").as_usize(), Some(467));
         assert!(r.line().contains("4.67x"));
+    }
+
+    #[test]
+    fn batch_lines_format() {
+        use crate::sim::{BatchSimResult, LayerSimResult, NetworkSimResult};
+        let img = NetworkSimResult {
+            scheme: "pattern".into(),
+            network: "t".into(),
+            layers: vec![LayerSimResult {
+                layer_idx: 0,
+                ou_ops: 100.0,
+                skipped_ou_ops: 0.0,
+                cycles: 100.0,
+                energy: EnergyLedger { adc_pj: 1.0, dac_pj: 0.0, rram_pj: 0.0 },
+                n_crossbars: 1,
+            }],
+        };
+        let b = BatchSimResult {
+            scheme: "pattern".into(),
+            network: "t".into(),
+            per_image: vec![img.clone(), img],
+        };
+        let s = batch_line(&b);
+        assert!(s.contains("batch of"), "{s}");
+        assert!(s.contains("200"), "{s}");
+        let sp = batch_speedup_line(220.0, 100.0);
+        assert!(sp.contains("2.20x"), "{sp}");
+        assert!(sp.contains("MET"), "{sp}");
+        let sp = batch_speedup_line(100.0, 100.0);
+        assert!(sp.contains("MISSED"), "{sp}");
     }
 
     #[test]

@@ -27,6 +27,11 @@ mod pjrt {
     }
 
     impl Engine {
+        /// Is a real PJRT runtime compiled into this build?
+        pub fn available() -> bool {
+            true
+        }
+
         /// Load and compile an HLO-text artifact on the CPU PJRT client.
         pub fn load(path: &Path) -> Result<Engine> {
             let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
@@ -88,6 +93,13 @@ mod pjrt {
     }
 
     impl Engine {
+        /// Is a real PJRT runtime compiled into this build? `false` for
+        /// the stub — callers on the serving path can fail fast with a
+        /// clear message instead of panicking inside the worker thread.
+        pub fn available() -> bool {
+            false
+        }
+
         pub fn load(path: &Path) -> Result<Engine, String> {
             Err(format!(
                 "PJRT runtime unavailable for {}: rebuild with \
@@ -123,5 +135,10 @@ mod tests {
     fn missing_file_errors() {
         let r = Engine::load(Path::new("/nonexistent/model.hlo.txt"));
         assert!(r.is_err());
+    }
+
+    #[test]
+    fn availability_matches_feature() {
+        assert_eq!(Engine::available(), cfg!(feature = "xla-runtime"));
     }
 }

@@ -31,6 +31,12 @@
 //! from its precomputed `BlockCost` — no per-position loop over blocks
 //! at all. `tests/prop_invariants.rs` pins the two engines to identical
 //! counts and 1e-9-relative energy.
+//!
+//! On top of the aggregated engine, [`simulate_network_batch`] costs a
+//! whole multi-image batch in one closed-form pass per layer (per-block
+//! cost tables computed once, [`workload::BatchAggregate`] per-image
+//! histograms), reporting per-image and per-batch cycles/energy that
+//! are bit-exact with independent per-image runs.
 
 pub mod functional;
 pub mod smallcnn;
@@ -40,11 +46,12 @@ use crate::config::{HardwareConfig, SimConfig};
 use crate::mapping::{MappedLayer, MappedNetwork};
 use crate::nn::NetworkSpec;
 use crate::pruning::Pattern;
+use crate::util::json::{obj, Json};
 use crate::util::rng::Rng;
 use crate::util::threadpool;
 use crate::xbar::energy::{ou_op_energy_batch, EnergyLedger};
 use crate::xbar::CellGeometry;
-use workload::{LayerTrace, TraceAggregate};
+use workload::{BatchAggregate, LayerTrace, TraceAggregate};
 
 /// Per-layer simulation result.
 #[derive(Debug, Clone, Default)]
@@ -58,6 +65,21 @@ pub struct LayerSimResult {
     pub cycles: f64,
     pub energy: EnergyLedger,
     pub n_crossbars: usize,
+}
+
+impl LayerSimResult {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("layer_idx", self.layer_idx.into()),
+            ("ou_ops", self.ou_ops.into()),
+            ("skipped_ou_ops", self.skipped_ou_ops.into()),
+            ("cycles", self.cycles.into()),
+            ("adc_pj", self.energy.adc_pj.into()),
+            ("dac_pj", self.energy.dac_pj.into()),
+            ("rram_pj", self.energy.rram_pj.into()),
+            ("n_crossbars", self.n_crossbars.into()),
+        ])
+    }
 }
 
 /// Whole-network simulation result.
@@ -87,6 +109,84 @@ impl NetworkSimResult {
 
     pub fn total_crossbars(&self) -> usize {
         self.layers.iter().map(|l| l.n_crossbars).sum()
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("scheme", self.scheme.as_str().into()),
+            ("network", self.network.as_str().into()),
+            ("total_cycles", self.total_cycles().into()),
+            ("total_ou_ops", self.total_ou_ops().into()),
+            ("total_energy_pj", self.total_energy().total_pj().into()),
+            (
+                "layers",
+                Json::Arr(self.layers.iter().map(|l| l.to_json()).collect()),
+            ),
+        ])
+    }
+}
+
+/// Whole-batch simulation result: one [`NetworkSimResult`] per image.
+/// Batch totals fold the per-image results in image order, so they are
+/// bit-exact with summing N independent per-image simulations the same
+/// way (the ISSUE-2 batch invariant, pinned by
+/// `tests/prop_invariants.rs`).
+#[derive(Debug, Clone, Default)]
+pub struct BatchSimResult {
+    pub scheme: String,
+    pub network: String,
+    pub per_image: Vec<NetworkSimResult>,
+}
+
+impl BatchSimResult {
+    pub fn n_images(&self) -> usize {
+        self.per_image.len()
+    }
+
+    pub fn total_cycles(&self) -> f64 {
+        self.per_image.iter().map(|r| r.total_cycles()).sum()
+    }
+
+    pub fn total_ou_ops(&self) -> f64 {
+        self.per_image.iter().map(|r| r.total_ou_ops()).sum()
+    }
+
+    pub fn total_energy(&self) -> EnergyLedger {
+        let mut e = EnergyLedger::default();
+        for r in &self.per_image {
+            e.add(&r.total_energy());
+        }
+        e
+    }
+
+    pub fn mean_cycles_per_image(&self) -> f64 {
+        self.total_cycles() / self.n_images().max(1) as f64
+    }
+
+    /// Slowest image of the batch — the batch's critical path when
+    /// images run on separate shards.
+    pub fn max_image_cycles(&self) -> f64 {
+        self.per_image
+            .iter()
+            .map(|r| r.total_cycles())
+            .fold(0.0, f64::max)
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("scheme", self.scheme.as_str().into()),
+            ("network", self.network.as_str().into()),
+            ("n_images", self.n_images().into()),
+            ("total_cycles", self.total_cycles().into()),
+            ("total_ou_ops", self.total_ou_ops().into()),
+            ("total_energy_pj", self.total_energy().total_pj().into()),
+            ("mean_cycles_per_image", self.mean_cycles_per_image().into()),
+            ("max_image_cycles", self.max_image_cycles().into()),
+            (
+                "per_image",
+                Json::Arr(self.per_image.iter().map(|r| r.to_json()).collect()),
+            ),
+        ])
     }
 }
 
@@ -189,12 +289,64 @@ pub fn simulate_layer_aggregated(
     block_switch_cycles: f64,
 ) -> LayerSimResult {
     let costs = block_costs(layer, hw);
+    simulate_layer_with_costs(
+        layer,
+        spec_positions,
+        &costs,
+        agg,
+        skip_zero_inputs,
+        block_switch_cycles,
+    )
+}
+
+/// Cost one layer for every image of a batch in a single closed-form
+/// pass: the per-block OU cost tables are computed once and shared, so
+/// each image's marginal work is O(blocks) histogram lookups. Results
+/// are per-image in push order, and each is bit-exact with an
+/// independent [`simulate_layer_aggregated`] call on that image's
+/// aggregate (shared cost tables, identical accumulation order).
+pub fn simulate_layer_batch(
+    layer: &MappedLayer,
+    spec_positions: usize,
+    batch: &BatchAggregate,
+    hw: &HardwareConfig,
+    skip_zero_inputs: bool,
+    block_switch_cycles: f64,
+) -> Vec<LayerSimResult> {
+    let costs = block_costs(layer, hw);
+    batch
+        .images()
+        .iter()
+        .map(|agg| {
+            simulate_layer_with_costs(
+                layer,
+                spec_positions,
+                &costs,
+                agg,
+                skip_zero_inputs,
+                block_switch_cycles,
+            )
+        })
+        .collect()
+}
+
+/// Shared closed-form core of [`simulate_layer_aggregated`] and
+/// [`simulate_layer_batch`] — both must execute the exact same float
+/// sequence for the batch-equals-singles invariant to hold bitwise.
+fn simulate_layer_with_costs(
+    layer: &MappedLayer,
+    spec_positions: usize,
+    costs: &[BlockCost],
+    agg: &TraceAggregate,
+    skip_zero_inputs: bool,
+    block_switch_cycles: f64,
+) -> LayerSimResult {
     let n_pos = agg.n_positions as u64;
     let mut ou_ops = 0u64;
     let mut skipped = 0u64;
     let mut executed_blocks = 0u64;
     let mut energy = EnergyLedger::default();
-    for c in &costs {
+    for c in costs {
         let sk = if skip_zero_inputs {
             agg.skippable_positions(c.cin, c.pattern)
         } else {
@@ -301,6 +453,18 @@ fn finish_result(
     }
 }
 
+/// Shared scheme policy: only schemes with an Input Preprocessing Unit
+/// (everything but the naive Fig. 1 baseline) get zero-input skipping
+/// and block-switch charges. Single source of truth for every engine —
+/// returns `(skip_zero_inputs, block_switch_cycles)`.
+fn ipu_policy(scheme: &str, sim: &SimConfig) -> (bool, f64) {
+    let has_ipu = scheme != "naive";
+    (
+        sim.zero_detection && has_ipu,
+        if has_ipu { sim.block_switch_cycles } else { 0.0 },
+    )
+}
+
 /// Which `simulate_layer` implementation a network simulation uses.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum SimEngine {
@@ -335,9 +499,7 @@ pub fn simulate_network_with(
     sim: &SimConfig,
     threads: usize,
 ) -> NetworkSimResult {
-    let has_ipu = mapped.scheme != "naive";
-    let skip = sim.zero_detection && has_ipu;
-    let switch_cycles = if has_ipu { sim.block_switch_cycles } else { 0.0 };
+    let (skip, switch_cycles) = ipu_policy(&mapped.scheme, sim);
 
     let items: Vec<(usize, &MappedLayer)> =
         mapped.layers.iter().enumerate().collect();
@@ -372,6 +534,109 @@ pub fn simulate_network_with(
         scheme: mapped.scheme.clone(),
         network: mapped.network.clone(),
         layers,
+    }
+}
+
+/// Trace seed of image `image` within a batch whose base seed is
+/// `base`. Image 0 keeps the base seed, so a 1-image batch reproduces
+/// the plain single-image [`simulate_network`] run bit for bit; later
+/// images get independent streams.
+pub fn image_seed(base: u64, image: u64) -> u64 {
+    if image == 0 {
+        base
+    } else {
+        base ^ image.wrapping_mul(0xA076_1D64_78BD_642F)
+    }
+}
+
+/// Simulate a batch of `n_images` images through a mapped network, one
+/// closed-form pass per layer: per-block cost tables are computed once
+/// per layer and shared by every image (layers in parallel, as in
+/// [`simulate_network`]). Image `i`'s synthetic traces are seeded from
+/// [`image_seed`]`(sim.seed, i)`, so its results are bit-exact with an
+/// independent [`simulate_network`] run using that seed — and the batch
+/// totals are bit-exact with summing those runs in image order
+/// (`tests/prop_invariants.rs` pins both).
+pub fn simulate_network_batch(
+    mapped: &MappedNetwork,
+    spec: &NetworkSpec,
+    hw: &HardwareConfig,
+    sim: &SimConfig,
+    n_images: usize,
+    threads: usize,
+) -> BatchSimResult {
+    let (skip, switch_cycles) = ipu_policy(&mapped.scheme, sim);
+
+    let items: Vec<(usize, &MappedLayer)> =
+        mapped.layers.iter().enumerate().collect();
+    let per_layer: Vec<Vec<LayerSimResult>> =
+        threadpool::parallel_map(&items, threads, |(li, ml)| {
+            let layer = &spec.layers[*li];
+            let positions = layer.positions();
+            let n_samples = sim
+                .sample_positions
+                .map(|s| s.min(positions))
+                .unwrap_or(positions);
+            let mut batch = BatchAggregate::new();
+            for img in 0..n_images {
+                // Same per-layer stream derivation as simulate_network,
+                // with the base seed replaced by the image seed.
+                let mut rng = Rng::seed_from(
+                    image_seed(sim.seed, img as u64)
+                        ^ ((*li as u64 + 1) * 0x9E37),
+                );
+                let trace =
+                    LayerTrace::synthetic(layer.cin, n_samples, sim, &mut rng);
+                batch.push(layer_aggregate(ml, &trace));
+            }
+            simulate_layer_batch(ml, positions, &batch, hw, skip, switch_cycles)
+        });
+
+    collect_batch(mapped, n_images, per_layer)
+}
+
+/// Looped oracle for the batch engine: N independent
+/// [`simulate_network`] runs, one per [`image_seed`], with total cycles
+/// summed in image order. This is the single definition of the baseline
+/// the batch invariant is cross-checked against (`batch-sim` CLI,
+/// `benches/sim_hotpath.rs`); [`simulate_network_batch`] must equal it
+/// bit for bit.
+pub fn simulate_network_looped(
+    mapped: &MappedNetwork,
+    spec: &NetworkSpec,
+    hw: &HardwareConfig,
+    sim: &SimConfig,
+    n_images: usize,
+    threads: usize,
+) -> f64 {
+    let mut total = 0.0;
+    for i in 0..n_images {
+        let cfg_i =
+            SimConfig { seed: image_seed(sim.seed, i as u64), ..sim.clone() };
+        total += simulate_network(mapped, spec, hw, &cfg_i, threads)
+            .total_cycles();
+    }
+    total
+}
+
+/// Transpose per-layer × per-image results into per-image network
+/// results (shared by the synthetic and the SmallCNN exact batch paths).
+fn collect_batch(
+    mapped: &MappedNetwork,
+    n_images: usize,
+    per_layer: Vec<Vec<LayerSimResult>>,
+) -> BatchSimResult {
+    let per_image = (0..n_images)
+        .map(|img| NetworkSimResult {
+            scheme: mapped.scheme.clone(),
+            network: mapped.network.clone(),
+            layers: per_layer.iter().map(|l| l[img].clone()).collect(),
+        })
+        .collect();
+    BatchSimResult {
+        scheme: mapped.scheme.clone(),
+        network: mapped.network.clone(),
+        per_image,
     }
 }
 
@@ -563,6 +828,56 @@ mod tests {
         );
         assert_eq!(a.total_cycles(), r.total_cycles());
         assert_eq!(a.total_ou_ops(), r.total_ou_ops());
+    }
+
+    #[test]
+    fn one_image_batch_reproduces_single_simulation() {
+        let (l, w, geom, hw) = setup();
+        let spec = NetworkSpec { name: "t".into(), layers: vec![l.clone()] };
+        let nw = crate::pruning::NetworkWeights::new(spec.clone(), vec![w]);
+        let mapped = PatternMapping.map_network(&nw, &geom, 1);
+        let sim = SimConfig::default();
+        let single = simulate_network(&mapped, &spec, &hw, &sim, 1);
+        let batch = simulate_network_batch(&mapped, &spec, &hw, &sim, 1, 1);
+        assert_eq!(batch.n_images(), 1);
+        assert_eq!(batch.total_cycles(), single.total_cycles());
+        assert_eq!(batch.total_ou_ops(), single.total_ou_ops());
+        assert_eq!(batch.total_energy(), single.total_energy());
+    }
+
+    #[test]
+    fn batch_totals_fold_per_image_results() {
+        let (l, w, geom, hw) = setup();
+        let spec = NetworkSpec { name: "t".into(), layers: vec![l.clone()] };
+        let nw = crate::pruning::NetworkWeights::new(spec.clone(), vec![w]);
+        let mapped = PatternMapping.map_network(&nw, &geom, 1);
+        let sim = SimConfig::default();
+        let batch = simulate_network_batch(&mapped, &spec, &hw, &sim, 3, 2);
+        assert_eq!(batch.n_images(), 3);
+        let sum: f64 = batch.per_image.iter().map(|r| r.total_cycles()).sum();
+        assert_eq!(batch.total_cycles(), sum);
+        assert!(batch.max_image_cycles() <= batch.total_cycles());
+        assert!(
+            batch.max_image_cycles() >= batch.mean_cycles_per_image(),
+            "max {} < mean {}",
+            batch.max_image_cycles(),
+            batch.mean_cycles_per_image()
+        );
+        // distinct image seeds: not every image is identical in general,
+        // but all of them must be positive work
+        for r in &batch.per_image {
+            assert!(r.total_cycles() > 0.0);
+        }
+        let j = batch.to_json();
+        assert_eq!(j.get("n_images").as_usize(), Some(3));
+        assert_eq!(j.get("per_image").as_arr().map(|a| a.len()), Some(3));
+    }
+
+    #[test]
+    fn image_seed_keeps_image_zero_on_base() {
+        assert_eq!(image_seed(0x5EED, 0), 0x5EED);
+        assert_ne!(image_seed(0x5EED, 1), 0x5EED);
+        assert_ne!(image_seed(0x5EED, 1), image_seed(0x5EED, 2));
     }
 
     #[test]

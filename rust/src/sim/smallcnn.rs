@@ -12,14 +12,20 @@ use std::path::Path;
 use super::functional::{
     conv_forward, conv_forward_rows, relu_bias_pool, LayerScales,
 };
-use super::workload::LayerTrace;
-use super::{layer_aggregate, simulate_layer_aggregated, LayerSimResult};
+use super::workload::{BatchAggregate, LayerTrace, TraceAggregate};
+use super::{
+    layer_aggregate, simulate_layer_aggregated, simulate_layer_batch,
+    BatchSimResult, LayerSimResult,
+};
 use crate::config::{HardwareConfig, SimConfig};
 use crate::mapping::{MappedNetwork, MappingScheme};
 use crate::nn::tensor_io::{load_tensors, AnyTensor};
 use crate::nn::{im2col, NetworkSpec, Tensor};
+use crate::pruning::synthetic::generate_layer;
 use crate::pruning::NetworkWeights;
 use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::util::threadpool;
 use crate::xbar::CellGeometry;
 
 /// SmallCNN model bundle: weights + metadata + mapped layers.
@@ -157,45 +163,28 @@ impl SmallCnn {
         logits
     }
 
-    /// Exact-mode cycle/energy simulation of one image through every
-    /// mapped conv layer: activations come from the functional float
-    /// forward, each layer's real trace is aggregated once
-    /// ([`layer_aggregate`]) and costed in closed form — the same
-    /// trace-aggregated engine as the analytic VGG16 sweeps, with no
-    /// per-position accounting loop. Like [`crate::sim::simulate_network`],
-    /// zero-input skipping and block-switch cycles apply only to schemes
-    /// with an Input Preprocessing Unit (not the naive baseline), and
-    /// each layer's im2col rows are extracted once and shared between
-    /// the trace and the compute.
-    pub fn simulate_exact(
+    /// Per-layer exact activation traces for one image: the functional
+    /// float forward drives each layer, and its im2col rows — extracted
+    /// once and shared between the trace and the compute — feed
+    /// [`LayerTrace::from_rows`]. This is the per-image feeder for both
+    /// [`SmallCnn::simulate_exact`] and the batched
+    /// [`SmallCnn::simulate_exact_batch`].
+    pub fn exact_traces(
         &self,
         mapped: &MappedNetwork,
         x: &Tensor,
         hw: &HardwareConfig,
-        sim_cfg: &SimConfig,
-    ) -> Vec<LayerSimResult> {
-        assert_eq!(x.shape[0], 1, "simulate_exact takes a single image");
-        let has_ipu = mapped.scheme != "naive";
-        let skip = sim_cfg.zero_detection && has_ipu;
-        let switch_cycles = if has_ipu { sim_cfg.block_switch_cycles } else { 0.0 };
+    ) -> Vec<LayerTrace> {
+        assert_eq!(x.shape[0], 1, "exact_traces takes a single image");
         let mut cur = Tensor {
             shape: vec![1, x.shape[1], x.shape[2], x.shape[3]],
             data: x.data.clone(),
         };
-        let mut results = Vec::with_capacity(mapped.layers.len());
+        let mut traces = Vec::with_capacity(mapped.layers.len());
         for (li, ml) in mapped.layers.iter().enumerate() {
             let (h, w) = (cur.shape[2], cur.shape[3]);
             let rows = im2col(&cur, 0);
-            let trace = LayerTrace::from_rows(&rows, cur.shape[1]);
-            let agg = layer_aggregate(ml, &trace);
-            results.push(simulate_layer_aggregated(
-                ml,
-                trace.n_positions,
-                &agg,
-                hw,
-                skip,
-                switch_cycles,
-            ));
+            traces.push(LayerTrace::from_rows(&rows, cur.shape[1]));
             let conv =
                 conv_forward_rows(ml, &rows, h, w, self.scales[li], hw, false);
             let staged =
@@ -205,7 +194,145 @@ impl SmallCnn {
                 data: staged.data,
             };
         }
-        results
+        traces
+    }
+
+    /// Exact-mode cycle/energy simulation of one image through every
+    /// mapped conv layer: real per-layer traces ([`SmallCnn::exact_traces`])
+    /// aggregated once ([`layer_aggregate`]) and costed in closed form —
+    /// the same trace-aggregated engine as the analytic VGG16 sweeps,
+    /// with no per-position accounting loop. Like
+    /// [`crate::sim::simulate_network`], zero-input skipping and
+    /// block-switch cycles apply only to schemes with an Input
+    /// Preprocessing Unit (not the naive baseline).
+    pub fn simulate_exact(
+        &self,
+        mapped: &MappedNetwork,
+        x: &Tensor,
+        hw: &HardwareConfig,
+        sim_cfg: &SimConfig,
+    ) -> Vec<LayerSimResult> {
+        assert_eq!(x.shape[0], 1, "simulate_exact takes a single image");
+        let (skip, switch_cycles) = super::ipu_policy(&mapped.scheme, sim_cfg);
+        let traces = self.exact_traces(mapped, x, hw);
+        mapped
+            .layers
+            .iter()
+            .zip(traces.iter())
+            .map(|(ml, trace)| {
+                let agg = layer_aggregate(ml, trace);
+                simulate_layer_aggregated(
+                    ml,
+                    trace.n_positions,
+                    &agg,
+                    hw,
+                    skip,
+                    switch_cycles,
+                )
+            })
+            .collect()
+    }
+
+    /// Batched exact simulation of `[N, C, H, W]` images: per-image
+    /// traces from the functional forward (images in parallel over
+    /// `threads` workers — each image's forward is independent, and
+    /// results are collected in image order so bit-exactness holds) are
+    /// accumulated per layer into a [`BatchAggregate`] and costed in one
+    /// closed-form pass per layer ([`simulate_layer_batch`], shared
+    /// per-block cost tables). The per-image results are bit-exact with
+    /// N independent [`SmallCnn::simulate_exact`] calls.
+    pub fn simulate_exact_batch(
+        &self,
+        mapped: &MappedNetwork,
+        batch_x: &Tensor,
+        hw: &HardwareConfig,
+        sim_cfg: &SimConfig,
+        threads: usize,
+    ) -> BatchSimResult {
+        let (skip, switch_cycles) = super::ipu_policy(&mapped.scheme, sim_cfg);
+        let n = batch_x.shape[0];
+        let n_layers = mapped.layers.len();
+        let idxs: Vec<usize> = (0..n).collect();
+        let per_image_aggs: Vec<Vec<(usize, TraceAggregate)>> =
+            threadpool::parallel_map(&idxs, threads, |i| {
+                let img = image(batch_x, *i);
+                self.exact_traces(mapped, &img, hw)
+                    .into_iter()
+                    .enumerate()
+                    .map(|(li, t)| {
+                        (t.n_positions, layer_aggregate(&mapped.layers[li], &t))
+                    })
+                    .collect()
+            });
+        let mut batches: Vec<BatchAggregate> =
+            (0..n_layers).map(|_| BatchAggregate::new()).collect();
+        let mut positions = vec![0usize; n_layers];
+        for img_aggs in per_image_aggs {
+            for (li, (pos, agg)) in img_aggs.into_iter().enumerate() {
+                positions[li] = pos;
+                batches[li].push(agg);
+            }
+        }
+        let per_layer: Vec<Vec<LayerSimResult>> = mapped
+            .layers
+            .iter()
+            .enumerate()
+            .map(|(li, ml)| {
+                simulate_layer_batch(
+                    ml,
+                    positions[li],
+                    &batches[li],
+                    hw,
+                    skip,
+                    switch_cycles,
+                )
+            })
+            .collect();
+        super::collect_batch(mapped, n, per_layer)
+    }
+
+    /// Fully synthetic SmallCNN-shaped bundle (no `make artifacts`
+    /// needed): Table-II-style pattern-pruned weights, zero biases, unit
+    /// scales, pools exactly where the spec's feature maps halve. Used
+    /// by the `batch-sim` CLI demo and the determinism regression tests.
+    pub fn synthetic(spec: NetworkSpec, seed: u64) -> SmallCnn {
+        let mut rng = Rng::seed_from(seed);
+        let mut layers = Vec::with_capacity(spec.layers.len());
+        let mut biases = Vec::with_capacity(spec.layers.len());
+        let mut scales = Vec::with_capacity(spec.layers.len());
+        for l in &spec.layers {
+            let n_pat = (l.cout * l.cin).min(6).max(1);
+            layers.push(generate_layer(l.cout, l.cin, n_pat, 0.85, 0.35, &mut rng));
+            biases.push(vec![0.0f32; l.cout]);
+            scales.push(LayerScales { sx: 1.0, sw: 1.0 });
+        }
+        let n = spec.layers.len();
+        let pool_after: Vec<bool> = (0..n)
+            .map(|i| {
+                i + 1 < n && spec.layers[i + 1].fmap * 2 == spec.layers[i].fmap
+            })
+            .collect();
+        let n_classes = 10;
+        let c_last = spec.layers[n - 1].cout;
+        let fc_w = Tensor::from_vec(
+            &[c_last, n_classes],
+            (0..c_last * n_classes)
+                .map(|_| (rng.f32() - 0.5) * 0.1)
+                .collect(),
+        );
+        let fc_b = vec![0.0f32; n_classes];
+        let weights = NetworkWeights::new(spec.clone(), layers);
+        SmallCnn {
+            spec,
+            weights,
+            biases,
+            fc_w,
+            fc_b,
+            scales,
+            pool_after,
+            n_classes,
+            meta: Json::Null,
+        }
     }
 }
 
@@ -275,6 +402,83 @@ mod tests {
         let i1 = image(&b, 1);
         assert_eq!(i1.shape, vec![1, 1, 2, 2]);
         assert_eq!(i1.data, vec![5., 6., 7., 8.]);
+    }
+
+    use crate::mapping::pattern::PatternMapping;
+    use crate::nn::ConvLayer;
+
+    fn tiny_model() -> SmallCnn {
+        let spec = NetworkSpec {
+            name: "tiny".into(),
+            layers: vec![
+                ConvLayer { name: "c0".into(), cin: 2, cout: 6, fmap: 6 },
+                ConvLayer { name: "c1".into(), cin: 6, cout: 8, fmap: 3 },
+            ],
+        };
+        SmallCnn::synthetic(spec, 11)
+    }
+
+    fn random_batch(n: usize, c: usize, hw: usize, seed: u64) -> Tensor {
+        let mut rng = Rng::seed_from(seed);
+        let mut x = Tensor::zeros(&[n, c, hw, hw]);
+        for v in x.data.iter_mut() {
+            *v = if rng.chance(0.4) { 0.0 } else { rng.f32() };
+        }
+        x
+    }
+
+    #[test]
+    fn synthetic_bundle_maps_and_pools_where_fmaps_halve() {
+        let m = tiny_model();
+        // 6 → 3 feature map: pool after layer 0, never after the last
+        assert_eq!(m.pool_after, vec![true, false]);
+        assert_eq!(m.biases.len(), 2);
+        assert_eq!(m.fc_b.len(), 10);
+        let hw = HardwareConfig::smallcnn_functional();
+        let mapped = m.map(&PatternMapping, &hw);
+        mapped.validate().expect("synthetic bundle must map validly");
+        // the forward must run end to end and produce one logit per class
+        let x = random_batch(1, 2, 6, 3);
+        let logits = m.forward(&mapped, &x, &hw, false);
+        assert_eq!(logits.len(), 10);
+    }
+
+    #[test]
+    fn exact_batch_matches_independent_exact_runs() {
+        let m = tiny_model();
+        let hw = HardwareConfig::smallcnn_functional();
+        let mapped = m.map(&PatternMapping, &hw);
+        let sim_cfg = SimConfig::default();
+        let batch_x = random_batch(3, 2, 6, 5);
+        let batch = m.simulate_exact_batch(&mapped, &batch_x, &hw, &sim_cfg, 2);
+        assert_eq!(batch.n_images(), 3);
+        for i in 0..3 {
+            let single =
+                m.simulate_exact(&mapped, &image(&batch_x, i), &hw, &sim_cfg);
+            let bi = &batch.per_image[i].layers;
+            assert_eq!(bi.len(), single.len());
+            for (a, b) in bi.iter().zip(single.iter()) {
+                assert_eq!(a.ou_ops, b.ou_ops, "image {i}");
+                assert_eq!(a.skipped_ou_ops, b.skipped_ou_ops, "image {i}");
+                assert_eq!(a.cycles, b.cycles, "image {i}");
+                assert_eq!(a.energy, b.energy, "image {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn exact_traces_feed_the_single_image_path() {
+        let m = tiny_model();
+        let hw = HardwareConfig::smallcnn_functional();
+        let mapped = m.map(&PatternMapping, &hw);
+        let x = random_batch(1, 2, 6, 9);
+        let traces = m.exact_traces(&mapped, &x, &hw);
+        assert_eq!(traces.len(), 2);
+        // layer 0 sees the raw 6x6 input, layer 1 the pooled 3x3 map
+        assert_eq!(traces[0].n_positions, 36);
+        assert_eq!(traces[0].cin, 2);
+        assert_eq!(traces[1].n_positions, 9);
+        assert_eq!(traces[1].cin, 6);
     }
     // full-bundle tests live in tests/e2e.rs (require artifacts/)
 }

@@ -12,6 +12,23 @@
 //! consumes (`sim::simulate_layer_aggregated`), and [`TraceBuilder`] is
 //! the incremental feeder for exact-mode traces built position by
 //! position from real activations.
+//!
+//! # Merge / batch invariants
+//!
+//! The batched multi-image simulator rests on two invariants pinned by
+//! `tests/prop_invariants.rs`:
+//!
+//! 1. **Merge = concat.** An aggregate is a vector of integer position
+//!    counts, so [`TraceAggregate::merge`] over per-image aggregates
+//!    (built from the *same* block-key set) is bit-identical to
+//!    aggregating the concatenation of the underlying traces. Merging
+//!    never loses information the closed-form costing needs.
+//! 2. **Batch = Σ singles.** [`BatchAggregate`] keeps the per-image
+//!    aggregates (alongside their running merge), and the batch engine
+//!    costs each image through the same closed-form path — with the
+//!    per-block cost tables computed once per layer — so batched
+//!    results are bit-exact with summing independent per-image
+//!    simulations, in image order.
 
 use crate::config::SimConfig;
 use crate::pruning::Pattern;
@@ -197,6 +214,27 @@ pub struct TraceAggregate {
 }
 
 impl TraceAggregate {
+    /// Fold another image's aggregate — built from the **same** block
+    /// key set — into this one. All fields are plain integer counts, so
+    /// merging per-image aggregates is bit-identical to aggregating the
+    /// concatenation of their traces (module-doc invariant #1).
+    pub fn merge(&mut self, other: &TraceAggregate) {
+        assert_eq!(
+            self.patterns, other.patterns,
+            "merge requires aggregates built from the same key set"
+        );
+        assert_eq!(
+            self.skippable.len(),
+            other.skippable.len(),
+            "merge requires aggregates over the same channel count"
+        );
+        self.n_positions += other.n_positions;
+        for (a, b) in self.skippable.iter_mut().zip(other.skippable.iter()) {
+            *a += *b;
+        }
+        self.fully_skippable += other.fully_skippable;
+    }
+
     /// Positions where a block keyed `(ch, pattern)` is skippable.
     /// Zero patterns are never skippable.
     pub fn skippable_positions(&self, ch: usize, pattern: Pattern) -> u64 {
@@ -214,6 +252,68 @@ impl TraceAggregate {
     /// Positions where every key is skippable simultaneously.
     pub fn fully_skippable_positions(&self) -> u64 {
         self.fully_skippable
+    }
+}
+
+/// One layer's aggregates across the images of a batch: every per-image
+/// [`TraceAggregate`] in image order (the batch engine reports
+/// per-image results), with the whole-batch merge available on demand
+/// for batch-level statistics and cross-checks.
+#[derive(Debug, Clone, Default)]
+pub struct BatchAggregate {
+    per_image: Vec<TraceAggregate>,
+}
+
+impl BatchAggregate {
+    pub fn new() -> BatchAggregate {
+        BatchAggregate::default()
+    }
+
+    /// Append one image's aggregate. Panics when it was not built from
+    /// the same block-key set as the previous images.
+    pub fn push(&mut self, agg: TraceAggregate) {
+        if let Some(first) = self.per_image.first() {
+            assert_eq!(
+                first.patterns, agg.patterns,
+                "push requires aggregates built from the same key set"
+            );
+            assert_eq!(
+                first.skippable.len(),
+                agg.skippable.len(),
+                "push requires aggregates over the same channel count"
+            );
+        }
+        self.per_image.push(agg);
+    }
+
+    pub fn n_images(&self) -> usize {
+        self.per_image.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.per_image.is_empty()
+    }
+
+    /// Per-image aggregates, in push (image) order.
+    pub fn images(&self) -> &[TraceAggregate] {
+        &self.per_image
+    }
+
+    /// Merge of every pushed aggregate (`None` for an empty batch),
+    /// computed on demand — the hot batched path only reads
+    /// [`BatchAggregate::images`], so pushes stay O(1).
+    pub fn merged(&self) -> Option<TraceAggregate> {
+        let mut it = self.per_image.iter();
+        let mut m = it.next()?.clone();
+        for a in it {
+            m.merge(a);
+        }
+        Some(m)
+    }
+
+    /// Total trace positions across the whole batch.
+    pub fn total_positions(&self) -> usize {
+        self.per_image.iter().map(|a| a.n_positions).sum()
     }
 }
 
@@ -399,6 +499,79 @@ mod tests {
                 .count() as u64;
             assert_eq!(agg.skippable_positions(ch, p), brute, "{p:?}");
         }
+    }
+
+    #[test]
+    fn merge_matches_concatenated_trace() {
+        let cfg = SimConfig {
+            dead_channel_ratio: 0.15,
+            zero_blob_ratio: 0.35,
+            ..Default::default()
+        };
+        let keys = vec![
+            (0usize, Pattern(0b1)),
+            (1, Pattern(0b110)),
+            (2, Pattern(0x1FF)),
+            (2, Pattern::ALL_ZERO),
+        ];
+        let mut rng = Rng::seed_from(17);
+        let a = LayerTrace::synthetic(3, 24, &cfg, &mut rng);
+        let b = LayerTrace::synthetic(3, 9, &cfg, &mut rng);
+        let mut merged = a.aggregate(&keys);
+        merged.merge(&b.aggregate(&keys));
+
+        let mut masks = a.masks.clone();
+        masks.extend_from_slice(&b.masks);
+        let concat = LayerTrace { n_positions: 33, cin: 3, masks }.aggregate(&keys);
+        assert_eq!(merged.n_positions, concat.n_positions);
+        assert_eq!(
+            merged.fully_skippable_positions(),
+            concat.fully_skippable_positions()
+        );
+        for &(ch, p) in &keys {
+            assert_eq!(
+                merged.skippable_positions(ch, p),
+                concat.skippable_positions(ch, p),
+                "key ({ch}, {p:?})"
+            );
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "same key set")]
+    fn merge_rejects_mismatched_keys() {
+        let t = LayerTrace::dense(2, 4);
+        let mut a = t.aggregate(&[(0, Pattern(0b1))]);
+        let b = t.aggregate(&[(0, Pattern(0b11))]);
+        a.merge(&b);
+    }
+
+    #[test]
+    fn batch_aggregate_accumulates_in_image_order() {
+        let cfg = SimConfig::default();
+        let keys = vec![(0usize, Pattern(0b101)), (1, Pattern(0b1))];
+        let mut rng = Rng::seed_from(33);
+        let mut batch = BatchAggregate::new();
+        assert!(batch.is_empty());
+        assert!(batch.merged().is_none());
+        let mut want_positions = 0usize;
+        let mut want_skippable = 0u64;
+        for i in 0..3 {
+            let t = LayerTrace::synthetic(2, 8 + i, &cfg, &mut rng);
+            want_positions += t.n_positions;
+            let agg = t.aggregate(&keys);
+            want_skippable += agg.skippable_positions(0, Pattern(0b101));
+            batch.push(agg);
+        }
+        assert_eq!(batch.n_images(), 3);
+        assert_eq!(batch.images().len(), 3);
+        assert_eq!(batch.total_positions(), want_positions);
+        let merged = batch.merged().unwrap();
+        assert_eq!(merged.n_positions, want_positions);
+        assert_eq!(
+            merged.skippable_positions(0, Pattern(0b101)),
+            want_skippable
+        );
     }
 
     #[test]

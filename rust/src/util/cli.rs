@@ -130,6 +130,12 @@ impl Args {
             .map_err(|_| format!("--{name} expects an integer"))
     }
 
+    pub fn get_u64(&self, name: &str) -> Result<u64, String> {
+        self.get(name)
+            .parse()
+            .map_err(|_| format!("--{name} expects an unsigned integer"))
+    }
+
     pub fn get_f64(&self, name: &str) -> Result<f64, String> {
         self.get(name)
             .parse()
@@ -211,5 +217,16 @@ mod tests {
     fn bad_number_reported() {
         let a = Args::new("t").opt("n", "abc", "").parse(argv(&[])).unwrap();
         assert!(a.get_usize("n").is_err());
+    }
+
+    #[test]
+    fn u64_parses_large_seeds() {
+        let a = Args::new("t")
+            .opt("seed", "0", "")
+            .parse(argv(&["--seed", "18446744073709551615"]))
+            .unwrap();
+        assert_eq!(a.get_u64("seed").unwrap(), u64::MAX);
+        let b = Args::new("t").opt("seed", "x", "").parse(argv(&[])).unwrap();
+        assert!(b.get_u64("seed").is_err());
     }
 }

@@ -9,6 +9,16 @@ use super::rng::Rng;
 
 pub const DEFAULT_CASES: u32 = 128;
 
+/// Case-count override for CI sweeps: when the `PROP_CASES` env var is
+/// set (and parseable), it replaces the caller's default — the nightly
+/// cron job reruns the same properties at a much higher count.
+pub fn cases(default_cases: u32) -> u32 {
+    std::env::var("PROP_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default_cases)
+}
+
 /// Run `body` for `cases` deterministic seeds. Panics (with the failing
 /// seed) on the first failure.
 pub fn check<F: Fn(&mut Rng)>(name: &str, cases: u32, body: F) {
@@ -104,6 +114,20 @@ mod tests {
             second.lock().unwrap().push(rng.next_u64());
         });
         assert_eq!(*first.lock().unwrap(), *second.lock().unwrap());
+    }
+
+    #[test]
+    fn cases_env_override() {
+        // PROP_CASES is unset in normal runs -> default passes through.
+        // (Set only by the nightly CI job; avoid mutating process env in
+        // a parallel test binary.)
+        match std::env::var("PROP_CASES")
+            .ok()
+            .and_then(|v| v.parse::<u32>().ok())
+        {
+            Some(want) => assert_eq!(cases(7), want),
+            None => assert_eq!(cases(7), 7),
+        }
     }
 
     #[test]

@@ -1,0 +1,155 @@
+//! Deterministic-seed regression tests (ISSUE-2): the synthetic trace →
+//! aggregate → closed-form costing pipeline and the SmallCNN exact-mode
+//! simulation must be byte-stable for a pinned seed, catching accidental
+//! nondeterminism (e.g. in the histogram pass or the parallel layer
+//! map).
+//!
+//! Each test renders its `LayerSimResult`s as pretty JSON and compares
+//! them against a snapshot under `tests/snapshots/`. A missing snapshot
+//! is written ("blessed") on first run so a fresh checkout
+//! self-bootstraps — commit the generated file to pin the bytes.
+//! Independently of the snapshot, every test re-runs its pipeline and
+//! asserts in-process byte equality (and thread-count invariance where
+//! a thread pool is involved), so nondeterminism is caught even before
+//! a snapshot exists.
+
+use std::path::PathBuf;
+
+use rram_pattern_accel::config::{HardwareConfig, SimConfig};
+use rram_pattern_accel::mapping::{pattern::PatternMapping, MappingScheme};
+use rram_pattern_accel::nn::{ConvLayer, NetworkSpec, Tensor};
+use rram_pattern_accel::pruning::synthetic::{generate_layer, CIFAR10};
+use rram_pattern_accel::pruning::NetworkWeights;
+use rram_pattern_accel::sim::smallcnn::SmallCnn;
+use rram_pattern_accel::sim::workload::LayerTrace;
+use rram_pattern_accel::sim::{self, simulate_layer};
+use rram_pattern_accel::util::json::Json;
+use rram_pattern_accel::util::rng::Rng;
+use rram_pattern_accel::xbar::CellGeometry;
+
+fn snapshot_path(name: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/snapshots")
+        .join(name)
+}
+
+/// Compare `rendered` against the named snapshot, blessing the snapshot
+/// when it does not exist yet.
+fn assert_snapshot(name: &str, rendered: &str) {
+    let path = snapshot_path(name);
+    if !path.exists() {
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, rendered).unwrap();
+        eprintln!(
+            "blessed new snapshot {} — commit it to pin the bytes",
+            path.display()
+        );
+        return;
+    }
+    let want = std::fs::read_to_string(&path).unwrap();
+    assert_eq!(
+        rendered, want,
+        "snapshot {name} drifted; delete the file to re-bless if the \
+         change is intentional"
+    );
+}
+
+/// Table-II-calibrated synthetic layer, pattern-mapped, costed against
+/// a pinned-seed synthetic trace.
+fn synthetic_layer_json() -> String {
+    let hw = HardwareConfig::default();
+    let geom = CellGeometry::from_hw(&hw);
+    let mut rng = Rng::seed_from(42);
+    let w = generate_layer(
+        64,
+        16,
+        6,
+        CIFAR10.sparsity,
+        CIFAR10.all_zero_ratio,
+        &mut rng,
+    );
+    let l = ConvLayer { name: "snap".into(), cout: 64, cin: 16, fmap: 8 };
+    let ml = PatternMapping.map_layer(0, &l, &w, &geom);
+    let sim_cfg = SimConfig::default();
+    let mut trng = Rng::seed_from(sim_cfg.seed);
+    let trace = LayerTrace::synthetic(l.cin, 48, &sim_cfg, &mut trng);
+    let r = simulate_layer(
+        &ml,
+        l.positions(),
+        &trace,
+        &hw,
+        true,
+        sim_cfg.block_switch_cycles,
+    );
+    r.to_json().to_string_pretty()
+}
+
+#[test]
+fn synthetic_layer_sim_is_byte_stable() {
+    let a = synthetic_layer_json();
+    let b = synthetic_layer_json();
+    assert_eq!(a, b, "pipeline not deterministic across in-process runs");
+    assert_snapshot("synthetic_layer_sim_seed42.json", &a);
+}
+
+/// Synthetic two-conv SmallCNN bundle driven through the exact-mode
+/// (real-activation-trace) simulation.
+fn smallcnn_exact_json() -> String {
+    let spec = NetworkSpec {
+        name: "snapnet".into(),
+        layers: vec![
+            ConvLayer { name: "c0".into(), cin: 3, cout: 8, fmap: 8 },
+            ConvLayer { name: "c1".into(), cin: 8, cout: 12, fmap: 8 },
+        ],
+    };
+    let model = SmallCnn::synthetic(spec, 7);
+    let hw = HardwareConfig::smallcnn_functional();
+    let mapped = model.map(&PatternMapping, &hw);
+    let mut rng = Rng::seed_from(0xDECAF);
+    let mut x = Tensor::zeros(&[1, 3, 8, 8]);
+    for v in x.data.iter_mut() {
+        *v = if rng.chance(0.4) { 0.0 } else { rng.f32() };
+    }
+    let results = model.simulate_exact(&mapped, &x, &hw, &SimConfig::default());
+    Json::Arr(results.iter().map(|r| r.to_json()).collect()).to_string_pretty()
+}
+
+#[test]
+fn smallcnn_exact_sim_is_byte_stable() {
+    let a = smallcnn_exact_json();
+    let b = smallcnn_exact_json();
+    assert_eq!(a, b, "exact-mode pipeline not deterministic");
+    assert_snapshot("smallcnn_exact_sim_seed7.json", &a);
+}
+
+/// Batched simulation bytes must not depend on the worker thread count
+/// — the parallel layer map may not change accumulation order.
+#[test]
+fn batch_sim_bytes_are_thread_invariant() {
+    let hw = HardwareConfig::default();
+    let geom = CellGeometry::from_hw(&hw);
+    let spec = NetworkSpec {
+        name: "tnet".into(),
+        layers: vec![
+            ConvLayer { name: "c0".into(), cin: 3, cout: 16, fmap: 8 },
+            ConvLayer { name: "c1".into(), cin: 16, cout: 24, fmap: 8 },
+            ConvLayer { name: "c2".into(), cin: 24, cout: 24, fmap: 4 },
+        ],
+    };
+    let mut rng = Rng::seed_from(123);
+    let layers = spec
+        .layers
+        .iter()
+        .map(|l| generate_layer(l.cout, l.cin, 5, 0.85, 0.35, &mut rng))
+        .collect();
+    let nw = NetworkWeights::new(spec.clone(), layers);
+    let mapped = PatternMapping.map_network(&nw, &geom, 2);
+    let sim_cfg = SimConfig::default();
+    let a = sim::simulate_network_batch(&mapped, &spec, &hw, &sim_cfg, 3, 1)
+        .to_json()
+        .to_string_pretty();
+    let b = sim::simulate_network_batch(&mapped, &spec, &hw, &sim_cfg, 3, 4)
+        .to_json()
+        .to_string_pretty();
+    assert_eq!(a, b, "batch JSON differs across thread counts");
+}

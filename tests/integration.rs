@@ -175,3 +175,246 @@ fn fig7_band_cifar10_full_scale() {
     let eff = naive as f64 / pat as f64;
     assert!(eff > 3.0 && eff < 8.0, "area efficiency {eff} out of band");
 }
+
+/// Coordinator failure-injection suite (ISSUE-2): flaky backends
+/// exercise retry/requeue, queued requests past their deadline get a
+/// timely error reply, near-deadline requests fire partial batches
+/// early, and the failed-request alarm trips under concurrent
+/// submitters.
+mod coordinator_failure_injection {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    use std::sync::Arc;
+    use std::time::{Duration, Instant};
+
+    use rram_pattern_accel::coordinator::{
+        Coordinator, CoordinatorConfig, CostModel, InferBackend,
+    };
+
+    /// Sums each request's two inputs; fails the first `fail_first`
+    /// run_batch calls with an injected error.
+    struct FlakyBackend {
+        batch: usize,
+        fail_first: u64,
+        calls: Arc<AtomicU64>,
+    }
+
+    impl InferBackend for FlakyBackend {
+        fn input_len(&self) -> usize {
+            2
+        }
+        fn output_len(&self) -> usize {
+            1
+        }
+        fn batch_size(&self) -> usize {
+            self.batch
+        }
+        fn run_batch(&self, batch: &[f32]) -> Result<Vec<f32>, String> {
+            let n = self.calls.fetch_add(1, Ordering::Relaxed);
+            if n < self.fail_first {
+                return Err(format!("injected failure #{n}"));
+            }
+            Ok((0..self.batch)
+                .map(|i| batch[i * 2] + batch[i * 2 + 1])
+                .collect())
+        }
+    }
+
+    /// Single-slot backend that holds the worker for `delay` per batch.
+    struct SlowBackend {
+        delay: Duration,
+    }
+
+    impl InferBackend for SlowBackend {
+        fn input_len(&self) -> usize {
+            2
+        }
+        fn output_len(&self) -> usize {
+            1
+        }
+        fn batch_size(&self) -> usize {
+            1
+        }
+        fn run_batch(&self, batch: &[f32]) -> Result<Vec<f32>, String> {
+            std::thread::sleep(self.delay);
+            Ok(vec![batch[0] + batch[1]])
+        }
+    }
+
+    const LONG: Duration = Duration::from_secs(10);
+
+    #[test]
+    fn flaky_backend_retries_transparently() {
+        let calls = Arc::new(AtomicU64::new(0));
+        let calls2 = calls.clone();
+        let c = Coordinator::start_with(
+            move || FlakyBackend { batch: 2, fail_first: 1, calls: calls2 },
+            CoordinatorConfig {
+                max_wait: Duration::from_millis(200),
+                max_retries: 1,
+                ..Default::default()
+            },
+            None,
+        );
+        let rx1 = c.submit(vec![1.0, 2.0]);
+        let rx2 = c.submit(vec![3.0, 4.0]);
+        let r1 = rx1.recv_timeout(LONG).expect("reply 1");
+        let r2 = rx2.recv_timeout(LONG).expect("reply 2");
+        // the first run failed, the retry succeeded: requesters never
+        // see the injected error
+        assert_eq!(r1.logits(), &[3.0][..]);
+        assert_eq!(r2.logits(), &[7.0][..]);
+        assert_eq!(c.metrics.retried_batches.load(Ordering::Relaxed), 1);
+        assert_eq!(c.metrics.failed_requests.load(Ordering::Relaxed), 0);
+        assert_eq!(c.metrics.requests.load(Ordering::Relaxed), 2);
+        assert_eq!(calls.load(Ordering::Relaxed), 2);
+        c.shutdown();
+    }
+
+    #[test]
+    fn persistent_failure_exhausts_retries_then_reports() {
+        let calls = Arc::new(AtomicU64::new(0));
+        let calls2 = calls.clone();
+        let c = Coordinator::start_with(
+            move || FlakyBackend {
+                batch: 2,
+                fail_first: u64::MAX,
+                calls: calls2,
+            },
+            CoordinatorConfig {
+                max_wait: Duration::from_millis(5),
+                max_retries: 1,
+                alarm_threshold: 2,
+                ..Default::default()
+            },
+            None,
+        );
+        let reply = c.submit(vec![1.0, 2.0]).recv_timeout(LONG).expect("reply");
+        let err = reply.result.expect_err("exhausted retries must deliver");
+        assert!(err.contains("injected failure"), "{err}");
+        assert_eq!(calls.load(Ordering::Relaxed), 2, "original + one retry");
+        assert_eq!(c.metrics.retried_batches.load(Ordering::Relaxed), 1);
+        assert_eq!(c.metrics.failed_requests.load(Ordering::Relaxed), 1);
+        assert!(!c.metrics.failed_alarm(), "below threshold");
+        let reply2 = c.submit(vec![0.5, 0.5]).recv_timeout(LONG).expect("reply");
+        assert!(reply2.result.is_err());
+        assert_eq!(c.metrics.failed_requests.load(Ordering::Relaxed), 2);
+        assert!(c.metrics.failed_alarm(), "threshold 2 reached");
+        c.shutdown();
+    }
+
+    #[test]
+    fn queued_past_deadline_gets_timely_error() {
+        let c = Coordinator::start_with(
+            || SlowBackend { delay: Duration::from_millis(300) },
+            CoordinatorConfig {
+                max_wait: Duration::from_millis(1),
+                ..Default::default()
+            },
+            None,
+        );
+        // A occupies the single-slot backend for ~300 ms…
+        let rx_a = c.submit(vec![1.0, 2.0]);
+        std::thread::sleep(Duration::from_millis(50));
+        // …so B's 30 ms deadline passes while it waits in the queue.
+        let t0 = Instant::now();
+        let rx_b = c.submit_with_deadline(vec![3.0, 4.0], Duration::from_millis(30));
+        let rep_b = rx_b.recv_timeout(LONG).expect("B must get a reply");
+        let waited = t0.elapsed();
+        let err = rep_b.result.expect_err("B must see the deadline error");
+        assert!(err.contains("deadline"), "{err}");
+        assert!(waited < Duration::from_secs(5), "error not timely: {waited:?}");
+        assert_eq!(c.metrics.deadline_expired.load(Ordering::Relaxed), 1);
+        assert_eq!(c.metrics.failed_requests.load(Ordering::Relaxed), 1);
+        // A itself completes normally
+        let rep_a = rx_a.recv_timeout(LONG).expect("A completes");
+        assert_eq!(rep_a.logits(), &[3.0][..]);
+        c.shutdown();
+    }
+
+    #[test]
+    fn near_deadline_fires_partial_batch_early() {
+        let calls = Arc::new(AtomicU64::new(0));
+        let c = Coordinator::start_with(
+            move || FlakyBackend { batch: 8, fail_first: 0, calls },
+            CoordinatorConfig {
+                // without the deadline the batcher would wait 30 s
+                max_wait: Duration::from_secs(30),
+                ..Default::default()
+            },
+            None,
+        );
+        // 1.5 s deadline: generous enough that worker scheduling delay on
+        // a loaded CI machine cannot expire it, still far below the 30 s
+        // batch window it must cut short.
+        let rx = c.submit_with_deadline(vec![1.0, 2.0], Duration::from_millis(1500));
+        let rep = rx.recv_timeout(LONG).expect("batch must fire by the deadline");
+        assert!(rep.result.is_ok(), "{:?}", rep.result);
+        assert_eq!(rep.batch_fill, 1, "fired padded, not full");
+        assert_eq!(c.metrics.deadline_expired.load(Ordering::Relaxed), 0);
+        c.shutdown();
+    }
+
+    #[test]
+    fn alarm_trips_under_concurrent_failing_submitters() {
+        let calls = Arc::new(AtomicU64::new(0));
+        let c = Arc::new(Coordinator::start_with(
+            move || FlakyBackend {
+                batch: 4,
+                fail_first: u64::MAX,
+                calls,
+            },
+            CoordinatorConfig {
+                max_wait: Duration::from_millis(2),
+                max_retries: 1,
+                alarm_threshold: 5,
+                ..Default::default()
+            },
+            None,
+        ));
+        let mut handles = Vec::new();
+        for t in 0..8 {
+            let c2 = c.clone();
+            handles.push(std::thread::spawn(move || {
+                let rx = c2.submit(vec![t as f32, 1.0]);
+                let rep = rx.recv_timeout(LONG).expect("reply delivered");
+                assert!(rep.result.is_err(), "backend always fails");
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(c.metrics.failed_requests.load(Ordering::Relaxed), 8);
+        assert!(c.metrics.failed_alarm(), "threshold 5 < 8 failures");
+        assert!(c.metrics.retried_batches.load(Ordering::Relaxed) >= 1);
+    }
+
+    #[test]
+    fn cost_estimates_attached_and_track_input_sparsity() {
+        let calls = Arc::new(AtomicU64::new(0));
+        let model = CostModel {
+            dense_cycles: 1000.0,
+            dense_energy_pj: 500.0,
+            skip_slope: 1.0,
+        };
+        let c = Coordinator::start_with(
+            move || FlakyBackend { batch: 2, fail_first: 0, calls },
+            CoordinatorConfig {
+                max_wait: Duration::from_millis(200),
+                ..Default::default()
+            },
+            Some(model),
+        );
+        let rx_dense = c.submit(vec![1.0, 2.0]);
+        let rx_sparse = c.submit(vec![0.0, 2.0]);
+        let dense = rx_dense.recv_timeout(LONG).expect("dense reply");
+        let sparse = rx_sparse.recv_timeout(LONG).expect("sparse reply");
+        let cd = dense.cost.expect("estimate attached");
+        let cs = sparse.cost.expect("estimate attached");
+        assert_eq!(cd.input_zero_fraction, 0.0);
+        assert!((cs.input_zero_fraction - 0.5).abs() < 1e-12);
+        assert!((cd.est_cycles - 1000.0).abs() < 1e-9);
+        assert!(cs.est_cycles < cd.est_cycles, "sparser input is cheaper");
+        assert!(cs.est_energy_pj < cd.est_energy_pj);
+        c.shutdown();
+    }
+}

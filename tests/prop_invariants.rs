@@ -6,13 +6,18 @@ use rram_pattern_accel::mapping::{
     index, naive::NaiveMapping, ou_sparse::OuSparseMapping,
     pattern::PatternMapping, reconstruct_dense, MappingScheme,
 };
-use rram_pattern_accel::nn::{conv2d_ref, ConvLayer, Tensor};
+use rram_pattern_accel::nn::{conv2d_ref, ConvLayer, NetworkSpec, Tensor};
 use rram_pattern_accel::pruning::synthetic::generate_layer;
+use rram_pattern_accel::pruning::{NetworkWeights, Pattern};
 use rram_pattern_accel::sim::functional::{conv_forward, LayerScales};
-use rram_pattern_accel::sim::workload::LayerTrace;
-use rram_pattern_accel::sim::{simulate_layer, simulate_layer_reference};
+use rram_pattern_accel::sim::workload::{LayerTrace, TraceAggregate};
+use rram_pattern_accel::sim::{
+    image_seed, simulate_layer, simulate_layer_reference, simulate_network,
+    simulate_network_batch,
+};
 use rram_pattern_accel::util::prop;
 use rram_pattern_accel::util::rng::Rng;
+use rram_pattern_accel::xbar::energy::EnergyLedger;
 use rram_pattern_accel::xbar::CellGeometry;
 
 fn geom() -> CellGeometry {
@@ -33,7 +38,7 @@ fn rand_layer(rng: &mut Rng) -> (ConvLayer, Tensor) {
 /// naive scheme included).
 #[test]
 fn prop_all_schemes_reconstruct() {
-    prop::check("all schemes reconstruct", 40, |rng| {
+    prop::check("all schemes reconstruct", prop::cases(40), |rng| {
         let (l, w) = rand_layer(rng);
         for s in [
             &PatternMapping as &dyn MappingScheme,
@@ -51,7 +56,7 @@ fn prop_all_schemes_reconstruct() {
 /// stream for arbitrary layers.
 #[test]
 fn prop_index_stream_recovers_placement() {
-    prop::check("index stream recovers placement", 40, |rng| {
+    prop::check("index stream recovers placement", prop::cases(40), |rng| {
         let (l, w) = rand_layer(rng);
         let ml = PatternMapping.map_layer(0, &l, &w, &geom());
         let decoded = index::decode(&index::encode(&ml)).unwrap();
@@ -66,7 +71,7 @@ fn prop_index_stream_recovers_placement() {
 /// sparse inputs (the Output Indexing Unit undoes the reorder exactly).
 #[test]
 fn prop_mapped_compute_equals_conv() {
-    prop::check("mapped compute equals conv", 24, |rng| {
+    prop::check("mapped compute equals conv", prop::cases(24), |rng| {
         let hw = HardwareConfig::smallcnn_functional();
         let (l, w) = rand_layer(rng);
         let mut x = Tensor::zeros(&[1, l.cin, 5, 5]);
@@ -87,7 +92,7 @@ fn prop_mapped_compute_equals_conv() {
 /// exactly the static schedule size, and energy is monotone in work.
 #[test]
 fn prop_sim_conservation() {
-    prop::check("sim conservation", 24, |rng| {
+    prop::check("sim conservation", prop::cases(24), |rng| {
         let hw = HardwareConfig::default();
         let (l, w) = rand_layer(rng);
         let ml = PatternMapping.map_layer(0, &l, &w, &geom());
@@ -114,7 +119,7 @@ fn prop_sim_conservation() {
 /// random layers, schemes, traces and sim configs.
 #[test]
 fn prop_aggregated_engine_matches_reference() {
-    prop::check("aggregated engine matches reference", 48, |rng| {
+    prop::check("aggregated engine matches reference", prop::cases(48), |rng| {
         let hw = HardwareConfig::default();
         let (l, w) = rand_layer(rng);
         let ml = if rng.chance(0.5) {
@@ -155,11 +160,142 @@ fn prop_aggregated_engine_matches_reference() {
     });
 }
 
+/// ISSUE-2 merge invariant: merging per-image `TraceAggregate`s (built
+/// from one shared key set) is bit-identical to aggregating the
+/// concatenation of the underlying traces — every skippable count, the
+/// fully-skippable count and the position total.
+#[test]
+fn prop_merge_matches_concatenated_aggregate() {
+    prop::check("merge matches concat", prop::cases(48), |rng| {
+        let cin = rng.range(1, 6);
+        let n_keys = rng.range(1, 10);
+        // keys may repeat, hit any channel, and include the zero pattern
+        let keys: Vec<(usize, Pattern)> = (0..n_keys)
+            .map(|_| (rng.below(cin), Pattern(rng.below(512) as u16)))
+            .collect();
+        let cfg = SimConfig {
+            zero_blob_ratio: rng.f64() * 0.8,
+            dead_channel_ratio: rng.f64() * 0.4,
+            ..Default::default()
+        };
+        let n_traces = rng.range(1, 5);
+        let mut merged: Option<TraceAggregate> = None;
+        let mut all_masks: Vec<u16> = Vec::new();
+        let mut total_pos = 0usize;
+        for _ in 0..n_traces {
+            let n_pos = rng.range(1, 20);
+            let t = LayerTrace::synthetic(cin, n_pos, &cfg, rng);
+            all_masks.extend_from_slice(&t.masks);
+            total_pos += n_pos;
+            let agg = t.aggregate(&keys);
+            match &mut merged {
+                Some(m) => m.merge(&agg),
+                None => merged = Some(agg),
+            }
+        }
+        let merged = merged.unwrap();
+        let concat = LayerTrace { n_positions: total_pos, cin, masks: all_masks }
+            .aggregate(&keys);
+        assert_eq!(merged.n_positions, concat.n_positions);
+        assert_eq!(
+            merged.fully_skippable_positions(),
+            concat.fully_skippable_positions()
+        );
+        for &(ch, p) in &keys {
+            assert_eq!(
+                merged.skippable_positions(ch, p),
+                concat.skippable_positions(ch, p),
+                "key ({ch}, {p:?})"
+            );
+        }
+    });
+}
+
+/// ISSUE-2 tentpole invariant: `simulate_network_batch` over N images
+/// is bit-exact with N independent `simulate_network` runs seeded with
+/// `image_seed` — field by field per image per layer, and on the batch
+/// totals folded in image order.
+#[test]
+fn prop_batch_sim_equals_sum_of_singles() {
+    prop::check("batch equals singles", prop::cases(16), |rng| {
+        let hw = HardwareConfig::default();
+        let n_layers = rng.range(1, 3);
+        let mut spec_layers = Vec::new();
+        let mut weights = Vec::new();
+        let mut cin = rng.range(1, 5);
+        for li in 0..n_layers {
+            let cout = rng.range(1, 24);
+            let n_pat = rng.range(1, 7).min(cout * cin);
+            let w = generate_layer(
+                cout,
+                cin,
+                n_pat,
+                0.5 + rng.f64() * 0.45,
+                rng.f64() * 0.4,
+                rng,
+            );
+            spec_layers.push(ConvLayer {
+                name: format!("l{li}"),
+                cout,
+                cin,
+                fmap: 5,
+            });
+            weights.push(w);
+            cin = cout;
+        }
+        let spec = NetworkSpec { name: "prop".into(), layers: spec_layers };
+        let nw = NetworkWeights::new(spec.clone(), weights);
+        let mapped = if rng.chance(0.5) {
+            PatternMapping.map_network(&nw, &geom(), 1)
+        } else {
+            NaiveMapping.map_network(&nw, &geom(), 1)
+        };
+        let sim_cfg = SimConfig {
+            zero_blob_ratio: rng.f64() * 0.8,
+            dead_channel_ratio: rng.f64() * 0.4,
+            sample_positions: Some(rng.range(1, 24)),
+            seed: rng.next_u64(),
+            ..Default::default()
+        };
+        let n_images = rng.range(1, 5);
+        let batch =
+            simulate_network_batch(&mapped, &spec, &hw, &sim_cfg, n_images, 2);
+        assert_eq!(batch.n_images(), n_images);
+
+        let mut sum_cycles = 0.0;
+        let mut sum_ou_ops = 0.0;
+        let mut sum_energy = EnergyLedger::default();
+        for i in 0..n_images {
+            let cfg_i = SimConfig {
+                seed: image_seed(sim_cfg.seed, i as u64),
+                ..sim_cfg.clone()
+            };
+            let single = simulate_network(&mapped, &spec, &hw, &cfg_i, 1);
+            let bi = &batch.per_image[i];
+            assert_eq!(bi.layers.len(), single.layers.len());
+            for (a, b) in bi.layers.iter().zip(single.layers.iter()) {
+                assert_eq!(a.layer_idx, b.layer_idx);
+                assert_eq!(a.ou_ops, b.ou_ops, "image {i}");
+                assert_eq!(a.skipped_ou_ops, b.skipped_ou_ops, "image {i}");
+                assert_eq!(a.cycles, b.cycles, "image {i}");
+                assert_eq!(a.energy, b.energy, "image {i}");
+                assert_eq!(a.n_crossbars, b.n_crossbars);
+            }
+            sum_cycles += single.total_cycles();
+            sum_ou_ops += single.total_ou_ops();
+            sum_energy.add(&single.total_energy());
+        }
+        assert_eq!(batch.total_cycles(), sum_cycles, "total cycles");
+        assert_eq!(batch.total_ou_ops(), sum_ou_ops, "total ou ops");
+        assert_eq!(batch.total_energy(), sum_energy, "total energy");
+    });
+}
+
 /// Area monotonicity: higher weight sparsity never costs more pattern
 /// crossbar area (same pattern count, same shape).
 #[test]
 fn prop_area_monotone_in_sparsity() {
-    prop::check("area monotone in sparsity", 12, |rng| {
+    prop::check("area monotone in sparsity", prop::cases(12), |rng| {
         let cout = 64;
         let cin = 16;
         let seed_rng_a = &mut rng.fork(1);
