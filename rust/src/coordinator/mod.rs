@@ -1,36 +1,77 @@
-//! L3 serving coordinator: request router + dynamic batcher.
+//! L3 serving coordinator: sharded dispatch pipeline over a pool of
+//! inference workers.
 //!
-//! Requests are submitted from any thread; a worker thread collects them
-//! into fixed-size batches (padding the tail), executes the AOT-compiled
-//! functional model through [`crate::runtime::Engine`], and routes each
-//! logit vector back to its requester. std::thread + mpsc throughout
-//! (no async runtime exists in this offline image — and the paper's
-//! contribution is the accelerator, so L3 stays a thin driver per the
-//! architecture note in DESIGN.md §2).
+//! ```text
+//!   submit() / submit_with_deadline()          (any thread)
+//!        │
+//!        ▼
+//!   [shared admission queue]
+//!        │  dispatcher thread:
+//!        │    1. deadline admission (overdue requests get a timely
+//!        │       deadline-exceeded error instead of a stale result)
+//!        │    2. cost estimate (CostModel, one pass over the image)
+//!        │    3. overload admission (reject when the pool's outstanding
+//!        │       predicted cycles exceed `max_outstanding_cost`)
+//!        │    4. routing: least-loaded-by-predicted-cycles
+//!        │       (BalancePolicy::CostAware) or round-robin, skipping
+//!        │       quarantined workers
+//!        ▼
+//!   [per-worker request channels]
+//!        │  worker 0 … N-1, each its own failure domain:
+//!        │    own backend (built in-thread: the PJRT client is not
+//!        │    Send), own batcher (fill to batch_size, max_wait, or the
+//!        │    earliest pending deadline), own retries, own Metrics
+//!        │    shard. A worker that keeps failing batches is
+//!        │    quarantined by the dispatcher; its failures never touch
+//!        │    requests routed to its siblings.
+//!        ▼
+//!   [reply channel per request] — logits or the error, plus queue
+//!   timing, batch fill and the request's cost estimate.
+//! ```
 //!
-//! Serving policy (ISSUE-2 hardening):
+//! std::thread + mpsc throughout (no async runtime exists in this
+//! offline image — and the paper's contribution is the accelerator, so
+//! L3 stays a thin driver per the architecture note in DESIGN.md §2).
+//!
+//! Serving policy:
 //!
 //! - **Cost estimates** — with a [`CostModel`] attached, every [`Reply`]
 //!   carries a cheap trace-derived per-request cost estimate (cycles +
-//!   energy from the request's own input zero fraction).
-//! - **Deadlines** — [`Coordinator::submit_with_deadline`] requests are
-//!   dispatched no later than their deadline (a near-deadline request
-//!   fires its batch early, padded); a request whose deadline already
-//!   passed while queued gets a timely deadline-exceeded error `Reply`
-//!   instead of a stale result.
-//! - **Retry** — a failed batch is re-run up to
-//!   [`CoordinatorConfig::max_retries`] times before the backend error
-//!   is delivered to every requester.
-//! - **Alarm** — [`Metrics::failed_alarm`] trips once
-//!   [`Metrics::failed_requests`] reaches the configured threshold.
+//!   energy from the request's own input zero fraction). The model is
+//!   calibrated from real exact-mode activation traces
+//!   ([`CostModel::from_calibration`] over
+//!   [`crate::sim::CostCalibration`]) or, as a fallback, from one
+//!   analytic simulation ([`CostModel::from_sim`]).
+//! - **Deadlines** — per worker: [`Coordinator::submit_with_deadline`]
+//!   requests are dispatched no later than their deadline (a
+//!   near-deadline request fires its batch early, padded); a request
+//!   whose deadline already passed while queued gets a timely
+//!   deadline-exceeded error `Reply` instead of a stale result.
+//! - **Retry** — per worker: a failed batch is re-run up to
+//!   [`CoordinatorConfig::max_retries`] times on the worker that ran it
+//!   before the backend error is delivered to every requester. One
+//!   flaky backend retries (and, past
+//!   [`CoordinatorConfig::quarantine_after`] consecutive failures, is
+//!   routed around) without stalling or failing the rest of the pool.
+//! - **Alarm** — [`Metrics::failed_alarm`] trips once the *pool-wide*
+//!   failure count reaches the configured threshold (all shards of one
+//!   pool share a single alarm, so N workers keep the single-worker
+//!   sensitivity); [`Coordinator::merged_metrics`] merges the shards.
+//!
+//! With `workers == 1` (the default) the pipeline degenerates to the
+//! PR 2 single-worker batcher: one worker owns the only backend, the
+//! dispatcher forwards requests in submission order, and the admission
+//! shard *is* the worker shard — outputs are bit-exact with the
+//! pre-pool coordinator.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use crate::sim::NetworkSimResult;
+use crate::sim::{CostCalibration, NetworkSimResult};
 use crate::util::stats::Summary;
+use crate::util::threadpool;
 
 /// Inference backend abstraction — the PJRT engine in production, mocks
 /// in tests. Backends are constructed *inside* the worker thread (the
@@ -89,16 +130,26 @@ pub struct CostEstimate {
 
 /// Trace-derived first-order request cost model: the dense (no-skip)
 /// per-image cost, discounted by the request's own input zero fraction
-/// times a skip slope calibrated from a traced simulation. Cheap enough
-/// for the submit path — one pass over the image, two multiplies.
+/// times a skip slope. Cheap enough for the dispatch path — one pass
+/// over the image, two multiplies.
+///
+/// Calibration sources, in decreasing fidelity:
+/// [`CostModel::from_calibration`] (per-layer regressions over real
+/// exact-mode activation traces, `SmallCnn::exact_traces` →
+/// [`crate::sim::CostCalibration`]) and [`CostModel::from_sim`] (one
+/// synthetic-trace simulation, first order).
 #[derive(Debug, Clone)]
 pub struct CostModel {
     /// Cycles of the full (no skipping) schedule for one image.
     pub dense_cycles: f64,
     /// Energy (pJ) of the full schedule for one image.
     pub dense_energy_pj: f64,
-    /// d(skipped work fraction) / d(input zero fraction), first order.
+    /// d(skipped cycle fraction) / d(input zero fraction), first order.
     pub skip_slope: f64,
+    /// d(saved energy fraction) / d(input zero fraction) — energy
+    /// scales differently from cycles (ADC share vs control overhead),
+    /// so calibration fits it separately.
+    pub energy_skip_slope: f64,
 }
 
 impl CostModel {
@@ -114,46 +165,109 @@ impl CostModel {
         // dense schedule
         let dense_scale = dense_ops / executed.max(1.0);
         let skip_frac = skipped / dense_ops;
+        let slope = if calib_zero_fraction > 1e-9 {
+            skip_frac / calib_zero_fraction
+        } else {
+            0.0
+        };
         CostModel {
             dense_cycles: r.total_cycles() * dense_scale,
             dense_energy_pj: r.total_energy().total_pj() * dense_scale,
-            skip_slope: if calib_zero_fraction > 1e-9 {
-                skip_frac / calib_zero_fraction
+            skip_slope: slope,
+            // the analytic calibration has no separate energy signal:
+            // one slope for both
+            energy_skip_slope: slope,
+        }
+    }
+
+    /// Calibrate from exact-mode activation traces: a
+    /// [`CostCalibration`] holds one zero-fraction→cycles/energy
+    /// regression per layer; the serving model sums the layer fits, so
+    /// `dense_*` is the predicted cost at input zero fraction 0 and the
+    /// skip slope is the fitted relative discount per unit of input
+    /// zero fraction (clamped to ≥ 0 — more zeros never cost more).
+    pub fn from_calibration(c: &CostCalibration) -> CostModel {
+        let dense_cycles = c.total_cycles_at(0.0).max(0.0);
+        let dense_energy_pj = c.total_energy_at(0.0).max(0.0);
+        let cycles_slope: f64 = c.layers.iter().map(|l| l.cycles_slope).sum();
+        let energy_slope: f64 =
+            c.layers.iter().map(|l| l.energy_slope_pj).sum();
+        let rel = |slope: f64, dense: f64| {
+            if dense > 1e-12 {
+                (-slope / dense).max(0.0)
             } else {
                 0.0
-            },
+            }
+        };
+        CostModel {
+            dense_cycles,
+            dense_energy_pj,
+            skip_slope: rel(cycles_slope, dense_cycles),
+            energy_skip_slope: rel(energy_slope, dense_energy_pj),
         }
     }
 
     /// Estimate the cost of serving `image` (kept work is clamped to
-    /// `[0, 1]` of the dense schedule).
+    /// `[0, 1]` of the dense schedule, per signal).
     pub fn estimate(&self, image: &[f32]) -> CostEstimate {
         let zeros = image.iter().filter(|v| **v == 0.0).count();
         let zf = zeros as f64 / image.len().max(1) as f64;
-        let keep = (1.0 - self.skip_slope * zf).clamp(0.0, 1.0);
+        let keep_cycles = (1.0 - self.skip_slope * zf).clamp(0.0, 1.0);
+        let keep_energy = (1.0 - self.energy_skip_slope * zf).clamp(0.0, 1.0);
         CostEstimate {
-            est_cycles: self.dense_cycles * keep,
-            est_energy_pj: self.dense_energy_pj * keep,
+            est_cycles: self.dense_cycles * keep_cycles,
+            est_energy_pj: self.dense_energy_pj * keep_energy,
             input_zero_fraction: zf,
         }
     }
 }
 
-/// Batching / retry / deadline policy for a [`Coordinator`].
+/// How the dispatcher routes admitted requests to pool workers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BalancePolicy {
+    /// Least outstanding predicted cycles (trace-derived
+    /// [`CostEstimate`]s); requests without an estimate — no cost model
+    /// attached — fall back to round-robin.
+    CostAware,
+    /// Strict round-robin over healthy workers.
+    RoundRobin,
+}
+
+/// Batching / retry / deadline / pool policy for a [`Coordinator`].
 #[derive(Debug, Clone)]
 pub struct CoordinatorConfig {
     /// How long a partial batch waits for more requests before
     /// executing padded.
     pub max_wait: Duration,
-    /// Re-runs of a failed batch before the error is delivered
-    /// (ISSUE-2 default: one retry).
+    /// Per-worker re-runs of a failed batch before the error is
+    /// delivered (ISSUE-2 default: one retry).
     pub max_retries: u32,
     /// Deadline attached to plain [`Coordinator::submit`] requests
     /// (`None` = no deadline).
     pub default_deadline: Option<Duration>,
-    /// Failed-request count at which [`Metrics::failed_alarm`] trips
-    /// (0 disables the alarm).
+    /// Failed-request count at which a shard's [`Metrics::failed_alarm`]
+    /// trips (0 disables the alarm).
     pub alarm_threshold: u64,
+    /// Pool size: number of worker threads, each owning one backend
+    /// built by the factory. 1 reproduces the PR 2 single-worker
+    /// batcher bit for bit.
+    pub workers: usize,
+    /// Routing policy for admitted requests.
+    pub balance: BalancePolicy,
+    /// Consecutive failed batches after which the dispatcher stops
+    /// routing new requests to a worker (0 disables quarantine). A
+    /// worker leaves quarantine when a later batch succeeds — which
+    /// requires requests already queued in its channel to drain
+    /// through; a quarantined worker with an *empty* queue stays
+    /// quarantined for the pool's lifetime (time-based probing is a
+    /// ROADMAP follow-up), so quarantine is for dead backends, not
+    /// transient blips — raise the threshold if failures are bursty.
+    pub quarantine_after: u64,
+    /// Cost-aware admission: when > 0 and a cost model is attached, a
+    /// new request is rejected with an overload error once the pool's
+    /// total outstanding predicted cycles reach this limit
+    /// (0 = unlimited).
+    pub max_outstanding_cost: f64,
 }
 
 impl Default for CoordinatorConfig {
@@ -163,6 +277,10 @@ impl Default for CoordinatorConfig {
             max_retries: 1,
             default_deadline: None,
             alarm_threshold: 0,
+            workers: 1,
+            balance: BalancePolicy::CostAware,
+            quarantine_after: 2,
+            max_outstanding_cost: 0.0,
         }
     }
 }
@@ -173,13 +291,16 @@ struct Request {
     submitted: Instant,
     /// Latest instant at which the request may still be dispatched.
     deadline: Option<Instant>,
+    /// Cost estimate, computed once at dispatch (None without a model).
+    cost: Option<CostEstimate>,
     reply: Sender<Reply>,
 }
 
 /// Reply with the batch outcome + timing. `result` carries the logits
-/// on success, or the error on failure (backend error after retries, or
-/// deadline exceeded) — a failed request is reported to its requester
-/// instead of silently dropping the reply channel.
+/// on success, or the error on failure (backend error after retries,
+/// deadline exceeded, or overload rejection) — a failed request is
+/// reported to its requester instead of silently dropping the reply
+/// channel.
 #[derive(Debug, Clone)]
 pub struct Reply {
     pub result: Result<Vec<f32>, String>,
@@ -199,7 +320,11 @@ impl Reply {
     }
 }
 
-/// Aggregate serving metrics.
+/// Serving metrics for one shard (the admission/dispatch side, or one
+/// pool worker). Counters are recorded exactly once per terminal event
+/// — a request's latency is pushed once at its terminal reply no matter
+/// how many times its batch was retried — so [`Metrics::merge`] over
+/// shards is a plain sum with no double counting.
 #[derive(Debug, Default)]
 pub struct Metrics {
     /// Requests that received a terminal reply — successes *and*
@@ -208,46 +333,106 @@ pub struct Metrics {
     pub requests: AtomicU64,
     pub batches: AtomicU64,
     pub padded_slots: AtomicU64,
-    /// Requests that failed — backend error after retries, or deadline
-    /// exceeded (each received the error through its [`Reply::result`]).
+    /// Requests that failed — backend error after retries, deadline
+    /// exceeded, or overload rejection (each received the error through
+    /// its [`Reply::result`]).
     pub failed_requests: AtomicU64,
     /// Batch re-runs after a backend failure.
     pub retried_batches: AtomicU64,
     /// Requests whose deadline passed while queued (also counted in
     /// `failed_requests`).
     pub deadline_expired: AtomicU64,
-    /// Failed-request alarm threshold (0 = disabled).
-    alarm_threshold: AtomicU64,
-    alarm_logged: AtomicBool,
+    /// Requests rejected at admission because the pool's outstanding
+    /// predicted cost exceeded the configured limit (also counted in
+    /// `failed_requests`).
+    pub rejected_overload: AtomicU64,
+    /// Failure alarm — shared by every shard of one pool, so N workers
+    /// trip at the same *total* failure count a single worker would.
+    alarm: Arc<AlarmState>,
     latencies_us: Mutex<Summary>,
 }
 
+/// Pool-wide failure-alarm state: the threshold plus the failure count
+/// it is checked against. All metrics shards of one coordinator share a
+/// single `AlarmState` (each terminal failure increments it exactly
+/// once), preserving the single-worker alarm sensitivity at any pool
+/// size.
+#[derive(Debug, Default)]
+struct AlarmState {
+    /// Failed-request count at which the alarm trips (0 = disabled).
+    threshold: AtomicU64,
+    /// Terminal failures across every shard sharing this alarm.
+    failed: AtomicU64,
+    logged: AtomicBool,
+}
+
 impl Metrics {
+    /// A shard wired to an existing (pool-shared) alarm.
+    fn with_alarm(alarm: Arc<AlarmState>) -> Metrics {
+        Metrics { alarm, ..Default::default() }
+    }
+
     pub fn latency_summary(&self) -> Summary {
         self.latencies_us.lock().unwrap().clone()
     }
 
     pub fn set_alarm_threshold(&self, n: u64) {
-        self.alarm_threshold.store(n, Ordering::Relaxed);
+        self.alarm.threshold.store(n, Ordering::Relaxed);
     }
 
     pub fn alarm_threshold(&self) -> u64 {
-        self.alarm_threshold.load(Ordering::Relaxed)
+        self.alarm.threshold.load(Ordering::Relaxed)
     }
 
-    /// Has the failed-request count reached the alarm threshold?
+    /// Has the (pool-wide) failed-request count reached the alarm
+    /// threshold?
     pub fn failed_alarm(&self) -> bool {
-        let t = self.alarm_threshold.load(Ordering::Relaxed);
-        t > 0 && self.failed_requests.load(Ordering::Relaxed) >= t
+        let t = self.alarm.threshold.load(Ordering::Relaxed);
+        t > 0 && self.alarm.failed.load(Ordering::Relaxed) >= t
+    }
+
+    /// Merge shard views into one aggregate: counters sum, latency
+    /// samples concatenate, and the alarm threshold is the largest
+    /// shard threshold. Each terminal reply was recorded on exactly one
+    /// shard (and retried batches on the worker that re-ran them), so
+    /// summing never double-counts — pinned by the unit tests below.
+    pub fn merge<'a, I>(shards: I) -> Metrics
+    where
+        I: IntoIterator<Item = &'a Metrics>,
+    {
+        let out = Metrics::default();
+        let mut threshold = 0u64;
+        let mut latencies = Summary::new();
+        for s in shards {
+            let r = Ordering::Relaxed;
+            out.requests.fetch_add(s.requests.load(r), r);
+            out.batches.fetch_add(s.batches.load(r), r);
+            out.padded_slots.fetch_add(s.padded_slots.load(r), r);
+            out.failed_requests.fetch_add(s.failed_requests.load(r), r);
+            out.retried_batches.fetch_add(s.retried_batches.load(r), r);
+            out.deadline_expired.fetch_add(s.deadline_expired.load(r), r);
+            out.rejected_overload.fetch_add(s.rejected_overload.load(r), r);
+            threshold = threshold.max(s.alarm_threshold());
+            latencies.merge(&s.latency_summary());
+        }
+        out.set_alarm_threshold(threshold);
+        // the merged alarm is evaluated against the summed failures
+        // (shards sharing one AlarmState counted each failure once)
+        out.alarm
+            .failed
+            .store(out.failed_requests.load(Ordering::Relaxed), Ordering::Relaxed);
+        *out.latencies_us.lock().unwrap() = latencies;
+        out
     }
 
     /// Count one terminally-failed request (in both `requests` and
-    /// `failed_requests`) and raise (and log, once) the alarm if the
-    /// threshold is crossed.
+    /// `failed_requests`, plus the pool-shared alarm) and raise (and
+    /// log, once) the alarm if the threshold is crossed.
     fn record_failed(&self) {
         self.requests.fetch_add(1, Ordering::Relaxed);
         self.failed_requests.fetch_add(1, Ordering::Relaxed);
-        if self.failed_alarm() && !self.alarm_logged.swap(true, Ordering::Relaxed) {
+        self.alarm.failed.fetch_add(1, Ordering::Relaxed);
+        if self.failed_alarm() && !self.alarm.logged.swap(true, Ordering::Relaxed) {
             eprintln!(
                 "[coordinator] ALARM: failed requests reached threshold {}",
                 self.alarm_threshold()
@@ -256,19 +441,101 @@ impl Metrics {
     }
 }
 
-/// Handle to a running coordinator.
+/// Dispatcher-visible state of one pool worker: its load accounting
+/// (outstanding predicted cycles + in-flight requests) and its health
+/// (consecutive failed batches), alongside its metrics shard.
+struct WorkerState {
+    /// Sum of the predicted `est_cycles` of requests routed to this
+    /// worker and not yet terminally replied (whole cycles).
+    outstanding_cost: AtomicU64,
+    /// Requests routed and not yet terminally replied.
+    inflight: AtomicU64,
+    /// Consecutive batches that failed after retries; reset on any
+    /// successful batch. At `quarantine_after` the dispatcher routes
+    /// around this worker.
+    consecutive_failed_batches: AtomicU64,
+    metrics: Arc<Metrics>,
+}
+
+impl WorkerState {
+    fn new(metrics: Arc<Metrics>) -> WorkerState {
+        WorkerState {
+            outstanding_cost: AtomicU64::new(0),
+            inflight: AtomicU64::new(0),
+            consecutive_failed_batches: AtomicU64::new(0),
+            metrics,
+        }
+    }
+
+    fn charge(&self, cost: Option<CostEstimate>) {
+        if let Some(c) = cost {
+            let add = c.est_cycles.max(0.0) as u64;
+            self.outstanding_cost.fetch_add(add, Ordering::Relaxed);
+        }
+        self.inflight.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Release the accounting charged at routing time — called exactly
+    /// once per routed request, at its terminal reply.
+    fn settle(&self, cost: Option<CostEstimate>) {
+        if let Some(c) = cost {
+            let sub = c.est_cycles.max(0.0) as u64;
+            let _ = self.outstanding_cost.fetch_update(
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+                |v| Some(v.saturating_sub(sub)),
+            );
+        }
+        let _ = self.inflight.fetch_update(
+            Ordering::Relaxed,
+            Ordering::Relaxed,
+            |v| Some(v.saturating_sub(1)),
+        );
+    }
+
+    fn quarantined(&self, quarantine_after: u64) -> bool {
+        quarantine_after > 0
+            && self.consecutive_failed_batches.load(Ordering::Relaxed)
+                >= quarantine_after
+    }
+}
+
+/// Point-in-time view of one pool worker, for reports and the CLI.
+#[derive(Debug, Clone)]
+pub struct WorkerStats {
+    pub worker: usize,
+    pub requests: u64,
+    pub failed_requests: u64,
+    pub batches: u64,
+    pub padded_slots: u64,
+    pub retried_batches: u64,
+    pub inflight: u64,
+    /// Outstanding predicted cycles routed to this worker.
+    pub outstanding_cost: u64,
+    pub quarantined: bool,
+}
+
+/// Handle to a running coordinator (dispatcher + worker pool).
 pub struct Coordinator {
     tx: Option<Sender<Request>>,
+    /// Admission/dispatch metrics shard. With `workers == 1` this is
+    /// the *same* shard the worker records into, so single-worker
+    /// callers see the full PR 2 view here.
     pub metrics: Arc<Metrics>,
+    worker_shards: Vec<Arc<Metrics>>,
+    worker_states: Vec<Arc<WorkerState>>,
     default_deadline: Option<Duration>,
-    worker: Option<std::thread::JoinHandle<()>>,
+    quarantine_after: u64,
+    dispatcher: Option<std::thread::JoinHandle<()>>,
+    worker_joins: Vec<std::thread::JoinHandle<()>>,
 }
 
 impl Coordinator {
-    /// Start the batching worker with the default retry/deadline policy.
-    /// The backend is built by `make_backend` *inside* the worker thread
-    /// (the PJRT client is not `Send`). `max_wait` bounds how long a
-    /// partial batch waits for more requests before executing padded.
+    /// Start a single-worker coordinator with the default retry/deadline
+    /// policy. The backend is built by `make_backend` *inside* the
+    /// worker thread (the PJRT client is not `Send`). `max_wait` bounds
+    /// how long a partial batch waits for more requests before
+    /// executing padded.
     pub fn start<B, F>(make_backend: F, max_wait: Duration) -> Coordinator
     where
         B: InferBackend,
@@ -281,9 +548,12 @@ impl Coordinator {
         )
     }
 
-    /// Start with a full [`CoordinatorConfig`] and an optional
-    /// [`CostModel`]; with a model, every reply carries a per-request
-    /// cost estimate.
+    /// Start a **single-worker** coordinator with a full
+    /// [`CoordinatorConfig`] and an optional [`CostModel`]; with a
+    /// model, every reply carries a per-request cost estimate. The
+    /// one-shot `make_backend` fixes the pool size at 1 (any
+    /// `cfg.workers` is overridden); use [`Coordinator::start_pool`]
+    /// with a reusable factory for a multi-worker pool.
     pub fn start_with<B, F>(
         make_backend: F,
         cfg: CoordinatorConfig,
@@ -293,20 +563,89 @@ impl Coordinator {
         B: InferBackend,
         F: FnOnce() -> B + Send + 'static,
     {
+        let cell = Mutex::new(Some(make_backend));
+        Self::start_pool(
+            move |_worker| {
+                let f = cell
+                    .lock()
+                    .unwrap()
+                    .take()
+                    .expect("single-worker backend factory is one-shot");
+                f()
+            },
+            CoordinatorConfig { workers: 1, ..cfg },
+            cost_model,
+        )
+    }
+
+    /// Start a pool of `cfg.workers` workers. `factory(worker_id)` is
+    /// called once per worker, *inside* that worker's thread, so each
+    /// worker owns an independent backend (its failure domain).
+    pub fn start_pool<B, F>(
+        factory: F,
+        cfg: CoordinatorConfig,
+        cost_model: Option<CostModel>,
+    ) -> Coordinator
+    where
+        B: InferBackend,
+        F: Fn(usize) -> B + Send + Sync + 'static,
+    {
+        let n = cfg.workers.max(1);
+        let factory = Arc::new(factory);
         let (tx, rx) = channel::<Request>();
-        let metrics = Arc::new(Metrics::default());
-        metrics.set_alarm_threshold(cfg.alarm_threshold);
-        let m = metrics.clone();
-        let default_deadline = cfg.default_deadline;
-        let worker = std::thread::spawn(move || {
-            let backend = make_backend();
-            batch_loop(backend, rx, cfg, cost_model, m)
+
+        // One alarm for the whole pool: every shard's failures count
+        // toward the same threshold, whatever the worker count.
+        let alarm = Arc::new(AlarmState::default());
+        let admission = Arc::new(Metrics::with_alarm(alarm.clone()));
+        admission.set_alarm_threshold(cfg.alarm_threshold);
+
+        let mut worker_txs = Vec::with_capacity(n);
+        let mut worker_states = Vec::with_capacity(n);
+        let mut worker_shards = Vec::with_capacity(n);
+        let mut worker_joins = Vec::with_capacity(n);
+        for worker in 0..n {
+            let (wtx, wrx) = channel::<Request>();
+            // Single-worker mode shares one shard between admission and
+            // the worker (the PR 2 view); pools shard per worker, all
+            // wired to the shared pool alarm.
+            let shard = if n == 1 {
+                admission.clone()
+            } else {
+                Arc::new(Metrics::with_alarm(alarm.clone()))
+            };
+            let state = Arc::new(WorkerState::new(shard.clone()));
+            let f = factory.clone();
+            let st = state.clone();
+            let wcfg = cfg.clone();
+            worker_joins.push(threadpool::spawn_named(
+                &format!("coord-worker-{worker}"),
+                move || {
+                    let backend = f(worker);
+                    worker_loop(backend, wrx, wcfg, st);
+                },
+            ));
+            worker_txs.push(wtx);
+            worker_states.push(state);
+            worker_shards.push(shard);
+        }
+
+        let dcfg = cfg.clone();
+        let dstates = worker_states.clone();
+        let dmetrics = admission.clone();
+        let dispatcher = threadpool::spawn_named("coord-dispatch", move || {
+            dispatch_loop(rx, worker_txs, dstates, dcfg, cost_model, dmetrics);
         });
+
         Coordinator {
             tx: Some(tx),
-            metrics,
-            default_deadline,
-            worker: Some(worker),
+            metrics: admission,
+            worker_shards,
+            worker_states,
+            default_deadline: cfg.default_deadline,
+            quarantine_after: cfg.quarantine_after,
+            dispatcher: Some(dispatcher),
+            worker_joins,
         }
     }
 
@@ -339,20 +678,72 @@ impl Coordinator {
             image,
             submitted: now,
             deadline: deadline.map(|d| now + d),
+            cost: None,
             reply: rtx,
         };
-        // A send failure means the worker exited; the caller sees it as
-        // a closed reply channel.
+        // A send failure means the dispatcher exited; the caller sees
+        // it as a closed reply channel.
         if let Some(tx) = &self.tx {
             let _ = tx.send(req);
         }
         rrx
     }
 
-    /// Stop the worker (drains in-flight requests first).
+    /// Number of pool workers.
+    pub fn n_workers(&self) -> usize {
+        self.worker_states.len()
+    }
+
+    /// Per-worker metrics shards, in worker order. With `workers == 1`
+    /// the only shard is [`Coordinator::metrics`] itself.
+    pub fn worker_metrics(&self) -> &[Arc<Metrics>] {
+        &self.worker_shards
+    }
+
+    /// Pool-wide metrics: the admission shard plus every worker shard,
+    /// merged (shards shared between the two — single-worker mode — are
+    /// counted once).
+    pub fn merged_metrics(&self) -> Metrics {
+        let mut refs: Vec<&Metrics> = vec![self.metrics.as_ref()];
+        for w in &self.worker_shards {
+            if !Arc::ptr_eq(w, &self.metrics) {
+                refs.push(w.as_ref());
+            }
+        }
+        Metrics::merge(refs)
+    }
+
+    /// Point-in-time per-worker load/health/metrics view.
+    pub fn worker_stats(&self) -> Vec<WorkerStats> {
+        let r = Ordering::Relaxed;
+        self.worker_states
+            .iter()
+            .enumerate()
+            .map(|(i, s)| WorkerStats {
+                worker: i,
+                requests: s.metrics.requests.load(r),
+                failed_requests: s.metrics.failed_requests.load(r),
+                batches: s.metrics.batches.load(r),
+                padded_slots: s.metrics.padded_slots.load(r),
+                retried_batches: s.metrics.retried_batches.load(r),
+                inflight: s.inflight.load(r),
+                outstanding_cost: s.outstanding_cost.load(r),
+                quarantined: s.quarantined(self.quarantine_after),
+            })
+            .collect()
+    }
+
+    /// Stop dispatcher and workers (drains in-flight requests first).
     pub fn shutdown(mut self) {
+        self.stop();
+    }
+
+    fn stop(&mut self) {
         drop(self.tx.take());
-        if let Some(w) = self.worker.take() {
+        if let Some(d) = self.dispatcher.take() {
+            let _ = d.join();
+        }
+        for w in self.worker_joins.drain(..) {
             let _ = w.join();
         }
     }
@@ -360,63 +751,205 @@ impl Coordinator {
 
 impl Drop for Coordinator {
     fn drop(&mut self) {
-        drop(self.tx.take());
-        if let Some(w) = self.worker.take() {
-            let _ = w.join();
-        }
+        self.stop();
     }
 }
 
+/// Deliver an error reply for `r` and record it as a terminal failure
+/// on `metrics`. `deadline` distinguishes the deadline-expired counter
+/// from the overload counter.
+fn reject(r: Request, metrics: &Metrics, err: String, deadline: bool) {
+    let queue_us = r.submitted.elapsed().as_micros() as u64;
+    if deadline {
+        metrics.deadline_expired.fetch_add(1, Ordering::Relaxed);
+    } else {
+        metrics.rejected_overload.fetch_add(1, Ordering::Relaxed);
+    }
+    metrics.record_failed();
+    let _ = r.reply.send(Reply {
+        result: Err(err),
+        queue_us,
+        batch_fill: 0,
+        cost: r.cost,
+    });
+}
+
 /// If `r`'s deadline has already passed, deliver the deadline-exceeded
-/// error (with its cost estimate) and consume it; otherwise hand the
-/// request back for batching.
-fn admit(
-    r: Request,
-    cost_model: Option<&CostModel>,
-    metrics: &Metrics,
-) -> Option<Request> {
+/// error and consume it; otherwise hand the request back.
+fn admit_deadline(r: Request, metrics: &Metrics) -> Option<Request> {
     match r.deadline {
         Some(d) if Instant::now() >= d => {
             let queue_us = r.submitted.elapsed().as_micros() as u64;
-            metrics.deadline_expired.fetch_add(1, Ordering::Relaxed);
-            metrics.record_failed();
-            let cost = cost_model.map(|m| m.estimate(&r.image));
-            let _ = r.reply.send(Reply {
-                result: Err(format!(
-                    "deadline exceeded: request spent {queue_us} us queued"
-                )),
-                queue_us,
-                batch_fill: 0,
-                cost,
-            });
+            reject(
+                r,
+                metrics,
+                format!("deadline exceeded: request spent {queue_us} us queued"),
+                true,
+            );
             None
         }
         _ => Some(r),
     }
 }
 
-fn batch_loop<B: InferBackend>(
-    backend: B,
+/// Pick the worker for one admitted request. Quarantined workers are
+/// skipped while at least one healthy worker remains; with none, the
+/// pool routes as if all were healthy (degraded service beats none).
+/// `candidates` is a caller-owned scratch buffer (cleared and refilled
+/// here) so the dispatch hot path allocates nothing per request.
+fn pick_worker(
+    states: &[Arc<WorkerState>],
+    policy: BalancePolicy,
+    cost: Option<CostEstimate>,
+    rr: &mut usize,
+    quarantine_after: u64,
+    candidates: &mut Vec<usize>,
+) -> usize {
+    candidates.clear();
+    candidates.extend(
+        (0..states.len()).filter(|&i| !states[i].quarantined(quarantine_after)),
+    );
+    if candidates.is_empty() {
+        candidates.extend(0..states.len());
+    }
+
+    let cost_aware = policy == BalancePolicy::CostAware && cost.is_some();
+    if !cost_aware {
+        let pick = candidates[*rr % candidates.len()];
+        *rr += 1;
+        return pick;
+    }
+
+    // Least outstanding predicted cycles; ties broken by fewest
+    // in-flight requests, then lowest worker index (deterministic).
+    let mut best = candidates[0];
+    let mut best_key = (
+        states[best].outstanding_cost.load(Ordering::Relaxed),
+        states[best].inflight.load(Ordering::Relaxed),
+    );
+    for &i in candidates.iter().skip(1) {
+        let key = (
+            states[i].outstanding_cost.load(Ordering::Relaxed),
+            states[i].inflight.load(Ordering::Relaxed),
+        );
+        if key < best_key {
+            best = i;
+            best_key = key;
+        }
+    }
+    best
+}
+
+/// Dispatcher: drain the shared admission queue, run admission checks
+/// (deadline, overload), attach cost estimates, and route each request
+/// to a worker channel. Never blocks on a worker — channels are
+/// unbounded, so a slow worker only grows its own queue.
+fn dispatch_loop(
     rx: Receiver<Request>,
+    worker_txs: Vec<Sender<Request>>,
+    states: Vec<Arc<WorkerState>>,
     cfg: CoordinatorConfig,
     cost_model: Option<CostModel>,
     metrics: Arc<Metrics>,
 ) {
+    let mut rr = 0usize;
+    let mut scratch: Vec<usize> = Vec::with_capacity(states.len());
+    while let Ok(mut r) = rx.recv() {
+        if let Some(m) = &cost_model {
+            r.cost = Some(m.estimate(&r.image));
+        }
+        let Some(r) = admit_deadline(r, &metrics) else {
+            continue;
+        };
+        // Cost-aware admission: reject outright when the pool's
+        // predicted backlog is already past the limit.
+        if cfg.max_outstanding_cost > 0.0 && r.cost.is_some() {
+            let outstanding: u64 = states
+                .iter()
+                .map(|s| s.outstanding_cost.load(Ordering::Relaxed))
+                .sum();
+            if outstanding as f64 >= cfg.max_outstanding_cost {
+                reject(
+                    r,
+                    &metrics,
+                    format!(
+                        "pool overloaded: {outstanding} predicted cycles \
+                         outstanding (admission limit {})",
+                        cfg.max_outstanding_cost
+                    ),
+                    false,
+                );
+                continue;
+            }
+        }
+        let wi = pick_worker(
+            &states,
+            cfg.balance,
+            r.cost,
+            &mut rr,
+            cfg.quarantine_after,
+            &mut scratch,
+        );
+        states[wi].charge(r.cost);
+        // A send failure means the worker thread died (e.g. backend
+        // construction panicked): settle the charge and deliver a
+        // terminal error so the request stays visible in the metrics
+        // instead of vanishing into a closed reply channel.
+        if let Err(failed) = worker_txs[wi].send(r) {
+            let r = failed.0;
+            states[wi].settle(r.cost);
+            let queue_us = r.submitted.elapsed().as_micros() as u64;
+            metrics.record_failed();
+            let _ = r.reply.send(Reply {
+                result: Err(format!(
+                    "worker {wi} unavailable: its thread exited \
+                     (backend construction failed or panicked)"
+                )),
+                queue_us,
+                batch_fill: 0,
+                cost: r.cost,
+            });
+        }
+    }
+    // Admission queue closed: worker channels drop with `worker_txs`,
+    // each worker drains its queue and exits.
+}
+
+/// One pool worker: own backend, own batcher, own retries, own metrics
+/// shard. Structurally the PR 2 `batch_loop` — single-worker pools run
+/// the exact same code path over the same channel contents.
+fn worker_loop<B: InferBackend>(
+    backend: B,
+    rx: Receiver<Request>,
+    cfg: CoordinatorConfig,
+    state: Arc<WorkerState>,
+) {
     let bs = backend.batch_size();
     let in_len = backend.input_len();
     let out_len = backend.output_len();
+    let metrics = state.metrics.clone();
+
+    // Worker-side admission: a request that sat in this worker's queue
+    // past its deadline is rejected with a timely error (and its load
+    // accounting settled).
+    let admit = |r: Request| -> Option<Request> {
+        let cost = r.cost;
+        match admit_deadline(r, &metrics) {
+            Some(r) => Some(r),
+            None => {
+                state.settle(cost);
+                None
+            }
+        }
+    };
 
     loop {
-        // Block for the first request of a batch; a request that sat in
-        // a backed-up queue past its deadline is rejected right here.
+        // Block for the first request of a batch.
         let first = match rx.recv() {
             Ok(r) => r,
-            Err(_) => return, // all senders dropped
+            Err(_) => return, // dispatcher exited
         };
-        let mut pending: Vec<Request> =
-            admit(first, cost_model.as_ref(), &metrics)
-                .into_iter()
-                .collect();
+        let mut pending: Vec<Request> = admit(first).into_iter().collect();
         let fill_deadline = Instant::now() + cfg.max_wait;
         // Fill until full, the batcher wait elapses, or the earliest
         // pending request deadline arrives — a near-deadline request
@@ -434,7 +967,7 @@ fn batch_loop<B: InferBackend>(
             }
             match rx.recv_timeout(until - now) {
                 Ok(r) => {
-                    if let Some(r) = admit(r, cost_model.as_ref(), &metrics) {
+                    if let Some(r) = admit(r) {
                         pending.push(r);
                     }
                 }
@@ -457,8 +990,8 @@ fn batch_loop<B: InferBackend>(
             .padded_slots
             .fetch_add((bs - fill) as u64, Ordering::Relaxed);
 
-        // Execute; a failed batch is re-run up to `max_retries` times
-        // before the error is delivered to every requester.
+        // Execute; a failed batch is re-run up to `max_retries` times on
+        // this worker before the error is delivered to every requester.
         let mut outcome = backend.run_batch(&batch);
         let mut attempts = 0u32;
         while outcome.is_err() && attempts < cfg.max_retries {
@@ -474,41 +1007,48 @@ fn batch_loop<B: InferBackend>(
 
         match outcome {
             Ok(out) => {
+                state
+                    .consecutive_failed_batches
+                    .store(0, Ordering::Relaxed);
                 for (i, r) in pending.into_iter().enumerate() {
                     let logits = out[i * out_len..(i + 1) * out_len].to_vec();
                     let queue_us = r.submitted.elapsed().as_micros() as u64;
+                    state.settle(r.cost);
                     metrics.requests.fetch_add(1, Ordering::Relaxed);
                     metrics
                         .latencies_us
                         .lock()
                         .unwrap()
                         .push(queue_us as f64);
-                    let cost = cost_model.as_ref().map(|m| m.estimate(&r.image));
                     let _ = r.reply.send(Reply {
                         result: Ok(logits),
                         queue_us,
                         batch_fill: fill,
-                        cost,
+                        cost: r.cost,
                     });
                 }
             }
             Err(e) => {
                 // Deliver the cause to every waiting requester — a
                 // dropped sender would only show them an opaque closed
-                // channel.
+                // channel. The failure stays in this worker's domain:
+                // only requests routed here see it.
+                state
+                    .consecutive_failed_batches
+                    .fetch_add(1, Ordering::Relaxed);
                 eprintln!(
                     "[coordinator] batch failed after {} attempt(s): {e}",
                     attempts + 1
                 );
                 for r in pending.into_iter() {
                     let queue_us = r.submitted.elapsed().as_micros() as u64;
+                    state.settle(r.cost);
                     metrics.record_failed();
-                    let cost = cost_model.as_ref().map(|m| m.estimate(&r.image));
                     let _ = r.reply.send(Reply {
                         result: Err(e.clone()),
                         queue_us,
                         batch_fill: fill,
-                        cost,
+                        cost: r.cost,
                     });
                 }
             }
@@ -526,6 +1066,8 @@ mod tests {
         out_len: usize,
         batch: usize,
         calls: Arc<AtomicU64>,
+        delay: Duration,
+        fail: bool,
     }
 
     impl InferBackend for MockBackend {
@@ -540,6 +1082,12 @@ mod tests {
         }
         fn run_batch(&self, batch: &[f32]) -> Result<Vec<f32>, String> {
             self.calls.fetch_add(1, Ordering::Relaxed);
+            if !self.delay.is_zero() {
+                std::thread::sleep(self.delay);
+            }
+            if self.fail {
+                return Err("mock backend configured to fail".to_string());
+            }
             assert_eq!(batch.len(), self.batch * self.in_len);
             let mut out = Vec::with_capacity(self.batch * self.out_len);
             for i in 0..self.batch {
@@ -555,7 +1103,14 @@ mod tests {
     }
 
     fn mock(batch: usize, calls: Arc<AtomicU64>) -> MockBackend {
-        MockBackend { in_len: 4, out_len: 3, batch, calls }
+        MockBackend {
+            in_len: 4,
+            out_len: 3,
+            batch,
+            calls,
+            delay: Duration::ZERO,
+            fail: false,
+        }
     }
 
     #[test]
@@ -661,6 +1216,7 @@ mod tests {
             dense_cycles: 1000.0,
             dense_energy_pj: 400.0,
             skip_slope: 1.0,
+            energy_skip_slope: 0.5,
         };
         let dense = m.estimate(&[1.0, 2.0, 3.0, 4.0]);
         assert_eq!(dense.input_zero_fraction, 0.0);
@@ -699,6 +1255,46 @@ mod tests {
     }
 
     #[test]
+    fn cost_model_from_calibration_sums_layer_fits() {
+        use crate::sim::{CostCalibration, LayerCalibration};
+        let c = CostCalibration {
+            layers: vec![
+                LayerCalibration {
+                    layer_idx: 0,
+                    cycles_at_dense: 600.0,
+                    cycles_slope: -300.0,
+                    energy_at_dense_pj: 60.0,
+                    energy_slope_pj: -30.0,
+                    n_samples: 8,
+                },
+                LayerCalibration {
+                    layer_idx: 1,
+                    cycles_at_dense: 400.0,
+                    cycles_slope: -200.0,
+                    energy_at_dense_pj: 40.0,
+                    energy_slope_pj: -20.0,
+                    n_samples: 8,
+                },
+            ],
+        };
+        let m = CostModel::from_calibration(&c);
+        assert!((m.dense_cycles - 1000.0).abs() < 1e-9);
+        assert!((m.dense_energy_pj - 100.0).abs() < 1e-9);
+        // slope -500 cycles per unit zf on a 1000-cycle dense schedule
+        assert!((m.skip_slope - 0.5).abs() < 1e-12, "{}", m.skip_slope);
+        // energy gets its own fitted slope: -50 pJ per unit zf on 100 pJ
+        assert!(
+            (m.energy_skip_slope - 0.5).abs() < 1e-12,
+            "{}",
+            m.energy_skip_slope
+        );
+        // the estimate reproduces the summed regression lines
+        let est = m.estimate(&[0.0, 1.0]); // zf = 0.5
+        assert!((est.est_cycles - 750.0).abs() < 1e-9, "{}", est.est_cycles);
+        assert!((est.est_energy_pj - 75.0).abs() < 1e-9, "{}", est.est_energy_pj);
+    }
+
+    #[test]
     fn alarm_threshold_accessors() {
         let m = Metrics::default();
         assert!(!m.failed_alarm());
@@ -708,6 +1304,82 @@ mod tests {
         assert!(!m.failed_alarm());
         m.record_failed();
         assert!(m.failed_alarm());
+    }
+
+    #[test]
+    fn metrics_merge_sums_counters_and_latencies() {
+        let a = Metrics::default();
+        let b = Metrics::default();
+        a.requests.store(3, Ordering::Relaxed);
+        a.batches.store(2, Ordering::Relaxed);
+        a.retried_batches.store(1, Ordering::Relaxed);
+        a.latencies_us.lock().unwrap().push(10.0);
+        a.latencies_us.lock().unwrap().push(20.0);
+        a.latencies_us.lock().unwrap().push(30.0);
+        b.requests.store(2, Ordering::Relaxed);
+        b.failed_requests.store(1, Ordering::Relaxed);
+        b.deadline_expired.store(1, Ordering::Relaxed);
+        b.set_alarm_threshold(4);
+        b.latencies_us.lock().unwrap().push(40.0);
+        let m = Metrics::merge([&a, &b]);
+        assert_eq!(m.requests.load(Ordering::Relaxed), 5);
+        assert_eq!(m.batches.load(Ordering::Relaxed), 2);
+        assert_eq!(m.retried_batches.load(Ordering::Relaxed), 1);
+        assert_eq!(m.failed_requests.load(Ordering::Relaxed), 1);
+        assert_eq!(m.deadline_expired.load(Ordering::Relaxed), 1);
+        assert_eq!(m.alarm_threshold(), 4);
+        let lat = m.latency_summary();
+        assert_eq!(lat.len(), 4);
+        assert!((lat.mean() - 25.0).abs() < 1e-12);
+    }
+
+    /// The merge-without-double-counting invariant end to end: a batch
+    /// that fails once and succeeds on retry contributes each of its
+    /// requests' latencies exactly once, and one retried batch — not
+    /// one per request, not one per attempt per request.
+    #[test]
+    fn merge_counts_each_request_once_despite_retries() {
+        struct FlakyOnce {
+            calls: Arc<AtomicU64>,
+        }
+        impl InferBackend for FlakyOnce {
+            fn input_len(&self) -> usize {
+                2
+            }
+            fn output_len(&self) -> usize {
+                1
+            }
+            fn batch_size(&self) -> usize {
+                2
+            }
+            fn run_batch(&self, batch: &[f32]) -> Result<Vec<f32>, String> {
+                if self.calls.fetch_add(1, Ordering::Relaxed) == 0 {
+                    return Err("first call fails".to_string());
+                }
+                Ok(vec![batch[0] + batch[1], batch[2] + batch[3]])
+            }
+        }
+        let calls = Arc::new(AtomicU64::new(0));
+        let c = Coordinator::start_with(
+            move || FlakyOnce { calls },
+            CoordinatorConfig {
+                max_wait: Duration::from_millis(200),
+                max_retries: 1,
+                ..Default::default()
+            },
+            None,
+        );
+        let rx1 = c.submit(vec![1.0, 2.0]);
+        let rx2 = c.submit(vec![3.0, 4.0]);
+        rx1.recv_timeout(Duration::from_secs(10)).unwrap();
+        rx2.recv_timeout(Duration::from_secs(10)).unwrap();
+        let merged = c.merged_metrics();
+        assert_eq!(merged.requests.load(Ordering::Relaxed), 2);
+        assert_eq!(merged.retried_batches.load(Ordering::Relaxed), 1);
+        assert_eq!(merged.batches.load(Ordering::Relaxed), 1);
+        // one latency sample per request, not per attempt
+        assert_eq!(merged.latency_summary().len(), 2);
+        c.shutdown();
     }
 
     #[test]
@@ -730,5 +1402,169 @@ mod tests {
             h.join().unwrap();
         }
         assert_eq!(c.metrics.requests.load(Ordering::Relaxed), 8);
+    }
+
+    #[test]
+    fn pool_round_robin_distributes_across_workers() {
+        let calls = Arc::new(AtomicU64::new(0));
+        let calls2 = calls.clone();
+        let c = Coordinator::start_pool(
+            move |_worker| MockBackend {
+                in_len: 4,
+                out_len: 3,
+                batch: 1,
+                calls: calls2.clone(),
+                delay: Duration::ZERO,
+                fail: false,
+            },
+            CoordinatorConfig {
+                max_wait: Duration::from_millis(1),
+                workers: 4,
+                balance: BalancePolicy::RoundRobin,
+                ..Default::default()
+            },
+            None,
+        );
+        assert_eq!(c.n_workers(), 4);
+        // sequential submit+recv: each request is routed (and finished)
+        // before the next, so round-robin placement is deterministic
+        for i in 0..8 {
+            let rx = c.submit(vec![i as f32; 4]);
+            let rep = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+            assert_eq!(rep.logits()[0], 4.0 * i as f32);
+        }
+        for shard in c.worker_metrics() {
+            assert_eq!(shard.requests.load(Ordering::Relaxed), 2);
+        }
+        let merged = c.merged_metrics();
+        assert_eq!(merged.requests.load(Ordering::Relaxed), 8);
+        assert_eq!(merged.latency_summary().len(), 8);
+        c.shutdown();
+        assert_eq!(calls.load(Ordering::Relaxed), 8);
+    }
+
+    #[test]
+    fn pick_worker_prefers_least_outstanding_cost() {
+        let states: Vec<Arc<WorkerState>> = (0..3)
+            .map(|_| Arc::new(WorkerState::new(Arc::new(Metrics::default()))))
+            .collect();
+        states[0].outstanding_cost.store(500, Ordering::Relaxed);
+        states[1].outstanding_cost.store(100, Ordering::Relaxed);
+        states[2].outstanding_cost.store(300, Ordering::Relaxed);
+        let est = Some(CostEstimate {
+            est_cycles: 10.0,
+            est_energy_pj: 1.0,
+            input_zero_fraction: 0.0,
+        });
+        let mut rr = 0usize;
+        let mut scratch = Vec::new();
+        let pick = pick_worker(
+            &states,
+            BalancePolicy::CostAware,
+            est,
+            &mut rr,
+            0,
+            &mut scratch,
+        );
+        assert_eq!(pick, 1);
+        // quarantine the cheapest worker: next-least wins
+        states[1]
+            .consecutive_failed_batches
+            .store(5, Ordering::Relaxed);
+        let pick = pick_worker(
+            &states,
+            BalancePolicy::CostAware,
+            est,
+            &mut rr,
+            2,
+            &mut scratch,
+        );
+        assert_eq!(pick, 2);
+        // without an estimate, cost-aware falls back to round-robin
+        // over healthy workers (0 and 2)
+        let a = pick_worker(
+            &states,
+            BalancePolicy::CostAware,
+            None,
+            &mut rr,
+            2,
+            &mut scratch,
+        );
+        let b = pick_worker(
+            &states,
+            BalancePolicy::CostAware,
+            None,
+            &mut rr,
+            2,
+            &mut scratch,
+        );
+        assert_ne!(a, b);
+        assert!(a != 1 && b != 1);
+        // all quarantined: degraded routing still picks someone
+        for s in &states {
+            s.consecutive_failed_batches.store(9, Ordering::Relaxed);
+        }
+        let pick = pick_worker(
+            &states,
+            BalancePolicy::CostAware,
+            est,
+            &mut rr,
+            2,
+            &mut scratch,
+        );
+        assert!(pick < 3);
+    }
+
+    #[test]
+    fn overload_admission_rejects_past_cost_limit() {
+        let calls = Arc::new(AtomicU64::new(0));
+        let calls2 = calls.clone();
+        let model = CostModel {
+            dense_cycles: 1000.0,
+            dense_energy_pj: 1.0,
+            skip_slope: 0.0,
+            energy_skip_slope: 0.0,
+        };
+        let c = Coordinator::start_pool(
+            move |_worker| MockBackend {
+                in_len: 2,
+                out_len: 1,
+                batch: 1,
+                calls: calls2.clone(),
+                delay: Duration::from_millis(300),
+                fail: false,
+            },
+            CoordinatorConfig {
+                max_wait: Duration::from_millis(1),
+                workers: 1,
+                // any outstanding request is already ≥ the limit
+                max_outstanding_cost: 1.0,
+                ..Default::default()
+            },
+            Some(model),
+        );
+        // first request is admitted (nothing outstanding yet) and holds
+        // the worker for 300 ms; the next two hit the admission limit
+        let rx_a = c.submit(vec![1.0, 2.0]);
+        std::thread::sleep(Duration::from_millis(50));
+        let rx_b = c.submit(vec![3.0, 4.0]);
+        let rx_c = c.submit(vec![5.0, 6.0]);
+        for rx in [rx_b, rx_c] {
+            let rep = rx.recv_timeout(Duration::from_secs(10)).expect("reply");
+            let err = rep.result.expect_err("must be rejected as overload");
+            assert!(err.contains("overloaded"), "{err}");
+            assert!(rep.cost.is_some(), "rejections still carry the estimate");
+        }
+        let rep_a = rx_a.recv_timeout(Duration::from_secs(10)).expect("reply");
+        assert!(rep_a.result.is_ok());
+        assert_eq!(c.metrics.rejected_overload.load(Ordering::Relaxed), 2);
+        // once the backlog drains, admission opens again
+        let rx_d = c.submit(vec![1.0, 1.0]);
+        assert!(rx_d
+            .recv_timeout(Duration::from_secs(10))
+            .expect("reply")
+            .result
+            .is_ok());
+        c.shutdown();
     }
 }

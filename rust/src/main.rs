@@ -6,9 +6,12 @@
 //!               with a scheme; print crossbar/area/index stats
 //!   simulate  — cycle/energy simulation + scheme comparison (Fig7/8/§V-C)
 //!   batch-sim — batched multi-image simulation (per-image + batch
-//!               totals, bit-exact with looped per-image runs)
-//!   serve     — start the batching coordinator over the PJRT artifact
-//!               (per-request cost estimates, deadlines, retry, alarm)
+//!               totals, bit-exact with looped per-image runs;
+//!               `--shards N` plans + checks cost-balanced sharding)
+//!   serve     — start the sharded serving coordinator over the PJRT
+//!               artifact (`--workers N --balance cost|rr`, per-request
+//!               cost estimates calibrated from exact traces,
+//!               deadlines, per-worker retry/quarantine, alarm)
 //!   e2e       — run the SmallCNN end-to-end check (golden + accuracy)
 //!   report    — regenerate every paper table/figure into results/
 
@@ -17,7 +20,7 @@ use std::time::Duration;
 
 use rram_pattern_accel::config::{HardwareConfig, SimConfig};
 use rram_pattern_accel::coordinator::{
-    Coordinator, CoordinatorConfig, CostModel, PjrtBackend,
+    BalancePolicy, Coordinator, CoordinatorConfig, CostModel, PjrtBackend,
 };
 use rram_pattern_accel::mapping::{
     index, kmeans::KmeansMapping, naive::NaiveMapping, ou_sparse::OuSparseMapping,
@@ -27,8 +30,8 @@ use rram_pattern_accel::mapping::{
 use rram_pattern_accel::nn::{NetworkSpec, Tensor};
 use rram_pattern_accel::pruning::synthetic::{DatasetProfile, ALL_PROFILES};
 use rram_pattern_accel::report;
-use rram_pattern_accel::runtime::Engine;
-use rram_pattern_accel::sim::{self, smallcnn::SmallCnn};
+use rram_pattern_accel::runtime::{Engine, EngineFactory};
+use rram_pattern_accel::sim::{self, smallcnn::SmallCnn, ShardPolicy};
 use rram_pattern_accel::util::cli::Args;
 use rram_pattern_accel::util::threadpool;
 use rram_pattern_accel::xbar::CellGeometry;
@@ -183,6 +186,12 @@ fn cmd_batch_sim(rest: Vec<String>) -> i32 {
     .opt("samples", "64", "sampled positions per layer")
     .opt("seed", "42", "synthetic weight seed")
     .opt("threads", "0", "worker threads (0 = auto)")
+    .opt("shards", "0", "plan the batch over N shards (0 = off)")
+    .opt(
+        "shard-tolerance",
+        "0.10",
+        "max predicted/achieved per-shard share divergence",
+    )
     .flag("smallcnn", "also run the exact-mode synthetic SmallCNN batch")
     .flag("json", "write results/batch_sim.json")
     .parse(rest)
@@ -238,6 +247,50 @@ fn cmd_batch_sim(rest: Vec<String>) -> i32 {
         if bit_exact { "bit-exact" } else { "MISMATCH" },
     );
 
+    // Shard planning: balance the batch's predicted per-image costs
+    // over N shards, then evaluate the same assignment against the
+    // achieved (fully simulated) cycles. A divergence beyond tolerance
+    // is an error — and the error path prints the per-shard table, so
+    // the nonzero exit always comes with the numbers behind it.
+    let shards = args.get_usize("shards").unwrap_or(0);
+    let tolerance = args.get_f64("shard-tolerance").unwrap_or(0.10);
+    let mut shard_ok = true;
+    let mut shard_json = None;
+    if shards > 0 {
+        let plan = mine.shard_plan(shards, ShardPolicy::CostBalanced);
+        let rr = mine.shard_plan(shards, ShardPolicy::RoundRobin);
+        let achieved = plan.loads_with(&mine.image_cycles());
+        let table = report::shard_balance_table(&plan, &achieved);
+        println!("{table}");
+        println!(
+            "cost-balanced max shard load {:.0} vs round-robin {:.0} ({})",
+            plan.max_load(),
+            rr.max_load(),
+            if plan.max_load() < rr.max_load() {
+                "cost wins"
+            } else {
+                "tied"
+            },
+        );
+        let divergence = report::shard_share_divergence(&plan.loads, &achieved);
+        println!(
+            "predicted/achieved share divergence {:.2}% (tolerance {:.0}%)",
+            divergence * 100.0,
+            tolerance * 100.0,
+        );
+        if divergence > tolerance {
+            shard_ok = false;
+            eprintln!(
+                "batch-sim: shard plan diverged from achieved cycles by \
+                 {:.2}% (> {:.0}% tolerance) — per-shard loads:\n{}",
+                divergence * 100.0,
+                tolerance * 100.0,
+                table,
+            );
+        }
+        shard_json = Some(report::shard_plan_json(&plan, &achieved));
+    }
+
     if args.get_flag("smallcnn") {
         let model = SmallCnn::synthetic(NetworkSpec::smallcnn(), seed);
         let hw_s = HardwareConfig::smallcnn_functional();
@@ -261,19 +314,25 @@ fn cmd_batch_sim(rest: Vec<String>) -> i32 {
     }
 
     if args.get_flag("json") {
-        let j = rram_pattern_accel::util::json::obj(vec![
+        let mut pairs = vec![
             ("naive", base.to_json()),
             ("pattern", mine.to_json()),
-        ]);
+        ];
+        if let Some(sj) = shard_json {
+            pairs.push(("shard_plan", sj));
+        }
+        let j = rram_pattern_accel::util::json::obj(pairs);
         match report::write_json("batch_sim.json", &j) {
             Ok(()) => println!("wrote results/batch_sim.json"),
             Err(e) => eprintln!("write results/batch_sim.json: {e}"),
         }
     }
-    if bit_exact {
+    if !bit_exact {
+        eprintln!("batch-sim: batch/looped totals diverged — engine bug");
+    }
+    if bit_exact && shard_ok {
         0
     } else {
-        eprintln!("batch-sim: batch/looped totals diverged — engine bug");
         1
     }
 }
@@ -285,6 +344,14 @@ fn cmd_serve(rest: Vec<String>) -> i32 {
         .opt("max-wait-ms", "2", "batcher max wait")
         .opt("deadline-ms", "0", "per-request deadline (0 = none)")
         .opt("alarm-threshold", "0", "failed-request alarm threshold (0 = off)")
+        .opt("workers", "1", "pool size: worker threads, one backend each")
+        .opt("balance", "cost", "dispatch policy: cost|rr")
+        .opt(
+            "calib-images",
+            "8",
+            "exact-trace cost-model calibration images (0 = analytic fallback)",
+        )
+        .flag("json", "write results/serve_workers.json")
         .parse(rest)
     {
         Ok(a) => a,
@@ -302,34 +369,54 @@ fn cmd_serve(rest: Vec<String>) -> i32 {
     let wait = Duration::from_millis(args.get_usize("max-wait-ms").unwrap_or(2) as u64);
     let deadline_ms = args.get_usize("deadline-ms").unwrap_or(0);
     let alarm_threshold = args.get_u64("alarm-threshold").unwrap_or(0);
+    let workers = args.get_usize("workers").unwrap_or(1).max(1);
+    let balance = match args.get("balance") {
+        "cost" => BalancePolicy::CostAware,
+        "rr" => BalancePolicy::RoundRobin,
+        other => return usage(format!("unknown balance policy {other}")),
+    };
+    let calib_images = args.get_usize("calib-images").unwrap_or(8);
 
     let td = match sim::smallcnn::TestData::load(Path::new(&dir)) {
         Ok(t) => t,
         Err(e) => return usage(format!("load test data: {e} (run `make artifacts`)")),
     };
-    // Per-request cost model: calibrate once from an analytic simulation
-    // of the pattern-mapped SmallCNN (first-order, trace-derived).
+    // Per-request cost model, calibrated from *real* exact-mode
+    // activation traces over the first test images (per-layer
+    // zero-fraction→cycles regression); falls back to the first-order
+    // analytic calibration when no calibration images are requested.
     let cost_model = SmallCnn::load(Path::new(&dir)).ok().map(|m| {
         let hw = HardwareConfig::smallcnn_functional();
         let mapped = m.map(&PatternMapping, &hw);
         let sim_cfg = SimConfig::default();
-        let r = sim::simulate_network(
-            &mapped,
-            &m.spec,
-            &hw,
-            &sim_cfg,
-            threadpool::default_threads(),
-        );
-        CostModel::from_sim(
-            &r,
-            sim_cfg.dead_channel_ratio + sim_cfg.zero_blob_ratio,
-        )
+        let threads = threadpool::default_threads();
+        let k = calib_images.min(td.test_x.shape[0]);
+        if k >= 2 {
+            let img_len: usize = td.test_x.shape[1..].iter().product();
+            let calib_x = Tensor::from_vec(
+                &[k, td.test_x.shape[1], td.test_x.shape[2], td.test_x.shape[3]],
+                td.test_x.data[..k * img_len].to_vec(),
+            );
+            let cal = m.calibrate(&mapped, &calib_x, &hw, &sim_cfg, threads);
+            println!(
+                "[serve] cost model calibrated from {k} exact traces: \
+                 dense {:.0} cycles",
+                cal.total_cycles_at(0.0),
+            );
+            CostModel::from_calibration(&cal)
+        } else {
+            let r = sim::simulate_network(&mapped, &m.spec, &hw, &sim_cfg, threads);
+            CostModel::from_sim(
+                &r,
+                sim_cfg.dead_channel_ratio + sim_cfg.zero_blob_ratio,
+            )
+        }
     });
-    let path = format!("{dir}/smallcnn_b8.hlo.txt");
-    let coord = Coordinator::start_with(
-        move || {
-            let engine = Engine::load(Path::new(&path)).expect("load HLO artifact");
-            println!("[serve] engine up on {}", engine.platform());
+    let factory = EngineFactory::new(format!("{dir}/smallcnn_b8.hlo.txt"));
+    let coord = Coordinator::start_pool(
+        move |worker| {
+            let engine = factory.load().expect("load HLO artifact");
+            println!("[serve] worker {worker} engine up on {}", engine.platform());
             PjrtBackend {
                 engine,
                 batch: 8,
@@ -345,6 +432,8 @@ fn cmd_serve(rest: Vec<String>) -> i32 {
                 Some(Duration::from_millis(deadline_ms as u64))
             },
             alarm_threshold,
+            workers,
+            balance,
             ..Default::default()
         },
         cost_model,
@@ -380,15 +469,18 @@ fn cmd_serve(rest: Vec<String>) -> i32 {
         }
     }
     let elapsed = t0.elapsed();
-    let lat = coord.metrics.latency_summary();
+    use std::sync::atomic::Ordering::Relaxed;
+    let merged = coord.merged_metrics();
+    let lat = merged.latency_summary();
     println!(
-        "[serve] {} requests in {:?} ({:.0} req/s), accuracy {:.1}%, \
-         batches {}, mean queue+exec {:.2} ms, p99 {:.2} ms",
+        "[serve] {} requests in {:?} ({:.0} req/s) on {} worker(s), \
+         accuracy {:.1}%, batches {}, mean queue+exec {:.2} ms, p99 {:.2} ms",
         n,
         elapsed,
         n as f64 / elapsed.as_secs_f64(),
+        coord.n_workers(),
         100.0 * correct as f64 / n as f64,
-        coord.metrics.batches.load(std::sync::atomic::Ordering::Relaxed),
+        merged.batches.load(Relaxed),
         lat.mean() / 1000.0,
         lat.percentile(99.0) / 1000.0,
     );
@@ -400,13 +492,23 @@ fn cmd_serve(rest: Vec<String>) -> i32 {
             est_cycles.len()
         );
     }
-    use std::sync::atomic::Ordering::Relaxed;
     println!(
-        "[serve] failed {failed} (deadline-expired {}, retried batches {}), alarm {}",
-        coord.metrics.deadline_expired.load(Relaxed),
-        coord.metrics.retried_batches.load(Relaxed),
-        if coord.metrics.failed_alarm() { "TRIPPED" } else { "ok" },
+        "[serve] failed {failed} (deadline-expired {}, overload-rejected {}, \
+         retried batches {}), alarm {}",
+        merged.deadline_expired.load(Relaxed),
+        merged.rejected_overload.load(Relaxed),
+        merged.retried_batches.load(Relaxed),
+        if merged.failed_alarm() { "TRIPPED" } else { "ok" },
     );
+    let stats = coord.worker_stats();
+    println!("{}", report::worker_utilization_lines(&stats));
+    if args.get_flag("json") {
+        let j = report::worker_utilization_json(&stats);
+        match report::write_json("serve_workers.json", &j) {
+            Ok(()) => println!("wrote results/serve_workers.json"),
+            Err(e) => eprintln!("write results/serve_workers.json: {e}"),
+        }
+    }
     coord.shutdown();
     0
 }

@@ -7,10 +7,11 @@
 
 use std::path::Path;
 
+use crate::coordinator::WorkerStats;
 use crate::pruning::synthetic::DatasetProfile;
 use crate::pruning::NetworkStats;
-use crate::sim::Comparison;
-use crate::util::json::{obj, Json};
+use crate::sim::{Comparison, ShardPlan};
+use crate::util::json::{arr_f64, obj, Json};
 use crate::xbar::energy::EnergyLedger;
 
 /// Render Table I (hardware parameters) from the live config.
@@ -195,6 +196,140 @@ pub fn batch_speedup_line(looped_ns: f64, batched_ns: f64) -> String {
     )
 }
 
+/// Per-shard predicted-vs-achieved balance table for
+/// `batch-sim --shards N`: one row per shard with its image count,
+/// planned (predicted-cost) load and achieved (simulated-cycle) load,
+/// plus their load shares. Also printed on the divergence *error* path,
+/// so a nonzero exit always comes with the numbers that caused it.
+pub fn shard_balance_table(plan: &ShardPlan, achieved: &[f64]) -> String {
+    let sizes = plan.shard_sizes();
+    let pred_total: f64 = plan.loads.iter().sum::<f64>().max(1e-12);
+    let ach_total: f64 = achieved.iter().sum::<f64>().max(1e-12);
+    let mut s = format!(
+        "shard plan ({}, {} shards):\n  {:<5} {:>6} {:>16} {:>7} {:>16} {:>7}\n",
+        plan.policy.name(),
+        plan.n_shards,
+        "shard",
+        "images",
+        "predicted",
+        "share",
+        "achieved",
+        "share",
+    );
+    for i in 0..plan.n_shards {
+        s.push_str(&format!(
+            "  {:<5} {:>6} {:>16.0} {:>6.1}% {:>16.0} {:>6.1}%\n",
+            i,
+            sizes[i],
+            plan.loads[i],
+            100.0 * plan.loads[i] / pred_total,
+            achieved[i],
+            100.0 * achieved[i] / ach_total,
+        ));
+    }
+    let ach_max = achieved.iter().copied().fold(0.0, f64::max);
+    let ach_mean = ach_total / plan.n_shards.max(1) as f64;
+    s.push_str(&format!(
+        "  max/mean: predicted {:.3}  achieved {:.3}",
+        plan.imbalance(),
+        ach_max / ach_mean.max(1e-12),
+    ));
+    s
+}
+
+/// Largest per-shard divergence between predicted and achieved load
+/// *shares* (scale-free: predicted OU-op costs and achieved cycles are
+/// in different units, but a faithful plan gives every shard the same
+/// share of both). 0.0 = the plan's balance was achieved exactly.
+pub fn shard_share_divergence(predicted: &[f64], achieved: &[f64]) -> f64 {
+    assert_eq!(predicted.len(), achieved.len());
+    let pt: f64 = predicted.iter().sum::<f64>().max(1e-12);
+    let at: f64 = achieved.iter().sum::<f64>().max(1e-12);
+    predicted
+        .iter()
+        .zip(achieved.iter())
+        .map(|(p, a)| (p / pt - a / at).abs())
+        .fold(0.0, f64::max)
+}
+
+/// Shard-plan JSON (predicted + achieved loads) for `results/`.
+pub fn shard_plan_json(plan: &ShardPlan, achieved: &[f64]) -> Json {
+    obj(vec![
+        ("plan", plan.to_json()),
+        ("achieved_loads", arr_f64(achieved)),
+        (
+            "share_divergence",
+            shard_share_divergence(&plan.loads, achieved).into(),
+        ),
+    ])
+}
+
+/// One line per pool worker for the `serve` subcommand.
+pub fn worker_utilization_lines(stats: &[WorkerStats]) -> String {
+    let mut s = String::new();
+    for w in stats {
+        s.push_str(&format!(
+            "[serve] worker {}: {} requests ({} failed), {} batches \
+             ({} padded slots, {} retried), outstanding {} cycles{}\n",
+            w.worker,
+            w.requests,
+            w.failed_requests,
+            w.batches,
+            w.padded_slots,
+            w.retried_batches,
+            w.outstanding_cost,
+            if w.quarantined { " [QUARANTINED]" } else { "" },
+        ));
+    }
+    let max = stats.iter().map(|w| w.requests).max().unwrap_or(0);
+    let mean = stats.iter().map(|w| w.requests).sum::<u64>() as f64
+        / stats.len().max(1) as f64;
+    s.push_str(&format!(
+        "[serve] worker request imbalance max/mean: {:.3}",
+        max as f64 / mean.max(1e-12),
+    ));
+    s
+}
+
+/// Per-worker utilization/imbalance JSON for `results/`.
+pub fn worker_utilization_json(stats: &[WorkerStats]) -> Json {
+    let total: u64 = stats.iter().map(|w| w.requests).sum();
+    let max = stats.iter().map(|w| w.requests).max().unwrap_or(0);
+    let mean = total as f64 / stats.len().max(1) as f64;
+    obj(vec![
+        (
+            "workers",
+            Json::Arr(
+                stats
+                    .iter()
+                    .map(|w| {
+                        obj(vec![
+                            ("worker", w.worker.into()),
+                            ("requests", (w.requests as f64).into()),
+                            ("failed_requests", (w.failed_requests as f64).into()),
+                            ("batches", (w.batches as f64).into()),
+                            ("padded_slots", (w.padded_slots as f64).into()),
+                            ("retried_batches", (w.retried_batches as f64).into()),
+                            ("inflight", (w.inflight as f64).into()),
+                            (
+                                "outstanding_cost",
+                                (w.outstanding_cost as f64).into(),
+                            ),
+                            ("quarantined", w.quarantined.into()),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("total_requests", (total as f64).into()),
+        (
+            "utilization_share_max",
+            (max as f64 / (total as f64).max(1.0)).into(),
+        ),
+        ("imbalance_max_over_mean", (max as f64 / mean.max(1e-12)).into()),
+    ])
+}
+
 /// §V-C speedup row.
 pub fn speedup_line(dataset: &str, cmp: &Comparison, paper: f64) -> String {
     format!(
@@ -284,6 +419,74 @@ mod tests {
         let s = engine_speedup_line(300.0, 100.0);
         assert!(s.contains("3.0x"), "{s}");
         assert!(s.contains("MISSED"), "{s}");
+    }
+
+    #[test]
+    fn shard_table_and_divergence() {
+        let plan = ShardPlan::cost_balanced(&[6.0, 4.0, 3.0, 3.0], 2);
+        let achieved = plan.loads_with(&[6.6, 4.4, 3.3, 3.3]);
+        let s = shard_balance_table(&plan, &achieved);
+        assert!(s.contains("shard plan (cost, 2 shards)"), "{s}");
+        assert!(s.contains("max/mean"), "{s}");
+        // achieved is a uniform 1.1x scale of predicted: shares match
+        let d = shard_share_divergence(&plan.loads, &achieved);
+        assert!(d < 1e-12, "divergence {d}");
+        // skewing one shard shows up as a share gap
+        let skew = vec![achieved[0] * 2.0, achieved[1]];
+        let d = shard_share_divergence(&plan.loads, &skew);
+        assert!(d > 0.1, "divergence {d}");
+        let j = shard_plan_json(&plan, &achieved);
+        assert!(j.get("share_divergence").as_f64().unwrap() < 1e-12);
+        assert_eq!(
+            j.get("plan").get("n_shards").as_usize(),
+            Some(2)
+        );
+    }
+
+    #[test]
+    fn worker_utilization_emitters() {
+        let stats = vec![
+            WorkerStats {
+                worker: 0,
+                requests: 6,
+                failed_requests: 0,
+                batches: 3,
+                padded_slots: 2,
+                retried_batches: 1,
+                inflight: 0,
+                outstanding_cost: 0,
+                quarantined: false,
+            },
+            WorkerStats {
+                worker: 1,
+                requests: 2,
+                failed_requests: 2,
+                batches: 2,
+                padded_slots: 0,
+                retried_batches: 0,
+                inflight: 1,
+                outstanding_cost: 500,
+                quarantined: true,
+            },
+        ];
+        let lines = worker_utilization_lines(&stats);
+        assert!(lines.contains("worker 0: 6 requests"), "{lines}");
+        assert!(lines.contains("QUARANTINED"), "{lines}");
+        assert!(lines.contains("imbalance max/mean: 1.500"), "{lines}");
+        let j = worker_utilization_json(&stats);
+        assert_eq!(
+            j.get("workers").as_arr().map(|a| a.len()),
+            Some(2)
+        );
+        assert!((j.get("total_requests").as_f64().unwrap() - 8.0).abs() < 1e-12);
+        assert!(
+            (j.get("imbalance_max_over_mean").as_f64().unwrap() - 1.5).abs()
+                < 1e-12
+        );
+        assert_eq!(
+            j.get("workers").idx(1).get("quarantined").as_bool(),
+            Some(true)
+        );
     }
 
     #[test]

@@ -123,6 +123,34 @@ mod pjrt {
 
 pub use pjrt::Engine;
 
+/// Cloneable per-worker engine factory for the sharded serving pool:
+/// every pool worker loads its *own* engine instance from the same
+/// artifact path, inside its own thread — the PJRT client is not
+/// `Send`, so engines can never be shared (or even moved) across worker
+/// threads. Cloning the factory is cheap (one `PathBuf`); loading is
+/// where the compile cost lives, paid once per worker at pool start.
+#[derive(Debug, Clone)]
+pub struct EngineFactory {
+    path: std::path::PathBuf,
+}
+
+impl EngineFactory {
+    pub fn new<P: Into<std::path::PathBuf>>(path: P) -> EngineFactory {
+        EngineFactory { path: path.into() }
+    }
+
+    pub fn path(&self) -> &std::path::Path {
+        &self.path
+    }
+
+    /// Load + compile a fresh engine for one worker. Errors are
+    /// stringified so the signature is identical with and without the
+    /// `xla-runtime` feature.
+    pub fn load(&self) -> Result<Engine, String> {
+        Engine::load(&self.path).map_err(|e| e.to_string())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     // Engine tests that need artifacts/ live in tests/e2e.rs; here we
@@ -140,5 +168,15 @@ mod tests {
     #[test]
     fn availability_matches_feature() {
         assert_eq!(Engine::available(), cfg!(feature = "xla-runtime"));
+    }
+
+    #[test]
+    fn factory_is_cloneable_and_reports_missing_artifacts() {
+        let f = EngineFactory::new("/nonexistent/model.hlo.txt");
+        let g = f.clone();
+        assert_eq!(f.path(), g.path());
+        // each clone loads independently; both see the same failure
+        assert!(f.load().is_err());
+        assert!(g.load().is_err());
     }
 }

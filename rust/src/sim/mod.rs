@@ -46,8 +46,9 @@ use crate::config::{HardwareConfig, SimConfig};
 use crate::mapping::{MappedLayer, MappedNetwork};
 use crate::nn::NetworkSpec;
 use crate::pruning::Pattern;
-use crate::util::json::{obj, Json};
+use crate::util::json::{arr_f64, arr_usize, obj, Json};
 use crate::util::rng::Rng;
+use crate::util::stats::linear_fit;
 use crate::util::threadpool;
 use crate::xbar::energy::{ou_op_energy_batch, EnergyLedger};
 use crate::xbar::CellGeometry;
@@ -172,6 +173,26 @@ impl BatchSimResult {
             .fold(0.0, f64::max)
     }
 
+    /// Per-image simulated cycles, in image order — the per-item costs
+    /// a sharded dispatcher balances (`max_image_cycles` is their max).
+    pub fn image_cycles(&self) -> Vec<f64> {
+        self.per_image.iter().map(|r| r.total_cycles()).collect()
+    }
+
+    /// First-order predicted per-image cost: executed OU ops only, no
+    /// block-switch overhead — what a cheap cost model sees before the
+    /// full cycle accounting is known. Shard plans are built on these
+    /// and then evaluated against the achieved [`Self::image_cycles`].
+    pub fn image_predicted_costs(&self) -> Vec<f64> {
+        self.per_image.iter().map(|r| r.total_ou_ops()).collect()
+    }
+
+    /// Plan how to spread this batch's images over `n_shards` parallel
+    /// compute shards, using the first-order predicted costs.
+    pub fn shard_plan(&self, n_shards: usize, policy: ShardPolicy) -> ShardPlan {
+        ShardPlan::plan(&self.image_predicted_costs(), n_shards, policy)
+    }
+
     pub fn to_json(&self) -> Json {
         obj(vec![
             ("scheme", self.scheme.as_str().into()),
@@ -187,6 +208,271 @@ impl BatchSimResult {
                 Json::Arr(self.per_image.iter().map(|r| r.to_json()).collect()),
             ),
         ])
+    }
+}
+
+/// How [`ShardPlan`] assigns per-image work to shards.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShardPolicy {
+    /// Greedy longest-processing-time: items in descending cost order,
+    /// each to the currently least-loaded shard. Never yields a worse
+    /// max-shard load than round-robin on the same costs (the
+    /// constructor falls back to the round-robin assignment in the
+    /// rare case it would).
+    CostBalanced,
+    /// Item `i` to shard `i % n_shards`, cost-blind.
+    RoundRobin,
+}
+
+impl ShardPolicy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ShardPolicy::CostBalanced => "cost",
+            ShardPolicy::RoundRobin => "rr",
+        }
+    }
+}
+
+/// Static assignment of per-item costs (e.g. a batch's predicted
+/// per-image cycles) to `n_shards` parallel shards. A shard's load is
+/// the sum of its items' costs — its serial makespan — so the plan's
+/// [`ShardPlan::max_load`] is the batch's critical path under the plan
+/// (the sharded generalization of
+/// [`BatchSimResult::max_image_cycles`]).
+#[derive(Debug, Clone)]
+pub struct ShardPlan {
+    pub policy: ShardPolicy,
+    pub n_shards: usize,
+    /// `assignment[item]` = shard index.
+    pub assignment: Vec<usize>,
+    /// Planned per-shard load (sum of assigned costs).
+    pub loads: Vec<f64>,
+}
+
+impl ShardPlan {
+    /// Build a plan under `policy` (negative costs are clamped to 0).
+    pub fn plan(costs: &[f64], n_shards: usize, policy: ShardPolicy) -> ShardPlan {
+        match policy {
+            ShardPolicy::CostBalanced => Self::cost_balanced(costs, n_shards),
+            ShardPolicy::RoundRobin => Self::round_robin(costs, n_shards),
+        }
+    }
+
+    /// Cost-blind round-robin assignment.
+    pub fn round_robin(costs: &[f64], n_shards: usize) -> ShardPlan {
+        let n_shards = n_shards.max(1);
+        let assignment: Vec<usize> =
+            (0..costs.len()).map(|i| i % n_shards).collect();
+        Self::from_assignment(ShardPolicy::RoundRobin, n_shards, assignment, costs)
+    }
+
+    /// Greedy LPT assignment, guaranteed never worse than round-robin
+    /// on max-shard load: the round-robin plan is computed alongside
+    /// and kept if it strictly beats the greedy one.
+    pub fn cost_balanced(costs: &[f64], n_shards: usize) -> ShardPlan {
+        let n_shards = n_shards.max(1);
+        let mut order: Vec<usize> = (0..costs.len()).collect();
+        order.sort_by(|&a, &b| {
+            costs[b]
+                .partial_cmp(&costs[a])
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cmp(&b))
+        });
+        let mut greedy_loads = vec![0.0; n_shards];
+        let mut assignment = vec![0usize; costs.len()];
+        for &i in &order {
+            // argmin load, first minimum on ties (deterministic)
+            let mut best = 0usize;
+            for (s, load) in greedy_loads.iter().enumerate().skip(1) {
+                if *load < greedy_loads[best] {
+                    best = s;
+                }
+            }
+            assignment[i] = best;
+            greedy_loads[best] += costs[i].max(0.0);
+        }
+        let lpt = Self::from_assignment(
+            ShardPolicy::CostBalanced,
+            n_shards,
+            assignment,
+            costs,
+        );
+        let rr = Self::round_robin(costs, n_shards);
+        if rr.max_load() < lpt.max_load() {
+            ShardPlan { policy: ShardPolicy::CostBalanced, ..rr }
+        } else {
+            lpt
+        }
+    }
+
+    /// Build a plan from a fixed assignment, with loads accumulated in
+    /// canonical item order — the same order [`ShardPlan::loads_with`]
+    /// uses, so re-evaluating a plan on its own costs is bit-identical
+    /// to its planned loads.
+    fn from_assignment(
+        policy: ShardPolicy,
+        n_shards: usize,
+        assignment: Vec<usize>,
+        costs: &[f64],
+    ) -> ShardPlan {
+        let mut plan =
+            ShardPlan { policy, n_shards, assignment, loads: Vec::new() };
+        plan.loads = plan.loads_with(costs);
+        plan
+    }
+
+    /// Heaviest planned shard load — the plan's critical path.
+    pub fn max_load(&self) -> f64 {
+        self.loads.iter().copied().fold(0.0, f64::max)
+    }
+
+    /// Mean shard load (total work / shards): the lower bound any plan
+    /// can reach.
+    pub fn mean_load(&self) -> f64 {
+        self.loads.iter().sum::<f64>() / self.n_shards.max(1) as f64
+    }
+
+    /// `max_load / mean_load` — 1.0 is a perfectly balanced plan.
+    pub fn imbalance(&self) -> f64 {
+        self.max_load() / self.mean_load().max(1e-12)
+    }
+
+    /// Re-evaluate this plan's per-shard loads under different per-item
+    /// costs (e.g. achieved cycles vs the predicted costs it was
+    /// planned on).
+    pub fn loads_with(&self, costs: &[f64]) -> Vec<f64> {
+        assert_eq!(
+            costs.len(),
+            self.assignment.len(),
+            "loads_with needs one cost per planned item"
+        );
+        let mut loads = vec![0.0; self.n_shards];
+        for (i, &s) in self.assignment.iter().enumerate() {
+            loads[s] += costs[i].max(0.0);
+        }
+        loads
+    }
+
+    /// Items assigned per shard.
+    pub fn shard_sizes(&self) -> Vec<usize> {
+        let mut sizes = vec![0usize; self.n_shards];
+        for &s in &self.assignment {
+            sizes[s] += 1;
+        }
+        sizes
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("policy", self.policy.name().into()),
+            ("n_shards", self.n_shards.into()),
+            ("assignment", arr_usize(&self.assignment)),
+            ("loads", arr_f64(&self.loads)),
+            ("max_load", self.max_load().into()),
+            ("mean_load", self.mean_load().into()),
+            ("imbalance", self.imbalance().into()),
+        ])
+    }
+}
+
+/// One layer's zero-fraction→cost regression over exact-mode traces:
+/// `cycles(zf) ≈ cycles_at_dense + cycles_slope · zf` (and likewise for
+/// energy), fitted by least squares across calibration images.
+#[derive(Debug, Clone)]
+pub struct LayerCalibration {
+    pub layer_idx: usize,
+    /// Predicted cycles at input zero fraction 0 (regression intercept).
+    pub cycles_at_dense: f64,
+    /// d(cycles) / d(input zero fraction) — ≤ 0 when zero-skipping
+    /// helps.
+    pub cycles_slope: f64,
+    pub energy_at_dense_pj: f64,
+    pub energy_slope_pj: f64,
+    pub n_samples: usize,
+}
+
+/// Whole-network cost calibration from real exact-mode activation
+/// traces: one [`LayerCalibration`] per mapped layer, fitted against
+/// the calibration images' *input* zero fractions (the only signal the
+/// serving cost model sees at submit time). Built by
+/// `SmallCnn::calibrate`; consumed by
+/// `coordinator::CostModel::from_calibration`.
+#[derive(Debug, Clone, Default)]
+pub struct CostCalibration {
+    pub layers: Vec<LayerCalibration>,
+}
+
+impl CostCalibration {
+    /// Fit per-layer regressions from per-image exact simulations.
+    /// `zero_fractions[i]` is image `i`'s input zero fraction;
+    /// `per_image_layers[i][l]` its simulated result for layer `l`.
+    pub fn from_samples(
+        zero_fractions: &[f64],
+        per_image_layers: &[Vec<LayerSimResult>],
+    ) -> CostCalibration {
+        assert_eq!(
+            zero_fractions.len(),
+            per_image_layers.len(),
+            "one zero fraction per calibration image"
+        );
+        let n_layers = per_image_layers.first().map(|l| l.len()).unwrap_or(0);
+        let mut layers = Vec::with_capacity(n_layers);
+        for li in 0..n_layers {
+            let cycles: Vec<f64> = per_image_layers
+                .iter()
+                .map(|img| img[li].cycles)
+                .collect();
+            let energy: Vec<f64> = per_image_layers
+                .iter()
+                .map(|img| img[li].energy.total_pj())
+                .collect();
+            let (cb, cm) = linear_fit(zero_fractions, &cycles);
+            let (eb, em) = linear_fit(zero_fractions, &energy);
+            layers.push(LayerCalibration {
+                layer_idx: per_image_layers[0][li].layer_idx,
+                cycles_at_dense: cb,
+                cycles_slope: cm,
+                energy_at_dense_pj: eb,
+                energy_slope_pj: em,
+                n_samples: zero_fractions.len(),
+            });
+        }
+        CostCalibration { layers }
+    }
+
+    /// Predicted whole-network cycles at input zero fraction `zf`
+    /// (sum of the per-layer fits).
+    pub fn total_cycles_at(&self, zf: f64) -> f64 {
+        self.layers
+            .iter()
+            .map(|l| l.cycles_at_dense + l.cycles_slope * zf)
+            .sum()
+    }
+
+    /// Predicted whole-network energy (pJ) at input zero fraction `zf`.
+    pub fn total_energy_at(&self, zf: f64) -> f64 {
+        self.layers
+            .iter()
+            .map(|l| l.energy_at_dense_pj + l.energy_slope_pj * zf)
+            .sum()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.layers
+                .iter()
+                .map(|l| {
+                    obj(vec![
+                        ("layer_idx", l.layer_idx.into()),
+                        ("cycles_at_dense", l.cycles_at_dense.into()),
+                        ("cycles_slope", l.cycles_slope.into()),
+                        ("energy_at_dense_pj", l.energy_at_dense_pj.into()),
+                        ("energy_slope_pj", l.energy_slope_pj.into()),
+                        ("n_samples", l.n_samples.into()),
+                    ])
+                })
+                .collect(),
+        )
     }
 }
 
@@ -871,6 +1157,116 @@ mod tests {
         let j = batch.to_json();
         assert_eq!(j.get("n_images").as_usize(), Some(3));
         assert_eq!(j.get("per_image").as_arr().map(|a| a.len()), Some(3));
+    }
+
+    #[test]
+    fn shard_plans_cover_items_and_balance() {
+        let costs = [9.0, 1.0, 8.0, 2.0, 7.0, 3.0];
+        let rr = ShardPlan::round_robin(&costs, 2);
+        assert_eq!(rr.assignment, vec![0, 1, 0, 1, 0, 1]);
+        assert_eq!(rr.loads, vec![24.0, 6.0]);
+        assert_eq!(rr.max_load(), 24.0);
+        let cb = ShardPlan::cost_balanced(&costs, 2);
+        // LPT: 9→A, 8→B, 7→B? loads 9/8 → 7 to B(8)? no: least loaded
+        // is B(8) after 9/8 → B=15, then 3→A(9)=12, 2→A? A=12,B=15 →
+        // A=14, 1→A=15. Max 15 — the optimal split of 30 total.
+        assert_eq!(cb.max_load(), 15.0);
+        assert!(cb.max_load() <= rr.max_load());
+        assert_eq!(cb.assignment.len(), costs.len());
+        let total: f64 = cb.loads.iter().sum();
+        assert!((total - 30.0).abs() < 1e-12);
+        assert!((cb.mean_load() - 15.0).abs() < 1e-12);
+        assert!((cb.imbalance() - 1.0).abs() < 1e-12);
+        // re-evaluating the plan under the same costs reproduces loads
+        assert_eq!(cb.loads_with(&costs), cb.loads);
+        assert_eq!(cb.shard_sizes().iter().sum::<usize>(), costs.len());
+        let j = cb.to_json();
+        assert_eq!(j.get("n_shards").as_usize(), Some(2));
+        assert_eq!(j.get("policy").as_str(), Some("cost"));
+    }
+
+    #[test]
+    fn shard_plan_single_shard_and_empty() {
+        let p = ShardPlan::cost_balanced(&[5.0, 5.0], 1);
+        assert_eq!(p.loads, vec![10.0]);
+        let e = ShardPlan::cost_balanced(&[], 4);
+        assert_eq!(e.max_load(), 0.0);
+        assert_eq!(e.assignment.len(), 0);
+        // zero shards clamps to one
+        let z = ShardPlan::round_robin(&[1.0], 0);
+        assert_eq!(z.n_shards, 1);
+    }
+
+    #[test]
+    fn batch_shard_plan_balances_predicted_costs() {
+        let (l, w, geom, hw) = setup();
+        let spec = NetworkSpec { name: "t".into(), layers: vec![l.clone()] };
+        let nw = crate::pruning::NetworkWeights::new(spec.clone(), vec![w]);
+        let mapped = PatternMapping.map_network(&nw, &geom, 1);
+        let sim = SimConfig::default();
+        let batch = simulate_network_batch(&mapped, &spec, &hw, &sim, 6, 2);
+        let plan = batch.shard_plan(3, ShardPolicy::CostBalanced);
+        let rr = batch.shard_plan(3, ShardPolicy::RoundRobin);
+        assert_eq!(plan.assignment.len(), 6);
+        assert!(plan.max_load() <= rr.max_load() + 1e-9);
+        // achieved loads evaluate the same assignment on exact cycles
+        let achieved = plan.loads_with(&batch.image_cycles());
+        assert_eq!(achieved.len(), 3);
+        let total: f64 = achieved.iter().sum();
+        assert!((total - batch.total_cycles()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn cost_calibration_fits_per_layer_lines() {
+        // three images on an exact linear cost surface: the fit must
+        // recover each layer's intercept/slope and the summed model
+        let zfs = [0.0, 0.25, 0.5];
+        let mk = |cycles: f64, energy: f64| LayerSimResult {
+            layer_idx: 0,
+            ou_ops: cycles,
+            skipped_ou_ops: 0.0,
+            cycles,
+            energy: EnergyLedger { adc_pj: energy, dac_pj: 0.0, rram_pj: 0.0 },
+            n_crossbars: 1,
+        };
+        let per_image: Vec<Vec<LayerSimResult>> = zfs
+            .iter()
+            .map(|zf| {
+                vec![
+                    // layer 0: 1000 - 400·zf cycles, 100 - 40·zf pJ
+                    mk(1000.0 - 400.0 * zf, 100.0 - 40.0 * zf),
+                    // layer 1: 500 - 100·zf cycles, 50 - 10·zf pJ
+                    LayerSimResult { layer_idx: 1, ..mk(500.0 - 100.0 * zf, 50.0 - 10.0 * zf) },
+                ]
+            })
+            .collect();
+        let cal = CostCalibration::from_samples(&zfs, &per_image);
+        assert_eq!(cal.layers.len(), 2);
+        assert!((cal.layers[0].cycles_at_dense - 1000.0).abs() < 1e-6);
+        assert!((cal.layers[0].cycles_slope + 400.0).abs() < 1e-6);
+        assert!((cal.layers[1].cycles_at_dense - 500.0).abs() < 1e-6);
+        assert!((cal.layers[1].cycles_slope + 100.0).abs() < 1e-6);
+        assert!((cal.total_cycles_at(0.0) - 1500.0).abs() < 1e-6);
+        assert!((cal.total_cycles_at(0.5) - 1250.0).abs() < 1e-6);
+        assert!((cal.total_energy_at(0.0) - 150.0).abs() < 1e-6);
+        let j = cal.to_json();
+        assert_eq!(j.as_arr().map(|a| a.len()), Some(2));
+    }
+
+    #[test]
+    fn cost_calibration_degenerate_single_image() {
+        // one image: constant predictor, no slope
+        let per_image = vec![vec![LayerSimResult {
+            layer_idx: 0,
+            ou_ops: 100.0,
+            skipped_ou_ops: 0.0,
+            cycles: 100.0,
+            energy: EnergyLedger::default(),
+            n_crossbars: 1,
+        }]];
+        let cal = CostCalibration::from_samples(&[0.3], &per_image);
+        assert_eq!(cal.layers[0].cycles_slope, 0.0);
+        assert!((cal.layers[0].cycles_at_dense - 100.0).abs() < 1e-12);
     }
 
     #[test]

@@ -15,7 +15,7 @@ use super::functional::{
 use super::workload::{BatchAggregate, LayerTrace, TraceAggregate};
 use super::{
     layer_aggregate, simulate_layer_aggregated, simulate_layer_batch,
-    BatchSimResult, LayerSimResult,
+    BatchSimResult, CostCalibration, LayerSimResult,
 };
 use crate::config::{HardwareConfig, SimConfig};
 use crate::mapping::{MappedNetwork, MappingScheme};
@@ -291,6 +291,37 @@ impl SmallCnn {
         super::collect_batch(mapped, n, per_layer)
     }
 
+    /// Calibrate the serving cost model from **real** activation
+    /// traces: run the exact-mode batch simulation over the
+    /// `[N, C, H, W]` calibration images and regress every layer's
+    /// cycles/energy against each image's *input* zero fraction — the
+    /// only signal the coordinator's submit-path cost model sees. The
+    /// result feeds `coordinator::CostModel::from_calibration`,
+    /// replacing the synthetic first-order slope of
+    /// `CostModel::from_sim`.
+    pub fn calibrate(
+        &self,
+        mapped: &MappedNetwork,
+        batch_x: &Tensor,
+        hw: &HardwareConfig,
+        sim_cfg: &SimConfig,
+        threads: usize,
+    ) -> CostCalibration {
+        let n = batch_x.shape[0];
+        let img_len: usize = batch_x.shape[1..].iter().product();
+        let zfs: Vec<f64> = (0..n)
+            .map(|i| {
+                let img = &batch_x.data[i * img_len..(i + 1) * img_len];
+                let zeros = img.iter().filter(|v| **v == 0.0).count();
+                zeros as f64 / img_len.max(1) as f64
+            })
+            .collect();
+        let batch = self.simulate_exact_batch(mapped, batch_x, hw, sim_cfg, threads);
+        let per_image_layers: Vec<Vec<LayerSimResult>> =
+            batch.per_image.into_iter().map(|r| r.layers).collect();
+        CostCalibration::from_samples(&zfs, &per_image_layers)
+    }
+
     /// Fully synthetic SmallCNN-shaped bundle (no `make artifacts`
     /// needed): Table-II-style pattern-pruned weights, zero biases, unit
     /// scales, pools exactly where the spec's feature maps halve. Used
@@ -464,6 +495,53 @@ mod tests {
                 assert_eq!(a.energy, b.energy, "image {i}");
             }
         }
+    }
+
+    #[test]
+    fn calibration_tracks_real_trace_costs() {
+        let m = tiny_model();
+        let hw = HardwareConfig::smallcnn_functional();
+        let mapped = m.map(&PatternMapping, &hw);
+        let sim_cfg = SimConfig::default();
+        // calibration images spanning a range of input zero fractions
+        let n = 6;
+        let mut rng = Rng::seed_from(17);
+        let mut batch_x = Tensor::zeros(&[n, 2, 6, 6]);
+        let img_len = 2 * 6 * 6;
+        for i in 0..n {
+            let p_zero = i as f64 / n as f64; // 0, 1/6, …, 5/6
+            for v in batch_x.data[i * img_len..(i + 1) * img_len].iter_mut() {
+                *v = if rng.chance(p_zero) { 0.0 } else { rng.f32() + 0.01 };
+            }
+        }
+        let cal = m.calibrate(&mapped, &batch_x, &hw, &sim_cfg, 2);
+        assert_eq!(cal.layers.len(), 2);
+        for l in &cal.layers {
+            assert_eq!(l.n_samples, n);
+            assert!(l.cycles_at_dense > 0.0, "layer {}", l.layer_idx);
+        }
+        // zero-skipping means sparser inputs cost no more: the summed
+        // fit must not slope upward in any meaningful way
+        let dense = cal.total_cycles_at(0.0);
+        let sparse = cal.total_cycles_at(0.8);
+        assert!(
+            sparse <= dense * 1.05,
+            "calibrated cost rises with sparsity: {sparse} vs {dense}"
+        );
+        // the per-layer fits predict the actually-simulated costs of
+        // the calibration set to first order: check the mean image
+        let exact = m.simulate_exact_batch(&mapped, &batch_x, &hw, &sim_cfg, 1);
+        let total_sim: f64 = exact.total_cycles();
+        let total_fit: f64 = (0..n)
+            .map(|i| {
+                let img = &batch_x.data[i * img_len..(i + 1) * img_len];
+                let zf = img.iter().filter(|v| **v == 0.0).count() as f64
+                    / img_len as f64;
+                cal.total_cycles_at(zf)
+            })
+            .sum();
+        let rel = (total_fit - total_sim).abs() / total_sim.max(1.0);
+        assert!(rel < 0.25, "fit off by {:.1}% of simulated", rel * 100.0);
     }
 
     #[test]

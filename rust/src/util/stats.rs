@@ -19,6 +19,18 @@ impl Summary {
         self.values.push(v);
     }
 
+    /// Fold another summary's samples into this one (multiset union):
+    /// merging per-shard summaries is equivalent to having pushed every
+    /// sample into a single summary.
+    pub fn merge(&mut self, other: &Summary) {
+        self.values.extend_from_slice(&other.values);
+    }
+
+    /// The raw samples, in push order.
+    pub fn values(&self) -> &[f64] {
+        &self.values
+    }
+
     pub fn len(&self) -> usize {
         self.values.len()
     }
@@ -78,6 +90,31 @@ impl Summary {
     pub fn median(&self) -> f64 {
         self.percentile(50.0)
     }
+}
+
+/// Ordinary least-squares fit `y ≈ intercept + slope · x`, returned as
+/// `(intercept, slope)`. Degenerate inputs — fewer than two points, or
+/// `x` with (near-)zero variance — fall back to `(mean(y), 0.0)` so
+/// callers get a constant predictor instead of a NaN line.
+pub fn linear_fit(xs: &[f64], ys: &[f64]) -> (f64, f64) {
+    assert_eq!(xs.len(), ys.len(), "linear_fit needs paired samples");
+    let n = xs.len();
+    if n == 0 {
+        return (0.0, 0.0);
+    }
+    let mx = xs.iter().sum::<f64>() / n as f64;
+    let my = ys.iter().sum::<f64>() / n as f64;
+    let sxx: f64 = xs.iter().map(|x| (x - mx) * (x - mx)).sum();
+    if n < 2 || sxx < 1e-18 {
+        return (my, 0.0);
+    }
+    let sxy: f64 = xs
+        .iter()
+        .zip(ys.iter())
+        .map(|(x, y)| (x - mx) * (y - my))
+        .sum();
+    let slope = sxy / sxx;
+    (my - slope * mx, slope)
 }
 
 /// Fixed-bin histogram over `[lo, hi)`.
@@ -167,6 +204,39 @@ mod tests {
         let s = Summary::new();
         assert!(s.mean().is_nan());
         assert!(s.percentile(50.0).is_nan());
+    }
+
+    #[test]
+    fn summary_merge_is_multiset_union() {
+        let mut a = Summary::from_values(vec![1.0, 2.0]);
+        let b = Summary::from_values(vec![3.0, 4.0, 5.0]);
+        a.merge(&b);
+        assert_eq!(a.len(), 5);
+        assert_eq!(a.mean(), 3.0);
+        assert_eq!(a.values(), &[1.0, 2.0, 3.0, 4.0, 5.0]);
+        // merging an empty summary is a no-op
+        a.merge(&Summary::new());
+        assert_eq!(a.len(), 5);
+    }
+
+    #[test]
+    fn linear_fit_recovers_exact_line() {
+        let xs = [0.0, 0.25, 0.5, 1.0];
+        let ys: Vec<f64> = xs.iter().map(|x| 100.0 - 40.0 * x).collect();
+        let (b, m) = linear_fit(&xs, &ys);
+        assert!((b - 100.0).abs() < 1e-9, "intercept {b}");
+        assert!((m + 40.0).abs() < 1e-9, "slope {m}");
+    }
+
+    #[test]
+    fn linear_fit_degenerate_inputs() {
+        assert_eq!(linear_fit(&[], &[]), (0.0, 0.0));
+        let (b, m) = linear_fit(&[2.0], &[7.0]);
+        assert_eq!((b, m), (7.0, 0.0));
+        // zero x-variance: constant predictor at mean(y)
+        let (b, m) = linear_fit(&[3.0, 3.0, 3.0], &[1.0, 2.0, 3.0]);
+        assert_eq!(m, 0.0);
+        assert!((b - 2.0).abs() < 1e-12);
     }
 
     #[test]

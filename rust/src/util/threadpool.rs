@@ -15,6 +15,19 @@ pub fn default_threads() -> usize {
         .min(16)
 }
 
+/// Spawn a named OS thread (names surface in panics and debuggers —
+/// the serving coordinator labels its dispatcher and pool workers).
+pub fn spawn_named<F, T>(name: &str, f: F) -> std::thread::JoinHandle<T>
+where
+    F: FnOnce() -> T + Send + 'static,
+    T: Send + 'static,
+{
+    std::thread::Builder::new()
+        .name(name.to_string())
+        .spawn(f)
+        .expect("spawn named thread")
+}
+
 /// Map `f` over `items` in parallel, preserving order of results.
 ///
 /// `f` must be `Sync` (it is shared by reference across workers).
@@ -119,6 +132,15 @@ mod tests {
         for c in &counters {
             assert_eq!(c.load(Ordering::Relaxed), 1);
         }
+    }
+
+    #[test]
+    fn spawn_named_sets_thread_name() {
+        let h = spawn_named("tp-test-thread", || {
+            std::thread::current().name().map(|s| s.to_string())
+        });
+        let name = h.join().unwrap();
+        assert_eq!(name.as_deref(), Some("tp-test-thread"));
     }
 
     #[test]

@@ -13,7 +13,7 @@ use rram_pattern_accel::sim::functional::{conv_forward, LayerScales};
 use rram_pattern_accel::sim::workload::{LayerTrace, TraceAggregate};
 use rram_pattern_accel::sim::{
     image_seed, simulate_layer, simulate_layer_reference, simulate_network,
-    simulate_network_batch,
+    simulate_network_batch, ShardPlan,
 };
 use rram_pattern_accel::util::prop;
 use rram_pattern_accel::util::rng::Rng;
@@ -288,6 +288,54 @@ fn prop_batch_sim_equals_sum_of_singles() {
         assert_eq!(batch.total_cycles(), sum_cycles, "total cycles");
         assert_eq!(batch.total_ou_ops(), sum_ou_ops, "total ou ops");
         assert_eq!(batch.total_energy(), sum_energy, "total energy");
+    });
+}
+
+/// ISSUE-3 sharding invariant: cost-balanced sharding never yields a
+/// worse max-shard load than round-robin on the same per-image cost
+/// set, for any batch size and shard count — and both plans conserve
+/// the work (every item assigned exactly once, loads summing to the
+/// total cost).
+#[test]
+fn prop_cost_balanced_shard_never_worse_than_round_robin() {
+    prop::check("cost shard <= rr shard", prop::cases(64), |rng| {
+        let n = rng.range(1, 40);
+        let shards = rng.range(1, 9);
+        // heavy-tailed costs: squaring spreads the load like real
+        // per-image cycle variation does
+        let costs: Vec<f64> = (0..n)
+            .map(|_| {
+                let u = rng.f64();
+                1.0 + u * u * 1e6
+            })
+            .collect();
+        let cost = ShardPlan::cost_balanced(&costs, shards);
+        let rr = ShardPlan::round_robin(&costs, shards);
+        assert!(
+            cost.max_load() <= rr.max_load() + 1e-9,
+            "cost {} > rr {} (n={n}, shards={shards})",
+            cost.max_load(),
+            rr.max_load()
+        );
+        // both plans conserve the batch
+        let total: f64 = costs.iter().sum();
+        for plan in [&cost, &rr] {
+            assert_eq!(plan.assignment.len(), n);
+            for &s in &plan.assignment {
+                assert!(s < plan.n_shards);
+            }
+            let load_sum: f64 = plan.loads.iter().sum();
+            assert!(
+                (load_sum - total).abs() < total.max(1.0) * 1e-12,
+                "loads {load_sum} vs total {total}"
+            );
+            // re-evaluating a plan on its own costs reproduces loads
+            let re = plan.loads_with(&costs);
+            for (a, b) in re.iter().zip(plan.loads.iter()) {
+                assert_eq!(a, b);
+            }
+            assert!(plan.max_load() >= plan.mean_load() - 1e-9);
+        }
     });
 }
 
