@@ -1,0 +1,89 @@
+//! Worked DSE → auto-tuned-serving example (no artifacts or PJRT
+//! runtime needed — the sweep runs entirely on the analytic
+//! simulator).
+//!
+//! 1. Sweep the config grid (OU dims × crossbar dims × pattern count ×
+//!    pruning rate × mapping scheme) in parallel, cached under
+//!    `results/dse_cache/` — rerun the example and watch the second
+//!    pass complete from cache hits.
+//! 2. Extract the (area, energy, cycles) Pareto frontier and the
+//!    per-axis sensitivity summary.
+//! 3. Select the frontier point for a weighted objective and print the
+//!    `serve --auto-tune` invocation that boots a worker pool from it.
+//!
+//! Run: `cargo run --release --example dse_tune -- --grid small`
+
+use rram_pattern_accel::dse::{
+    self, Objective, ResultCache, SweepRunner, SweepSpec,
+};
+use rram_pattern_accel::util::cli::Args;
+use rram_pattern_accel::util::threadpool;
+
+fn main() {
+    let args = Args::new("design-space exploration worked example")
+        .opt("grid", "small", "sweep grid: small|medium")
+        .opt("seed", "42", "workload seed")
+        .opt("threads", "0", "sweep threads (0 = auto)")
+        .opt("weights", "1,1,1", "selection weights: area,energy,cycles")
+        .flag("no-cache", "evaluate every point fresh")
+        .parse(std::env::args().skip(1))
+        .unwrap_or_else(|e| {
+            eprintln!("{e}");
+            std::process::exit(2)
+        });
+    let seed = args.get_u64("seed").unwrap_or(42);
+    let spec = SweepSpec::by_name(args.get("grid"), seed).unwrap_or_else(|| {
+        eprintln!("unknown grid {}", args.get("grid"));
+        std::process::exit(2)
+    });
+    let obj = Objective::parse(args.get("weights")).unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2)
+    });
+    let threads = match args.get_usize("threads") {
+        Ok(0) | Err(_) => threadpool::default_threads(),
+        Ok(n) => n,
+    };
+    let cache = if args.get_flag("no-cache") {
+        None
+    } else {
+        Some(ResultCache::default_dir())
+    };
+
+    let outcome = SweepRunner { spec, threads, cache }.run();
+    println!("{}", outcome.summary_line());
+    print!("{}", outcome.frontier.table(&outcome.results));
+    println!();
+    for axis in dse::sensitivity(&outcome.results) {
+        print!("{}", axis.lines());
+    }
+    println!();
+
+    match outcome.select(&obj) {
+        Some(t) => {
+            println!(
+                "selected under weights {}: {}\n  cycles {:.0}, energy \
+                 {:.4e} pJ, {} crossbars ({:.0} cells, {:.1}% utilized)",
+                args.get("weights"),
+                t.point.label(),
+                t.metrics.cycles,
+                t.metrics.energy_pj,
+                t.metrics.crossbars,
+                t.metrics.area_cells,
+                t.metrics.utilization * 100.0,
+            );
+            println!(
+                "\nserve this configuration (needs the PJRT artifact, \
+                 `make artifacts` + `--features xla-runtime`):\n  \
+                 rram-accel serve --auto-tune --tune-grid {} \
+                 --tune-weights {} --workers 4 --balance cost",
+                args.get("grid"),
+                args.get("weights"),
+            );
+        }
+        None => {
+            eprintln!("empty frontier — every grid point was skipped");
+            std::process::exit(1)
+        }
+    }
+}

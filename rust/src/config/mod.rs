@@ -90,6 +90,28 @@ impl HardwareConfig {
         self.input_bits.div_ceil(self.dac_bits)
     }
 
+    /// Derive a config from `self` with different OU / crossbar
+    /// geometry, validated — how the DSE sweep turns a grid point into
+    /// a concrete hardware config without touching the converter or
+    /// precision parameters of its base.
+    pub fn with_dims(
+        &self,
+        ou_rows: usize,
+        ou_cols: usize,
+        xbar_rows: usize,
+        xbar_cols: usize,
+    ) -> Result<HardwareConfig, String> {
+        let hw = HardwareConfig {
+            ou_rows,
+            ou_cols,
+            xbar_rows,
+            xbar_cols,
+            ..self.clone()
+        };
+        hw.validate()?;
+        Ok(hw)
+    }
+
     /// Config for the SmallCNN functional path, matching the Pallas
     /// kernel quantization (`python/compile/kernels/quant.py` defaults
     /// with `x_bits = 8`).
@@ -308,6 +330,20 @@ mod tests {
         assert!(hw.validate().is_err());
         let hw = HardwareConfig { ou_rows: 1024, ..Default::default() };
         assert!(hw.validate().is_err());
+    }
+
+    #[test]
+    fn with_dims_keeps_base_and_validates() {
+        let base = HardwareConfig::default();
+        let hw = base.with_dims(16, 8, 256, 256).unwrap();
+        assert_eq!(hw.ou_rows, 16);
+        assert_eq!(hw.xbar_rows, 256);
+        // non-geometry parameters come from the base
+        assert_eq!(hw.weight_bits, base.weight_bits);
+        assert!((hw.adc_pj_per_op - base.adc_pj_per_op).abs() < 1e-12);
+        // invalid geometries are rejected, not constructed
+        assert!(base.with_dims(1024, 8, 256, 256).is_err(), "OU taller than xbar");
+        assert!(base.with_dims(9, 3, 512, 512).is_err(), "misaligned ou_cols");
     }
 
     #[test]

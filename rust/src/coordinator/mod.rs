@@ -47,12 +47,23 @@
 //!   near-deadline request fires its batch early, padded); a request
 //!   whose deadline already passed while queued gets a timely
 //!   deadline-exceeded error `Reply` instead of a stale result.
-//! - **Retry** — per worker: a failed batch is re-run up to
-//!   [`CoordinatorConfig::max_retries`] times on the worker that ran it
-//!   before the backend error is delivered to every requester. One
-//!   flaky backend retries (and, past
-//!   [`CoordinatorConfig::quarantine_after`] consecutive failures, is
-//!   routed around) without stalling or failing the rest of the pool.
+//! - **Retry & cross-worker requeue** — per worker: a failed batch is
+//!   re-run up to [`CoordinatorConfig::max_retries`] times on the
+//!   worker that ran it. When that worker's retries are exhausted and
+//!   the pool has siblings, each of the batch's requests is requeued
+//!   through the dispatcher onto a *different* worker (up to
+//!   [`CoordinatorConfig::max_requeues`] times per request) before the
+//!   backend error is delivered — one dead backend no longer fails the
+//!   requests that happened to be routed to it. One flaky backend
+//!   retries (and, past [`CoordinatorConfig::quarantine_after`]
+//!   consecutive failures, is routed around) without stalling or
+//!   failing the rest of the pool.
+//! - **Quarantine expiry** — a quarantined worker normally rejoins when
+//!   a batch already in its queue succeeds; with
+//!   [`CoordinatorConfig::quarantine_expiry`] set it also rejoins after
+//!   that much wall time on probation (failure streak reset), so a
+//!   recovered backend takes traffic again without needing a probe
+//!   request to drain through its queue.
 //! - **Alarm** — [`Metrics::failed_alarm`] trips once the *pool-wide*
 //!   failure count reaches the configured threshold (all shards of one
 //!   pool share a single alarm, so N workers keep the single-worker
@@ -258,11 +269,21 @@ pub struct CoordinatorConfig {
     /// routing new requests to a worker (0 disables quarantine). A
     /// worker leaves quarantine when a later batch succeeds — which
     /// requires requests already queued in its channel to drain
-    /// through; a quarantined worker with an *empty* queue stays
-    /// quarantined for the pool's lifetime (time-based probing is a
-    /// ROADMAP follow-up), so quarantine is for dead backends, not
-    /// transient blips — raise the threshold if failures are bursty.
+    /// through — or, with [`CoordinatorConfig::quarantine_expiry`] set,
+    /// when that much time has elapsed since it was quarantined.
     pub quarantine_after: u64,
+    /// Time-based quarantine release: after this long in quarantine the
+    /// worker rejoins routing on probation (its failure streak is
+    /// reset; another `quarantine_after` consecutive failures
+    /// re-quarantine it). `None` keeps the success-only release, which
+    /// never readmits a worker whose queue is empty.
+    pub quarantine_expiry: Option<Duration>,
+    /// Cross-worker requeue: how many times a request whose batch
+    /// failed (after the owning worker's retries) is re-dispatched to a
+    /// *different* worker before the error is delivered. Only active
+    /// with `workers > 1`; `0` restores strict per-worker failure
+    /// domains (a request fails with the worker it was routed to).
+    pub max_requeues: u32,
     /// Cost-aware admission: when > 0 and a cost model is attached, a
     /// new request is rejected with an overload error once the pool's
     /// total outstanding predicted cycles reach this limit
@@ -280,6 +301,8 @@ impl Default for CoordinatorConfig {
             workers: 1,
             balance: BalancePolicy::CostAware,
             quarantine_after: 2,
+            quarantine_expiry: None,
+            max_requeues: 1,
             max_outstanding_cost: 0.0,
         }
     }
@@ -293,6 +316,11 @@ struct Request {
     deadline: Option<Instant>,
     /// Cost estimate, computed once at dispatch (None without a model).
     cost: Option<CostEstimate>,
+    /// Times this request was requeued after a failed batch.
+    requeues: u32,
+    /// Worker whose batch failure requeued it — avoided on re-dispatch
+    /// while any alternative worker exists.
+    exclude: Option<usize>,
     reply: Sender<Reply>,
 }
 
@@ -339,6 +367,10 @@ pub struct Metrics {
     pub failed_requests: AtomicU64,
     /// Batch re-runs after a backend failure.
     pub retried_batches: AtomicU64,
+    /// Requests re-dispatched to a different worker after their batch
+    /// failed (recorded on the shard of the worker whose batch failed;
+    /// the request's terminal reply is counted wherever it lands).
+    pub requeued_requests: AtomicU64,
     /// Requests whose deadline passed while queued (also counted in
     /// `failed_requests`).
     pub deadline_expired: AtomicU64,
@@ -410,6 +442,7 @@ impl Metrics {
             out.padded_slots.fetch_add(s.padded_slots.load(r), r);
             out.failed_requests.fetch_add(s.failed_requests.load(r), r);
             out.retried_batches.fetch_add(s.retried_batches.load(r), r);
+            out.requeued_requests.fetch_add(s.requeued_requests.load(r), r);
             out.deadline_expired.fetch_add(s.deadline_expired.load(r), r);
             out.rejected_overload.fetch_add(s.rejected_overload.load(r), r);
             threshold = threshold.max(s.alarm_threshold());
@@ -448,13 +481,38 @@ struct WorkerState {
     /// Sum of the predicted `est_cycles` of requests routed to this
     /// worker and not yet terminally replied (whole cycles).
     outstanding_cost: AtomicU64,
-    /// Requests routed and not yet terminally replied.
+    /// Requests routed and not yet terminally replied (a requeued
+    /// request is settled here when its batch fails and re-charged on
+    /// the worker the dispatcher re-routes it to).
     inflight: AtomicU64,
     /// Consecutive batches that failed after retries; reset on any
-    /// successful batch. At `quarantine_after` the dispatcher routes
-    /// around this worker.
+    /// successful batch (and on quarantine expiry). At
+    /// `quarantine_after` the dispatcher routes around this worker.
     consecutive_failed_batches: AtomicU64,
+    /// When the failure streak crossed the quarantine threshold:
+    /// micros since `epoch`, offset by +1 so 0 means "not quarantined".
+    quarantined_at_us: AtomicU64,
+    /// Reference instant for `quarantined_at_us`.
+    epoch: Instant,
+    /// Cleared when the worker thread exits — normally at shutdown, but
+    /// also on a panic ([`WorkerAliveGuard`]). The dispatcher's drain
+    /// and idle-blocking decisions ignore dead workers' in-flight
+    /// counts (their requests can never settle), so a crashed worker
+    /// cannot hang shutdown.
+    alive: AtomicBool,
     metrics: Arc<Metrics>,
+}
+
+/// Drop guard marking a worker dead when its thread exits for any
+/// reason — an unwinding panic mid-batch or a panicking backend
+/// factory alike (it is installed in the spawn closure *before* the
+/// factory runs).
+struct WorkerAliveGuard(Arc<WorkerState>);
+
+impl Drop for WorkerAliveGuard {
+    fn drop(&mut self) {
+        self.0.alive.store(false, Ordering::Release);
+    }
 }
 
 impl WorkerState {
@@ -463,8 +521,40 @@ impl WorkerState {
             outstanding_cost: AtomicU64::new(0),
             inflight: AtomicU64::new(0),
             consecutive_failed_batches: AtomicU64::new(0),
+            quarantined_at_us: AtomicU64::new(0),
+            epoch: Instant::now(),
+            alive: AtomicBool::new(true),
             metrics,
         }
+    }
+
+    fn alive(&self) -> bool {
+        self.alive.load(Ordering::Acquire)
+    }
+
+    /// Record one terminally-failed batch; stamps the quarantine entry
+    /// time when the streak crosses the threshold.
+    fn note_batch_failure(&self, quarantine_after: u64) {
+        let streak =
+            self.consecutive_failed_batches.fetch_add(1, Ordering::Relaxed) + 1;
+        if quarantine_after > 0 && streak >= quarantine_after {
+            let now = self.epoch.elapsed().as_micros() as u64 + 1;
+            // only the first crossing stamps the clock; later failures
+            // while quarantined keep the original entry time
+            let _ = self.quarantined_at_us.compare_exchange(
+                0,
+                now,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            );
+        }
+    }
+
+    /// A successful batch ends both the failure streak and any
+    /// quarantine.
+    fn note_batch_success(&self) {
+        self.consecutive_failed_batches.store(0, Ordering::Relaxed);
+        self.quarantined_at_us.store(0, Ordering::Relaxed);
     }
 
     fn charge(&self, cost: Option<CostEstimate>) {
@@ -476,7 +566,11 @@ impl WorkerState {
     }
 
     /// Release the accounting charged at routing time — called exactly
-    /// once per routed request, at its terminal reply.
+    /// once per routed request, at its terminal reply. The in-flight
+    /// decrement is a Release store (read with Acquire by the
+    /// dispatcher): observing the count at zero proves every requeue
+    /// sent before the settles is already visible in the requeue
+    /// channel — the ordering the drain/idle logic relies on.
     fn settle(&self, cost: Option<CostEstimate>) {
         if let Some(c) = cost {
             let sub = c.est_cycles.max(0.0) as u64;
@@ -487,16 +581,38 @@ impl WorkerState {
             );
         }
         let _ = self.inflight.fetch_update(
-            Ordering::Relaxed,
-            Ordering::Relaxed,
+            Ordering::AcqRel,
+            Ordering::Acquire,
             |v| Some(v.saturating_sub(1)),
         );
     }
 
-    fn quarantined(&self, quarantine_after: u64) -> bool {
-        quarantine_after > 0
-            && self.consecutive_failed_batches.load(Ordering::Relaxed)
-                >= quarantine_after
+    /// In-flight count with Acquire ordering (see [`WorkerState::settle`]).
+    fn inflight_acq(&self) -> u64 {
+        self.inflight.load(Ordering::Acquire)
+    }
+
+    /// Is this worker currently quarantined? With an expiry configured,
+    /// the check also *releases* an expired quarantine (probation: the
+    /// failure streak resets, so readmission is observed by whichever
+    /// caller — dispatcher or stats — looks first).
+    fn quarantined(&self, quarantine_after: u64, expiry: Option<Duration>) -> bool {
+        if quarantine_after == 0
+            || self.consecutive_failed_batches.load(Ordering::Relaxed)
+                < quarantine_after
+        {
+            return false;
+        }
+        if let Some(exp) = expiry {
+            let at = self.quarantined_at_us.load(Ordering::Relaxed);
+            if at > 0
+                && self.epoch.elapsed() >= Duration::from_micros(at - 1) + exp
+            {
+                self.note_batch_success(); // parole: clean slate
+                return false;
+            }
+        }
+        true
     }
 }
 
@@ -509,6 +625,8 @@ pub struct WorkerStats {
     pub batches: u64,
     pub padded_slots: u64,
     pub retried_batches: u64,
+    /// Requests this worker's batch failures pushed to a sibling.
+    pub requeued_requests: u64,
     pub inflight: u64,
     /// Outstanding predicted cycles routed to this worker.
     pub outstanding_cost: u64,
@@ -526,6 +644,7 @@ pub struct Coordinator {
     worker_states: Vec<Arc<WorkerState>>,
     default_deadline: Option<Duration>,
     quarantine_after: u64,
+    quarantine_expiry: Option<Duration>,
     dispatcher: Option<std::thread::JoinHandle<()>>,
     worker_joins: Vec<std::thread::JoinHandle<()>>,
 }
@@ -594,6 +713,17 @@ impl Coordinator {
         let factory = Arc::new(factory);
         let (tx, rx) = channel::<Request>();
 
+        // Cross-worker requeue path: workers send failed-batch requests
+        // back to the dispatcher here. Only pools can requeue — a
+        // single worker has no sibling to move the work to.
+        let requeue_enabled = n > 1 && cfg.max_requeues > 0;
+        let (requeue_tx, requeue_rx) = if requeue_enabled {
+            let (qtx, qrx) = channel::<Request>();
+            (Some(qtx), Some(qrx))
+        } else {
+            (None, None)
+        };
+
         // One alarm for the whole pool: every shard's failures count
         // toward the same threshold, whatever the worker count.
         let alarm = Arc::new(AlarmState::default());
@@ -618,23 +748,40 @@ impl Coordinator {
             let f = factory.clone();
             let st = state.clone();
             let wcfg = cfg.clone();
+            let rq = requeue_tx.clone();
             worker_joins.push(threadpool::spawn_named(
                 &format!("coord-worker-{worker}"),
                 move || {
+                    // The guard must cover backend construction too: a
+                    // panicking factory otherwise leaves `alive` set and
+                    // the dispatcher keeps routing into the dead thread.
+                    let _alive = WorkerAliveGuard(st.clone());
                     let backend = f(worker);
-                    worker_loop(backend, wrx, wcfg, st);
+                    worker_loop(worker, backend, wrx, wcfg, st, rq);
                 },
             ));
             worker_txs.push(wtx);
             worker_states.push(state);
             worker_shards.push(shard);
         }
+        // Only workers hold requeue senders from here on; the
+        // dispatcher's drain phase tracks in-flight counts, not channel
+        // disconnection, so dropping this clone is just hygiene.
+        drop(requeue_tx);
 
         let dcfg = cfg.clone();
         let dstates = worker_states.clone();
         let dmetrics = admission.clone();
         let dispatcher = threadpool::spawn_named("coord-dispatch", move || {
-            dispatch_loop(rx, worker_txs, dstates, dcfg, cost_model, dmetrics);
+            dispatch_loop(
+                rx,
+                requeue_rx,
+                worker_txs,
+                dstates,
+                dcfg,
+                cost_model,
+                dmetrics,
+            );
         });
 
         Coordinator {
@@ -644,6 +791,7 @@ impl Coordinator {
             worker_states,
             default_deadline: cfg.default_deadline,
             quarantine_after: cfg.quarantine_after,
+            quarantine_expiry: cfg.quarantine_expiry,
             dispatcher: Some(dispatcher),
             worker_joins,
         }
@@ -679,6 +827,8 @@ impl Coordinator {
             submitted: now,
             deadline: deadline.map(|d| now + d),
             cost: None,
+            requeues: 0,
+            exclude: None,
             reply: rtx,
         };
         // A send failure means the dispatcher exited; the caller sees
@@ -726,9 +876,11 @@ impl Coordinator {
                 batches: s.metrics.batches.load(r),
                 padded_slots: s.metrics.padded_slots.load(r),
                 retried_batches: s.metrics.retried_batches.load(r),
+                requeued_requests: s.metrics.requeued_requests.load(r),
                 inflight: s.inflight.load(r),
                 outstanding_cost: s.outstanding_cost.load(r),
-                quarantined: s.quarantined(self.quarantine_after),
+                quarantined: s
+                    .quarantined(self.quarantine_after, self.quarantine_expiry),
             })
             .collect()
     }
@@ -792,23 +944,43 @@ fn admit_deadline(r: Request, metrics: &Metrics) -> Option<Request> {
     }
 }
 
-/// Pick the worker for one admitted request. Quarantined workers are
-/// skipped while at least one healthy worker remains; with none, the
+/// Pick the worker for one admitted request. Quarantined workers — and
+/// the worker a requeued request just failed on (`exclude`) — are
+/// skipped while at least one other worker remains; with none, the
 /// pool routes as if all were healthy (degraded service beats none).
 /// `candidates` is a caller-owned scratch buffer (cleared and refilled
 /// here) so the dispatch hot path allocates nothing per request.
+#[allow(clippy::too_many_arguments)]
 fn pick_worker(
     states: &[Arc<WorkerState>],
     policy: BalancePolicy,
     cost: Option<CostEstimate>,
     rr: &mut usize,
     quarantine_after: u64,
+    quarantine_expiry: Option<Duration>,
+    exclude: Option<usize>,
     candidates: &mut Vec<usize>,
 ) -> usize {
     candidates.clear();
-    candidates.extend(
-        (0..states.len()).filter(|&i| !states[i].quarantined(quarantine_after)),
-    );
+    candidates.extend((0..states.len()).filter(|&i| {
+        states[i].alive()
+            && Some(i) != exclude
+            && !states[i].quarantined(quarantine_after, quarantine_expiry)
+    }));
+    if candidates.is_empty() {
+        // every live non-excluded worker quarantined: degraded service
+        // beats none, but still prefer *live* workers over dead ones
+        candidates.extend(
+            (0..states.len())
+                .filter(|&i| states[i].alive() && Some(i) != exclude),
+        );
+    }
+    if candidates.is_empty() {
+        // no live alternative: honor the exclusion before falling back
+        // to "anyone" (a pick whose thread is gone gets a terminal
+        // error at send time)
+        candidates.extend((0..states.len()).filter(|&i| Some(i) != exclude));
+    }
     if candidates.is_empty() {
         candidates.extend(0..states.len());
     }
@@ -840,12 +1012,14 @@ fn pick_worker(
     best
 }
 
-/// Dispatcher: drain the shared admission queue, run admission checks
+/// Dispatcher: drain the shared admission queue (and, in a requeue-
+/// enabled pool, the workers' requeue channel), run admission checks
 /// (deadline, overload), attach cost estimates, and route each request
 /// to a worker channel. Never blocks on a worker — channels are
 /// unbounded, so a slow worker only grows its own queue.
 fn dispatch_loop(
     rx: Receiver<Request>,
+    requeue_rx: Option<Receiver<Request>>,
     worker_txs: Vec<Sender<Request>>,
     states: Vec<Arc<WorkerState>>,
     cfg: CoordinatorConfig,
@@ -854,16 +1028,27 @@ fn dispatch_loop(
 ) {
     let mut rr = 0usize;
     let mut scratch: Vec<usize> = Vec::with_capacity(states.len());
-    while let Ok(mut r) = rx.recv() {
-        if let Some(m) = &cost_model {
-            r.cost = Some(m.estimate(&r.image));
+
+    // Route one admitted request. Requeued requests skip the overload
+    // gate: they were admitted once already, their original charge is
+    // settled, and turning a near-success into an overload error would
+    // make the requeue path strictly worse than delivering the backend
+    // error.
+    let handle = |mut r: Request,
+                  requeued: bool,
+                  rr: &mut usize,
+                  scratch: &mut Vec<usize>| {
+        if r.cost.is_none() {
+            if let Some(m) = &cost_model {
+                r.cost = Some(m.estimate(&r.image));
+            }
         }
         let Some(r) = admit_deadline(r, &metrics) else {
-            continue;
+            return;
         };
         // Cost-aware admission: reject outright when the pool's
         // predicted backlog is already past the limit.
-        if cfg.max_outstanding_cost > 0.0 && r.cost.is_some() {
+        if !requeued && cfg.max_outstanding_cost > 0.0 && r.cost.is_some() {
             let outstanding: u64 = states
                 .iter()
                 .map(|s| s.outstanding_cost.load(Ordering::Relaxed))
@@ -879,16 +1064,18 @@ fn dispatch_loop(
                     ),
                     false,
                 );
-                continue;
+                return;
             }
         }
         let wi = pick_worker(
             &states,
             cfg.balance,
             r.cost,
-            &mut rr,
+            rr,
             cfg.quarantine_after,
-            &mut scratch,
+            cfg.quarantine_expiry,
+            r.exclude,
+            scratch,
         );
         states[wi].charge(r.cost);
         // A send failure means the worker thread died (e.g. backend
@@ -910,19 +1097,99 @@ fn dispatch_loop(
                 cost: r.cost,
             });
         }
+    };
+
+    let Some(qrx) = requeue_rx else {
+        // No requeue path (single worker or max_requeues == 0): the
+        // original blocking loop, unchanged.
+        while let Ok(r) = rx.recv() {
+            handle(r, false, &mut rr, &mut scratch);
+        }
+        return;
+        // Worker channels drop with `worker_txs`; each worker drains
+        // its queue and exits.
+    };
+
+    // In-flight requests on *live* workers only: a crashed worker's
+    // charges can never settle, and its requests are already lost (the
+    // reply senders dropped with its queue), so they must not keep the
+    // dispatcher polling or block shutdown.
+    let live_inflight = |states: &[Arc<WorkerState>]| -> u64 {
+        states
+            .iter()
+            .filter(|s| s.alive())
+            .map(|s| s.inflight_acq())
+            .sum()
+    };
+
+    const POLL: Duration = Duration::from_millis(1);
+    loop {
+        // Requeued requests first — they have already waited through a
+        // failed batch.
+        while let Ok(r) = qrx.try_recv() {
+            handle(r, true, &mut rr, &mut scratch);
+        }
+        if live_inflight(&states) > 0 {
+            // Work in flight may still requeue: poll so those requests
+            // are picked up promptly.
+            match rx.recv_timeout(POLL) {
+                Ok(r) => handle(r, false, &mut rr, &mut scratch),
+                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => continue,
+                Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        } else {
+            // Nothing in flight. Workers send a requeue *before*
+            // settling its charge, so a zero in-flight count (Acquire)
+            // proves every requeue is already in the channel — one last
+            // look, then an idle pool can block without polling.
+            if let Ok(r) = qrx.try_recv() {
+                handle(r, true, &mut rr, &mut scratch);
+                continue;
+            }
+            match rx.recv() {
+                Ok(r) => handle(r, false, &mut rr, &mut scratch),
+                Err(_) => break,
+            }
+        }
     }
-    // Admission queue closed: worker channels drop with `worker_txs`,
-    // each worker drains its queue and exits.
+    // Shutdown drain: the admission queue is closed, but batches still
+    // in flight may yet fail and requeue. Keep serving the requeue
+    // channel until no routed request on a live worker remains
+    // unsettled (send-before-settle makes the final try_recv drain
+    // complete, as above); anything it routes re-raises the count and
+    // the loop continues.
+    loop {
+        while let Ok(r) = qrx.try_recv() {
+            handle(r, true, &mut rr, &mut scratch);
+        }
+        if live_inflight(&states) == 0 {
+            let mut routed_any = false;
+            while let Ok(r) = qrx.try_recv() {
+                handle(r, true, &mut rr, &mut scratch);
+                routed_any = true;
+            }
+            if !routed_any {
+                break;
+            }
+        } else if let Ok(r) = qrx.recv_timeout(POLL) {
+            handle(r, true, &mut rr, &mut scratch);
+        }
+    }
+    // Dropping `worker_txs` now lets the workers drain and exit.
 }
 
 /// One pool worker: own backend, own batcher, own retries, own metrics
 /// shard. Structurally the PR 2 `batch_loop` — single-worker pools run
 /// the exact same code path over the same channel contents.
+/// `requeue_tx` (pools only) carries requests from a terminally-failed
+/// batch back to the dispatcher for a different worker.
 fn worker_loop<B: InferBackend>(
+    worker: usize,
     backend: B,
     rx: Receiver<Request>,
     cfg: CoordinatorConfig,
     state: Arc<WorkerState>,
+    requeue_tx: Option<Sender<Request>>,
 ) {
     let bs = backend.batch_size();
     let in_len = backend.input_len();
@@ -1007,9 +1274,7 @@ fn worker_loop<B: InferBackend>(
 
         match outcome {
             Ok(out) => {
-                state
-                    .consecutive_failed_batches
-                    .store(0, Ordering::Relaxed);
+                state.note_batch_success();
                 for (i, r) in pending.into_iter().enumerate() {
                     let logits = out[i * out_len..(i + 1) * out_len].to_vec();
                     let queue_us = r.submitted.elapsed().as_micros() as u64;
@@ -1029,18 +1294,45 @@ fn worker_loop<B: InferBackend>(
                 }
             }
             Err(e) => {
-                // Deliver the cause to every waiting requester — a
-                // dropped sender would only show them an opaque closed
-                // channel. The failure stays in this worker's domain:
-                // only requests routed here see it.
-                state
-                    .consecutive_failed_batches
-                    .fetch_add(1, Ordering::Relaxed);
+                // This worker is out of retries. Requests that still
+                // have requeue budget go back to the dispatcher for a
+                // *different* worker; the rest get the cause delivered
+                // — a dropped sender would only show them an opaque
+                // closed channel.
+                state.note_batch_failure(cfg.quarantine_after);
                 eprintln!(
                     "[coordinator] batch failed after {} attempt(s): {e}",
                     attempts + 1
                 );
-                for r in pending.into_iter() {
+                for mut r in pending.into_iter() {
+                    if let Some(qtx) = requeue_tx
+                        .as_ref()
+                        .filter(|_| r.requeues < cfg.max_requeues)
+                    {
+                        r.requeues += 1;
+                        r.exclude = Some(worker);
+                        let cost = r.cost;
+                        match qtx.send(r) {
+                            Ok(()) => {
+                                // Send happens *before* settle: the
+                                // dispatcher's shutdown drain relies on
+                                // "zero in-flight implies every requeue
+                                // is already in the channel".
+                                state.settle(cost);
+                                metrics
+                                    .requeued_requests
+                                    .fetch_add(1, Ordering::Relaxed);
+                                continue;
+                            }
+                            Err(failed) => {
+                                // Dispatcher gone (cannot normally
+                                // happen while our requests are
+                                // unsettled): fall through to a
+                                // terminal error.
+                                r = failed.0;
+                            }
+                        }
+                    }
                     let queue_us = r.submitted.elapsed().as_micros() as u64;
                     state.settle(r.cost);
                     metrics.record_failed();
@@ -1464,6 +1756,8 @@ mod tests {
             est,
             &mut rr,
             0,
+            None,
+            None,
             &mut scratch,
         );
         assert_eq!(pick, 1);
@@ -1477,6 +1771,8 @@ mod tests {
             est,
             &mut rr,
             2,
+            None,
+            None,
             &mut scratch,
         );
         assert_eq!(pick, 2);
@@ -1488,6 +1784,8 @@ mod tests {
             None,
             &mut rr,
             2,
+            None,
+            None,
             &mut scratch,
         );
         let b = pick_worker(
@@ -1496,6 +1794,8 @@ mod tests {
             None,
             &mut rr,
             2,
+            None,
+            None,
             &mut scratch,
         );
         assert_ne!(a, b);
@@ -1510,9 +1810,186 @@ mod tests {
             est,
             &mut rr,
             2,
+            None,
+            None,
             &mut scratch,
         );
         assert!(pick < 3);
+    }
+
+    #[test]
+    fn pick_worker_honors_requeue_exclusion() {
+        let states: Vec<Arc<WorkerState>> = (0..2)
+            .map(|_| Arc::new(WorkerState::new(Arc::new(Metrics::default()))))
+            .collect();
+        // worker 0 is the cheapest, but a request that just failed
+        // there must go to its sibling
+        states[1].outstanding_cost.store(500, Ordering::Relaxed);
+        let est = Some(CostEstimate {
+            est_cycles: 10.0,
+            est_energy_pj: 1.0,
+            input_zero_fraction: 0.0,
+        });
+        let mut rr = 0usize;
+        let mut scratch = Vec::new();
+        for _ in 0..3 {
+            let pick = pick_worker(
+                &states,
+                BalancePolicy::CostAware,
+                est,
+                &mut rr,
+                0,
+                None,
+                Some(0),
+                &mut scratch,
+            );
+            assert_eq!(pick, 1, "excluded worker must not be picked");
+        }
+        // a single-worker "pool" ignores the exclusion rather than
+        // stranding the request
+        let one = vec![states[0].clone()];
+        let pick = pick_worker(
+            &one,
+            BalancePolicy::CostAware,
+            est,
+            &mut rr,
+            0,
+            None,
+            Some(0),
+            &mut scratch,
+        );
+        assert_eq!(pick, 0);
+    }
+
+    #[test]
+    fn quarantine_expiry_paroles_worker_state() {
+        let s = WorkerState::new(Arc::new(Metrics::default()));
+        s.note_batch_failure(2);
+        assert!(!s.quarantined(2, None), "below threshold");
+        s.note_batch_failure(2);
+        assert!(s.quarantined(2, None), "streak 2 >= threshold 2");
+        // success-only policy never expires
+        assert!(s.quarantined(2, None));
+        // an already-elapsed expiry paroles immediately and resets the
+        // streak, so the worker is not instantly re-quarantined
+        assert!(!s.quarantined(2, Some(Duration::ZERO)));
+        assert!(!s.quarantined(2, None), "streak was reset on parole");
+        // a fresh quarantine with a long expiry stays in force
+        s.note_batch_failure(1);
+        assert!(s.quarantined(1, Some(Duration::from_secs(3600))));
+        // success releases it regardless
+        s.note_batch_success();
+        assert!(!s.quarantined(1, Some(Duration::from_secs(3600))));
+    }
+
+    /// Cross-worker requeue end to end: a pool where worker 0 always
+    /// fails must still answer every request successfully — the failed
+    /// batch's requests are re-dispatched to the healthy sibling — and
+    /// count each terminal reply exactly once.
+    #[test]
+    fn failed_batch_requeues_to_sibling_worker() {
+        struct DirectedBackend {
+            dead: bool,
+        }
+        impl InferBackend for DirectedBackend {
+            fn input_len(&self) -> usize {
+                2
+            }
+            fn output_len(&self) -> usize {
+                1
+            }
+            fn batch_size(&self) -> usize {
+                1
+            }
+            fn run_batch(&self, batch: &[f32]) -> Result<Vec<f32>, String> {
+                if self.dead {
+                    return Err("dead backend".to_string());
+                }
+                Ok(vec![batch[0] + batch[1]])
+            }
+        }
+        let c = Coordinator::start_pool(
+            |worker| DirectedBackend { dead: worker == 0 },
+            CoordinatorConfig {
+                max_wait: Duration::from_millis(1),
+                max_retries: 0,
+                workers: 2,
+                balance: BalancePolicy::RoundRobin,
+                quarantine_after: 0, // keep routing to the dead worker
+                max_requeues: 1,
+                ..Default::default()
+            },
+            None,
+        );
+        for i in 0..6 {
+            let rx = c.submit(vec![i as f32, 1.0]);
+            let rep = rx
+                .recv_timeout(Duration::from_secs(10))
+                .expect("terminal reply");
+            let logits = rep.result.expect("requeue must rescue the request");
+            assert_eq!(logits[0], i as f32 + 1.0);
+        }
+        let merged = c.merged_metrics();
+        assert_eq!(merged.requests.load(Ordering::Relaxed), 6);
+        assert_eq!(merged.failed_requests.load(Ordering::Relaxed), 0);
+        // every request was first routed to the dead worker (each
+        // failed round advances the round-robin counter twice, so the
+        // next initial pick lands on worker 0 again) and rescued once
+        assert_eq!(merged.requeued_requests.load(Ordering::Relaxed), 6);
+        assert_eq!(merged.latency_summary().len(), 6, "one sample per request");
+        // requeues recorded on the failing worker's shard, replies on
+        // the rescuer's
+        let shards = c.worker_metrics();
+        assert_eq!(shards[0].requeued_requests.load(Ordering::Relaxed), 6);
+        assert_eq!(shards[0].requests.load(Ordering::Relaxed), 0);
+        assert_eq!(shards[1].requests.load(Ordering::Relaxed), 6);
+        c.shutdown();
+    }
+
+    /// With the requeue budget exhausted the error is delivered: two
+    /// dead workers out of two mean the requeued request fails on the
+    /// sibling and must not ping-pong forever.
+    #[test]
+    fn requeue_budget_bounds_the_ping_pong() {
+        struct AlwaysDead;
+        impl InferBackend for AlwaysDead {
+            fn input_len(&self) -> usize {
+                2
+            }
+            fn output_len(&self) -> usize {
+                1
+            }
+            fn batch_size(&self) -> usize {
+                1
+            }
+            fn run_batch(&self, _batch: &[f32]) -> Result<Vec<f32>, String> {
+                Err("dead backend".to_string())
+            }
+        }
+        let c = Coordinator::start_pool(
+            |_worker| AlwaysDead,
+            CoordinatorConfig {
+                max_wait: Duration::from_millis(1),
+                max_retries: 0,
+                workers: 2,
+                balance: BalancePolicy::RoundRobin,
+                quarantine_after: 0,
+                max_requeues: 1,
+                ..Default::default()
+            },
+            None,
+        );
+        let rep = c
+            .submit(vec![1.0, 2.0])
+            .recv_timeout(Duration::from_secs(10))
+            .expect("terminal reply");
+        let err = rep.result.expect_err("both workers dead");
+        assert!(err.contains("dead backend"), "{err}");
+        let merged = c.merged_metrics();
+        assert_eq!(merged.requests.load(Ordering::Relaxed), 1);
+        assert_eq!(merged.failed_requests.load(Ordering::Relaxed), 1);
+        assert_eq!(merged.requeued_requests.load(Ordering::Relaxed), 1);
+        c.shutdown();
     }
 
     #[test]

@@ -1,0 +1,190 @@
+//! Content-hashed on-disk result cache for sweep evaluations.
+//!
+//! A point's cache identity is the FNV-1a hash of the canonical compact
+//! JSON of `(format version, workload, point)` — evaluation is a pure
+//! function of exactly those inputs, so an interrupted or repeated
+//! sweep resumes from `results/dse_cache/` instead of recomputing.
+//! Entries store the identity strings alongside the metrics and are
+//! verified on load (a hash collision or a corrupt / truncated file
+//! from an interrupted run falls back to a fresh evaluation, which
+//! overwrites the bad entry).
+//!
+//! Bit-exactness: metrics are serialized through
+//! [`crate::util::json`], whose f64 writer emits the shortest
+//! round-trippable decimal form, so a cache hit reproduces the fresh
+//! evaluation's floats bit for bit (`tests/dse.rs` pins this).
+
+use std::path::{Path, PathBuf};
+
+use crate::util::json::{obj, Json};
+
+use super::{PointMetrics, SweepPoint, Workload};
+
+/// Bump when the evaluation semantics or the metrics layout change:
+/// old entries stop matching and are recomputed.
+const CACHE_FORMAT: usize = 1;
+
+/// Handle to one cache directory.
+#[derive(Debug, Clone)]
+pub struct ResultCache {
+    dir: PathBuf,
+}
+
+impl ResultCache {
+    pub fn new<P: Into<PathBuf>>(dir: P) -> ResultCache {
+        ResultCache { dir: dir.into() }
+    }
+
+    /// The conventional location the `dse` CLI and `serve --auto-tune`
+    /// share: `results/dse_cache/`.
+    pub fn default_dir() -> ResultCache {
+        ResultCache::new("results/dse_cache")
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// `(hash, workload identity, point identity, environment identity)`
+    /// of one evaluation. The environment identity is the *effective*
+    /// `SimConfig` the runner evaluates under plus the base
+    /// `HardwareConfig` the point's geometry is grafted onto — every
+    /// default included — so changing any simulation or hardware
+    /// default invalidates old entries without anyone remembering to
+    /// bump `CACHE_FORMAT`.
+    fn identity(w: &Workload, p: &SweepPoint) -> (u64, String, String, String) {
+        let wj = w.to_json().to_string_compact();
+        let pj = p.to_json().to_string_compact();
+        let sim = super::runner::effective_sim_config(w)
+            .to_json()
+            .to_string_compact();
+        let base = crate::config::HardwareConfig::default()
+            .to_json()
+            .to_string_compact();
+        let ej = format!("{sim}|{base}");
+        let key =
+            crate::util::fnv1a(&format!("v{CACHE_FORMAT}|{wj}|{pj}|{ej}"));
+        (key, wj, pj, ej)
+    }
+
+    fn path_for(&self, key: u64) -> PathBuf {
+        self.dir.join(format!("{key:016x}.json"))
+    }
+
+    /// Load a point's cached metrics, verifying the stored identity
+    /// matches. Any miss, mismatch or parse failure returns `None`.
+    pub fn load(&self, w: &Workload, p: &SweepPoint) -> Option<PointMetrics> {
+        let (key, wj, pj, ej) = Self::identity(w, p);
+        let text = std::fs::read_to_string(self.path_for(key)).ok()?;
+        let j = Json::parse(&text).ok()?;
+        if j.get("format").as_usize() != Some(CACHE_FORMAT) {
+            return None;
+        }
+        if j.get("workload").as_str() != Some(wj.as_str())
+            || j.get("point").as_str() != Some(pj.as_str())
+            || j.get("environment").as_str() != Some(ej.as_str())
+        {
+            return None; // hash collision or stale defaults: recompute
+        }
+        PointMetrics::from_json(j.get("metrics"))
+    }
+
+    /// Persist a point's metrics (creates the cache directory). Write
+    /// failures are returned, not fatal — the runner treats the cache
+    /// as best-effort.
+    pub fn store(
+        &self,
+        w: &Workload,
+        p: &SweepPoint,
+        m: &PointMetrics,
+    ) -> std::io::Result<()> {
+        let (key, wj, pj, ej) = Self::identity(w, p);
+        std::fs::create_dir_all(&self.dir)?;
+        let entry = obj(vec![
+            ("format", CACHE_FORMAT.into()),
+            ("workload", wj.into()),
+            ("point", pj.into()),
+            ("environment", ej.into()),
+            ("metrics", m.to_json()),
+        ]);
+        std::fs::write(self.path_for(key), entry.to_string_pretty())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn temp_cache(tag: &str) -> ResultCache {
+        let dir = std::env::temp_dir()
+            .join(format!("rram-dse-cache-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        ResultCache::new(dir)
+    }
+
+    fn point() -> SweepPoint {
+        SweepPoint {
+            scheme: "pattern".into(),
+            ou_rows: 9,
+            ou_cols: 8,
+            xbar_rows: 512,
+            xbar_cols: 512,
+            n_patterns: 8,
+            pruning: 0.86,
+        }
+    }
+
+    fn metrics() -> PointMetrics {
+        PointMetrics {
+            cycles: 12345.625, // exactly representable: survives the trip
+            energy_pj: 6.7e8,
+            area_cells: 262144.0,
+            crossbars: 1,
+            ou_ops: 11111.0,
+            utilization: 0.421875,
+        }
+    }
+
+    #[test]
+    fn store_then_load_roundtrips_bitwise() {
+        let c = temp_cache("roundtrip");
+        let w = Workload::small(7);
+        let p = point();
+        assert!(c.load(&w, &p).is_none(), "cold cache misses");
+        c.store(&w, &p, &metrics()).unwrap();
+        let got = c.load(&w, &p).expect("hit after store");
+        assert_eq!(got, metrics());
+        let _ = std::fs::remove_dir_all(c.dir());
+    }
+
+    #[test]
+    fn identity_separates_points_and_workloads() {
+        let c = temp_cache("identity");
+        let w = Workload::small(7);
+        let p = point();
+        c.store(&w, &p, &metrics()).unwrap();
+        // different point: miss
+        let mut p2 = point();
+        p2.ou_rows = 4;
+        assert!(c.load(&w, &p2).is_none());
+        // different workload seed: miss
+        let w2 = Workload::small(8);
+        assert!(c.load(&w2, &p).is_none());
+        let _ = std::fs::remove_dir_all(c.dir());
+    }
+
+    #[test]
+    fn corrupt_entry_reads_as_miss() {
+        let c = temp_cache("corrupt");
+        let w = Workload::small(7);
+        let p = point();
+        c.store(&w, &p, &metrics()).unwrap();
+        let (key, _, _, _) = ResultCache::identity(&w, &p);
+        std::fs::write(c.path_for(key), "{truncated").unwrap();
+        assert!(c.load(&w, &p).is_none(), "corrupt file must miss");
+        // a fresh store heals it
+        c.store(&w, &p, &metrics()).unwrap();
+        assert!(c.load(&w, &p).is_some());
+        let _ = std::fs::remove_dir_all(c.dir());
+    }
+}

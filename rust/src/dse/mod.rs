@@ -1,0 +1,429 @@
+//! Design-space exploration (DSE) engine.
+//!
+//! The paper reports one hand-picked configuration (Table I: 512×512
+//! crossbars, 9×8 OUs, per-dataset pattern counts); this subsystem
+//! sweeps that configuration space systematically and feeds the winner
+//! back into the serving stack:
+//!
+//! ```text
+//!   SweepSpec (axes: OU dims × crossbar dims × pattern count ×
+//!              pruning rate × mapping scheme)
+//!        │ expand() — deterministic grid order
+//!        ▼
+//!   SweepRunner — points in parallel on util::threadpool, each point a
+//!        │        pure function of (workload, point): synthesize the
+//!        │        pattern-pruned weights, map with the point's scheme,
+//!        │        cost the batch through sim::simulate_network_batch.
+//!        │        A content-hashed on-disk cache (results/dse_cache/)
+//!        │        makes repeated / interrupted sweeps resume.
+//!        ▼
+//!   ParetoFrontier — non-dominated (area, energy, cycles) set with
+//!        │           per-axis sensitivity summaries
+//!        ▼
+//!   select_config(Objective) → TunedConfig — the frontier point
+//!   optimizing the user-weighted objective; `serve --auto-tune`
+//!   builds its worker pool's hardware config and calibrated CostModel
+//!   from it, so the sweep winner is what actually serves traffic.
+//! ```
+//!
+//! Determinism contract (pinned by `tests/dse.rs`): for a fixed
+//! [`SweepSpec`], the frontier JSON is byte-identical for any thread
+//! count, across repeated runs, and across cached vs fresh evaluation.
+//! Every quantity in the emitted artifact is derived from the sweep
+//! itself — no timestamps, no cache metadata.
+
+pub mod cache;
+pub mod pareto;
+pub mod runner;
+
+pub use cache::ResultCache;
+pub use pareto::{
+    select_config, sensitivity, AxisSensitivity, Objective, ParetoFrontier,
+    TunedConfig,
+};
+pub use runner::{SweepOutcome, SweepRunner};
+
+use crate::config::HardwareConfig;
+use crate::nn::{ConvLayer, NetworkSpec};
+use crate::util::json::{obj, Json};
+
+/// One grid point of the sweep: a full accelerator + compression
+/// configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SweepPoint {
+    /// Mapping scheme name (resolved via
+    /// [`crate::mapping::scheme_by_name`]).
+    pub scheme: String,
+    pub ou_rows: usize,
+    pub ou_cols: usize,
+    pub xbar_rows: usize,
+    pub xbar_cols: usize,
+    /// Distinct pruning patterns per layer (Table II knob).
+    pub n_patterns: usize,
+    /// Target weight sparsity of the pattern pruning (Table II knob).
+    pub pruning: f64,
+}
+
+impl SweepPoint {
+    /// Short human label, e.g. `pattern ou9x8 xb512 p8 s0.86`.
+    pub fn label(&self) -> String {
+        format!(
+            "{} ou{}x{} xb{}x{} p{} s{:.2}",
+            self.scheme,
+            self.ou_rows,
+            self.ou_cols,
+            self.xbar_rows,
+            self.xbar_cols,
+            self.n_patterns,
+            self.pruning,
+        )
+    }
+
+    /// The point's hardware config on the paper's Table I base.
+    pub fn hardware(&self) -> Result<HardwareConfig, String> {
+        self.apply_dims(&HardwareConfig::default())
+    }
+
+    /// Graft this point's OU / crossbar geometry onto an arbitrary base
+    /// config (e.g. [`HardwareConfig::smallcnn_functional`] when tuning
+    /// the serving stack), validated.
+    pub fn apply_dims(&self, base: &HardwareConfig) -> Result<HardwareConfig, String> {
+        base.with_dims(self.ou_rows, self.ou_cols, self.xbar_rows, self.xbar_cols)
+    }
+
+    /// Canonical JSON (BTreeMap-ordered keys): the cache identity and
+    /// the frontier artifact's point encoding.
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("scheme", self.scheme.as_str().into()),
+            ("ou_rows", self.ou_rows.into()),
+            ("ou_cols", self.ou_cols.into()),
+            ("xbar_rows", self.xbar_rows.into()),
+            ("xbar_cols", self.xbar_cols.into()),
+            ("n_patterns", self.n_patterns.into()),
+            ("pruning", self.pruning.into()),
+        ])
+    }
+}
+
+/// The fixed workload every point of a sweep is costed on. Weights are
+/// synthesized per point from `(seed, layer, n_patterns, pruning)`, so
+/// points that share the compression knobs simulate identical networks
+/// and differ only in hardware.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Workload {
+    pub name: String,
+    pub layers: Vec<ConvLayer>,
+    /// Images per simulated batch (all metrics are batch totals).
+    pub n_images: usize,
+    /// Sampled positions per layer (`SimConfig::sample_positions`).
+    pub samples: usize,
+    /// All-zero-kernel ratio fed to the synthetic generator.
+    pub zero_ratio: f64,
+    /// Seed for weight synthesis and activation traces.
+    pub seed: u64,
+}
+
+impl Workload {
+    /// Small 3-layer CNN: fast enough that CI sweeps a full grid in
+    /// seconds, large enough that mapping schemes separate.
+    pub fn small(seed: u64) -> Workload {
+        Workload {
+            name: "dse-small".into(),
+            layers: vec![
+                ConvLayer { name: "d0".into(), cin: 3, cout: 16, fmap: 8 },
+                ConvLayer { name: "d1".into(), cin: 16, cout: 32, fmap: 8 },
+                ConvLayer { name: "d2".into(), cin: 32, cout: 32, fmap: 4 },
+            ],
+            n_images: 2,
+            samples: 32,
+            zero_ratio: 0.3,
+            seed,
+        }
+    }
+
+    pub fn spec(&self) -> NetworkSpec {
+        NetworkSpec { name: self.name.clone(), layers: self.layers.clone() }
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("name", self.name.as_str().into()),
+            (
+                "layers",
+                Json::Arr(
+                    self.layers
+                        .iter()
+                        .map(|l| {
+                            obj(vec![
+                                ("cin", l.cin.into()),
+                                ("cout", l.cout.into()),
+                                ("fmap", l.fmap.into()),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("n_images", self.n_images.into()),
+            ("samples", self.samples.into()),
+            ("zero_ratio", self.zero_ratio.into()),
+            ("seed", (self.seed as usize).into()),
+        ])
+    }
+}
+
+/// A sweep: the axes of the configuration grid plus the workload each
+/// point is evaluated on. `expand()` yields the cross product in a
+/// fixed nested order, so result indices are stable across runs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SweepSpec {
+    /// Grid name (`small`, `medium`, or caller-defined).
+    pub grid: String,
+    pub schemes: Vec<String>,
+    /// (rows, cols) of the Operation Unit.
+    pub ou: Vec<(usize, usize)>,
+    /// (rows, cols) of the crossbar array.
+    pub xbar: Vec<(usize, usize)>,
+    pub patterns: Vec<usize>,
+    /// Pruning rates (target sparsities).
+    pub pruning: Vec<f64>,
+    pub workload: Workload,
+}
+
+impl SweepSpec {
+    /// 48-point grid for CI smoke runs and quick local sweeps.
+    pub fn small(seed: u64) -> SweepSpec {
+        SweepSpec {
+            grid: "small".into(),
+            schemes: vec!["naive".into(), "pattern".into()],
+            ou: vec![(4, 4), (9, 8), (16, 8)],
+            xbar: vec![(256, 256), (512, 512)],
+            patterns: vec![4, 8],
+            pruning: vec![0.70, 0.86],
+            workload: Workload::small(seed),
+        }
+    }
+
+    /// Wider grid: every mapping scheme, five OU shapes, three crossbar
+    /// sizes, four pattern counts, five pruning rates (1200 points).
+    pub fn medium(seed: u64) -> SweepSpec {
+        SweepSpec {
+            grid: "medium".into(),
+            schemes: vec![
+                "naive".into(),
+                "pattern".into(),
+                "kmeans".into(),
+                "ou_sparse".into(),
+            ],
+            ou: vec![(4, 4), (8, 8), (9, 8), (16, 8), (32, 8)],
+            xbar: vec![(128, 128), (256, 256), (512, 512)],
+            patterns: vec![2, 4, 8, 12],
+            pruning: vec![0.60, 0.70, 0.80, 0.86, 0.92],
+            workload: Workload::small(seed),
+        }
+    }
+
+    pub fn by_name(name: &str, seed: u64) -> Option<SweepSpec> {
+        match name {
+            "small" => Some(SweepSpec::small(seed)),
+            "medium" => Some(SweepSpec::medium(seed)),
+            _ => None,
+        }
+    }
+
+    /// Expand the axes into the full grid, scheme-major then OU, xbar,
+    /// pattern count, pruning rate innermost. The order is part of the
+    /// determinism contract (frontier members are reported by index).
+    pub fn expand(&self) -> Vec<SweepPoint> {
+        let mut points = Vec::new();
+        for scheme in &self.schemes {
+            for &(ou_rows, ou_cols) in &self.ou {
+                for &(xbar_rows, xbar_cols) in &self.xbar {
+                    for &n_patterns in &self.patterns {
+                        for &pruning in &self.pruning {
+                            points.push(SweepPoint {
+                                scheme: scheme.clone(),
+                                ou_rows,
+                                ou_cols,
+                                xbar_rows,
+                                xbar_cols,
+                                n_patterns,
+                                pruning,
+                            });
+                        }
+                    }
+                }
+            }
+        }
+        points
+    }
+
+    pub fn to_json(&self) -> Json {
+        let pair =
+            |v: &[(usize, usize)]| {
+                Json::Arr(
+                    v.iter()
+                        .map(|(r, c)| Json::Arr(vec![(*r).into(), (*c).into()]))
+                        .collect(),
+                )
+            };
+        obj(vec![
+            ("grid", self.grid.as_str().into()),
+            (
+                "schemes",
+                Json::Arr(self.schemes.iter().map(|s| s.as_str().into()).collect()),
+            ),
+            ("ou", pair(&self.ou)),
+            ("xbar", pair(&self.xbar)),
+            (
+                "patterns",
+                Json::Arr(self.patterns.iter().map(|p| (*p).into()).collect()),
+            ),
+            (
+                "pruning",
+                Json::Arr(self.pruning.iter().map(|p| (*p).into()).collect()),
+            ),
+            ("workload", self.workload.to_json()),
+        ])
+    }
+}
+
+/// Metrics of one evaluated point — the three Pareto objectives (area
+/// in provisioned cells, total energy, total cycles over the batch)
+/// plus context.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PointMetrics {
+    /// Batch-total simulated cycles.
+    pub cycles: f64,
+    /// Batch-total energy (pJ).
+    pub energy_pj: f64,
+    /// Provisioned cells: crossbars × rows × cols. Comparable across
+    /// crossbar geometries, unlike the raw crossbar count.
+    pub area_cells: f64,
+    pub crossbars: usize,
+    /// Batch-total executed OU operations.
+    pub ou_ops: f64,
+    /// Used / provisioned cells.
+    pub utilization: f64,
+}
+
+impl PointMetrics {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("cycles", self.cycles.into()),
+            ("energy_pj", self.energy_pj.into()),
+            ("area_cells", self.area_cells.into()),
+            ("crossbars", self.crossbars.into()),
+            ("ou_ops", self.ou_ops.into()),
+            ("utilization", self.utilization.into()),
+        ])
+    }
+
+    /// Inverse of [`PointMetrics::to_json`]; `None` on any missing or
+    /// mistyped field (a corrupt cache entry falls back to a fresh
+    /// evaluation).
+    pub fn from_json(j: &Json) -> Option<PointMetrics> {
+        Some(PointMetrics {
+            cycles: j.get("cycles").as_f64()?,
+            energy_pj: j.get("energy_pj").as_f64()?,
+            area_cells: j.get("area_cells").as_f64()?,
+            crossbars: j.get("crossbars").as_usize()?,
+            ou_ops: j.get("ou_ops").as_f64()?,
+            utilization: j.get("utilization").as_f64()?,
+        })
+    }
+}
+
+/// One point's sweep outcome: the metrics, or the reason the point was
+/// skipped (invalid geometry, unknown scheme). `cache_hit` is runtime
+/// bookkeeping only — it is deliberately absent from the frontier
+/// artifact so cached and fresh sweeps emit identical bytes.
+#[derive(Debug, Clone)]
+pub struct PointResult {
+    /// Index in the expanded grid (== position in the results vec).
+    pub index: usize,
+    pub point: SweepPoint,
+    pub outcome: Result<PointMetrics, String>,
+    pub cache_hit: bool,
+}
+
+impl PointResult {
+    pub fn metrics(&self) -> Option<&PointMetrics> {
+        self.outcome.as_ref().ok()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_grid_expands_in_stable_order() {
+        let spec = SweepSpec::small(42);
+        let pts = spec.expand();
+        assert_eq!(pts.len(), 2 * 3 * 2 * 2 * 2, "48-point small grid");
+        // innermost axis varies fastest
+        assert_eq!(pts[0].pruning, 0.70);
+        assert_eq!(pts[1].pruning, 0.86);
+        assert_eq!(pts[0].n_patterns, pts[1].n_patterns);
+        // scheme-major
+        assert!(pts[..24].iter().all(|p| p.scheme == "naive"));
+        assert!(pts[24..].iter().all(|p| p.scheme == "pattern"));
+        // expansion is deterministic
+        assert_eq!(pts, spec.expand());
+    }
+
+    #[test]
+    fn point_hardware_validates_geometry() {
+        let mut p = SweepPoint {
+            scheme: "pattern".into(),
+            ou_rows: 9,
+            ou_cols: 8,
+            xbar_rows: 256,
+            xbar_cols: 256,
+            n_patterns: 4,
+            pruning: 0.8,
+        };
+        let hw = p.hardware().expect("valid point");
+        assert_eq!(hw.ou_rows, 9);
+        assert_eq!(hw.xbar_rows, 256);
+        p.ou_rows = 1024; // OU taller than the crossbar
+        assert!(p.hardware().is_err());
+        p.ou_rows = 9;
+        p.ou_cols = 3; // misaligned with 4 cells/weight
+        assert!(p.hardware().is_err());
+    }
+
+    #[test]
+    fn point_json_is_canonical() {
+        let p = SweepPoint {
+            scheme: "pattern".into(),
+            ou_rows: 9,
+            ou_cols: 8,
+            xbar_rows: 512,
+            xbar_cols: 512,
+            n_patterns: 8,
+            pruning: 0.86,
+        };
+        let s = p.to_json().to_string_compact();
+        // BTreeMap ordering: stable bytes for the cache key
+        assert_eq!(s, p.to_json().to_string_compact());
+        assert!(s.contains("\"scheme\":\"pattern\""), "{s}");
+        assert!(p.label().contains("ou9x8"), "{}", p.label());
+    }
+
+    #[test]
+    fn metrics_json_roundtrip() {
+        let m = PointMetrics {
+            cycles: 123456.75,
+            energy_pj: 9.5e6,
+            area_cells: 262144.0,
+            crossbars: 1,
+            ou_ops: 120000.0,
+            utilization: 0.43,
+        };
+        let back = PointMetrics::from_json(&m.to_json()).expect("roundtrip");
+        assert_eq!(m, back);
+        assert!(PointMetrics::from_json(&Json::Null).is_none());
+    }
+}

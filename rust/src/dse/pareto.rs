@@ -1,0 +1,503 @@
+//! Pareto-frontier extraction, per-axis sensitivity summaries, and the
+//! weighted-objective config selection that closes the DSE → serving
+//! loop.
+//!
+//! All three objectives are minimized: provisioned area (cells), batch
+//! energy (pJ), batch cycles. A point dominates another when it is no
+//! worse on every objective and strictly better on at least one; the
+//! frontier is the non-dominated subset of the evaluated grid, reported
+//! in ascending grid-index order so the artifact is independent of
+//! evaluation order and thread count (`tests/prop_invariants.rs` pins
+//! the invariants).
+
+use crate::config::HardwareConfig;
+use crate::util::json::{obj, Json};
+
+use super::{PointMetrics, PointResult, SweepSpec};
+
+/// `(area_cells, energy_pj, cycles)` — the minimized objective tuple.
+pub fn objectives(m: &PointMetrics) -> (f64, f64, f64) {
+    (m.area_cells, m.energy_pj, m.cycles)
+}
+
+/// Strict Pareto dominance: `a` no worse everywhere, better somewhere.
+pub fn dominates(a: &PointMetrics, b: &PointMetrics) -> bool {
+    let (aa, ae, ac) = objectives(a);
+    let (ba, be, bc) = objectives(b);
+    aa <= ba && ae <= be && ac <= bc && (aa < ba || ae < be || ac < bc)
+}
+
+/// The non-dominated subset of a sweep's results.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ParetoFrontier {
+    /// Indices into the results slice, ascending. Skipped points never
+    /// appear.
+    pub members: Vec<usize>,
+}
+
+impl ParetoFrontier {
+    /// Extract the frontier. O(n²) pairwise dominance — sweep grids are
+    /// hundreds to low thousands of points, far below where a sweep-line
+    /// would pay off.
+    pub fn from_results(results: &[PointResult]) -> ParetoFrontier {
+        let valid: Vec<(usize, &PointMetrics)> = results
+            .iter()
+            .enumerate()
+            .filter_map(|(i, r)| r.metrics().map(|m| (i, m)))
+            .collect();
+        let members = valid
+            .iter()
+            .filter(|&&(_, m)| !valid.iter().any(|&(_, o)| dominates(o, m)))
+            .map(|&(i, _)| i)
+            .collect();
+        ParetoFrontier { members }
+    }
+
+    pub fn len(&self) -> usize {
+        self.members.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.members.is_empty()
+    }
+
+    /// Text table of the frontier, one row per member.
+    pub fn table(&self, results: &[PointResult]) -> String {
+        let mut s = format!(
+            "PARETO FRONTIER — {} of {} points non-dominated on \
+             (area cells, energy pJ, cycles)\n  {:<5} {:<10} {:>6} {:>9} \
+             {:>4} {:>6} {:>14} {:>14} {:>12} {:>6} {:>6}\n",
+            self.len(),
+            results.len(),
+            "idx",
+            "scheme",
+            "ou",
+            "xbar",
+            "pat",
+            "prune",
+            "cycles",
+            "energy_pj",
+            "area_cells",
+            "xbars",
+            "util%",
+        );
+        for &i in &self.members {
+            let p = &results[i].point;
+            let m = results[i].metrics().expect("frontier members are valid");
+            let ou = format!("{}x{}", p.ou_rows, p.ou_cols);
+            let xb = format!("{}x{}", p.xbar_rows, p.xbar_cols);
+            s.push_str(&format!(
+                "  {:<5} {:<10} {:>6} {:>9} {:>4} {:>6.2} {:>14.0} {:>14.4e} \
+                 {:>12.0} {:>6} {:>6.1}\n",
+                i,
+                p.scheme,
+                ou,
+                xb,
+                p.n_patterns,
+                p.pruning,
+                m.cycles,
+                m.energy_pj,
+                m.area_cells,
+                m.crossbars,
+                m.utilization * 100.0,
+            ));
+        }
+        s
+    }
+
+    /// The deterministic frontier artifact: spec, counts, members (with
+    /// point + metrics), per-axis sensitivity. No timing, no cache
+    /// state — byte-identical for any thread count and for cached vs
+    /// fresh runs.
+    pub fn to_json(&self, spec: &SweepSpec, results: &[PointResult]) -> Json {
+        let evaluated = results.iter().filter(|r| r.outcome.is_ok()).count();
+        obj(vec![
+            ("spec", spec.to_json()),
+            ("n_points", results.len().into()),
+            ("evaluated", evaluated.into()),
+            ("skipped", (results.len() - evaluated).into()),
+            (
+                "frontier",
+                Json::Arr(
+                    self.members
+                        .iter()
+                        .map(|&i| {
+                            obj(vec![
+                                ("index", i.into()),
+                                ("point", results[i].point.to_json()),
+                                (
+                                    "metrics",
+                                    results[i]
+                                        .metrics()
+                                        .expect("frontier members are valid")
+                                        .to_json(),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "sensitivity",
+                Json::Arr(sensitivity(results).iter().map(|a| a.to_json()).collect()),
+            ),
+        ])
+    }
+
+    /// CSV of the frontier members (one header + one row per member).
+    pub fn to_csv(&self, results: &[PointResult]) -> String {
+        let mut s = String::from(
+            "index,scheme,ou_rows,ou_cols,xbar_rows,xbar_cols,patterns,\
+             pruning,cycles,energy_pj,area_cells,crossbars,utilization\n",
+        );
+        for &i in &self.members {
+            let p = &results[i].point;
+            let m = results[i].metrics().expect("frontier members are valid");
+            s.push_str(&format!(
+                "{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
+                i,
+                p.scheme,
+                p.ou_rows,
+                p.ou_cols,
+                p.xbar_rows,
+                p.xbar_cols,
+                p.n_patterns,
+                p.pruning,
+                m.cycles,
+                m.energy_pj,
+                m.area_cells,
+                m.crossbars,
+                m.utilization,
+            ));
+        }
+        s
+    }
+}
+
+/// User-weighted selection objective over the frontier. Each metric is
+/// normalized by the frontier's per-metric minimum before weighting, so
+/// the weights are scale-free ("area matters twice as much as cycles"
+/// is `2,1,1` regardless of units).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Objective {
+    pub w_area: f64,
+    pub w_energy: f64,
+    pub w_cycles: f64,
+}
+
+impl Objective {
+    pub fn balanced() -> Objective {
+        Objective { w_area: 1.0, w_energy: 1.0, w_cycles: 1.0 }
+    }
+
+    /// Parse `"area,energy,cycles"` weights, e.g. `"1,1,1"` or
+    /// `"2,0.5,1"`. Weights must be non-negative and not all zero.
+    pub fn parse(s: &str) -> Result<Objective, String> {
+        let parts: Vec<f64> = s
+            .split(',')
+            .map(|p| {
+                p.trim()
+                    .parse::<f64>()
+                    .map_err(|_| format!("bad objective weight '{}'", p.trim()))
+            })
+            .collect::<Result<_, _>>()?;
+        if parts.len() != 3 {
+            return Err(format!(
+                "expected 3 comma-separated weights (area,energy,cycles), \
+                 got {}",
+                parts.len()
+            ));
+        }
+        if parts.iter().any(|w| *w < 0.0 || !w.is_finite()) {
+            return Err("objective weights must be finite and >= 0".into());
+        }
+        if parts.iter().all(|w| *w == 0.0) {
+            return Err("at least one objective weight must be > 0".into());
+        }
+        Ok(Objective { w_area: parts[0], w_energy: parts[1], w_cycles: parts[2] })
+    }
+}
+
+/// The frontier point a weighted objective selects, ready to configure
+/// the serving stack.
+#[derive(Debug, Clone)]
+pub struct TunedConfig {
+    pub point: super::SweepPoint,
+    pub metrics: PointMetrics,
+    /// The point's hardware config on the Table I base (use
+    /// [`super::SweepPoint::apply_dims`] to graft the geometry onto a
+    /// different base, e.g. the SmallCNN functional config).
+    pub hw: HardwareConfig,
+}
+
+/// Pick the frontier point minimizing the weighted normalized objective
+/// (ties broken by lowest grid index — deterministic). `None` when the
+/// frontier is empty.
+pub fn select_config(
+    results: &[PointResult],
+    frontier: &ParetoFrontier,
+    obj: &Objective,
+) -> Option<TunedConfig> {
+    let min3 = frontier.members.iter().fold(
+        (f64::INFINITY, f64::INFINITY, f64::INFINITY),
+        |(a, e, c), &i| {
+            let m = results[i].metrics().expect("frontier members are valid");
+            (a.min(m.area_cells), e.min(m.energy_pj), c.min(m.cycles))
+        },
+    );
+    let score = |m: &PointMetrics| {
+        obj.w_area * m.area_cells / min3.0.max(1e-12)
+            + obj.w_energy * m.energy_pj / min3.1.max(1e-12)
+            + obj.w_cycles * m.cycles / min3.2.max(1e-12)
+    };
+    let mut best: Option<(usize, f64)> = None;
+    for &i in &frontier.members {
+        let s = score(results[i].metrics().expect("valid"));
+        match best {
+            Some((_, bs)) if bs <= s => {}
+            _ => best = Some((i, s)),
+        }
+    }
+    let (i, _) = best?;
+    let point = results[i].point.clone();
+    let metrics = results[i].metrics().expect("valid").clone();
+    let hw = point.hardware().ok()?;
+    Some(TunedConfig { point, metrics, hw })
+}
+
+/// Per-axis sensitivity: results grouped by each axis's value, with
+/// mean objectives per group — a quick read on which knob moves which
+/// metric.
+#[derive(Debug, Clone)]
+pub struct AxisSensitivity {
+    pub axis: String,
+    pub groups: Vec<AxisGroup>,
+}
+
+#[derive(Debug, Clone)]
+pub struct AxisGroup {
+    pub value: String,
+    pub n: usize,
+    pub mean_cycles: f64,
+    pub mean_energy_pj: f64,
+    pub mean_area_cells: f64,
+    pub min_cycles: f64,
+}
+
+impl AxisSensitivity {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("axis", self.axis.as_str().into()),
+            (
+                "groups",
+                Json::Arr(
+                    self.groups
+                        .iter()
+                        .map(|g| {
+                            obj(vec![
+                                ("value", g.value.as_str().into()),
+                                ("n", g.n.into()),
+                                ("mean_cycles", g.mean_cycles.into()),
+                                ("mean_energy_pj", g.mean_energy_pj.into()),
+                                ("mean_area_cells", g.mean_area_cells.into()),
+                                ("min_cycles", g.min_cycles.into()),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn lines(&self) -> String {
+        let mut s = format!("axis {}:\n", self.axis);
+        for g in &self.groups {
+            s.push_str(&format!(
+                "  {:<10} n={:<4} mean cycles {:>14.0}  mean energy {:>12.4e} pJ  \
+                 mean area {:>12.0} cells\n",
+                g.value, g.n, g.mean_cycles, g.mean_energy_pj, g.mean_area_cells,
+            ));
+        }
+        s
+    }
+}
+
+/// Group the valid results along each sweep axis, in first-appearance
+/// order (deterministic: results are in grid order).
+pub fn sensitivity(results: &[PointResult]) -> Vec<AxisSensitivity> {
+    let axes: [(&str, fn(&super::SweepPoint) -> String); 5] = [
+        ("scheme", |p| p.scheme.clone()),
+        ("ou", |p| format!("{}x{}", p.ou_rows, p.ou_cols)),
+        ("xbar", |p| format!("{}x{}", p.xbar_rows, p.xbar_cols)),
+        ("patterns", |p| p.n_patterns.to_string()),
+        ("pruning", |p| format!("{:.2}", p.pruning)),
+    ];
+    axes.iter()
+        .map(|(axis, labeler)| {
+            let mut order: Vec<String> = Vec::new();
+            let mut sums: Vec<(usize, f64, f64, f64, f64)> = Vec::new();
+            for r in results {
+                let Some(m) = r.metrics() else { continue };
+                let label = labeler(&r.point);
+                let gi = match order.iter().position(|l| *l == label) {
+                    Some(gi) => gi,
+                    None => {
+                        order.push(label);
+                        sums.push((0, 0.0, 0.0, 0.0, f64::INFINITY));
+                        order.len() - 1
+                    }
+                };
+                let g = &mut sums[gi];
+                g.0 += 1;
+                g.1 += m.cycles;
+                g.2 += m.energy_pj;
+                g.3 += m.area_cells;
+                g.4 = g.4.min(m.cycles);
+            }
+            AxisSensitivity {
+                axis: axis.to_string(),
+                groups: order
+                    .into_iter()
+                    .zip(sums)
+                    .map(|(value, (n, c, e, a, minc))| AxisGroup {
+                        value,
+                        n,
+                        mean_cycles: c / n.max(1) as f64,
+                        mean_energy_pj: e / n.max(1) as f64,
+                        mean_area_cells: a / n.max(1) as f64,
+                        min_cycles: minc,
+                    })
+                    .collect(),
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{PointMetrics, PointResult, SweepPoint};
+    use super::*;
+
+    fn point(scheme: &str) -> SweepPoint {
+        SweepPoint {
+            scheme: scheme.into(),
+            ou_rows: 9,
+            ou_cols: 8,
+            xbar_rows: 512,
+            xbar_cols: 512,
+            n_patterns: 8,
+            pruning: 0.86,
+        }
+    }
+
+    fn result(i: usize, area: f64, energy: f64, cycles: f64) -> PointResult {
+        PointResult {
+            index: i,
+            point: point("pattern"),
+            outcome: Ok(PointMetrics {
+                cycles,
+                energy_pj: energy,
+                area_cells: area,
+                crossbars: 1,
+                ou_ops: cycles,
+                utilization: 0.5,
+            }),
+            cache_hit: false,
+        }
+    }
+
+    #[test]
+    fn dominance_is_strict() {
+        let a = result(0, 1.0, 1.0, 1.0);
+        let b = result(1, 2.0, 2.0, 2.0);
+        assert!(dominates(a.metrics().unwrap(), b.metrics().unwrap()));
+        assert!(!dominates(b.metrics().unwrap(), a.metrics().unwrap()));
+        // equal tuples never dominate each other
+        let c = result(2, 1.0, 1.0, 1.0);
+        assert!(!dominates(a.metrics().unwrap(), c.metrics().unwrap()));
+        assert!(!dominates(c.metrics().unwrap(), a.metrics().unwrap()));
+    }
+
+    #[test]
+    fn frontier_keeps_tradeoffs_drops_dominated() {
+        let results = vec![
+            result(0, 1.0, 3.0, 3.0), // best area
+            result(1, 3.0, 1.0, 3.0), // best energy
+            result(2, 3.0, 3.0, 1.0), // best cycles
+            result(3, 3.0, 3.0, 3.0), // dominated by all three
+            PointResult {
+                index: 4,
+                point: point("bogus"),
+                outcome: Err("skipped".into()),
+                cache_hit: false,
+            },
+        ];
+        let f = ParetoFrontier::from_results(&results);
+        assert_eq!(f.members, vec![0, 1, 2]);
+        assert!(!f.is_empty());
+        let table = f.table(&results);
+        assert!(table.contains("3 of 5 points"), "{table}");
+        let csv = f.to_csv(&results);
+        assert_eq!(csv.lines().count(), 4, "{csv}");
+        assert!(csv.starts_with("index,scheme"), "{csv}");
+    }
+
+    #[test]
+    fn objective_parse_and_validation() {
+        let o = Objective::parse("2, 0.5,1").unwrap();
+        assert_eq!(o.w_area, 2.0);
+        assert_eq!(o.w_energy, 0.5);
+        assert_eq!(o.w_cycles, 1.0);
+        assert!(Objective::parse("1,1").is_err());
+        assert!(Objective::parse("1,x,1").is_err());
+        assert!(Objective::parse("-1,1,1").is_err());
+        assert!(Objective::parse("0,0,0").is_err());
+    }
+
+    #[test]
+    fn select_config_follows_weights() {
+        let results = vec![
+            result(0, 1.0, 3.0, 3.0),
+            result(1, 3.0, 1.0, 3.0),
+            result(2, 3.0, 3.0, 1.0),
+        ];
+        let f = ParetoFrontier::from_results(&results);
+        let area_only =
+            Objective { w_area: 1.0, w_energy: 0.0, w_cycles: 0.0 };
+        let t = select_config(&results, &f, &area_only).expect("selected");
+        assert_eq!(t.metrics.area_cells, 1.0);
+        let cycles_only =
+            Objective { w_area: 0.0, w_energy: 0.0, w_cycles: 1.0 };
+        let t = select_config(&results, &f, &cycles_only).expect("selected");
+        assert_eq!(t.metrics.cycles, 1.0);
+        // balanced: all three tie at score 1 + 3 + 3 = 7; lowest index
+        let t = select_config(&results, &f, &Objective::balanced()).unwrap();
+        assert_eq!(t.point, results[0].point);
+        assert_eq!(t.hw.ou_rows, 9);
+        // empty frontier selects nothing
+        assert!(select_config(&[], &ParetoFrontier { members: vec![] },
+                              &Objective::balanced()).is_none());
+    }
+
+    #[test]
+    fn sensitivity_groups_along_axes() {
+        let mut a = result(0, 1.0, 1.0, 10.0);
+        a.point.scheme = "naive".into();
+        let mut b = result(1, 1.0, 1.0, 20.0);
+        b.point.scheme = "naive".into();
+        let c = result(2, 1.0, 1.0, 40.0); // pattern
+        let axes = sensitivity(&[a, b, c]);
+        assert_eq!(axes.len(), 5);
+        let scheme = &axes[0];
+        assert_eq!(scheme.axis, "scheme");
+        assert_eq!(scheme.groups.len(), 2);
+        assert_eq!(scheme.groups[0].value, "naive");
+        assert_eq!(scheme.groups[0].n, 2);
+        assert!((scheme.groups[0].mean_cycles - 15.0).abs() < 1e-12);
+        assert_eq!(scheme.groups[0].min_cycles, 10.0);
+        assert_eq!(scheme.groups[1].value, "pattern");
+        assert!(scheme.lines().contains("naive"));
+        let j = scheme.to_json();
+        assert_eq!(j.get("groups").as_arr().map(|g| g.len()), Some(2));
+    }
+}

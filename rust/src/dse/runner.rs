@@ -1,0 +1,287 @@
+//! Parallel sweep evaluation: grid points fan out over
+//! [`crate::util::threadpool`], each driving the closed-form batch
+//! simulator; results come back in grid order regardless of thread
+//! count.
+
+use crate::config::SimConfig;
+use crate::mapping::{self, MappingScheme};
+use crate::pruning::synthetic::generate_layer;
+use crate::pruning::NetworkWeights;
+use crate::sim;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::util::threadpool;
+use crate::xbar::CellGeometry;
+
+use super::{
+    select_config, Objective, ParetoFrontier, PointMetrics, PointResult,
+    ResultCache, SweepPoint, SweepSpec, TunedConfig, Workload,
+};
+
+/// The exact [`SimConfig`] every sweep evaluation runs under. Also part
+/// of the cache identity ([`super::ResultCache`]), so a change to any
+/// simulation default invalidates cached entries instead of silently
+/// serving metrics a fresh evaluation would no longer reproduce.
+pub fn effective_sim_config(w: &Workload) -> SimConfig {
+    SimConfig {
+        sample_positions: Some(w.samples),
+        seed: w.seed,
+        ..Default::default()
+    }
+}
+
+/// Evaluate one grid point: a pure function of `(workload, point)`.
+///
+/// Weight synthesis is seeded from the workload seed, the layer index
+/// and the point's *compression* knobs only (pattern count, pruning
+/// rate) — points that differ only in hardware geometry map and
+/// simulate the exact same network, so their metrics are directly
+/// comparable. The activation traces are seeded from the workload seed
+/// alone, shared by every scheme (the same rule
+/// [`sim::simulate_network_batch`] applies).
+pub fn evaluate_point(w: &Workload, p: &SweepPoint) -> Result<PointMetrics, String> {
+    let hw = p.hardware()?;
+    let scheme: Box<dyn MappingScheme> = mapping::scheme_by_name(&p.scheme)
+        .ok_or_else(|| format!("unknown mapping scheme '{}'", p.scheme))?;
+    let geom = CellGeometry::from_hw(&hw);
+    let spec = w.spec();
+
+    let layers = spec
+        .layers
+        .iter()
+        .enumerate()
+        .map(|(li, l)| {
+            let n_pat = p.n_patterns.clamp(1, l.cout * l.cin);
+            let mut rng = Rng::seed_from(
+                w.seed
+                    ^ (li as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                    ^ ((p.n_patterns as u64) << 17)
+                    ^ p.pruning.to_bits().rotate_left(13),
+            );
+            generate_layer(l.cout, l.cin, n_pat, p.pruning, w.zero_ratio, &mut rng)
+        })
+        .collect();
+    let nwts = NetworkWeights::new(spec.clone(), layers);
+
+    // Inner work is single-threaded: the sweep parallelizes across
+    // points, and nesting pools would only add scheduling noise.
+    let mapped = scheme.map_network(&nwts, &geom, 1);
+    let sim_cfg = effective_sim_config(w);
+    let batch = sim::simulate_network_batch(
+        &mapped,
+        &spec,
+        &hw,
+        &sim_cfg,
+        w.n_images.max(1),
+        1,
+    );
+
+    let area_cells = (mapped.total_crossbars() * geom.cells_per_xbar()) as f64;
+    Ok(PointMetrics {
+        cycles: batch.total_cycles(),
+        energy_pj: batch.total_energy().total_pj(),
+        area_cells,
+        crossbars: mapped.total_crossbars(),
+        ou_ops: batch.total_ou_ops(),
+        utilization: mapped.total_used_cells() as f64 / area_cells.max(1.0),
+    })
+}
+
+/// A configured sweep, ready to run.
+pub struct SweepRunner {
+    pub spec: SweepSpec,
+    /// Worker threads for the point fan-out (values < 1 clamp to 1).
+    pub threads: usize,
+    /// On-disk result cache; `None` disables caching entirely.
+    pub cache: Option<ResultCache>,
+}
+
+impl SweepRunner {
+    /// Run the sweep: expand the grid, evaluate every point (cache
+    /// first), extract the frontier. Results are in grid order and
+    /// independent of `threads`.
+    pub fn run(&self) -> SweepOutcome {
+        let points = self.spec.expand();
+        let w = &self.spec.workload;
+        let cache = self.cache.as_ref();
+        let results = threadpool::parallel_map_indexed(
+            &points,
+            self.threads.max(1),
+            |i, p| {
+                if let Some(c) = cache {
+                    if let Some(m) = c.load(w, p) {
+                        return PointResult {
+                            index: i,
+                            point: p.clone(),
+                            outcome: Ok(m),
+                            cache_hit: true,
+                        };
+                    }
+                }
+                let outcome = evaluate_point(w, p);
+                if let (Some(c), Ok(m)) = (cache, &outcome) {
+                    if let Err(e) = c.store(w, p, m) {
+                        eprintln!(
+                            "[dse] cache write failed for {}: {e} \
+                             (continuing uncached)",
+                            p.label()
+                        );
+                    }
+                }
+                PointResult { index: i, point: p.clone(), outcome, cache_hit: false }
+            },
+        );
+        let frontier = ParetoFrontier::from_results(&results);
+        SweepOutcome { spec: self.spec.clone(), results, frontier }
+    }
+}
+
+/// Everything a finished sweep produced.
+pub struct SweepOutcome {
+    pub spec: SweepSpec,
+    /// One result per grid point, in grid order.
+    pub results: Vec<PointResult>,
+    pub frontier: ParetoFrontier,
+}
+
+impl SweepOutcome {
+    /// Points evaluated successfully (fresh or cached).
+    pub fn evaluated(&self) -> usize {
+        self.results.iter().filter(|r| r.outcome.is_ok()).count()
+    }
+
+    /// Points skipped as invalid (geometry rejected, unknown scheme).
+    pub fn skipped(&self) -> usize {
+        self.results.len() - self.evaluated()
+    }
+
+    pub fn cache_hits(&self) -> usize {
+        self.results.iter().filter(|r| r.cache_hit).count()
+    }
+
+    /// Successful evaluations that were computed fresh this run.
+    pub fn cache_misses(&self) -> usize {
+        self.results
+            .iter()
+            .filter(|r| !r.cache_hit && r.outcome.is_ok())
+            .count()
+    }
+
+    /// One-line run summary including the cache tally (stdout only —
+    /// never part of the frontier artifact).
+    pub fn summary_line(&self) -> String {
+        format!(
+            "swept {} points: {} evaluated, {} skipped, frontier {}; \
+             cache: {} hits, {} misses",
+            self.results.len(),
+            self.evaluated(),
+            self.skipped(),
+            self.frontier.len(),
+            self.cache_hits(),
+            self.cache_misses(),
+        )
+    }
+
+    /// The deterministic frontier artifact (see
+    /// [`ParetoFrontier::to_json`]).
+    pub fn frontier_json(&self) -> Json {
+        self.frontier.to_json(&self.spec, &self.results)
+    }
+
+    pub fn frontier_csv(&self) -> String {
+        self.frontier.to_csv(&self.results)
+    }
+
+    /// The frontier point a weighted objective selects.
+    pub fn select(&self, obj: &Objective) -> Option<TunedConfig> {
+        select_config(&self.results, &self.frontier, obj)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_spec() -> SweepSpec {
+        SweepSpec {
+            grid: "tiny".into(),
+            schemes: vec!["naive".into(), "pattern".into()],
+            ou: vec![(9, 8)],
+            xbar: vec![(256, 256)],
+            patterns: vec![4],
+            pruning: vec![0.8],
+            workload: Workload {
+                name: "t".into(),
+                layers: vec![crate::nn::ConvLayer {
+                    name: "c0".into(),
+                    cin: 4,
+                    cout: 16,
+                    fmap: 4,
+                }],
+                n_images: 2,
+                samples: 8,
+                zero_ratio: 0.25,
+                seed: 11,
+            },
+        }
+    }
+
+    #[test]
+    fn evaluate_point_is_deterministic_and_scheme_sensitive() {
+        let spec = tiny_spec();
+        let pts = spec.expand();
+        assert_eq!(pts.len(), 2);
+        let a1 = evaluate_point(&spec.workload, &pts[0]).unwrap();
+        let a2 = evaluate_point(&spec.workload, &pts[0]).unwrap();
+        assert_eq!(a1, a2, "pure function of (workload, point)");
+        let b = evaluate_point(&spec.workload, &pts[1]).unwrap();
+        // pattern mapping does strictly less work than naive on a
+        // pruned layer
+        assert!(b.cycles < a1.cycles, "{} vs {}", b.cycles, a1.cycles);
+        assert!(b.energy_pj < a1.energy_pj);
+        assert!(a1.cycles > 0.0 && a1.area_cells > 0.0);
+        assert!(a1.utilization > 0.0 && a1.utilization <= 1.0);
+    }
+
+    #[test]
+    fn runner_reports_skips_and_keeps_grid_order() {
+        let mut spec = tiny_spec();
+        // an OU taller than the crossbar is expanded but skipped
+        spec.ou.push((1024, 8));
+        let outcome = SweepRunner { spec, threads: 2, cache: None }.run();
+        assert_eq!(outcome.results.len(), 4);
+        assert_eq!(outcome.evaluated(), 2);
+        assert_eq!(outcome.skipped(), 2);
+        for (i, r) in outcome.results.iter().enumerate() {
+            assert_eq!(r.index, i, "grid order preserved");
+        }
+        let bad: Vec<&PointResult> = outcome
+            .results
+            .iter()
+            .filter(|r| r.outcome.is_err())
+            .collect();
+        assert_eq!(bad.len(), 2);
+        assert!(bad[0].point.ou_rows == 1024);
+        // frontier only ever references valid points
+        for &i in &outcome.frontier.members {
+            assert!(outcome.results[i].outcome.is_ok());
+        }
+        assert!(outcome.summary_line().contains("2 skipped"));
+    }
+
+    #[test]
+    fn unknown_scheme_is_a_skip_not_a_panic() {
+        let w = Workload::small(3);
+        let p = SweepPoint {
+            scheme: "definitely-not-a-scheme".into(),
+            ou_rows: 9,
+            ou_cols: 8,
+            xbar_rows: 512,
+            xbar_cols: 512,
+            n_patterns: 4,
+            pruning: 0.8,
+        };
+        let e = evaluate_point(&w, &p).unwrap_err();
+        assert!(e.contains("unknown mapping scheme"), "{e}");
+    }
+}

@@ -11,15 +11,19 @@
 //! ([`xbar`]), pattern analysis ([`pruning`]), network + tensor handling
 //! ([`nn`]), the PJRT runtime that executes the AOT-compiled JAX
 //! functional model ([`runtime`]), a serving coordinator
-//! ([`coordinator`]), report generation for every paper table and figure
-//! ([`report`]), and small from-scratch utilities ([`util`]) standing in
-//! for crates unavailable in this offline image.
+//! ([`coordinator`]), a design-space exploration engine that sweeps
+//! mapping/OU/crossbar configurations and auto-tunes the serving stack
+//! from the Pareto frontier ([`dse`]), report generation for every
+//! paper table and figure ([`report`]), and small from-scratch
+//! utilities ([`util`]) standing in for crates unavailable in this
+//! offline image.
 //!
 //! See `DESIGN.md` for the full system inventory and experiment index.
 
 pub mod arch;
 pub mod config;
 pub mod coordinator;
+pub mod dse;
 pub mod mapping;
 pub mod nn;
 pub mod pruning;

@@ -8,10 +8,16 @@
 //!   batch-sim — batched multi-image simulation (per-image + batch
 //!               totals, bit-exact with looped per-image runs;
 //!               `--shards N` plans + checks cost-balanced sharding)
+//!   dse       — design-space exploration: parallel sweep over
+//!               mapping/OU/crossbar/pattern/pruning configs, Pareto
+//!               frontier as table + results/<out>.{json,csv}, cached
+//!               under results/dse_cache/
 //!   serve     — start the sharded serving coordinator over the PJRT
 //!               artifact (`--workers N --balance cost|rr`, per-request
 //!               cost estimates calibrated from exact traces,
-//!               deadlines, per-worker retry/quarantine, alarm)
+//!               deadlines, per-worker retry/requeue/quarantine, alarm;
+//!               `--auto-tune` builds the pool config from the DSE
+//!               frontier winner)
 //!   e2e       — run the SmallCNN end-to-end check (golden + accuracy)
 //!   report    — regenerate every paper table/figure into results/
 
@@ -22,10 +28,12 @@ use rram_pattern_accel::config::{HardwareConfig, SimConfig};
 use rram_pattern_accel::coordinator::{
     BalancePolicy, Coordinator, CoordinatorConfig, CostModel, PjrtBackend,
 };
+use rram_pattern_accel::dse::{
+    self, Objective, ResultCache, SweepRunner, SweepSpec,
+};
 use rram_pattern_accel::mapping::{
     index, kmeans::KmeansMapping, naive::NaiveMapping, ou_sparse::OuSparseMapping,
-    pattern::{BlockOrder, PatternMapping, PatternMappingOrdered},
-    MappingScheme,
+    pattern::PatternMapping, scheme_by_name, MappingScheme,
 };
 use rram_pattern_accel::nn::{NetworkSpec, Tensor};
 use rram_pattern_accel::pruning::synthetic::{DatasetProfile, ALL_PROFILES};
@@ -44,12 +52,13 @@ fn main() {
         "map" => cmd_map(rest),
         "simulate" => cmd_simulate(rest),
         "batch-sim" => cmd_batch_sim(rest),
+        "dse" => cmd_dse(rest),
         "serve" => cmd_serve(rest),
         "e2e" => cmd_e2e(rest),
         "report" => cmd_report(rest),
         _ => {
             eprintln!(
-                "usage: rram-accel <map|simulate|batch-sim|serve|e2e|report> \
+                "usage: rram-accel <map|simulate|batch-sim|dse|serve|e2e|report> \
                  [options]\n\
                  run a subcommand with --help for its options"
             );
@@ -57,22 +66,6 @@ fn main() {
         }
     };
     std::process::exit(code);
-}
-
-fn scheme_by_name(name: &str) -> Option<Box<dyn MappingScheme>> {
-    match name {
-        "naive" => Some(Box::new(NaiveMapping)),
-        "pattern" => Some(Box::new(PatternMapping)),
-        "kmeans" => Some(Box::new(KmeansMapping::default())),
-        "ou_sparse" => Some(Box::new(OuSparseMapping)),
-        "pattern-widthsort" => {
-            Some(Box::new(PatternMappingOrdered(BlockOrder::SizeThenWidth)))
-        }
-        "pattern-sizeorder" => {
-            Some(Box::new(PatternMappingOrdered(BlockOrder::SizeThenChannel)))
-        }
-        _ => None,
-    }
 }
 
 fn cmd_map(rest: Vec<String>) -> i32 {
@@ -337,6 +330,95 @@ fn cmd_batch_sim(rest: Vec<String>) -> i32 {
     }
 }
 
+fn cmd_dse(rest: Vec<String>) -> i32 {
+    let args = match Args::new(
+        "design-space exploration: sweep mapping/OU/crossbar/pattern/\
+         pruning configs in parallel and emit the Pareto frontier",
+    )
+    .opt("grid", "small", "sweep grid: small|medium")
+    .opt("seed", "42", "workload seed")
+    .opt("threads", "0", "sweep worker threads (0 = auto)")
+    .opt("weights", "1,1,1", "selection weights: area,energy,cycles")
+    .opt("cache-dir", "results/dse_cache", "on-disk result cache directory")
+    .opt("out", "dse_frontier", "artifact basename under results/")
+    .flag("no-cache", "evaluate every point fresh")
+    .flag("sensitivity", "print the per-axis sensitivity summary")
+    .parse(rest)
+    {
+        Ok(a) => a,
+        Err(e) => return usage(e),
+    };
+    let seed = args.get_u64("seed").unwrap_or(42);
+    let spec = match SweepSpec::by_name(args.get("grid"), seed) {
+        Some(s) => s,
+        None => return usage(format!("unknown grid {}", args.get("grid"))),
+    };
+    let obj = match Objective::parse(args.get("weights")) {
+        Ok(o) => o,
+        Err(e) => return usage(e),
+    };
+    let threads = auto_threads(&args);
+    let cache = if args.get_flag("no-cache") {
+        None
+    } else {
+        Some(ResultCache::new(args.get("cache-dir").to_string()))
+    };
+    println!(
+        "sweeping '{}' grid: {} points on {} threads ({})",
+        spec.grid,
+        spec.expand().len(),
+        threads,
+        if cache.is_some() { "cached" } else { "uncached" },
+    );
+    let outcome = SweepRunner { spec, threads, cache }.run();
+    println!("{}", outcome.summary_line());
+    print!("{}", outcome.frontier.table(&outcome.results));
+    if args.get_flag("sensitivity") {
+        for axis in dse::sensitivity(&outcome.results) {
+            print!("{}", axis.lines());
+        }
+    }
+    if let Some(t) = outcome.select(&obj) {
+        println!(
+            "selected (weights area,energy,cycles = {}): {} — cycles {:.0}, \
+             energy {:.4e} pJ, {} crossbars ({:.0} cells)",
+            args.get("weights"),
+            t.point.label(),
+            t.metrics.cycles,
+            t.metrics.energy_pj,
+            t.metrics.crossbars,
+            t.metrics.area_cells,
+        );
+    }
+    // The artifacts are the command's contract: a failed write is a
+    // failed run, not a warning.
+    let mut write_ok = true;
+    let json_name = format!("{}.json", args.get("out"));
+    match report::write_json(&json_name, &outcome.frontier_json()) {
+        Ok(()) => println!("wrote results/{json_name}"),
+        Err(e) => {
+            write_ok = false;
+            eprintln!("write results/{json_name}: {e}");
+        }
+    }
+    let csv_name = format!("{}.csv", args.get("out"));
+    match report::write_text(&csv_name, &outcome.frontier_csv()) {
+        Ok(()) => println!("wrote results/{csv_name}"),
+        Err(e) => {
+            write_ok = false;
+            eprintln!("write results/{csv_name}: {e}");
+        }
+    }
+    if outcome.frontier.is_empty() {
+        eprintln!("dse: empty frontier — every grid point was skipped");
+        1
+    } else if !write_ok {
+        1
+    } else {
+        0
+    }
+}
+
 fn cmd_serve(rest: Vec<String>) -> i32 {
     let args = match Args::new("serve batched inference over the AOT artifact")
         .opt("artifacts", "artifacts", "artifacts directory")
@@ -351,6 +433,24 @@ fn cmd_serve(rest: Vec<String>) -> i32 {
             "8",
             "exact-trace cost-model calibration images (0 = analytic fallback)",
         )
+        .opt(
+            "max-requeues",
+            "1",
+            "cross-worker requeues of a failed batch's requests (pools only)",
+        )
+        .opt(
+            "quarantine-expiry-ms",
+            "0",
+            "quarantine expiry in ms (0 = release on next success only)",
+        )
+        .flag(
+            "auto-tune",
+            "sweep the design space and build the pool's config + cost \
+             model from the Pareto-frontier winner",
+        )
+        .opt("tune-grid", "small", "auto-tune sweep grid: small|medium")
+        .opt("tune-seed", "42", "auto-tune workload seed (match `dse --seed`)")
+        .opt("tune-weights", "1,1,1", "auto-tune weights: area,energy,cycles")
         .flag("json", "write results/serve_workers.json")
         .parse(rest)
     {
@@ -381,13 +481,90 @@ fn cmd_serve(rest: Vec<String>) -> i32 {
         Ok(t) => t,
         Err(e) => return usage(format!("load test data: {e} (run `make artifacts`)")),
     };
+
+    // Auto-tune: sweep the design space (cached under
+    // results/dse_cache/) and take the frontier point the weighted
+    // objective selects; its scheme + OU/crossbar geometry become the
+    // pool's accelerator config, so the cost model the dispatcher
+    // balances on is calibrated against the sweep's winner.
+    let tuned = if args.get_flag("auto-tune") {
+        let obj = match Objective::parse(args.get("tune-weights")) {
+            Ok(o) => o,
+            Err(e) => return usage(e),
+        };
+        let tune_seed = args.get_u64("tune-seed").unwrap_or(42);
+        let spec = match SweepSpec::by_name(args.get("tune-grid"), tune_seed) {
+            Some(s) => s,
+            None => {
+                return usage(format!("unknown tune grid {}", args.get("tune-grid")))
+            }
+        };
+        let outcome = SweepRunner {
+            spec,
+            threads: threadpool::default_threads(),
+            cache: Some(ResultCache::default_dir()),
+        }
+        .run();
+        println!("[serve] auto-tune: {}", outcome.summary_line());
+        match outcome.select(&obj) {
+            Some(t) => {
+                println!(
+                    "[serve] auto-tune selected {} — cycles {:.0}, energy \
+                     {:.4e} pJ, {} crossbars",
+                    t.point.label(),
+                    t.metrics.cycles,
+                    t.metrics.energy_pj,
+                    t.metrics.crossbars,
+                );
+                Some(t)
+            }
+            None => {
+                return usage("auto-tune produced an empty frontier".to_string())
+            }
+        }
+    } else {
+        None
+    };
+    // Scheme + hardware the serving cost model runs on: the tuned
+    // winner's geometry grafted onto the SmallCNN functional base, or
+    // the paper defaults without --auto-tune.
+    let (serve_scheme, serve_hw): (Box<dyn MappingScheme>, HardwareConfig) =
+        match &tuned {
+            Some(t) => {
+                let hw = match t
+                    .point
+                    .apply_dims(&HardwareConfig::smallcnn_functional())
+                {
+                    Ok(hw) => hw,
+                    Err(e) => {
+                        return usage(format!(
+                            "tuned geometry rejected by the serving base: {e}"
+                        ))
+                    }
+                };
+                match scheme_by_name(&t.point.scheme) {
+                    Some(s) => (s, hw),
+                    None => {
+                        return usage(format!(
+                            "tuned scheme {} not registered",
+                            t.point.scheme
+                        ))
+                    }
+                }
+            }
+            None => (
+                Box::new(PatternMapping),
+                HardwareConfig::smallcnn_functional(),
+            ),
+        };
+
     // Per-request cost model, calibrated from *real* exact-mode
     // activation traces over the first test images (per-layer
     // zero-fraction→cycles regression); falls back to the first-order
     // analytic calibration when no calibration images are requested.
     let cost_model = SmallCnn::load(Path::new(&dir)).ok().map(|m| {
-        let hw = HardwareConfig::smallcnn_functional();
-        let mapped = m.map(&PatternMapping, &hw);
+        let hw = serve_hw.clone();
+        let mapped = m.map(serve_scheme.as_ref(), &hw);
         let sim_cfg = SimConfig::default();
         let threads = threadpool::default_threads();
         let k = calib_images.min(td.test_x.shape[0]);
@@ -434,6 +611,14 @@ fn cmd_serve(rest: Vec<String>) -> i32 {
             alarm_threshold,
             workers,
             balance,
+            max_requeues: args.get_usize("max-requeues").unwrap_or(1) as u32,
+            quarantine_expiry: match args
+                .get_usize("quarantine-expiry-ms")
+                .unwrap_or(0)
+            {
+                0 => None,
+                ms => Some(Duration::from_millis(ms as u64)),
+            },
             ..Default::default()
         },
         cost_model,
@@ -494,10 +679,11 @@ fn cmd_serve(rest: Vec<String>) -> i32 {
     }
     println!(
         "[serve] failed {failed} (deadline-expired {}, overload-rejected {}, \
-         retried batches {}), alarm {}",
+         retried batches {}, cross-worker requeues {}), alarm {}",
         merged.deadline_expired.load(Relaxed),
         merged.rejected_overload.load(Relaxed),
         merged.retried_batches.load(Relaxed),
+        merged.requeued_requests.load(Relaxed),
         if merged.failed_alarm() { "TRIPPED" } else { "ok" },
     );
     let stats = coord.worker_stats();

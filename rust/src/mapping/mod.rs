@@ -20,6 +20,36 @@ use crate::pruning::{NetworkWeights, Pattern};
 use crate::util::threadpool;
 use crate::xbar::CellGeometry;
 
+/// Every registered scheme name, in the order [`scheme_by_name`]
+/// resolves them (the DSE sweep axes and the CLI both draw from this).
+pub const SCHEME_NAMES: [&str; 6] = [
+    "naive",
+    "pattern",
+    "kmeans",
+    "ou_sparse",
+    "pattern-widthsort",
+    "pattern-sizeorder",
+];
+
+/// Resolve a scheme by CLI / sweep-axis name. The single registry
+/// shared by `rram-accel`, the DSE engine and `serve --auto-tune`.
+pub fn scheme_by_name(name: &str) -> Option<Box<dyn MappingScheme>> {
+    use pattern::{BlockOrder, PatternMapping, PatternMappingOrdered};
+    match name {
+        "naive" => Some(Box::new(naive::NaiveMapping)),
+        "pattern" => Some(Box::new(PatternMapping)),
+        "kmeans" => Some(Box::new(kmeans::KmeansMapping::default())),
+        "ou_sparse" => Some(Box::new(ou_sparse::OuSparseMapping)),
+        "pattern-widthsort" => {
+            Some(Box::new(PatternMappingOrdered(BlockOrder::SizeThenWidth)))
+        }
+        "pattern-sizeorder" => {
+            Some(Box::new(PatternMappingOrdered(BlockOrder::SizeThenChannel)))
+        }
+        _ => None,
+    }
+}
+
 /// One pattern block: the kernels of input channel `cin` sharing
 /// `pattern`, compressed to `pattern.size()` rows × `out_channels.len()`
 /// weight columns (paper Fig. 4).
@@ -237,6 +267,15 @@ mod tests {
 
     fn geom() -> CellGeometry {
         CellGeometry::from_hw(&HardwareConfig::default())
+    }
+
+    #[test]
+    fn scheme_registry_resolves_every_name() {
+        for name in SCHEME_NAMES {
+            let s = scheme_by_name(name).unwrap_or_else(|| panic!("{name}"));
+            assert!(!s.name().is_empty());
+        }
+        assert!(scheme_by_name("bogus").is_none());
     }
 
     #[test]

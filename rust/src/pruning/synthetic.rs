@@ -80,7 +80,7 @@ impl DatasetProfile {
     /// Generate the full synthetic pattern-pruned VGG16 for this profile.
     pub fn generate(&self, seed: u64) -> NetworkWeights {
         let spec = self.network_spec();
-        let mut rng = Rng::seed_from(seed ^ fnv(self.name));
+        let mut rng = Rng::seed_from(seed ^ crate::util::fnv1a(self.name));
         let mut layers = Vec::with_capacity(13);
         for (li, layer) in spec.layers.iter().enumerate() {
             let mut lrng = rng.fork(li as u64);
@@ -95,15 +95,6 @@ impl DatasetProfile {
         }
         NetworkWeights::new(spec, layers)
     }
-}
-
-fn fnv(s: &str) -> u64 {
-    let mut h: u64 = 0xcbf29ce484222325;
-    for b in s.bytes() {
-        h ^= b as u64;
-        h = h.wrapping_mul(0x100000001b3);
-    }
-    h
 }
 
 /// Sample `n` distinct nonzero patterns with the given sizes.

@@ -270,13 +270,15 @@ pub fn worker_utilization_lines(stats: &[WorkerStats]) -> String {
     for w in stats {
         s.push_str(&format!(
             "[serve] worker {}: {} requests ({} failed), {} batches \
-             ({} padded slots, {} retried), outstanding {} cycles{}\n",
+             ({} padded slots, {} retried, {} requeued away), \
+             outstanding {} cycles{}\n",
             w.worker,
             w.requests,
             w.failed_requests,
             w.batches,
             w.padded_slots,
             w.retried_batches,
+            w.requeued_requests,
             w.outstanding_cost,
             if w.quarantined { " [QUARANTINED]" } else { "" },
         ));
@@ -310,6 +312,10 @@ pub fn worker_utilization_json(stats: &[WorkerStats]) -> Json {
                             ("batches", (w.batches as f64).into()),
                             ("padded_slots", (w.padded_slots as f64).into()),
                             ("retried_batches", (w.retried_batches as f64).into()),
+                            (
+                                "requeued_requests",
+                                (w.requeued_requests as f64).into(),
+                            ),
                             ("inflight", (w.inflight as f64).into()),
                             (
                                 "outstanding_cost",
@@ -330,6 +336,18 @@ pub fn worker_utilization_json(stats: &[WorkerStats]) -> Json {
     ])
 }
 
+/// §DSE parallel-sweep head-to-head line (`benches/dse_sweep.rs`): the
+/// grid fan-out over the thread pool vs the same grid single-threaded.
+pub fn sweep_speedup_line(single_ns: f64, parallel_ns: f64) -> String {
+    let ratio = single_ns / parallel_ns.max(1e-9);
+    format!(
+        "  -> parallel sweep {:.2}x single-thread throughput \
+         (target >= 2x: {})",
+        ratio,
+        if ratio >= 2.0 { "MET" } else { "MISSED" }
+    )
+}
+
 /// §V-C speedup row.
 pub fn speedup_line(dataset: &str, cmp: &Comparison, paper: f64) -> String {
     format!(
@@ -344,9 +362,15 @@ pub fn speedup_line(dataset: &str, cmp: &Comparison, paper: f64) -> String {
 
 /// Write a JSON report under `results/`, creating the directory.
 pub fn write_json(path_under_results: &str, j: &Json) -> std::io::Result<()> {
+    write_text(path_under_results, &j.to_string_pretty())
+}
+
+/// Write a text artifact (CSV, tables) under `results/`, creating the
+/// directory.
+pub fn write_text(path_under_results: &str, text: &str) -> std::io::Result<()> {
     let dir = Path::new("results");
     std::fs::create_dir_all(dir)?;
-    std::fs::write(dir.join(path_under_results), j.to_string_pretty())
+    std::fs::write(dir.join(path_under_results), text)
 }
 
 #[cfg(test)]
@@ -412,6 +436,16 @@ mod tests {
     }
 
     #[test]
+    fn sweep_line_formats_ratio_and_verdict() {
+        let s = sweep_speedup_line(1000.0, 400.0);
+        assert!(s.contains("2.50x"), "{s}");
+        assert!(s.contains("MET"), "{s}");
+        let s = sweep_speedup_line(300.0, 200.0);
+        assert!(s.contains("1.50x"), "{s}");
+        assert!(s.contains("MISSED"), "{s}");
+    }
+
+    #[test]
     fn engine_line_formats_ratio_and_verdict() {
         let s = engine_speedup_line(1000.0, 100.0);
         assert!(s.contains("10.0x"), "{s}");
@@ -453,6 +487,7 @@ mod tests {
                 batches: 3,
                 padded_slots: 2,
                 retried_batches: 1,
+                requeued_requests: 0,
                 inflight: 0,
                 outstanding_cost: 0,
                 quarantined: false,
@@ -464,6 +499,7 @@ mod tests {
                 batches: 2,
                 padded_slots: 0,
                 retried_batches: 0,
+                requeued_requests: 3,
                 inflight: 1,
                 outstanding_cost: 500,
                 quarantined: true,
@@ -471,9 +507,16 @@ mod tests {
         ];
         let lines = worker_utilization_lines(&stats);
         assert!(lines.contains("worker 0: 6 requests"), "{lines}");
+        assert!(lines.contains("3 requeued away"), "{lines}");
         assert!(lines.contains("QUARANTINED"), "{lines}");
         assert!(lines.contains("imbalance max/mean: 1.500"), "{lines}");
         let j = worker_utilization_json(&stats);
+        assert!(
+            (j.get("workers").idx(1).get("requeued_requests").as_f64().unwrap()
+                - 3.0)
+                .abs()
+                < 1e-12
+        );
         assert_eq!(
             j.get("workers").as_arr().map(|a| a.len()),
             Some(2)

@@ -11,3 +11,26 @@ pub mod prop;
 pub mod rng;
 pub mod stats;
 pub mod threadpool;
+
+/// FNV-1a 64-bit hash of a string — the crate's one stable string hash,
+/// shared by the property-test seed derivation, the synthetic-weight
+/// profile seeding and the DSE result-cache keys.
+pub fn fnv1a(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn fnv1a_known_vectors() {
+        // standard FNV-1a 64 test vectors
+        assert_eq!(super::fnv1a(""), 0xcbf29ce484222325);
+        assert_eq!(super::fnv1a("a"), 0xaf63dc4c8601ec8c);
+        assert_ne!(super::fnv1a("cifar10"), super::fnv1a("cifar100"));
+    }
+}

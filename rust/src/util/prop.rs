@@ -50,12 +50,7 @@ pub fn check_seed<F: Fn(&mut Rng)>(_name: &str, seed: u64, body: F) {
 
 fn derive_seed(name: &str, case: u32) -> u64 {
     // FNV-1a over the name, mixed with the case index.
-    let mut h: u64 = 0xcbf29ce484222325;
-    for b in name.bytes() {
-        h ^= b as u64;
-        h = h.wrapping_mul(0x100000001b3);
-    }
-    h ^ ((case as u64) << 32 | case as u64)
+    super::fnv1a(name) ^ ((case as u64) << 32 | case as u64)
 }
 
 // ---- common generators ----

@@ -38,13 +38,25 @@ where
     R: Send,
     F: Fn(&T) -> R + Sync,
 {
+    parallel_map_indexed(items, threads, |_, t| f(t))
+}
+
+/// As [`parallel_map`], but `f` also receives each item's index — the
+/// DSE sweep runner uses it to tag results with their grid position so
+/// downstream artifacts are independent of scheduling order.
+pub fn parallel_map_indexed<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
     let n = items.len();
     if n == 0 {
         return Vec::new();
     }
     let threads = threads.max(1).min(n);
     if threads == 1 {
-        return items.iter().map(|t| f(t)).collect();
+        return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
     }
 
     let next = AtomicUsize::new(0);
@@ -58,7 +70,7 @@ where
                 if i >= n {
                     break;
                 }
-                let r = f(&items[i]);
+                let r = f(i, &items[i]);
                 *results[i].lock().unwrap() = Some(r);
             });
         }
@@ -141,6 +153,16 @@ mod tests {
         });
         let name = h.join().unwrap();
         assert_eq!(name.as_deref(), Some("tp-test-thread"));
+    }
+
+    #[test]
+    fn indexed_map_passes_grid_positions() {
+        let items = vec![10usize, 20, 30];
+        let out = parallel_map_indexed(&items, 2, |i, x| (i, *x));
+        assert_eq!(out, vec![(0, 10), (1, 20), (2, 30)]);
+        // single-thread path agrees
+        let out1 = parallel_map_indexed(&items, 1, |i, x| (i, *x));
+        assert_eq!(out, out1);
     }
 
     #[test]

@@ -44,6 +44,14 @@ impl CellGeometry {
     pub fn ou_ops_for_block(&self, h: usize, w_cells: usize) -> usize {
         h.div_ceil(self.ou_rows) * w_cells.div_ceil(self.ou_cols)
     }
+
+    /// Cells provisioned by one crossbar. The DSE engine reports area
+    /// in cells (`crossbars × cells_per_xbar`) so configurations with
+    /// different crossbar geometries stay comparable — a raw crossbar
+    /// count would make a 128×128 array look as expensive as a 512×512.
+    pub fn cells_per_xbar(&self) -> usize {
+        self.xbar_rows * self.xbar_cols
+    }
 }
 
 /// Signed fixed-point weight quantization mirroring
@@ -104,6 +112,7 @@ mod tests {
         assert_eq!(g.ou_ops_for_block(3, 64), 8);
         // narrow block still costs one OU
         assert_eq!(g.ou_ops_for_block(1, 1), 1);
+        assert_eq!(g.cells_per_xbar(), 512 * 512);
     }
 
     #[test]

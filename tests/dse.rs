@@ -1,0 +1,214 @@
+//! DSE acceptance tests (ISSUE-4): frontier determinism across thread
+//! counts and runs, cache-hit bit-exactness, skip handling, and the
+//! sweep → serving auto-tune bridge.
+
+use rram_pattern_accel::config::HardwareConfig;
+use rram_pattern_accel::dse::{
+    pareto, Objective, ResultCache, SweepRunner, SweepSpec, Workload,
+};
+use rram_pattern_accel::nn::ConvLayer;
+
+/// A 8-point grid small enough for test runs, large enough to carry a
+/// real area/energy/cycles trade-off (two schemes, two OU shapes, two
+/// crossbar sizes).
+fn tiny_spec(seed: u64) -> SweepSpec {
+    SweepSpec {
+        grid: "tiny-test".into(),
+        schemes: vec!["naive".into(), "pattern".into()],
+        ou: vec![(4, 4), (9, 8)],
+        xbar: vec![(256, 256), (512, 512)],
+        patterns: vec![4],
+        pruning: vec![0.8],
+        workload: Workload {
+            name: "tiny".into(),
+            layers: vec![
+                ConvLayer { name: "c0".into(), cin: 4, cout: 16, fmap: 6 },
+                ConvLayer { name: "c1".into(), cin: 16, cout: 16, fmap: 4 },
+            ],
+            n_images: 2,
+            samples: 12,
+            zero_ratio: 0.25,
+            seed,
+        },
+    }
+}
+
+fn run(spec: SweepSpec, threads: usize, cache: Option<ResultCache>) -> String {
+    SweepRunner { spec, threads, cache }
+        .run()
+        .frontier_json()
+        .to_string_pretty()
+}
+
+fn temp_cache(tag: &str) -> ResultCache {
+    let dir = std::env::temp_dir()
+        .join(format!("rram-dse-test-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    ResultCache::new(dir)
+}
+
+/// Acceptance: the frontier JSON is byte-identical for any thread
+/// count and across repeated runs.
+#[test]
+fn frontier_json_is_thread_invariant_and_repeatable() {
+    let a = run(tiny_spec(42), 1, None);
+    let b = run(tiny_spec(42), 4, None);
+    let c = run(tiny_spec(42), 3, None);
+    assert_eq!(a, b, "1 vs 4 threads must emit identical bytes");
+    assert_eq!(a, c, "1 vs 3 threads must emit identical bytes");
+    let again = run(tiny_spec(42), 4, None);
+    assert_eq!(a, again, "repeat runs must emit identical bytes");
+    // a different workload seed is a genuinely different sweep
+    let other = run(tiny_spec(43), 4, None);
+    assert_ne!(a, other, "seed must reach the workload");
+}
+
+/// Acceptance: a second invocation completes from cache hits and its
+/// results — frontier bytes *and* every per-point metric — are
+/// bit-exact with the fresh run.
+#[test]
+fn cached_sweep_is_bit_exact_with_fresh_sweep() {
+    let cache = temp_cache("bitexact");
+    let fresh = SweepRunner {
+        spec: tiny_spec(42),
+        threads: 2,
+        cache: Some(cache.clone()),
+    }
+    .run();
+    assert_eq!(fresh.cache_hits(), 0, "cold cache");
+    assert!(fresh.cache_misses() > 0);
+    assert_eq!(fresh.cache_misses(), fresh.evaluated());
+
+    let cached = SweepRunner {
+        spec: tiny_spec(42),
+        threads: 4,
+        cache: Some(cache.clone()),
+    }
+    .run();
+    assert_eq!(cached.cache_misses(), 0, "second run must be all hits");
+    assert_eq!(cached.cache_hits(), fresh.evaluated());
+
+    assert_eq!(
+        fresh.frontier_json().to_string_pretty(),
+        cached.frontier_json().to_string_pretty(),
+        "cache hits must reproduce the fresh frontier bitwise"
+    );
+    for (f, c) in fresh.results.iter().zip(cached.results.iter()) {
+        assert_eq!(f.point, c.point);
+        match (&f.outcome, &c.outcome) {
+            (Ok(fm), Ok(cm)) => assert_eq!(fm, cm, "point {}", f.index),
+            (Err(fe), Err(ce)) => assert_eq!(fe, ce),
+            _ => panic!("outcome kind changed for point {}", f.index),
+        }
+    }
+    let _ = std::fs::remove_dir_all(cache.dir());
+}
+
+/// Every valid swept point is either on the frontier or dominated by a
+/// frontier member, and no frontier member is dominated by anything —
+/// on a real sweep, not synthetic metrics.
+#[test]
+fn frontier_is_sound_and_complete_on_real_sweep() {
+    let outcome = SweepRunner { spec: tiny_spec(42), threads: 2, cache: None }.run();
+    assert!(!outcome.frontier.is_empty(), "non-empty deterministic frontier");
+    let members: Vec<usize> = outcome.frontier.members.clone();
+    assert!(
+        members.windows(2).all(|w| w[0] < w[1]),
+        "members must be in ascending grid order"
+    );
+    for (i, r) in outcome.results.iter().enumerate() {
+        let Some(m) = r.metrics() else { continue };
+        let dominated = outcome
+            .results
+            .iter()
+            .filter_map(|o| o.metrics())
+            .any(|o| pareto::dominates(o, m));
+        if members.contains(&i) {
+            assert!(!dominated, "frontier member {i} is dominated");
+        } else {
+            assert!(dominated, "non-member {i} must be dominated");
+        }
+    }
+    // the tiny grid carries a real trade-off: pattern mapping reaches
+    // the frontier (naive never dominates it on cycles/energy)
+    assert!(
+        members.iter().any(|&i| outcome.results[i].point.scheme == "pattern"),
+        "pattern scheme must appear on the frontier"
+    );
+}
+
+/// Invalid grid points (geometry the config system rejects) are
+/// reported as skips with a reason, never silently dropped, and never
+/// reach the frontier.
+#[test]
+fn invalid_points_are_skipped_with_reason() {
+    let mut spec = tiny_spec(42);
+    spec.ou.push((1024, 8)); // taller than both crossbars
+    spec.schemes.push("not-a-scheme".into());
+    let outcome = SweepRunner { spec, threads: 2, cache: None }.run();
+    assert!(outcome.skipped() > 0);
+    assert_eq!(
+        outcome.results.len(),
+        outcome.evaluated() + outcome.skipped(),
+        "every expanded point is accounted for"
+    );
+    let mut saw_geometry = false;
+    let mut saw_scheme = false;
+    for r in &outcome.results {
+        if let Err(e) = &r.outcome {
+            assert!(!e.is_empty());
+            saw_geometry |= r.point.ou_rows == 1024;
+            saw_scheme |= e.contains("unknown mapping scheme");
+        }
+    }
+    assert!(saw_geometry && saw_scheme);
+    for &i in &outcome.frontier.members {
+        assert!(outcome.results[i].outcome.is_ok());
+    }
+}
+
+/// The auto-tune bridge: a weighted objective selects a frontier point
+/// whose geometry grafts onto the serving base config and validates.
+#[test]
+fn selected_config_boots_the_serving_base() {
+    let outcome = SweepRunner { spec: tiny_spec(42), threads: 2, cache: None }.run();
+    for weights in ["1,1,1", "1,0,0", "0,1,0", "0,0,1", "2,0.5,1"] {
+        let obj = Objective::parse(weights).unwrap();
+        let t = outcome.select(&obj).expect("non-empty frontier selects");
+        // the selection is a frontier member
+        assert!(outcome
+            .frontier
+            .members
+            .iter()
+            .any(|&i| outcome.results[i].point == t.point));
+        // its geometry must boot both the Table I base and the SmallCNN
+        // functional base serve --auto-tune uses
+        t.point.hardware().expect("Table I base");
+        let hw = t
+            .point
+            .apply_dims(&HardwareConfig::smallcnn_functional())
+            .expect("serving base");
+        assert_eq!(hw.ou_rows, t.point.ou_rows);
+        assert_eq!(hw.weight_bits, 8, "serving base precision preserved");
+        use rram_pattern_accel::mapping::MappingScheme as _;
+        let scheme = rram_pattern_accel::mapping::scheme_by_name(&t.point.scheme)
+            .expect("tuned scheme registered");
+        assert_eq!(scheme.name(), t.point.scheme);
+    }
+    // extreme weights pick the extreme frontier points
+    let min_area = outcome
+        .select(&Objective::parse("1,0,0").unwrap())
+        .unwrap()
+        .metrics
+        .area_cells;
+    let min_cycles = outcome
+        .select(&Objective::parse("0,0,1").unwrap())
+        .unwrap()
+        .metrics
+        .cycles;
+    for &i in &outcome.frontier.members {
+        let m = outcome.results[i].metrics().unwrap();
+        assert!(m.area_cells >= min_area);
+        assert!(m.cycles >= min_cycles);
+    }
+}

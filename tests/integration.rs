@@ -433,10 +433,12 @@ mod coordinator_failure_injection {
     }
 
     /// One worker's backend permanently fails while its siblings are
-    /// healthy: the failure stays inside that worker's domain. The
-    /// first request routed to it exhausts its (zero) retries and gets
-    /// the error; quarantine then routes every later request around
-    /// the dead worker, and the pool keeps serving.
+    /// healthy, with cross-worker requeue disabled (`max_requeues: 0`):
+    /// the failure stays inside that worker's domain — the strict
+    /// per-worker isolation contract of PR 3. The first request routed
+    /// to it exhausts its (zero) retries and gets the error; quarantine
+    /// then routes every later request around the dead worker, and the
+    /// pool keeps serving.
     #[test]
     fn dead_worker_only_fails_its_own_requests() {
         use rram_pattern_accel::coordinator::BalancePolicy;
@@ -469,6 +471,7 @@ mod coordinator_failure_injection {
             CoordinatorConfig {
                 max_wait: Duration::from_millis(1),
                 max_retries: 0,
+                max_requeues: 0,
                 workers: 3,
                 balance: BalancePolicy::RoundRobin,
                 quarantine_after: 1,
@@ -551,6 +554,7 @@ mod coordinator_failure_injection {
             CoordinatorConfig {
                 max_wait: Duration::from_millis(2),
                 max_retries: 0,
+                max_requeues: 0,
                 workers: 3,
                 balance: BalancePolicy::RoundRobin,
                 quarantine_after: 1,
@@ -602,6 +606,169 @@ mod coordinator_failure_injection {
             "successes and dead-worker failures must partition the requests"
         );
         assert!(ok > 0, "the pool must keep serving");
+    }
+
+    /// Same dead worker, but with the default cross-worker requeue
+    /// enabled (ISSUE-4 satellite): the failed batch's requests are
+    /// re-dispatched to healthy siblings before any error is delivered,
+    /// so every request succeeds even under concurrent submitters.
+    #[test]
+    fn dead_worker_requests_are_rescued_by_requeue() {
+        use rram_pattern_accel::coordinator::BalancePolicy;
+
+        struct DirectedBackend {
+            dead: bool,
+        }
+        impl InferBackend for DirectedBackend {
+            fn input_len(&self) -> usize {
+                2
+            }
+            fn output_len(&self) -> usize {
+                1
+            }
+            fn batch_size(&self) -> usize {
+                2
+            }
+            fn run_batch(&self, batch: &[f32]) -> Result<Vec<f32>, String> {
+                if self.dead {
+                    return Err("worker backend is dead".to_string());
+                }
+                Ok((0..2).map(|i| batch[i * 2] + batch[i * 2 + 1]).collect())
+            }
+        }
+
+        let c = Arc::new(Coordinator::start_pool(
+            |worker| DirectedBackend { dead: worker == 0 },
+            CoordinatorConfig {
+                max_wait: Duration::from_millis(2),
+                max_retries: 0,
+                max_requeues: 1, // the default, spelled out
+                workers: 3,
+                balance: BalancePolicy::RoundRobin,
+                quarantine_after: 1,
+                ..Default::default()
+            },
+            None,
+        ));
+        let n = 16usize;
+        let mut handles = Vec::new();
+        for t in 0..n {
+            let c2 = c.clone();
+            handles.push(std::thread::spawn(move || {
+                let rx = c2.submit(vec![t as f32, 1.0]);
+                let rep = rx.recv_timeout(LONG).expect("terminal reply");
+                let logits =
+                    rep.result.expect("requeue must rescue dead-worker requests");
+                assert_eq!(logits[0], t as f32 + 1.0);
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let merged = c.merged_metrics();
+        assert_eq!(merged.requests.load(Ordering::Relaxed), n as u64);
+        assert_eq!(
+            merged.failed_requests.load(Ordering::Relaxed),
+            0,
+            "no request may fail while healthy siblings exist"
+        );
+        // whatever landed on the dead worker first was requeued exactly
+        // once and replied exactly once (the no-double-count invariant)
+        let requeued = merged.requeued_requests.load(Ordering::Relaxed);
+        assert_eq!(
+            c.worker_metrics()[0].requeued_requests.load(Ordering::Relaxed),
+            requeued,
+            "only the dead worker requeues"
+        );
+        assert_eq!(merged.latency_summary().len(), n);
+        // the dead worker records no terminal replies of its own
+        assert_eq!(c.worker_metrics()[0].requests.load(Ordering::Relaxed), 0);
+    }
+
+    /// Quarantine expiry (ISSUE-4 satellite): a worker that recovers
+    /// while quarantined rejoins routing after the configured wall time
+    /// without needing a probe request to drain through its queue.
+    #[test]
+    fn quarantine_expiry_readmits_recovered_worker() {
+        use rram_pattern_accel::coordinator::BalancePolicy;
+
+        /// Worker 0 fails its first batch only; everything after (and
+        /// every sibling) succeeds.
+        struct RecoveringBackend {
+            worker: usize,
+            w0_calls: Arc<AtomicU64>,
+        }
+        impl InferBackend for RecoveringBackend {
+            fn input_len(&self) -> usize {
+                2
+            }
+            fn output_len(&self) -> usize {
+                1
+            }
+            fn batch_size(&self) -> usize {
+                1
+            }
+            fn run_batch(&self, batch: &[f32]) -> Result<Vec<f32>, String> {
+                if self.worker == 0
+                    && self.w0_calls.fetch_add(1, Ordering::Relaxed) == 0
+                {
+                    return Err("transient fault".to_string());
+                }
+                Ok(vec![batch[0] + batch[1]])
+            }
+        }
+
+        let w0_calls = Arc::new(AtomicU64::new(0));
+        let calls2 = w0_calls.clone();
+        let c = Coordinator::start_pool(
+            move |worker| RecoveringBackend { worker, w0_calls: calls2.clone() },
+            CoordinatorConfig {
+                max_wait: Duration::from_millis(1),
+                max_retries: 0,
+                max_requeues: 0, // isolate the expiry behavior
+                workers: 2,
+                balance: BalancePolicy::RoundRobin,
+                quarantine_after: 1,
+                // Generous enough that scheduling delay on a loaded CI
+                // machine cannot parole worker 0 before the
+                // while-quarantined assertions below have run.
+                quarantine_expiry: Some(Duration::from_millis(1500)),
+                ..Default::default()
+            },
+            None,
+        );
+        // request 0 lands on worker 0 and hits the transient fault
+        let rep = c.submit(vec![1.0, 2.0]).recv_timeout(LONG).expect("reply");
+        assert!(rep.result.is_err(), "transient fault delivered");
+        assert!(c.worker_stats()[0].quarantined, "worker 0 quarantined");
+        // while quarantined, traffic routes around worker 0
+        for _ in 0..2 {
+            let rep = c.submit(vec![1.0, 2.0]).recv_timeout(LONG).expect("reply");
+            assert!(rep.result.is_ok());
+        }
+        assert_eq!(
+            c.worker_metrics()[0].requests.load(Ordering::Relaxed),
+            1,
+            "no new traffic while quarantined"
+        );
+        // after the expiry the worker rejoins on probation — no probe
+        // request was needed (its queue stayed empty the whole time)
+        std::thread::sleep(Duration::from_millis(1800));
+        assert!(
+            !c.worker_stats()[0].quarantined,
+            "expiry must lift the quarantine"
+        );
+        for i in 0..4 {
+            let rep = c
+                .submit(vec![i as f32, 1.0])
+                .recv_timeout(LONG)
+                .expect("reply");
+            assert!(rep.result.is_ok(), "recovered worker must serve");
+        }
+        let w0 = c.worker_metrics()[0].requests.load(Ordering::Relaxed);
+        assert!(w0 >= 2, "worker 0 must take traffic again, got {w0}");
+        assert_eq!(c.merged_metrics().failed_requests.load(Ordering::Relaxed), 1);
+        c.shutdown();
     }
 
     #[test]

@@ -356,3 +356,151 @@ fn prop_area_monotone_in_sparsity() {
         assert!(b <= a, "sparser layer used more cells: {b} > {a}");
     });
 }
+
+/// DSE Pareto invariants (ISSUE-4): no frontier member is dominated by
+/// any swept point, every excluded valid point is dominated by some
+/// frontier member, and the frontier's objective set is invariant under
+/// evaluation order — random metric tuples drawn from small discrete
+/// ranges so ties and exact duplicates are common.
+#[test]
+fn prop_pareto_frontier_sound_complete_order_invariant() {
+    use rram_pattern_accel::dse::pareto::{dominates, ParetoFrontier};
+    use rram_pattern_accel::dse::{PointMetrics, PointResult, SweepPoint};
+
+    fn mk(i: usize, area: f64, energy: f64, cycles: f64) -> PointResult {
+        PointResult {
+            index: i,
+            point: SweepPoint {
+                scheme: "pattern".into(),
+                ou_rows: 9,
+                ou_cols: 8,
+                xbar_rows: 512,
+                xbar_cols: 512,
+                n_patterns: 8,
+                pruning: 0.86,
+            },
+            outcome: Ok(PointMetrics {
+                cycles,
+                energy_pj: energy,
+                area_cells: area,
+                crossbars: 1,
+                ou_ops: cycles,
+                utilization: 0.5,
+            }),
+            cache_hit: false,
+        }
+    }
+
+    prop::check("pareto frontier invariants", prop::cases(64), |rng| {
+        let n = rng.range(1, 40);
+        let results: Vec<PointResult> = (0..n)
+            .map(|i| {
+                mk(
+                    i,
+                    (1 + rng.below(4)) as f64,
+                    (1 + rng.below(4)) as f64,
+                    (1 + rng.below(4)) as f64,
+                )
+            })
+            .collect();
+        let f = ParetoFrontier::from_results(&results);
+        assert!(!f.is_empty(), "a non-empty sweep has a frontier");
+        for (i, r) in results.iter().enumerate() {
+            let m = r.metrics().unwrap();
+            let dominated = results
+                .iter()
+                .any(|o| dominates(o.metrics().unwrap(), m));
+            if f.members.contains(&i) {
+                // soundness: members are dominated by nothing at all
+                assert!(!dominated, "frontier member {i} dominated");
+            } else {
+                // completeness: exclusion only ever means dominated —
+                // and a *frontier member* dominates it (dominance over
+                // these finite tuples is transitive and acyclic)
+                assert!(dominated, "non-member {i} not dominated");
+                let by_member = f.members.iter().any(|&j| {
+                    dominates(results[j].metrics().unwrap(), m)
+                });
+                assert!(by_member, "non-member {i} not dominated by the frontier");
+            }
+        }
+        // order invariance: a random permutation of the results yields
+        // the same multiset of frontier objective tuples
+        let mut perm: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut perm);
+        let permuted: Vec<PointResult> =
+            perm.iter().map(|&j| results[j].clone()).collect();
+        let f2 = ParetoFrontier::from_results(&permuted);
+        let tuples = |f: &ParetoFrontier, rs: &[PointResult]| {
+            let mut v: Vec<(u64, u64, u64)> = f
+                .members
+                .iter()
+                .map(|&i| {
+                    let m = rs[i].metrics().unwrap();
+                    (m.area_cells as u64, m.energy_pj as u64, m.cycles as u64)
+                })
+                .collect();
+            v.sort_unstable();
+            v
+        };
+        assert_eq!(
+            tuples(&f, &results),
+            tuples(&f2, &permuted),
+            "frontier must not depend on evaluation order"
+        );
+    });
+}
+
+/// Weighted selection always lands on the frontier and responds to the
+/// weights: an all-area objective picks (one of) the minimum-area
+/// frontier point(s), likewise for energy and cycles.
+#[test]
+fn prop_objective_selection_stays_on_frontier() {
+    use rram_pattern_accel::dse::pareto::ParetoFrontier;
+    use rram_pattern_accel::dse::{select_config, Objective, PointMetrics, PointResult, SweepPoint};
+
+    prop::check("objective selection on frontier", prop::cases(32), |rng| {
+        let n = rng.range(2, 24);
+        let results: Vec<PointResult> = (0..n)
+            .map(|i| PointResult {
+                index: i,
+                point: SweepPoint {
+                    scheme: "pattern".into(),
+                    ou_rows: 9,
+                    ou_cols: 8,
+                    xbar_rows: 512,
+                    xbar_cols: 512,
+                    n_patterns: 8,
+                    pruning: 0.86,
+                },
+                outcome: Ok(PointMetrics {
+                    cycles: (1 + rng.below(8)) as f64,
+                    energy_pj: (1 + rng.below(8)) as f64,
+                    area_cells: (1 + rng.below(8)) as f64,
+                    crossbars: 1,
+                    ou_ops: 1.0,
+                    utilization: 0.5,
+                }),
+                cache_hit: false,
+            })
+            .collect();
+        let f = ParetoFrontier::from_results(&results);
+        let axes: [(Objective, fn(&PointMetrics) -> f64); 3] = [
+            (Objective { w_area: 1.0, w_energy: 0.0, w_cycles: 0.0 }, |m| m.area_cells),
+            (Objective { w_area: 0.0, w_energy: 1.0, w_cycles: 0.0 }, |m| m.energy_pj),
+            (Objective { w_area: 0.0, w_energy: 0.0, w_cycles: 1.0 }, |m| m.cycles),
+        ];
+        for (obj, metric) in axes {
+            let t = select_config(&results, &f, &obj).expect("non-empty");
+            let best = f
+                .members
+                .iter()
+                .map(|&i| metric(results[i].metrics().unwrap()))
+                .fold(f64::INFINITY, f64::min);
+            assert_eq!(metric(&t.metrics), best, "single-axis objective");
+            assert!(f.members.iter().any(|&i| {
+                results[i].metrics().unwrap() == &t.metrics
+            }));
+        }
+    });
+}
