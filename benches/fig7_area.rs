@@ -1,49 +1,37 @@
 //! Bench F7: regenerate Fig. 7 (crossbar area efficiency) for all three
 //! datasets, with the k-means [15] and OU-sparse [12] comparison series
-//! (ablation A3), plus mapping timing.
+//! (ablation A3), plus pipeline timing.
+//!
+//! Since ISSUE-5 the rows come from the shared paper-artifact layer
+//! (`report::artifacts::compute_dataset_rows`) instead of a local copy
+//! of the scheme-sweep loop — the same code path the `rram-accel
+//! artifacts` pipeline and the tier-2 conformance suite exercise.
 //!
 //! Run: `cargo bench --bench fig7_area`
 
-use rram_pattern_accel::config::HardwareConfig;
-use rram_pattern_accel::mapping::{
-    kmeans::KmeansMapping, naive::NaiveMapping, ou_sparse::OuSparseMapping,
-    pattern::PatternMapping, MappingScheme,
+use rram_pattern_accel::report;
+use rram_pattern_accel::report::artifacts::{
+    compute_dataset_rows, ArtifactConfig, TraceMode,
 };
 use rram_pattern_accel::pruning::synthetic::ALL_PROFILES;
-use rram_pattern_accel::report;
 use rram_pattern_accel::util::json::Json;
 use rram_pattern_accel::util::threadpool;
-use rram_pattern_accel::xbar::CellGeometry;
-
-const PAPER_AREA: [f64; 3] = [4.67, 5.20, 4.16];
 
 fn main() {
-    let hw = HardwareConfig::default();
-    let geom = CellGeometry::from_hw(&hw);
-    let threads = threadpool::default_threads();
+    let cfg = ArtifactConfig {
+        seed: 42,
+        mode: TraceMode::Sampled(64),
+        threads: threadpool::default_threads(),
+    };
 
     println!("FIG. 7 — RRAM CROSSBAR AREA EFFICIENCY (y = crossbar count)\n");
     let mut rows = Vec::new();
-    for (pi, profile) in ALL_PROFILES.iter().enumerate() {
-        let nw = profile.generate(42);
+    for profile in ALL_PROFILES {
         let t0 = std::time::Instant::now();
-        let naive = NaiveMapping.map_network(&nw, &geom, threads);
-        let ours = PatternMapping.map_network(&nw, &geom, threads);
-        let km = KmeansMapping::default().map_network(&nw, &geom, threads);
-        let sre = OuSparseMapping.map_network(&nw, &geom, threads);
-        let map_time = t0.elapsed();
-        ours.validate().expect("invariants");
-
-        let row = report::Fig7Row {
-            dataset: profile.name.to_string(),
-            naive_crossbars: naive.total_crossbars(),
-            pattern_crossbars: ours.total_crossbars(),
-            kmeans_crossbars: km.total_crossbars(),
-            ou_sparse_crossbars: sre.total_crossbars(),
-            theoretical_best: 1.0 / (1.0 - profile.sparsity),
-            paper_efficiency: PAPER_AREA[pi],
-        };
-        println!("{}  [mapped 4 schemes in {map_time:?}]", row.line());
+        let ds = compute_dataset_rows(profile, &cfg);
+        let elapsed = t0.elapsed();
+        let row = &ds.fig7;
+        println!("{}  [computed in {elapsed:?}]", row.line());
 
         // reproduction bands: factor and ordering must match the paper
         assert!(

@@ -1,44 +1,42 @@
 //! Bench F8: regenerate Fig. 8 (normalized energy, ADC/DAC/RRAM
 //! breakdown) for all three datasets, plus ablation A1 (OU-size sweep).
 //!
+//! Since ISSUE-5 the per-dataset rows come from the shared
+//! paper-artifact layer (`report::artifacts::compute_dataset_rows`);
+//! the ablation sweep below stays a local loop because it varies the
+//! hardware geometry, which the paper artifacts pin to Table I.
+//!
 //! Run: `cargo bench --bench fig8_energy`
 
 use rram_pattern_accel::config::{HardwareConfig, SimConfig};
 use rram_pattern_accel::mapping::{naive::NaiveMapping, pattern::PatternMapping, MappingScheme};
 use rram_pattern_accel::pruning::synthetic::ALL_PROFILES;
 use rram_pattern_accel::report;
+use rram_pattern_accel::report::artifacts::{
+    compute_dataset_rows, ArtifactConfig, TraceMode,
+};
 use rram_pattern_accel::sim;
 use rram_pattern_accel::util::json::Json;
 use rram_pattern_accel::util::threadpool;
 use rram_pattern_accel::xbar::CellGeometry;
 
-const PAPER_ENERGY: [f64; 3] = [2.13, 2.15, 1.98];
-
 fn main() {
     let threads = threadpool::default_threads();
-    let sim_cfg = SimConfig::default();
+    let cfg = ArtifactConfig {
+        seed: 42,
+        mode: TraceMode::Sampled(64),
+        threads,
+    };
 
     println!("FIG. 8 — NORMALIZED ENERGY (baseline = 1.0)\n");
     let mut rows = Vec::new();
-    for (pi, profile) in ALL_PROFILES.iter().enumerate() {
-        let hw = HardwareConfig::default();
-        let geom = CellGeometry::from_hw(&hw);
-        let nw = profile.generate(42);
-        let spec = nw.spec.clone();
-        let naive = NaiveMapping.map_network(&nw, &geom, threads);
-        let ours = PatternMapping.map_network(&nw, &geom, threads);
-        let base = sim::simulate_network(&naive, &spec, &hw, &sim_cfg, threads);
-        let mine = sim::simulate_network(&ours, &spec, &hw, &sim_cfg, threads);
-        let row = report::Fig8Row {
-            dataset: profile.name.to_string(),
-            baseline: base.total_energy(),
-            ours: mine.total_energy(),
-            paper_efficiency: PAPER_ENERGY[pi],
-        };
+    for profile in ALL_PROFILES {
+        let ds = compute_dataset_rows(profile, &cfg);
+        let row = &ds.fig8;
         println!("{}", row.lines());
         // paper's key observation: ADC dominates both stacks
-        let be = base.total_energy();
-        let oe = mine.total_energy();
+        let be = &row.baseline;
+        let oe = &row.ours;
         assert!(be.adc_pj > be.dac_pj + be.rram_pj, "ADC must dominate baseline");
         assert!(oe.adc_pj > oe.dac_pj + oe.rram_pj, "ADC must dominate ours");
         // band: ~2x energy efficiency
@@ -55,6 +53,7 @@ fn main() {
 
     // --- Ablation A1: OU-size sweep (cifar10) ---
     println!("\nABLATION A1 — OU size sweep (cifar10, energy efficiency)\n");
+    let sim_cfg = SimConfig::default();
     let nw = ALL_PROFILES[0].generate(42);
     let spec = nw.spec.clone();
     let mut ablation = Vec::new();

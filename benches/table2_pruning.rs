@@ -1,37 +1,49 @@
-//! Bench T2: regenerate Table II (pattern pruning results) from the
-//! Table-II-calibrated synthetic networks + report generator timing.
+//! Bench T2: regenerate Table II (pattern pruning results + the §V-C
+//! speedup column) from the Table-II-calibrated synthetic networks,
+//! plus report generator timing.
+//!
+//! Since ISSUE-5 the rows come from the shared paper-artifact layer
+//! (`report::artifacts::compute_dataset_rows`) — the same code path
+//! the `rram-accel artifacts` pipeline and the tier-2 conformance
+//! suite exercise.
 //!
 //! Run: `cargo bench --bench table2_pruning`
 
 use rram_pattern_accel::pruning::synthetic::ALL_PROFILES;
 use rram_pattern_accel::report;
+use rram_pattern_accel::report::artifacts::{
+    compute_dataset_rows, ArtifactConfig, TraceMode,
+};
 use rram_pattern_accel::util::bench::{bench, BenchConfig};
-use rram_pattern_accel::util::json::{obj, Json};
+use rram_pattern_accel::util::json::Json;
+use rram_pattern_accel::util::threadpool;
 
 fn main() {
+    let cfg = ArtifactConfig {
+        seed: 42,
+        mode: TraceMode::Sampled(64),
+        threads: threadpool::default_threads(),
+    };
+
     println!("TABLE II — PATTERN PRUNING RESULTS (measured vs paper)\n");
     let mut rows = Vec::new();
     for profile in ALL_PROFILES {
-        let nw = profile.generate(42);
-        let stats = nw.stats();
-        println!("{}", report::table2_row(profile, &stats));
+        let ds = compute_dataset_rows(profile, &cfg);
+        let row = &ds.table2;
+        println!("{}", row.line());
         assert_eq!(
-            stats.patterns_per_layer,
+            row.patterns_per_layer,
             profile.patterns_per_layer.to_vec(),
             "{}: per-layer pattern counts must match Table II exactly",
             profile.name
         );
-        rows.push(obj(vec![
-            ("dataset", profile.name.into()),
-            ("sparsity", stats.sparsity.into()),
-            ("paper_sparsity", profile.sparsity.into()),
-            (
-                "patterns_per_layer",
-                rram_pattern_accel::util::json::arr_usize(&stats.patterns_per_layer),
-            ),
-            ("all_zero_ratio", stats.all_zero_kernel_ratio.into()),
-            ("paper_all_zero_ratio", profile.all_zero_ratio.into()),
-        ]));
+        assert!(
+            row.speedup() > 1.0,
+            "{}: pattern scheme must beat the naive baseline ({}x)",
+            profile.name,
+            row.speedup()
+        );
+        rows.push(row.to_json());
     }
     report::write_json("table2.json", &Json::Arr(rows)).expect("write");
     println!("\nwrote results/table2.json\n");

@@ -235,6 +235,23 @@ impl Default for SimConfig {
 }
 
 impl SimConfig {
+    /// Defaults with `n` sampled positions per layer (the analytic
+    /// VGG16 runs' historical mode).
+    pub fn sampled(n: usize) -> SimConfig {
+        SimConfig { sample_positions: Some(n), ..Default::default() }
+    }
+
+    /// Defaults in exact trace mode: every output position is traced,
+    /// no sampling scale is applied (`sample_positions: None`).
+    pub fn exact() -> SimConfig {
+        SimConfig { sample_positions: None, ..Default::default() }
+    }
+
+    /// `true` when this config traces every output position.
+    pub fn is_exact(&self) -> bool {
+        self.sample_positions.is_none()
+    }
+
     pub fn to_json(&self) -> Json {
         obj(vec![
             ("dead_channel_ratio", self.dead_channel_ratio.into()),
@@ -344,6 +361,19 @@ mod tests {
         // invalid geometries are rejected, not constructed
         assert!(base.with_dims(1024, 8, 256, 256).is_err(), "OU taller than xbar");
         assert!(base.with_dims(9, 3, 512, 512).is_err(), "misaligned ou_cols");
+    }
+
+    #[test]
+    fn sampled_and_exact_constructors() {
+        let s = SimConfig::sampled(48);
+        assert_eq!(s.sample_positions, Some(48));
+        assert!(!s.is_exact());
+        let e = SimConfig::exact();
+        assert_eq!(e.sample_positions, None);
+        assert!(e.is_exact());
+        // everything else stays on the calibrated defaults
+        assert_eq!(e.seed, SimConfig::default().seed);
+        assert_eq!(s.zero_blob_ratio, SimConfig::default().zero_blob_ratio);
     }
 
     #[test]

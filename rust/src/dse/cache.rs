@@ -21,8 +21,10 @@ use crate::util::json::{obj, Json};
 use super::{PointMetrics, SweepPoint, Workload};
 
 /// Bump when the evaluation semantics or the metrics layout change:
-/// old entries stop matching and are recomputed.
-const CACHE_FORMAT: usize = 1;
+/// old entries stop matching and are recomputed. v2: the identity
+/// gained the trace mode (`Workload::exact`) and the per-point
+/// simulation-policy axes (zero-detection, block-switch cost).
+const CACHE_FORMAT: usize = 2;
 
 /// Handle to one cache directory.
 #[derive(Debug, Clone)]
@@ -47,15 +49,19 @@ impl ResultCache {
 
     /// `(hash, workload identity, point identity, environment identity)`
     /// of one evaluation. The environment identity is the *effective*
-    /// `SimConfig` the runner evaluates under plus the base
+    /// `SimConfig` the runner evaluates under — which carries the trace
+    /// mode (sampled positions vs exact `null`) and the point's
+    /// zero-detection / block-switch axes — plus the base
     /// `HardwareConfig` the point's geometry is grafted onto — every
     /// default included — so changing any simulation or hardware
     /// default invalidates old entries without anyone remembering to
-    /// bump `CACHE_FORMAT`.
+    /// bump `CACHE_FORMAT`. A sampled-mode entry can therefore never be
+    /// served for an exact-mode point (or vice versa): their effective
+    /// `sample_positions` differ, and the workload JSON differs too.
     fn identity(w: &Workload, p: &SweepPoint) -> (u64, String, String, String) {
         let wj = w.to_json().to_string_compact();
         let pj = p.to_json().to_string_compact();
-        let sim = super::runner::effective_sim_config(w)
+        let sim = super::runner::effective_sim_config(w, p)
             .to_json()
             .to_string_compact();
         let base = crate::config::HardwareConfig::default()
@@ -131,6 +137,8 @@ mod tests {
             xbar_cols: 512,
             n_patterns: 8,
             pruning: 0.86,
+            zero_detection: true,
+            block_switch_cycles: 2.0,
         }
     }
 
@@ -170,6 +178,39 @@ mod tests {
         // different workload seed: miss
         let w2 = Workload::small(8);
         assert!(c.load(&w2, &p).is_none());
+        let _ = std::fs::remove_dir_all(c.dir());
+    }
+
+    /// Regression (ISSUE-5): a sampled-mode cache entry must never be
+    /// served for an exact-mode point, and the simulation-policy axes
+    /// are part of the identity too.
+    #[test]
+    fn sampled_entry_never_serves_exact_or_other_sim_axes() {
+        let c = temp_cache("trace-mode");
+        let w_sampled = Workload::small(7);
+        assert!(!w_sampled.exact, "small workload defaults to sampled");
+        let p = point();
+        c.store(&w_sampled, &p, &metrics()).unwrap();
+        assert!(c.load(&w_sampled, &p).is_some(), "own mode hits");
+
+        // exact mode: same workload otherwise, must miss
+        let w_exact = Workload { exact: true, ..w_sampled.clone() };
+        assert!(
+            c.load(&w_exact, &p).is_none(),
+            "sampled entry served for an exact-mode point"
+        );
+        // and the exact entry lands in its own slot, leaving the
+        // sampled one intact
+        c.store(&w_exact, &p, &metrics()).unwrap();
+        assert!(c.load(&w_exact, &p).is_some());
+        assert!(c.load(&w_sampled, &p).is_some());
+
+        // zero-detection axis: miss
+        let p_zd = SweepPoint { zero_detection: false, ..point() };
+        assert!(c.load(&w_sampled, &p_zd).is_none());
+        // block-switch axis: miss
+        let p_bs = SweepPoint { block_switch_cycles: 0.0, ..point() };
+        assert!(c.load(&w_sampled, &p_bs).is_none());
         let _ = std::fs::remove_dir_all(c.dir());
     }
 

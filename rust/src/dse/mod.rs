@@ -47,8 +47,8 @@ use crate::config::HardwareConfig;
 use crate::nn::{ConvLayer, NetworkSpec};
 use crate::util::json::{obj, Json};
 
-/// One grid point of the sweep: a full accelerator + compression
-/// configuration.
+/// One grid point of the sweep: a full accelerator + compression +
+/// simulation-policy configuration.
 #[derive(Debug, Clone, PartialEq)]
 pub struct SweepPoint {
     /// Mapping scheme name (resolved via
@@ -62,13 +62,19 @@ pub struct SweepPoint {
     pub n_patterns: usize,
     /// Target weight sparsity of the pattern pruning (Table II knob).
     pub pruning: f64,
+    /// `SimConfig::zero_detection` for this point (Input Preprocessing
+    /// Unit on/off — applies to IPU schemes only, as in the simulator).
+    pub zero_detection: bool,
+    /// `SimConfig::block_switch_cycles` for this point (§IV-C index
+    /// decode overhead per pattern-block crossing).
+    pub block_switch_cycles: f64,
 }
 
 impl SweepPoint {
-    /// Short human label, e.g. `pattern ou9x8 xb512 p8 s0.86`.
+    /// Short human label, e.g. `pattern ou9x8 xb512 p8 s0.86 zd1 bs2`.
     pub fn label(&self) -> String {
         format!(
-            "{} ou{}x{} xb{}x{} p{} s{:.2}",
+            "{} ou{}x{} xb{}x{} p{} s{:.2} zd{} bs{}",
             self.scheme,
             self.ou_rows,
             self.ou_cols,
@@ -76,6 +82,8 @@ impl SweepPoint {
             self.xbar_cols,
             self.n_patterns,
             self.pruning,
+            self.zero_detection as u8,
+            self.block_switch_cycles,
         )
     }
 
@@ -92,7 +100,9 @@ impl SweepPoint {
     }
 
     /// Canonical JSON (BTreeMap-ordered keys): the cache identity and
-    /// the frontier artifact's point encoding.
+    /// the frontier artifact's point encoding. The simulation-policy
+    /// axes are part of it, so points that differ only in
+    /// zero-detection or block-switch cost never share a cache entry.
     pub fn to_json(&self) -> Json {
         obj(vec![
             ("scheme", self.scheme.as_str().into()),
@@ -102,6 +112,8 @@ impl SweepPoint {
             ("xbar_cols", self.xbar_cols.into()),
             ("n_patterns", self.n_patterns.into()),
             ("pruning", self.pruning.into()),
+            ("zero_detection", self.zero_detection.into()),
+            ("block_switch_cycles", self.block_switch_cycles.into()),
         ])
     }
 }
@@ -116,8 +128,14 @@ pub struct Workload {
     pub layers: Vec<ConvLayer>,
     /// Images per simulated batch (all metrics are batch totals).
     pub n_images: usize,
-    /// Sampled positions per layer (`SimConfig::sample_positions`).
+    /// Sampled positions per layer (`SimConfig::sample_positions`),
+    /// ignored in exact mode.
     pub samples: usize,
+    /// Exact trace mode: every output position is traced
+    /// (`SimConfig::sample_positions = None`) instead of `samples`
+    /// sampled ones. Part of the cache identity — sampled and exact
+    /// evaluations of the same point never collide.
+    pub exact: bool,
     /// All-zero-kernel ratio fed to the synthetic generator.
     pub zero_ratio: f64,
     /// Seed for weight synthesis and activation traces.
@@ -137,6 +155,7 @@ impl Workload {
             ],
             n_images: 2,
             samples: 32,
+            exact: false,
             zero_ratio: 0.3,
             seed,
         }
@@ -166,6 +185,7 @@ impl Workload {
             ),
             ("n_images", self.n_images.into()),
             ("samples", self.samples.into()),
+            ("exact", self.exact.into()),
             ("zero_ratio", self.zero_ratio.into()),
             ("seed", (self.seed as usize).into()),
         ])
@@ -187,6 +207,12 @@ pub struct SweepSpec {
     pub patterns: Vec<usize>,
     /// Pruning rates (target sparsities).
     pub pruning: Vec<f64>,
+    /// `SimConfig::zero_detection` axis (singleton `[true]` in the
+    /// named grids; widen via [`SweepSpec::with_sim_axes`] or the CLI).
+    pub zero_detection: Vec<bool>,
+    /// `SimConfig::block_switch_cycles` axis (singleton `[2.0]` — the
+    /// simulator default — in the named grids).
+    pub block_switch: Vec<f64>,
     pub workload: Workload,
 }
 
@@ -200,6 +226,8 @@ impl SweepSpec {
             xbar: vec![(256, 256), (512, 512)],
             patterns: vec![4, 8],
             pruning: vec![0.70, 0.86],
+            zero_detection: vec![true],
+            block_switch: vec![2.0],
             workload: Workload::small(seed),
         }
     }
@@ -219,8 +247,23 @@ impl SweepSpec {
             xbar: vec![(128, 128), (256, 256), (512, 512)],
             patterns: vec![2, 4, 8, 12],
             pruning: vec![0.60, 0.70, 0.80, 0.86, 0.92],
+            zero_detection: vec![true],
+            block_switch: vec![2.0],
             workload: Workload::small(seed),
         }
+    }
+
+    /// Widen the simulation-policy axes: zero-detection on *and* off,
+    /// and the given block-switch costs (empty slices keep the current
+    /// axis). Returns `self` for builder-style use.
+    pub fn with_sim_axes(mut self, zero_detection: &[bool], block_switch: &[f64]) -> SweepSpec {
+        if !zero_detection.is_empty() {
+            self.zero_detection = zero_detection.to_vec();
+        }
+        if !block_switch.is_empty() {
+            self.block_switch = block_switch.to_vec();
+        }
+        self
     }
 
     pub fn by_name(name: &str, seed: u64) -> Option<SweepSpec> {
@@ -232,24 +275,48 @@ impl SweepSpec {
     }
 
     /// Expand the axes into the full grid, scheme-major then OU, xbar,
-    /// pattern count, pruning rate innermost. The order is part of the
-    /// determinism contract (frontier members are reported by index).
+    /// pattern count, pruning rate, zero-detection, block-switch cost
+    /// innermost. The order is part of the determinism contract
+    /// (frontier members are reported by index); the singleton
+    /// simulation-policy defaults keep the named grids' historical
+    /// order and point counts. Schemes without an Input Preprocessing
+    /// Unit ([`crate::sim::scheme_has_ipu`]) ignore the
+    /// simulation-policy knobs entirely, so their points keep only the
+    /// leading axis values — expanding them would evaluate bit-identical
+    /// duplicates and report duplicate frontier members.
     pub fn expand(&self) -> Vec<SweepPoint> {
         let mut points = Vec::new();
         for scheme in &self.schemes {
+            let ipu = crate::sim::scheme_has_ipu(scheme);
+            let zd_axis: &[bool] = if ipu {
+                &self.zero_detection
+            } else {
+                &self.zero_detection[..self.zero_detection.len().min(1)]
+            };
+            let bs_axis: &[f64] = if ipu {
+                &self.block_switch
+            } else {
+                &self.block_switch[..self.block_switch.len().min(1)]
+            };
             for &(ou_rows, ou_cols) in &self.ou {
                 for &(xbar_rows, xbar_cols) in &self.xbar {
                     for &n_patterns in &self.patterns {
                         for &pruning in &self.pruning {
-                            points.push(SweepPoint {
-                                scheme: scheme.clone(),
-                                ou_rows,
-                                ou_cols,
-                                xbar_rows,
-                                xbar_cols,
-                                n_patterns,
-                                pruning,
-                            });
+                            for &zero_detection in zd_axis {
+                                for &block_switch_cycles in bs_axis {
+                                    points.push(SweepPoint {
+                                        scheme: scheme.clone(),
+                                        ou_rows,
+                                        ou_cols,
+                                        xbar_rows,
+                                        xbar_cols,
+                                        n_patterns,
+                                        pruning,
+                                        zero_detection,
+                                        block_switch_cycles,
+                                    });
+                                }
+                            }
                         }
                     }
                 }
@@ -282,6 +349,14 @@ impl SweepSpec {
             (
                 "pruning",
                 Json::Arr(self.pruning.iter().map(|p| (*p).into()).collect()),
+            ),
+            (
+                "zero_detection",
+                Json::Arr(self.zero_detection.iter().map(|z| (*z).into()).collect()),
+            ),
+            (
+                "block_switch",
+                Json::Arr(self.block_switch.iter().map(|b| (*b).into()).collect()),
             ),
             ("workload", self.workload.to_json()),
         ])
@@ -361,16 +436,60 @@ mod tests {
     fn small_grid_expands_in_stable_order() {
         let spec = SweepSpec::small(42);
         let pts = spec.expand();
-        assert_eq!(pts.len(), 2 * 3 * 2 * 2 * 2, "48-point small grid");
-        // innermost axis varies fastest
+        assert_eq!(
+            pts.len(),
+            2 * 3 * 2 * 2 * 2 * 1 * 1,
+            "48-point small grid (singleton sim-policy axes)"
+        );
+        // innermost multi-value axis varies fastest
         assert_eq!(pts[0].pruning, 0.70);
         assert_eq!(pts[1].pruning, 0.86);
         assert_eq!(pts[0].n_patterns, pts[1].n_patterns);
+        // the named grids pin the simulator defaults on every point
+        assert!(pts.iter().all(|p| p.zero_detection));
+        assert!(pts.iter().all(|p| p.block_switch_cycles == 2.0));
         // scheme-major
         assert!(pts[..24].iter().all(|p| p.scheme == "naive"));
         assert!(pts[24..].iter().all(|p| p.scheme == "pattern"));
         // expansion is deterministic
         assert_eq!(pts, spec.expand());
+    }
+
+    #[test]
+    fn sim_policy_axes_expand_innermost() {
+        let spec = SweepSpec::small(42)
+            .with_sim_axes(&[true, false], &[0.0, 2.0]);
+        let pts = spec.expand();
+        // naive has no IPU and ignores both knobs: its 24 base points
+        // keep the leading axis values; pattern's 24 expand 2×2
+        assert_eq!(pts.len(), 24 + 24 * 4, "IPU-only sim-axis expansion");
+        let naive: Vec<&SweepPoint> =
+            pts.iter().filter(|p| p.scheme == "naive").collect();
+        assert_eq!(naive.len(), 24);
+        assert!(naive
+            .iter()
+            .all(|p| p.zero_detection && p.block_switch_cycles == 0.0));
+        let pat: Vec<&SweepPoint> =
+            pts.iter().filter(|p| p.scheme == "pattern").collect();
+        assert_eq!(pat.len(), 96);
+        // block-switch is innermost, zero-detection just outside it
+        assert!(pat[0].zero_detection && pat[0].block_switch_cycles == 0.0);
+        assert!(pat[1].zero_detection && pat[1].block_switch_cycles == 2.0);
+        assert!(!pat[2].zero_detection && pat[2].block_switch_cycles == 0.0);
+        assert!(!pat[3].zero_detection && pat[3].block_switch_cycles == 2.0);
+        assert_eq!(pat[0].pruning, pat[3].pruning);
+        assert_ne!(pat[0].to_json(), pat[1].to_json(), "axes reach identity");
+        // no two expanded points share an identity — the collapse
+        // leaves no duplicate evaluations behind
+        let ids: Vec<String> =
+            pts.iter().map(|p| p.to_json().to_string_compact()).collect();
+        let mut dedup = ids.clone();
+        dedup.sort();
+        dedup.dedup();
+        assert_eq!(dedup.len(), ids.len(), "duplicate grid points");
+        // empty slices keep the existing axes
+        let kept = SweepSpec::small(42).with_sim_axes(&[], &[]);
+        assert_eq!(kept.expand().len(), 48);
     }
 
     #[test]
@@ -383,6 +502,8 @@ mod tests {
             xbar_cols: 256,
             n_patterns: 4,
             pruning: 0.8,
+            zero_detection: true,
+            block_switch_cycles: 2.0,
         };
         let hw = p.hardware().expect("valid point");
         assert_eq!(hw.ou_rows, 9);
@@ -404,12 +525,17 @@ mod tests {
             xbar_cols: 512,
             n_patterns: 8,
             pruning: 0.86,
+            zero_detection: true,
+            block_switch_cycles: 2.0,
         };
         let s = p.to_json().to_string_compact();
         // BTreeMap ordering: stable bytes for the cache key
         assert_eq!(s, p.to_json().to_string_compact());
         assert!(s.contains("\"scheme\":\"pattern\""), "{s}");
+        assert!(s.contains("\"zero_detection\":true"), "{s}");
+        assert!(s.contains("\"block_switch_cycles\":2"), "{s}");
         assert!(p.label().contains("ou9x8"), "{}", p.label());
+        assert!(p.label().contains("zd1"), "{}", p.label());
     }
 
     #[test]

@@ -325,12 +325,14 @@ impl AxisSensitivity {
 /// Group the valid results along each sweep axis, in first-appearance
 /// order (deterministic: results are in grid order).
 pub fn sensitivity(results: &[PointResult]) -> Vec<AxisSensitivity> {
-    let axes: [(&str, fn(&super::SweepPoint) -> String); 5] = [
+    let axes: [(&str, fn(&super::SweepPoint) -> String); 7] = [
         ("scheme", |p| p.scheme.clone()),
         ("ou", |p| format!("{}x{}", p.ou_rows, p.ou_cols)),
         ("xbar", |p| format!("{}x{}", p.xbar_rows, p.xbar_cols)),
         ("patterns", |p| p.n_patterns.to_string()),
         ("pruning", |p| format!("{:.2}", p.pruning)),
+        ("zero_detection", |p| p.zero_detection.to_string()),
+        ("block_switch", |p| p.block_switch_cycles.to_string()),
     ];
     axes.iter()
         .map(|(axis, labeler)| {
@@ -387,6 +389,8 @@ mod tests {
             xbar_cols: 512,
             n_patterns: 8,
             pruning: 0.86,
+            zero_detection: true,
+            block_switch_cycles: 2.0,
         }
     }
 
@@ -487,7 +491,7 @@ mod tests {
         b.point.scheme = "naive".into();
         let c = result(2, 1.0, 1.0, 40.0); // pattern
         let axes = sensitivity(&[a, b, c]);
-        assert_eq!(axes.len(), 5);
+        assert_eq!(axes.len(), 7);
         let scheme = &axes[0];
         assert_eq!(scheme.axis, "scheme");
         assert_eq!(scheme.groups.len(), 2);

@@ -18,14 +18,20 @@ use super::{
     ResultCache, SweepPoint, SweepSpec, TunedConfig, Workload,
 };
 
-/// The exact [`SimConfig`] every sweep evaluation runs under. Also part
-/// of the cache identity ([`super::ResultCache`]), so a change to any
-/// simulation default invalidates cached entries instead of silently
-/// serving metrics a fresh evaluation would no longer reproduce.
-pub fn effective_sim_config(w: &Workload) -> SimConfig {
+/// The exact [`SimConfig`] one sweep evaluation runs under: the
+/// workload picks the trace mode (sampled `w.samples` positions, or
+/// every position when `w.exact`) and the point contributes its
+/// simulation-policy axes (zero-detection, block-switch cost). Also
+/// part of the cache identity ([`super::ResultCache`]), so a change to
+/// any simulation default — or a different trace mode / policy axis —
+/// invalidates cached entries instead of silently serving metrics a
+/// fresh evaluation would no longer reproduce.
+pub fn effective_sim_config(w: &Workload, p: &SweepPoint) -> SimConfig {
     SimConfig {
-        sample_positions: Some(w.samples),
+        sample_positions: if w.exact { None } else { Some(w.samples) },
         seed: w.seed,
+        zero_detection: p.zero_detection,
+        block_switch_cycles: p.block_switch_cycles,
         ..Default::default()
     }
 }
@@ -66,7 +72,7 @@ pub fn evaluate_point(w: &Workload, p: &SweepPoint) -> Result<PointMetrics, Stri
     // Inner work is single-threaded: the sweep parallelizes across
     // points, and nesting pools would only add scheduling noise.
     let mapped = scheme.map_network(&nwts, &geom, 1);
-    let sim_cfg = effective_sim_config(w);
+    let sim_cfg = effective_sim_config(w, p);
     let batch = sim::simulate_network_batch(
         &mapped,
         &spec,
@@ -210,6 +216,8 @@ mod tests {
             xbar: vec![(256, 256)],
             patterns: vec![4],
             pruning: vec![0.8],
+            zero_detection: vec![true],
+            block_switch: vec![2.0],
             workload: Workload {
                 name: "t".into(),
                 layers: vec![crate::nn::ConvLayer {
@@ -220,6 +228,7 @@ mod tests {
                 }],
                 n_images: 2,
                 samples: 8,
+                exact: false,
                 zero_ratio: 0.25,
                 seed: 11,
             },
@@ -270,6 +279,39 @@ mod tests {
     }
 
     #[test]
+    fn sim_policy_axes_and_exact_mode_reach_the_evaluation() {
+        let spec = tiny_spec();
+        let w = &spec.workload;
+        let pts = spec.expand();
+        assert_eq!(pts[1].scheme, "pattern");
+        let on = evaluate_point(w, &pts[1]).unwrap();
+
+        // Exact mode ignores `samples` entirely: the trace covers every
+        // output position, so two exact workloads differing only in the
+        // sample count evaluate bit-identically.
+        let mut we = w.clone();
+        we.exact = true;
+        let exact = evaluate_point(&we, &pts[1]).unwrap();
+        let mut we3 = we.clone();
+        we3.samples = 3;
+        assert_eq!(exact, evaluate_point(&we3, &pts[1]).unwrap());
+        assert!(exact.ou_ops > 0.0 && exact.cycles > 0.0);
+
+        // Zero-detection off can only execute more OU operations.
+        let mut p_off = pts[1].clone();
+        p_off.zero_detection = false;
+        let off = evaluate_point(w, &p_off).unwrap();
+        assert!(off.ou_ops >= on.ou_ops, "{} < {}", off.ou_ops, on.ou_ops);
+
+        // Block-switch cost changes cycles only, never the OU schedule.
+        let mut p_bs = pts[1].clone();
+        p_bs.block_switch_cycles = 50.0;
+        let bs = evaluate_point(w, &p_bs).unwrap();
+        assert_eq!(bs.ou_ops, on.ou_ops);
+        assert!(bs.cycles >= on.cycles);
+    }
+
+    #[test]
     fn unknown_scheme_is_a_skip_not_a_panic() {
         let w = Workload::small(3);
         let p = SweepPoint {
@@ -280,6 +322,8 @@ mod tests {
             xbar_cols: 512,
             n_patterns: 4,
             pruning: 0.8,
+            zero_detection: true,
+            block_switch_cycles: 2.0,
         };
         let e = evaluate_point(&w, &p).unwrap_err();
         assert!(e.contains("unknown mapping scheme"), "{e}");

@@ -9,17 +9,25 @@
 //!               totals, bit-exact with looped per-image runs;
 //!               `--shards N` plans + checks cost-balanced sharding)
 //!   dse       — design-space exploration: parallel sweep over
-//!               mapping/OU/crossbar/pattern/pruning configs, Pareto
-//!               frontier as table + results/<out>.{json,csv}, cached
-//!               under results/dse_cache/
+//!               mapping/OU/crossbar/pattern/pruning configs (plus the
+//!               `--zd`/`--block-switch` simulation-policy axes and
+//!               `--exact` trace mode), Pareto frontier as table +
+//!               results/<out>.{json,csv}, cached under
+//!               results/dse_cache/
 //!   serve     — start the sharded serving coordinator over the PJRT
 //!               artifact (`--workers N --balance cost|rr`, per-request
 //!               cost estimates calibrated from exact traces,
 //!               deadlines, per-worker retry/requeue/quarantine, alarm;
-//!               `--auto-tune` builds the pool config from the DSE
-//!               frontier winner)
+//!               `--auto-tune [--tune-exact]` builds the pool config
+//!               from the DSE frontier winner)
 //!   e2e       — run the SmallCNN end-to-end check (golden + accuracy)
-//!   report    — regenerate every paper table/figure into results/
+//!   report    — print every paper table/figure (sampled mode)
+//!   artifacts — run every paper figure in sampled AND exact trace mode
+//!               over the synthetic VGG16 datasets, emit versioned
+//!               results/paper/{fig7,fig8,table2}_{sampled,exact}.json
+//!               plus the machine-readable sampled-vs-exact
+//!               delta_report.json (tolerance-banded; nonzero exit on
+//!               an out-of-band delta)
 
 use std::path::Path;
 use std::time::Duration;
@@ -32,12 +40,18 @@ use rram_pattern_accel::dse::{
     self, Objective, ResultCache, SweepRunner, SweepSpec,
 };
 use rram_pattern_accel::mapping::{
-    index, kmeans::KmeansMapping, naive::NaiveMapping, ou_sparse::OuSparseMapping,
-    pattern::PatternMapping, scheme_by_name, MappingScheme,
+    index, naive::NaiveMapping, pattern::PatternMapping, scheme_by_name,
+    MappingScheme,
 };
 use rram_pattern_accel::nn::{NetworkSpec, Tensor};
 use rram_pattern_accel::pruning::synthetic::{DatasetProfile, ALL_PROFILES};
-use rram_pattern_accel::report;
+use rram_pattern_accel::report::{
+    self,
+    artifacts::{
+        self, ArtifactCache, ArtifactConfig, DeltaTolerances, PaperArtifacts,
+        TraceMode,
+    },
+};
 use rram_pattern_accel::runtime::{Engine, EngineFactory};
 use rram_pattern_accel::sim::{self, smallcnn::SmallCnn, ShardPolicy};
 use rram_pattern_accel::util::cli::Args;
@@ -56,10 +70,11 @@ fn main() {
         "serve" => cmd_serve(rest),
         "e2e" => cmd_e2e(rest),
         "report" => cmd_report(rest),
+        "artifacts" => cmd_artifacts(rest),
         _ => {
             eprintln!(
-                "usage: rram-accel <map|simulate|batch-sim|dse|serve|e2e|report> \
-                 [options]\n\
+                "usage: rram-accel <map|simulate|batch-sim|dse|serve|e2e|\
+                 report|artifacts> [options]\n\
                  run a subcommand with --help for its options"
             );
             if sub == "help" { 0 } else { 2 }
@@ -341,6 +356,9 @@ fn cmd_dse(rest: Vec<String>) -> i32 {
     .opt("weights", "1,1,1", "selection weights: area,energy,cycles")
     .opt("cache-dir", "results/dse_cache", "on-disk result cache directory")
     .opt("out", "dse_frontier", "artifact basename under results/")
+    .opt("zd", "on", "zero-detection axis: on|off|both")
+    .opt("block-switch", "2", "block-switch cycle cost axis (comma-separated)")
+    .flag("exact", "exact traces: cost every output position (no sampling)")
     .flag("no-cache", "evaluate every point fresh")
     .flag("sensitivity", "print the per-axis sensitivity summary")
     .parse(rest)
@@ -349,10 +367,36 @@ fn cmd_dse(rest: Vec<String>) -> i32 {
         Err(e) => return usage(e),
     };
     let seed = args.get_u64("seed").unwrap_or(42);
-    let spec = match SweepSpec::by_name(args.get("grid"), seed) {
+    let mut spec = match SweepSpec::by_name(args.get("grid"), seed) {
         Some(s) => s,
         None => return usage(format!("unknown grid {}", args.get("grid"))),
     };
+    if args.get_flag("exact") {
+        spec.workload.exact = true;
+    }
+    let zd_axis: Vec<bool> = match args.get("zd") {
+        "on" => vec![true],
+        "off" => vec![false],
+        "both" => vec![true, false],
+        other => {
+            return usage(format!(
+                "unknown zero-detection axis {other} (use on|off|both)"
+            ))
+        }
+    };
+    let mut bs_axis = Vec::new();
+    for part in args.get("block-switch").split(',') {
+        match part.trim().parse::<f64>() {
+            Ok(v) if v.is_finite() && v >= 0.0 => bs_axis.push(v),
+            _ => {
+                return usage(format!(
+                    "bad block-switch value '{}'",
+                    part.trim()
+                ))
+            }
+        }
+    }
+    let spec = spec.with_sim_axes(&zd_axis, &bs_axis);
     let obj = match Objective::parse(args.get("weights")) {
         Ok(o) => o,
         Err(e) => return usage(e),
@@ -364,11 +408,12 @@ fn cmd_dse(rest: Vec<String>) -> i32 {
         Some(ResultCache::new(args.get("cache-dir").to_string()))
     };
     println!(
-        "sweeping '{}' grid: {} points on {} threads ({})",
+        "sweeping '{}' grid: {} points on {} threads ({}, {} traces)",
         spec.grid,
         spec.expand().len(),
         threads,
         if cache.is_some() { "cached" } else { "uncached" },
+        if spec.workload.exact { "exact" } else { "sampled" },
     );
     let outcome = SweepRunner { spec, threads, cache }.run();
     println!("{}", outcome.summary_line());
@@ -451,6 +496,10 @@ fn cmd_serve(rest: Vec<String>) -> i32 {
         .opt("tune-grid", "small", "auto-tune sweep grid: small|medium")
         .opt("tune-seed", "42", "auto-tune workload seed (match `dse --seed`)")
         .opt("tune-weights", "1,1,1", "auto-tune weights: area,energy,cycles")
+        .flag(
+            "tune-exact",
+            "auto-tune from exact traces (every position; match `dse --exact`)",
+        )
         .flag("json", "write results/serve_workers.json")
         .parse(rest)
     {
@@ -493,12 +542,15 @@ fn cmd_serve(rest: Vec<String>) -> i32 {
             Err(e) => return usage(e),
         };
         let tune_seed = args.get_u64("tune-seed").unwrap_or(42);
-        let spec = match SweepSpec::by_name(args.get("tune-grid"), tune_seed) {
+        let mut spec = match SweepSpec::by_name(args.get("tune-grid"), tune_seed) {
             Some(s) => s,
             None => {
                 return usage(format!("unknown tune grid {}", args.get("tune-grid")))
             }
         };
+        if args.get_flag("tune-exact") {
+            spec.workload.exact = true;
+        }
         let outcome = SweepRunner {
             spec,
             threads: threadpool::default_threads(),
@@ -766,7 +818,7 @@ fn run_e2e(dir: &Path, n_images: usize) -> Result<(), String> {
 }
 
 fn cmd_report(rest: Vec<String>) -> i32 {
-    let args = match Args::new("regenerate every paper table & figure")
+    let args = match Args::new("print every paper table & figure (sampled mode)")
         .opt("seed", "42", "synthetic weight seed")
         .opt("samples", "64", "sampled positions per layer")
         .opt("threads", "0", "worker threads (0 = auto)")
@@ -776,52 +828,139 @@ fn cmd_report(rest: Vec<String>) -> i32 {
         Err(e) => return usage(e),
     };
     let threads = auto_threads(&args);
-    let seed = args.get_usize("seed").unwrap_or(42) as u64;
-    let samples = args.get_usize("samples").unwrap_or(64);
-    let hw = HardwareConfig::default();
-    let geom = CellGeometry::from_hw(&hw);
-    let sim_cfg = SimConfig {
-        sample_positions: Some(samples),
-        ..Default::default()
-    };
+    let seed = args.get_u64("seed").unwrap_or(42);
+    let samples = args.get_usize("samples").unwrap_or(64).max(1);
 
-    println!("{}", report::table1(&hw));
-    let paper_area = [4.67, 5.20, 4.16];
-    let paper_energy = [2.13, 2.15, 1.98];
-    let paper_speed = [1.35, 1.15, 1.17];
-    for (pi, profile) in ALL_PROFILES.iter().enumerate() {
-        let nw = profile.generate(seed);
-        let spec: NetworkSpec = nw.spec.clone();
-        let stats = nw.stats();
-        println!("{}", report::table2_row(profile, &stats));
-        let naive = NaiveMapping.map_network(&nw, &geom, threads);
-        let ours = PatternMapping.map_network(&nw, &geom, threads);
-        let km = KmeansMapping::default().map_network(&nw, &geom, threads);
-        let sre = OuSparseMapping.map_network(&nw, &geom, threads);
-        let f7 = report::Fig7Row {
-            dataset: profile.name.to_string(),
-            naive_crossbars: naive.total_crossbars(),
-            pattern_crossbars: ours.total_crossbars(),
-            kmeans_crossbars: km.total_crossbars(),
-            ou_sparse_crossbars: sre.total_crossbars(),
-            theoretical_best: 1.0 / (1.0 - profile.sparsity),
-            paper_efficiency: paper_area[pi],
-        };
-        println!("{}", f7.line());
-        let base = sim::simulate_network(&naive, &spec, &hw, &sim_cfg, threads);
-        let mine = sim::simulate_network(&ours, &spec, &hw, &sim_cfg, threads);
-        let f8 = report::Fig8Row {
-            dataset: profile.name.to_string(),
-            baseline: base.total_energy(),
-            ours: mine.total_energy(),
-            paper_efficiency: paper_energy[pi],
-        };
-        println!("{}", f8.lines());
-        let cmp = sim::Comparison { baseline: base, ours: mine };
-        println!("{}", report::speedup_line(profile.name, &cmp, paper_speed[pi]));
+    println!("{}", report::table1(&HardwareConfig::default()));
+    let cfg = ArtifactConfig { seed, mode: TraceMode::Sampled(samples), threads };
+    for profile in ALL_PROFILES {
+        let rows = artifacts::compute_dataset_rows(profile, &cfg);
+        println!("{}", rows.table2.line());
+        println!("{}", rows.fig7.line());
+        println!("{}", rows.fig8.lines());
+        println!(
+            "{}",
+            report::speedup_line(
+                profile.name,
+                &rows.comparison,
+                rows.table2.paper_speedup
+            )
+        );
         println!();
     }
     0
+}
+
+fn cmd_artifacts(rest: Vec<String>) -> i32 {
+    let args = match Args::new(
+        "run every paper figure in sampled AND exact trace mode and emit \
+         the versioned artifacts + sampled-vs-exact delta report",
+    )
+    .opt("datasets", "all", "all, or a comma list of cifar10|cifar100|imagenet")
+    .opt("seed", "42", "synthetic weight seed")
+    .opt("samples", "64", "sampled positions per layer (sampled mode)")
+    .opt(
+        "threads",
+        "0",
+        "worker threads (0 = auto; artifacts are thread-invariant)",
+    )
+    .opt("out-dir", "paper", "output directory under results/")
+    .opt("cache-dir", "results/paper_cache", "on-disk artifact cache directory")
+    .flag("no-cache", "compute every dataset fresh")
+    .parse(rest)
+    {
+        Ok(a) => a,
+        Err(e) => return usage(e),
+    };
+    let profiles: Vec<&DatasetProfile> = if args.get("datasets") == "all" {
+        ALL_PROFILES.to_vec()
+    } else {
+        let mut v = Vec::new();
+        for name in args.get("datasets").split(',') {
+            match DatasetProfile::by_name(name.trim()) {
+                Some(p) => v.push(p),
+                None => {
+                    return usage(format!("unknown dataset {}", name.trim()))
+                }
+            }
+        }
+        v
+    };
+    if profiles.is_empty() {
+        return usage("no datasets selected".to_string());
+    }
+    let seed = args.get_u64("seed").unwrap_or(42);
+    let samples = args.get_usize("samples").unwrap_or(64).max(1);
+    let threads = auto_threads(&args);
+    let cache = if args.get_flag("no-cache") {
+        None
+    } else {
+        Some(ArtifactCache::new(args.get("cache-dir").to_string()))
+    };
+    let out_dir = args.get("out-dir").to_string();
+
+    // The artifacts are the command's contract: a failed write or an
+    // out-of-band delta is a failed run, not a warning.
+    let mut exit = 0;
+    let mut runs: Vec<PaperArtifacts> = Vec::with_capacity(2);
+    for mode in [TraceMode::Sampled(samples), TraceMode::Exact] {
+        let cfg = ArtifactConfig { seed, mode, threads };
+        let arts = PaperArtifacts::generate(&profiles, &cfg, cache.as_ref());
+        println!(
+            "[artifacts] {} mode: {} datasets ({} from cache)",
+            mode.name(),
+            arts.datasets.len(),
+            arts.cache_hits,
+        );
+        for d in &arts.datasets {
+            println!(
+                "  {:<10} area {:.2}x  energy {:.2}x  speedup {:.2}x",
+                d.dataset,
+                d.metric("fig7", "area_efficiency").unwrap_or(0.0),
+                d.metric("fig8", "energy_efficiency").unwrap_or(0.0),
+                d.metric("table2", "speedup").unwrap_or(0.0),
+            );
+        }
+        match arts.write(&out_dir) {
+            Ok(files) => {
+                for f in files {
+                    println!("wrote results/{f}");
+                }
+            }
+            Err(e) => {
+                exit = 1;
+                eprintln!("artifacts: write failed: {e}");
+            }
+        }
+        runs.push(arts);
+    }
+    let exact = runs.pop().expect("exact run");
+    let sampled = runs.pop().expect("sampled run");
+    match artifacts::delta_report(&sampled, &exact, &DeltaTolerances::default()) {
+        Ok(rep) => {
+            print!("{}", rep.lines());
+            let name = format!("{out_dir}/delta_report.json");
+            match report::write_json(&name, &rep.to_json()) {
+                Ok(()) => println!("wrote results/{name}"),
+                Err(e) => {
+                    exit = 1;
+                    eprintln!("artifacts: write results/{name}: {e}");
+                }
+            }
+            if !rep.all_within() {
+                exit = 1;
+                eprintln!(
+                    "artifacts: sampled-vs-exact deltas out of tolerance \
+                     (see report above)"
+                );
+            }
+        }
+        Err(e) => {
+            exit = 1;
+            eprintln!("artifacts: delta report failed: {e}");
+        }
+    }
+    exit
 }
 
 fn auto_threads(args: &Args) -> usize {

@@ -1,0 +1,979 @@
+//! Exact-trace paper-artifact pipeline (ISSUE-5 tentpole).
+//!
+//! The paper's headline artifacts — Fig. 7 (crossbar area efficiency),
+//! Fig. 8 (normalized energy) and Table II (+ the §V-C speedup) — were
+//! historically reproduced from 64 sampled output positions per layer.
+//! The trace-aggregated engine made exact mode affordable, so this
+//! layer runs every figure in **both** trace modes over the Table-II
+//! synthetic VGG16 datasets and records the sampled-vs-exact deltas:
+//!
+//! ```text
+//!   ALL_PROFILES × TraceMode::{Sampled(n), Exact}
+//!        │ compute_dataset_rows — generate weights, map all four
+//!        │   schemes, simulate naive + pattern (shared by the CLI,
+//!        │   `cargo bench` figure benches and `rram-accel report`)
+//!        ▼
+//!   PaperArtifacts — one JSON bundle per dataset, emitted as
+//!        │   results/paper/{fig7,fig8,table2}_{sampled,exact}.json
+//!        │   (an on-disk ArtifactCache makes repeated runs cheap and
+//!        │   bit-exact with fresh ones)
+//!        ▼
+//!   delta_report — per-dataset, per-scheme relative deltas
+//!        |sampled − exact| / |exact| with tolerance bands, emitted as
+//!        results/paper/delta_report.json
+//! ```
+//!
+//! Determinism contract (pinned by `tests/paper_artifacts.rs`, the
+//! tier-2 conformance suite): every emitted byte is a pure function of
+//! `(profiles, seed, mode)` — independent of thread count and of
+//! whether results came from the cache — and structural metrics
+//! (crossbar counts, sparsity) must not move between modes at all,
+//! while trace-dependent metrics (cycles, energy, speedup) must stay
+//! inside the declared tolerance bands.
+
+use std::path::{Path, PathBuf};
+
+use crate::config::{HardwareConfig, SimConfig};
+use crate::mapping::{
+    kmeans::KmeansMapping, naive::NaiveMapping, ou_sparse::OuSparseMapping,
+    pattern::PatternMapping, MappingScheme,
+};
+use crate::pruning::synthetic::DatasetProfile;
+use crate::sim::{self, Comparison};
+use crate::util::fnv1a;
+use crate::util::json::{obj, Json};
+use crate::xbar::CellGeometry;
+
+use super::{write_json, Fig7Row, Fig8Row, Table2Row};
+
+/// Published reference numbers for one dataset row (paper Fig. 7,
+/// Fig. 8 and Table 2 / §V-C).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PaperRef {
+    pub area_efficiency: f64,
+    pub energy_efficiency: f64,
+    pub speedup: f64,
+}
+
+/// Paper reference values by dataset name — the single source the CLI,
+/// the figure benches and `rram-accel report` all print against.
+pub fn paper_reference(dataset: &str) -> Option<PaperRef> {
+    match dataset {
+        "cifar10" => Some(PaperRef {
+            area_efficiency: 4.67,
+            energy_efficiency: 2.13,
+            speedup: 1.35,
+        }),
+        "cifar100" => Some(PaperRef {
+            area_efficiency: 5.20,
+            energy_efficiency: 2.15,
+            speedup: 1.15,
+        }),
+        "imagenet" => Some(PaperRef {
+            area_efficiency: 4.16,
+            energy_efficiency: 1.98,
+            speedup: 1.17,
+        }),
+        _ => None,
+    }
+}
+
+/// The paper's area-efficiency band: the published per-dataset factors
+/// span 4.16x (imagenet) to 5.20x (cifar100). The reproduction's
+/// ordering/band invariants are asserted against this in exact mode.
+pub const PAPER_AREA_BAND: (f64, f64) = (4.16, 5.20);
+
+/// Trace fidelity of one artifact run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TraceMode {
+    /// `n` sampled output positions per layer, scaled to the full map.
+    Sampled(usize),
+    /// Every output position traced — no sampling scale.
+    Exact,
+}
+
+impl TraceMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TraceMode::Sampled(_) => "sampled",
+            TraceMode::Exact => "exact",
+        }
+    }
+
+    /// The [`SimConfig`] this mode simulates under (activation-model
+    /// defaults untouched, so both modes share the same trace seed).
+    pub fn sim_config(&self) -> SimConfig {
+        match self {
+            TraceMode::Sampled(n) => SimConfig::sampled(*n),
+            TraceMode::Exact => SimConfig::exact(),
+        }
+    }
+
+    fn sample_positions_json(&self) -> Json {
+        match self {
+            TraceMode::Sampled(n) => (*n).into(),
+            TraceMode::Exact => Json::Null,
+        }
+    }
+}
+
+/// One artifact run's configuration: weight seed, trace mode, worker
+/// threads. The hardware is always the paper's Table I config — the
+/// artifacts reproduce the paper, not an arbitrary design point.
+#[derive(Debug, Clone, Copy)]
+pub struct ArtifactConfig {
+    pub seed: u64,
+    pub mode: TraceMode,
+    /// Worker threads for mapping/simulation. Never part of any
+    /// artifact identity: results are thread-invariant.
+    pub threads: usize,
+}
+
+/// The typed rows of one dataset's artifacts, plus the underlying
+/// naive/pattern comparison for consumers that need the full
+/// simulation results (`rram-accel report`, `benches/fig8_energy.rs`).
+pub struct DatasetRows {
+    pub dataset: String,
+    pub fig7: Fig7Row,
+    pub fig8: Fig8Row,
+    pub table2: Table2Row,
+    pub comparison: Comparison,
+}
+
+impl DatasetRows {
+    /// Collapse into the JSON bundle the pipeline caches and emits.
+    pub fn to_artifact(&self) -> DatasetArtifact {
+        DatasetArtifact {
+            dataset: self.dataset.clone(),
+            fig7: self.fig7.to_json(),
+            fig8: self.fig8.to_json(),
+            table2: self.table2.to_json(),
+        }
+    }
+}
+
+/// Compute one dataset's paper rows from scratch: Table-II-calibrated
+/// weights, all four mapping schemes for the Fig. 7 series, and the
+/// naive/pattern simulation under the run's trace mode. Pure function
+/// of `(profile, cfg.seed, cfg.mode)`; `cfg.threads` only changes how
+/// fast it runs.
+///
+/// The mappings depend only on `(profile, seed)`, so a two-mode
+/// `artifacts` run recomputes them once per mode — a deliberate
+/// simplicity/size tradeoff: the per-(dataset, mode) [`ArtifactCache`]
+/// entry makes every repeat run free, which is where the time would
+/// otherwise go.
+pub fn compute_dataset_rows(
+    profile: &DatasetProfile,
+    cfg: &ArtifactConfig,
+) -> DatasetRows {
+    let hw = HardwareConfig::default();
+    let geom = CellGeometry::from_hw(&hw);
+    let threads = cfg.threads.max(1);
+    let nw = profile.generate(cfg.seed);
+    let spec = nw.spec.clone();
+    let stats = nw.stats();
+    let naive = NaiveMapping.map_network(&nw, &geom, threads);
+    let ours = PatternMapping.map_network(&nw, &geom, threads);
+    let km = KmeansMapping::default().map_network(&nw, &geom, threads);
+    let sre = OuSparseMapping.map_network(&nw, &geom, threads);
+    // Paper artifacts from an invalid mapping would be silently wrong
+    // numbers — fail loudly instead (this gate used to live in the
+    // Fig. 7 bench; it now guards every consumer of the shared path).
+    for (name, mapped) in
+        [("naive", &naive), ("pattern", &ours), ("kmeans", &km), ("ou_sparse", &sre)]
+    {
+        if let Err(e) = mapped.validate() {
+            panic!(
+                "{name} mapping violated invariants on {}: {e}",
+                profile.name
+            );
+        }
+    }
+    let sim_cfg = cfg.mode.sim_config();
+    let base = sim::simulate_network(&naive, &spec, &hw, &sim_cfg, threads);
+    let mine = sim::simulate_network(&ours, &spec, &hw, &sim_cfg, threads);
+    let paper = paper_reference(profile.name).unwrap_or(PaperRef {
+        area_efficiency: 0.0,
+        energy_efficiency: 0.0,
+        speedup: 0.0,
+    });
+
+    let fig7 = Fig7Row {
+        dataset: profile.name.to_string(),
+        naive_crossbars: naive.total_crossbars(),
+        pattern_crossbars: ours.total_crossbars(),
+        kmeans_crossbars: km.total_crossbars(),
+        ou_sparse_crossbars: sre.total_crossbars(),
+        theoretical_best: 1.0 / (1.0 - profile.sparsity),
+        paper_efficiency: paper.area_efficiency,
+    };
+    let fig8 = Fig8Row {
+        dataset: profile.name.to_string(),
+        baseline: base.total_energy(),
+        ours: mine.total_energy(),
+        paper_efficiency: paper.energy_efficiency,
+    };
+    let table2 = Table2Row {
+        dataset: profile.name.to_string(),
+        sparsity: stats.sparsity,
+        paper_sparsity: profile.sparsity,
+        patterns_per_layer: stats.patterns_per_layer.clone(),
+        paper_patterns_per_layer: profile.patterns_per_layer.to_vec(),
+        total_patterns: stats.total_patterns,
+        all_zero_ratio: stats.all_zero_kernel_ratio,
+        paper_all_zero_ratio: profile.all_zero_ratio,
+        top1: profile.top1.to_string(),
+        top5: profile.top5.to_string(),
+        naive_cycles: base.total_cycles(),
+        pattern_cycles: mine.total_cycles(),
+        paper_speedup: paper.speedup,
+    };
+    DatasetRows {
+        dataset: profile.name.to_string(),
+        fig7,
+        fig8,
+        table2,
+        comparison: Comparison { baseline: base, ours: mine },
+    }
+}
+
+/// One dataset's artifact bundle as canonical JSON. Both the fresh and
+/// the cached path flow through this representation, so cached and
+/// fresh runs emit identical bytes by construction.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DatasetArtifact {
+    pub dataset: String,
+    pub fig7: Json,
+    pub fig8: Json,
+    pub table2: Json,
+}
+
+impl DatasetArtifact {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("dataset", self.dataset.as_str().into()),
+            ("fig7", self.fig7.clone()),
+            ("fig8", self.fig8.clone()),
+            ("table2", self.table2.clone()),
+        ])
+    }
+
+    /// Inverse of [`DatasetArtifact::to_json`]; `None` on any missing
+    /// section (a corrupt cache entry falls back to a fresh compute).
+    pub fn from_json(j: &Json) -> Option<DatasetArtifact> {
+        let dataset = j.get("dataset").as_str()?.to_string();
+        let (fig7, fig8, table2) =
+            (j.get("fig7"), j.get("fig8"), j.get("table2"));
+        if fig7.as_obj().is_none()
+            || fig8.as_obj().is_none()
+            || table2.as_obj().is_none()
+        {
+            return None;
+        }
+        Some(DatasetArtifact {
+            dataset,
+            fig7: fig7.clone(),
+            fig8: fig8.clone(),
+            table2: table2.clone(),
+        })
+    }
+
+    /// Numeric field of one section (`"fig7"` / `"fig8"` / `"table2"`).
+    pub fn metric(&self, section: &str, key: &str) -> Option<f64> {
+        let s = match section {
+            "fig7" => &self.fig7,
+            "fig8" => &self.fig8,
+            "table2" => &self.table2,
+            _ => return None,
+        };
+        s.get(key).as_f64()
+    }
+}
+
+/// Every paper artifact of one run: per-dataset bundles under one
+/// trace mode, plus runtime bookkeeping (cache hits are deliberately
+/// absent from all emitted JSON).
+pub struct PaperArtifacts {
+    pub mode: TraceMode,
+    pub seed: u64,
+    pub datasets: Vec<DatasetArtifact>,
+    /// Datasets served from the [`ArtifactCache`] this run.
+    pub cache_hits: usize,
+}
+
+impl PaperArtifacts {
+    /// Run the pipeline over `profiles` (cache first, compute on miss).
+    pub fn generate(
+        profiles: &[&DatasetProfile],
+        cfg: &ArtifactConfig,
+        cache: Option<&ArtifactCache>,
+    ) -> PaperArtifacts {
+        let mut datasets = Vec::with_capacity(profiles.len());
+        let mut cache_hits = 0usize;
+        for p in profiles {
+            if let Some(c) = cache {
+                if let Some(a) = c.load(p, cfg) {
+                    cache_hits += 1;
+                    datasets.push(a);
+                    continue;
+                }
+            }
+            let a = compute_dataset_rows(p, cfg).to_artifact();
+            if let Some(c) = cache {
+                if let Err(e) = c.store(p, cfg, &a) {
+                    eprintln!(
+                        "[artifacts] cache write failed for {}: {e} \
+                         (continuing uncached)",
+                        p.name
+                    );
+                }
+            }
+            datasets.push(a);
+        }
+        PaperArtifacts { mode: cfg.mode, seed: cfg.seed, datasets, cache_hits }
+    }
+
+    fn meta(&self) -> Vec<(&'static str, Json)> {
+        vec![
+            ("mode", self.mode.name().into()),
+            ("sample_positions", self.mode.sample_positions_json()),
+            ("seed", (self.seed as usize).into()),
+        ]
+    }
+
+    fn figure_json(&self, pick: fn(&DatasetArtifact) -> &Json) -> Json {
+        let mut pairs = self.meta();
+        pairs.push((
+            "rows",
+            Json::Arr(self.datasets.iter().map(|d| pick(d).clone()).collect()),
+        ));
+        obj(pairs)
+    }
+
+    pub fn fig7_json(&self) -> Json {
+        self.figure_json(|d| &d.fig7)
+    }
+
+    pub fn fig8_json(&self) -> Json {
+        self.figure_json(|d| &d.fig8)
+    }
+
+    pub fn table2_json(&self) -> Json {
+        self.figure_json(|d| &d.table2)
+    }
+
+    pub fn dataset(&self, name: &str) -> Option<&DatasetArtifact> {
+        self.datasets.iter().find(|d| d.dataset == name)
+    }
+
+    /// Write `{fig7,fig8,table2}_{mode}.json` under
+    /// `results/<subdir>/`; returns the paths written (relative to
+    /// `results/`).
+    pub fn write(&self, subdir: &str) -> std::io::Result<Vec<String>> {
+        let mode = self.mode.name();
+        let files = [
+            (format!("{subdir}/fig7_{mode}.json"), self.fig7_json()),
+            (format!("{subdir}/fig8_{mode}.json"), self.fig8_json()),
+            (format!("{subdir}/table2_{mode}.json"), self.table2_json()),
+        ];
+        let mut written = Vec::with_capacity(files.len());
+        for (name, j) in files {
+            write_json(&name, &j)?;
+            written.push(name);
+        }
+        Ok(written)
+    }
+}
+
+/// Content-hashed on-disk cache of per-dataset artifact bundles,
+/// mirroring `dse::ResultCache`: the identity is the canonical string
+/// of `(format version, profile contents + network spec, weight seed,
+/// effective SimConfig, base HardwareConfig)`, stored alongside the
+/// bundle and verified on load — editing a Table-II profile or a VGG16
+/// layer list invalidates old entries without anyone remembering to
+/// bump the format version. Thread count is deliberately absent —
+/// results are thread-invariant.
+#[derive(Debug, Clone)]
+pub struct ArtifactCache {
+    dir: PathBuf,
+}
+
+/// Bump when the artifact layout or the evaluation semantics change.
+const ARTIFACT_CACHE_FORMAT: usize = 1;
+
+impl ArtifactCache {
+    pub fn new<P: Into<PathBuf>>(dir: P) -> ArtifactCache {
+        ArtifactCache { dir: dir.into() }
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Canonical identity of one profile's *contents*: every statistic
+    /// the synthetic generator consumes plus the concrete layer list,
+    /// so a profile edit can never serve a stale bundle.
+    fn profile_identity(p: &DatasetProfile) -> String {
+        let spec = p.network_spec();
+        let layers: Vec<String> = spec
+            .layers
+            .iter()
+            .map(|l| format!("{}x{}x{}", l.cout, l.cin, l.fmap))
+            .collect();
+        format!(
+            "{}|sp{}|pat{:?}|zr{}|{}|{}|{}",
+            p.name,
+            p.sparsity,
+            p.patterns_per_layer,
+            p.all_zero_ratio,
+            p.top1,
+            p.top5,
+            layers.join(","),
+        )
+    }
+
+    fn identity(profile: &DatasetProfile, cfg: &ArtifactConfig) -> (u64, String) {
+        let sim = cfg.mode.sim_config().to_json().to_string_compact();
+        let hw = HardwareConfig::default().to_json().to_string_compact();
+        let id = format!(
+            "v{ARTIFACT_CACHE_FORMAT}|{}|seed{}|{sim}|{hw}",
+            Self::profile_identity(profile),
+            cfg.seed
+        );
+        (fnv1a(&id), id)
+    }
+
+    fn path_for(&self, key: u64) -> PathBuf {
+        self.dir.join(format!("{key:016x}.json"))
+    }
+
+    /// Load a profile's cached bundle, verifying the stored identity.
+    /// Any miss, mismatch or parse failure returns `None`.
+    pub fn load(
+        &self,
+        profile: &DatasetProfile,
+        cfg: &ArtifactConfig,
+    ) -> Option<DatasetArtifact> {
+        let (key, id) = Self::identity(profile, cfg);
+        let text = std::fs::read_to_string(self.path_for(key)).ok()?;
+        let j = Json::parse(&text).ok()?;
+        if j.get("format").as_usize() != Some(ARTIFACT_CACHE_FORMAT)
+            || j.get("identity").as_str() != Some(id.as_str())
+        {
+            return None; // collision or stale defaults: recompute
+        }
+        DatasetArtifact::from_json(j.get("artifact"))
+    }
+
+    /// Persist a profile's bundle (creates the cache directory). Write
+    /// failures are returned, not fatal — the pipeline treats the
+    /// cache as best-effort.
+    pub fn store(
+        &self,
+        profile: &DatasetProfile,
+        cfg: &ArtifactConfig,
+        a: &DatasetArtifact,
+    ) -> std::io::Result<()> {
+        let (key, id) = Self::identity(profile, cfg);
+        std::fs::create_dir_all(&self.dir)?;
+        let entry = obj(vec![
+            ("format", ARTIFACT_CACHE_FORMAT.into()),
+            ("identity", id.into()),
+            ("artifact", a.to_json()),
+        ]);
+        std::fs::write(self.path_for(key), entry.to_string_pretty())
+    }
+}
+
+/// Tolerance bands of the sampled-vs-exact delta report, as relative
+/// deltas `|sampled − exact| / |exact|`.
+#[derive(Debug, Clone, Copy)]
+pub struct DeltaTolerances {
+    /// Structural metrics — crossbar counts, area efficiency, sparsity
+    /// — do not depend on the activation trace at all, so sampled and
+    /// exact runs must agree exactly.
+    pub structure: f64,
+    /// Simulated cycle totals (trace-dependent through zero skipping).
+    pub cycles: f64,
+    /// Simulated energy totals and the derived energy efficiency.
+    pub energy: f64,
+    /// The naive/pattern speedup ratio.
+    pub speedup: f64,
+}
+
+impl Default for DeltaTolerances {
+    fn default() -> Self {
+        // 64 sampled positions estimate per-layer skip fractions to a
+        // few percent (binomial error ~ 1/sqrt(64)); 10% bands leave
+        // headroom without masking a broken trace mode.
+        DeltaTolerances { structure: 0.0, cycles: 0.10, energy: 0.10, speedup: 0.10 }
+    }
+}
+
+impl DeltaTolerances {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("structure", self.structure.into()),
+            ("cycles", self.cycles.into()),
+            ("energy", self.energy.into()),
+            ("speedup", self.speedup.into()),
+        ])
+    }
+}
+
+/// One compared metric of the delta report.
+#[derive(Debug, Clone)]
+pub struct DeltaEntry {
+    pub dataset: String,
+    pub figure: &'static str,
+    pub metric: &'static str,
+    /// Scheme the metric belongs to (`"-"` for scheme-free metrics
+    /// like sparsity).
+    pub scheme: &'static str,
+    pub sampled: f64,
+    pub exact: f64,
+    pub rel_delta: f64,
+    pub tolerance: f64,
+}
+
+impl DeltaEntry {
+    pub fn within(&self) -> bool {
+        self.rel_delta <= self.tolerance
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("dataset", self.dataset.as_str().into()),
+            ("figure", self.figure.into()),
+            ("metric", self.metric.into()),
+            ("scheme", self.scheme.into()),
+            ("sampled", self.sampled.into()),
+            ("exact", self.exact.into()),
+            ("rel_delta", self.rel_delta.into()),
+            ("tolerance", self.tolerance.into()),
+            ("within", self.within().into()),
+        ])
+    }
+}
+
+/// The machine-readable sampled-vs-exact comparison
+/// (`results/paper/delta_report.json`).
+pub struct DeltaReport {
+    pub seed: u64,
+    /// Sample count of the sampled side.
+    pub sampled_positions: Option<usize>,
+    pub tolerances: DeltaTolerances,
+    pub entries: Vec<DeltaEntry>,
+}
+
+/// `(figure, json key, metric label, scheme, tolerance selector)` of
+/// one compared metric.
+type DeltaMetricSpec =
+    (&'static str, &'static str, &'static str, &'static str, fn(&DeltaTolerances) -> f64);
+
+/// The catalog of compared metrics.
+fn delta_metrics() -> [DeltaMetricSpec; 12] {
+    [
+        ("fig7", "naive_crossbars", "crossbars", "naive", |t| t.structure),
+        ("fig7", "pattern_crossbars", "crossbars", "pattern", |t| t.structure),
+        ("fig7", "kmeans_crossbars", "crossbars", "kmeans", |t| t.structure),
+        ("fig7", "ou_sparse_crossbars", "crossbars", "ou_sparse", |t| t.structure),
+        ("fig7", "area_efficiency", "area_efficiency", "pattern", |t| t.structure),
+        ("fig8", "baseline_total_pj", "energy_pj", "naive", |t| t.energy),
+        ("fig8", "ours_total_pj", "energy_pj", "pattern", |t| t.energy),
+        ("fig8", "energy_efficiency", "energy_efficiency", "pattern", |t| {
+            t.energy
+        }),
+        ("table2", "naive_cycles", "cycles", "naive", |t| t.cycles),
+        ("table2", "pattern_cycles", "cycles", "pattern", |t| t.cycles),
+        ("table2", "speedup", "speedup", "pattern", |t| t.speedup),
+        ("table2", "sparsity", "sparsity", "-", |t| t.structure),
+    ]
+}
+
+/// Build the delta report from a sampled and an exact run over the
+/// same datasets. Errors (rather than silently skipping) when the runs
+/// have the wrong or swapped trace modes, were generated from
+/// different weight seeds, cover different datasets, or an expected
+/// metric is missing — a malformed comparison must not read as "all
+/// deltas in band".
+pub fn delta_report(
+    sampled: &PaperArtifacts,
+    exact: &PaperArtifacts,
+    tol: &DeltaTolerances,
+) -> Result<DeltaReport, String> {
+    if !matches!(sampled.mode, TraceMode::Sampled(_)) {
+        return Err("first run must be sampled-mode (runs swapped?)".into());
+    }
+    if exact.mode != TraceMode::Exact {
+        return Err("second run must be exact-mode (runs swapped?)".into());
+    }
+    if sampled.seed != exact.seed {
+        return Err(format!(
+            "weight seed mismatch: sampled {} vs exact {} — the runs \
+             simulate different synthetic networks",
+            sampled.seed, exact.seed
+        ));
+    }
+    if sampled.datasets.len() != exact.datasets.len() {
+        return Err(format!(
+            "dataset count mismatch: sampled {} vs exact {}",
+            sampled.datasets.len(),
+            exact.datasets.len()
+        ));
+    }
+    let mut entries = Vec::new();
+    for (s, e) in sampled.datasets.iter().zip(exact.datasets.iter()) {
+        if s.dataset != e.dataset {
+            return Err(format!(
+                "dataset order mismatch: {} vs {}",
+                s.dataset, e.dataset
+            ));
+        }
+        for (figure, key, metric, scheme, pick_tol) in delta_metrics() {
+            let sv = s.metric(figure, key).ok_or_else(|| {
+                format!("{}: sampled {figure}.{key} missing", s.dataset)
+            })?;
+            let ev = e.metric(figure, key).ok_or_else(|| {
+                format!("{}: exact {figure}.{key} missing", e.dataset)
+            })?;
+            let rel_delta = (sv - ev).abs() / ev.abs().max(1e-12);
+            entries.push(DeltaEntry {
+                dataset: s.dataset.clone(),
+                figure,
+                metric,
+                scheme,
+                sampled: sv,
+                exact: ev,
+                rel_delta,
+                tolerance: pick_tol(tol),
+            });
+        }
+    }
+    let sampled_positions = match sampled.mode {
+        TraceMode::Sampled(n) => Some(n),
+        TraceMode::Exact => None,
+    };
+    Ok(DeltaReport {
+        seed: sampled.seed,
+        sampled_positions,
+        tolerances: *tol,
+        entries,
+    })
+}
+
+impl DeltaReport {
+    pub fn all_within(&self) -> bool {
+        self.entries.iter().all(|e| e.within())
+    }
+
+    pub fn violations(&self) -> Vec<&DeltaEntry> {
+        self.entries.iter().filter(|e| !e.within()).collect()
+    }
+
+    pub fn max_rel_delta(&self) -> f64 {
+        self.entries.iter().map(|e| e.rel_delta).fold(0.0, f64::max)
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("seed", (self.seed as usize).into()),
+            (
+                "sampled_positions",
+                self.sampled_positions.map(Json::from).unwrap_or(Json::Null),
+            ),
+            ("tolerances", self.tolerances.to_json()),
+            ("n_entries", self.entries.len().into()),
+            ("n_violations", self.violations().len().into()),
+            ("max_rel_delta", self.max_rel_delta().into()),
+            ("all_within", self.all_within().into()),
+            (
+                "entries",
+                Json::Arr(self.entries.iter().map(|e| e.to_json()).collect()),
+            ),
+        ])
+    }
+
+    /// Human summary: one line per dataset with its worst delta, plus
+    /// one line per out-of-band entry.
+    pub fn lines(&self) -> String {
+        let mut s = format!(
+            "sampled-vs-exact deltas: {} metrics, max rel delta {:.3e} ({})\n",
+            self.entries.len(),
+            self.max_rel_delta(),
+            if self.all_within() {
+                "all within tolerance"
+            } else {
+                "OUT OF BAND"
+            },
+        );
+        let mut seen: Vec<&str> = Vec::new();
+        for e in &self.entries {
+            if !seen.contains(&e.dataset.as_str()) {
+                seen.push(&e.dataset);
+            }
+        }
+        for ds in seen {
+            let worst = self
+                .entries
+                .iter()
+                .filter(|e| e.dataset == ds)
+                .max_by(|a, b| {
+                    a.rel_delta
+                        .partial_cmp(&b.rel_delta)
+                        .unwrap_or(std::cmp::Ordering::Equal)
+                })
+                .expect("dataset has entries");
+            s.push_str(&format!(
+                "  {:<10} worst {}/{} ({}): rel delta {:.3e} (tol {:.2})\n",
+                ds,
+                worst.figure,
+                worst.metric,
+                worst.scheme,
+                worst.rel_delta,
+                worst.tolerance,
+            ));
+        }
+        for v in self.violations() {
+            s.push_str(&format!(
+                "  OUT OF BAND {} {}/{} ({}): sampled {} vs exact {} — rel \
+                 delta {:.3e} > tol {:.2}\n",
+                v.dataset,
+                v.figure,
+                v.metric,
+                v.scheme,
+                v.sampled,
+                v.exact,
+                v.rel_delta,
+                v.tolerance,
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bundle(dataset: &str, energy: f64, cycles: f64) -> DatasetArtifact {
+        DatasetArtifact {
+            dataset: dataset.into(),
+            fig7: obj(vec![
+                ("dataset", dataset.into()),
+                ("naive_crossbars", 400.into()),
+                ("pattern_crossbars", 100.into()),
+                ("kmeans_crossbars", 380.into()),
+                ("ou_sparse_crossbars", 200.into()),
+                ("area_efficiency", Json::Num(4.0)),
+            ]),
+            fig8: obj(vec![
+                ("baseline_total_pj", Json::Num(2.0 * energy)),
+                ("ours_total_pj", Json::Num(energy)),
+                ("energy_efficiency", Json::Num(2.0)),
+            ]),
+            table2: obj(vec![
+                ("naive_cycles", Json::Num(2.0 * cycles)),
+                ("pattern_cycles", Json::Num(cycles)),
+                ("speedup", Json::Num(2.0)),
+                ("sparsity", Json::Num(0.86)),
+            ]),
+        }
+    }
+
+    fn run(mode: TraceMode, bundles: Vec<DatasetArtifact>) -> PaperArtifacts {
+        PaperArtifacts { mode, seed: 42, datasets: bundles, cache_hits: 0 }
+    }
+
+    #[test]
+    fn paper_references_cover_all_profiles() {
+        for name in ["cifar10", "cifar100", "imagenet"] {
+            let r = paper_reference(name).expect(name);
+            assert!(r.area_efficiency >= PAPER_AREA_BAND.0);
+            assert!(r.area_efficiency <= PAPER_AREA_BAND.1);
+            assert!(r.energy_efficiency > 1.0 && r.speedup > 1.0);
+        }
+        assert!(paper_reference("bogus").is_none());
+    }
+
+    #[test]
+    fn trace_modes_build_the_right_sim_config() {
+        let s = TraceMode::Sampled(64).sim_config();
+        assert_eq!(s.sample_positions, Some(64));
+        assert!(!s.is_exact());
+        let e = TraceMode::Exact.sim_config();
+        assert!(e.is_exact());
+        assert_eq!(TraceMode::Exact.name(), "exact");
+        assert_eq!(TraceMode::Sampled(8).name(), "sampled");
+        // both modes share the trace seed: the only difference is the
+        // sampling
+        assert_eq!(s.seed, e.seed);
+    }
+
+    #[test]
+    fn artifact_bundle_json_roundtrips() {
+        let a = bundle("cifar10", 1e6, 1e5);
+        let back = DatasetArtifact::from_json(&a.to_json()).expect("roundtrip");
+        assert_eq!(a, back);
+        assert_eq!(a.metric("fig7", "naive_crossbars"), Some(400.0));
+        assert_eq!(a.metric("table2", "speedup"), Some(2.0));
+        assert_eq!(a.metric("nope", "x"), None);
+        assert!(DatasetArtifact::from_json(&Json::Null).is_none());
+        // a bundle missing a section is rejected, not half-parsed
+        let mut j = a.to_json();
+        if let Json::Obj(o) = &mut j {
+            o.remove("fig8");
+        }
+        assert!(DatasetArtifact::from_json(&j).is_none());
+    }
+
+    #[test]
+    fn delta_report_flags_only_out_of_band_metrics() {
+        let sampled = run(
+            TraceMode::Sampled(64),
+            vec![bundle("cifar10", 1.03e6, 1.02e5)],
+        );
+        let exact = run(TraceMode::Exact, vec![bundle("cifar10", 1e6, 1e5)]);
+        let tol = DeltaTolerances::default();
+        let r = delta_report(&sampled, &exact, &tol).expect("report");
+        assert_eq!(r.entries.len(), delta_metrics().len());
+        assert_eq!(r.sampled_positions, Some(64));
+        // structural metrics are identical -> zero delta
+        for e in &r.entries {
+            if e.metric == "crossbars" || e.metric == "sparsity" {
+                assert_eq!(e.rel_delta, 0.0, "{}/{}", e.figure, e.metric);
+            }
+        }
+        // 2-3% energy/cycle deltas sit inside the 10% bands
+        assert!(r.all_within(), "{}", r.lines());
+        assert!(r.max_rel_delta() > 0.0);
+        let j = r.to_json();
+        assert_eq!(j.get("all_within").as_bool(), Some(true));
+        assert_eq!(j.get("n_violations").as_usize(), Some(0));
+        assert_eq!(
+            j.get("entries").as_arr().map(|a| a.len()),
+            Some(delta_metrics().len())
+        );
+
+        // push the sampled energy out of band: exactly the energy
+        // metrics trip, everything else stays green
+        let bad =
+            run(TraceMode::Sampled(64), vec![bundle("cifar10", 1.5e6, 1.02e5)]);
+        let r = delta_report(&bad, &exact, &tol).expect("report");
+        assert!(!r.all_within());
+        let v = r.violations();
+        assert!(!v.is_empty());
+        assert!(v.iter().all(|e| e.metric == "energy_pj"), "{}", r.lines());
+        assert!(r.lines().contains("OUT OF BAND"), "{}", r.lines());
+    }
+
+    #[test]
+    fn delta_report_rejects_mismatched_runs() {
+        let sampled =
+            run(TraceMode::Sampled(64), vec![bundle("cifar10", 1e6, 1e5)]);
+        let exact = run(TraceMode::Exact, vec![bundle("cifar10", 1e6, 1e5)]);
+        let tol = DeltaTolerances::default();
+        // swapped arguments must not produce an inverted report
+        let e = delta_report(&exact, &sampled, &tol).unwrap_err();
+        assert!(e.contains("swapped"), "{e}");
+        // two sampled runs (or two exact runs) are not a comparison
+        assert!(delta_report(&sampled, &sampled, &tol).is_err());
+        // different weight seeds simulate different networks
+        let other_seed = PaperArtifacts {
+            mode: TraceMode::Exact,
+            seed: 7,
+            datasets: vec![bundle("cifar10", 1e6, 1e5)],
+            cache_hits: 0,
+        };
+        let e = delta_report(&sampled, &other_seed, &tol).unwrap_err();
+        assert!(e.contains("seed mismatch"), "{e}");
+        let exact_empty = run(TraceMode::Exact, vec![]);
+        assert!(delta_report(&sampled, &exact_empty, &tol).is_err());
+        let exact_other =
+            run(TraceMode::Exact, vec![bundle("cifar100", 1e6, 1e5)]);
+        assert!(delta_report(&sampled, &exact_other, &tol).is_err());
+        // a bundle missing a compared metric is an error, not a skip
+        let mut broken = bundle("cifar10", 1e6, 1e5);
+        broken.table2 = obj(vec![("naive_cycles", Json::Num(1.0))]);
+        let exact_broken = run(TraceMode::Exact, vec![broken]);
+        let e = delta_report(&sampled, &exact_broken, &tol).unwrap_err();
+        assert!(e.contains("missing"), "{e}");
+    }
+
+    #[test]
+    fn figure_jsons_carry_mode_and_rows() {
+        let p = run(
+            TraceMode::Exact,
+            vec![bundle("cifar10", 1e6, 1e5), bundle("cifar100", 2e6, 2e5)],
+        );
+        let f7 = p.fig7_json();
+        assert_eq!(f7.get("mode").as_str(), Some("exact"));
+        assert_eq!(f7.get("sample_positions"), &Json::Null);
+        assert_eq!(f7.get("seed").as_usize(), Some(42));
+        assert_eq!(f7.get("rows").as_arr().map(|r| r.len()), Some(2));
+        let s = run(TraceMode::Sampled(64), vec![bundle("cifar10", 1e6, 1e5)]);
+        assert_eq!(s.table2_json().get("sample_positions").as_usize(), Some(64));
+        assert!(p.dataset("cifar100").is_some());
+        assert!(p.dataset("imagenet").is_none());
+    }
+
+    #[test]
+    fn artifact_cache_roundtrips_and_separates_identities() {
+        use crate::pruning::synthetic::{CIFAR10, CIFAR100};
+        let dir = std::env::temp_dir().join(format!(
+            "rram-artifact-cache-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let c = ArtifactCache::new(dir.clone());
+        let sampled = ArtifactConfig {
+            seed: 42,
+            mode: TraceMode::Sampled(64),
+            threads: 2,
+        };
+        let a = bundle("cifar10", 1.25e6, 1.0e5); // exactly representable
+        assert!(c.load(&CIFAR10, &sampled).is_none(), "cold cache");
+        c.store(&CIFAR10, &sampled, &a).unwrap();
+        let got = c.load(&CIFAR10, &sampled).expect("hit");
+        assert_eq!(got, a);
+
+        // a different thread count is the SAME identity (results are
+        // thread-invariant)
+        let threads4 = ArtifactConfig { threads: 4, ..sampled };
+        assert!(c.load(&CIFAR10, &threads4).is_some());
+
+        // trace mode, sample count, seed and dataset all separate
+        let exact = ArtifactConfig { mode: TraceMode::Exact, ..sampled };
+        assert!(c.load(&CIFAR10, &exact).is_none(), "mode separates");
+        let s16 =
+            ArtifactConfig { mode: TraceMode::Sampled(16), ..sampled };
+        assert!(c.load(&CIFAR10, &s16).is_none(), "sample count separates");
+        let seed7 = ArtifactConfig { seed: 7, ..sampled };
+        assert!(c.load(&CIFAR10, &seed7).is_none(), "seed separates");
+        assert!(c.load(&CIFAR100, &sampled).is_none(), "dataset separates");
+
+        // editing the profile's published statistics invalidates the
+        // entry — identity covers contents, not just the name
+        let mut tweaked = CIFAR10.clone();
+        tweaked.sparsity = 0.5;
+        assert!(
+            c.load(&tweaked, &sampled).is_none(),
+            "profile contents separate"
+        );
+        let mut repatterned = CIFAR10.clone();
+        repatterned.patterns_per_layer[0] = 9;
+        assert!(
+            c.load(&repatterned, &sampled).is_none(),
+            "pattern counts separate"
+        );
+
+        // corrupt entries read as misses and heal on re-store
+        let (key, _) = ArtifactCache::identity(&CIFAR10, &sampled);
+        std::fs::write(c.path_for(key), "{truncated").unwrap();
+        assert!(c.load(&CIFAR10, &sampled).is_none());
+        c.store(&CIFAR10, &sampled, &a).unwrap();
+        assert!(c.load(&CIFAR10, &sampled).is_some());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -5,13 +5,15 @@
 //! examples, and the CLI, and every result is also emitted as JSON under
 //! `results/` for EXPERIMENTS.md.
 
+pub mod artifacts;
+
 use std::path::Path;
 
 use crate::coordinator::WorkerStats;
 use crate::pruning::synthetic::DatasetProfile;
 use crate::pruning::NetworkStats;
 use crate::sim::{Comparison, ShardPlan};
-use crate::util::json::{arr_f64, obj, Json};
+use crate::util::json::{arr_f64, arr_usize, obj, Json};
 use crate::xbar::energy::EnergyLedger;
 
 /// Render Table I (hardware parameters) from the live config.
@@ -150,8 +152,82 @@ impl Fig8Row {
             ("ours_dac", od.into()),
             ("ours_rram", or_.into()),
             ("ours_total_norm", ot.into()),
+            // raw totals alongside the normalized stack: the
+            // sampled-vs-exact delta report compares absolute energies
+            ("baseline_total_pj", self.baseline.total_pj().into()),
+            ("ours_total_pj", self.ours.total_pj().into()),
             ("energy_efficiency", self.efficiency().into()),
             ("paper_efficiency", self.paper_efficiency.into()),
+        ])
+    }
+}
+
+/// One Table II row plus the §V-C speedup it implies: pruning structure
+/// statistics (trace-independent) and the simulated naive/pattern cycle
+/// totals (trace-dependent) side by side — the third paper artifact the
+/// sampled-vs-exact pipeline regenerates in both modes.
+#[derive(Debug, Clone)]
+pub struct Table2Row {
+    pub dataset: String,
+    pub sparsity: f64,
+    pub paper_sparsity: f64,
+    pub patterns_per_layer: Vec<usize>,
+    pub paper_patterns_per_layer: Vec<usize>,
+    pub total_patterns: usize,
+    pub all_zero_ratio: f64,
+    pub paper_all_zero_ratio: f64,
+    pub top1: String,
+    pub top5: String,
+    /// Simulated whole-network cycles of the naive Fig. 1 baseline.
+    pub naive_cycles: f64,
+    /// Simulated whole-network cycles of the pattern scheme.
+    pub pattern_cycles: f64,
+    pub paper_speedup: f64,
+}
+
+impl Table2Row {
+    pub fn speedup(&self) -> f64 {
+        self.naive_cycles / self.pattern_cycles.max(1.0)
+    }
+
+    pub fn line(&self) -> String {
+        format!(
+            "{:<10} sparsity {:.2}% (paper {:.2}%)  patterns {:?} (paper {:?})  \
+             total {} (paper {})  zero-kernels {:.1}% (paper {:.1}%)  \
+             top1 {} top5 {}  speedup {:.2}x (paper {:.2}x)",
+            self.dataset,
+            self.sparsity * 100.0,
+            self.paper_sparsity * 100.0,
+            self.patterns_per_layer,
+            self.paper_patterns_per_layer,
+            self.total_patterns,
+            self.paper_patterns_per_layer.iter().sum::<usize>(),
+            self.all_zero_ratio * 100.0,
+            self.paper_all_zero_ratio * 100.0,
+            self.top1,
+            self.top5,
+            self.speedup(),
+            self.paper_speedup,
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("dataset", self.dataset.as_str().into()),
+            ("sparsity", self.sparsity.into()),
+            ("paper_sparsity", self.paper_sparsity.into()),
+            ("patterns_per_layer", arr_usize(&self.patterns_per_layer)),
+            (
+                "paper_patterns_per_layer",
+                arr_usize(&self.paper_patterns_per_layer),
+            ),
+            ("total_patterns", self.total_patterns.into()),
+            ("all_zero_ratio", self.all_zero_ratio.into()),
+            ("paper_all_zero_ratio", self.paper_all_zero_ratio.into()),
+            ("naive_cycles", self.naive_cycles.into()),
+            ("pattern_cycles", self.pattern_cycles.into()),
+            ("speedup", self.speedup().into()),
+            ("paper_speedup", self.paper_speedup.into()),
         ])
     }
 }
@@ -366,11 +442,14 @@ pub fn write_json(path_under_results: &str, j: &Json) -> std::io::Result<()> {
 }
 
 /// Write a text artifact (CSV, tables) under `results/`, creating the
-/// directory.
+/// directory — nested paths (e.g. `paper/fig7_exact.json`) get their
+/// parent directories created too.
 pub fn write_text(path_under_results: &str, text: &str) -> std::io::Result<()> {
-    let dir = Path::new("results");
-    std::fs::create_dir_all(dir)?;
-    std::fs::write(dir.join(path_under_results), text)
+    let path = Path::new("results").join(path_under_results);
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(path, text)
 }
 
 #[cfg(test)]
@@ -530,6 +609,35 @@ mod tests {
             j.get("workers").idx(1).get("quarantined").as_bool(),
             Some(true)
         );
+    }
+
+    #[test]
+    fn table2_row_speedup_and_json() {
+        let r = Table2Row {
+            dataset: "cifar10".into(),
+            sparsity: 0.8603,
+            paper_sparsity: 0.8603,
+            patterns_per_layer: vec![2, 2, 8],
+            paper_patterns_per_layer: vec![2, 2, 8],
+            total_patterns: 12,
+            all_zero_ratio: 0.41,
+            paper_all_zero_ratio: 0.409,
+            top1: "92.63%".into(),
+            top5: "/".into(),
+            naive_cycles: 1200.0,
+            pattern_cycles: 400.0,
+            paper_speedup: 1.35,
+        };
+        assert!((r.speedup() - 3.0).abs() < 1e-12);
+        let j = r.to_json();
+        assert_eq!(j.get("naive_cycles").as_f64(), Some(1200.0));
+        assert!((j.get("speedup").as_f64().unwrap() - 3.0).abs() < 1e-12);
+        assert_eq!(
+            j.get("patterns_per_layer").as_arr().map(|a| a.len()),
+            Some(3)
+        );
+        assert!(r.line().contains("3.00x"), "{}", r.line());
+        assert!(r.line().contains("paper 1.35x"), "{}", r.line());
     }
 
     #[test]

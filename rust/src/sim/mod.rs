@@ -22,6 +22,36 @@
 //! Layers are simulated at `sample_positions` sampled output positions
 //! and scaled to the full feature map (exact mode: `None`).
 //!
+//! # Sampled vs exact trace mode
+//!
+//! `SimConfig::sample_positions` selects the trace fidelity
+//! ([`crate::config::SimConfig::sampled`] /
+//! [`crate::config::SimConfig::exact`]):
+//!
+//! - **Sampled** (`Some(n)`): each layer's synthetic trace covers
+//!   `min(n, positions)` output positions and `finish_result` scales
+//!   the integer OU/switch counts by `positions / trace_positions` —
+//!   cheap, but skip fractions carry a ~`1/sqrt(n)` sampling error
+//!   (`tests/prop_invariants.rs` pins the monotone convergence of that
+//!   error at n ∈ {16, 64, 256}).
+//! - **Exact** (`None`): the trace covers every output position, the
+//!   scale is exactly 1.0, and no sampling error exists. Affordable
+//!   since the trace-aggregated engine: one O(positions × cin)
+//!   histogram pass per layer, no per-position block walk.
+//!
+//! Both modes share the same trace seed and activation model, so an
+//! exact run is the sampled run's limit, not a different experiment.
+//! The paper-artifact pipeline ([`crate::report::artifacts`],
+//! `rram-accel artifacts`) regenerates Fig. 7 / Fig. 8 / Table 2 in
+//! both modes and emits `results/paper/delta_report.json`: per
+//! dataset, per scheme, entries `{figure, metric, scheme, sampled,
+//! exact, rel_delta, tolerance, within}` where `rel_delta =
+//! |sampled − exact| / |exact|`. Structural metrics (crossbar counts,
+//! area efficiency, sparsity) get a zero band — they must not move
+//! between modes; trace-dependent metrics (cycles, energy, speedup)
+//! get 10% bands. `tests/paper_artifacts.rs` (tier 2, `PAPER_TIER2=1`)
+//! gates the report plus byte-level determinism of the artifacts.
+//!
 //! Two engines compute this model. [`simulate_layer_reference`] is the
 //! per-position oracle: it walks every (position × block) pair, which
 //! is readable but O(positions × blocks). [`simulate_layer`] is the
@@ -739,12 +769,20 @@ fn finish_result(
     }
 }
 
+/// Does `scheme` have an Input Preprocessing Unit? Only IPU schemes
+/// (everything but the naive Fig. 1 baseline) react to the
+/// zero-detection and block-switch knobs — the single source of truth
+/// shared by `ipu_policy` and the DSE grid expansion, which collapses
+/// those axes for non-IPU schemes instead of evaluating duplicates.
+pub fn scheme_has_ipu(scheme: &str) -> bool {
+    scheme != "naive"
+}
+
 /// Shared scheme policy: only schemes with an Input Preprocessing Unit
-/// (everything but the naive Fig. 1 baseline) get zero-input skipping
-/// and block-switch charges. Single source of truth for every engine —
-/// returns `(skip_zero_inputs, block_switch_cycles)`.
+/// get zero-input skipping and block-switch charges. Returns
+/// `(skip_zero_inputs, block_switch_cycles)`.
 fn ipu_policy(scheme: &str, sim: &SimConfig) -> (bool, f64) {
-    let has_ipu = scheme != "naive";
+    let has_ipu = scheme_has_ipu(scheme);
     (
         sim.zero_detection && has_ipu,
         if has_ipu { sim.block_switch_cycles } else { 0.0 },

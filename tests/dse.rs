@@ -2,11 +2,15 @@
 //! counts and runs, cache-hit bit-exactness, skip handling, and the
 //! sweep → serving auto-tune bridge.
 
-use rram_pattern_accel::config::HardwareConfig;
+use rram_pattern_accel::config::{HardwareConfig, SimConfig};
+use rram_pattern_accel::coordinator::CostModel;
 use rram_pattern_accel::dse::{
     pareto, Objective, ResultCache, SweepRunner, SweepSpec, Workload,
 };
-use rram_pattern_accel::nn::ConvLayer;
+use rram_pattern_accel::mapping::scheme_by_name;
+use rram_pattern_accel::nn::{ConvLayer, NetworkSpec, Tensor};
+use rram_pattern_accel::sim::smallcnn::SmallCnn;
+use rram_pattern_accel::util::rng::Rng;
 
 /// A 8-point grid small enough for test runs, large enough to carry a
 /// real area/energy/cycles trade-off (two schemes, two OU shapes, two
@@ -19,6 +23,8 @@ fn tiny_spec(seed: u64) -> SweepSpec {
         xbar: vec![(256, 256), (512, 512)],
         patterns: vec![4],
         pruning: vec![0.8],
+        zero_detection: vec![true],
+        block_switch: vec![2.0],
         workload: Workload {
             name: "tiny".into(),
             layers: vec![
@@ -27,6 +33,7 @@ fn tiny_spec(seed: u64) -> SweepSpec {
             ],
             n_images: 2,
             samples: 12,
+            exact: false,
             zero_ratio: 0.25,
             seed,
         },
@@ -165,6 +172,182 @@ fn invalid_points_are_skipped_with_reason() {
     for &i in &outcome.frontier.members {
         assert!(outcome.results[i].outcome.is_ok());
     }
+}
+
+/// Trace-mode cache separation (ISSUE-5 regression): a sampled-mode
+/// sweep's cache entries must never be served for exact-mode points —
+/// the second mode starts cold, and each mode re-hits only its own
+/// entries afterwards, reproducing its frontier bit-exactly.
+#[test]
+fn sampled_and_exact_sweeps_use_disjoint_cache_entries() {
+    let cache = temp_cache("mode-split");
+    let sampled = SweepRunner {
+        spec: tiny_spec(42),
+        threads: 2,
+        cache: Some(cache.clone()),
+    }
+    .run();
+    assert_eq!(sampled.cache_hits(), 0, "cold cache");
+    assert!(sampled.cache_misses() > 0);
+
+    let mut espec = tiny_spec(42);
+    espec.workload.exact = true;
+    let exact = SweepRunner {
+        spec: espec.clone(),
+        threads: 2,
+        cache: Some(cache.clone()),
+    }
+    .run();
+    assert_eq!(
+        exact.cache_hits(),
+        0,
+        "a sampled-mode cache entry was served for an exact-mode point"
+    );
+    assert_eq!(exact.cache_misses(), exact.evaluated());
+
+    // each mode re-hits exactly its own entries, bit-exactly
+    let sampled2 = SweepRunner {
+        spec: tiny_spec(42),
+        threads: 1,
+        cache: Some(cache.clone()),
+    }
+    .run();
+    assert_eq!(sampled2.cache_misses(), 0);
+    assert_eq!(sampled2.cache_hits(), sampled.evaluated());
+    assert_eq!(
+        sampled.frontier_json().to_string_pretty(),
+        sampled2.frontier_json().to_string_pretty()
+    );
+    let exact2 = SweepRunner {
+        spec: espec,
+        threads: 1,
+        cache: Some(cache.clone()),
+    }
+    .run();
+    assert_eq!(exact2.cache_misses(), 0);
+    assert_eq!(exact2.cache_hits(), exact.evaluated());
+    assert_eq!(
+        exact.frontier_json().to_string_pretty(),
+        exact2.frontier_json().to_string_pretty()
+    );
+    let _ = std::fs::remove_dir_all(cache.dir());
+}
+
+/// Serving-bridge acceptance (ISSUE-5): `serve --auto-tune --tune-exact`
+/// boils down to (1) selecting a frontier point from an exact-mode
+/// sweep of the 48-point `small` grid and (2) building the pool's
+/// `HardwareConfig` and calibrated `CostModel` from it. Both halves are
+/// pinned against hand computations here.
+#[test]
+fn exact_auto_tune_matches_hand_computed_selection() {
+    let mut spec = SweepSpec::small(42);
+    spec.workload.exact = true;
+    assert_eq!(spec.expand().len(), 48, "the 48-point small grid");
+    let outcome = SweepRunner { spec, threads: 2, cache: None }.run();
+    let obj = Objective { w_area: 1.0, w_energy: 0.5, w_cycles: 2.0 };
+    let t = outcome.select(&obj).expect("exact-mode frontier selects");
+
+    // Hand-computed selection: per-metric frontier minima, then the
+    // weighted normalized score, first minimum winning — exactly the
+    // documented `select_config` contract, recomputed from scratch.
+    let members = &outcome.frontier.members;
+    assert!(!members.is_empty());
+    let (mut min_a, mut min_e, mut min_c) =
+        (f64::INFINITY, f64::INFINITY, f64::INFINITY);
+    for &i in members {
+        let m = outcome.results[i].metrics().unwrap();
+        min_a = min_a.min(m.area_cells);
+        min_e = min_e.min(m.energy_pj);
+        min_c = min_c.min(m.cycles);
+    }
+    let mut best = None;
+    for &i in members {
+        let m = outcome.results[i].metrics().unwrap();
+        let s = obj.w_area * m.area_cells / min_a
+            + obj.w_energy * m.energy_pj / min_e
+            + obj.w_cycles * m.cycles / min_c;
+        match best {
+            Some((_, bs)) if bs <= s => {}
+            _ => best = Some((i, s)),
+        }
+    }
+    let (want_i, _) = best.unwrap();
+    assert_eq!(t.point, outcome.results[want_i].point, "selected point");
+    assert_eq!(
+        &t.metrics,
+        outcome.results[want_i].metrics().unwrap(),
+        "selected metrics"
+    );
+
+    // The tuned HardwareConfig serve builds: the point's geometry on
+    // the SmallCNN functional base, precision untouched.
+    let serve_hw = t
+        .point
+        .apply_dims(&HardwareConfig::smallcnn_functional())
+        .expect("tuned geometry boots the serving base");
+    assert_eq!(serve_hw.ou_rows, t.point.ou_rows);
+    assert_eq!(serve_hw.ou_cols, t.point.ou_cols);
+    assert_eq!(serve_hw.xbar_rows, t.point.xbar_rows);
+    assert_eq!(serve_hw.weight_bits, 8, "serving precision preserved");
+
+    // The tuned CostModel serve builds: the winner's scheme maps a
+    // SmallCNN bundle, exact traces over calibration images fit the
+    // per-layer regressions, and `CostModel::from_calibration` must
+    // reproduce the hand-derived dense cost, skip slope and estimates.
+    let scheme = scheme_by_name(&t.point.scheme).expect("tuned scheme registered");
+    let net = NetworkSpec {
+        name: "bridge".into(),
+        layers: vec![
+            ConvLayer { name: "c0".into(), cin: 2, cout: 6, fmap: 6 },
+            ConvLayer { name: "c1".into(), cin: 6, cout: 8, fmap: 3 },
+        ],
+    };
+    let model = SmallCnn::synthetic(net, 11);
+    let mapped = model.map(scheme.as_ref(), &serve_hw);
+    mapped.validate().expect("tuned geometry maps the serving bundle");
+    let n = 5;
+    let img_len = 2 * 6 * 6;
+    let mut rng = Rng::seed_from(17);
+    let mut calib = Tensor::zeros(&[n, 2, 6, 6]);
+    for i in 0..n {
+        let pz = i as f64 / n as f64;
+        for v in calib.data[i * img_len..(i + 1) * img_len].iter_mut() {
+            *v = if rng.chance(pz) { 0.0 } else { rng.f32() + 0.01 };
+        }
+    }
+    let cal = model.calibrate(&mapped, &calib, &serve_hw, &SimConfig::default(), 2);
+    let cm = CostModel::from_calibration(&cal);
+
+    // hand-derived dense cost and slope from the per-layer fits
+    let want_dense = cal.total_cycles_at(0.0).max(0.0);
+    assert!(
+        (cm.dense_cycles - want_dense).abs() <= 1e-9 * want_dense.max(1.0),
+        "dense cycles {} vs fit {}",
+        cm.dense_cycles,
+        want_dense
+    );
+    let cyc_slope: f64 = cal.layers.iter().map(|l| l.cycles_slope).sum();
+    let want_slope = if cm.dense_cycles > 1e-12 {
+        (-cyc_slope / cm.dense_cycles).max(0.0)
+    } else {
+        0.0
+    };
+    assert!(
+        (cm.skip_slope - want_slope).abs() <= 1e-9 * want_slope.max(1.0),
+        "skip slope {} vs hand {}",
+        cm.skip_slope,
+        want_slope
+    );
+    // estimates follow the fitted line: dense image pays the full dense
+    // cost, a half-zero image pays the discounted cost
+    let dense_img = vec![1.0f32; 8];
+    assert_eq!(cm.estimate(&dense_img).est_cycles, cm.dense_cycles);
+    let half: Vec<f32> =
+        (0..8).map(|i| if i % 2 == 0 { 0.0 } else { 1.0 }).collect();
+    let est = cm.estimate(&half);
+    assert!((est.input_zero_fraction - 0.5).abs() < 1e-12);
+    let keep = (1.0 - cm.skip_slope * 0.5).clamp(0.0, 1.0);
+    assert_eq!(est.est_cycles, cm.dense_cycles * keep);
 }
 
 /// The auto-tune bridge: a weighted objective selects a frontier point

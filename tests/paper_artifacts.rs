@@ -1,0 +1,224 @@
+//! Tier-2 paper-artifact conformance suite (ISSUE-5).
+//!
+//! These tests regenerate the paper figure artifacts through the
+//! `report::artifacts` pipeline on the smallest Table-II profile
+//! (cifar10) in both trace modes and pin the pipeline's contract:
+//!
+//!   1. exact artifacts are byte-identical across thread counts and
+//!      across cached-vs-fresh runs,
+//!   2. every |sampled − exact| relative delta sits inside the declared
+//!      tolerance bands (structural metrics: exactly equal),
+//!   3. the paper's ordering/band invariants hold in exact mode
+//!      (pattern ≥ k-means ≥ naive on area efficiency; the published
+//!      4.16x–5.20x area band bracketed by the reproduction band).
+//!
+//! They are `#[ignore]`d so the tier-1 `cargo test -q` wall time is
+//! untouched; the CI `paper-artifacts` job (and local runs) enable
+//! them with:
+//!
+//! ```text
+//! PAPER_TIER2=1 cargo test --release --test paper_artifacts -- --ignored
+//! ```
+
+use rram_pattern_accel::pruning::synthetic::{DatasetProfile, CIFAR10};
+use rram_pattern_accel::report::artifacts::{
+    delta_report, ArtifactCache, ArtifactConfig, DeltaTolerances,
+    PaperArtifacts, TraceMode, PAPER_AREA_BAND,
+};
+
+const TIER2_ENV: &str = "PAPER_TIER2";
+
+/// The suite runs only when explicitly requested: `--ignored` alone is
+/// not enough, the env gate must agree (so a blanket
+/// `cargo test -- --ignored` elsewhere cannot pull in the slow tier).
+/// Any non-empty value except `0` enables it; a skip always says so on
+/// stderr — a green gate must never mean "silently did nothing".
+fn tier2_enabled() -> bool {
+    match std::env::var(TIER2_ENV) {
+        Ok(v) if !v.is_empty() && v != "0" => true,
+        other => {
+            eprintln!(
+                "skipping: tier-2 conformance needs {TIER2_ENV}=1 \
+                 (currently {other:?}; run via the CI paper-artifacts job \
+                 or set it locally)"
+            );
+            false
+        }
+    }
+}
+
+/// Smallest profile: the tier-2 CI budget is one VGG16-CIFAR dataset.
+fn profiles() -> Vec<&'static DatasetProfile> {
+    vec![&CIFAR10]
+}
+
+fn cfg(mode: TraceMode, threads: usize) -> ArtifactConfig {
+    ArtifactConfig { seed: 42, mode, threads }
+}
+
+fn emitted_bytes(p: &PaperArtifacts) -> Vec<String> {
+    vec![
+        p.fig7_json().to_string_pretty(),
+        p.fig8_json().to_string_pretty(),
+        p.table2_json().to_string_pretty(),
+    ]
+}
+
+fn temp_cache(tag: &str) -> ArtifactCache {
+    let dir = std::env::temp_dir()
+        .join(format!("rram-paper-tier2-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    ArtifactCache::new(dir)
+}
+
+/// Conformance 1a: exact (and sampled) artifact bytes are invariant
+/// under the worker thread count — and so is the delta report built
+/// from them.
+#[test]
+#[ignore = "tier 2: set PAPER_TIER2=1 and run with --ignored"]
+fn artifacts_are_byte_identical_across_thread_counts() {
+    if !tier2_enabled() {
+        return;
+    }
+    let profs = profiles();
+    let tol = DeltaTolerances::default();
+    let mut reports = Vec::new();
+    for threads in [1usize, 2] {
+        let sampled = PaperArtifacts::generate(
+            &profs,
+            &cfg(TraceMode::Sampled(64), threads),
+            None,
+        );
+        let exact =
+            PaperArtifacts::generate(&profs, &cfg(TraceMode::Exact, threads), None);
+        reports.push((
+            emitted_bytes(&sampled),
+            emitted_bytes(&exact),
+            delta_report(&sampled, &exact, &tol)
+                .expect("delta report")
+                .to_json()
+                .to_string_pretty(),
+        ));
+    }
+    let (s1, e1, d1) = &reports[0];
+    let (s2, e2, d2) = &reports[1];
+    assert_eq!(s1, s2, "sampled artifact bytes differ across thread counts");
+    assert_eq!(e1, e2, "exact artifact bytes differ across thread counts");
+    assert_eq!(d1, d2, "delta report bytes differ across thread counts");
+}
+
+/// Conformance 1b: a cached rerun serves every dataset from the cache
+/// and reproduces the fresh run's bytes exactly.
+#[test]
+#[ignore = "tier 2: set PAPER_TIER2=1 and run with --ignored"]
+fn cached_rerun_is_bit_exact_with_fresh_run() {
+    if !tier2_enabled() {
+        return;
+    }
+    let profs = profiles();
+    let cache = temp_cache("cache");
+    for mode in [TraceMode::Sampled(64), TraceMode::Exact] {
+        let fresh =
+            PaperArtifacts::generate(&profs, &cfg(mode, 2), Some(&cache));
+        assert_eq!(fresh.cache_hits, 0, "{} cold cache", mode.name());
+        let cached =
+            PaperArtifacts::generate(&profs, &cfg(mode, 1), Some(&cache));
+        assert_eq!(
+            cached.cache_hits,
+            profs.len(),
+            "{} rerun must be all cache hits",
+            mode.name()
+        );
+        assert_eq!(
+            emitted_bytes(&fresh),
+            emitted_bytes(&cached),
+            "{} cached bytes drifted from fresh",
+            mode.name()
+        );
+    }
+    let _ = std::fs::remove_dir_all(cache.dir());
+}
+
+/// Conformance 2: every recorded |sampled − exact| relative delta is
+/// inside its tolerance band — structural metrics exactly equal,
+/// trace-dependent metrics within the configured bands.
+#[test]
+#[ignore = "tier 2: set PAPER_TIER2=1 and run with --ignored"]
+fn sampled_vs_exact_deltas_within_tolerance() {
+    if !tier2_enabled() {
+        return;
+    }
+    let profs = profiles();
+    let sampled =
+        PaperArtifacts::generate(&profs, &cfg(TraceMode::Sampled(64), 2), None);
+    let exact =
+        PaperArtifacts::generate(&profs, &cfg(TraceMode::Exact, 2), None);
+    let rep = delta_report(&sampled, &exact, &DeltaTolerances::default())
+        .expect("delta report");
+    assert!(!rep.entries.is_empty());
+    assert!(rep.all_within(), "deltas out of band:\n{}", rep.lines());
+    // structural metrics must not move between modes at all
+    for e in &rep.entries {
+        if e.tolerance == 0.0 {
+            assert_eq!(
+                e.rel_delta, 0.0,
+                "structural metric {}/{} moved between modes",
+                e.figure, e.metric
+            );
+        }
+    }
+}
+
+/// Conformance 3: the paper's ordering and band invariants hold in
+/// exact mode — no sampling artifacts behind the headline claims.
+#[test]
+#[ignore = "tier 2: set PAPER_TIER2=1 and run with --ignored"]
+fn exact_mode_ordering_and_band_invariants() {
+    if !tier2_enabled() {
+        return;
+    }
+    let profs = profiles();
+    let exact =
+        PaperArtifacts::generate(&profs, &cfg(TraceMode::Exact, 2), None);
+    for d in &exact.datasets {
+        let naive = d.metric("fig7", "naive_crossbars").unwrap();
+        let pattern = d.metric("fig7", "pattern_crossbars").unwrap();
+        let kmeans = d.metric("fig7", "kmeans_crossbars").unwrap();
+        // area-efficiency ordering: pattern ≥ k-means ≥ naive (i.e.
+        // pattern needs the fewest crossbars, naive the most), and the
+        // pattern scheme's saving is strict
+        assert!(
+            pattern <= kmeans && kmeans <= naive && pattern < naive,
+            "{}: area ordering broken (naive {naive}, kmeans {kmeans}, \
+             pattern {pattern})",
+            d.dataset
+        );
+        let eff = d.metric("fig7", "area_efficiency").unwrap();
+        // the reproduction band (3x..8x) brackets the paper's published
+        // 4.16x–5.20x spread; the row must carry the paper reference
+        assert!(
+            eff > 3.0 && eff < 8.0,
+            "{}: exact-mode area efficiency {eff:.2} out of band",
+            d.dataset
+        );
+        let paper = d.metric("fig7", "paper_efficiency").unwrap();
+        assert!(
+            (PAPER_AREA_BAND.0..=PAPER_AREA_BAND.1).contains(&paper),
+            "{}: paper reference {paper} outside the published 4.16–5.20 band",
+            d.dataset
+        );
+        // energy and speedup stay in their reproduction bands too
+        let energy = d.metric("fig8", "energy_efficiency").unwrap();
+        assert!(
+            energy > 1.4 && energy < 3.5,
+            "{}: exact-mode energy efficiency {energy:.2} out of band",
+            d.dataset
+        );
+        let speedup = d.metric("table2", "speedup").unwrap();
+        assert!(
+            speedup > 1.0,
+            "{}: exact-mode speedup {speedup:.2} must beat the baseline",
+            d.dataset
+        );
+    }
+}
