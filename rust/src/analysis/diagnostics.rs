@@ -1,0 +1,201 @@
+//! Diagnostics and the deterministic lint report.
+//!
+//! Every finding carries a `path:line:col` span, the rule id, a
+//! severity, and a one-line message. Reports sort findings by
+//! `(path, line, col, rule)` so text output, `--json` output, and the
+//! `results/lint_report.json` artifact are byte-identical run to run —
+//! the `lint-static` CI job compares two consecutive runs with `cmp`.
+
+use crate::util::json::{obj, Json};
+use std::collections::BTreeSet;
+
+/// Finding severity. `error` findings always fail the lint exit code;
+/// `warning` findings fail only under `--deny-warnings` (which is how
+/// CI runs it, so the distinction only matters for local iteration).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    Warning,
+    Error,
+}
+
+impl Severity {
+    pub fn name(self) -> &'static str {
+        match self {
+            Severity::Warning => "warning",
+            Severity::Error => "error",
+        }
+    }
+}
+
+/// One lint finding, anchored to the original source span (the
+/// scrubber preserves line/column structure exactly).
+#[derive(Debug, Clone)]
+pub struct Diagnostic {
+    /// Display path — relative to the repo root for tree scans so the
+    /// report is stable across checkouts and machines.
+    pub path: String,
+    /// 1-based line in the original file.
+    pub line: usize,
+    /// 1-based byte column in the original file.
+    pub col: usize,
+    pub rule: &'static str,
+    pub severity: Severity,
+    pub message: String,
+}
+
+impl Diagnostic {
+    fn sort_key(&self) -> (&str, usize, usize, &'static str) {
+        (&self.path, self.line, self.col, self.rule)
+    }
+
+    fn to_json(&self) -> Json {
+        obj(vec![
+            ("path", Json::from(self.path.as_str())),
+            ("line", Json::from(self.line)),
+            ("col", Json::from(self.col)),
+            ("rule", Json::from(self.rule)),
+            ("severity", Json::from(self.severity.name())),
+            ("message", Json::from(self.message.as_str())),
+        ])
+    }
+
+    fn render(&self) -> String {
+        format!(
+            "{}:{}:{}: {}[{}] {}",
+            self.path,
+            self.line,
+            self.col,
+            self.severity.name(),
+            self.rule,
+            self.message
+        )
+    }
+}
+
+/// Aggregated result of one lint run.
+#[derive(Debug, Default)]
+pub struct LintReport {
+    /// Findings, sorted by `(path, line, col, rule)`.
+    pub diagnostics: Vec<Diagnostic>,
+    pub files_scanned: usize,
+    /// Findings silenced by `lint:allow` pragmas.
+    pub suppressed: usize,
+}
+
+impl LintReport {
+    /// Add one file's findings and re-establish the global sort order.
+    pub fn absorb(&mut self, diags: Vec<Diagnostic>, suppressed: usize) {
+        self.diagnostics.extend(diags);
+        self.suppressed += suppressed;
+        self.files_scanned += 1;
+        self.diagnostics.sort_by(|a, b| a.sort_key().cmp(&b.sort_key()));
+    }
+
+    pub fn errors(&self) -> usize {
+        self.diagnostics
+            .iter()
+            .filter(|d| d.severity == Severity::Error)
+            .count()
+    }
+
+    pub fn warnings(&self) -> usize {
+        self.diagnostics
+            .iter()
+            .filter(|d| d.severity == Severity::Warning)
+            .count()
+    }
+
+    /// Human-readable findings, one per line (empty string when clean).
+    pub fn lines(&self) -> String {
+        let mut s = String::new();
+        for d in &self.diagnostics {
+            s.push_str(&d.render());
+            s.push('\n');
+        }
+        s
+    }
+
+    pub fn summary_line(&self) -> String {
+        format!(
+            "lint: {} files scanned, {} errors, {} warnings ({} suppressed)",
+            self.files_scanned,
+            self.errors(),
+            self.warnings(),
+            self.suppressed
+        )
+    }
+
+    /// Deterministic JSON form (object keys sorted by the `Json`
+    /// BTreeMap representation, findings in report order).
+    pub fn to_json(&self) -> Json {
+        let rules: BTreeSet<&'static str> =
+            super::RULES.iter().map(|r| r.id).collect();
+        obj(vec![
+            ("version", Json::from(1usize)),
+            ("files_scanned", Json::from(self.files_scanned)),
+            ("errors", Json::from(self.errors())),
+            ("warnings", Json::from(self.warnings())),
+            ("suppressed", Json::from(self.suppressed)),
+            (
+                "rules",
+                Json::Arr(rules.into_iter().map(Json::from).collect()),
+            ),
+            (
+                "diagnostics",
+                Json::Arr(self.diagnostics.iter().map(|d| d.to_json()).collect()),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn diag(path: &str, line: usize, col: usize, rule: &'static str) -> Diagnostic {
+        Diagnostic {
+            path: path.to_string(),
+            line,
+            col,
+            rule,
+            severity: Severity::Error,
+            message: "m".to_string(),
+        }
+    }
+
+    #[test]
+    fn report_sorts_by_path_line_col_rule() {
+        let mut r = LintReport::default();
+        r.absorb(vec![diag("b.rs", 2, 1, "r1"), diag("b.rs", 1, 5, "r2")], 0);
+        r.absorb(vec![diag("a.rs", 9, 1, "r1")], 1);
+        let order: Vec<(String, usize)> = r
+            .diagnostics
+            .iter()
+            .map(|d| (d.path.clone(), d.line))
+            .collect();
+        assert_eq!(
+            order,
+            vec![
+                ("a.rs".to_string(), 9),
+                ("b.rs".to_string(), 1),
+                ("b.rs".to_string(), 2)
+            ]
+        );
+        assert_eq!(r.files_scanned, 2);
+        assert_eq!(r.suppressed, 1);
+    }
+
+    #[test]
+    fn json_shape_and_counts() {
+        let mut r = LintReport::default();
+        let mut w = diag("a.rs", 1, 1, "r1");
+        w.severity = Severity::Warning;
+        r.absorb(vec![w, diag("a.rs", 2, 1, "r2")], 3);
+        let j = r.to_json();
+        let s = j.to_string_pretty();
+        let parsed = Json::parse(&s).expect("report JSON must parse");
+        assert_eq!(parsed.get("errors").as_usize(), Some(1));
+        assert_eq!(parsed.get("warnings").as_usize(), Some(1));
+        assert_eq!(parsed.get("suppressed").as_usize(), Some(3));
+    }
+}

@@ -1,0 +1,438 @@
+//! Comment/string-aware source scrubber for the lint engine.
+//!
+//! Rules must never fire on text inside comments, string literals, char
+//! literals, or raw strings — a doc comment *describing* `HashMap` is
+//! not a determinism hazard. [`scrub`] rewrites a Rust source file so
+//! that every byte inside those regions becomes a space (newlines are
+//! preserved), which keeps all remaining code at its original line and
+//! column. Rule matching then runs on the scrubbed text with plain
+//! substring/identifier searches and reports spans that line up with
+//! the original file.
+//!
+//! Comment *text* is not discarded: it is collected per line so that
+//! suppression pragmas (`// lint:allow(rule)`) and fixture path
+//! overrides (`// lint:path(virtual/path.rs)`) can be parsed without a
+//! second pass.
+//!
+//! The scrubber understands the lexical shapes that trip naive
+//! scanners: nested block comments (Rust block comments nest), raw
+//! strings with arbitrary `#` fences (`r#"…"#`, `br##"…"##`), byte
+//! strings, escaped quotes inside strings and char literals, and the
+//! char-literal/lifetime ambiguity (`'a'` vs `'a`).
+
+use std::collections::{BTreeMap, BTreeSet};
+
+/// A source file with comments and literal contents blanked out, plus
+/// the pragmas that were found inside the comments.
+#[derive(Debug)]
+pub struct ScrubbedSource {
+    /// Scrubbed text: byte-for-byte the same length and line structure
+    /// as the input, with comment/literal interiors replaced by spaces.
+    pub code: String,
+    /// Byte offset of the start of each line of `code` (line `i` is
+    /// 1-based line `i + 1`).
+    line_starts: Vec<usize>,
+    /// `lint:allow` pragmas: line number → rule ids allowed there.
+    pragmas: BTreeMap<usize, BTreeSet<String>>,
+    /// `lint:path(...)` override, used by fixtures to opt into
+    /// directory-scoped rules from outside the real tree.
+    pub virtual_path: Option<String>,
+}
+
+impl ScrubbedSource {
+    /// Map a byte offset in `code` to a 1-based `(line, column)`.
+    pub fn line_col(&self, offset: usize) -> (usize, usize) {
+        let idx = self.line_starts.partition_point(|&s| s <= offset) - 1;
+        (idx + 1, offset - self.line_starts[idx] + 1)
+    }
+
+    /// Is `rule` suppressed at `line`? A pragma applies to its own line
+    /// and to the line directly below it, so both styles work:
+    ///
+    /// ```text
+    /// // lint:allow(no-wall-clock-in-pure-paths)
+    /// let t0 = Instant::now();                  // suppressed (line above)
+    /// let t1 = Instant::now(); // lint:allow(no-wall-clock-in-pure-paths)
+    /// ```
+    pub fn allows(&self, line: usize, rule: &str) -> bool {
+        let hit = |l: usize| {
+            self.pragmas
+                .get(&l)
+                .is_some_and(|rules| rules.contains(rule) || rules.contains("all"))
+        };
+        hit(line) || (line > 1 && hit(line - 1))
+    }
+
+    /// Number of `lint:allow` pragma lines found (for report stats).
+    pub fn pragma_lines(&self) -> usize {
+        self.pragmas.len()
+    }
+}
+
+/// Lexer state: which kind of region the cursor is inside.
+enum State {
+    Code,
+    LineComment,
+    /// Block comment with nesting depth.
+    BlockComment(u32),
+    Str,
+    /// Raw string terminated by `"` + this many `#`s.
+    RawStr(usize),
+    CharLit,
+}
+
+/// Scrub one source file. Never fails: unterminated literals or
+/// comments simply blank through to end of file, which is the safe
+/// direction for a linter (no false positives from inside them).
+pub fn scrub(src: &str) -> ScrubbedSource {
+    let b = src.as_bytes();
+    let mut out: Vec<u8> = Vec::with_capacity(b.len());
+    // comment text per line, for pragma parsing only (ASCII suffices)
+    let mut comments: BTreeMap<usize, String> = BTreeMap::new();
+    let mut state = State::Code;
+    let mut line = 1usize;
+    let mut i = 0usize;
+
+    while i < b.len() {
+        let c = b[i];
+        if c == b'\n' {
+            out.push(b'\n');
+            line += 1;
+            i += 1;
+            if matches!(state, State::LineComment) {
+                state = State::Code;
+            }
+            continue;
+        }
+        match state {
+            State::Code => {
+                if c == b'/' && b.get(i + 1) == Some(&b'/') {
+                    state = State::LineComment;
+                    out.extend_from_slice(b"  ");
+                    i += 2;
+                } else if c == b'/' && b.get(i + 1) == Some(&b'*') {
+                    state = State::BlockComment(1);
+                    out.extend_from_slice(b"  ");
+                    i += 2;
+                } else if c == b'"' {
+                    state = State::Str;
+                    out.push(b'"');
+                    i += 1;
+                } else if c == b'r' && at_ident_start(b, i) {
+                    match raw_string_open(b, i) {
+                        Some((len, hashes)) => {
+                            blank(&mut out, len);
+                            i += len;
+                            state = State::RawStr(hashes);
+                        }
+                        None => {
+                            out.push(c);
+                            i += 1;
+                        }
+                    }
+                } else if c == b'b' && at_ident_start(b, i) && b.get(i + 1) == Some(&b'r') {
+                    match raw_string_open(b, i + 1) {
+                        Some((len, hashes)) => {
+                            blank(&mut out, len + 1);
+                            i += len + 1;
+                            state = State::RawStr(hashes);
+                        }
+                        None => {
+                            out.push(c);
+                            i += 1;
+                        }
+                    }
+                } else if c == b'\'' {
+                    if char_literal_ahead(b, i) {
+                        state = State::CharLit;
+                    }
+                    // lifetimes keep their quote; the ident after is code
+                    out.push(b'\'');
+                    i += 1;
+                } else {
+                    out.push(c);
+                    i += 1;
+                }
+            }
+            State::LineComment => {
+                record_comment_byte(&mut comments, line, c);
+                out.push(b' ');
+                i += 1;
+            }
+            State::BlockComment(depth) => {
+                if c == b'*' && b.get(i + 1) == Some(&b'/') {
+                    out.extend_from_slice(b"  ");
+                    i += 2;
+                    state = if depth == 1 {
+                        State::Code
+                    } else {
+                        State::BlockComment(depth - 1)
+                    };
+                } else if c == b'/' && b.get(i + 1) == Some(&b'*') {
+                    out.extend_from_slice(b"  ");
+                    i += 2;
+                    state = State::BlockComment(depth + 1);
+                } else {
+                    record_comment_byte(&mut comments, line, c);
+                    out.push(b' ');
+                    i += 1;
+                }
+            }
+            State::Str => {
+                if c == b'\\' {
+                    i = blank_escape(b, i, &mut out, &mut line);
+                } else if c == b'"' {
+                    out.push(b'"');
+                    i += 1;
+                    state = State::Code;
+                } else {
+                    out.push(b' ');
+                    i += 1;
+                }
+            }
+            State::RawStr(hashes) => {
+                if c == b'"' && closes_raw_string(b, i, hashes) {
+                    blank(&mut out, 1 + hashes);
+                    i += 1 + hashes;
+                    state = State::Code;
+                } else {
+                    out.push(b' ');
+                    i += 1;
+                }
+            }
+            State::CharLit => {
+                if c == b'\\' {
+                    i = blank_escape(b, i, &mut out, &mut line);
+                } else if c == b'\'' {
+                    out.push(b'\'');
+                    i += 1;
+                    state = State::Code;
+                } else {
+                    out.push(b' ');
+                    i += 1;
+                }
+            }
+        }
+    }
+
+    // Blanked regions are pure ASCII spaces; code regions are copied
+    // verbatim from valid UTF-8, so this cannot actually be lossy.
+    let code = String::from_utf8_lossy(&out).into_owned();
+    let mut line_starts = vec![0usize];
+    for (off, byte) in code.bytes().enumerate() {
+        if byte == b'\n' {
+            line_starts.push(off + 1);
+        }
+    }
+    let (pragmas, virtual_path) = parse_pragmas(&comments);
+    ScrubbedSource { code, line_starts, pragmas, virtual_path }
+}
+
+/// Push `n` spaces (blanked delimiter or literal bytes).
+fn blank(out: &mut Vec<u8>, n: usize) {
+    out.resize(out.len() + n, b' ');
+}
+
+/// Blank a `\x`-style escape pair inside a string/char literal. The
+/// escaped byte must be consumed here so `\"` and `\'` cannot be
+/// mistaken for the closing delimiter; escaped newlines (string
+/// continuation) keep the line structure intact.
+fn blank_escape(b: &[u8], i: usize, out: &mut Vec<u8>, line: &mut usize) -> usize {
+    out.push(b' ');
+    let mut j = i + 1;
+    if j < b.len() {
+        if b[j] == b'\n' {
+            out.push(b'\n');
+            *line += 1;
+        } else {
+            out.push(b' ');
+        }
+        j += 1;
+    }
+    j
+}
+
+/// Would an identifier starting at `i` be a fresh token (not the tail
+/// of a longer identifier like `attr` before `r"..."`)?
+fn at_ident_start(b: &[u8], i: usize) -> bool {
+    i == 0 || !is_word_byte(b[i - 1])
+}
+
+fn is_word_byte(c: u8) -> bool {
+    c.is_ascii_alphanumeric() || c == b'_'
+}
+
+/// Does `r` at `i` open a raw string? Returns the opener length in
+/// bytes (`r` + hashes + `"`) and the hash count.
+fn raw_string_open(b: &[u8], i: usize) -> Option<(usize, usize)> {
+    debug_assert_eq!(b[i], b'r');
+    let mut j = i + 1;
+    while j < b.len() && b[j] == b'#' {
+        j += 1;
+    }
+    if j < b.len() && b[j] == b'"' {
+        Some((j + 1 - i, j - (i + 1)))
+    } else {
+        None
+    }
+}
+
+/// Does the `"` at `i` close a raw string with `hashes` fence hashes?
+fn closes_raw_string(b: &[u8], i: usize, hashes: usize) -> bool {
+    debug_assert_eq!(b[i], b'"');
+    i + hashes < b.len() && b[i + 1..=i + hashes].iter().all(|&c| c == b'#')
+}
+
+/// Disambiguate a `'` in code position: char literal (`'x'`, `'\n'`,
+/// `'\u{1F600}'`) vs lifetime (`'static`, `<'a>`). A quote is a char
+/// literal iff it is followed by an escape, or by exactly one char and
+/// a closing quote.
+fn char_literal_ahead(b: &[u8], i: usize) -> bool {
+    match b.get(i + 1) {
+        None | Some(&b'\'') => false,
+        Some(&b'\\') => true,
+        Some(&first) => {
+            let len = utf8_len(first);
+            b.get(i + 1 + len) == Some(&b'\'')
+        }
+    }
+}
+
+/// Length in bytes of the UTF-8 sequence starting with `lead`.
+fn utf8_len(lead: u8) -> usize {
+    match lead {
+        _ if lead < 0x80 => 1,
+        _ if lead < 0xE0 => 2,
+        _ if lead < 0xF0 => 3,
+        _ => 4,
+    }
+}
+
+fn record_comment_byte(comments: &mut BTreeMap<usize, String>, line: usize, c: u8) {
+    let text = comments.entry(line).or_default();
+    text.push(if c.is_ascii() { c as char } else { ' ' });
+}
+
+/// Extract `lint:allow(...)` / `lint:path(...)` directives from the
+/// collected per-line comment text.
+fn parse_pragmas(
+    comments: &BTreeMap<usize, String>,
+) -> (BTreeMap<usize, BTreeSet<String>>, Option<String>) {
+    let mut pragmas: BTreeMap<usize, BTreeSet<String>> = BTreeMap::new();
+    let mut virtual_path = None;
+    for (&line, text) in comments {
+        let mut rest = text.as_str();
+        while let Some(pos) = rest.find("lint:allow(") {
+            let body = &rest[pos + "lint:allow(".len()..];
+            let Some(end) = body.find(')') else { break };
+            let entry = pragmas.entry(line).or_default();
+            for rule in body[..end].split(',') {
+                let rule = rule.trim();
+                if !rule.is_empty() {
+                    entry.insert(rule.to_string());
+                }
+            }
+            rest = &body[end..];
+        }
+        if virtual_path.is_none() {
+            if let Some(pos) = text.find("lint:path(") {
+                let body = &text[pos + "lint:path(".len()..];
+                if let Some(end) = body.find(')') {
+                    virtual_path = Some(body[..end].trim().to_string());
+                }
+            }
+        }
+    }
+    (pragmas, virtual_path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn line_comments_blanked_code_kept() {
+        let s = scrub("let x = 1; // HashMap here\nlet y = 2;\n");
+        assert!(!s.code.contains("HashMap"));
+        assert!(s.code.contains("let x = 1;"));
+        assert!(s.code.contains("let y = 2;"));
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let s = scrub("a /* outer /* inner */ still comment */ b\n");
+        assert!(s.code.contains('a'));
+        assert!(s.code.contains('b'));
+        assert!(!s.code.contains("outer"));
+        assert!(!s.code.contains("still"));
+    }
+
+    #[test]
+    fn string_contents_blanked_delimiters_kept() {
+        let s = scrub(r#"let m = "HashMap::new() \" quoted"; iter()"#);
+        assert!(!s.code.contains("HashMap"));
+        assert!(s.code.contains("iter()"));
+        // the escaped quote must not have closed the string early
+        assert_eq!(s.code.matches('"').count(), 2);
+    }
+
+    #[test]
+    fn raw_strings_with_fences() {
+        let src = "let a = r#\"Instant::now() \"quoted\" \"#; after()";
+        let s = scrub(src);
+        assert!(!s.code.contains("Instant"));
+        assert!(s.code.contains("after()"));
+        let s2 = scrub("let b = br##\"SystemTime\"##; tail");
+        assert!(!s2.code.contains("SystemTime"));
+        assert!(s2.code.contains("tail"));
+    }
+
+    #[test]
+    fn char_literal_vs_lifetime() {
+        let s = scrub("fn f<'a>(x: &'a str) { let q = '\\''; let z = 'z'; }");
+        // lifetimes stay as code; char contents blank
+        assert!(s.code.contains("<'a>"));
+        assert!(s.code.contains("&'a str"));
+        assert!(!s.code.contains("'z'"), "char contents must be blanked");
+    }
+
+    #[test]
+    fn multiline_string_keeps_line_numbers() {
+        let s = scrub("let a = \"one\ntwo\nthree\";\nlet b = 1;\n");
+        // `let b` must still be on line 4
+        let off = s.code.find("let b").unwrap();
+        assert_eq!(s.line_col(off).0, 4);
+    }
+
+    #[test]
+    fn pragma_same_and_previous_line() {
+        let src = "\
+// lint:allow(rule-x)
+code line two
+code line three // lint:allow(rule-y, rule-z)
+";
+        let s = scrub(src);
+        assert!(s.allows(1, "rule-x"));
+        assert!(s.allows(2, "rule-x"), "pragma covers the next line");
+        assert!(!s.allows(3, "rule-x"));
+        assert!(s.allows(3, "rule-y"));
+        assert!(s.allows(3, "rule-z"));
+        assert!(s.allows(4, "rule-z"));
+        assert!(!s.allows(3, "rule-w"));
+    }
+
+    #[test]
+    fn virtual_path_directive() {
+        let s = scrub("// lint:path(rust/src/sim/fixture.rs)\nfn f() {}\n");
+        assert_eq!(s.virtual_path.as_deref(), Some("rust/src/sim/fixture.rs"));
+        assert!(scrub("fn f() {}\n").virtual_path.is_none());
+    }
+
+    #[test]
+    fn line_col_roundtrip() {
+        let s = scrub("abc\ndefgh\n");
+        let off = s.code.find("fgh").unwrap();
+        assert_eq!(s.line_col(off), (2, 3));
+        assert_eq!(s.line_col(0), (1, 1));
+    }
+}

@@ -1,0 +1,251 @@
+//! In-tree static analysis: the `rram-accel lint` determinism &
+//! concurrency pass.
+//!
+//! The repo's core promise — paper artifacts and DSE frontiers that are
+//! byte-identical across thread counts and cache states — used to be
+//! enforced only by after-the-fact snapshot tests. This module checks
+//! the *sources* instead: a zero-dependency scanner (the crate is
+//! pure-std by design, so no clippy plugins or external lint
+//! frameworks) built from a comment/string-aware lexer
+//! ([`lexer::scrub`]), a rule engine ([`rules::check_source`]), and
+//! deterministic diagnostics ([`diagnostics::LintReport`]). The CLI
+//! front-end is `rram-accel lint [--json] [--deny-warnings] [paths…]`,
+//! which self-scans `rust/`, `tests/`, and `benches/` by default and is
+//! gated in CI by the `lint-static` job.
+//!
+//! # Rules
+//!
+//! ### `no-unordered-iteration` (error)
+//! **Where:** serialization/hash-identity scopes — `src/report/`,
+//! `src/dse/`, `src/util/json.rs`.
+//! **Why:** `HashMap`/`HashSet` iteration order varies run to run (and
+//! is seeded per-process by the std hasher), so any artifact or cache
+//! key built by iterating one is nondeterministic. Everything feeding
+//! `results/` goes through `BTreeMap`/sorted vectors.
+//! **Example:** `for (k, v) in hash_map { out.push_str(k); }` in a JSON
+//! emitter flags the `HashMap` type mention; rewrite on `BTreeMap` or
+//! sort the pairs first.
+//!
+//! ### `no-wall-clock-in-pure-paths` (error)
+//! **Where:** `src/sim/`, `src/dse/`, `src/report/`, `src/mapping/`.
+//! **Why:** pure paths model time as cycle counts; an `Instant::now()`
+//! or `SystemTime` read makes outputs depend on host speed and breaks
+//! replay. The coordinator/serving edge and benches measure real
+//! latency and are out of scope (or use a pragma).
+//! **Example:** `let t0 = Instant::now();` inside the simulator flags;
+//! derive durations from `HardwareConfig` cycle counts instead.
+//!
+//! ### `no-ambient-rng` (error)
+//! **Where:** everywhere.
+//! **Why:** every experiment must reproduce from a seed recorded in the
+//! report, so all randomness flows through seeded
+//! [`crate::util::rng::Rng`]. `thread_rng`, `from_entropy`,
+//! `RandomState`, `DefaultHasher`, and `rand::` paths are ambient
+//! entropy.
+//! **Example:** `let mut h = DefaultHasher::new();` flags; hash with
+//! [`crate::util::fnv1a`] instead.
+//!
+//! ### `no-float-accumulation-across-threads` (warning)
+//! **Where:** the lexical extent of `parallel_map(`,
+//! `parallel_map_indexed(`, and `parallel_for(` calls, everywhere.
+//! **Why:** float addition is not associative; `+=` onto shared state
+//! inside a parallel closure commits in scheduling order, so totals
+//! drift with thread count. Return per-item values and fold them in
+//! index order after the join (what `parallel_map` already guarantees).
+//! **Example:** `parallel_for(n, t, |i| { *total.lock() += part[i]; })`
+//! flags the `+=`.
+//!
+//! ### `mutex-discipline` (warning)
+//! **Where:** everywhere except `src/util/` (home of the blessed
+//! wrappers).
+//! **Why:** raw `.lock().unwrap()` propagates poison — one panicked
+//! worker wedges every surviving thread that touches the same lock —
+//! and nested single-statement acquisitions embed a lock order the
+//! compiler cannot check. Use [`crate::util::lockcheck::Mutex`]: its
+//! `lock()` recovers poison, and under `--features lockcheck` it
+//! records per-thread acquisition stacks, asserts one global lock
+//! order, and counts contention.
+//! **Example:** `m.lock().unwrap().push(v)` flags; so does
+//! `a.lock().x() + b.lock().y()` (nested hold in one statement).
+//!
+//! # Suppression pragmas
+//!
+//! `// lint:allow(<rule-id>[, <rule-id>…])` silences the named rules on
+//! the pragma's own line and on the line directly below it:
+//!
+//! ```text
+//! // lint:allow(no-wall-clock-in-pure-paths)
+//! let t0 = std::time::Instant::now(); // benchmark-only code path
+//! ```
+//!
+//! `lint:allow(all)` silences every rule for that span. Suppressed
+//! findings are counted in the report's `suppressed` field, so a pragma
+//! is visible, not free.
+//!
+//! `// lint:path(<virtual path>)` re-classifies the file for
+//! directory-scoped rules — the fixture corpus under
+//! `tests/lint_fixtures/` uses it to exercise scoped rules from outside
+//! the real tree. Display paths in diagnostics stay real.
+//!
+//! # Determinism of the lint itself
+//!
+//! File walks are collected and sorted, findings are sorted by
+//! `(path, line, col, rule)`, tree scans report repo-relative paths,
+//! and the JSON encoder keys objects through `BTreeMap` — two runs over
+//! the same tree produce byte-identical `--json` output and
+//! `results/lint_report.json`, which the `lint-static` CI job verifies
+//! with `cmp`.
+
+pub mod diagnostics;
+pub mod lexer;
+pub mod rules;
+
+pub use diagnostics::{Diagnostic, LintReport, Severity};
+pub use rules::{RuleSpec, RULES};
+
+use std::path::{Path, PathBuf};
+
+/// Default scan roots for a tree scan, relative to `base`: every `.rs`
+/// file under `rust/`, `tests/`, and `benches/`. The lint fixture
+/// corpus is excluded — its `bad/` half exists to fail.
+fn default_roots(base: &Path) -> Vec<PathBuf> {
+    ["rust", "tests", "benches"]
+        .iter()
+        .map(|d| base.join(d))
+        .filter(|p| p.is_dir())
+        .collect()
+}
+
+/// Recursively collect `.rs` files under `root` (sorted for
+/// deterministic reports). `skip_fixtures` drops anything under a
+/// `lint_fixtures` directory — used by the default self-scan.
+pub fn collect_rs_files(root: &Path, skip_fixtures: bool) -> std::io::Result<Vec<PathBuf>> {
+    let mut out = Vec::new();
+    if root.is_file() {
+        out.push(root.to_path_buf());
+        return Ok(out);
+    }
+    let mut stack = vec![root.to_path_buf()];
+    while let Some(dir) = stack.pop() {
+        for entry in std::fs::read_dir(&dir)? {
+            let path = entry?.path();
+            if skip_fixtures
+                && path
+                    .file_name()
+                    .is_some_and(|n| n == "lint_fixtures")
+            {
+                continue;
+            }
+            if path.is_dir() {
+                stack.push(path);
+            } else if path.extension().is_some_and(|e| e == "rs") {
+                out.push(path);
+            }
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+/// Lint one file, returning its findings under `display_path`.
+fn lint_file(path: &Path, display_path: &str) -> Result<(Vec<Diagnostic>, usize), String> {
+    let src = std::fs::read_to_string(path)
+        .map_err(|e| format!("read {}: {e}", path.display()))?;
+    let scrubbed = lexer::scrub(&src);
+    Ok(rules::check_source(display_path, &scrubbed))
+}
+
+/// Self-scan the crate tree rooted at `base` (repo root /
+/// `CARGO_MANIFEST_DIR`). Paths in diagnostics are reported relative to
+/// `base` with `/` separators, so reports are byte-stable across
+/// checkouts.
+pub fn lint_tree(base: &Path) -> Result<LintReport, String> {
+    let mut report = LintReport::default();
+    for root in default_roots(base) {
+        let files = collect_rs_files(&root, true)
+            .map_err(|e| format!("walk {}: {e}", root.display()))?;
+        for f in files {
+            let display = display_path(&f, Some(base));
+            let (diags, suppressed) = lint_file(&f, &display)?;
+            report.absorb(diags, suppressed);
+        }
+    }
+    Ok(report)
+}
+
+/// Lint an explicit list of files/directories (CLI positional args).
+/// Explicit roots are scanned in full — no fixture exclusion — and
+/// reported under the paths as given.
+pub fn lint_roots(roots: &[PathBuf]) -> Result<LintReport, String> {
+    let mut report = LintReport::default();
+    for root in roots {
+        let files = collect_rs_files(root, false)
+            .map_err(|e| format!("walk {}: {e}", root.display()))?;
+        for f in files {
+            let display = display_path(&f, None);
+            let (diags, suppressed) = lint_file(&f, &display)?;
+            report.absorb(diags, suppressed);
+        }
+    }
+    Ok(report)
+}
+
+/// Normalized display path: relative to `base` when given and possible,
+/// always `/`-separated.
+fn display_path(path: &Path, base: Option<&Path>) -> String {
+    let p = match base.and_then(|b| path.strip_prefix(b).ok()) {
+        Some(rel) => rel,
+        None => path,
+    };
+    p.components()
+        .map(|c| c.as_os_str().to_string_lossy())
+        .collect::<Vec<_>>()
+        .join("/")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rule_ids_unique_and_kebab() {
+        let mut ids: Vec<&str> = RULES.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        let n = ids.len();
+        ids.dedup();
+        assert_eq!(ids.len(), n, "duplicate rule id");
+        for id in ids {
+            assert!(
+                id.chars().all(|c| c.is_ascii_lowercase() || c == '-'),
+                "rule id {id} is not kebab-case"
+            );
+        }
+    }
+
+    #[test]
+    fn collect_skips_fixture_corpus() {
+        let base = Path::new(env!("CARGO_MANIFEST_DIR"));
+        let files = collect_rs_files(&base.join("tests"), true).unwrap();
+        assert!(
+            files.iter().all(|f| !f.to_string_lossy().contains("lint_fixtures")),
+            "fixture corpus must be excluded from the self-scan"
+        );
+        let all = collect_rs_files(&base.join("tests"), false).unwrap();
+        assert!(
+            all.iter().any(|f| f.to_string_lossy().contains("lint_fixtures")),
+            "explicit scans include fixtures"
+        );
+        // sorted ⇒ deterministic report order
+        let mut sorted = files.clone();
+        sorted.sort();
+        assert_eq!(files, sorted);
+    }
+
+    #[test]
+    fn display_paths_are_relative_and_slashed() {
+        let base = Path::new("/repo");
+        let p = Path::new("/repo/rust/src/sim/mod.rs");
+        assert_eq!(display_path(p, Some(base)), "rust/src/sim/mod.rs");
+        assert_eq!(display_path(Path::new("x/y.rs"), None), "x/y.rs");
+    }
+}

@@ -1,0 +1,476 @@
+//! The determinism/concurrency rule set.
+//!
+//! Each rule is a plain function over a [`ScrubbedSource`] (comments
+//! and literals already blanked, so substring matches only ever hit
+//! code). Rules push [`Diagnostic`]s with spans mapped back to the
+//! original file; [`check_source`] runs all of them, applies
+//! `lint:allow` pragmas, and returns the kept findings plus the
+//! suppressed count.
+//!
+//! Directory-scoped rules classify a file by its *effective path*: the
+//! `lint:path(...)` override when present (fixtures use it to opt into
+//! a scope from `tests/lint_fixtures/`), otherwise the display path.
+
+use super::diagnostics::{Diagnostic, Severity};
+use super::lexer::ScrubbedSource;
+
+/// Registry entry for one rule — drives `--help`, the JSON report's
+/// `rules` array, and the module documentation.
+#[derive(Debug, Clone, Copy)]
+pub struct RuleSpec {
+    pub id: &'static str,
+    pub severity: Severity,
+    pub summary: &'static str,
+}
+
+pub const NO_UNORDERED_ITERATION: &str = "no-unordered-iteration";
+pub const NO_WALL_CLOCK: &str = "no-wall-clock-in-pure-paths";
+pub const NO_AMBIENT_RNG: &str = "no-ambient-rng";
+pub const NO_FLOAT_ACCUMULATION: &str = "no-float-accumulation-across-threads";
+pub const MUTEX_DISCIPLINE: &str = "mutex-discipline";
+
+/// All rules, in documentation order.
+pub const RULES: [RuleSpec; 5] = [
+    RuleSpec {
+        id: NO_UNORDERED_ITERATION,
+        severity: Severity::Error,
+        summary: "HashMap/HashSet in serialization/hash-identity code (use BTreeMap/BTreeSet)",
+    },
+    RuleSpec {
+        id: NO_WALL_CLOCK,
+        severity: Severity::Error,
+        summary: "Instant::now/SystemTime in sim/dse/report/mapping (pure paths take cycles, not clocks)",
+    },
+    RuleSpec {
+        id: NO_AMBIENT_RNG,
+        severity: Severity::Error,
+        summary: "ambient randomness (thread_rng/RandomState/DefaultHasher); use seeded util::rng",
+    },
+    RuleSpec {
+        id: NO_FLOAT_ACCUMULATION,
+        severity: Severity::Warning,
+        summary: "float += inside a parallel_map*/parallel_for closure (fold in canonical order instead)",
+    },
+    RuleSpec {
+        id: MUTEX_DISCIPLINE,
+        severity: Severity::Warning,
+        summary: "raw .lock().unwrap()/.expect() outside util wrappers, or nested lock acquisitions",
+    },
+];
+
+fn severity_of(id: &str) -> Severity {
+    RULES
+        .iter()
+        .find(|r| r.id == id)
+        .map(|r| r.severity)
+        .unwrap_or(Severity::Error)
+}
+
+/// Files whose output feeds serialized artifacts or hash identities:
+/// iteration order there must be deterministic.
+const SCOPE_SERIALIZATION: &[&str] = &["src/report/", "src/dse/", "src/util/json.rs"];
+/// Pure simulation/reporting paths — cycle-accurate, never wall-clock.
+const SCOPE_PURE: &[&str] = &["src/sim/", "src/dse/", "src/report/", "src/mapping/"];
+/// The blessed home of lock wrappers (lockcheck, threadpool, prop).
+const SCOPE_MUTEX_WRAPPERS: &[&str] = &["src/util/"];
+
+fn in_scope(path: &str, scopes: &[&str]) -> bool {
+    scopes.iter().any(|s| path.contains(s))
+}
+
+/// Run every rule on one scrubbed file. `display_path` is what shows in
+/// diagnostics; scoping uses the `lint:path` override when present.
+/// Returns `(kept findings, suppressed count)`.
+pub fn check_source(
+    display_path: &str,
+    scrubbed: &ScrubbedSource,
+) -> (Vec<Diagnostic>, usize) {
+    let effective = scrubbed
+        .virtual_path
+        .clone()
+        .unwrap_or_else(|| display_path.to_string());
+    let mut diags = Vec::new();
+    rule_unordered_iteration(&effective, scrubbed, &mut diags);
+    rule_wall_clock(&effective, scrubbed, &mut diags);
+    rule_ambient_rng(scrubbed, &mut diags);
+    rule_float_accumulation(scrubbed, &mut diags);
+    rule_mutex_discipline(&effective, scrubbed, &mut diags);
+
+    let mut kept = Vec::new();
+    let mut suppressed = 0usize;
+    for mut d in diags {
+        d.path = display_path.to_string();
+        if scrubbed.allows(d.line, d.rule) {
+            suppressed += 1;
+        } else {
+            kept.push(d);
+        }
+    }
+    (kept, suppressed)
+}
+
+fn push(
+    diags: &mut Vec<Diagnostic>,
+    scrubbed: &ScrubbedSource,
+    offset: usize,
+    rule: &'static str,
+    message: String,
+) {
+    let (line, col) = scrubbed.line_col(offset);
+    diags.push(Diagnostic {
+        path: String::new(), // filled in by check_source
+        line,
+        col,
+        rule,
+        severity: severity_of(rule),
+        message,
+    });
+}
+
+// ---------------------------------------------------------------------------
+// matching helpers
+// ---------------------------------------------------------------------------
+
+fn is_word(c: u8) -> bool {
+    c.is_ascii_alphanumeric() || c == b'_'
+}
+
+/// Byte offsets of whole-identifier occurrences of `ident` in `text`
+/// (no match inside a longer identifier).
+fn ident_occurrences(text: &str, ident: &str) -> Vec<usize> {
+    let tb = text.as_bytes();
+    let mut hits = Vec::new();
+    let mut from = 0usize;
+    while let Some(p) = text[from..].find(ident) {
+        let at = from + p;
+        let end = at + ident.len();
+        let before_ok = at == 0 || !is_word(tb[at - 1]);
+        let after_ok = end >= tb.len() || !is_word(tb[end]);
+        if before_ok && after_ok {
+            hits.push(at);
+        }
+        from = at + ident.len();
+    }
+    hits
+}
+
+/// Skip ASCII whitespace (including newlines) from `i`.
+fn skip_ws(tb: &[u8], mut i: usize) -> usize {
+    while i < tb.len() && tb[i].is_ascii_whitespace() {
+        i += 1;
+    }
+    i
+}
+
+// ---------------------------------------------------------------------------
+// rules
+// ---------------------------------------------------------------------------
+
+/// Rule 1: `no-unordered-iteration`.
+fn rule_unordered_iteration(
+    path: &str,
+    scrubbed: &ScrubbedSource,
+    diags: &mut Vec<Diagnostic>,
+) {
+    if !in_scope(path, SCOPE_SERIALIZATION) {
+        return;
+    }
+    for ty in ["HashMap", "HashSet"] {
+        for at in ident_occurrences(&scrubbed.code, ty) {
+            push(
+                diags,
+                scrubbed,
+                at,
+                NO_UNORDERED_ITERATION,
+                format!(
+                    "{ty} in serialization/hash-identity scope — iteration order \
+                     is nondeterministic; use BTreeMap/BTreeSet or sort before emitting"
+                ),
+            );
+        }
+    }
+}
+
+/// Rule 2: `no-wall-clock-in-pure-paths`.
+fn rule_wall_clock(path: &str, scrubbed: &ScrubbedSource, diags: &mut Vec<Diagnostic>) {
+    if !in_scope(path, SCOPE_PURE) {
+        return;
+    }
+    for at in ident_occurrences(&scrubbed.code, "Instant::now") {
+        push(
+            diags,
+            scrubbed,
+            at,
+            NO_WALL_CLOCK,
+            "Instant::now in a pure path — simulated time must come from cycle \
+             counts, not the wall clock"
+                .to_string(),
+        );
+    }
+    for at in ident_occurrences(&scrubbed.code, "SystemTime") {
+        push(
+            diags,
+            scrubbed,
+            at,
+            NO_WALL_CLOCK,
+            "SystemTime in a pure path — artifacts must not depend on the wall clock"
+                .to_string(),
+        );
+    }
+}
+
+/// Rule 3: `no-ambient-rng` (applies everywhere).
+fn rule_ambient_rng(scrubbed: &ScrubbedSource, diags: &mut Vec<Diagnostic>) {
+    for ident in ["thread_rng", "from_entropy", "RandomState", "DefaultHasher"] {
+        for at in ident_occurrences(&scrubbed.code, ident) {
+            push(
+                diags,
+                scrubbed,
+                at,
+                NO_AMBIENT_RNG,
+                format!(
+                    "{ident} is ambient/unseeded randomness — route through \
+                     util::rng::Rng::seed_from so runs reproduce from a recorded seed"
+                ),
+            );
+        }
+    }
+    // bare `rand::` paths (the crate is pure-std; any appearance is a
+    // nondeterminism escape hatch sneaking in)
+    let tb = scrubbed.code.as_bytes();
+    for at in ident_occurrences(&scrubbed.code, "rand") {
+        let after = skip_ws(tb, at + "rand".len());
+        if scrubbed.code[after..].starts_with("::") {
+            push(
+                diags,
+                scrubbed,
+                at,
+                NO_AMBIENT_RNG,
+                "rand:: path — this crate's randomness flows through seeded util::rng"
+                    .to_string(),
+            );
+        }
+    }
+}
+
+/// Rule 4: `no-float-accumulation-across-threads`. Finds the lexical
+/// extent of every `parallel_map(`, `parallel_map_indexed(`, and
+/// `parallel_for(` call (balanced parentheses on scrubbed text) and
+/// flags `+=` inside it: a shared-float accumulation inside a parallel
+/// closure commits results in scheduling order, which breaks
+/// byte-identical artifacts across thread counts. Fold the returned
+/// per-item values in index order instead.
+fn rule_float_accumulation(scrubbed: &ScrubbedSource, diags: &mut Vec<Diagnostic>) {
+    let text = &scrubbed.code;
+    let tb = text.as_bytes();
+    for callee in ["parallel_map_indexed", "parallel_map", "parallel_for"] {
+        for at in ident_occurrences(text, callee) {
+            let open = skip_ws(tb, at + callee.len());
+            if open >= tb.len() || tb[open] != b'(' {
+                continue; // definition, import, or reference — not a call
+            }
+            let Some(close) = matching_paren(tb, open) else {
+                continue;
+            };
+            let mut from = open;
+            while let Some(p) = text[from..close].find("+=") {
+                let hit = from + p;
+                push(
+                    diags,
+                    scrubbed,
+                    hit,
+                    NO_FLOAT_ACCUMULATION,
+                    format!(
+                        "`+=` inside a {callee} closure — cross-thread accumulation \
+                         commits in scheduling order; return per-item values and fold \
+                         them in index order after the join"
+                    ),
+                );
+                from = hit + 2;
+            }
+        }
+    }
+}
+
+/// Offset of the `)` matching the `(` at `open`, if balanced.
+fn matching_paren(tb: &[u8], open: usize) -> Option<usize> {
+    debug_assert_eq!(tb[open], b'(');
+    let mut depth = 0usize;
+    for (i, &c) in tb.iter().enumerate().skip(open) {
+        match c {
+            b'(' => depth += 1,
+            b')' => {
+                depth -= 1;
+                if depth == 0 {
+                    return Some(i);
+                }
+            }
+            _ => {}
+        }
+    }
+    None
+}
+
+/// Rule 5: `mutex-discipline`. Outside `util` (home of the lockcheck
+/// and threadpool wrappers) flags:
+///
+///   * `.lock().unwrap()` / `.lock().expect(` — raw poison-propagating
+///     acquisition; go through `util::lockcheck::Mutex`, whose `lock()`
+///     recovers poison and feeds the lock-order probe;
+///   * two `.lock(` acquisitions inside one statement (no `;`/`{`/`}`
+///     between them) — a nested hold with an order the compiler cannot
+///     see; take one guard at a time or document the order in
+///     lockcheck names.
+fn rule_mutex_discipline(
+    path: &str,
+    scrubbed: &ScrubbedSource,
+    diags: &mut Vec<Diagnostic>,
+) {
+    if in_scope(path, SCOPE_MUTEX_WRAPPERS) {
+        return;
+    }
+    let text = &scrubbed.code;
+    let tb = text.as_bytes();
+    let mut lock_sites = Vec::new();
+    let mut from = 0usize;
+    while let Some(p) = text[from..].find(".lock(") {
+        let at = from + p;
+        lock_sites.push(at);
+        from = at + ".lock(".len();
+    }
+    for &at in &lock_sites {
+        // `.lock(` … `)` then optionally chained `.unwrap()` / `.expect(`
+        let Some(close) = matching_paren(tb, at + ".lock".len()) else {
+            continue;
+        };
+        let next = skip_ws(tb, close + 1);
+        let tail = &text[next.min(text.len())..];
+        if tail.starts_with(".unwrap()") || tail.starts_with(".expect(") {
+            push(
+                diags,
+                scrubbed,
+                at + 1,
+                MUTEX_DISCIPLINE,
+                "raw .lock().unwrap()/.expect() — poison propagates and wedges \
+                 surviving threads; use util::lockcheck::Mutex (poison-recovering, \
+                 order-checked under --features lockcheck)"
+                    .to_string(),
+            );
+        }
+    }
+    for pair in lock_sites.windows(2) {
+        let (a, b) = (pair[0], pair[1]);
+        let between = &text[a..b];
+        if !between.contains(';') && !between.contains('{') && !between.contains('}') {
+            push(
+                diags,
+                scrubbed,
+                b + 1,
+                MUTEX_DISCIPLINE,
+                "second lock acquisition in the same statement — nested holds have \
+                 an implicit order the compiler cannot check; acquire one guard at \
+                 a time (lockcheck asserts a global order at runtime)"
+                    .to_string(),
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::lexer::scrub;
+
+    fn run(path: &str, src: &str) -> Vec<Diagnostic> {
+        let s = scrub(src);
+        check_source(path, &s).0
+    }
+
+    fn rules_of(diags: &[Diagnostic]) -> Vec<&'static str> {
+        diags.iter().map(|d| d.rule).collect()
+    }
+
+    #[test]
+    fn ident_boundaries_respected() {
+        assert_eq!(ident_occurrences("MyHashMapLike HashMap x", "HashMap"), vec![14]);
+        assert!(ident_occurrences("HashMapper", "HashMap").is_empty());
+    }
+
+    #[test]
+    fn unordered_iteration_scoped() {
+        let src = "use std::collections::HashMap;\n";
+        assert_eq!(
+            rules_of(&run("rust/src/report/mod.rs", src)),
+            vec![NO_UNORDERED_ITERATION]
+        );
+        // out of scope: coordinator may keep hash containers
+        assert!(run("rust/src/coordinator/mod.rs", src).is_empty());
+    }
+
+    #[test]
+    fn wall_clock_scoped_and_comment_safe() {
+        let bad = "let t = std::time::Instant::now();\n";
+        assert_eq!(rules_of(&run("rust/src/sim/mod.rs", bad)), vec![NO_WALL_CLOCK]);
+        assert!(run("rust/src/coordinator/mod.rs", bad).is_empty());
+        // mention in a comment or string never fires
+        let commented = "// Instant::now is banned here\nlet s = \"SystemTime\";\n";
+        assert!(run("rust/src/sim/mod.rs", commented).is_empty());
+    }
+
+    #[test]
+    fn ambient_rng_everywhere() {
+        let src = "let h = DefaultHasher::new();\nlet r = rand::thread_rng();\n";
+        let diags = run("rust/src/arch/mod.rs", src);
+        // DefaultHasher + rand:: + thread_rng
+        assert_eq!(diags.len(), 3);
+        assert!(diags.iter().all(|d| d.rule == NO_AMBIENT_RNG));
+    }
+
+    #[test]
+    fn float_accumulation_only_inside_extent() {
+        let bad = "parallel_for(n, t, |i| {\n    total += parts[i];\n});\n";
+        let diags = run("rust/src/sim/mod.rs", bad);
+        assert_eq!(rules_of(&diags), vec![NO_FLOAT_ACCUMULATION]);
+        assert_eq!(diags[0].line, 2);
+        let good = "let v = parallel_map(items, t, |x| x * 2.0);\nlet mut s = 0.0;\nfor x in v { s += x; }\n";
+        assert!(run("rust/src/sim/mod.rs", good).is_empty());
+        // a definition (no call parens) is not an extent
+        let def = "pub fn parallel_map<T>() {}\nlet mut z = 0.0; z += 1.0;\n";
+        assert!(run("rust/src/sim/mod.rs", def).is_empty());
+    }
+
+    #[test]
+    fn mutex_discipline_patterns() {
+        let raw = "m.lock().unwrap().push(v);\n";
+        assert_eq!(rules_of(&run("rust/src/coordinator/mod.rs", raw)), vec![MUTEX_DISCIPLINE]);
+        // split across lines still matches
+        let split = "m.lock()\n    .unwrap()\n    .push(v);\n";
+        assert_eq!(rules_of(&run("rust/src/coordinator/mod.rs", split)), vec![MUTEX_DISCIPLINE]);
+        // nested acquisition in one statement: 2 raw unwraps + 1 nesting
+        let nested = "let n = a.lock().unwrap().len() + b.lock().unwrap().len();\n";
+        assert_eq!(run("rust/src/coordinator/mod.rs", nested).len(), 3);
+        // util wrappers are exempt
+        assert!(run("rust/src/util/threadpool.rs", raw).is_empty());
+        // a poison-recovering lock() without unwrap is clean
+        let clean = "let g = m.lock();\ng.push(v);\n";
+        assert!(run("rust/src/coordinator/mod.rs", clean).is_empty());
+    }
+
+    #[test]
+    fn pragma_suppression_counted() {
+        let src = "// lint:allow(no-wall-clock-in-pure-paths)\nlet t = std::time::Instant::now();\n";
+        let s = scrub(src);
+        let (kept, suppressed) = check_source("rust/src/sim/mod.rs", &s);
+        assert!(kept.is_empty());
+        assert_eq!(suppressed, 1);
+    }
+
+    #[test]
+    fn virtual_path_opts_into_scope() {
+        let src = "// lint:path(rust/src/report/fixture.rs)\nuse std::collections::HashSet;\n";
+        let diags = run("tests/lint_fixtures/bad/x.rs", src);
+        assert_eq!(rules_of(&diags), vec![NO_UNORDERED_ITERATION]);
+        // display path stays the real one
+        assert_eq!(diags[0].path, "tests/lint_fixtures/bad/x.rs");
+    }
+}

@@ -77,10 +77,11 @@
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::sim::{CostCalibration, NetworkSimResult};
+use crate::util::lockcheck;
 use crate::util::stats::Summary;
 use crate::util::threadpool;
 
@@ -353,7 +354,7 @@ impl Reply {
 /// — a request's latency is pushed once at its terminal reply no matter
 /// how many times its batch was retried — so [`Metrics::merge`] over
 /// shards is a plain sum with no double counting.
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct Metrics {
     /// Requests that received a terminal reply — successes *and*
     /// failures — so `failed_requests / requests` is a coherent failure
@@ -381,7 +382,10 @@ pub struct Metrics {
     /// Failure alarm — shared by every shard of one pool, so N workers
     /// trip at the same *total* failure count a single worker would.
     alarm: Arc<AlarmState>,
-    latencies_us: Mutex<Summary>,
+    /// Latency samples. A `lockcheck::Mutex`: a worker that panics
+    /// mid-`push` must not wedge `merged_metrics`/`worker_stats` for
+    /// the surviving pool — `lock()` recovers the poisoned summary.
+    latencies_us: lockcheck::Mutex<Summary>,
 }
 
 /// Pool-wide failure-alarm state: the threshold plus the failure count
@@ -398,6 +402,26 @@ struct AlarmState {
     logged: AtomicBool,
 }
 
+impl Default for Metrics {
+    fn default() -> Metrics {
+        Metrics {
+            requests: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            padded_slots: AtomicU64::new(0),
+            failed_requests: AtomicU64::new(0),
+            retried_batches: AtomicU64::new(0),
+            requeued_requests: AtomicU64::new(0),
+            deadline_expired: AtomicU64::new(0),
+            rejected_overload: AtomicU64::new(0),
+            alarm: Arc::default(),
+            latencies_us: lockcheck::Mutex::named(
+                "metrics.latencies_us",
+                Summary::new(),
+            ),
+        }
+    }
+}
+
 impl Metrics {
     /// A shard wired to an existing (pool-shared) alarm.
     fn with_alarm(alarm: Arc<AlarmState>) -> Metrics {
@@ -405,7 +429,7 @@ impl Metrics {
     }
 
     pub fn latency_summary(&self) -> Summary {
-        self.latencies_us.lock().unwrap().clone()
+        self.latencies_us.lock().clone()
     }
 
     pub fn set_alarm_threshold(&self, n: u64) {
@@ -454,7 +478,7 @@ impl Metrics {
         out.alarm
             .failed
             .store(out.failed_requests.load(Ordering::Relaxed), Ordering::Relaxed);
-        *out.latencies_us.lock().unwrap() = latencies;
+        *out.latencies_us.lock() = latencies;
         out
     }
 
@@ -682,12 +706,12 @@ impl Coordinator {
         B: InferBackend,
         F: FnOnce() -> B + Send + 'static,
     {
-        let cell = Mutex::new(Some(make_backend));
+        let cell =
+            lockcheck::Mutex::named("coordinator.factory_cell", Some(make_backend));
         Self::start_pool(
             move |_worker| {
                 let f = cell
                     .lock()
-                    .unwrap()
                     .take()
                     .expect("single-worker backend factory is one-shot");
                 f()
@@ -1280,11 +1304,7 @@ fn worker_loop<B: InferBackend>(
                     let queue_us = r.submitted.elapsed().as_micros() as u64;
                     state.settle(r.cost);
                     metrics.requests.fetch_add(1, Ordering::Relaxed);
-                    metrics
-                        .latencies_us
-                        .lock()
-                        .unwrap()
-                        .push(queue_us as f64);
+                    metrics.latencies_us.lock().push(queue_us as f64);
                     let _ = r.reply.send(Reply {
                         result: Ok(logits),
                         queue_us,
@@ -1605,14 +1625,14 @@ mod tests {
         a.requests.store(3, Ordering::Relaxed);
         a.batches.store(2, Ordering::Relaxed);
         a.retried_batches.store(1, Ordering::Relaxed);
-        a.latencies_us.lock().unwrap().push(10.0);
-        a.latencies_us.lock().unwrap().push(20.0);
-        a.latencies_us.lock().unwrap().push(30.0);
+        a.latencies_us.lock().push(10.0);
+        a.latencies_us.lock().push(20.0);
+        a.latencies_us.lock().push(30.0);
         b.requests.store(2, Ordering::Relaxed);
         b.failed_requests.store(1, Ordering::Relaxed);
         b.deadline_expired.store(1, Ordering::Relaxed);
         b.set_alarm_threshold(4);
-        b.latencies_us.lock().unwrap().push(40.0);
+        b.latencies_us.lock().push(40.0);
         let m = Metrics::merge([&a, &b]);
         assert_eq!(m.requests.load(Ordering::Relaxed), 5);
         assert_eq!(m.batches.load(Ordering::Relaxed), 2);
@@ -1623,6 +1643,31 @@ mod tests {
         let lat = m.latency_summary();
         assert_eq!(lat.len(), 4);
         assert!((lat.mean() - 25.0).abs() < 1e-12);
+    }
+
+    /// A worker that panics while holding the latency lock must not
+    /// wedge `latency_summary`/`merge` (and thus `merged_metrics` /
+    /// `worker_stats`) for the surviving pool: the poisoned summary is
+    /// recovered, not unwrapped.
+    #[test]
+    fn poisoned_latency_shard_does_not_wedge_survivors() {
+        let a = Arc::new(Metrics::default());
+        a.latencies_us.lock().push(10.0);
+        let shard = Arc::clone(&a);
+        let worker = std::thread::spawn(move || {
+            let _guard = shard.latencies_us.lock();
+            panic!("worker dies holding the latency lock");
+        });
+        assert!(worker.join().is_err(), "worker must have panicked");
+
+        // all three read paths survive the poisoned shard
+        let summary = a.latency_summary();
+        assert_eq!(summary.len(), 1);
+        a.latencies_us.lock().push(20.0);
+        let b = Metrics::default();
+        b.latencies_us.lock().push(30.0);
+        let merged = Metrics::merge([a.as_ref(), &b]);
+        assert_eq!(merged.latency_summary().len(), 3);
     }
 
     /// The merge-without-double-counting invariant end to end: a batch

@@ -18,8 +18,15 @@
 //! utilities ([`util`]) standing in for crates unavailable in this
 //! offline image.
 //!
+//! The crate also checks its own determinism contract statically: the
+//! [`analysis`] module implements the `rram-accel lint` pass (rule set,
+//! suppression pragmas, deterministic reports) and
+//! [`util::lockcheck`] the runtime lock-order probe behind the
+//! `lockcheck` feature.
+//!
 //! See `DESIGN.md` for the full system inventory and experiment index.
 
+pub mod analysis;
 pub mod arch;
 pub mod config;
 pub mod coordinator;

@@ -28,10 +28,15 @@
 //!               plus the machine-readable sampled-vs-exact
 //!               delta_report.json (tolerance-banded; nonzero exit on
 //!               an out-of-band delta)
+//!   lint      — in-tree determinism/concurrency static analysis over
+//!               rust/, tests/, benches/ (`--deny-warnings` in CI);
+//!               exits 0 clean, 1 findings, 2 internal error, writes
+//!               results/lint_report.json sorted by (path, line, rule)
 
 use std::path::Path;
 use std::time::Duration;
 
+use rram_pattern_accel::analysis;
 use rram_pattern_accel::config::{HardwareConfig, SimConfig};
 use rram_pattern_accel::coordinator::{
     BalancePolicy, Coordinator, CoordinatorConfig, CostModel, PjrtBackend,
@@ -71,10 +76,11 @@ fn main() {
         "e2e" => cmd_e2e(rest),
         "report" => cmd_report(rest),
         "artifacts" => cmd_artifacts(rest),
+        "lint" => cmd_lint(rest),
         _ => {
             eprintln!(
                 "usage: rram-accel <map|simulate|batch-sim|dse|serve|e2e|\
-                 report|artifacts> [options]\n\
+                 report|artifacts|lint> [options]\n\
                  run a subcommand with --help for its options"
             );
             if sub == "help" { 0 } else { 2 }
@@ -973,4 +979,76 @@ fn auto_threads(args: &Args) -> usize {
 fn usage(e: String) -> i32 {
     eprintln!("{e}");
     2
+}
+
+/// `rram-accel lint` — the in-tree determinism/concurrency pass (see
+/// `rram_pattern_accel::analysis` for the rule specifications).
+///
+/// Exit codes: 0 = clean, 1 = findings (errors, or warnings under
+/// `--deny-warnings`), 2 = internal error (unreadable path, bad usage,
+/// failed report write).
+fn cmd_lint(rest: Vec<String>) -> i32 {
+    let mut about = String::from(
+        "determinism & concurrency static analysis over the crate sources\n\
+         \n\
+         scans rust/, tests/, benches/ under the current directory by\n\
+         default (fixture corpus excluded); positional paths restrict\n\
+         the scan to explicit files or directories.\n\
+         \n\
+         rules:\n",
+    );
+    for rule in analysis::RULES {
+        about.push_str(&format!(
+            "  {:<38} {:<8} {}\n",
+            rule.id,
+            rule.severity.name(),
+            rule.summary
+        ));
+    }
+    about.push_str(
+        "\nsuppress with `// lint:allow(<rule-id>[, ...])` on the finding's\n\
+         line or the line directly above it",
+    );
+    let args = match Args::new(&about)
+        .flag("json", "print the full report as JSON on stdout")
+        .flag("deny-warnings", "exit 1 on warning findings, not just errors")
+        .opt("out", "lint_report.json", "report artifact path under results/")
+        .parse(rest)
+    {
+        Ok(a) => a,
+        Err(e) => return usage(e),
+    };
+
+    let scan = if args.positional().is_empty() {
+        analysis::lint_tree(Path::new("."))
+    } else {
+        let roots: Vec<std::path::PathBuf> =
+            args.positional().iter().map(std::path::PathBuf::from).collect();
+        analysis::lint_roots(&roots)
+    };
+    let lint_report = match scan {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("lint: {e}");
+            return 2;
+        }
+    };
+
+    if args.get_flag("json") {
+        println!("{}", lint_report.to_json().to_string_pretty());
+    } else {
+        print!("{}", lint_report.lines());
+        println!("{}", lint_report.summary_line());
+    }
+    if let Err(e) = report::write_json(args.get("out"), &lint_report.to_json()) {
+        eprintln!("lint: write results/{}: {e}", args.get("out"));
+        return 2;
+    }
+
+    let deny = args.get_flag("deny-warnings");
+    if lint_report.errors() > 0 || (deny && lint_report.warnings() > 0) {
+        1
+    } else {
+        0
+    }
 }

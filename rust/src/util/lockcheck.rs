@@ -1,0 +1,435 @@
+//! Poison-recovering, optionally order-checked mutex wrapper — the
+//! dynamic half of the determinism/concurrency pass (the static half is
+//! `rram-accel lint`'s `mutex-discipline` rule, which points here).
+//!
+//! [`Mutex`] always recovers from poisoning: a worker that panics while
+//! holding a guard must not wedge the surviving pool (`merged_metrics`
+//! / `worker_stats` keep working), so `lock()` takes the inner value
+//! out of a `PoisonError` instead of propagating it. The protected data
+//! stays whatever the panicking thread left behind — callers that need
+//! transactional updates must not panic mid-update, which the
+//! coordinator's single-`push`/single-assignment usage satisfies.
+//!
+//! With `--features lockcheck` every acquisition is instrumented:
+//!
+//! * a per-thread acquisition stack records which named locks the
+//!   thread currently holds;
+//! * a global, deterministic (BTreeMap) edge graph records every
+//!   observed `held → acquired` ordering, with the acquisition chain
+//!   that first established it;
+//! * acquiring `B` while holding `A` when `B → … → A` is already on
+//!   record **panics with both conflicting chains** — the current hold
+//!   stack and the previously recorded chain — turning a potential
+//!   deadlock into a deterministic test failure;
+//! * re-acquiring a lock the thread already holds panics (self
+//!   deadlock);
+//! * acquisitions that had to wait are counted per lock name
+//!   ([`contention_report`]).
+//!
+//! The probe costs a `try_lock` plus map updates per acquisition, so it
+//! is compiled out by default; CI runs the full test suite under the
+//! feature (`cargo test --features lockcheck`) in the `lockcheck` job.
+//! Locks created with [`Mutex::new`] get the anonymous name and are
+//! exempt from order tracking (distinct anonymous locks would alias one
+//! graph node); anything held together with another lock should use
+//! [`Mutex::named`].
+
+use std::fmt;
+use std::ops::{Deref, DerefMut};
+use std::sync::{Mutex as StdMutex, MutexGuard, PoisonError};
+#[cfg(feature = "lockcheck")]
+use std::sync::TryLockError;
+
+/// Name given by [`Mutex::new`]; exempt from order tracking.
+const ANON: &str = "<anon>";
+
+/// A `std::sync::Mutex` wrapper: poison-recovering `lock()`, and
+/// lock-order + contention instrumentation under `--features
+/// lockcheck`.
+pub struct Mutex<T> {
+    name: &'static str,
+    inner: StdMutex<T>,
+}
+
+impl<T> Mutex<T> {
+    /// An anonymous lock (no order tracking — see module docs).
+    pub const fn new(value: T) -> Mutex<T> {
+        Mutex::named(ANON, value)
+    }
+
+    /// A named lock. Names identify nodes in the global order graph, so
+    /// use one distinct `&'static str` per lock *role* (all instances
+    /// of a role share ordering constraints, which is exactly what the
+    /// probe should check).
+    pub const fn named(name: &'static str, value: T) -> Mutex<T> {
+        Mutex { name, inner: StdMutex::new(value) }
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+
+    /// Acquire, recovering the inner value if a previous holder
+    /// panicked. Under `lockcheck` this also asserts lock order and
+    /// counts contended acquisitions.
+    pub fn lock(&self) -> Guard<'_, T> {
+        #[cfg(feature = "lockcheck")]
+        let inner = {
+            probe::on_acquire(self.name);
+            match self.inner.try_lock() {
+                Ok(g) => g,
+                Err(TryLockError::Poisoned(p)) => p.into_inner(),
+                Err(TryLockError::WouldBlock) => {
+                    probe::on_contended(self.name);
+                    self.inner.lock().unwrap_or_else(PoisonError::into_inner)
+                }
+            }
+        };
+        #[cfg(not(feature = "lockcheck"))]
+        let inner = self.inner.lock().unwrap_or_else(PoisonError::into_inner);
+        Guard {
+            inner,
+            #[cfg(feature = "lockcheck")]
+            name: self.name,
+        }
+    }
+
+    /// Consume the lock, recovering from poison.
+    pub fn into_inner(self) -> T {
+        self.inner.into_inner().unwrap_or_else(PoisonError::into_inner)
+    }
+}
+
+impl<T: Default> Default for Mutex<T> {
+    fn default() -> Mutex<T> {
+        Mutex::new(T::default())
+    }
+}
+
+impl<T: fmt::Debug> fmt::Debug for Mutex<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("Mutex")
+            .field("name", &self.name)
+            .field("inner", &self.inner)
+            .finish()
+    }
+}
+
+/// RAII guard; releases the lock (and pops the probe's per-thread
+/// acquisition stack) on drop.
+pub struct Guard<'a, T> {
+    inner: MutexGuard<'a, T>,
+    #[cfg(feature = "lockcheck")]
+    name: &'static str,
+}
+
+impl<T> Deref for Guard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        &self.inner
+    }
+}
+
+impl<T> DerefMut for Guard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        &mut self.inner
+    }
+}
+
+#[cfg(feature = "lockcheck")]
+impl<T> Drop for Guard<'_, T> {
+    fn drop(&mut self) {
+        probe::on_release(self.name);
+    }
+}
+
+/// Contended-acquisition counts per lock name, sorted by name
+/// (deterministic). Always empty without `--features lockcheck`.
+pub fn contention_report() -> Vec<(String, u64)> {
+    #[cfg(feature = "lockcheck")]
+    {
+        probe::contention_report()
+    }
+    #[cfg(not(feature = "lockcheck"))]
+    {
+        Vec::new()
+    }
+}
+
+#[cfg(feature = "lockcheck")]
+mod probe {
+    use super::ANON;
+    use std::cell::RefCell;
+    use std::collections::BTreeMap;
+    use std::sync::{Mutex as StdMutex, PoisonError};
+
+    /// Observed orderings: `held name → (acquired name → chain that
+    /// first established the edge)`. BTreeMap keeps traversal (and thus
+    /// violation messages) deterministic.
+    static EDGES: StdMutex<BTreeMap<&'static str, BTreeMap<&'static str, Vec<&'static str>>>> =
+        StdMutex::new(BTreeMap::new());
+    /// Acquisitions that found the lock busy, per name.
+    static CONTENDED: StdMutex<BTreeMap<&'static str, u64>> = StdMutex::new(BTreeMap::new());
+
+    thread_local! {
+        /// Names of locks this thread currently holds, oldest first.
+        static HELD: RefCell<Vec<&'static str>> = const { RefCell::new(Vec::new()) };
+    }
+
+    /// Record (and validate) an acquisition attempt. Panics on a
+    /// same-thread re-acquisition or on an order inversion; the panic
+    /// fires *before* blocking on the lock, so a true deadlock becomes
+    /// a deterministic failure instead of a hang.
+    pub(super) fn on_acquire(name: &'static str) {
+        if name == ANON {
+            return;
+        }
+        let conflict = HELD.with(|h| {
+            let held = h.borrow();
+            if held.contains(&name) {
+                return Some(format!(
+                    "self-deadlock: thread re-acquired '{name}' while holding [{}]",
+                    held.join(" -> ")
+                ));
+            }
+            if held.is_empty() {
+                return None;
+            }
+            let mut edges = EDGES.lock().unwrap_or_else(PoisonError::into_inner);
+            for &old in held.iter() {
+                if let Some(chain) = find_path(&edges, name, old) {
+                    let established = edges
+                        .get(chain[0])
+                        .and_then(|m| m.get(chain[1]))
+                        .cloned()
+                        .unwrap_or_default();
+                    return Some(format!(
+                        "lock order violation: acquiring '{name}' while holding \
+                         [{}], but the reverse order [{}] is already on record \
+                         (first established by acquisition chain [{}])",
+                        held.join(" -> "),
+                        chain.join(" -> "),
+                        established.join(" -> "),
+                    ));
+                }
+            }
+            for &old in held.iter() {
+                edges.entry(old).or_default().entry(name).or_insert_with(|| {
+                    let mut chain: Vec<&'static str> = held.clone();
+                    chain.push(name);
+                    chain
+                });
+            }
+            None
+        });
+        if let Some(msg) = conflict {
+            panic!("[lockcheck] {msg}");
+        }
+        HELD.with(|h| h.borrow_mut().push(name));
+    }
+
+    pub(super) fn on_release(name: &'static str) {
+        if name == ANON {
+            return;
+        }
+        HELD.with(|h| {
+            let mut held = h.borrow_mut();
+            if let Some(i) = held.iter().rposition(|&n| n == name) {
+                held.remove(i);
+            }
+        });
+    }
+
+    pub(super) fn on_contended(name: &'static str) {
+        *CONTENDED
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .entry(name)
+            .or_insert(0) += 1;
+    }
+
+    pub(super) fn contention_report() -> Vec<(String, u64)> {
+        CONTENDED
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .iter()
+            .map(|(&n, &c)| (n.to_string(), c))
+            .collect()
+    }
+
+    /// DFS path `from → … → to` over recorded edges, if any (BTreeMap
+    /// order ⇒ deterministic path choice).
+    fn find_path(
+        edges: &BTreeMap<&'static str, BTreeMap<&'static str, Vec<&'static str>>>,
+        from: &'static str,
+        to: &'static str,
+    ) -> Option<Vec<&'static str>> {
+        let mut stack = vec![vec![from]];
+        let mut visited = vec![from];
+        while let Some(path) = stack.pop() {
+            let last = *path.last().expect("path never empty");
+            if last == to {
+                return Some(path);
+            }
+            if let Some(next) = edges.get(last) {
+                for &n in next.keys() {
+                    if !visited.contains(&n) {
+                        visited.push(n);
+                        let mut p = path.clone();
+                        p.push(n);
+                        stack.push(p);
+                    }
+                }
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn lock_recovers_from_poison() {
+        let m = Arc::new(Mutex::named("lockcheck-test.poison", vec![1u32]));
+        let m2 = Arc::clone(&m);
+        let h = std::thread::spawn(move || {
+            let _g = m2.lock();
+            panic!("holder dies with the guard");
+        });
+        assert!(h.join().is_err());
+        // a poisoned std mutex would panic here; ours recovers
+        m.lock().push(2);
+        assert_eq!(m.lock().len(), 2);
+    }
+
+    #[test]
+    fn into_inner_recovers_from_poison() {
+        let m = Arc::new(Mutex::named("lockcheck-test.into-inner", 7u64));
+        let m2 = Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock();
+            panic!("poison it");
+        })
+        .join();
+        let m = Arc::into_inner(m).expect("sole owner");
+        assert_eq!(m.into_inner(), 7);
+    }
+
+    #[test]
+    fn guard_derefs_both_ways() {
+        let m = Mutex::new(String::from("a"));
+        m.lock().push('b');
+        assert_eq!(&*m.lock(), "ab");
+        assert_eq!(m.name(), "<anon>");
+        assert_eq!(Mutex::<u32>::default().into_inner(), 0);
+    }
+
+    #[cfg(feature = "lockcheck")]
+    mod probe_behavior {
+        use super::*;
+
+        fn panic_message(r: std::thread::Result<()>) -> String {
+            match r {
+                Ok(()) => panic!("expected a lockcheck panic"),
+                Err(e) => e
+                    .downcast_ref::<String>()
+                    .cloned()
+                    .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                    .unwrap_or_default(),
+            }
+        }
+
+        #[test]
+        fn inverted_order_panics_with_both_chains() {
+            static A: Mutex<i32> = Mutex::named("order-test.a", 0);
+            static B: Mutex<i32> = Mutex::named("order-test.b", 0);
+            {
+                let _a = A.lock();
+                let _b = B.lock(); // records a → b
+            }
+            let msg = panic_message(
+                std::thread::spawn(|| {
+                    let _b = B.lock();
+                    let _a = A.lock(); // b → a: inversion
+                })
+                .join(),
+            );
+            assert!(msg.contains("lock order violation"), "{msg}");
+            assert!(msg.contains("order-test.a") && msg.contains("order-test.b"), "{msg}");
+            // both chains are in the message: current hold and the record
+            assert!(msg.contains("order-test.b -> order-test.a"), "{msg}");
+            assert!(msg.contains("order-test.a -> order-test.b"), "{msg}");
+            // the probe state recovers: the same thread can still lock A
+            let _a = A.lock();
+        }
+
+        #[test]
+        fn transitive_inversion_detected() {
+            static P: Mutex<i32> = Mutex::named("order-test.p", 0);
+            static Q: Mutex<i32> = Mutex::named("order-test.q", 0);
+            static R: Mutex<i32> = Mutex::named("order-test.r", 0);
+            {
+                let _p = P.lock();
+                let _q = Q.lock(); // p → q
+            }
+            {
+                let _q = Q.lock();
+                let _r = R.lock(); // q → r
+            }
+            let msg = panic_message(
+                std::thread::spawn(|| {
+                    let _r = R.lock();
+                    let _p = P.lock(); // r → p closes the cycle p→q→r→p
+                })
+                .join(),
+            );
+            assert!(msg.contains("lock order violation"), "{msg}");
+            assert!(msg.contains("order-test.p -> order-test.q -> order-test.r"), "{msg}");
+        }
+
+        #[test]
+        fn self_reacquisition_panics() {
+            static S: Mutex<i32> = Mutex::named("order-test.self", 0);
+            let msg = panic_message(
+                std::thread::spawn(|| {
+                    let _g1 = S.lock();
+                    let _g2 = S.lock();
+                })
+                .join(),
+            );
+            assert!(msg.contains("self-deadlock"), "{msg}");
+        }
+
+        #[test]
+        fn contention_is_counted() {
+            static C: Mutex<i32> = Mutex::named("order-test.contended", 0);
+            let g = C.lock();
+            let waiter = std::thread::spawn(|| {
+                *C.lock() += 1; // must wait for the main thread
+            });
+            std::thread::sleep(std::time::Duration::from_millis(50));
+            drop(g);
+            waiter.join().unwrap();
+            let report = contention_report();
+            let hit = report
+                .iter()
+                .find(|(n, _)| n == "order-test.contended")
+                .map(|(_, c)| *c)
+                .unwrap_or(0);
+            assert!(hit >= 1, "expected a contended acquisition, got {report:?}");
+        }
+
+        #[test]
+        fn consistent_order_is_quiet() {
+            static X: Mutex<i32> = Mutex::named("order-test.x", 0);
+            static Y: Mutex<i32> = Mutex::named("order-test.y", 0);
+            for _ in 0..100 {
+                let _x = X.lock();
+                let _y = Y.lock();
+            }
+        }
+    }
+}

@@ -4,8 +4,9 @@
 //! `std::thread::scope` and an atomic work index — plenty for this
 //! crate's per-layer mapping and simulation parallelism.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use crate::util::lockcheck::Mutex;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 
 /// Number of worker threads to use by default.
 pub fn default_threads() -> usize {
@@ -44,6 +45,13 @@ where
 /// As [`parallel_map`], but `f` also receives each item's index — the
 /// DSE sweep runner uses it to tag results with their grid position so
 /// downstream artifacts are independent of scheduling order.
+///
+/// A panicking closure no longer poisons its result slot and surfaces
+/// as an opaque unwrap at collection time: each item runs under
+/// `catch_unwind`, remaining items are cancelled, and the first panic
+/// is re-raised after the scope joins with the item index and the
+/// original payload text. (On the `threads == 1` fast path the panic
+/// propagates directly — there is no join to defer it past.)
 pub fn parallel_map_indexed<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
 where
     T: Sync,
@@ -60,26 +68,56 @@ where
     }
 
     let next = AtomicUsize::new(0);
+    let cancelled = AtomicBool::new(false);
     let results: Vec<Mutex<Option<R>>> =
-        (0..n).map(|_| Mutex::new(None)).collect();
+        (0..n).map(|_| Mutex::named("threadpool.slot", None)).collect();
+    let first_panic: Mutex<Option<(usize, String)>> =
+        Mutex::named("threadpool.first_panic", None);
 
     std::thread::scope(|scope| {
         for _ in 0..threads {
             scope.spawn(|| loop {
+                if cancelled.load(Ordering::Relaxed) {
+                    break;
+                }
                 let i = next.fetch_add(1, Ordering::Relaxed);
                 if i >= n {
                     break;
                 }
-                let r = f(i, &items[i]);
-                *results[i].lock().unwrap() = Some(r);
+                match catch_unwind(AssertUnwindSafe(|| f(i, &items[i]))) {
+                    Ok(r) => *results[i].lock() = Some(r),
+                    Err(payload) => {
+                        cancelled.store(true, Ordering::Relaxed);
+                        let mut fp = first_panic.lock();
+                        if fp.is_none() {
+                            *fp = Some((i, panic_text(payload.as_ref())));
+                        }
+                    }
+                }
             });
         }
     });
 
+    if let Some((i, msg)) = first_panic.into_inner() {
+        panic!("parallel_map_indexed: worker closure panicked on item {i}: {msg}");
+    }
     results
         .into_iter()
-        .map(|m| m.into_inner().unwrap().expect("worker left a hole"))
+        .map(|m| m.into_inner().expect("worker left a hole"))
         .collect()
+}
+
+/// Human-readable text of a caught panic payload (`panic!` with a
+/// string literal or a formatted message covers everything this crate
+/// throws).
+fn panic_text(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "<non-string panic payload>".to_string()
+    }
 }
 
 /// Parallel for-each over an index range (no results collected).
@@ -163,6 +201,51 @@ mod tests {
         // single-thread path agrees
         let out1 = parallel_map_indexed(&items, 1, |i, x| (i, *x));
         assert_eq!(out, out1);
+    }
+
+    #[test]
+    fn panicking_item_reports_index_and_message() {
+        let items: Vec<usize> = (0..64).collect();
+        let res = catch_unwind(AssertUnwindSafe(|| {
+            parallel_map_indexed(&items, 4, |i, x| {
+                if i == 3 {
+                    panic!("item exploded: {x}");
+                }
+                x * 2
+            })
+        }));
+        let payload = res.expect_err("worker panic must propagate to the caller");
+        let msg = panic_text(payload.as_ref());
+        assert!(msg.contains("item 3"), "index missing: {msg}");
+        assert!(msg.contains("item exploded: 3"), "original payload missing: {msg}");
+        assert!(msg.contains("parallel_map_indexed"), "context missing: {msg}");
+    }
+
+    #[test]
+    fn panic_cancels_remaining_items() {
+        // items after the failing one are slow; without cancellation the
+        // scope join would have to wait for every one of them
+        let items: Vec<usize> = (0..256).collect();
+        let ran = AtomicUsize::new(0);
+        let res = catch_unwind(AssertUnwindSafe(|| {
+            parallel_map_indexed(&items, 2, |i, _x| {
+                if i == 0 {
+                    panic!("first item fails");
+                }
+                std::thread::sleep(std::time::Duration::from_millis(1));
+                ran.fetch_add(1, Ordering::Relaxed);
+            })
+        }));
+        assert!(res.is_err());
+        let ran = ran.load(Ordering::Relaxed);
+        assert!(ran < items.len() - 1, "cancellation never took effect ({ran} items ran)");
+    }
+
+    #[test]
+    fn panic_text_handles_payload_kinds() {
+        assert_eq!(panic_text(&"literal"), "literal");
+        assert_eq!(panic_text(&String::from("formatted")), "formatted");
+        assert_eq!(panic_text(&42u32), "<non-string panic payload>");
     }
 
     #[test]

@@ -1,0 +1,240 @@
+//! Fixture-driven tests for the `rram-accel lint` static-analysis pass.
+//!
+//! Every rule has at least one `bad/` fixture (exact rule IDs and line
+//! numbers asserted) and one `good/` counterpart (zero findings). The
+//! suite also checks pragma suppression accounting, `--json` output
+//! validity and byte-stability, diagnostic ordering, and that the
+//! self-scan of this crate is clean under `--deny-warnings` semantics.
+
+use std::path::{Path, PathBuf};
+
+use rram_pattern_accel::analysis::{self, LintReport, Severity};
+use rram_pattern_accel::util::json::Json;
+
+fn fixture(rel: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/lint_fixtures")
+        .join(rel)
+}
+
+fn lint_one(rel: &str) -> LintReport {
+    analysis::lint_roots(&[fixture(rel)])
+        .unwrap_or_else(|e| panic!("lint_roots({rel}): {e}"))
+}
+
+/// Assert a bad fixture produces exactly `expected` as its
+/// (rule, line) multiset, in report order.
+fn assert_findings(rel: &str, expected: &[(&str, usize)]) {
+    let report = lint_one(rel);
+    let got: Vec<(&str, usize)> = report
+        .diagnostics
+        .iter()
+        .map(|d| (d.rule, d.line))
+        .collect();
+    assert_eq!(
+        got, expected,
+        "unexpected findings for {rel}:\n{}",
+        report.lines()
+    );
+}
+
+fn assert_clean(rel: &str) {
+    let report = lint_one(rel);
+    assert!(
+        report.diagnostics.is_empty(),
+        "expected {rel} to be clean, got:\n{}",
+        report.lines()
+    );
+}
+
+// ---------------------------------------------------------------- rules
+
+#[test]
+fn unordered_iteration_bad_and_good() {
+    assert_findings(
+        "bad/unordered_iteration.rs",
+        &[("no-unordered-iteration", 3), ("no-unordered-iteration", 5)],
+    );
+    assert_clean("good/unordered_iteration.rs");
+}
+
+#[test]
+fn wall_clock_bad_and_good() {
+    assert_findings(
+        "bad/wall_clock.rs",
+        &[
+            ("no-wall-clock-in-pure-paths", 5),
+            ("no-wall-clock-in-pure-paths", 9),
+            ("no-wall-clock-in-pure-paths", 10),
+        ],
+    );
+    // Same construct, but scoped (via lint:path) to the serving edge
+    // where wall-clock reads are legitimate.
+    assert_clean("good/wall_clock.rs");
+}
+
+#[test]
+fn ambient_rng_bad_and_good() {
+    // Line 14 fires twice: once for the `rand::` path and once for
+    // `thread_rng` itself.
+    assert_findings(
+        "bad/ambient_rng.rs",
+        &[
+            ("no-ambient-rng", 2),
+            ("no-ambient-rng", 6),
+            ("no-ambient-rng", 14),
+            ("no-ambient-rng", 14),
+        ],
+    );
+    assert_clean("good/ambient_rng.rs");
+}
+
+#[test]
+fn float_accumulation_bad_and_good() {
+    assert_findings(
+        "bad/float_accumulation.rs",
+        &[("no-float-accumulation-across-threads", 8)],
+    );
+    // `+=` after the join is the sanctioned pattern.
+    assert_clean("good/float_accumulation.rs");
+}
+
+#[test]
+fn mutex_discipline_bad_and_good() {
+    // Line 10 fires three times: `.unwrap()`, `.expect(`, and the
+    // nested single-statement acquisition.
+    assert_findings(
+        "bad/mutex_discipline.rs",
+        &[
+            ("mutex-discipline", 6),
+            ("mutex-discipline", 10),
+            ("mutex-discipline", 10),
+            ("mutex-discipline", 10),
+        ],
+    );
+    assert_clean("good/mutex_discipline.rs");
+}
+
+#[test]
+fn severities_match_rule_table() {
+    let report = lint_one("bad/mutex_discipline.rs");
+    assert!(report
+        .diagnostics
+        .iter()
+        .all(|d| d.severity == Severity::Warning));
+    let report = lint_one("bad/ambient_rng.rs");
+    assert!(report
+        .diagnostics
+        .iter()
+        .all(|d| d.severity == Severity::Error));
+}
+
+// -------------------------------------------------------------- pragmas
+
+#[test]
+fn pragma_allow_suppresses_and_is_counted() {
+    let report = lint_one("good/pragma_allow.rs");
+    assert!(
+        report.diagnostics.is_empty(),
+        "pragmas failed to suppress:\n{}",
+        report.lines()
+    );
+    assert_eq!(report.suppressed, 2, "both forms should be counted");
+}
+
+#[test]
+fn pragma_for_wrong_rule_does_not_suppress() {
+    let report = lint_one("bad/pragma_mismatch.rs");
+    let got: Vec<(&str, usize)> = report
+        .diagnostics
+        .iter()
+        .map(|d| (d.rule, d.line))
+        .collect();
+    assert_eq!(got, vec![("no-wall-clock-in-pure-paths", 6)]);
+    assert_eq!(report.suppressed, 0);
+}
+
+// ------------------------------------------------------- whole corpus
+
+#[test]
+fn corpus_scan_is_sorted_and_totals_add_up() {
+    let report = analysis::lint_roots(&[fixture("")]).expect("scan corpus");
+    // 12 fixture files, 15 findings total across the bad/ half.
+    assert_eq!(report.files_scanned, 12);
+    assert_eq!(report.diagnostics.len(), 15);
+    assert_eq!(report.errors(), 10);
+    assert_eq!(report.warnings(), 5);
+    assert_eq!(report.suppressed, 2);
+    // Diagnostics must come out ordered by (path, line, col, rule).
+    let keys: Vec<(String, usize, usize, &str)> = report
+        .diagnostics
+        .iter()
+        .map(|d| (d.path.clone(), d.line, d.col, d.rule))
+        .collect();
+    let mut sorted = keys.clone();
+    sorted.sort();
+    assert_eq!(keys, sorted, "diagnostics are not in canonical order");
+    // Every finding in the corpus scan points at a bad/ fixture.
+    assert!(report
+        .diagnostics
+        .iter()
+        .all(|d| d.path.contains("bad") && d.path.ends_with(".rs")));
+}
+
+// ----------------------------------------------------------- json shape
+
+#[test]
+fn json_report_is_valid_and_byte_stable() {
+    let a = analysis::lint_roots(&[fixture("")]).expect("scan corpus");
+    let b = analysis::lint_roots(&[fixture("")]).expect("scan corpus");
+    let ja = a.to_json().to_string_pretty();
+    let jb = b.to_json().to_string_pretty();
+    assert_eq!(ja, jb, "lint --json must be byte-stable across runs");
+
+    let parsed = Json::parse(&ja).expect("report must be valid JSON");
+    assert_eq!(parsed.get("version").as_usize(), Some(1));
+    assert_eq!(parsed.get("files_scanned").as_usize(), Some(12));
+    assert_eq!(parsed.get("errors").as_usize(), Some(10));
+    assert_eq!(parsed.get("warnings").as_usize(), Some(5));
+    assert_eq!(parsed.get("suppressed").as_usize(), Some(2));
+    assert_eq!(parsed.get("rules").as_arr().expect("rules array").len(), 5);
+    let diags = parsed.get("diagnostics").as_arr().expect("diagnostics array");
+    assert_eq!(diags.len(), 15);
+    for d in diags {
+        assert!(!d.get("path").as_str().expect("path").is_empty());
+        assert!(d.get("line").as_usize().expect("line") >= 1);
+        assert!(d.get("col").as_usize().expect("col") >= 1);
+        assert!(!d.get("rule").as_str().expect("rule").is_empty());
+        assert!(!d.get("message").as_str().expect("message").is_empty());
+        let sev = d.get("severity").as_str().expect("severity");
+        assert!(sev == "error" || sev == "warning", "severity {sev:?}");
+    }
+}
+
+// ------------------------------------------------------------ self-scan
+
+#[test]
+fn self_scan_of_crate_is_clean() {
+    let base = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let report = analysis::lint_tree(base).expect("self-scan");
+    assert!(
+        report.files_scanned > 30,
+        "self-scan saw only {} files — tree walk is broken",
+        report.files_scanned
+    );
+    assert_eq!(
+        report.errors(),
+        0,
+        "self-scan must be error-free:\n{}",
+        report.lines()
+    );
+    assert_eq!(
+        report.warnings(),
+        0,
+        "self-scan must pass --deny-warnings:\n{}",
+        report.lines()
+    );
+    // The fixture corpus is excluded from the default tree walk, so
+    // none of the scanned paths may point into it.
+    assert!(report.files_scanned > 0);
+}

@@ -1,0 +1,15 @@
+// BAD: ambient entropy — unreproducible from a recorded seed.
+use std::collections::hash_map::DefaultHasher;
+
+pub fn unstable_hash(v: &[u64]) -> u64 {
+    use std::hash::Hasher;
+    let mut h = DefaultHasher::new();
+    for x in v {
+        h.write_u64(*x);
+    }
+    h.finish()
+}
+
+pub fn roll() -> u64 {
+    rand::thread_rng().gen()
+}

@@ -1,0 +1,11 @@
+// BAD: shared float accumulation inside a parallel closure commits in
+// scheduling order — totals drift with thread count.
+use rram_pattern_accel::util::threadpool::parallel_for;
+
+pub fn total_energy(parts: &[f64], threads: usize) -> f64 {
+    let mut total = 0.0_f64;
+    parallel_for(parts.len(), threads, |i| {
+        total += parts[i];
+    });
+    total
+}

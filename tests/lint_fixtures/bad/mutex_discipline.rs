@@ -1,0 +1,11 @@
+// BAD: raw poison-propagating locks and a nested single-statement
+// acquisition outside the util wrappers.
+use std::sync::Mutex;
+
+pub fn sample(m: &Mutex<Vec<f64>>, v: f64) {
+    m.lock().unwrap().push(v);
+}
+
+pub fn combined_len(a: &Mutex<Vec<f64>>, b: &Mutex<Vec<f64>>) -> usize {
+    a.lock().unwrap().len() + b.lock().expect("poisoned").len()
+}

@@ -1,0 +1,8 @@
+// lint:path(rust/src/sim/fixture.rs)
+// A pragma naming a *different* rule must not suppress the finding.
+
+pub fn probe_us() -> u128 {
+    // lint:allow(no-ambient-rng)
+    let t0 = std::time::Instant::now();
+    t0.elapsed().as_micros()
+}

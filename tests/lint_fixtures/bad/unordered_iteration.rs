@@ -1,0 +1,11 @@
+// lint:path(rust/src/report/fixture.rs)
+// BAD: HashMap feeds a serialized artifact — iteration order varies.
+use std::collections::HashMap;
+
+pub fn emit_rows(rows: &HashMap<String, f64>) -> String {
+    let mut out = String::new();
+    for (k, v) in rows {
+        out.push_str(&format!("{k}={v}\n"));
+    }
+    out
+}

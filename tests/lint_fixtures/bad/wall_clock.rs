@@ -1,0 +1,11 @@
+// lint:path(rust/src/sim/fixture.rs)
+// BAD: wall-clock reads inside the pure simulation scope.
+
+pub fn stamp_us() -> u128 {
+    let t0 = std::time::Instant::now();
+    t0.elapsed().as_micros()
+}
+
+pub fn wall() -> std::time::SystemTime {
+    std::time::SystemTime::now()
+}

@@ -1,0 +1,7 @@
+// GOOD: all randomness flows from an explicit recorded seed.
+use rram_pattern_accel::util::rng::Rng;
+
+pub fn roll(seed: u64) -> u64 {
+    let mut rng = Rng::seed_from(seed);
+    rng.next_u64()
+}

@@ -1,0 +1,12 @@
+// GOOD: per-item results fold in index order after the join — the
+// canonical pattern (parallel_map preserves item order).
+use rram_pattern_accel::util::threadpool::parallel_map;
+
+pub fn total_energy(parts: &[f64], threads: usize) -> f64 {
+    let per_item = parallel_map(parts, threads, |p| p * 2.0);
+    let mut total = 0.0_f64;
+    for v in per_item {
+        total += v;
+    }
+    total
+}

@@ -1,0 +1,13 @@
+// GOOD: the lockcheck wrapper recovers poison, and guards are taken
+// one statement at a time.
+use rram_pattern_accel::util::lockcheck::Mutex;
+
+pub fn sample(m: &Mutex<Vec<f64>>, v: f64) {
+    m.lock().push(v);
+}
+
+pub fn combined_len(a: &Mutex<Vec<f64>>, b: &Mutex<Vec<f64>>) -> usize {
+    let n = a.lock().len();
+    let m = b.lock().len();
+    n + m
+}

@@ -1,0 +1,10 @@
+// lint:path(rust/src/sim/fixture.rs)
+// Suppression pragmas: above-line and same-line forms. Suppressed
+// findings are counted in the report's `suppressed` field.
+
+pub fn probe_us() -> u128 {
+    // lint:allow(no-wall-clock-in-pure-paths)
+    let t0 = std::time::Instant::now();
+    let t1 = std::time::Instant::now(); // lint:allow(no-wall-clock-in-pure-paths)
+    t1.duration_since(t0).as_micros()
+}

@@ -1,0 +1,11 @@
+// lint:path(rust/src/report/fixture.rs)
+// GOOD: BTreeMap iterates in key order — deterministic artifacts.
+use std::collections::BTreeMap;
+
+pub fn emit_rows(rows: &BTreeMap<String, f64>) -> String {
+    let mut out = String::new();
+    for (k, v) in rows {
+        out.push_str(&format!("{k}={v}\n"));
+    }
+    out
+}

@@ -1,0 +1,8 @@
+// lint:path(rust/src/coordinator/fixture.rs)
+// GOOD: the serving edge measures real queueing latency — outside the
+// pure scope, so wall-clock reads are allowed without a pragma.
+
+pub fn queue_latency_us(t0: std::time::Instant) -> u128 {
+    let now = std::time::Instant::now();
+    now.duration_since(t0).as_micros()
+}
