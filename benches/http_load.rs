@@ -1,0 +1,99 @@
+//! Bench (ISSUE-7): HTTP front-door throughput — closed-loop keep-alive
+//! load over loopback against a multi-worker mock-backend pool,
+//! reporting sustained RPS and p50/p99 tail latency.
+//!
+//! The mock backend sleeps a fixed per-batch latency so the numbers
+//! exercise the full edge (socket accept, bounded reader, lazy scanner,
+//! coordinator batching/dispatch, JSON response) rather than a no-op
+//! handler. Every response must be a 200: a single non-200 under plain
+//! well-formed load is a correctness failure, not a perf number.
+//!
+//! Run: `cargo bench --bench http_load` (HTTP_LOAD_SECS overrides the
+//! 2 s default run length; the CI smoke job runs 1 s).
+
+use std::time::Duration;
+
+use rram_pattern_accel::coordinator::{Coordinator, CoordinatorConfig};
+use rram_pattern_accel::report;
+use rram_pattern_accel::serve_http::client::{run_load, LoadConfig};
+use rram_pattern_accel::serve_http::{HttpConfig, HttpServer, MockInferBackend};
+use rram_pattern_accel::util::json::obj;
+use rram_pattern_accel::util::threadpool;
+
+const INPUT_LEN: usize = 64;
+const CLIENTS: usize = 8;
+
+fn main() {
+    let secs: u64 = std::env::var("HTTP_LOAD_SECS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(2);
+    let workers = threadpool::default_threads().min(4);
+
+    println!("ISSUE-7 — HTTP FRONT DOOR LOAD\n");
+    let coord = Coordinator::start_pool(
+        move |_worker| MockInferBackend {
+            input_len: INPUT_LEN,
+            output_len: 10,
+            batch: 8,
+            delay: Duration::from_micros(200),
+            fail: false,
+        },
+        CoordinatorConfig {
+            max_wait: Duration::from_millis(1),
+            workers,
+            ..Default::default()
+        },
+        None,
+    );
+    let server = HttpServer::start(
+        coord,
+        HttpConfig {
+            addr: "127.0.0.1:0".to_string(),
+            input_len: INPUT_LEN,
+            ..Default::default()
+        },
+    )
+    .expect("bind loopback");
+
+    let image: Vec<String> =
+        (0..INPUT_LEN).map(|i| format!("{}", i as f32 * 0.25)).collect();
+    let body = format!("{{\"image\":[{}]}}", image.join(",")).into_bytes();
+    let cfg = LoadConfig {
+        addr: server.addr(),
+        clients: CLIENTS,
+        duration: Duration::from_secs(secs),
+        body,
+    };
+    println!(
+        "{CLIENTS} keep-alive clients -> {workers} worker(s), \
+         batch 8, 200 us backend latency, {secs}s run"
+    );
+    let rep = run_load(&cfg);
+    println!("  {}", rep.line());
+
+    let stats = server.http_stats();
+    println!(
+        "  server side: {} connections, {} requests, {} bad, {} panics",
+        stats.connections, stats.requests, stats.bad_requests, stats.handler_panics
+    );
+    assert_eq!(rep.non_200, 0, "well-formed load must be all 200s");
+    assert_eq!(stats.handler_panics, 0, "no handler may panic under load");
+    assert!(rep.requests > 0, "load loop produced no requests");
+
+    let out = obj(vec![
+        ("bench", "http_load".into()),
+        ("clients", CLIENTS.into()),
+        ("workers", workers.into()),
+        ("duration_s", (secs as f64).into()),
+        ("requests", (rep.requests as f64).into()),
+        ("rps", rep.rps().into()),
+        ("latency_p50_us", rep.latencies_us.percentile(50.0).into()),
+        ("latency_p99_us", rep.latencies_us.percentile(99.0).into()),
+        ("latency_max_us", rep.latencies_us.max().into()),
+        ("non_200", (rep.non_200 as f64).into()),
+    ]);
+    report::write_json("bench_http_load.json", &out).expect("write");
+    println!("\nwrote results/bench_http_load.json");
+    server.shutdown();
+}

@@ -325,6 +325,16 @@ struct Request {
     reply: Sender<Reply>,
 }
 
+/// Stable prefix of every deadline-exceeded error delivered through
+/// [`Reply::result`]. Front ends (e.g. the HTTP layer's 504 mapping)
+/// classify failures by prefix instead of ad-hoc substring heuristics;
+/// changing the wording behind the prefix stays compatible.
+pub const ERR_DEADLINE_PREFIX: &str = "deadline exceeded";
+
+/// Stable prefix of every overload-rejection error delivered through
+/// [`Reply::result`] (HTTP maps it to 429).
+pub const ERR_OVERLOAD_PREFIX: &str = "pool overloaded";
+
 /// Reply with the batch outcome + timing. `result` carries the logits
 /// on success, or the error on failure (backend error after retries,
 /// deadline exceeded, or overload rejection) — a failed request is
@@ -386,6 +396,29 @@ pub struct Metrics {
     /// mid-`push` must not wedge `merged_metrics`/`worker_stats` for
     /// the surviving pool — `lock()` recovers the poisoned summary.
     latencies_us: lockcheck::Mutex<Summary>,
+}
+
+/// Plain-data view of one [`Metrics`] shard or a merged pool, produced
+/// by [`Metrics::snapshot`]. Latency aggregates are in microseconds;
+/// with zero samples they are all 0 (never NaN), so serializers emit
+/// numbers unconditionally.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MetricsSnapshot {
+    pub requests: u64,
+    pub failed_requests: u64,
+    pub batches: u64,
+    pub padded_slots: u64,
+    pub retried_batches: u64,
+    pub requeued_requests: u64,
+    pub deadline_expired: u64,
+    pub rejected_overload: u64,
+    pub alarm_threshold: u64,
+    pub alarm_tripped: bool,
+    pub latency_count: u64,
+    pub latency_mean_us: f64,
+    pub latency_p50_us: f64,
+    pub latency_p99_us: f64,
+    pub latency_max_us: f64,
 }
 
 /// Pool-wide failure-alarm state: the threshold plus the failure count
@@ -482,6 +515,34 @@ impl Metrics {
         out
     }
 
+    /// Plain-data point-in-time view of this shard (or of a merged pool
+    /// view), with latency aggregates pre-extracted and empty-sample
+    /// NaN/∞ sentinels flattened to 0 — the export surface the HTTP
+    /// front door and report writers serialize from without touching
+    /// atomics or the latency lock themselves.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let r = Ordering::Relaxed;
+        let lat = self.latency_summary();
+        let pct = |q: f64| if lat.is_empty() { 0.0 } else { lat.percentile(q) };
+        MetricsSnapshot {
+            requests: self.requests.load(r),
+            failed_requests: self.failed_requests.load(r),
+            batches: self.batches.load(r),
+            padded_slots: self.padded_slots.load(r),
+            retried_batches: self.retried_batches.load(r),
+            requeued_requests: self.requeued_requests.load(r),
+            deadline_expired: self.deadline_expired.load(r),
+            rejected_overload: self.rejected_overload.load(r),
+            alarm_threshold: self.alarm_threshold(),
+            alarm_tripped: self.failed_alarm(),
+            latency_count: lat.len() as u64,
+            latency_mean_us: if lat.is_empty() { 0.0 } else { lat.mean() },
+            latency_p50_us: pct(50.0),
+            latency_p99_us: pct(99.0),
+            latency_max_us: if lat.is_empty() { 0.0 } else { lat.max() },
+        }
+    }
+
     /// Count one terminally-failed request (in both `requests` and
     /// `failed_requests`, plus the pool-shared alarm) and raise (and
     /// log, once) the alarm if the threshold is crossed.
@@ -513,11 +574,11 @@ struct WorkerState {
     /// successful batch (and on quarantine expiry). At
     /// `quarantine_after` the dispatcher routes around this worker.
     consecutive_failed_batches: AtomicU64,
-    /// When the failure streak crossed the quarantine threshold:
-    /// micros since `epoch`, offset by +1 so 0 means "not quarantined".
-    quarantined_at_us: AtomicU64,
-    /// Reference instant for `quarantined_at_us`.
-    epoch: Instant,
+    /// When the failure streak crossed the quarantine threshold.
+    /// `None` means "not quarantined" — stated explicitly rather than
+    /// through a 0-valued timestamp sentinel, which broke for a worker
+    /// quarantined in its first microsecond alive.
+    quarantined_at: lockcheck::Mutex<Option<Instant>>,
     /// Cleared when the worker thread exits — normally at shutdown, but
     /// also on a panic ([`WorkerAliveGuard`]). The dispatcher's drain
     /// and idle-blocking decisions ignore dead workers' in-flight
@@ -545,8 +606,10 @@ impl WorkerState {
             outstanding_cost: AtomicU64::new(0),
             inflight: AtomicU64::new(0),
             consecutive_failed_batches: AtomicU64::new(0),
-            quarantined_at_us: AtomicU64::new(0),
-            epoch: Instant::now(),
+            quarantined_at: lockcheck::Mutex::named(
+                "coordinator.worker.quarantined_at",
+                None,
+            ),
             alive: AtomicBool::new(true),
             metrics,
         }
@@ -562,15 +625,12 @@ impl WorkerState {
         let streak =
             self.consecutive_failed_batches.fetch_add(1, Ordering::Relaxed) + 1;
         if quarantine_after > 0 && streak >= quarantine_after {
-            let now = self.epoch.elapsed().as_micros() as u64 + 1;
             // only the first crossing stamps the clock; later failures
             // while quarantined keep the original entry time
-            let _ = self.quarantined_at_us.compare_exchange(
-                0,
-                now,
-                Ordering::Relaxed,
-                Ordering::Relaxed,
-            );
+            let mut at = self.quarantined_at.lock();
+            if at.is_none() {
+                *at = Some(Instant::now());
+            }
         }
     }
 
@@ -578,7 +638,7 @@ impl WorkerState {
     /// quarantine.
     fn note_batch_success(&self) {
         self.consecutive_failed_batches.store(0, Ordering::Relaxed);
-        self.quarantined_at_us.store(0, Ordering::Relaxed);
+        *self.quarantined_at.lock() = None;
     }
 
     fn charge(&self, cost: Option<CostEstimate>) {
@@ -628,10 +688,8 @@ impl WorkerState {
             return false;
         }
         if let Some(exp) = expiry {
-            let at = self.quarantined_at_us.load(Ordering::Relaxed);
-            if at > 0
-                && self.epoch.elapsed() >= Duration::from_micros(at - 1) + exp
-            {
+            let at = *self.quarantined_at.lock();
+            if matches!(at, Some(entered) if entered.elapsed() >= exp) {
                 self.note_batch_success(); // parole: clean slate
                 return false;
             }
@@ -959,7 +1017,7 @@ fn admit_deadline(r: Request, metrics: &Metrics) -> Option<Request> {
             reject(
                 r,
                 metrics,
-                format!("deadline exceeded: request spent {queue_us} us queued"),
+                format!("{ERR_DEADLINE_PREFIX}: request spent {queue_us} us queued"),
                 true,
             );
             None
@@ -1082,7 +1140,7 @@ fn dispatch_loop(
                     r,
                     &metrics,
                     format!(
-                        "pool overloaded: {outstanding} predicted cycles \
+                        "{ERR_OVERLOAD_PREFIX}: {outstanding} predicted cycles \
                          outstanding (admission limit {})",
                         cfg.max_outstanding_cost
                     ),
@@ -1925,6 +1983,49 @@ mod tests {
         // success releases it regardless
         s.note_batch_success();
         assert!(!s.quarantined(1, Some(Duration::from_secs(3600))));
+    }
+
+    /// Regression for the retired 0-sentinel timestamp encoding: a
+    /// worker quarantined within the first microsecond of its life used
+    /// to stamp an entry time indistinguishable from "never
+    /// quarantined", so expiry either never fired or fired instantly
+    /// depending on the ±1 adjustments. "Never quarantined" is now an
+    /// explicit `None`, so the earliest possible entry time behaves
+    /// like any other.
+    #[test]
+    fn quarantine_entered_in_first_microsecond_expires_correctly() {
+        // Enter quarantine as fast as the API allows after construction
+        // — on any real machine this lands inside the first microsecond
+        // of the state's life, the old encoding's degenerate case.
+        let s = WorkerState::new(Arc::new(Metrics::default()));
+        s.note_batch_failure(1);
+        // A long expiry must hold the quarantine (not instantly parole
+        // or report "never quarantined").
+        assert!(s.quarantined(1, Some(Duration::from_secs(3600))));
+        assert!(s.quarantined(1, None), "success-only policy holds too");
+        // An already-elapsed expiry must parole exactly once the entry
+        // time is reached — including an entry time of "now".
+        assert!(!s.quarantined(1, Some(Duration::ZERO)));
+        assert!(!s.quarantined(1, None), "streak reset on parole");
+    }
+
+    #[test]
+    fn metrics_snapshot_flattens_empty_latency_to_zero() {
+        let m = Metrics::default();
+        let s = m.snapshot();
+        assert_eq!(s.requests, 0);
+        assert_eq!(s.latency_count, 0);
+        assert_eq!(s.latency_mean_us, 0.0, "no NaN for empty samples");
+        assert_eq!(s.latency_p99_us, 0.0);
+        assert_eq!(s.latency_max_us, 0.0);
+        m.requests.fetch_add(3, Ordering::Relaxed);
+        m.latencies_us.lock().push(100.0);
+        m.latencies_us.lock().push(300.0);
+        let s = m.snapshot();
+        assert_eq!(s.requests, 3);
+        assert_eq!(s.latency_count, 2);
+        assert_eq!(s.latency_mean_us, 200.0);
+        assert_eq!(s.latency_max_us, 300.0);
     }
 
     /// Cross-worker requeue end to end: a pool where worker 0 always

@@ -36,6 +36,7 @@ pub mod nn;
 pub mod pruning;
 pub mod report;
 pub mod runtime;
+pub mod serve_http;
 pub mod sim;
 pub mod util;
 pub mod xbar;

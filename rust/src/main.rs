@@ -20,6 +20,13 @@
 //!               deadlines, per-worker retry/requeue/quarantine, alarm;
 //!               `--auto-tune [--tune-exact]` builds the pool config
 //!               from the DSE frontier winner)
+//!   serve-http — production HTTP/1.1 front door over the coordinator
+//!               (`POST /v1/infer`, `GET /metrics`, `GET /healthz`;
+//!               std-only server in `rram_pattern_accel::serve_http`
+//!               with bounded request reading and a lazy JSON field
+//!               scanner; `--backend mock` serves without the PJRT
+//!               runtime, `--auto-tune` builds the pool from the DSE
+//!               frontier winner)
 //!   e2e       — run the SmallCNN end-to-end check (golden + accuracy)
 //!   report    — print every paper table/figure (sampled mode)
 //!   artifacts — run every paper figure in sampled AND exact trace mode
@@ -58,6 +65,7 @@ use rram_pattern_accel::report::{
     },
 };
 use rram_pattern_accel::runtime::{Engine, EngineFactory};
+use rram_pattern_accel::serve_http::{HttpConfig, HttpServer, MockInferBackend};
 use rram_pattern_accel::sim::{self, smallcnn::SmallCnn, ShardPolicy};
 use rram_pattern_accel::util::cli::Args;
 use rram_pattern_accel::util::threadpool;
@@ -73,14 +81,15 @@ fn main() {
         "batch-sim" => cmd_batch_sim(rest),
         "dse" => cmd_dse(rest),
         "serve" => cmd_serve(rest),
+        "serve-http" => cmd_serve_http(rest),
         "e2e" => cmd_e2e(rest),
         "report" => cmd_report(rest),
         "artifacts" => cmd_artifacts(rest),
         "lint" => cmd_lint(rest),
         _ => {
             eprintln!(
-                "usage: rram-accel <map|simulate|batch-sim|dse|serve|e2e|\
-                 report|artifacts|lint> [options]\n\
+                "usage: rram-accel <map|simulate|batch-sim|dse|serve|\
+                 serve-http|e2e|report|artifacts|lint> [options]\n\
                  run a subcommand with --help for its options"
             );
             if sub == "help" { 0 } else { 2 }
@@ -755,6 +764,258 @@ fn cmd_serve(rest: Vec<String>) -> i32 {
     }
     coord.shutdown();
     0
+}
+
+/// `rram-accel serve-http` — the production HTTP front door: bind a
+/// std-only HTTP/1.1 server (`rram_pattern_accel::serve_http`) over a
+/// coordinator pool. `--backend mock` runs the deterministic mock
+/// backend so the edge works in builds without the PJRT runtime (CI
+/// smoke, load benches); `--backend pjrt` serves the real AOT artifact.
+fn cmd_serve_http(rest: Vec<String>) -> i32 {
+    let args = match Args::new("HTTP/1.1 front door over the coordinator pool")
+        .opt("addr", "127.0.0.1:8080", "bind address (port 0 = ephemeral)")
+        .opt("backend", "mock", "inference backend: mock|pjrt")
+        .opt("workers", "1", "pool size: worker threads, one backend each")
+        .opt("balance", "cost", "dispatch policy: cost|rr")
+        .opt("max-wait-ms", "2", "batcher max wait")
+        .opt(
+            "deadline-ms",
+            "0",
+            "default deadline for requests without deadline_us (0 = none)",
+        )
+        .opt("alarm-threshold", "0", "failed-request alarm threshold (0 = off)")
+        .opt(
+            "max-requeues",
+            "1",
+            "cross-worker requeues of a failed batch's requests (pools only)",
+        )
+        .opt(
+            "quarantine-expiry-ms",
+            "0",
+            "quarantine expiry in ms (0 = release on next success only)",
+        )
+        .opt(
+            "max-outstanding-cost",
+            "0",
+            "overload admission limit in predicted cycles (0 = off; needs a \
+             cost model: --mock-cost or --auto-tune)",
+        )
+        .flag(
+            "auto-tune",
+            "sweep the design space and build the pool's cost model from the \
+             Pareto-frontier winner",
+        )
+        .opt("tune-grid", "small", "auto-tune sweep grid: small|medium")
+        .opt("tune-seed", "42", "auto-tune workload seed (match `dse --seed`)")
+        .opt("tune-weights", "1,1,1", "auto-tune weights: area,energy,cycles")
+        .flag(
+            "tune-exact",
+            "auto-tune from exact traces (every position; match `dse --exact`)",
+        )
+        .opt("mock-input-len", "64", "mock backend: image element count")
+        .opt("mock-output-len", "10", "mock backend: logit count")
+        .opt("mock-batch", "8", "mock backend: batch capacity")
+        .opt("mock-delay-us", "0", "mock backend: per-batch latency in us")
+        .opt(
+            "mock-cost",
+            "0",
+            "mock backend: dense cycles per request for the cost model \
+             (0 = no cost model unless --auto-tune)",
+        )
+        .opt("artifacts", "artifacts", "artifacts directory (pjrt backend)")
+        .opt("max-body-kib", "4096", "request body cap in KiB (413 beyond)")
+        .opt("read-timeout-ms", "5000", "socket read timeout (408 on expiry)")
+        .opt("max-connections", "256", "concurrent connection cap (503 beyond)")
+        .opt("run-secs", "0", "serve for N seconds then exit (0 = until killed)")
+        .parse(rest)
+    {
+        Ok(a) => a,
+        Err(e) => return usage(e),
+    };
+    let workers = args.get_usize("workers").unwrap_or(1).max(1);
+    let balance = match args.get("balance") {
+        "cost" => BalancePolicy::CostAware,
+        "rr" => BalancePolicy::RoundRobin,
+        other => return usage(format!("unknown balance policy {other}")),
+    };
+    let deadline_ms = args.get_usize("deadline-ms").unwrap_or(0);
+    let cfg = CoordinatorConfig {
+        max_wait: Duration::from_millis(
+            args.get_usize("max-wait-ms").unwrap_or(2) as u64
+        ),
+        default_deadline: if deadline_ms == 0 {
+            None
+        } else {
+            Some(Duration::from_millis(deadline_ms as u64))
+        },
+        alarm_threshold: args.get_u64("alarm-threshold").unwrap_or(0),
+        workers,
+        balance,
+        max_requeues: args.get_usize("max-requeues").unwrap_or(1) as u32,
+        quarantine_expiry: match args.get_usize("quarantine-expiry-ms").unwrap_or(0)
+        {
+            0 => None,
+            ms => Some(Duration::from_millis(ms as u64)),
+        },
+        max_outstanding_cost: args.get_f64("max-outstanding-cost").unwrap_or(0.0),
+        ..Default::default()
+    };
+
+    // Auto-tune: the sweep's frontier winner supplies the dense
+    // per-request cost the dispatcher balances/admits on (its slopes
+    // are zero — the mock backend has no zero-skip behavior to model).
+    let tuned_cost = if args.get_flag("auto-tune") {
+        let obj = match Objective::parse(args.get("tune-weights")) {
+            Ok(o) => o,
+            Err(e) => return usage(e),
+        };
+        let tune_seed = args.get_u64("tune-seed").unwrap_or(42);
+        let mut spec = match SweepSpec::by_name(args.get("tune-grid"), tune_seed) {
+            Some(s) => s,
+            None => {
+                return usage(format!("unknown tune grid {}", args.get("tune-grid")))
+            }
+        };
+        if args.get_flag("tune-exact") {
+            spec.workload.exact = true;
+        }
+        let outcome = SweepRunner {
+            spec,
+            threads: threadpool::default_threads(),
+            cache: Some(ResultCache::default_dir()),
+        }
+        .run();
+        println!("[serve-http] auto-tune: {}", outcome.summary_line());
+        match outcome.select(&obj) {
+            Some(t) => {
+                println!(
+                    "[serve-http] auto-tune selected {} — cycles {:.0}, \
+                     energy {:.4e} pJ",
+                    t.point.label(),
+                    t.metrics.cycles,
+                    t.metrics.energy_pj,
+                );
+                Some(CostModel {
+                    dense_cycles: t.metrics.cycles,
+                    dense_energy_pj: t.metrics.energy_pj,
+                    skip_slope: 0.0,
+                    energy_skip_slope: 0.0,
+                })
+            }
+            None => {
+                return usage("auto-tune produced an empty frontier".to_string())
+            }
+        }
+    } else {
+        None
+    };
+
+    let (coord, input_len) = match args.get("backend") {
+        "mock" => {
+            let input_len = args.get_usize("mock-input-len").unwrap_or(64);
+            let output_len = args.get_usize("mock-output-len").unwrap_or(10);
+            let batch = args.get_usize("mock-batch").unwrap_or(8).max(1);
+            let delay = Duration::from_micros(
+                args.get_u64("mock-delay-us").unwrap_or(0),
+            );
+            let mock_cost = args.get_f64("mock-cost").unwrap_or(0.0);
+            let cost_model = tuned_cost.or(if mock_cost > 0.0 {
+                Some(CostModel {
+                    dense_cycles: mock_cost,
+                    dense_energy_pj: mock_cost,
+                    skip_slope: 0.0,
+                    energy_skip_slope: 0.0,
+                })
+            } else {
+                None
+            });
+            let coord = Coordinator::start_pool(
+                move |_worker| MockInferBackend {
+                    input_len,
+                    output_len,
+                    batch,
+                    delay,
+                    fail: false,
+                },
+                cfg,
+                cost_model,
+            );
+            (coord, input_len)
+        }
+        "pjrt" => {
+            if !Engine::available() {
+                return usage(
+                    "PJRT runtime unavailable: rebuild with --features \
+                     xla-runtime, or use --backend mock"
+                        .to_string(),
+                );
+            }
+            let dir = args.get("artifacts").to_string();
+            let factory = EngineFactory::new(format!("{dir}/smallcnn_b8.hlo.txt"));
+            let coord = Coordinator::start_pool(
+                move |worker| {
+                    let engine = factory.load().expect("load HLO artifact");
+                    println!(
+                        "[serve-http] worker {worker} engine up on {}",
+                        engine.platform()
+                    );
+                    PjrtBackend {
+                        engine,
+                        batch: 8,
+                        input_shape: vec![3, 32, 32],
+                        output_len: 10,
+                    }
+                },
+                cfg,
+                tuned_cost,
+            );
+            (coord, 3 * 32 * 32)
+        }
+        other => return usage(format!("unknown backend {other}")),
+    };
+
+    let http_cfg = HttpConfig {
+        addr: args.get("addr").to_string(),
+        max_body_bytes: args.get_usize("max-body-kib").unwrap_or(4096) * 1024,
+        read_timeout: Duration::from_millis(
+            args.get_u64("read-timeout-ms").unwrap_or(5000),
+        ),
+        max_connections: args.get_usize("max-connections").unwrap_or(256).max(1),
+        input_len,
+        default_deadline: if deadline_ms == 0 {
+            None
+        } else {
+            Some(Duration::from_millis(deadline_ms as u64))
+        },
+    };
+    let server = match HttpServer::start(coord, http_cfg) {
+        Ok(s) => s,
+        Err(e) => return usage(format!("bind {}: {e}", args.get("addr"))),
+    };
+    println!(
+        "[serve-http] listening on {} ({} worker(s), backend {})",
+        server.addr(),
+        workers,
+        args.get("backend"),
+    );
+    let run_secs = args.get_u64("run-secs").unwrap_or(0);
+    if run_secs > 0 {
+        std::thread::sleep(Duration::from_secs(run_secs));
+        let stats = server.http_stats();
+        println!(
+            "[serve-http] exiting after {run_secs}s: {} connections, \
+             {} requests ({} bad, {} handler panics)",
+            stats.connections,
+            stats.requests,
+            stats.bad_requests,
+            stats.handler_panics,
+        );
+        server.shutdown();
+        return 0;
+    }
+    loop {
+        std::thread::sleep(Duration::from_secs(3600));
+    }
 }
 
 fn cmd_e2e(rest: Vec<String>) -> i32 {

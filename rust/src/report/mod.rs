@@ -9,7 +9,7 @@ pub mod artifacts;
 
 use std::path::Path;
 
-use crate::coordinator::WorkerStats;
+use crate::coordinator::{MetricsSnapshot, WorkerStats};
 use crate::pruning::synthetic::DatasetProfile;
 use crate::pruning::NetworkStats;
 use crate::sim::{Comparison, ShardPlan};
@@ -436,6 +436,102 @@ pub fn speedup_line(dataset: &str, cmp: &Comparison, paper: f64) -> String {
     )
 }
 
+/// Pool metrics in Prometheus-style text exposition format — the body
+/// of the HTTP front door's `GET /metrics`, also usable by any CLI
+/// path that wants a scrape-ready dump. One `rram_*` line per counter,
+/// per-worker series labeled `{worker="i"}`; every value is a plain
+/// number (the snapshot already flattened empty-sample NaNs to 0).
+pub fn metrics_export_text(m: &MetricsSnapshot, workers: &[WorkerStats]) -> String {
+    let mut s = String::new();
+    let mut counter = |name: &str, v: u64| {
+        s.push_str(&format!("# TYPE {name} counter\n{name} {v}\n"));
+    };
+    counter("rram_requests_total", m.requests);
+    counter("rram_failed_requests_total", m.failed_requests);
+    counter("rram_batches_total", m.batches);
+    counter("rram_padded_slots_total", m.padded_slots);
+    counter("rram_retried_batches_total", m.retried_batches);
+    counter("rram_requeued_requests_total", m.requeued_requests);
+    counter("rram_deadline_expired_total", m.deadline_expired);
+    counter("rram_rejected_overload_total", m.rejected_overload);
+    s.push_str(&format!(
+        "# TYPE rram_alarm_tripped gauge\nrram_alarm_tripped {}\n",
+        u64::from(m.alarm_tripped)
+    ));
+    s.push_str(&format!(
+        "# TYPE rram_latency_us summary\n\
+         rram_latency_us_count {}\n\
+         rram_latency_us_mean {}\n\
+         rram_latency_us{{quantile=\"0.5\"}} {}\n\
+         rram_latency_us{{quantile=\"0.99\"}} {}\n\
+         rram_latency_us_max {}\n",
+        m.latency_count,
+        m.latency_mean_us,
+        m.latency_p50_us,
+        m.latency_p99_us,
+        m.latency_max_us,
+    ));
+    s.push_str("# TYPE rram_worker_requests_total counter\n");
+    for w in workers {
+        s.push_str(&format!(
+            "rram_worker_requests_total{{worker=\"{}\"}} {}\n",
+            w.worker, w.requests
+        ));
+    }
+    s.push_str("# TYPE rram_worker_inflight gauge\n");
+    for w in workers {
+        s.push_str(&format!(
+            "rram_worker_inflight{{worker=\"{}\"}} {}\n",
+            w.worker, w.inflight
+        ));
+    }
+    s.push_str("# TYPE rram_worker_outstanding_cycles gauge\n");
+    for w in workers {
+        s.push_str(&format!(
+            "rram_worker_outstanding_cycles{{worker=\"{}\"}} {}\n",
+            w.worker, w.outstanding_cost
+        ));
+    }
+    s.push_str("# TYPE rram_worker_quarantined gauge\n");
+    for w in workers {
+        s.push_str(&format!(
+            "rram_worker_quarantined{{worker=\"{}\"}} {}\n",
+            w.worker,
+            u64::from(w.quarantined)
+        ));
+    }
+    s
+}
+
+/// The same pool view as [`metrics_export_text`], as a JSON document
+/// (`GET /metrics?format=json`): the merged pool counters plus the
+/// per-worker utilization block.
+pub fn metrics_export_json(m: &MetricsSnapshot, workers: &[WorkerStats]) -> Json {
+    obj(vec![
+        (
+            "pool",
+            obj(vec![
+                ("requests", (m.requests as f64).into()),
+                ("failed_requests", (m.failed_requests as f64).into()),
+                ("batches", (m.batches as f64).into()),
+                ("padded_slots", (m.padded_slots as f64).into()),
+                ("retried_batches", (m.retried_batches as f64).into()),
+                ("requeued_requests", (m.requeued_requests as f64).into()),
+                ("deadline_expired", (m.deadline_expired as f64).into()),
+                ("rejected_overload", (m.rejected_overload as f64).into()),
+                ("alarm_threshold", (m.alarm_threshold as f64).into()),
+                ("alarm_tripped", m.alarm_tripped.into()),
+                ("latency_count", (m.latency_count as f64).into()),
+                ("latency_mean_us", m.latency_mean_us.into()),
+                ("latency_p50_us", m.latency_p50_us.into()),
+                ("latency_p99_us", m.latency_p99_us.into()),
+                ("latency_max_us", m.latency_max_us.into()),
+            ]),
+        ),
+        ("workers", worker_utilization_json(workers)),
+    ])
+}
+
 /// Write a JSON report under `results/`, creating the directory.
 pub fn write_json(path_under_results: &str, j: &Json) -> std::io::Result<()> {
     write_text(path_under_results, &j.to_string_pretty())
@@ -609,6 +705,65 @@ mod tests {
             j.get("workers").idx(1).get("quarantined").as_bool(),
             Some(true)
         );
+    }
+
+    #[test]
+    fn metrics_export_formats() {
+        let m = MetricsSnapshot {
+            requests: 10,
+            failed_requests: 2,
+            batches: 4,
+            padded_slots: 1,
+            retried_batches: 1,
+            requeued_requests: 0,
+            deadline_expired: 1,
+            rejected_overload: 1,
+            alarm_threshold: 0,
+            alarm_tripped: false,
+            latency_count: 8,
+            latency_mean_us: 250.0,
+            latency_p50_us: 200.0,
+            latency_p99_us: 900.0,
+            latency_max_us: 1000.0,
+        };
+        let workers = vec![WorkerStats {
+            worker: 0,
+            requests: 10,
+            failed_requests: 2,
+            batches: 4,
+            padded_slots: 1,
+            retried_batches: 1,
+            requeued_requests: 0,
+            inflight: 0,
+            outstanding_cost: 42,
+            quarantined: true,
+        }];
+        let t = metrics_export_text(&m, &workers);
+        assert!(t.contains("rram_requests_total 10"), "{t}");
+        assert!(t.contains("rram_deadline_expired_total 1"), "{t}");
+        assert!(
+            t.contains("rram_latency_us{quantile=\"0.99\"} 900"),
+            "{t}"
+        );
+        assert!(
+            t.contains("rram_worker_quarantined{worker=\"0\"} 1"),
+            "{t}"
+        );
+        for line in t.lines() {
+            assert!(
+                line.starts_with('#') || line.starts_with("rram_"),
+                "unexpected exposition line: {line}"
+            );
+        }
+        let j = metrics_export_json(&m, &workers);
+        assert_eq!(j.get("pool").get("requests").as_f64(), Some(10.0));
+        assert_eq!(j.get("pool").get("latency_p99_us").as_f64(), Some(900.0));
+        assert_eq!(
+            j.get("workers").get("workers").idx(0).get("outstanding_cost").as_f64(),
+            Some(42.0)
+        );
+        // round-trips through the parser
+        assert_eq!(Json::parse(&j.to_string_compact()).unwrap(), j);
     }
 
     #[test]

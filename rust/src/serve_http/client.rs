@@ -1,0 +1,227 @@
+//! Minimal loopback HTTP/1.1 client + load generator.
+//!
+//! Test and bench harness for the server in this module: a keep-alive
+//! client just capable enough to drive `rram-accel serve-http`
+//! (request line + headers + Content-Length bodies, no chunking, no
+//! TLS), and a multi-threaded closed-loop load generator that reports
+//! sustained RPS with p50/p99 tail latency. Not a general HTTP client.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::{Duration, Instant};
+
+use crate::util::stats::Summary;
+use crate::util::threadpool;
+
+/// One parsed response.
+#[derive(Debug, Clone)]
+pub struct HttpResponse {
+    pub status: u16,
+    pub body: Vec<u8>,
+}
+
+impl HttpResponse {
+    pub fn body_text(&self) -> String {
+        String::from_utf8_lossy(&self.body).into_owned()
+    }
+}
+
+/// Keep-alive HTTP/1.1 connection to one server.
+pub struct HttpClient {
+    stream: TcpStream,
+    carry: Vec<u8>,
+}
+
+impl HttpClient {
+    pub fn connect(addr: SocketAddr) -> std::io::Result<HttpClient> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        stream.set_read_timeout(Some(Duration::from_secs(10)))?;
+        Ok(HttpClient { stream, carry: Vec::new() })
+    }
+
+    pub fn get(&mut self, target: &str) -> std::io::Result<HttpResponse> {
+        self.request("GET", target, b"")
+    }
+
+    pub fn post(
+        &mut self,
+        target: &str,
+        body: &[u8],
+    ) -> std::io::Result<HttpResponse> {
+        self.request("POST", target, body)
+    }
+
+    pub fn request(
+        &mut self,
+        method: &str,
+        target: &str,
+        body: &[u8],
+    ) -> std::io::Result<HttpResponse> {
+        let head = format!(
+            "{method} {target} HTTP/1.1\r\nHost: localhost\r\n\
+             Content-Length: {}\r\n\r\n",
+            body.len()
+        );
+        self.stream.write_all(head.as_bytes())?;
+        self.stream.write_all(body)?;
+        self.read_response()
+    }
+
+    /// Write raw bytes and read one response — for malformed-input
+    /// tests that must not go through the well-formed request builder.
+    pub fn raw(&mut self, bytes: &[u8]) -> std::io::Result<HttpResponse> {
+        self.stream.write_all(bytes)?;
+        self.read_response()
+    }
+
+    fn read_response(&mut self) -> std::io::Result<HttpResponse> {
+        let mut buf = std::mem::take(&mut self.carry);
+        let mut chunk = [0u8; 4096];
+        let head_end = loop {
+            if let Some(p) = buf.windows(4).position(|w| w == b"\r\n\r\n") {
+                break p;
+            }
+            let n = self.stream.read(&mut chunk)?;
+            if n == 0 {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::UnexpectedEof,
+                    "server closed before response head",
+                ));
+            }
+            buf.extend_from_slice(&chunk[..n]);
+        };
+        let head = String::from_utf8_lossy(&buf[..head_end]).into_owned();
+        let mut lines = head.split("\r\n");
+        let status_line = lines.next().unwrap_or("");
+        let status: u16 = status_line
+            .split(' ')
+            .nth(1)
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| {
+                std::io::Error::new(
+                    std::io::ErrorKind::InvalidData,
+                    format!("bad status line: {status_line:?}"),
+                )
+            })?;
+        let mut content_length = 0usize;
+        for line in lines {
+            if let Some((name, value)) = line.split_once(':') {
+                if name.eq_ignore_ascii_case("content-length") {
+                    content_length = value.trim().parse().unwrap_or(0);
+                }
+            }
+        }
+        let body_start = head_end + 4;
+        let mut body = buf.split_off(body_start);
+        while body.len() < content_length {
+            let n = self.stream.read(&mut chunk)?;
+            if n == 0 {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::UnexpectedEof,
+                    "server closed mid-body",
+                ));
+            }
+            body.extend_from_slice(&chunk[..n]);
+        }
+        self.carry = body.split_off(content_length);
+        Ok(HttpResponse { status, body })
+    }
+}
+
+/// Closed-loop load generator configuration.
+#[derive(Debug, Clone)]
+pub struct LoadConfig {
+    pub addr: SocketAddr,
+    /// Concurrent keep-alive client connections.
+    pub clients: usize,
+    /// Wall-clock run length.
+    pub duration: Duration,
+    /// Request body POSTed to `/v1/infer` by every client.
+    pub body: Vec<u8>,
+}
+
+/// Aggregate result of one load run.
+#[derive(Debug, Clone)]
+pub struct LoadReport {
+    pub requests: u64,
+    /// Responses with a non-200 status (any kind).
+    pub non_200: u64,
+    pub elapsed: Duration,
+    /// Per-request wall latencies in microseconds, merged across
+    /// clients.
+    pub latencies_us: Summary,
+}
+
+impl LoadReport {
+    pub fn rps(&self) -> f64 {
+        self.requests as f64 / self.elapsed.as_secs_f64().max(1e-9)
+    }
+
+    /// One human-readable summary line (bench + CI smoke output).
+    pub fn line(&self) -> String {
+        format!(
+            "{} requests in {:.2}s -> {:.0} req/s sustained, latency \
+             p50 {:.0} us  p99 {:.0} us  max {:.0} us ({} non-200)",
+            self.requests,
+            self.elapsed.as_secs_f64(),
+            self.rps(),
+            self.latencies_us.percentile(50.0),
+            self.latencies_us.percentile(99.0),
+            self.latencies_us.max(),
+            self.non_200,
+        )
+    }
+}
+
+/// Run a closed-loop load test: `clients` threads each hammer
+/// `POST /v1/infer` over a keep-alive connection until the deadline,
+/// then the per-thread tallies are merged. Connection failures stop
+/// the failing thread (its partial tally still counts, and the
+/// failure shows up as a request shortfall, not a hang).
+pub fn run_load(cfg: &LoadConfig) -> LoadReport {
+    let start = Instant::now();
+    let deadline = start + cfg.duration;
+    let mut joins = Vec::with_capacity(cfg.clients);
+    for c in 0..cfg.clients {
+        let addr = cfg.addr;
+        let body = cfg.body.clone();
+        joins.push(threadpool::spawn_named(
+            &format!("http-load-{c}"),
+            move || {
+                let mut lat = Summary::new();
+                let mut requests = 0u64;
+                let mut non_200 = 0u64;
+                let mut client = match HttpClient::connect(addr) {
+                    Ok(c) => c,
+                    Err(_) => return (lat, requests, non_200),
+                };
+                while Instant::now() < deadline {
+                    let t0 = Instant::now();
+                    match client.post("/v1/infer", &body) {
+                        Ok(resp) => {
+                            requests += 1;
+                            if resp.status != 200 {
+                                non_200 += 1;
+                            }
+                            lat.push(t0.elapsed().as_micros() as f64);
+                        }
+                        Err(_) => break,
+                    }
+                }
+                (lat, requests, non_200)
+            },
+        ));
+    }
+    let mut latencies_us = Summary::new();
+    let mut requests = 0u64;
+    let mut non_200 = 0u64;
+    for j in joins {
+        if let Ok((lat, r, n)) = j.join() {
+            latencies_us.merge(&lat);
+            requests += r;
+            non_200 += n;
+        }
+    }
+    LoadReport { requests, non_200, elapsed: start.elapsed(), latencies_us }
+}

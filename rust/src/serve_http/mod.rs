@@ -1,0 +1,536 @@
+//! Zero-dependency HTTP/1.1 front door over the serving coordinator.
+//!
+//! The pool (admission → dispatcher → N workers, `crate::coordinator`)
+//! only takes in-process `submit` calls; this module is the network
+//! edge that the ROADMAP's production north star needs, built on
+//! `std::net` alone to keep the crate's zero-dependency policy. Every
+//! byte read from a socket goes through the bounded reader
+//! ([`request`]) and the lazy field scanner ([`scan`]) — both fuzzed in
+//! `tests/serve_http.rs` — before anything allocates proportionally to
+//! peer input.
+//!
+//! # Wire format
+//!
+//! HTTP/1.1 over TCP. Requests must carry `Content-Length` bodies
+//! (`Transfer-Encoding` is rejected with 400); responses always carry
+//! `Content-Length` and honor keep-alive (`Connection: close` or an
+//! HTTP/1.0 request line opt out). The request head is capped at
+//! [`request::MAX_HEAD_BYTES`] / [`request::MAX_HEADERS`], the body at
+//! [`HttpConfig::max_body_bytes`], and socket reads at
+//! [`HttpConfig::read_timeout`].
+//!
+//! ## `POST /v1/infer`
+//!
+//! Body: a JSON object scanned lazily — only these keys are read, the
+//! rest are structurally skipped without building a tree:
+//!
+//! ```json
+//! {"image": [f32; input_len], "deadline_us": u64?, "batch_hint": u64?}
+//! ```
+//!
+//! `image` is required and must be exactly the pool's input length.
+//! `deadline_us` (optional) becomes the request's completion deadline;
+//! absent, [`HttpConfig::default_deadline`] applies. `batch_hint`
+//! (optional, 1..=4096) is advisory — the pool batches by its own
+//! `max_wait`/deadline policy — and is validated and echoed back.
+//!
+//! 200 response body:
+//!
+//! ```json
+//! {"logits": [f32; output_len], "queue_us": u64, "batch_fill": usize}
+//! ```
+//!
+//! ## `GET /healthz`
+//!
+//! 200 with `{"status": "ok", "workers": N}` while the pool is up.
+//!
+//! ## `GET /metrics`
+//!
+//! Pool-wide metrics built from `Metrics::merge` + `worker_stats`:
+//! Prometheus-style text by default
+//! ([`crate::report::metrics_export_text`]: `rram_*` counters, the
+//! latency summary with p50/p99 quantile labels, per-worker
+//! `{worker="i"}` series), plus the front door's own
+//! `rram_http_{connections,requests,bad_requests,handler_panics}_total`
+//! counters. `GET /metrics?format=json` returns the same view as JSON
+//! ([`crate::report::metrics_export_json`] with an added `"http"`
+//! object).
+//!
+//! # Status-code mapping to coordinator outcomes
+//!
+//! | condition                                      | status |
+//! |------------------------------------------------|--------|
+//! | inference completed                             | 200 |
+//! | malformed head/body, bad field, wrong image len | 400 |
+//! | unknown path                                    | 404 |
+//! | known path, wrong method                        | 405 |
+//! | read timeout mid-request                        | 408 |
+//! | body over [`HttpConfig::max_body_bytes`]        | 413 |
+//! | overload rejection ([`ERR_OVERLOAD_PREFIX`])    | 429 |
+//! | head over the size/count caps                   | 431 |
+//! | handler panic (counted, never kills the server) | 500 |
+//! | backend failure after retries/requeues          | 502 |
+//! | connection cap reached, or coordinator gone     | 503 |
+//! | deadline exceeded ([`ERR_DEADLINE_PREFIX`])     | 504 |
+//!
+//! Deadline/overload classification matches on the stable
+//! [`ERR_DEADLINE_PREFIX`]/[`ERR_OVERLOAD_PREFIX`] prefixes of
+//! `Reply::result` errors rather than ad-hoc substrings.
+
+pub mod client;
+pub mod request;
+pub mod scan;
+
+use std::io::Write;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::coordinator::{
+    Coordinator, InferBackend, ERR_DEADLINE_PREFIX, ERR_OVERLOAD_PREFIX,
+};
+use crate::report;
+use crate::util::json::{obj, Json};
+use crate::util::threadpool;
+
+use request::{read_request, ReadError, RequestHead};
+
+/// Largest accepted `batch_hint` value.
+pub const MAX_BATCH_HINT: u64 = 4096;
+
+/// Front-door configuration.
+#[derive(Debug, Clone)]
+pub struct HttpConfig {
+    /// Bind address; port 0 picks an ephemeral port (see
+    /// [`HttpServer::addr`]).
+    pub addr: String,
+    /// Hard cap on request bodies (413 beyond it).
+    pub max_body_bytes: usize,
+    /// Socket read timeout; expiry mid-request answers 408.
+    pub read_timeout: Duration,
+    /// Concurrent connection cap; further accepts answer 503.
+    pub max_connections: usize,
+    /// Expected `image` element count (the pool backend's input_len).
+    pub input_len: usize,
+    /// Deadline applied to requests that do not carry `deadline_us`.
+    pub default_deadline: Option<Duration>,
+}
+
+impl Default for HttpConfig {
+    fn default() -> HttpConfig {
+        HttpConfig {
+            addr: "127.0.0.1:0".to_string(),
+            max_body_bytes: 4 * 1024 * 1024,
+            read_timeout: Duration::from_secs(5),
+            max_connections: 256,
+            input_len: 0,
+            default_deadline: None,
+        }
+    }
+}
+
+/// Point-in-time front-door counters (also exported on `/metrics`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HttpStats {
+    pub connections: u64,
+    pub requests: u64,
+    /// Requests answered with a 4xx status (malformed input).
+    pub bad_requests: u64,
+    /// Handler panics caught and answered with 500.
+    pub handler_panics: u64,
+}
+
+struct Shared {
+    coord: Coordinator,
+    cfg: HttpConfig,
+    stop: AtomicBool,
+    open_connections: AtomicU64,
+    connections_total: AtomicU64,
+    requests_total: AtomicU64,
+    bad_requests_total: AtomicU64,
+    handler_panics_total: AtomicU64,
+}
+
+/// Handle to a running front door. Owns the accept thread; dropping
+/// the handle (or calling [`HttpServer::shutdown`]) stops accepting,
+/// and the coordinator shuts down once the last connection handler
+/// releases it.
+pub struct HttpServer {
+    addr: SocketAddr,
+    shared: Arc<Shared>,
+    accept_join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl HttpServer {
+    /// Bind `cfg.addr` and start serving `coord`. The pool keeps its
+    /// own policy (deadlines, retries, quarantine); the front door
+    /// only maps requests onto it.
+    pub fn start(coord: Coordinator, cfg: HttpConfig) -> std::io::Result<HttpServer> {
+        let listener = TcpListener::bind(&cfg.addr)?;
+        let addr = listener.local_addr()?;
+        let shared = Arc::new(Shared {
+            coord,
+            cfg,
+            stop: AtomicBool::new(false),
+            open_connections: AtomicU64::new(0),
+            connections_total: AtomicU64::new(0),
+            requests_total: AtomicU64::new(0),
+            bad_requests_total: AtomicU64::new(0),
+            handler_panics_total: AtomicU64::new(0),
+        });
+        let accept_shared = shared.clone();
+        let accept_join = threadpool::spawn_named("http-accept", move || {
+            accept_loop(&listener, &accept_shared);
+        });
+        Ok(HttpServer { addr, shared, accept_join: Some(accept_join) })
+    }
+
+    /// The bound address (resolves port 0 to the actual port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn http_stats(&self) -> HttpStats {
+        let r = Ordering::Relaxed;
+        HttpStats {
+            connections: self.shared.connections_total.load(r),
+            requests: self.shared.requests_total.load(r),
+            bad_requests: self.shared.bad_requests_total.load(r),
+            handler_panics: self.shared.handler_panics_total.load(r),
+        }
+    }
+
+    /// Stop accepting and join the accept thread. Open connections
+    /// finish their current request and drain within the read timeout.
+    pub fn shutdown(mut self) {
+        self.stop();
+    }
+
+    fn stop(&mut self) {
+        self.shared.stop.store(true, Ordering::Release);
+        // Unblock the blocking accept() with a throwaway connection.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(j) = self.accept_join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for HttpServer {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn accept_loop(listener: &TcpListener, shared: &Arc<Shared>) {
+    for conn in listener.incoming() {
+        if shared.stop.load(Ordering::Acquire) {
+            break;
+        }
+        let stream = match conn {
+            Ok(s) => s,
+            Err(_) => continue,
+        };
+        shared.connections_total.fetch_add(1, Ordering::Relaxed);
+        let open = shared.open_connections.load(Ordering::Relaxed);
+        if open >= shared.cfg.max_connections as u64 {
+            // Over the cap: answer 503 inline and close — never block
+            // the accept loop on a slow peer.
+            let resp =
+                error_response(503, "connection limit reached, retry later");
+            let _ = stream.set_write_timeout(Some(Duration::from_secs(1)));
+            let _ = write_response(&stream, &resp, true);
+            continue;
+        }
+        shared.open_connections.fetch_add(1, Ordering::Relaxed);
+        let conn_shared = shared.clone();
+        drop(threadpool::spawn_named("http-conn", move || {
+            handle_connection(&stream, &conn_shared);
+            conn_shared.open_connections.fetch_sub(1, Ordering::Relaxed);
+        }));
+    }
+}
+
+fn handle_connection(stream: &TcpStream, shared: &Arc<Shared>) {
+    if stream.set_read_timeout(Some(shared.cfg.read_timeout)).is_err()
+        || stream.set_nodelay(true).is_err()
+    {
+        return;
+    }
+    let mut carry = Vec::new();
+    let mut reader = stream;
+    loop {
+        if shared.stop.load(Ordering::Acquire) {
+            return;
+        }
+        match read_request(&mut reader, &mut carry, shared.cfg.max_body_bytes) {
+            Ok((head, body)) => {
+                shared.requests_total.fetch_add(1, Ordering::Relaxed);
+                // A panic anywhere in routing/scan/submit answers 500
+                // on this connection and never takes down the server.
+                let resp = catch_unwind(AssertUnwindSafe(|| {
+                    route(shared, &head, &body)
+                }))
+                .unwrap_or_else(|_| {
+                    shared.handler_panics_total.fetch_add(1, Ordering::Relaxed);
+                    error_response(500, "internal error")
+                });
+                if (400..500).contains(&resp.status) {
+                    shared.bad_requests_total.fetch_add(1, Ordering::Relaxed);
+                }
+                let wrote =
+                    write_response(stream, &resp, head.connection_close);
+                if head.connection_close || wrote.is_err() {
+                    return;
+                }
+            }
+            Err(ReadError::ClosedIdle) => return,
+            Err(e) => {
+                shared.bad_requests_total.fetch_add(1, Ordering::Relaxed);
+                let status = match e {
+                    ReadError::Timeout => 408,
+                    ReadError::HeadTooLarge => 431,
+                    ReadError::BodyTooLarge => 413,
+                    _ => 400,
+                };
+                // The stream is no longer in sync with the peer; the
+                // error response is best-effort and the connection
+                // always closes.
+                let _ = write_response(
+                    stream,
+                    &error_response(status, e.detail()),
+                    true,
+                );
+                return;
+            }
+        }
+    }
+}
+
+/// One response ready to serialize.
+struct Response {
+    status: u16,
+    content_type: &'static str,
+    body: String,
+}
+
+fn json_response(status: u16, body: Json) -> Response {
+    Response {
+        status,
+        content_type: "application/json",
+        body: body.to_string_compact(),
+    }
+}
+
+fn error_response(status: u16, detail: &str) -> Response {
+    json_response(status, obj(vec![("error", detail.into())]))
+}
+
+fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        502 => "Bad Gateway",
+        503 => "Service Unavailable",
+        504 => "Gateway Timeout",
+        _ => "Unknown",
+    }
+}
+
+fn write_response(
+    mut stream: &TcpStream,
+    resp: &Response,
+    close: bool,
+) -> std::io::Result<()> {
+    let head = format!(
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\n\
+         Connection: {}\r\n\r\n",
+        resp.status,
+        reason(resp.status),
+        resp.content_type,
+        resp.body.len(),
+        if close { "close" } else { "keep-alive" },
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(resp.body.as_bytes())?;
+    stream.flush()
+}
+
+fn route(shared: &Shared, head: &RequestHead, body: &[u8]) -> Response {
+    let (path, query) = match head.target.split_once('?') {
+        Some((p, q)) => (p, q),
+        None => (head.target.as_str(), ""),
+    };
+    match (head.method.as_str(), path) {
+        ("POST", "/v1/infer") => infer(shared, body),
+        ("GET", "/healthz") => json_response(
+            200,
+            obj(vec![
+                ("status", "ok".into()),
+                ("workers", shared.coord.n_workers().into()),
+            ]),
+        ),
+        ("GET", "/metrics") => metrics(shared, query),
+        (_, "/v1/infer") | (_, "/healthz") | (_, "/metrics") => {
+            error_response(405, "method not allowed on this path")
+        }
+        _ => error_response(404, "unknown path"),
+    }
+}
+
+fn metrics(shared: &Shared, query: &str) -> Response {
+    let snapshot = shared.coord.merged_metrics().snapshot();
+    let workers = shared.coord.worker_stats();
+    let r = Ordering::Relaxed;
+    if query == "format=json" {
+        let mut j = report::metrics_export_json(&snapshot, &workers);
+        if let Json::Obj(m) = &mut j {
+            m.insert(
+                "http".to_string(),
+                obj(vec![
+                    (
+                        "connections",
+                        (shared.connections_total.load(r) as f64).into(),
+                    ),
+                    ("requests", (shared.requests_total.load(r) as f64).into()),
+                    (
+                        "bad_requests",
+                        (shared.bad_requests_total.load(r) as f64).into(),
+                    ),
+                    (
+                        "handler_panics",
+                        (shared.handler_panics_total.load(r) as f64).into(),
+                    ),
+                ]),
+            );
+        }
+        return json_response(200, j);
+    }
+    let mut text = report::metrics_export_text(&snapshot, &workers);
+    for (name, v) in [
+        ("rram_http_connections_total", shared.connections_total.load(r)),
+        ("rram_http_requests_total", shared.requests_total.load(r)),
+        ("rram_http_bad_requests_total", shared.bad_requests_total.load(r)),
+        ("rram_http_handler_panics_total", shared.handler_panics_total.load(r)),
+    ] {
+        text.push_str(&format!("# TYPE {name} counter\n{name} {v}\n"));
+    }
+    Response {
+        status: 200,
+        content_type: "text/plain; version=0.0.4",
+        body: text,
+    }
+}
+
+fn infer(shared: &Shared, body: &[u8]) -> Response {
+    let fields = match scan::scan_infer(body) {
+        Ok(f) => f,
+        Err(e) => return error_response(400, &e.to_string()),
+    };
+    if fields.image.len() != shared.cfg.input_len {
+        return error_response(
+            400,
+            &format!(
+                "\"image\" must have exactly {} elements, got {}",
+                shared.cfg.input_len,
+                fields.image.len()
+            ),
+        );
+    }
+    if let Some(h) = fields.batch_hint {
+        if h == 0 || h > MAX_BATCH_HINT {
+            return error_response(
+                400,
+                &format!("\"batch_hint\" must be in 1..={MAX_BATCH_HINT}"),
+            );
+        }
+    }
+    let deadline = fields
+        .deadline_us
+        .map(Duration::from_micros)
+        .or(shared.cfg.default_deadline);
+    let rx = match deadline {
+        Some(d) => shared.coord.submit_with_deadline(fields.image, d),
+        None => shared.coord.submit(fields.image),
+    };
+    let reply = match rx.recv() {
+        Ok(r) => r,
+        Err(_) => return error_response(503, "coordinator unavailable"),
+    };
+    match reply.result {
+        Ok(logits) => {
+            let mut pairs = vec![
+                (
+                    "logits",
+                    Json::Arr(
+                        logits.iter().map(|v| Json::Num(f64::from(*v))).collect(),
+                    ),
+                ),
+                ("queue_us", (reply.queue_us as f64).into()),
+                ("batch_fill", reply.batch_fill.into()),
+            ];
+            if let Some(h) = fields.batch_hint {
+                pairs.push(("batch_hint", (h as f64).into()));
+            }
+            json_response(200, obj(pairs))
+        }
+        Err(e) if e.starts_with(ERR_DEADLINE_PREFIX) => error_response(504, &e),
+        Err(e) if e.starts_with(ERR_OVERLOAD_PREFIX) => error_response(429, &e),
+        Err(e) => error_response(502, &e),
+    }
+}
+
+/// Deterministic std-only backend for the front door in builds without
+/// the PJRT runtime (the default image): logit `k` of a request is
+/// `sum(image) + k`, so tests and the CI smoke can assert exact logits.
+/// `delay` models backend latency; `fail` makes every batch error (for
+/// the 502 path).
+pub struct MockInferBackend {
+    pub input_len: usize,
+    pub output_len: usize,
+    pub batch: usize,
+    pub delay: Duration,
+    pub fail: bool,
+}
+
+impl InferBackend for MockInferBackend {
+    fn input_len(&self) -> usize {
+        self.input_len
+    }
+
+    fn output_len(&self) -> usize {
+        self.output_len
+    }
+
+    fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    fn run_batch(&self, batch: &[f32]) -> Result<Vec<f32>, String> {
+        if self.fail {
+            return Err("mock backend configured to fail".to_string());
+        }
+        if !self.delay.is_zero() {
+            std::thread::sleep(self.delay);
+        }
+        let mut out = Vec::with_capacity(self.batch * self.output_len);
+        for slot in 0..self.batch {
+            let sum: f32 = batch[slot * self.input_len..(slot + 1) * self.input_len]
+                .iter()
+                .sum();
+            for k in 0..self.output_len {
+                out.push(sum + k as f32);
+            }
+        }
+        Ok(out)
+    }
+}

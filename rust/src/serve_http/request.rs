@@ -1,0 +1,365 @@
+//! Bounded, allocation-light HTTP/1.1 request reader.
+//!
+//! Reads one request head (request line + headers) and its
+//! `Content-Length`-delimited body from any [`Read`] stream, enforcing
+//! hard caps at every step so no peer can make the server buffer an
+//! unbounded amount: the head is capped at [`MAX_HEAD_BYTES`] and
+//! [`MAX_HEADERS`] header lines, the body at the caller's limit, and a
+//! socket read timeout (set by the connection handler) surfaces as
+//! [`ReadError::Timeout`]. Only the fields the router consumes are
+//! retained — method, target, content length, keep-alive — header
+//! names/values are scanned in place and dropped.
+//!
+//! The reader is generic over [`Read`] (not `TcpStream`) so the
+//! malformed-input and fuzz suites can drive it from in-memory byte
+//! slices without sockets.
+
+use std::io::Read;
+
+/// Hard cap on the request line + headers, terminator included.
+pub const MAX_HEAD_BYTES: usize = 8 * 1024;
+
+/// Hard cap on the number of header lines.
+pub const MAX_HEADERS: usize = 64;
+
+/// The subset of a request head the router needs.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RequestHead {
+    pub method: String,
+    pub target: String,
+    pub content_length: usize,
+    /// Peer asked for `Connection: close` (or spoke HTTP/1.0).
+    pub connection_close: bool,
+}
+
+/// Why a request could not be read. Each variant maps to exactly one
+/// connection-handler behavior (see the module doc in `serve_http`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReadError {
+    /// Clean EOF (or idle timeout) before the first byte of a request:
+    /// normal keep-alive termination, close without a response.
+    ClosedIdle,
+    /// The read timeout expired mid-request → 408.
+    Timeout,
+    /// The peer closed the connection mid-request → 400.
+    Truncated,
+    /// Malformed request line, header, or Content-Length → 400.
+    BadRequest(&'static str),
+    /// Head exceeded [`MAX_HEAD_BYTES`] or [`MAX_HEADERS`] → 431.
+    HeadTooLarge,
+    /// Declared Content-Length exceeds the configured body cap → 413.
+    BodyTooLarge,
+}
+
+impl ReadError {
+    /// Human-readable detail for the error response body.
+    pub fn detail(&self) -> &'static str {
+        match self {
+            ReadError::ClosedIdle => "connection closed",
+            ReadError::Timeout => "read timeout",
+            ReadError::Truncated => "connection closed mid-request",
+            ReadError::BadRequest(m) => m,
+            ReadError::HeadTooLarge => "request head too large",
+            ReadError::BodyTooLarge => "request body exceeds limit",
+        }
+    }
+}
+
+fn is_timeout(e: &std::io::Error) -> bool {
+    matches!(
+        e.kind(),
+        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+    )
+}
+
+/// Read one request from `r`. `carry` holds bytes already read off the
+/// stream but not yet consumed (pipelined data past the previous
+/// request's body); it is consumed first and refilled with any overrun,
+/// so back-to-back keep-alive requests never lose bytes.
+///
+/// Returns the parsed head and the exact `content_length` body bytes.
+pub fn read_request<R: Read>(
+    r: &mut R,
+    carry: &mut Vec<u8>,
+    max_body: usize,
+) -> Result<(RequestHead, Vec<u8>), ReadError> {
+    let mut buf = std::mem::take(carry);
+    let mut chunk = [0u8; 4096];
+
+    // Phase 1: accumulate until the head terminator, within the cap.
+    // The cap applies to the head itself (terminator position), not
+    // just the running buffer — otherwise a head whose terminator
+    // lands inside the next read chunk would slip through or not
+    // depending on how the peer's bytes happened to be segmented.
+    let head_end = loop {
+        if let Some(pos) = find_terminator(&buf) {
+            if pos > MAX_HEAD_BYTES {
+                return Err(ReadError::HeadTooLarge);
+            }
+            break pos;
+        }
+        if buf.len() > MAX_HEAD_BYTES {
+            return Err(ReadError::HeadTooLarge);
+        }
+        match r.read(&mut chunk) {
+            Ok(0) => {
+                return Err(if buf.is_empty() {
+                    ReadError::ClosedIdle
+                } else {
+                    ReadError::Truncated
+                });
+            }
+            Ok(n) => buf.extend_from_slice(&chunk[..n]),
+            Err(e) if is_timeout(&e) => {
+                return Err(if buf.is_empty() {
+                    ReadError::ClosedIdle
+                } else {
+                    ReadError::Timeout
+                });
+            }
+            Err(_) => return Err(ReadError::Truncated),
+        }
+    };
+
+    let head = parse_head(&buf[..head_end], max_body)?;
+    let body_start = head_end + 4;
+
+    // Phase 2: the body — take what phase 1 over-read, then the rest.
+    let mut body = Vec::with_capacity(head.content_length.min(buf.len()));
+    let available = buf.len() - body_start;
+    let from_buf = available.min(head.content_length);
+    body.extend_from_slice(&buf[body_start..body_start + from_buf]);
+    // Anything past this request's body is the next pipelined request.
+    *carry = buf.split_off(body_start + from_buf);
+    while body.len() < head.content_length {
+        match r.read(&mut chunk) {
+            Ok(0) => return Err(ReadError::Truncated),
+            Ok(n) => {
+                let need = head.content_length - body.len();
+                body.extend_from_slice(&chunk[..n.min(need)]);
+                if n > need {
+                    carry.extend_from_slice(&chunk[need..n]);
+                }
+            }
+            Err(e) if is_timeout(&e) => return Err(ReadError::Timeout),
+            Err(_) => return Err(ReadError::Truncated),
+        }
+    }
+    Ok((head, body))
+}
+
+/// Byte offset of the `\r\n\r\n` head terminator, if present.
+fn find_terminator(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n")
+}
+
+/// Parse the request line + headers (everything before the terminator).
+fn parse_head(head: &[u8], max_body: usize) -> Result<RequestHead, ReadError> {
+    let text = std::str::from_utf8(head)
+        .map_err(|_| ReadError::BadRequest("request head is not UTF-8"))?;
+    let mut lines = text.split("\r\n");
+    let request_line =
+        lines.next().ok_or(ReadError::BadRequest("empty request"))?;
+    let mut parts = request_line.split(' ');
+    let method = parts.next().unwrap_or("");
+    let target = parts.next().unwrap_or("");
+    let version = parts.next().unwrap_or("");
+    if parts.next().is_some() {
+        return Err(ReadError::BadRequest("malformed request line"));
+    }
+    if method.is_empty()
+        || !method.bytes().all(|b| b.is_ascii_uppercase())
+        || method.len() > 16
+    {
+        return Err(ReadError::BadRequest("malformed method"));
+    }
+    if target.is_empty()
+        || !target.starts_with('/')
+        || target.bytes().any(|b| b <= b' ' || b == 0x7f)
+    {
+        return Err(ReadError::BadRequest("malformed request target"));
+    }
+    let connection_close_default = match version {
+        "HTTP/1.1" => false,
+        "HTTP/1.0" => true,
+        _ => return Err(ReadError::BadRequest("unsupported HTTP version")),
+    };
+
+    let mut content_length: Option<usize> = None;
+    let mut connection_close = connection_close_default;
+    let mut n_headers = 0usize;
+    for line in lines {
+        if line.is_empty() {
+            // split() yields one trailing empty piece when the head
+            // ends in \r\n; an empty line elsewhere is malformed.
+            continue;
+        }
+        n_headers += 1;
+        if n_headers > MAX_HEADERS {
+            return Err(ReadError::HeadTooLarge);
+        }
+        let (name, value) = line
+            .split_once(':')
+            .ok_or(ReadError::BadRequest("malformed header line"))?;
+        if name.is_empty() || name.contains(' ') {
+            return Err(ReadError::BadRequest("malformed header name"));
+        }
+        let value = value.trim();
+        if name.eq_ignore_ascii_case("content-length") {
+            if content_length.is_some() {
+                return Err(ReadError::BadRequest("duplicate Content-Length"));
+            }
+            if value.is_empty() || !value.bytes().all(|b| b.is_ascii_digit()) {
+                return Err(ReadError::BadRequest("malformed Content-Length"));
+            }
+            let n: u64 = value
+                .parse()
+                .map_err(|_| ReadError::BadRequest("Content-Length overflow"))?;
+            if n > max_body as u64 {
+                return Err(ReadError::BodyTooLarge);
+            }
+            content_length = Some(n as usize);
+        } else if name.eq_ignore_ascii_case("transfer-encoding") {
+            return Err(ReadError::BadRequest(
+                "Transfer-Encoding is not supported; use Content-Length",
+            ));
+        } else if name.eq_ignore_ascii_case("connection") {
+            if value.eq_ignore_ascii_case("close") {
+                connection_close = true;
+            } else if value.eq_ignore_ascii_case("keep-alive") {
+                connection_close = false;
+            }
+        }
+    }
+    Ok(RequestHead {
+        method: method.to_string(),
+        target: target.to_string(),
+        content_length: content_length.unwrap_or(0),
+        connection_close,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn read_all(input: &[u8], max_body: usize) -> Result<(RequestHead, Vec<u8>), ReadError> {
+        let mut carry = Vec::new();
+        read_request(&mut &input[..], &mut carry, max_body)
+    }
+
+    #[test]
+    fn parses_get_without_body() {
+        let (h, body) =
+            read_all(b"GET /healthz HTTP/1.1\r\nHost: x\r\n\r\n", 1024).unwrap();
+        assert_eq!(h.method, "GET");
+        assert_eq!(h.target, "/healthz");
+        assert_eq!(h.content_length, 0);
+        assert!(!h.connection_close);
+        assert!(body.is_empty());
+    }
+
+    #[test]
+    fn parses_post_with_body_and_pipelined_carry() {
+        let input = b"POST /v1/infer HTTP/1.1\r\nContent-Length: 4\r\n\r\nabcdNEXT";
+        let mut carry = Vec::new();
+        let (h, body) =
+            read_request(&mut &input[..], &mut carry, 1024).unwrap();
+        assert_eq!(h.content_length, 4);
+        assert_eq!(body, b"abcd");
+        assert_eq!(carry, b"NEXT", "pipelined bytes preserved");
+    }
+
+    #[test]
+    fn connection_close_variants() {
+        let (h, _) = read_all(
+            b"GET / HTTP/1.1\r\nConnection: close\r\n\r\n",
+            1024,
+        )
+        .unwrap();
+        assert!(h.connection_close);
+        let (h, _) = read_all(b"GET / HTTP/1.0\r\n\r\n", 1024).unwrap();
+        assert!(h.connection_close, "HTTP/1.0 defaults to close");
+    }
+
+    #[test]
+    fn rejects_malformed_heads() {
+        for (input, want) in [
+            (&b"garbage\r\n\r\n"[..], "malformed"),
+            (b"GET /x HTTP/2.0\r\n\r\n", "version"),
+            (b"GET  /x HTTP/1.1\r\n\r\n", "malformed"),
+            (b"get /x HTTP/1.1\r\n\r\n", "method"),
+            (b"GET x HTTP/1.1\r\n\r\n", "target"),
+            (b"GET /x HTTP/1.1\r\nbroken header\r\n\r\n", "header"),
+            (b"GET /x HTTP/1.1\r\nContent-Length: two\r\n\r\n", "Content-Length"),
+            (
+                b"GET /x HTTP/1.1\r\nContent-Length: 2\r\nContent-Length: 2\r\n\r\n",
+                "duplicate",
+            ),
+            (
+                b"POST /x HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n",
+                "Transfer-Encoding",
+            ),
+        ] {
+            match read_all(input, 1024) {
+                Err(ReadError::BadRequest(m)) => {
+                    assert!(m.contains(want), "{m:?} for {input:?}")
+                }
+                other => panic!("expected BadRequest for {input:?}, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn enforces_head_and_body_caps() {
+        // One absurd header blows the byte cap.
+        let mut big = b"GET / HTTP/1.1\r\nX-Big: ".to_vec();
+        big.extend(std::iter::repeat_n(b'a', MAX_HEAD_BYTES + 1));
+        big.extend_from_slice(b"\r\n\r\n");
+        assert_eq!(read_all(&big, 1024), Err(ReadError::HeadTooLarge));
+        // Too many small headers blows the count cap.
+        let mut many = b"GET / HTTP/1.1\r\n".to_vec();
+        for i in 0..MAX_HEADERS + 1 {
+            many.extend_from_slice(format!("X-{i}: v\r\n").as_bytes());
+        }
+        many.extend_from_slice(b"\r\n");
+        assert_eq!(read_all(&many, 1024), Err(ReadError::HeadTooLarge));
+        // Declared body over the cap is rejected before any body read.
+        assert_eq!(
+            read_all(b"POST / HTTP/1.1\r\nContent-Length: 2000\r\n\r\n", 1024),
+            Err(ReadError::BodyTooLarge)
+        );
+        // Content-Length that overflows u64 is malformed, not a panic.
+        assert!(matches!(
+            read_all(
+                b"POST / HTTP/1.1\r\nContent-Length: 99999999999999999999999\r\n\r\n",
+                1024
+            ),
+            Err(ReadError::BadRequest(_))
+        ));
+    }
+
+    #[test]
+    fn truncation_and_idle_close() {
+        assert_eq!(read_all(b"", 1024), Err(ReadError::ClosedIdle));
+        assert_eq!(
+            read_all(b"GET / HTT", 1024),
+            Err(ReadError::Truncated),
+            "EOF mid-head"
+        );
+        assert_eq!(
+            read_all(b"POST / HTTP/1.1\r\nContent-Length: 10\r\n\r\nabc", 1024),
+            Err(ReadError::Truncated),
+            "EOF mid-body"
+        );
+    }
+
+    #[test]
+    fn non_utf8_head_is_bad_request() {
+        let input = b"GET /\xff\xfe HTTP/1.1\r\n\r\n";
+        assert!(matches!(
+            read_all(input, 1024),
+            Err(ReadError::BadRequest(_))
+        ));
+    }
+}

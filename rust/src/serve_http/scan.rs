@@ -1,0 +1,422 @@
+//! Lazy JSON scanner for inference request bodies.
+//!
+//! Extracts exactly the three fields `POST /v1/infer` consumes —
+//! `image` (flat array of finite numbers), `deadline_us` and
+//! `batch_hint` (non-negative integers) — in one pass over the body
+//! bytes, without building a [`crate::util::json::Json`] tree. `image`
+//! numbers are parsed straight into the `Vec<f32>` the coordinator
+//! takes, and every *other* key's value is skipped structurally
+//! (strings escape-aware, containers by depth counting, capped at
+//! [`MAX_SKIP_DEPTH`] like the full parser), so a megabyte of metadata
+//! a client tacks onto a request costs one scan and zero allocations.
+//! The mik-sdk ADR-002 exemplar measured ~33x for this partial
+//! extraction over full-tree parsing; `benches/http_load.rs` keeps the
+//! end-to-end number honest here.
+//!
+//! The scanner is as strict as the tree parser about what it *does*
+//! read: bodies must be UTF-8, the top level must be an object, tracked
+//! keys must not repeat, `image` is required and must be a flat array
+//! of finite numbers (`1e999` overflows to infinity and is rejected),
+//! and the integer fields reject signs, fractions, exponents and
+//! anything ≥ 2^64.
+
+use std::fmt;
+
+/// Depth cap for skipped (untracked) values — same bound as
+/// [`crate::util::json::MAX_PARSE_DEPTH`] so a depth bomb in an ignored
+/// field is rejected, not recursed into (the skipper is iterative, but
+/// an unbounded depth would still let absurd inputs through).
+pub const MAX_SKIP_DEPTH: usize = crate::util::json::MAX_PARSE_DEPTH;
+
+/// Fields of one inference request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct InferFields {
+    pub image: Vec<f32>,
+    /// Per-request completion deadline in microseconds.
+    pub deadline_us: Option<u64>,
+    /// Client batching hint (advisory; validated and echoed).
+    pub batch_hint: Option<u64>,
+}
+
+/// Scan failure: message + byte offset, mirroring
+/// [`crate::util::json::JsonError`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ScanError {
+    pub msg: String,
+    pub pos: usize,
+}
+
+impl fmt::Display for ScanError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "bad request body at byte {}: {}", self.pos, self.msg)
+    }
+}
+
+/// Scan an inference request body. Returns the extracted fields or the
+/// first error encountered.
+pub fn scan_infer(body: &[u8]) -> Result<InferFields, ScanError> {
+    let text = std::str::from_utf8(body).map_err(|e| ScanError {
+        msg: "body is not UTF-8".to_string(),
+        pos: e.valid_up_to(),
+    })?;
+    let mut s = Scanner { b: text.as_bytes(), i: 0 };
+    let mut image: Option<Vec<f32>> = None;
+    let mut deadline_us: Option<u64> = None;
+    let mut batch_hint: Option<u64> = None;
+
+    s.skip_ws();
+    s.eat(b'{', "request body must be a JSON object")?;
+    s.skip_ws();
+    if s.peek() != Some(b'}') {
+        loop {
+            s.skip_ws();
+            let key = s.string()?;
+            s.skip_ws();
+            s.eat(b':', "expected ':' after key")?;
+            s.skip_ws();
+            match key.as_str() {
+                "image" => {
+                    if image.is_some() {
+                        return Err(s.err("duplicate \"image\""));
+                    }
+                    image = Some(s.number_array()?);
+                }
+                "deadline_us" => {
+                    if deadline_us.is_some() {
+                        return Err(s.err("duplicate \"deadline_us\""));
+                    }
+                    deadline_us = Some(s.unsigned_int("deadline_us")?);
+                }
+                "batch_hint" => {
+                    if batch_hint.is_some() {
+                        return Err(s.err("duplicate \"batch_hint\""));
+                    }
+                    batch_hint = Some(s.unsigned_int("batch_hint")?);
+                }
+                _ => s.skip_value()?,
+            }
+            s.skip_ws();
+            match s.next() {
+                Some(b',') => continue,
+                Some(b'}') => break,
+                _ => return Err(s.err("expected ',' or '}'")),
+            }
+        }
+    } else {
+        s.i += 1;
+    }
+    s.skip_ws();
+    if s.i != s.b.len() {
+        return Err(s.err("trailing data after request object"));
+    }
+    let image = image.ok_or_else(|| s.err("missing required field \"image\""))?;
+    Ok(InferFields { image, deadline_us, batch_hint })
+}
+
+struct Scanner<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Scanner<'a> {
+    fn err(&self, msg: &str) -> ScanError {
+        ScanError { msg: msg.to_string(), pos: self.i }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.i).copied()
+    }
+
+    fn next(&mut self) -> Option<u8> {
+        let c = self.peek();
+        if c.is_some() {
+            self.i += 1;
+        }
+        c
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.i += 1;
+        }
+    }
+
+    fn eat(&mut self, c: u8, msg: &str) -> Result<(), ScanError> {
+        if self.peek() == Some(c) {
+            self.i += 1;
+            Ok(())
+        } else {
+            Err(self.err(msg))
+        }
+    }
+
+    /// A JSON string, unescaped. Used for object keys; skipped string
+    /// *values* go through `skip_string` which allocates nothing.
+    fn string(&mut self) -> Result<String, ScanError> {
+        self.eat(b'"', "expected string key")?;
+        let start = self.i;
+        let mut has_escape = false;
+        loop {
+            match self.next() {
+                None => return Err(self.err("unterminated string")),
+                Some(b'"') => break,
+                Some(b'\\') => {
+                    has_escape = true;
+                    if self.next().is_none() {
+                        return Err(self.err("unterminated escape"));
+                    }
+                }
+                Some(_) => {}
+            }
+        }
+        let raw = &self.b[start..self.i - 1];
+        // Keys we care about contain no escapes; an escaped key simply
+        // won't match "image"/"deadline_us"/"batch_hint" — decode it
+        // just enough to stay correct for the untracked-key path.
+        let key = std::str::from_utf8(raw).expect("validated UTF-8");
+        if has_escape {
+            Ok(key.replace("\\\"", "\"").replace("\\\\", "\\"))
+        } else {
+            Ok(key.to_string())
+        }
+    }
+
+    fn skip_string(&mut self) -> Result<(), ScanError> {
+        self.eat(b'"', "expected string")?;
+        loop {
+            match self.next() {
+                None => return Err(self.err("unterminated string")),
+                Some(b'"') => return Ok(()),
+                Some(b'\\') => {
+                    if self.next().is_none() {
+                        return Err(self.err("unterminated escape"));
+                    }
+                }
+                Some(_) => {}
+            }
+        }
+    }
+
+    /// One number token as the f64 it parses to; rejects non-finite
+    /// results (e.g. `1e999` overflowing to infinity).
+    fn number(&mut self) -> Result<f64, ScanError> {
+        let start = self.i;
+        if self.peek() == Some(b'-') {
+            self.i += 1;
+        }
+        while matches!(self.peek(), Some(c) if c.is_ascii_digit() || c == b'.') {
+            self.i += 1;
+        }
+        if matches!(self.peek(), Some(b'e' | b'E')) {
+            self.i += 1;
+            if matches!(self.peek(), Some(b'+' | b'-')) {
+                self.i += 1;
+            }
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                self.i += 1;
+            }
+        }
+        let txt = std::str::from_utf8(&self.b[start..self.i]).expect("ascii");
+        let v: f64 = txt.parse().map_err(|_| self.err("malformed number"))?;
+        if !v.is_finite() {
+            return Err(self.err("number is not finite"));
+        }
+        Ok(v)
+    }
+
+    /// `image`: a flat array of numbers, parsed directly into the f32
+    /// buffer the coordinator consumes.
+    fn number_array(&mut self) -> Result<Vec<f32>, ScanError> {
+        self.eat(b'[', "\"image\" must be an array of numbers")?;
+        let mut out = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.i += 1;
+            return Ok(out);
+        }
+        loop {
+            self.skip_ws();
+            match self.peek() {
+                Some(c) if c == b'-' || c.is_ascii_digit() => {
+                    out.push(self.number()? as f32);
+                }
+                _ => {
+                    return Err(
+                        self.err("\"image\" must contain only flat numbers")
+                    )
+                }
+            }
+            self.skip_ws();
+            match self.next() {
+                Some(b',') => continue,
+                Some(b']') => return Ok(out),
+                _ => return Err(self.err("expected ',' or ']' in \"image\"")),
+            }
+        }
+    }
+
+    /// Strict non-negative integer for `deadline_us` / `batch_hint`:
+    /// digits only (no sign, fraction or exponent), checked u64
+    /// accumulation so 2^64 overflow is an error, not a wrap.
+    fn unsigned_int(&mut self, field: &str) -> Result<u64, ScanError> {
+        let mut v: u64 = 0;
+        let mut any = false;
+        while let Some(c) = self.peek() {
+            if !c.is_ascii_digit() {
+                break;
+            }
+            any = true;
+            v = v
+                .checked_mul(10)
+                .and_then(|v| v.checked_add(u64::from(c - b'0')))
+                .ok_or_else(|| self.err(&format!("\"{field}\" out of range")))?;
+            self.i += 1;
+        }
+        if !any || matches!(self.peek(), Some(b'.' | b'e' | b'E')) {
+            return Err(self.err(&format!(
+                "\"{field}\" must be a non-negative integer"
+            )));
+        }
+        Ok(v)
+    }
+
+    /// Structurally skip one value of any type without materializing
+    /// it. Containers are tracked with a depth counter (iterative — no
+    /// recursion to overflow), capped at [`MAX_SKIP_DEPTH`].
+    fn skip_value(&mut self) -> Result<(), ScanError> {
+        let mut depth = 0usize;
+        loop {
+            self.skip_ws();
+            match self.peek() {
+                Some(b'{') | Some(b'[') => {
+                    depth += 1;
+                    if depth > MAX_SKIP_DEPTH {
+                        return Err(self.err("nesting too deep"));
+                    }
+                    self.i += 1;
+                }
+                Some(b'}') | Some(b']') => {
+                    if depth == 0 {
+                        return Err(self.err("unexpected close bracket"));
+                    }
+                    depth -= 1;
+                    self.i += 1;
+                }
+                Some(b'"') => self.skip_string()?,
+                Some(b',') | Some(b':') if depth > 0 => self.i += 1,
+                Some(c) if c == b'-' || c.is_ascii_digit() => {
+                    self.number()?;
+                }
+                Some(b't') => self.literal("true")?,
+                Some(b'f') => self.literal("false")?,
+                Some(b'n') => self.literal("null")?,
+                _ => return Err(self.err("unexpected character")),
+            }
+            if depth == 0 {
+                return Ok(());
+            }
+        }
+    }
+
+    fn literal(&mut self, lit: &str) -> Result<(), ScanError> {
+        if self.b[self.i..].starts_with(lit.as_bytes()) {
+            self.i += lit.len();
+            Ok(())
+        } else {
+            Err(self.err("unexpected character"))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn extracts_all_three_fields() {
+        let f = scan_infer(
+            br#"{"image": [1, -2.5, 3e2], "deadline_us": 5000, "batch_hint": 8}"#,
+        )
+        .unwrap();
+        assert_eq!(f.image, vec![1.0, -2.5, 300.0]);
+        assert_eq!(f.deadline_us, Some(5000));
+        assert_eq!(f.batch_hint, Some(8));
+    }
+
+    #[test]
+    fn skips_untracked_fields_of_any_shape() {
+        let f = scan_infer(
+            br#"{"meta": {"a": [1, {"b": "x\"y"}], "c": null}, "image": [4],
+                 "tags": ["p", true, false, -1e3], "n": 12.5}"#,
+        )
+        .unwrap();
+        assert_eq!(f.image, vec![4.0]);
+        assert_eq!(f.deadline_us, None);
+        assert_eq!(f.batch_hint, None);
+    }
+
+    #[test]
+    fn missing_image_is_an_error() {
+        let e = scan_infer(br#"{"deadline_us": 1}"#).unwrap_err();
+        assert!(e.msg.contains("image"), "{e}");
+    }
+
+    #[test]
+    fn duplicate_tracked_keys_rejected() {
+        let e = scan_infer(br#"{"image": [1], "image": [2]}"#).unwrap_err();
+        assert!(e.msg.contains("duplicate"), "{e}");
+    }
+
+    #[test]
+    fn image_must_be_flat_finite_numbers() {
+        assert!(scan_infer(br#"{"image": [[1]]}"#).is_err(), "nested");
+        assert!(scan_infer(br#"{"image": ["a"]}"#).is_err(), "string");
+        assert!(scan_infer(br#"{"image": 3}"#).is_err(), "scalar");
+        let e = scan_infer(br#"{"image": [1e999]}"#).unwrap_err();
+        assert!(e.msg.contains("finite"), "{e}");
+    }
+
+    #[test]
+    fn integer_fields_are_strict() {
+        assert!(scan_infer(br#"{"image": [], "deadline_us": -1}"#).is_err());
+        assert!(scan_infer(br#"{"image": [], "deadline_us": 1.5}"#).is_err());
+        assert!(scan_infer(br#"{"image": [], "deadline_us": 1e3}"#).is_err());
+        let e = scan_infer(
+            br#"{"image": [], "batch_hint": 99999999999999999999999999}"#,
+        )
+        .unwrap_err();
+        assert!(e.msg.contains("out of range"), "{e}");
+        let f = scan_infer(br#"{"image": [], "deadline_us": 0}"#).unwrap();
+        assert_eq!(f.deadline_us, Some(0));
+    }
+
+    #[test]
+    fn depth_bomb_in_ignored_field_is_rejected_flat() {
+        // 100k-deep nesting in a field the scanner does not extract:
+        // the iterative skipper must cap out with an error, never
+        // recurse toward a stack overflow.
+        let mut body = br#"{"junk": "#.to_vec();
+        body.extend(std::iter::repeat_n(b'[', 100_000));
+        let e = scan_infer(&body).unwrap_err();
+        assert!(e.msg.contains("nesting too deep"), "{e}");
+    }
+
+    #[test]
+    fn malformed_bodies_error_cleanly() {
+        for body in [
+            &b""[..],
+            b"[1,2]",
+            b"{",
+            b"{\"image\": [1,}",
+            b"{\"image\": [1] trailing",
+            b"{\"image\": [1]} extra",
+            b"not json at all",
+            b"{\"image\": [1],}",
+        ] {
+            assert!(scan_infer(body).is_err(), "{:?}", body);
+        }
+        // Invalid UTF-8 reports the offset where it breaks.
+        let e = scan_infer(b"{\"image\": [1], \"s\": \"\xff\xfe\"}").unwrap_err();
+        assert!(e.msg.contains("UTF-8"), "{e}");
+    }
+}

@@ -8,6 +8,17 @@
 use std::collections::BTreeMap;
 use std::fmt;
 
+/// Maximum container nesting the parser accepts. Recursive-descent
+/// parsing consumes native stack per level, so unbounded depth lets a
+/// few KB of `[[[[…` abort the process; 128 is far beyond any document
+/// this crate produces or consumes.
+pub const MAX_PARSE_DEPTH: usize = 128;
+
+/// Largest magnitude at which every integer is exactly representable
+/// as an `f64` (2^53). Integer accessors reject values at or beyond
+/// this bound, and the writer only uses integral formatting below it.
+pub const MAX_EXACT_INT: f64 = 9_007_199_254_740_992.0;
+
 /// A JSON value. Object keys are ordered (BTreeMap) so output is stable.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
@@ -37,7 +48,7 @@ impl Json {
     pub fn parse(s: &str) -> Result<Json, JsonError> {
         let mut p = Parser { b: s.as_bytes(), i: 0 };
         p.skip_ws();
-        let v = p.value()?;
+        let v = p.value(0)?;
         p.skip_ws();
         if p.i != p.b.len() {
             return Err(p.err("trailing data"));
@@ -56,8 +67,35 @@ impl Json {
 
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().and_then(|n| {
-            if n >= 0.0 && n.fract() == 0.0 {
+            // Beyond 2^53 consecutive integers are no longer exactly
+            // representable: 9007199254740993 parses to …992 and would
+            // pass a bare fract() check while silently being wrong.
+            if n >= 0.0 && n.fract() == 0.0 && n < MAX_EXACT_INT {
                 Some(n as usize)
+            } else {
+                None
+            }
+        })
+    }
+
+    /// Integer accessor for values that fit `u64` exactly. Same 2^53
+    /// guard as [`Json::as_usize`]: anything at or beyond the f64-exact
+    /// range is rejected rather than silently rounded.
+    pub fn as_u64(&self) -> Option<u64> {
+        self.as_f64().and_then(|n| {
+            if n >= 0.0 && n.fract() == 0.0 && n < MAX_EXACT_INT {
+                Some(n as u64)
+            } else {
+                None
+            }
+        })
+    }
+
+    /// Signed integer accessor with the symmetric ±2^53 exactness guard.
+    pub fn as_i64(&self) -> Option<i64> {
+        self.as_f64().and_then(|n| {
+            if n.fract() == 0.0 && n.abs() < MAX_EXACT_INT {
+                Some(n as i64)
             } else {
                 None
             }
@@ -224,7 +262,10 @@ fn write_num(out: &mut String, n: f64) {
     if n.is_nan() || n.is_infinite() {
         // JSON has no NaN/Inf; emit null like serde_json does.
         out.push_str("null");
-    } else if n.fract() == 0.0 && n.abs() < 1e15 {
+    } else if n.fract() == 0.0 && n.abs() < MAX_EXACT_INT {
+        // Integral formatting only inside the f64-exact range (< 2^53);
+        // beyond it the i64 cast would print digits the float no longer
+        // actually distinguishes.
         out.push_str(&format!("{}", n as i64));
     } else {
         out.push_str(&format!("{}", n));
@@ -276,10 +317,10 @@ impl<'a> Parser<'a> {
         }
     }
 
-    fn value(&mut self) -> Result<Json, JsonError> {
+    fn value(&mut self, depth: usize) -> Result<Json, JsonError> {
         match self.peek() {
-            Some(b'{') => self.object(),
-            Some(b'[') => self.array(),
+            Some(b'{') => self.object(depth),
+            Some(b'[') => self.array(depth),
             Some(b'"') => Ok(Json::Str(self.string()?)),
             Some(b't') => self.lit("true", Json::Bool(true)),
             Some(b'f') => self.lit("false", Json::Bool(false)),
@@ -400,7 +441,10 @@ impl<'a> Parser<'a> {
         }
     }
 
-    fn array(&mut self) -> Result<Json, JsonError> {
+    fn array(&mut self, depth: usize) -> Result<Json, JsonError> {
+        if depth >= MAX_PARSE_DEPTH {
+            return Err(self.err("nesting too deep"));
+        }
         self.eat(b'[')?;
         let mut out = Vec::new();
         self.skip_ws();
@@ -410,7 +454,7 @@ impl<'a> Parser<'a> {
         }
         loop {
             self.skip_ws();
-            out.push(self.value()?);
+            out.push(self.value(depth + 1)?);
             self.skip_ws();
             match self.peek() {
                 Some(b',') => self.i += 1,
@@ -423,7 +467,10 @@ impl<'a> Parser<'a> {
         }
     }
 
-    fn object(&mut self) -> Result<Json, JsonError> {
+    fn object(&mut self, depth: usize) -> Result<Json, JsonError> {
+        if depth >= MAX_PARSE_DEPTH {
+            return Err(self.err("nesting too deep"));
+        }
         self.eat(b'{')?;
         let mut out = BTreeMap::new();
         self.skip_ws();
@@ -437,7 +484,7 @@ impl<'a> Parser<'a> {
             self.skip_ws();
             self.eat(b':')?;
             self.skip_ws();
-            let v = self.value()?;
+            let v = self.value(depth + 1)?;
             out.insert(k, v);
             self.skip_ws();
             match self.peek() {
@@ -518,5 +565,66 @@ mod tests {
         assert_eq!(Json::Num(5.0).as_usize(), Some(5));
         assert_eq!(Json::Num(-1.0).as_usize(), None);
         assert_eq!(Json::Num(1.5).as_usize(), None);
+    }
+
+    #[test]
+    fn depth_bomb_rejected_without_stack_overflow() {
+        // Regression: the recursive-descent parser used to recurse once
+        // per nesting level with no cap, so this 100k-deep bomb aborted
+        // the process with a stack overflow instead of returning an Err.
+        let bomb = "[".repeat(100_000);
+        let err = Json::parse(&bomb).unwrap_err();
+        assert!(err.msg.contains("nesting too deep"), "{}", err);
+        let obomb = "{\"k\":".repeat(100_000);
+        assert!(Json::parse(&obomb).is_err());
+    }
+
+    #[test]
+    fn depth_under_cap_still_parses() {
+        let depth = MAX_PARSE_DEPTH - 1;
+        let doc = format!("{}1{}", "[".repeat(depth), "]".repeat(depth));
+        let j = Json::parse(&doc).unwrap();
+        let mut v = &j;
+        for _ in 0..depth {
+            v = v.idx(0);
+        }
+        assert_eq!(v.as_f64(), Some(1.0));
+        // One level deeper trips the cap.
+        let doc = format!("{}1{}", "[".repeat(depth + 1), "]".repeat(depth + 1));
+        assert!(Json::parse(&doc).is_err());
+    }
+
+    #[test]
+    fn integer_accessors_reject_f64_imprecise_magnitudes() {
+        // Regression: 9007199254740993 (2^53 + 1) parses to the f64
+        // 9007199254740992, which passed the old fract()==0.0 guard and
+        // came back as the *wrong* integer.
+        let j = Json::parse("9007199254740993").unwrap();
+        assert_eq!(j.as_usize(), None);
+        assert_eq!(j.as_u64(), None);
+        assert_eq!(j.as_i64(), None);
+        // 2^53 itself is exact but indistinguishable from 2^53 + 1.
+        assert_eq!(Json::parse("9007199254740992").unwrap().as_usize(), None);
+        // 2^53 - 1 is the largest exactly-trustworthy integer.
+        let j = Json::parse("9007199254740991").unwrap();
+        assert_eq!(j.as_usize(), Some(9007199254740991));
+        assert_eq!(j.as_u64(), Some(9007199254740991));
+        assert_eq!(j.as_i64(), Some(9007199254740991));
+        assert_eq!(Json::parse("-9007199254740991").unwrap().as_i64(), Some(-9007199254740991));
+        assert_eq!(Json::parse("-9007199254740992").unwrap().as_i64(), None);
+    }
+
+    #[test]
+    fn writer_integral_threshold_matches_exact_range() {
+        // Below 2^53: integral formatting, round-trips exactly.
+        let j = Json::Num(9007199254740991.0);
+        assert_eq!(j.to_string_compact(), "9007199254740991");
+        assert_eq!(Json::parse(&j.to_string_compact()).unwrap(), j);
+        // At/above 2^53: f64 Display (shortest round-tripping digits);
+        // the old `< 1e15` threshold was past the exact range.
+        let j = Json::Num(9007199254740992.0);
+        assert_eq!(Json::parse(&j.to_string_compact()).unwrap(), j);
+        let j = Json::Num(9.00719925474099e15);
+        assert_eq!(Json::parse(&j.to_string_compact()).unwrap(), j);
     }
 }

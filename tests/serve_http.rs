@@ -1,0 +1,566 @@
+//! HTTP front door (ISSUE-7): property/fuzz suites over the bounded
+//! request reader and the lazy infer-body scanner, plus live-server
+//! end-to-end tests over loopback — status-code mapping (504/429/502/
+//! 4xx families), exact mock logits, keep-alive, connection caps, and
+//! an arbitrary-byte fuzz asserting the server always answers with a
+//! well-formed status line and never panics a handler.
+
+use std::io::Cursor;
+use std::time::Duration;
+
+use rram_pattern_accel::coordinator::{
+    Coordinator, CoordinatorConfig, CostModel, ERR_DEADLINE_PREFIX,
+    ERR_OVERLOAD_PREFIX,
+};
+use rram_pattern_accel::serve_http::client::HttpClient;
+use rram_pattern_accel::serve_http::request::{
+    read_request, ReadError, MAX_HEADERS,
+};
+use rram_pattern_accel::serve_http::scan::scan_infer;
+use rram_pattern_accel::serve_http::{HttpConfig, HttpServer, MockInferBackend};
+use rram_pattern_accel::util::json::Json;
+use rram_pattern_accel::util::prop;
+use rram_pattern_accel::util::rng::Rng;
+
+const INPUT_LEN: usize = 8;
+const OUTPUT_LEN: usize = 4;
+
+/// Start a loopback server over a mock-backend pool. Every knob the
+/// tests vary is a parameter; everything else is the production
+/// default.
+fn start_mock(
+    backend: MockInferBackend,
+    ccfg: CoordinatorConfig,
+    cost: Option<CostModel>,
+    mut http: HttpConfig,
+) -> HttpServer {
+    let MockInferBackend { input_len, output_len, batch, delay, fail } = backend;
+    http.addr = "127.0.0.1:0".to_string();
+    http.input_len = input_len;
+    let coord = Coordinator::start_pool(
+        move |_worker| MockInferBackend { input_len, output_len, batch, delay, fail },
+        ccfg,
+        cost,
+    );
+    HttpServer::start(coord, http).expect("bind loopback")
+}
+
+fn mock(delay: Duration, fail: bool, batch: usize) -> MockInferBackend {
+    MockInferBackend {
+        input_len: INPUT_LEN,
+        output_len: OUTPUT_LEN,
+        batch,
+        delay,
+        fail,
+    }
+}
+
+fn infer_body(
+    image: &[f32],
+    deadline_us: Option<u64>,
+    batch_hint: Option<u64>,
+) -> Vec<u8> {
+    let mut s = String::from("{\"image\":[");
+    for (i, v) in image.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push_str(&format!("{v}"));
+    }
+    s.push(']');
+    if let Some(d) = deadline_us {
+        s.push_str(&format!(",\"deadline_us\":{d}"));
+    }
+    if let Some(b) = batch_hint {
+        s.push_str(&format!(",\"batch_hint\":{b}"));
+    }
+    s.push('}');
+    s.into_bytes()
+}
+
+// ---- request reader: property/fuzz suites (no server) ----
+
+/// Arbitrary bytes through the reader: any outcome is fine, panicking
+/// or hanging is not. (Hangs are impossible off a Cursor — EOF ends
+/// every read loop.)
+#[test]
+fn prop_reader_survives_arbitrary_bytes() {
+    prop::check("reader_arbitrary_bytes", prop::cases(256), |rng| {
+        let len = rng.below(2048);
+        let bytes: Vec<u8> =
+            (0..len).map(|_| (rng.next_u64() & 0xff) as u8).collect();
+        let mut carry = Vec::new();
+        let _ = read_request(&mut Cursor::new(&bytes), &mut carry, 4096);
+    });
+}
+
+/// Every strict prefix of a valid request is reported as a truncation
+/// (or idle close for the empty prefix) — never as success, never as a
+/// parse error that would mislabel a network problem as a bad request.
+#[test]
+fn prop_reader_classifies_truncation() {
+    prop::check("reader_truncation", prop::cases(128), |rng| {
+        let body_len = rng.below(64);
+        let body: Vec<u8> =
+            (0..body_len).map(|_| b'a' + (rng.below(26) as u8)).collect();
+        let mut req = format!(
+            "POST /v1/infer HTTP/1.1\r\nHost: x\r\nContent-Length: {body_len}\r\n\r\n"
+        )
+        .into_bytes();
+        req.extend_from_slice(&body);
+        let cut = rng.below(req.len()); // strict prefix: 0..len-1 bytes
+        let mut carry = Vec::new();
+        let got = read_request(&mut Cursor::new(&req[..cut]), &mut carry, 4096);
+        match got {
+            Err(ReadError::ClosedIdle) => assert_eq!(cut, 0, "idle close needs empty input"),
+            Err(ReadError::Truncated) => assert!(cut > 0),
+            other => panic!("prefix of {cut} bytes -> {other:?}"),
+        }
+    });
+}
+
+/// Header counts across the cap: <= MAX_HEADERS parses, more is 431
+/// material. Duplicate Content-Length is rejected at any count.
+#[test]
+fn prop_reader_header_count_boundary() {
+    prop::check("reader_header_count", prop::cases(64), |rng| {
+        let n = rng.range(1, MAX_HEADERS * 2);
+        let mut req = String::from("GET /healthz HTTP/1.1\r\n");
+        for i in 0..n {
+            req.push_str(&format!("X-Pad-{i}: {i}\r\n"));
+        }
+        req.push_str("\r\n");
+        let mut carry = Vec::new();
+        let got =
+            read_request(&mut Cursor::new(req.as_bytes()), &mut carry, 4096);
+        if n <= MAX_HEADERS {
+            let (head, body) = got.expect("within cap");
+            assert_eq!(head.method, "GET");
+            assert!(body.is_empty());
+        } else {
+            assert_eq!(got.unwrap_err(), ReadError::HeadTooLarge, "{n} headers");
+        }
+    });
+}
+
+/// Declared Content-Length vs delivered bytes: short deliveries are
+/// truncations, exact deliveries round-trip the body, and over-cap
+/// declarations are rejected before any body byte is read.
+#[test]
+fn prop_reader_content_length_contract() {
+    prop::check("reader_content_length", prop::cases(128), |rng| {
+        let declared = rng.below(256);
+        let delivered = rng.below(256);
+        let max_body = 128;
+        let mut req =
+            format!("POST / HTTP/1.1\r\nContent-Length: {declared}\r\n\r\n")
+                .into_bytes();
+        req.extend(std::iter::repeat_n(b'z', delivered));
+        let mut carry = Vec::new();
+        let got = read_request(&mut Cursor::new(&req), &mut carry, max_body);
+        if declared > max_body {
+            assert_eq!(got.unwrap_err(), ReadError::BodyTooLarge);
+        } else if delivered < declared {
+            assert_eq!(got.unwrap_err(), ReadError::Truncated);
+        } else {
+            let (head, body) = got.expect("full delivery");
+            assert_eq!(head.content_length, declared);
+            assert_eq!(body.len(), declared);
+            // Overrun past the declared body is pipelined, not lost.
+            assert_eq!(carry.len(), delivered - declared);
+        }
+    });
+}
+
+// ---- lazy scanner: property/fuzz suites (no server) ----
+
+/// Arbitrary bytes through the scanner: must return, never panic.
+#[test]
+fn prop_scanner_survives_arbitrary_bytes() {
+    prop::check("scanner_arbitrary_bytes", prop::cases(256), |rng| {
+        let len = rng.below(512);
+        let bytes: Vec<u8> = if rng.chance(0.5) {
+            // Raw bytes (mostly invalid UTF-8 / not JSON).
+            (0..len).map(|_| (rng.next_u64() & 0xff) as u8).collect()
+        } else {
+            // Mutated valid body: flip one byte so the scanner walks
+            // deep into real structure before hitting the fault.
+            let img: Vec<f32> = (0..8).map(|i| i as f32).collect();
+            let mut b = infer_body(&img, Some(7), None);
+            let at = rng.below(b.len());
+            b[at] = (rng.next_u64() & 0xff) as u8;
+            b
+        };
+        let _ = scan_infer(&bytes);
+    });
+}
+
+/// On well-formed bodies the lazy scanner agrees field-for-field with
+/// the tree parser it bypasses, ignoring unrelated keys.
+#[test]
+fn prop_scanner_matches_tree_parser() {
+    prop::check("scanner_matches_tree", prop::cases(128), |rng| {
+        let n = rng.below(32);
+        let img: Vec<f32> = (0..n).map(|_| prop::gen_f32(rng, 100.0)).collect();
+        let deadline = rng.chance(0.5).then(|| rng.next_u64() >> 12);
+        let hint = rng.chance(0.5).then(|| rng.range(1, 4096) as u64);
+        let mut body = String::from("{");
+        if rng.chance(0.5) {
+            body.push_str("\"extra\":{\"nested\":[1,2,{\"deep\":null}]},");
+        }
+        body.push_str("\"image\":[");
+        for (i, v) in img.iter().enumerate() {
+            if i > 0 {
+                body.push(',');
+            }
+            body.push_str(&format!("{v}"));
+        }
+        body.push(']');
+        if let Some(d) = deadline {
+            body.push_str(&format!(",\"deadline_us\":{d}"));
+        }
+        if let Some(h) = hint {
+            body.push_str(&format!(",\"batch_hint\":{h}"));
+        }
+        body.push('}');
+
+        let fields = scan_infer(body.as_bytes())
+            .unwrap_or_else(|e| panic!("{e} in {body}"));
+        assert_eq!(fields.image, img, "{body}");
+        assert_eq!(fields.deadline_us, deadline, "{body}");
+        assert_eq!(fields.batch_hint, hint, "{body}");
+
+        // Cross-check against the full tree parser.
+        let tree = Json::parse(&body).expect("generated body is valid JSON");
+        let tree_img: Vec<f32> = match tree.get("image") {
+            Json::Arr(a) => a
+                .iter()
+                .map(|v| v.as_f64().expect("image numbers") as f32)
+                .collect(),
+            other => panic!("tree image: {other:?}"),
+        };
+        assert_eq!(fields.image, tree_img);
+    });
+}
+
+// ---- live server: end-to-end over loopback ----
+
+#[test]
+fn healthz_and_metrics_roundtrip() {
+    let server = start_mock(
+        mock(Duration::ZERO, false, 4),
+        CoordinatorConfig { workers: 2, ..Default::default() },
+        None,
+        HttpConfig::default(),
+    );
+    let mut c = HttpClient::connect(server.addr()).unwrap();
+
+    let h = c.get("/healthz").unwrap();
+    assert_eq!(h.status, 200, "{}", h.body_text());
+    let hj = Json::parse(&h.body_text()).unwrap();
+    assert_eq!(hj.get("status").as_str(), Some("ok"));
+    assert_eq!(hj.get("workers").as_usize(), Some(2));
+
+    // One infer so the counters are non-trivial.
+    let r = c.post("/v1/infer", &infer_body(&[0.0; INPUT_LEN], None, None)).unwrap();
+    assert_eq!(r.status, 200, "{}", r.body_text());
+
+    let m = c.get("/metrics").unwrap();
+    assert_eq!(m.status, 200);
+    let text = m.body_text();
+    for series in [
+        "rram_requests_total 1",
+        "rram_latency_us_count 1",
+        "rram_worker_requests_total{worker=\"0\"}",
+        "rram_worker_requests_total{worker=\"1\"}",
+        "rram_http_requests_total",
+        "rram_http_handler_panics_total 0",
+    ] {
+        assert!(text.contains(series), "missing {series:?} in:\n{text}");
+    }
+
+    let mj = c.get("/metrics?format=json").unwrap();
+    assert_eq!(mj.status, 200);
+    let j = Json::parse(&mj.body_text()).unwrap();
+    assert_eq!(
+        j.get("pool").get("requests").as_u64(),
+        Some(1),
+        "{}",
+        mj.body_text()
+    );
+    assert!(j.get("workers").as_arr().is_some());
+    assert_eq!(j.get("http").get("handler_panics").as_u64(), Some(0));
+    server.shutdown();
+}
+
+#[test]
+fn infer_returns_exact_mock_logits_over_keepalive() {
+    let server = start_mock(
+        mock(Duration::ZERO, false, 4),
+        CoordinatorConfig::default(),
+        None,
+        HttpConfig::default(),
+    );
+    let mut c = HttpClient::connect(server.addr()).unwrap();
+    // Three sequential requests over the same connection: keep-alive
+    // framing must stay in sync.
+    for round in 0..3u32 {
+        let fill = 0.5 + round as f32;
+        let image = [fill; INPUT_LEN];
+        let sum = fill * INPUT_LEN as f32;
+        let r = c
+            .post("/v1/infer", &infer_body(&image, None, Some(4)))
+            .unwrap();
+        assert_eq!(r.status, 200, "round {round}: {}", r.body_text());
+        let j = Json::parse(&r.body_text()).unwrap();
+        let logits: Vec<f32> = match j.get("logits") {
+            Json::Arr(a) => {
+                a.iter().map(|v| v.as_f64().unwrap() as f32).collect()
+            }
+            other => panic!("logits: {other:?}"),
+        };
+        let want: Vec<f32> =
+            (0..OUTPUT_LEN).map(|k| sum + k as f32).collect();
+        assert_eq!(logits, want, "round {round}");
+        assert!(j.get("queue_us").as_u64().is_some());
+        assert_eq!(j.get("batch_fill").as_usize(), Some(1));
+        assert_eq!(j.get("batch_hint").as_u64(), Some(4));
+    }
+    assert_eq!(server.http_stats().handler_panics, 0);
+    server.shutdown();
+}
+
+#[test]
+fn expired_deadline_maps_to_504() {
+    // Batch of 4 with one request: the batcher waits max_wait (50 ms)
+    // for fill, so a 1 ms deadline is guaranteed expired at dispatch.
+    let server = start_mock(
+        mock(Duration::ZERO, false, 4),
+        CoordinatorConfig {
+            max_wait: Duration::from_millis(50),
+            ..Default::default()
+        },
+        None,
+        HttpConfig::default(),
+    );
+    let mut c = HttpClient::connect(server.addr()).unwrap();
+    let r = c
+        .post("/v1/infer", &infer_body(&[1.0; INPUT_LEN], Some(1_000), None))
+        .unwrap();
+    assert_eq!(r.status, 504, "{}", r.body_text());
+    assert!(r.body_text().contains(ERR_DEADLINE_PREFIX), "{}", r.body_text());
+    server.shutdown();
+}
+
+#[test]
+fn overload_admission_maps_to_429() {
+    // Cost model prices every request at 1000 cycles against a 1-cycle
+    // admission limit: the first request is admitted (nothing
+    // outstanding) and parks in the slow backend; the second arrives
+    // with 1000 cycles outstanding and is rejected up front.
+    let server = start_mock(
+        mock(Duration::from_millis(400), false, 1),
+        CoordinatorConfig {
+            max_wait: Duration::from_millis(1),
+            max_outstanding_cost: 1.0,
+            ..Default::default()
+        },
+        Some(CostModel {
+            dense_cycles: 1000.0,
+            dense_energy_pj: 1000.0,
+            skip_slope: 0.0,
+            energy_skip_slope: 0.0,
+        }),
+        HttpConfig::default(),
+    );
+    let addr = server.addr();
+    let body = infer_body(&[1.0; INPUT_LEN], None, None);
+    let first = {
+        let body = body.clone();
+        std::thread::spawn(move || {
+            let mut c = HttpClient::connect(addr).unwrap();
+            c.post("/v1/infer", &body).unwrap()
+        })
+    };
+    // Let the first request reach the backend before the second lands.
+    std::thread::sleep(Duration::from_millis(150));
+    let mut c = HttpClient::connect(addr).unwrap();
+    let second = c.post("/v1/infer", &body).unwrap();
+    assert_eq!(second.status, 429, "{}", second.body_text());
+    assert!(
+        second.body_text().contains(ERR_OVERLOAD_PREFIX),
+        "{}",
+        second.body_text()
+    );
+    let first = first.join().unwrap();
+    assert_eq!(first.status, 200, "{}", first.body_text());
+    server.shutdown();
+}
+
+#[test]
+fn backend_failure_maps_to_502() {
+    let server = start_mock(
+        mock(Duration::ZERO, true, 2),
+        CoordinatorConfig::default(),
+        None,
+        HttpConfig::default(),
+    );
+    let mut c = HttpClient::connect(server.addr()).unwrap();
+    let r = c.post("/v1/infer", &infer_body(&[1.0; INPUT_LEN], None, None)).unwrap();
+    assert_eq!(r.status, 502, "{}", r.body_text());
+    assert!(r.body_text().contains("mock backend"), "{}", r.body_text());
+    server.shutdown();
+}
+
+#[test]
+fn bad_request_family_over_one_keepalive_connection() {
+    let server = start_mock(
+        mock(Duration::ZERO, false, 4),
+        CoordinatorConfig::default(),
+        None,
+        HttpConfig::default(),
+    );
+    let mut c = HttpClient::connect(server.addr()).unwrap();
+
+    let depth_bomb =
+        format!("{{\"junk\":{}", "[".repeat(100_000)).into_bytes();
+    let cases: Vec<(Vec<u8>, &str)> = vec![
+        (infer_body(&[1.0; 3], None, None), "elements"), // wrong image len
+        (b"{\"deadline_us\":5}".to_vec(), "image"),      // missing image
+        (b"{\"image\":[1,".to_vec(), ""),                // cut-off JSON
+        (b"not json at all".to_vec(), ""),               // not JSON
+        (depth_bomb, "nesting too deep"),                // flat-skip depth cap
+        (b"{\"image\":[1e999]}".to_vec(), "finite"),     // inf element
+        (infer_body(&[1.0; INPUT_LEN], None, Some(0)), "batch_hint"),
+        (infer_body(&[1.0; INPUT_LEN], None, Some(5000)), "batch_hint"),
+        (b"{\"image\":[1],\"image\":[2]}".to_vec(), "duplicate"),
+    ];
+    for (body, want) in &cases {
+        let r = c.post("/v1/infer", body).unwrap();
+        assert_eq!(r.status, 400, "{} -> {}", String::from_utf8_lossy(body), r.body_text());
+        assert!(r.body_text().contains(want), "{} -> {}", want, r.body_text());
+    }
+
+    // Routing misses on the same connection.
+    assert_eq!(c.get("/v1/nope").unwrap().status, 404);
+    assert_eq!(c.request("DELETE", "/healthz", b"").unwrap().status, 405);
+    assert_eq!(c.request("PUT", "/v1/infer", b"").unwrap().status, 405);
+
+    // The connection survived every rejection; a valid request still
+    // works and nothing panicked server-side.
+    let ok = c.post("/v1/infer", &infer_body(&[0.0; INPUT_LEN], None, None)).unwrap();
+    assert_eq!(ok.status, 200, "{}", ok.body_text());
+    let stats = server.http_stats();
+    assert_eq!(stats.handler_panics, 0);
+    assert_eq!(stats.bad_requests, cases.len() as u64 + 3);
+    server.shutdown();
+}
+
+#[test]
+fn wire_level_rejections_413_431_400_408() {
+    let server = start_mock(
+        mock(Duration::ZERO, false, 4),
+        CoordinatorConfig::default(),
+        None,
+        HttpConfig {
+            max_body_bytes: 1024,
+            read_timeout: Duration::from_millis(200),
+            ..HttpConfig::default()
+        },
+    );
+    let addr = server.addr();
+
+    // Declared body over the cap -> 413 before any body byte is read
+    // (head-only on the wire, so nothing is left unread at close).
+    let mut c = HttpClient::connect(addr).unwrap();
+    let r = c
+        .raw(b"POST /v1/infer HTTP/1.1\r\nContent-Length: 1048576\r\n\r\n")
+        .unwrap();
+    assert_eq!(r.status, 413, "{}", r.body_text());
+
+    // Oversized head -> 431. (Connection closed after each wire-level
+    // rejection, so every case dials fresh.)
+    let mut c = HttpClient::connect(addr).unwrap();
+    let big = format!("GET / HTTP/1.1\r\nX-Pad: {}\r\n\r\n", "a".repeat(9000));
+    let r = c.raw(big.as_bytes()).unwrap();
+    assert_eq!(r.status, 431, "{}", r.body_text());
+
+    // Duplicate Content-Length -> 400 at head parse, body never read.
+    let mut c = HttpClient::connect(addr).unwrap();
+    let r = c
+        .raw(b"POST /v1/infer HTTP/1.1\r\nContent-Length: 2\r\nContent-Length: 2\r\n\r\n")
+        .unwrap();
+    assert_eq!(r.status, 400, "{}", r.body_text());
+
+    // Invalid UTF-8 in the head -> 400.
+    let mut c = HttpClient::connect(addr).unwrap();
+    let r = c.raw(b"GET /\xff\xfe HTTP/1.1\r\n\r\n").unwrap();
+    assert_eq!(r.status, 400, "{}", r.body_text());
+
+    // Half a request then silence -> read timeout -> 408.
+    let mut c = HttpClient::connect(addr).unwrap();
+    let r = c.raw(b"POST /v1/infer HTTP/1.1\r\nConte").unwrap();
+    assert_eq!(r.status, 408, "{}", r.body_text());
+
+    assert_eq!(server.http_stats().handler_panics, 0);
+    server.shutdown();
+}
+
+#[test]
+fn connection_cap_answers_503_inline() {
+    let server = start_mock(
+        mock(Duration::ZERO, false, 4),
+        CoordinatorConfig::default(),
+        None,
+        HttpConfig { max_connections: 1, ..HttpConfig::default() },
+    );
+    // First connection occupies the only slot...
+    let mut holder = HttpClient::connect(server.addr()).unwrap();
+    assert_eq!(holder.get("/healthz").unwrap().status, 200);
+    // ...so the second is turned away at accept, without parsing.
+    let mut turned_away = HttpClient::connect(server.addr()).unwrap();
+    let r = turned_away.get("/healthz").unwrap();
+    assert_eq!(r.status, 503, "{}", r.body_text());
+    // The held connection still works.
+    assert_eq!(holder.get("/healthz").unwrap().status, 200);
+    server.shutdown();
+}
+
+/// Arbitrary bytes at the socket: the server must answer every opened
+/// conversation with a well-formed HTTP/1.1 status line (the client
+/// helper errors on anything else) and never panic a handler.
+#[test]
+fn fuzz_server_always_answers_well_formed() {
+    let server = start_mock(
+        mock(Duration::ZERO, false, 4),
+        CoordinatorConfig::default(),
+        None,
+        HttpConfig {
+            read_timeout: Duration::from_millis(100),
+            ..HttpConfig::default()
+        },
+    );
+    let addr = server.addr();
+    prop::check("http_fuzz_wire", prop::cases(24), |rng: &mut Rng| {
+        let len = rng.range(1, 512);
+        let mut bytes: Vec<u8> =
+            (0..len).map(|_| (rng.next_u64() & 0xff) as u8).collect();
+        if rng.chance(0.5) {
+            // Half the cases terminate the head so the parser (not the
+            // read timeout) produces the answer.
+            bytes.extend_from_slice(b"\r\n\r\n");
+        }
+        let mut c = HttpClient::connect(addr).unwrap();
+        let resp = c.raw(&bytes).unwrap_or_else(|e| {
+            panic!("no well-formed response to {} bytes: {e}", bytes.len())
+        });
+        assert!(
+            (200..600).contains(&resp.status),
+            "implausible status {} for {} fuzz bytes",
+            resp.status,
+            bytes.len()
+        );
+    });
+    assert_eq!(server.http_stats().handler_panics, 0);
+    server.shutdown();
+}
