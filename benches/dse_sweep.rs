@@ -2,15 +2,33 @@
 //! point fan-out vs the same grid single-threaded, on the 48-point
 //! `small` grid (acceptance target: >= 2x on a >= 32-point grid).
 //!
+//! Extended (ISSUE-8) with the raw-speed-at-DSE-scale measurements:
+//!
+//!   * cache store cold vs warm — first sweep populates, second serves
+//!     every point from disk — on both the binary pack backend and the
+//!     legacy per-file JSON backend, with the on-disk footprint of each
+//!     (including the compact-vs-pretty delta of the legacy entries);
+//!   * frontier extraction head-to-head — the sort-based
+//!     `ParetoFrontier::from_results` vs the O(n²) pairwise oracle on a
+//!     synthetic 10^4-point result set, members asserted bit-identical.
+//!
 //! Parity first: the frontier must be byte-identical across thread
-//! counts before the speeds mean anything. Caching is disabled so both
-//! sides do full evaluations.
+//! counts before the speeds mean anything. The throughput section keeps
+//! caching disabled so both sides do full evaluations.
 //!
 //! Run: `cargo bench --bench dse_sweep`
 
-use rram_pattern_accel::dse::{SweepRunner, SweepSpec};
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use rram_pattern_accel::dse::{
+    ParetoFrontier, PointMetrics, PointResult, ResultCache, SweepPoint,
+    SweepRunner, SweepSpec,
+};
 use rram_pattern_accel::report;
-use rram_pattern_accel::util::bench::{bb, bench, BenchConfig};
+use rram_pattern_accel::util::bench::{bb, bench, time_once, BenchConfig};
+use rram_pattern_accel::util::json::Json;
+use rram_pattern_accel::util::rng::Rng;
 use rram_pattern_accel::util::threadpool;
 
 fn main() {
@@ -73,4 +91,212 @@ fn main() {
              >= 2x acceptance target"
         );
     }
+
+    bench_store_cold_vs_warm(&spec, threads);
+    bench_frontier_extraction();
+}
+
+/// §2: cache store cold vs warm, binary pack vs legacy per-file JSON,
+/// plus the on-disk footprint of each layout.
+fn bench_store_cold_vs_warm(spec: &SweepSpec, threads: usize) {
+    let n_points = spec.expand().len();
+    println!("\n§DSE — CACHE STORE COLD VS WARM ({n_points}-point small grid)\n");
+
+    let bin_dir = temp_dir("bench-bin");
+    let legacy_dir = temp_dir("bench-legacy");
+
+    // Cold: every point evaluated fresh and persisted.
+    let (bin_cold, _) = {
+        let c = ResultCache::new(bin_dir.clone());
+        time_once("cold sweep → binary pack store", || {
+            SweepRunner { spec: spec.clone(), threads, cache: Some(c.clone()) }
+                .run()
+                .cache_misses()
+        })
+    };
+    assert_eq!(bin_cold, n_points - skipped(spec, threads), "all misses");
+    let (legacy_cold, _) = {
+        let c = ResultCache::legacy_json(legacy_dir.clone());
+        time_once("cold sweep → legacy per-file JSON", || {
+            SweepRunner { spec: spec.clone(), threads, cache: Some(c.clone()) }
+                .run()
+                .cache_misses()
+        })
+    };
+    assert_eq!(bin_cold, legacy_cold, "backends cache the same point set");
+
+    // On-disk footprint, measured after the cold run (warm iterations
+    // below keep appending frontier-snapshot records to the pack):
+    // pack+idx bytes vs per-file JSON bytes, and the pretty-print
+    // overhead the legacy writer used to pay per entry.
+    let pack_bytes = file_size(&bin_dir.join("dse.pack"))
+        + file_size(&bin_dir.join("dse.idx"));
+    let (compact_bytes, pretty_bytes, n_entries) = legacy_footprint(&legacy_dir);
+    println!(
+        "  on disk: binary pack {pack_bytes} B; legacy compact \
+         {compact_bytes} B over {n_entries} files \
+         (pretty form of the same entries: {pretty_bytes} B, compact saves \
+         {:.1}%)",
+        100.0 * (pretty_bytes as f64 - compact_bytes as f64)
+            / (pretty_bytes as f64).max(1.0),
+    );
+
+    // Warm: every point served from disk.
+    let cfg = BenchConfig::default();
+    let warm_bin = {
+        let c = ResultCache::new(bin_dir.clone());
+        bench("warm sweep ← binary pack store", &cfg, || {
+            let o = SweepRunner {
+                spec: spec.clone(),
+                threads,
+                cache: Some(c.clone()),
+            }
+            .run();
+            assert_eq!(o.cache_misses(), 0, "warm run must be all hits");
+            bb(o.cache_hits());
+        })
+    };
+    let warm_legacy = {
+        let c = ResultCache::legacy_json(legacy_dir.clone());
+        bench("warm sweep ← legacy per-file JSON", &cfg, || {
+            let o = SweepRunner {
+                spec: spec.clone(),
+                threads,
+                cache: Some(c.clone()),
+            }
+            .run();
+            assert_eq!(o.cache_misses(), 0, "warm run must be all hits");
+            bb(o.cache_hits());
+        })
+    };
+    println!(
+        "  warm binary vs warm legacy: {:.2}x",
+        warm_legacy.mean_ns / warm_bin.mean_ns.max(1e-9)
+    );
+
+    let _ = std::fs::remove_dir_all(&bin_dir);
+    let _ = std::fs::remove_dir_all(&legacy_dir);
+}
+
+/// §3: sort-based frontier extraction vs the O(n²) pairwise oracle at
+/// DSE scale (10^4 synthetic points), members asserted bit-identical.
+fn bench_frontier_extraction() {
+    const N: usize = 10_000;
+    println!("\n§DSE — FRONTIER EXTRACTION HEAD-TO-HEAD ({N} synthetic points)\n");
+    let results = synth_results(N);
+
+    let fast = ParetoFrontier::from_results(&results);
+    let oracle = ParetoFrontier::from_results_oracle(&results);
+    assert_eq!(
+        fast.members, oracle.members,
+        "sort-based extraction must be bit-identical to the oracle"
+    );
+    println!(
+        "member parity fast vs oracle: OK ({} of {N} non-dominated)",
+        fast.members.len()
+    );
+
+    let fast_cfg = BenchConfig::default();
+    let r_fast = bench("frontier extraction (sort-based)", &fast_cfg, || {
+        bb(ParetoFrontier::from_results(&results).members.len());
+    });
+    // The oracle does ~10^8 dominance checks per iteration: keep its
+    // sample count small, the gap is orders of magnitude.
+    let oracle_cfg = BenchConfig {
+        warmup: Duration::from_millis(0),
+        measure: Duration::from_millis(0),
+        min_iters: 3,
+        max_iters: 3,
+    };
+    let r_oracle = bench("frontier extraction (O(n²) oracle)", &oracle_cfg, || {
+        bb(ParetoFrontier::from_results_oracle(&results).members.len());
+    });
+    let speedup = r_oracle.mean_ns / r_fast.mean_ns.max(1e-9);
+    println!("  sort-based vs oracle at {N} points: {speedup:.1}x");
+    assert!(
+        r_fast.mean_ns < r_oracle.mean_ns,
+        "sort-based extraction must beat the O(n²) oracle at {N} points \
+         ({:.0} ns vs {:.0} ns)",
+        r_fast.mean_ns,
+        r_oracle.mean_ns,
+    );
+}
+
+/// Synthetic sweep results: deterministic pseudo-random objectives with
+/// deliberate ties (coarse quantization) and a sprinkle of skips, so
+/// the extraction exercises its grouping paths and not just the sort.
+fn synth_results(n: usize) -> Vec<PointResult> {
+    let mut rng = Rng::seed_from(0x5EED_D5E_u64);
+    let point = SweepPoint {
+        scheme: "pattern".into(),
+        ou_rows: 9,
+        ou_cols: 8,
+        xbar_rows: 512,
+        xbar_cols: 512,
+        n_patterns: 8,
+        pruning: 0.86,
+        zero_detection: true,
+        block_switch_cycles: 2.0,
+    };
+    (0..n)
+        .map(|i| {
+            let outcome = if rng.chance(0.02) {
+                Err("synthetic skip".into())
+            } else {
+                let cycles = rng.below(2_000) as f64 * 16.0;
+                let energy = rng.below(2_000) as f64 * 0.5;
+                let area = rng.below(64) as f64 * 4096.0;
+                Ok(PointMetrics {
+                    cycles,
+                    energy_pj: energy,
+                    area_cells: area,
+                    crossbars: 1 + (area as usize >> 18),
+                    ou_ops: cycles,
+                    utilization: 0.5,
+                })
+            };
+            PointResult { index: i, point: point.clone(), outcome, cache_hit: false }
+        })
+        .collect()
+}
+
+fn skipped(spec: &SweepSpec, threads: usize) -> usize {
+    SweepRunner { spec: spec.clone(), threads, cache: None }.run().skipped()
+}
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("rram-dse-bench-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn file_size(p: &Path) -> u64 {
+    std::fs::metadata(p).map(|m| m.len()).unwrap_or(0)
+}
+
+/// Total bytes of the legacy cache's JSON entries as written (compact),
+/// and what the same entries would occupy pretty-printed (the
+/// historical layout).
+fn legacy_footprint(dir: &Path) -> (u64, u64, usize) {
+    let mut compact = 0u64;
+    let mut pretty = 0u64;
+    let mut n = 0usize;
+    let Ok(entries) = std::fs::read_dir(dir) else {
+        return (0, 0, 0);
+    };
+    let mut paths: Vec<PathBuf> = entries
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| p.extension().is_some_and(|e| e == "json"))
+        .collect();
+    paths.sort();
+    for p in paths {
+        let Ok(text) = std::fs::read_to_string(&p) else { continue };
+        compact += text.len() as u64;
+        if let Ok(j) = Json::parse(&text) {
+            pretty += j.to_string_pretty().len() as u64;
+        }
+        n += 1;
+    }
+    (compact, pretty, n)
 }

@@ -17,7 +17,7 @@
 //!
 //! ### `no-unordered-iteration` (error)
 //! **Where:** serialization/hash-identity scopes — `src/report/`,
-//! `src/dse/`, `src/util/json.rs`.
+//! `src/dse/`, `src/store/`, `src/util/json.rs`.
 //! **Why:** `HashMap`/`HashSet` iteration order varies run to run (and
 //! is seeded per-process by the std hasher), so any artifact or cache
 //! key built by iterating one is nondeterministic. Everything feeding

@@ -68,7 +68,8 @@ fn severity_of(id: &str) -> Severity {
 
 /// Files whose output feeds serialized artifacts or hash identities:
 /// iteration order there must be deterministic.
-const SCOPE_SERIALIZATION: &[&str] = &["src/report/", "src/dse/", "src/util/json.rs"];
+const SCOPE_SERIALIZATION: &[&str] =
+    &["src/report/", "src/dse/", "src/store/", "src/util/json.rs"];
 /// Pure simulation/reporting paths — cycle-accurate, never wall-clock.
 const SCOPE_PURE: &[&str] = &["src/sim/", "src/dse/", "src/report/", "src/mapping/"];
 /// The blessed home of lock wrappers (lockcheck, threadpool, prop).

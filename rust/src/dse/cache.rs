@@ -1,21 +1,40 @@
-//! Content-hashed on-disk result cache for sweep evaluations.
+//! Content-hashed result cache for sweep evaluations, backed by the
+//! binary pack store ([`crate::store`]).
 //!
 //! A point's cache identity is the FNV-1a hash of the canonical compact
-//! JSON of `(format version, workload, point)` — evaluation is a pure
-//! function of exactly those inputs, so an interrupted or repeated
-//! sweep resumes from `results/dse_cache/` instead of recomputing.
-//! Entries store the identity strings alongside the metrics and are
-//! verified on load (a hash collision or a corrupt / truncated file
-//! from an interrupted run falls back to a fresh evaluation, which
+//! JSON of `(format version, workload, point, environment)` —
+//! evaluation is a pure function of exactly those inputs, so an
+//! interrupted or repeated sweep resumes from `results/dse_cache/`
+//! instead of recomputing. Entries store the identity strings alongside
+//! the metrics and are verified on load (a hash collision or a
+//! corrupt / truncated record falls back to a fresh evaluation, which
 //! overwrites the bad entry).
 //!
-//! Bit-exactness: metrics are serialized through
+//! Storage backends:
+//!
+//! * **Binary (default)** — all entries live in one append-able pack
+//!   (`dse.pack` + `dse.idx`) per cache directory; see [`crate::store`]
+//!   for the byte format. Metrics are stored as raw little-endian f64
+//!   bits ([`encode_metrics`]), so a cache hit reproduces the fresh
+//!   evaluation's floats bit for bit by construction.
+//! * **Legacy JSON** ([`ResultCache::legacy_json`]) — the historical
+//!   one-file-per-entry layout (`{key:016x}.json`). In the binary
+//!   backend this layout is a **read-only migration path**: a pack miss
+//!   falls back to the matching v2 JSON entry, verifies it, migrates it
+//!   into the pack and serves it — so no one's cache goes cold across
+//!   the format change — but new entries are never written as JSON
+//!   except through the explicit legacy backend (which exists for that
+//!   migration test surface and writes compact, not pretty, JSON).
+//!
+//! Bit-exactness of the legacy path: metrics are serialized through
 //! [`crate::util::json`], whose f64 writer emits the shortest
-//! round-trippable decimal form, so a cache hit reproduces the fresh
-//! evaluation's floats bit for bit (`tests/dse.rs` pins this).
+//! round-trippable decimal form, so both backends reproduce fresh
+//! floats exactly (`tests/dse.rs` pins this).
 
+use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
+use crate::store::PackStore;
 use crate::util::json::{obj, Json};
 
 use super::{PointMetrics, SweepPoint, Workload};
@@ -23,18 +42,274 @@ use super::{PointMetrics, SweepPoint, Workload};
 /// Bump when the evaluation semantics or the metrics layout change:
 /// old entries stop matching and are recomputed. v2: the identity
 /// gained the trace mode (`Workload::exact`) and the per-point
-/// simulation-policy axes (zero-detection, block-switch cost).
-const CACHE_FORMAT: usize = 2;
+/// simulation-policy axes (zero-detection, block-switch cost). v3: the
+/// binary pack backend (metrics as raw f64 bits; v2 JSON entries are
+/// still readable through the legacy fallback).
+const CACHE_FORMAT: usize = 3;
 
-/// Handle to one cache directory.
+/// The last per-file JSON format — what the read-only legacy fallback
+/// (and the explicit legacy backend) speaks.
+const LEGACY_CACHE_FORMAT: usize = 2;
+
+/// Pack domain name: `results/dse_cache/dse.{pack,idx}`.
+const PACK_DOMAIN: &str = "dse";
+
+/// Byte length of the binary metrics payload (6 × 8-byte LE fields).
+const METRICS_LEN: usize = 48;
+
+/// Encode metrics as 48 little-endian bytes: `cycles`, `energy_pj`,
+/// `area_cells` (f64 bits), `crossbars` (u64), `ou_ops`, `utilization`
+/// (f64 bits). Raw bits in, raw bits out — bit-exact by construction.
+fn encode_metrics(m: &PointMetrics) -> [u8; METRICS_LEN] {
+    let mut out = [0u8; METRICS_LEN];
+    out[0..8].copy_from_slice(&m.cycles.to_bits().to_le_bytes());
+    out[8..16].copy_from_slice(&m.energy_pj.to_bits().to_le_bytes());
+    out[16..24].copy_from_slice(&m.area_cells.to_bits().to_le_bytes());
+    out[24..32].copy_from_slice(&(m.crossbars as u64).to_le_bytes());
+    out[32..40].copy_from_slice(&m.ou_ops.to_bits().to_le_bytes());
+    out[40..48].copy_from_slice(&m.utilization.to_bits().to_le_bytes());
+    out
+}
+
+/// Inverse of [`encode_metrics`]; `None` on a wrong-length payload
+/// (treated as a miss, like any other corrupt entry).
+fn decode_metrics(b: &[u8]) -> Option<PointMetrics> {
+    if b.len() != METRICS_LEN {
+        return None;
+    }
+    let word = |at: usize| -> u64 {
+        u64::from_le_bytes(b[at..at + 8].try_into().expect("length checked"))
+    };
+    Some(PointMetrics {
+        cycles: f64::from_bits(word(0)),
+        energy_pj: f64::from_bits(word(8)),
+        area_cells: f64::from_bits(word(16)),
+        crossbars: word(24) as usize,
+        ou_ops: f64::from_bits(word(32)),
+        utilization: f64::from_bits(word(40)),
+    })
+}
+
+/// Per-sweep cache environment: every identity component that does not
+/// change across the grid, serialized **once** instead of once per
+/// point per load/store. The workload JSON and the base
+/// `HardwareConfig` are sweep constants; the effective `SimConfig` only
+/// varies through the point's two simulation-policy axes, so one JSON
+/// string per distinct `(zero_detection, block_switch)` pair covers the
+/// whole grid (a handful of strings for 10^4+ points).
+#[derive(Debug, Clone)]
+pub struct CacheEnv {
+    workload_json: String,
+    base_hw_json: String,
+    /// `(zero_detection, block_switch_cycles bits)` → effective
+    /// `SimConfig` compact JSON.
+    sim_json: BTreeMap<(bool, u64), String>,
+}
+
+impl CacheEnv {
+    /// Environment for a whole sweep: serialize the constants once and
+    /// pre-serialize the effective `SimConfig` of every distinct
+    /// simulation-policy pair in the grid.
+    pub fn for_sweep(w: &Workload, points: &[SweepPoint]) -> CacheEnv {
+        let mut env = CacheEnv {
+            workload_json: w.to_json().to_string_compact(),
+            base_hw_json: crate::config::HardwareConfig::default()
+                .to_json()
+                .to_string_compact(),
+            sim_json: BTreeMap::new(),
+        };
+        for p in points {
+            let k = (p.zero_detection, p.block_switch_cycles.to_bits());
+            if !env.sim_json.contains_key(&k) {
+                env.sim_json.insert(
+                    k,
+                    super::runner::effective_sim_config(w, p)
+                        .to_json()
+                        .to_string_compact(),
+                );
+            }
+        }
+        env
+    }
+
+    /// One-point environment (the standalone `load`/`store` path).
+    pub fn for_point(w: &Workload, p: &SweepPoint) -> CacheEnv {
+        CacheEnv::for_sweep(w, std::slice::from_ref(p))
+    }
+
+    fn sim_json(&self, w: &Workload, p: &SweepPoint) -> String {
+        match self
+            .sim_json
+            .get(&(p.zero_detection, p.block_switch_cycles.to_bits()))
+        {
+            Some(s) => s.clone(),
+            // Point outside the grid the env was built for: fall back
+            // to the uncached serialization (correct, just slower).
+            None => super::runner::effective_sim_config(w, p)
+                .to_json()
+                .to_string_compact(),
+        }
+    }
+
+    /// `(key, legacy key, workload identity, point identity,
+    /// environment identity)` of one evaluation. The environment
+    /// identity is the *effective* `SimConfig` the runner evaluates
+    /// under — which carries the trace mode (sampled positions vs exact
+    /// `null`) and the point's zero-detection / block-switch axes —
+    /// plus the base `HardwareConfig` the point's geometry is grafted
+    /// onto — every default included — so changing any simulation or
+    /// hardware default invalidates old entries without anyone
+    /// remembering to bump `CACHE_FORMAT`. A sampled-mode entry can
+    /// therefore never be served for an exact-mode point (or vice
+    /// versa): their effective `sample_positions` differ, and the
+    /// workload JSON differs too.
+    ///
+    /// The env must have been built for the same `w`; identity
+    /// components are shared per sweep precisely so the per-point cost
+    /// is one point serialization plus two hashes.
+    fn identity(&self, w: &Workload, p: &SweepPoint) -> CacheIdentity {
+        let pj = p.to_json().to_string_compact();
+        let ej = format!("{}|{}", self.sim_json(w, p), self.base_hw_json);
+        let wj = self.workload_json.clone();
+        let key = crate::util::fnv1a(&format!(
+            "v{CACHE_FORMAT}|{wj}|{pj}|{ej}"
+        ));
+        let legacy_key = crate::util::fnv1a(&format!(
+            "v{LEGACY_CACHE_FORMAT}|{wj}|{pj}|{ej}"
+        ));
+        CacheIdentity { key, legacy_key, wj, pj, ej }
+    }
+
+    /// The pack-record key of one evaluation — what frontier snapshots
+    /// ([`ResultCache::store_snapshot`]) use to name covered points.
+    pub fn point_key(&self, w: &Workload, p: &SweepPoint) -> u64 {
+        self.identity(w, p).key
+    }
+
+    /// Key of the frontier snapshot for this sweep environment: one
+    /// snapshot per `(workload, base hardware)` identity, so changing
+    /// either starts a fresh warm-start history.
+    fn snapshot_identity(&self) -> (u64, String) {
+        let id = format!(
+            "frontier|v{CACHE_FORMAT}|{}|{}",
+            self.workload_json, self.base_hw_json
+        );
+        (crate::util::fnv1a(&id), id)
+    }
+}
+
+/// Fully resolved identity of one cache entry.
+struct CacheIdentity {
+    /// v3 key — the pack record key.
+    key: u64,
+    /// v2 key — the legacy per-file JSON entry name.
+    legacy_key: u64,
+    wj: String,
+    pj: String,
+    ej: String,
+}
+
+impl CacheIdentity {
+    /// The full identity string stored as the pack record id and
+    /// verified on load.
+    fn id_string(&self) -> String {
+        format!(
+            "v{CACHE_FORMAT}|{}|{}|{}",
+            self.wj, self.pj, self.ej
+        )
+    }
+}
+
+/// Which storage layout a [`ResultCache`] writes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Backend {
+    /// Pack store; per-file JSON entries are read-only fallback.
+    Binary,
+    /// Historical per-file JSON entries (compact form). Exists for the
+    /// migration test surface and CI's legacy-seeding leg.
+    LegacyJson,
+}
+
+/// Previously computed frontier state for warm-started sweeps: which
+/// point keys the last run covered, and which of them were frontier
+/// members. Sound to reuse only when the current grid is a superset of
+/// `covered` — every non-member was dominated by a member that is
+/// still in the grid ([`ResultCache::load_snapshot`] enforces nothing;
+/// the runner checks).
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct FrontierSnapshot {
+    /// Cache keys of every successfully evaluated point of the run.
+    pub covered: Vec<u64>,
+    /// Cache keys of the frontier members among them.
+    pub members: Vec<u64>,
+}
+
+impl FrontierSnapshot {
+    /// Binary payload: `u32 n_covered`, `u32 n_members`, then the
+    /// covered keys and member keys as u64 LE.
+    fn encode(&self) -> Vec<u8> {
+        let mut out =
+            Vec::with_capacity(8 + 8 * (self.covered.len() + self.members.len()));
+        out.extend_from_slice(&(self.covered.len() as u32).to_le_bytes());
+        out.extend_from_slice(&(self.members.len() as u32).to_le_bytes());
+        for k in self.covered.iter().chain(self.members.iter()) {
+            out.extend_from_slice(&k.to_le_bytes());
+        }
+        out
+    }
+
+    fn decode(b: &[u8]) -> Option<FrontierSnapshot> {
+        if b.len() < 8 {
+            return None;
+        }
+        let nc = u32::from_le_bytes(b[0..4].try_into().ok()?) as usize;
+        let nm = u32::from_le_bytes(b[4..8].try_into().ok()?) as usize;
+        if b.len() != 8 + 8 * (nc + nm) {
+            return None;
+        }
+        let key_at = |i: usize| {
+            u64::from_le_bytes(b[8 + 8 * i..16 + 8 * i].try_into().unwrap())
+        };
+        Some(FrontierSnapshot {
+            covered: (0..nc).map(key_at).collect(),
+            members: (nc..nc + nm).map(key_at).collect(),
+        })
+    }
+}
+
+/// Handle to one cache directory. Cheap to clone — binary-backend
+/// clones share one pack handle.
 #[derive(Debug, Clone)]
 pub struct ResultCache {
     dir: PathBuf,
+    backend: Backend,
+    /// `None` in the legacy backend, or when the pack could not be
+    /// opened (unwritable directory): loads then fall back to legacy
+    /// JSON only and stores report the failure, keeping the cache
+    /// best-effort like the per-file layout was.
+    pack: Option<PackStore>,
 }
 
 impl ResultCache {
+    /// Binary-backend cache at `dir` (the default everywhere).
     pub fn new<P: Into<PathBuf>>(dir: P) -> ResultCache {
-        ResultCache { dir: dir.into() }
+        let dir: PathBuf = dir.into();
+        let pack = match PackStore::open(&dir.to_string_lossy(), PACK_DOMAIN) {
+            Ok(p) => Some(p),
+            Err(e) => {
+                eprintln!("[dse] cache store unavailable: {e} (continuing uncached)");
+                None
+            }
+        };
+        ResultCache { dir, backend: Backend::Binary, pack }
+    }
+
+    /// Legacy per-file JSON cache at `dir`: writes one compact JSON
+    /// entry per point (`{key:016x}.json`, v2 layout). The binary
+    /// backend reads these as a migration fallback; this constructor
+    /// exists so tests and CI can *produce* them.
+    pub fn legacy_json<P: Into<PathBuf>>(dir: P) -> ResultCache {
+        ResultCache { dir: dir.into(), backend: Backend::LegacyJson, pack: None }
     }
 
     /// The conventional location the `dse` CLI and `serve --auto-tune`
@@ -47,73 +322,151 @@ impl ResultCache {
         &self.dir
     }
 
-    /// `(hash, workload identity, point identity, environment identity)`
-    /// of one evaluation. The environment identity is the *effective*
-    /// `SimConfig` the runner evaluates under — which carries the trace
-    /// mode (sampled positions vs exact `null`) and the point's
-    /// zero-detection / block-switch axes — plus the base
-    /// `HardwareConfig` the point's geometry is grafted onto — every
-    /// default included — so changing any simulation or hardware
-    /// default invalidates old entries without anyone remembering to
-    /// bump `CACHE_FORMAT`. A sampled-mode entry can therefore never be
-    /// served for an exact-mode point (or vice versa): their effective
-    /// `sample_positions` differ, and the workload JSON differs too.
-    fn identity(w: &Workload, p: &SweepPoint) -> (u64, String, String, String) {
-        let wj = w.to_json().to_string_compact();
-        let pj = p.to_json().to_string_compact();
-        let sim = super::runner::effective_sim_config(w, p)
-            .to_json()
-            .to_string_compact();
-        let base = crate::config::HardwareConfig::default()
-            .to_json()
-            .to_string_compact();
-        let ej = format!("{sim}|{base}");
-        let key =
-            crate::util::fnv1a(&format!("v{CACHE_FORMAT}|{wj}|{pj}|{ej}"));
-        (key, wj, pj, ej)
+    /// True when this cache writes the binary pack layout.
+    pub fn is_binary(&self) -> bool {
+        self.backend == Backend::Binary
     }
 
-    fn path_for(&self, key: u64) -> PathBuf {
-        self.dir.join(format!("{key:016x}.json"))
+    fn path_for(&self, legacy_key: u64) -> PathBuf {
+        self.dir.join(format!("{legacy_key:016x}.json"))
     }
 
     /// Load a point's cached metrics, verifying the stored identity
     /// matches. Any miss, mismatch or parse failure returns `None`.
+    /// Sweeps should build one [`CacheEnv`] and call
+    /// [`ResultCache::load_with`] instead — this convenience re-derives
+    /// the environment per call.
     pub fn load(&self, w: &Workload, p: &SweepPoint) -> Option<PointMetrics> {
-        let (key, wj, pj, ej) = Self::identity(w, p);
-        let text = std::fs::read_to_string(self.path_for(key)).ok()?;
+        self.load_with(&CacheEnv::for_point(w, p), w, p)
+    }
+
+    /// [`ResultCache::load`] with a pre-built sweep environment.
+    pub fn load_with(
+        &self,
+        env: &CacheEnv,
+        w: &Workload,
+        p: &SweepPoint,
+    ) -> Option<PointMetrics> {
+        let id = env.identity(w, p);
+        match self.backend {
+            Backend::Binary => {
+                if let Some(pack) = &self.pack {
+                    if let Some(rec) = pack.get(id.key) {
+                        if rec.id == id.id_string() {
+                            if let Some(m) = decode_metrics(&rec.payload) {
+                                return Some(m);
+                            }
+                        }
+                        // collision or corrupt payload: fall through to
+                        // the legacy entry / a fresh evaluation
+                    }
+                }
+                let m = self.load_legacy(&id)?;
+                // Migrate the hit into the pack (best-effort) so the
+                // JSON file is never parsed again.
+                if let Some(pack) = &self.pack {
+                    let _ = pack.put(id.key, &id.id_string(), &encode_metrics(&m));
+                }
+                Some(m)
+            }
+            Backend::LegacyJson => self.load_legacy(&id),
+        }
+    }
+
+    /// Read-only legacy path: one v2 JSON entry per point. Accepts both
+    /// pretty and compact serializations (the parser does not care).
+    fn load_legacy(&self, id: &CacheIdentity) -> Option<PointMetrics> {
+        let text = std::fs::read_to_string(self.path_for(id.legacy_key)).ok()?;
         let j = Json::parse(&text).ok()?;
-        if j.get("format").as_usize() != Some(CACHE_FORMAT) {
+        if j.get("format").as_usize() != Some(LEGACY_CACHE_FORMAT) {
             return None;
         }
-        if j.get("workload").as_str() != Some(wj.as_str())
-            || j.get("point").as_str() != Some(pj.as_str())
-            || j.get("environment").as_str() != Some(ej.as_str())
+        if j.get("workload").as_str() != Some(id.wj.as_str())
+            || j.get("point").as_str() != Some(id.pj.as_str())
+            || j.get("environment").as_str() != Some(id.ej.as_str())
         {
             return None; // hash collision or stale defaults: recompute
         }
         PointMetrics::from_json(j.get("metrics"))
     }
 
-    /// Persist a point's metrics (creates the cache directory). Write
-    /// failures are returned, not fatal — the runner treats the cache
-    /// as best-effort.
+    /// Persist a point's metrics. Write failures are returned, not
+    /// fatal — the runner treats the cache as best-effort. Sweeps
+    /// should use [`ResultCache::store_with`] with a shared env.
     pub fn store(
         &self,
         w: &Workload,
         p: &SweepPoint,
         m: &PointMetrics,
     ) -> std::io::Result<()> {
-        let (key, wj, pj, ej) = Self::identity(w, p);
-        std::fs::create_dir_all(&self.dir)?;
-        let entry = obj(vec![
-            ("format", CACHE_FORMAT.into()),
-            ("workload", wj.into()),
-            ("point", pj.into()),
-            ("environment", ej.into()),
-            ("metrics", m.to_json()),
-        ]);
-        std::fs::write(self.path_for(key), entry.to_string_pretty())
+        self.store_with(&CacheEnv::for_point(w, p), w, p, m)
+    }
+
+    /// [`ResultCache::store`] with a pre-built sweep environment.
+    pub fn store_with(
+        &self,
+        env: &CacheEnv,
+        w: &Workload,
+        p: &SweepPoint,
+        m: &PointMetrics,
+    ) -> std::io::Result<()> {
+        let id = env.identity(w, p);
+        match self.backend {
+            Backend::Binary => {
+                let pack = self.pack.as_ref().ok_or_else(|| {
+                    std::io::Error::new(
+                        std::io::ErrorKind::Other,
+                        "cache pack store unavailable",
+                    )
+                })?;
+                pack.put(id.key, &id.id_string(), &encode_metrics(m))
+                    .map_err(|e| {
+                        std::io::Error::new(std::io::ErrorKind::Other, e)
+                    })
+            }
+            Backend::LegacyJson => {
+                std::fs::create_dir_all(&self.dir)?;
+                let entry = obj(vec![
+                    ("format", LEGACY_CACHE_FORMAT.into()),
+                    ("workload", id.wj.as_str().into()),
+                    ("point", id.pj.as_str().into()),
+                    ("environment", id.ej.as_str().into()),
+                    ("metrics", m.to_json()),
+                ]);
+                // Machine-read only: compact, not pretty.
+                std::fs::write(
+                    self.path_for(id.legacy_key),
+                    entry.to_string_compact(),
+                )
+            }
+        }
+    }
+
+    /// The last stored frontier snapshot for this sweep environment
+    /// (binary backend only — the legacy layout predates warm starts).
+    pub fn load_snapshot(&self, env: &CacheEnv) -> Option<FrontierSnapshot> {
+        let pack = self.pack.as_ref()?;
+        let (key, id) = env.snapshot_identity();
+        let rec = pack.get(key)?;
+        if rec.id != id {
+            return None;
+        }
+        FrontierSnapshot::decode(&rec.payload)
+    }
+
+    /// Persist the frontier snapshot for this sweep environment
+    /// (no-op `Ok` miss on the legacy backend).
+    pub fn store_snapshot(
+        &self,
+        env: &CacheEnv,
+        snap: &FrontierSnapshot,
+    ) -> std::io::Result<()> {
+        let Some(pack) = self.pack.as_ref() else {
+            return Ok(());
+        };
+        let (key, id) = env.snapshot_identity();
+        pack.put(key, &id, &snap.encode())
+            .map_err(|e| std::io::Error::new(std::io::ErrorKind::Other, e))
     }
 }
 
@@ -122,10 +475,14 @@ mod tests {
     use super::*;
 
     fn temp_cache(tag: &str) -> ResultCache {
+        ResultCache::new(temp_dir(tag))
+    }
+
+    fn temp_dir(tag: &str) -> PathBuf {
         let dir = std::env::temp_dir()
             .join(format!("rram-dse-cache-{tag}-{}", std::process::id()));
         let _ = std::fs::remove_dir_all(&dir);
-        ResultCache::new(dir)
+        dir
     }
 
     fn point() -> SweepPoint {
@@ -154,6 +511,28 @@ mod tests {
     }
 
     #[test]
+    fn metrics_binary_codec_is_bit_exact() {
+        // awkward floats round-trip exactly: raw bits in, raw bits out
+        let m = PointMetrics {
+            cycles: 0.1 + 0.2,
+            energy_pj: 1.0 / 3.0,
+            area_cells: f64::MAX,
+            crossbars: usize::MAX >> 1,
+            ou_ops: 5e-324, // smallest subnormal
+            utilization: -0.0,
+        };
+        let enc = encode_metrics(&m);
+        let back = decode_metrics(&enc).expect("decodes");
+        assert_eq!(m.cycles.to_bits(), back.cycles.to_bits());
+        assert_eq!(m.energy_pj.to_bits(), back.energy_pj.to_bits());
+        assert_eq!(m.ou_ops.to_bits(), back.ou_ops.to_bits());
+        assert_eq!(m.utilization.to_bits(), back.utilization.to_bits());
+        assert_eq!(m.crossbars, back.crossbars);
+        assert!(decode_metrics(&enc[..47]).is_none(), "short payload misses");
+        assert!(decode_metrics(&[0u8; 49]).is_none(), "long payload misses");
+    }
+
+    #[test]
     fn store_then_load_roundtrips_bitwise() {
         let c = temp_cache("roundtrip");
         let w = Workload::small(7);
@@ -162,6 +541,9 @@ mod tests {
         c.store(&w, &p, &metrics()).unwrap();
         let got = c.load(&w, &p).expect("hit after store");
         assert_eq!(got, metrics());
+        // survives reopen (a second process / a later sweep)
+        let c2 = ResultCache::new(c.dir().to_path_buf());
+        assert_eq!(c2.load(&w, &p).expect("hit after reopen"), metrics());
         let _ = std::fs::remove_dir_all(c.dir());
     }
 
@@ -215,17 +597,143 @@ mod tests {
     }
 
     #[test]
-    fn corrupt_entry_reads_as_miss() {
-        let c = temp_cache("corrupt");
+    fn hoisted_env_matches_per_point_identity() {
+        let c = temp_cache("env");
         let w = Workload::small(7);
         let p = point();
+        let mut p2 = point();
+        p2.zero_detection = false;
+        let points = [p.clone(), p2.clone()];
+        let env = CacheEnv::for_sweep(&w, &points);
+        // store through the hoisted env, load through the per-point
+        // path (and vice versa): identities must agree
+        c.store_with(&env, &w, &p, &metrics()).unwrap();
+        assert_eq!(c.load(&w, &p), Some(metrics()));
+        c.store(&w, &p2, &metrics()).unwrap();
+        assert_eq!(c.load_with(&env, &w, &p2), Some(metrics()));
+        // a point outside the env's grid still resolves (fallback)
+        let mut p3 = point();
+        p3.block_switch_cycles = 9.0;
+        assert!(c.load_with(&env, &w, &p3).is_none());
+        c.store_with(&env, &w, &p3, &metrics()).unwrap();
+        assert_eq!(c.load(&w, &p3), Some(metrics()));
+        // keys are stable and distinct per point
+        assert_ne!(env.point_key(&w, &p), env.point_key(&w, &p2));
+        assert_eq!(env.point_key(&w, &p), env.point_key(&w, &p));
+        let _ = std::fs::remove_dir_all(c.dir());
+    }
+
+    #[test]
+    fn legacy_backend_writes_compact_v2_entries() {
+        let dir = temp_dir("legacy");
+        let c = ResultCache::legacy_json(dir.clone());
+        assert!(!c.is_binary());
+        let w = Workload::small(7);
+        let p = point();
+        assert!(c.load(&w, &p).is_none(), "cold cache misses");
         c.store(&w, &p, &metrics()).unwrap();
-        let (key, _, _, _) = ResultCache::identity(&w, &p);
-        std::fs::write(c.path_for(key), "{truncated").unwrap();
+        assert_eq!(c.load(&w, &p), Some(metrics()));
+        // exactly one per-point JSON file, in compact form, v2 layout
+        let files: Vec<PathBuf> = std::fs::read_dir(&dir)
+            .unwrap()
+            .map(|e| e.unwrap().path())
+            .filter(|p| p.extension().is_some_and(|e| e == "json"))
+            .collect();
+        assert_eq!(files.len(), 1, "{files:?}");
+        let text = std::fs::read_to_string(&files[0]).unwrap();
+        assert!(!text.contains('\n'), "compact, not pretty: {text}");
+        let j = Json::parse(&text).unwrap();
+        assert_eq!(j.get("format").as_usize(), Some(2));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn binary_backend_migrates_legacy_entries() {
+        let dir = temp_dir("migrate");
+        let w = Workload::small(7);
+        let p = point();
+        // seed via the legacy writer (compact), plus a hand-written
+        // pretty entry for a second point — the fallback reads both
+        let legacy = ResultCache::legacy_json(dir.clone());
+        legacy.store(&w, &p, &metrics()).unwrap();
+        let mut p2 = point();
+        p2.ou_rows = 4;
+        legacy.store(&w, &p2, &metrics()).unwrap();
+        {
+            // re-write p2's entry pretty-printed (the historical form)
+            let env = CacheEnv::for_point(&w, &p2);
+            let id = env.identity(&w, &p2);
+            let text =
+                std::fs::read_to_string(legacy.path_for(id.legacy_key)).unwrap();
+            let pretty = Json::parse(&text).unwrap().to_string_pretty();
+            assert!(pretty.contains('\n'));
+            std::fs::write(legacy.path_for(id.legacy_key), pretty).unwrap();
+        }
+
+        let c = ResultCache::new(dir.clone());
+        assert!(c.is_binary());
+        assert_eq!(c.load(&w, &p), Some(metrics()), "compact legacy hit");
+        assert_eq!(c.load(&w, &p2), Some(metrics()), "pretty legacy hit");
+        // the hits migrated into the pack: remove the JSON files and
+        // they still hit
+        for f in std::fs::read_dir(&dir).unwrap() {
+            let f = f.unwrap().path();
+            if f.extension().is_some_and(|e| e == "json") {
+                std::fs::remove_file(f).unwrap();
+            }
+        }
+        assert_eq!(c.load(&w, &p), Some(metrics()), "served from pack");
+        assert_eq!(c.load(&w, &p2), Some(metrics()), "served from pack");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_legacy_entry_reads_as_miss() {
+        let dir = temp_dir("corrupt");
+        let c = ResultCache::new(dir.clone());
+        let w = Workload::small(7);
+        let p = point();
+        let env = CacheEnv::for_point(&w, &p);
+        let id = env.identity(&w, &p);
+        std::fs::write(c.path_for(id.legacy_key), "{truncated").unwrap();
         assert!(c.load(&w, &p).is_none(), "corrupt file must miss");
-        // a fresh store heals it
+        // a fresh store heals it (into the pack)
         c.store(&w, &p, &metrics()).unwrap();
         assert!(c.load(&w, &p).is_some());
-        let _ = std::fs::remove_dir_all(c.dir());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn frontier_snapshot_roundtrips() {
+        let dir = temp_dir("snapshot");
+        let c = ResultCache::new(dir.clone());
+        let w = Workload::small(7);
+        let env = CacheEnv::for_sweep(&w, &[point()]);
+        assert!(c.load_snapshot(&env).is_none(), "cold snapshot misses");
+        let snap = FrontierSnapshot {
+            covered: vec![3, 1, u64::MAX, 7],
+            members: vec![1, 7],
+        };
+        c.store_snapshot(&env, &snap).unwrap();
+        assert_eq!(c.load_snapshot(&env), Some(snap.clone()));
+        // a different workload env has its own snapshot slot
+        let env8 = CacheEnv::for_sweep(&Workload::small(8), &[point()]);
+        assert!(c.load_snapshot(&env8).is_none());
+        // overwrite wins
+        let snap2 = FrontierSnapshot { covered: vec![9], members: vec![9] };
+        c.store_snapshot(&env, &snap2).unwrap();
+        assert_eq!(c.load_snapshot(&env), Some(snap2));
+        // empty snapshot is representable
+        let empty = FrontierSnapshot::default();
+        assert_eq!(
+            FrontierSnapshot::decode(&empty.encode()),
+            Some(empty)
+        );
+        // legacy backend: snapshots are absent but not an error
+        let legacy = ResultCache::legacy_json(dir.clone());
+        assert!(legacy.load_snapshot(&env).is_none());
+        legacy.store_snapshot(&env, &snap).unwrap();
+        assert!(legacy.load_snapshot(&env).is_none());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

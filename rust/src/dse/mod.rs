@@ -36,7 +36,7 @@ pub mod cache;
 pub mod pareto;
 pub mod runner;
 
-pub use cache::ResultCache;
+pub use cache::{CacheEnv, FrontierSnapshot, ResultCache};
 pub use pareto::{
     select_config, sensitivity, AxisSensitivity, Objective, ParetoFrontier,
     TunedConfig,
@@ -197,7 +197,7 @@ impl Workload {
 /// fixed nested order, so result indices are stable across runs.
 #[derive(Debug, Clone, PartialEq)]
 pub struct SweepSpec {
-    /// Grid name (`small`, `medium`, or caller-defined).
+    /// Grid name (`small`, `medium`, `large`, or caller-defined).
     pub grid: String,
     pub schemes: Vec<String>,
     /// (rows, cols) of the Operation Unit.
@@ -253,6 +253,32 @@ impl SweepSpec {
         }
     }
 
+    /// Stress grid for raw speed at DSE scale (~10^4 points): every
+    /// scheme, six OU shapes, four crossbar sizes, five pattern counts,
+    /// seven pruning rates, and both simulation-policy axes widened —
+    /// 10920 points after the IPU collapse (840 for `naive`, 3360 for
+    /// each IPU scheme). Geometry combinations a crossbar rejects
+    /// (e.g. a 32-row OU on a 128-row array with tall cell stacking)
+    /// are expanded and skipped, exercising the skip path at scale.
+    pub fn large(seed: u64) -> SweepSpec {
+        SweepSpec {
+            grid: "large".into(),
+            schemes: vec![
+                "naive".into(),
+                "pattern".into(),
+                "kmeans".into(),
+                "ou_sparse".into(),
+            ],
+            ou: vec![(4, 4), (8, 8), (9, 8), (16, 8), (16, 16), (32, 8)],
+            xbar: vec![(128, 128), (256, 256), (512, 512), (1024, 1024)],
+            patterns: vec![2, 4, 8, 12, 16],
+            pruning: vec![0.60, 0.65, 0.70, 0.75, 0.80, 0.86, 0.92],
+            zero_detection: vec![true, false],
+            block_switch: vec![2.0, 8.0],
+            workload: Workload::small(seed),
+        }
+    }
+
     /// Widen the simulation-policy axes: zero-detection on *and* off,
     /// and the given block-switch costs (empty slices keep the current
     /// axis). Returns `self` for builder-style use.
@@ -270,6 +296,7 @@ impl SweepSpec {
         match name {
             "small" => Some(SweepSpec::small(seed)),
             "medium" => Some(SweepSpec::medium(seed)),
+            "large" => Some(SweepSpec::large(seed)),
             _ => None,
         }
     }
@@ -490,6 +517,19 @@ mod tests {
         // empty slices keep the existing axes
         let kept = SweepSpec::small(42).with_sim_axes(&[], &[]);
         assert_eq!(kept.expand().len(), 48);
+    }
+
+    #[test]
+    fn large_grid_hits_dse_scale() {
+        let spec = SweepSpec::large(42);
+        let pts = spec.expand();
+        // 6 ou × 4 xbar × 5 patterns × 7 pruning = 840 base points per
+        // scheme; naive (no IPU) keeps the sim-policy singletons, the
+        // three IPU schemes expand 2 × 2.
+        assert_eq!(pts.len(), 840 + 3 * 840 * 4, "10920-point large grid");
+        assert!(pts.len() >= 10_000, "the grid must reach DSE scale");
+        assert_eq!(SweepSpec::by_name("large", 42), Some(spec));
+        assert_eq!(SweepSpec::by_name("nope", 42), None);
     }
 
     #[test]

@@ -27,6 +27,140 @@ pub fn dominates(a: &PointMetrics, b: &PointMetrics) -> bool {
     aa <= ba && ae <= be && ac <= bc && (aa < ba || ae < be || ac < bc)
 }
 
+/// Objective tuple normalized for the sort-based extraction: `-0.0`
+/// collapses to `+0.0` (`x + 0.0`), so `f64::total_cmp`'s ordering
+/// agrees exactly with the operator comparisons [`dominates`] uses
+/// (which treat the two zeros as equal). NaN passes through and is
+/// handled separately.
+fn norm_objectives(m: &PointMetrics) -> (f64, f64, f64) {
+    let (a, e, c) = objectives(m);
+    (a + 0.0, e + 0.0, c + 0.0)
+}
+
+/// Pareto staircase over `(energy, cycles)` pairs of already-processed
+/// points: `es` strictly ascending, `cs` strictly descending — the 2D
+/// minima envelope. `dominated(e, c)` answers "does any processed
+/// point have `e' <= e` and `c' <= c`" in O(log n).
+struct Staircase {
+    es: Vec<f64>,
+    cs: Vec<f64>,
+}
+
+impl Staircase {
+    fn new() -> Staircase {
+        Staircase { es: Vec::new(), cs: Vec::new() }
+    }
+
+    fn dominated(&self, e: f64, c: f64) -> bool {
+        // The best candidate is the largest e' <= e: cs decreases with
+        // es, so it carries the minimum c over that prefix.
+        let i = self.es.partition_point(|x| *x <= e);
+        i > 0 && self.cs[i - 1] <= c
+    }
+
+    fn insert(&mut self, e: f64, c: f64) {
+        let i = self.es.partition_point(|x| *x <= e);
+        if i > 0 && self.cs[i - 1] <= c {
+            return; // already covered by the envelope
+        }
+        let at = if i > 0 && self.es[i - 1] == e {
+            // same e, strictly lower c (not covered): tighten in place
+            self.cs[i - 1] = c;
+            i - 1
+        } else {
+            self.es.insert(i, e);
+            self.cs.insert(i, c);
+            i
+        };
+        // drop following steps the new point covers (e' > e, c' >= c)
+        let mut j = at + 1;
+        while j < self.es.len() && self.cs[j] >= c {
+            j += 1;
+        }
+        self.es.drain(at + 1..j);
+        self.cs.drain(at + 1..j);
+    }
+}
+
+/// Sort-based non-dominated extraction over `(index, normalized
+/// objectives)` pairs — O(n log n) comparisons against the O(n²)
+/// pairwise oracle, bit-identical members (pinned by the property test
+/// in `tests/prop_invariants.rs` and this module's unit tests).
+///
+/// Shape: sort by `(area, energy, cycles)`; walk equal-`area` groups in
+/// order, testing each candidate against (a) the staircase of all
+/// strictly-smaller-area points — `e' <= e && c' <= c` there is strict
+/// dominance, area being strictly better — and (b) its own group,
+/// where a same-area point dominates iff it is weakly better on
+/// `(energy, cycles)` and strictly better on one (equal tuples never
+/// dominate each other, so exact duplicates all stay members, exactly
+/// like the oracle). NaN never compares, so a NaN-coordinate point is
+/// neither dominated nor dominating: an automatic member, excluded
+/// from the sort machinery.
+fn extract_non_dominated(valid: &[(usize, (f64, f64, f64))]) -> Vec<usize> {
+    let mut members: Vec<usize> = valid
+        .iter()
+        .filter(|(_, (a, e, c))| a.is_nan() || e.is_nan() || c.is_nan())
+        .map(|&(i, _)| i)
+        .collect();
+    let mut pts: Vec<(usize, (f64, f64, f64))> = valid
+        .iter()
+        .filter(|(_, (a, e, c))| !(a.is_nan() || e.is_nan() || c.is_nan()))
+        .copied()
+        .collect();
+    pts.sort_unstable_by(|x, y| {
+        (x.1 .0)
+            .total_cmp(&y.1 .0)
+            .then((x.1 .1).total_cmp(&y.1 .1))
+            .then((x.1 .2).total_cmp(&y.1 .2))
+            .then(x.0.cmp(&y.0))
+    });
+    let mut stair = Staircase::new();
+    let mut g = 0;
+    while g < pts.len() {
+        let a = pts[g].1 .0;
+        let mut h = g;
+        while h < pts.len() && pts[h].1 .0 == a {
+            h += 1;
+        }
+        // One equal-area group [g, h), sorted by (energy, cycles).
+        // Within the group, a run of equal energy keeps only its
+        // minimum-cycles points, and only when that minimum strictly
+        // beats every lower-energy run's (same-area points with less
+        // energy and <= cycles would dominate).
+        let mut prefix_min_c = f64::INFINITY;
+        let mut r = g;
+        while r < h {
+            let e = pts[r].1 .1;
+            let mut rr = r;
+            while rr < h && pts[rr].1 .1 == e {
+                rr += 1;
+            }
+            let run_min_c = pts[r].1 .2; // run sorted by cycles
+            if run_min_c < prefix_min_c {
+                for &(i, (_, _, c)) in &pts[r..rr] {
+                    if c != run_min_c {
+                        break; // equal-minimum block is a prefix
+                    }
+                    if !stair.dominated(e, c) {
+                        members.push(i);
+                    }
+                }
+            }
+            prefix_min_c = prefix_min_c.min(run_min_c);
+            r = rr;
+        }
+        // Fold the whole group into the staircase for later groups
+        // (strictly larger area from here on).
+        for &(_, (_, e, c)) in &pts[g..h] {
+            stair.insert(e, c);
+        }
+        g = h;
+    }
+    members.sort_unstable();
+    members
+}
+
 /// The non-dominated subset of a sweep's results.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ParetoFrontier {
@@ -36,10 +170,27 @@ pub struct ParetoFrontier {
 }
 
 impl ParetoFrontier {
-    /// Extract the frontier. O(n²) pairwise dominance — sweep grids are
-    /// hundreds to low thousands of points, far below where a sweep-line
-    /// would pay off.
+    /// Extract the frontier via sort-based non-dominated extraction —
+    /// O(n log n) against the old O(n²) pairwise pass (kept as
+    /// [`ParetoFrontier::from_results_oracle`]), with bit-identical
+    /// `members`. At the `large` grid (~10^4 points) the pairwise pass
+    /// is ~10^8 dominance checks; this is one sort plus a staircase
+    /// walk.
     pub fn from_results(results: &[PointResult]) -> ParetoFrontier {
+        let valid: Vec<(usize, (f64, f64, f64))> = results
+            .iter()
+            .enumerate()
+            .filter_map(|(i, r)| r.metrics().map(|m| (i, norm_objectives(m))))
+            .collect();
+        ParetoFrontier { members: extract_non_dominated(&valid) }
+    }
+
+    /// The original O(n²) pairwise extraction, kept verbatim as the
+    /// reference oracle: the property test in
+    /// `tests/prop_invariants.rs` pins `from_results == from_results_oracle`
+    /// on randomized grids (ties, duplicates, skips, signed zeros), and
+    /// `benches/dse_sweep.rs` races the two at 10^4 points.
+    pub fn from_results_oracle(results: &[PointResult]) -> ParetoFrontier {
         let valid: Vec<(usize, &PointMetrics)> = results
             .iter()
             .enumerate()
@@ -51,6 +202,39 @@ impl ParetoFrontier {
             .map(|&(i, _)| i)
             .collect();
         ParetoFrontier { members }
+    }
+
+    /// Fold newly evaluated points into a warm-started frontier.
+    ///
+    /// Re-extracts over `current members ∪ new_indices` only — sound
+    /// whenever `self` is the exact frontier of some subset `S` of
+    /// `results` and `new_indices` covers every valid index outside
+    /// `S` (the sweep runner enforces this by only warm-starting when
+    /// the snapshot's covered set is a subset of the current grid: a
+    /// point dominated by an old member stays dominated, and any old
+    /// member a new point dominates is re-checked here). Indices
+    /// without valid metrics are ignored; the result is identical to a
+    /// full [`ParetoFrontier::from_results`] pass under that contract
+    /// (pinned by tests).
+    pub fn update(&mut self, results: &[PointResult], new_indices: &[usize]) {
+        let mut cand: Vec<usize> = self
+            .members
+            .iter()
+            .chain(new_indices.iter())
+            .copied()
+            .collect();
+        cand.sort_unstable();
+        cand.dedup();
+        let valid: Vec<(usize, (f64, f64, f64))> = cand
+            .into_iter()
+            .filter_map(|i| {
+                results
+                    .get(i)
+                    .and_then(|r| r.metrics())
+                    .map(|m| (i, norm_objectives(m)))
+            })
+            .collect();
+        self.members = extract_non_dominated(&valid);
     }
 
     pub fn len(&self) -> usize {
@@ -444,6 +628,130 @@ mod tests {
         let csv = f.to_csv(&results);
         assert_eq!(csv.lines().count(), 4, "{csv}");
         assert!(csv.starts_with("index,scheme"), "{csv}");
+    }
+
+    #[test]
+    fn fast_extraction_matches_oracle_on_random_grids() {
+        use crate::util::prop;
+        prop::check(
+            "pareto fast == oracle",
+            prop::cases(64),
+            |rng| {
+                let n = 1 + rng.below(120);
+                // Draw coords from a small discrete set so ties,
+                // duplicate tuples, and equal-axis runs are common; a
+                // few signed zeros keep the normalization honest.
+                fn coord(rng: &mut crate::util::rng::Rng) -> f64 {
+                    if rng.chance(0.05) {
+                        -0.0
+                    } else {
+                        rng.below(6) as f64
+                    }
+                }
+                let results: Vec<PointResult> = (0..n)
+                    .map(|i| {
+                        if rng.chance(0.1) {
+                            PointResult {
+                                index: i,
+                                point: point("bogus"),
+                                outcome: Err("skipped".into()),
+                                cache_hit: false,
+                            }
+                        } else {
+                            let a = coord(rng);
+                            let e = coord(rng);
+                            let c = coord(rng);
+                            result(i, a, e, c)
+                        }
+                    })
+                    .collect();
+                let fast = ParetoFrontier::from_results(&results);
+                let oracle = ParetoFrontier::from_results_oracle(&results);
+                assert_eq!(
+                    fast.members, oracle.members,
+                    "fast/oracle divergence on {} points",
+                    n
+                );
+            },
+        );
+    }
+
+    #[test]
+    fn fast_extraction_handles_ties_duplicates_and_signed_zero() {
+        // Exact duplicates never dominate each other: both stay.
+        let results = vec![
+            result(0, 1.0, 2.0, 3.0),
+            result(1, 1.0, 2.0, 3.0),
+            result(2, 1.0, 2.0, 4.0), // dominated by 0/1 (same a, e)
+            result(3, 1.0, 1.0, 9.0), // tradeoff within same area group
+            result(4, 0.5, 2.0, 3.0), // dominates nothing of 0/1? a smaller, e/c equal => dominates 0,1,2
+        ];
+        let fast = ParetoFrontier::from_results(&results);
+        let oracle = ParetoFrontier::from_results_oracle(&results);
+        assert_eq!(fast.members, oracle.members);
+        assert_eq!(fast.members, vec![3, 4]);
+
+        // -0.0 and +0.0 compare equal under `dominates`; the sort path
+        // must agree (normalization collapses the two zeros).
+        let results = vec![result(0, 0.0, 1.0, 1.0), result(1, -0.0, 1.0, 1.0)];
+        let fast = ParetoFrontier::from_results(&results);
+        let oracle = ParetoFrontier::from_results_oracle(&results);
+        assert_eq!(fast.members, oracle.members);
+        assert_eq!(fast.members, vec![0, 1]);
+
+        // NaN coords never compare: the point is an automatic member
+        // and dominates nothing, same as the pairwise oracle.
+        let results = vec![
+            result(0, f64::NAN, 0.0, 0.0),
+            result(1, 5.0, 5.0, 5.0),
+            result(2, 1.0, 1.0, 1.0),
+        ];
+        let fast = ParetoFrontier::from_results(&results);
+        let oracle = ParetoFrontier::from_results_oracle(&results);
+        assert_eq!(fast.members, oracle.members);
+        assert_eq!(fast.members, vec![0, 2]);
+    }
+
+    #[test]
+    fn update_matches_full_extraction() {
+        use crate::util::prop;
+        prop::check(
+            "pareto update == full extraction",
+            prop::cases(64),
+            |rng| {
+                let n = 2 + rng.below(80);
+                let results: Vec<PointResult> = (0..n)
+                    .map(|i| {
+                        let a = rng.below(5) as f64;
+                        let e = rng.below(5) as f64;
+                        let c = rng.below(5) as f64;
+                        result(i, a, e, c)
+                    })
+                    .collect();
+                // Warm-start from a prefix, fold in the rest.
+                let split = 1 + rng.below(n - 1);
+                let mut warm = ParetoFrontier::from_results(&results[..split]);
+                let rest: Vec<usize> = (split..n).collect();
+                warm.update(&results, &rest);
+                let full = ParetoFrontier::from_results(&results);
+                assert_eq!(warm.members, full.members);
+            },
+        );
+    }
+
+    #[test]
+    fn update_evicts_newly_dominated_members() {
+        let results = vec![
+            result(0, 2.0, 2.0, 2.0),
+            result(1, 1.0, 1.0, 1.0), // dominates 0
+        ];
+        let mut f = ParetoFrontier::from_results(&results[..1]);
+        assert_eq!(f.members, vec![0]);
+        f.update(&results, &[1]);
+        assert_eq!(f.members, vec![1]);
+        // no-op update keeps the frontier stable
+        f.update(&results, &[]);
+        assert_eq!(f.members, vec![1]);
     }
 
     #[test]

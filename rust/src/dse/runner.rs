@@ -14,8 +14,9 @@ use crate::util::threadpool;
 use crate::xbar::CellGeometry;
 
 use super::{
-    select_config, Objective, ParetoFrontier, PointMetrics, PointResult,
-    ResultCache, SweepPoint, SweepSpec, TunedConfig, Workload,
+    select_config, CacheEnv, FrontierSnapshot, Objective, ParetoFrontier,
+    PointMetrics, PointResult, ResultCache, SweepPoint, SweepSpec,
+    TunedConfig, Workload,
 };
 
 /// The exact [`SimConfig`] one sweep evaluation runs under: the
@@ -107,15 +108,36 @@ impl SweepRunner {
     /// first), extract the frontier. Results are in grid order and
     /// independent of `threads`.
     pub fn run(&self) -> SweepOutcome {
+        self.run_with(false)
+    }
+
+    /// [`SweepRunner::run`], optionally warm-starting the frontier
+    /// extraction from the cache's stored [`FrontierSnapshot`].
+    ///
+    /// The cache identity environment (workload JSON, base hardware
+    /// JSON, per-policy `SimConfig` JSON) is built **once** here and
+    /// shared by every point's load/store — previously each of the up
+    /// to `2 × n` cache calls re-serialized all three from scratch.
+    ///
+    /// With `warm_start`, the previous run's frontier snapshot seeds an
+    /// incremental [`ParetoFrontier::update`] over only the points the
+    /// snapshot had not covered. This is used only when the snapshot's
+    /// covered set is a subset of the current grid (the grid only
+    /// grew); otherwise — first run, changed workload, shrunk grid —
+    /// it silently falls back to full extraction. Either path produces
+    /// bit-identical members, so the frontier artifact does not depend
+    /// on the flag.
+    pub fn run_with(&self, warm_start: bool) -> SweepOutcome {
         let points = self.spec.expand();
         let w = &self.spec.workload;
         let cache = self.cache.as_ref();
+        let env = cache.map(|_| CacheEnv::for_sweep(w, &points));
         let results = threadpool::parallel_map_indexed(
             &points,
             self.threads.max(1),
             |i, p| {
-                if let Some(c) = cache {
-                    if let Some(m) = c.load(w, p) {
+                if let (Some(c), Some(env)) = (cache, env.as_ref()) {
+                    if let Some(m) = c.load_with(env, w, p) {
                         return PointResult {
                             index: i,
                             point: p.clone(),
@@ -125,8 +147,10 @@ impl SweepRunner {
                     }
                 }
                 let outcome = evaluate_point(w, p);
-                if let (Some(c), Ok(m)) = (cache, &outcome) {
-                    if let Err(e) = c.store(w, p, m) {
+                if let (Some(c), Some(env), Ok(m)) =
+                    (cache, env.as_ref(), &outcome)
+                {
+                    if let Err(e) = c.store_with(env, w, p, m) {
                         eprintln!(
                             "[dse] cache write failed for {}: {e} \
                              (continuing uncached)",
@@ -137,9 +161,66 @@ impl SweepRunner {
                 PointResult { index: i, point: p.clone(), outcome, cache_hit: false }
             },
         );
-        let frontier = ParetoFrontier::from_results(&results);
+        let frontier = match (warm_start, cache, env.as_ref()) {
+            (true, Some(c), Some(env)) => warm_frontier(c, env, w, &results)
+                .unwrap_or_else(|| ParetoFrontier::from_results(&results)),
+            _ => ParetoFrontier::from_results(&results),
+        };
+        if let (Some(c), Some(env)) = (cache, env.as_ref()) {
+            let snap = FrontierSnapshot {
+                covered: results
+                    .iter()
+                    .filter(|r| r.outcome.is_ok())
+                    .map(|r| env.point_key(w, &r.point))
+                    .collect(),
+                members: frontier
+                    .members
+                    .iter()
+                    .map(|&i| env.point_key(w, &results[i].point))
+                    .collect(),
+            };
+            if let Err(e) = c.store_snapshot(env, &snap) {
+                eprintln!("[dse] frontier snapshot write failed: {e}");
+            }
+        }
         SweepOutcome { spec: self.spec.clone(), results, frontier }
     }
+}
+
+/// Seed the frontier from the cached snapshot and fold in only the
+/// points the snapshot did not cover. `None` (→ full extraction) when
+/// there is no snapshot or when any previously covered point left the
+/// grid — a dominated point's dominator might have gone with it, so the
+/// shortcut would not be sound.
+fn warm_frontier(
+    cache: &ResultCache,
+    env: &CacheEnv,
+    w: &Workload,
+    results: &[PointResult],
+) -> Option<ParetoFrontier> {
+    let snap = cache.load_snapshot(env)?;
+    let covered: std::collections::BTreeSet<u64> =
+        snap.covered.iter().copied().collect();
+    let member_keys: std::collections::BTreeSet<u64> =
+        snap.members.iter().copied().collect();
+    let mut members = Vec::new();
+    let mut fresh = Vec::new();
+    let mut grid_keys = std::collections::BTreeSet::new();
+    for r in results.iter().filter(|r| r.outcome.is_ok()) {
+        let k = env.point_key(w, &r.point);
+        grid_keys.insert(k);
+        if member_keys.contains(&k) {
+            members.push(r.index);
+        } else if !covered.contains(&k) {
+            fresh.push(r.index);
+        }
+    }
+    if !covered.iter().all(|k| grid_keys.contains(k)) {
+        return None;
+    }
+    let mut frontier = ParetoFrontier { members };
+    frontier.update(results, &fresh);
+    Some(frontier)
 }
 
 /// Everything a finished sweep produced.

@@ -13,7 +13,9 @@
 //! functional model ([`runtime`]), a serving coordinator
 //! ([`coordinator`]), a design-space exploration engine that sweeps
 //! mapping/OU/crossbar configurations and auto-tunes the serving stack
-//! from the Pareto frontier ([`dse`]), report generation for every
+//! from the Pareto frontier ([`dse`]), a binary content-addressed
+//! artifact store backing the sweep and report caches ([`store`]),
+//! report generation for every
 //! paper table and figure ([`report`]), and small from-scratch
 //! utilities ([`util`]) standing in for crates unavailable in this
 //! offline image.
@@ -38,5 +40,6 @@ pub mod report;
 pub mod runtime;
 pub mod serve_http;
 pub mod sim;
+pub mod store;
 pub mod util;
 pub mod xbar;

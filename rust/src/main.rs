@@ -365,16 +365,26 @@ fn cmd_dse(rest: Vec<String>) -> i32 {
         "design-space exploration: sweep mapping/OU/crossbar/pattern/\
          pruning configs in parallel and emit the Pareto frontier",
     )
-    .opt("grid", "small", "sweep grid: small|medium")
+    .opt("grid", "small", "sweep grid: small|medium|large")
     .opt("seed", "42", "workload seed")
     .opt("threads", "0", "sweep worker threads (0 = auto)")
     .opt("weights", "1,1,1", "selection weights: area,energy,cycles")
     .opt("cache-dir", "results/dse_cache", "on-disk result cache directory")
+    .opt(
+        "cache-backend",
+        "binary",
+        "cache layout: binary (pack store) | legacy (per-point JSON)",
+    )
     .opt("out", "dse_frontier", "artifact basename under results/")
     .opt("zd", "on", "zero-detection axis: on|off|both")
     .opt("block-switch", "2", "block-switch cycle cost axis (comma-separated)")
     .flag("exact", "exact traces: cost every output position (no sampling)")
     .flag("no-cache", "evaluate every point fresh")
+    .flag(
+        "warm-start",
+        "seed the frontier from the cache's snapshot of the last run \
+         (same frontier bytes, less extraction work)",
+    )
     .flag("sensitivity", "print the per-axis sensitivity summary")
     .parse(rest)
     {
@@ -420,17 +430,31 @@ fn cmd_dse(rest: Vec<String>) -> i32 {
     let cache = if args.get_flag("no-cache") {
         None
     } else {
-        Some(ResultCache::new(args.get("cache-dir").to_string()))
+        let dir = args.get("cache-dir").to_string();
+        match args.get("cache-backend") {
+            "binary" => Some(ResultCache::new(dir)),
+            "legacy" => Some(ResultCache::legacy_json(dir)),
+            other => {
+                return usage(format!(
+                    "unknown cache backend {other} (use binary|legacy)"
+                ))
+            }
+        }
     };
     println!(
         "sweeping '{}' grid: {} points on {} threads ({}, {} traces)",
         spec.grid,
         spec.expand().len(),
         threads,
-        if cache.is_some() { "cached" } else { "uncached" },
+        match &cache {
+            Some(c) if c.is_binary() => "cached: binary",
+            Some(_) => "cached: legacy json",
+            None => "uncached",
+        },
         if spec.workload.exact { "exact" } else { "sampled" },
     );
-    let outcome = SweepRunner { spec, threads, cache }.run();
+    let warm_start = args.get_flag("warm-start");
+    let outcome = SweepRunner { spec, threads, cache }.run_with(warm_start);
     println!("{}", outcome.summary_line());
     print!("{}", outcome.frontier.table(&outcome.results));
     if args.get_flag("sensitivity") {

@@ -394,17 +394,44 @@ impl PaperArtifacts {
 /// layer list invalidates old entries without anyone remembering to
 /// bump the format version. Thread count is deliberately absent —
 /// results are thread-invariant.
+///
+/// Storage is the binary pack store ([`crate::store`]):
+/// `paper.{pack,idx}` in the cache directory, payload = the bundle's
+/// compact canonical JSON. The identity string (and therefore the key)
+/// is unchanged from the per-file layout, so a pack miss falls back to
+/// the matching legacy `{key:016x}.json` entry — read-only — verifies
+/// it, and migrates it into the pack.
 #[derive(Debug, Clone)]
 pub struct ArtifactCache {
     dir: PathBuf,
+    /// `None` when the pack could not be opened (unwritable dir):
+    /// loads fall back to legacy JSON, stores report the failure.
+    pack: Option<crate::store::PackStore>,
 }
 
 /// Bump when the artifact layout or the evaluation semantics change.
 const ARTIFACT_CACHE_FORMAT: usize = 1;
 
+/// Pack domain name: `results/paper_cache/paper.{pack,idx}`.
+const ARTIFACT_PACK_DOMAIN: &str = "paper";
+
 impl ArtifactCache {
     pub fn new<P: Into<PathBuf>>(dir: P) -> ArtifactCache {
-        ArtifactCache { dir: dir.into() }
+        let dir: PathBuf = dir.into();
+        let pack = match crate::store::PackStore::open(
+            &dir.to_string_lossy(),
+            ARTIFACT_PACK_DOMAIN,
+        ) {
+            Ok(p) => Some(p),
+            Err(e) => {
+                eprintln!(
+                    "[artifacts] cache store unavailable: {e} \
+                     (continuing uncached)"
+                );
+                None
+            }
+        };
+        ArtifactCache { dir, pack }
     }
 
     pub fn dir(&self) -> &Path {
@@ -449,26 +476,57 @@ impl ArtifactCache {
     }
 
     /// Load a profile's cached bundle, verifying the stored identity.
-    /// Any miss, mismatch or parse failure returns `None`.
+    /// Any miss, mismatch or parse failure returns `None`. Pack first;
+    /// a miss falls back to the read-only legacy JSON entry (same key —
+    /// the identity string is unchanged) and migrates a hit into the
+    /// pack.
     pub fn load(
         &self,
         profile: &DatasetProfile,
         cfg: &ArtifactConfig,
     ) -> Option<DatasetArtifact> {
         let (key, id) = Self::identity(profile, cfg);
+        if let Some(pack) = &self.pack {
+            if let Some(rec) = pack.get(key) {
+                if rec.id == id {
+                    if let Some(a) = std::str::from_utf8(&rec.payload)
+                        .ok()
+                        .and_then(|t| Json::parse(t).ok())
+                        .and_then(|j| DatasetArtifact::from_json(&j))
+                    {
+                        return Some(a);
+                    }
+                }
+                // collision or corrupt payload: fall through
+            }
+        }
+        let a = self.load_legacy(key, &id)?;
+        if let Some(pack) = &self.pack {
+            let _ = pack.put(
+                key,
+                &id,
+                a.to_json().to_string_compact().as_bytes(),
+            );
+        }
+        Some(a)
+    }
+
+    /// Read-only legacy path: the per-file JSON entry layout this cache
+    /// wrote before the pack store.
+    fn load_legacy(&self, key: u64, id: &str) -> Option<DatasetArtifact> {
         let text = std::fs::read_to_string(self.path_for(key)).ok()?;
         let j = Json::parse(&text).ok()?;
         if j.get("format").as_usize() != Some(ARTIFACT_CACHE_FORMAT)
-            || j.get("identity").as_str() != Some(id.as_str())
+            || j.get("identity").as_str() != Some(id)
         {
             return None; // collision or stale defaults: recompute
         }
         DatasetArtifact::from_json(j.get("artifact"))
     }
 
-    /// Persist a profile's bundle (creates the cache directory). Write
-    /// failures are returned, not fatal — the pipeline treats the
-    /// cache as best-effort.
+    /// Persist a profile's bundle into the pack. Write failures are
+    /// returned, not fatal — the pipeline treats the cache as
+    /// best-effort.
     pub fn store(
         &self,
         profile: &DatasetProfile,
@@ -476,13 +534,14 @@ impl ArtifactCache {
         a: &DatasetArtifact,
     ) -> std::io::Result<()> {
         let (key, id) = Self::identity(profile, cfg);
-        std::fs::create_dir_all(&self.dir)?;
-        let entry = obj(vec![
-            ("format", ARTIFACT_CACHE_FORMAT.into()),
-            ("identity", id.into()),
-            ("artifact", a.to_json()),
-        ]);
-        std::fs::write(self.path_for(key), entry.to_string_pretty())
+        let pack = self.pack.as_ref().ok_or_else(|| {
+            std::io::Error::new(
+                std::io::ErrorKind::Other,
+                "artifact pack store unavailable",
+            )
+        })?;
+        pack.put(key, &id, a.to_json().to_string_compact().as_bytes())
+            .map_err(|e| std::io::Error::new(std::io::ErrorKind::Other, e))
     }
 }
 
@@ -968,12 +1027,52 @@ mod tests {
             "pattern counts separate"
         );
 
-        // corrupt entries read as misses and heal on re-store
-        let (key, _) = ArtifactCache::identity(&CIFAR10, &sampled);
-        std::fs::write(c.path_for(key), "{truncated").unwrap();
-        assert!(c.load(&CIFAR10, &sampled).is_none());
-        c.store(&CIFAR10, &sampled, &a).unwrap();
-        assert!(c.load(&CIFAR10, &sampled).is_some());
+        // a corrupt legacy entry (no pack record for this identity)
+        // reads as a miss and heals on re-store
+        let (key16, _) = ArtifactCache::identity(&CIFAR10, &s16);
+        std::fs::write(c.path_for(key16), "{truncated").unwrap();
+        assert!(c.load(&CIFAR10, &s16).is_none());
+        c.store(&CIFAR10, &s16, &a).unwrap();
+        assert!(c.load(&CIFAR10, &s16).is_some());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// The pack store supersedes the per-file JSON layout, but existing
+    /// entries must keep hitting: a legacy file is read, verified, and
+    /// migrated into the pack.
+    #[test]
+    fn artifact_cache_reads_and_migrates_legacy_json_entries() {
+        use crate::pruning::synthetic::CIFAR10;
+        let dir = std::env::temp_dir().join(format!(
+            "rram-artifact-legacy-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let cfg = ArtifactConfig {
+            seed: 42,
+            mode: TraceMode::Sampled(64),
+            threads: 2,
+        };
+        let a = bundle("cifar10", 1.25e6, 1.0e5);
+        // hand-write the historical pretty-printed per-file entry
+        let (key, id) = ArtifactCache::identity(&CIFAR10, &cfg);
+        let entry = obj(vec![
+            ("format", ARTIFACT_CACHE_FORMAT.into()),
+            ("identity", id.into()),
+            ("artifact", a.to_json()),
+        ]);
+        std::fs::write(
+            dir.join(format!("{key:016x}.json")),
+            entry.to_string_pretty(),
+        )
+        .unwrap();
+
+        let c = ArtifactCache::new(dir.clone());
+        assert_eq!(c.load(&CIFAR10, &cfg), Some(a.clone()), "legacy hit");
+        // migrated: remove the JSON file, the pack still serves it
+        std::fs::remove_file(c.path_for(key)).unwrap();
+        assert_eq!(c.load(&CIFAR10, &cfg), Some(a), "served from pack");
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

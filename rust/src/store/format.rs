@@ -1,0 +1,225 @@
+//! Record and index framing of the pack format — the byte-level half
+//! of [`crate::store`] (see the module doc there for the full layout
+//! specification). Everything here is pure: bytes in, records out, no
+//! I/O, so the framing is testable without touching a filesystem.
+
+use crate::util::fnv1a_bytes;
+
+/// Pack file magic: `RRPK`.
+pub const PACK_MAGIC: [u8; 4] = *b"RRPK";
+/// Index file magic: `RRIX`.
+pub const INDEX_MAGIC: [u8; 4] = *b"RRIX";
+/// Format version of both files. Bump on any layout change — the
+/// golden-pack test in `tests/store.rs` fails loudly if the bytes move
+/// without a bump.
+pub const FORMAT_VERSION: u32 = 1;
+/// Both file headers are magic (4) + u32 LE version.
+pub const HEADER_LEN: u64 = 8;
+/// Fixed record prefix: u64 key + u32 id_len + u32 payload_len.
+pub const RECORD_HEAD_LEN: usize = 16;
+/// Trailing u64 checksum per record.
+pub const RECORD_TAIL_LEN: usize = 8;
+/// One index entry: u64 key + u64 offset + u32 id_len + u32 payload_len.
+pub const INDEX_ENTRY_LEN: usize = 24;
+
+/// Sanity cap on identity strings (cache identities are well under
+/// 1 MiB); a corrupt length field must not drive an absurd allocation.
+pub const MAX_ID_LEN: u32 = 1 << 20;
+/// Sanity cap on payloads (the largest real payload — an artifact JSON
+/// bundle — is a few KiB; snapshots of 10^5-point grids are ~1 MiB).
+pub const MAX_PAYLOAD_LEN: u32 = 1 << 28;
+
+/// One decoded pack record.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Record {
+    pub key: u64,
+    pub id: String,
+    pub payload: Vec<u8>,
+}
+
+/// Total on-disk size of a record with the given id/payload lengths.
+pub fn record_len(id_len: u32, payload_len: u32) -> u64 {
+    RECORD_HEAD_LEN as u64
+        + id_len as u64
+        + payload_len as u64
+        + RECORD_TAIL_LEN as u64
+}
+
+/// Encode one record (head + id + payload + FNV-1a checksum over
+/// everything before the checksum).
+pub fn encode_record(key: u64, id: &str, payload: &[u8]) -> Vec<u8> {
+    let id_bytes = id.as_bytes();
+    let mut out = Vec::with_capacity(
+        record_len(id_bytes.len() as u32, payload.len() as u32) as usize,
+    );
+    out.extend_from_slice(&key.to_le_bytes());
+    out.extend_from_slice(&(id_bytes.len() as u32).to_le_bytes());
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(id_bytes);
+    out.extend_from_slice(payload);
+    let sum = fnv1a_bytes(&out);
+    out.extend_from_slice(&sum.to_le_bytes());
+    out
+}
+
+/// Decode the record starting at `buf[0]`. Returns the record and its
+/// total encoded length, or `None` on truncation, an out-of-range
+/// length field, a checksum mismatch, or a non-UTF-8 identity — any of
+/// which marks the end of the valid prefix during a pack scan.
+pub fn decode_record(buf: &[u8]) -> Option<(Record, u64)> {
+    if buf.len() < RECORD_HEAD_LEN {
+        return None;
+    }
+    let key = u64::from_le_bytes(buf[0..8].try_into().ok()?);
+    let id_len = u32::from_le_bytes(buf[8..12].try_into().ok()?);
+    let payload_len = u32::from_le_bytes(buf[12..16].try_into().ok()?);
+    if id_len > MAX_ID_LEN || payload_len > MAX_PAYLOAD_LEN {
+        return None;
+    }
+    let total = record_len(id_len, payload_len);
+    if (buf.len() as u64) < total {
+        return None;
+    }
+    let body_end = RECORD_HEAD_LEN + id_len as usize + payload_len as usize;
+    let want = fnv1a_bytes(&buf[..body_end]);
+    let got = u64::from_le_bytes(
+        buf[body_end..body_end + RECORD_TAIL_LEN].try_into().ok()?,
+    );
+    if want != got {
+        return None;
+    }
+    let id = std::str::from_utf8(&buf[RECORD_HEAD_LEN..RECORD_HEAD_LEN + id_len as usize])
+        .ok()?
+        .to_string();
+    let payload =
+        buf[RECORD_HEAD_LEN + id_len as usize..body_end].to_vec();
+    Some((Record { key, id, payload }, total))
+}
+
+/// One side-index entry: where a key's (latest) record starts in the
+/// pack, with the lengths needed to read it in one shot.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct IndexEntry {
+    pub key: u64,
+    pub offset: u64,
+    pub id_len: u32,
+    pub payload_len: u32,
+}
+
+impl IndexEntry {
+    /// End offset of the record this entry points at.
+    pub fn end(&self) -> u64 {
+        self.offset + record_len(self.id_len, self.payload_len)
+    }
+}
+
+/// Encode one index entry (24 bytes LE).
+pub fn encode_index_entry(e: &IndexEntry) -> [u8; INDEX_ENTRY_LEN] {
+    let mut out = [0u8; INDEX_ENTRY_LEN];
+    out[0..8].copy_from_slice(&e.key.to_le_bytes());
+    out[8..16].copy_from_slice(&e.offset.to_le_bytes());
+    out[16..20].copy_from_slice(&e.id_len.to_le_bytes());
+    out[20..24].copy_from_slice(&e.payload_len.to_le_bytes());
+    out
+}
+
+/// Decode one index entry; `None` on truncation (a partial trailing
+/// entry from an interrupted append is simply ignored).
+pub fn decode_index_entry(buf: &[u8]) -> Option<IndexEntry> {
+    if buf.len() < INDEX_ENTRY_LEN {
+        return None;
+    }
+    Some(IndexEntry {
+        key: u64::from_le_bytes(buf[0..8].try_into().ok()?),
+        offset: u64::from_le_bytes(buf[8..16].try_into().ok()?),
+        id_len: u32::from_le_bytes(buf[16..20].try_into().ok()?),
+        payload_len: u32::from_le_bytes(buf[20..24].try_into().ok()?),
+    })
+}
+
+/// The 8-byte header of either file.
+pub fn encode_header(magic: [u8; 4]) -> [u8; 8] {
+    let mut out = [0u8; 8];
+    out[0..4].copy_from_slice(&magic);
+    out[4..8].copy_from_slice(&FORMAT_VERSION.to_le_bytes());
+    out
+}
+
+/// Validate a file header against the expected magic; returns the
+/// format version on success.
+pub fn check_header(buf: &[u8], magic: [u8; 4]) -> Option<u32> {
+    if buf.len() < HEADER_LEN as usize || buf[0..4] != magic {
+        return None;
+    }
+    let version = u32::from_le_bytes(buf[4..8].try_into().ok()?);
+    if version != FORMAT_VERSION {
+        return None;
+    }
+    Some(version)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_roundtrips() {
+        let enc = encode_record(42, "hello", b"\x00\x01\xff");
+        let (rec, len) = decode_record(&enc).expect("decodes");
+        assert_eq!(len as usize, enc.len());
+        assert_eq!(rec.key, 42);
+        assert_eq!(rec.id, "hello");
+        assert_eq!(rec.payload, b"\x00\x01\xff");
+        // empty id and payload are legal
+        let enc = encode_record(0, "", b"");
+        let (rec, _) = decode_record(&enc).expect("empty record decodes");
+        assert_eq!(rec.id, "");
+        assert!(rec.payload.is_empty());
+    }
+
+    #[test]
+    fn corruption_is_detected() {
+        let enc = encode_record(7, "id", b"payload");
+        // every truncation fails
+        for cut in 0..enc.len() {
+            assert!(decode_record(&enc[..cut]).is_none(), "cut {cut}");
+        }
+        // any single flipped byte fails the checksum (or a length gate)
+        for i in 0..enc.len() {
+            let mut bad = enc.clone();
+            bad[i] ^= 0x5a;
+            assert!(decode_record(&bad).is_none(), "flip at {i}");
+        }
+    }
+
+    #[test]
+    fn length_fields_are_capped() {
+        let mut enc = encode_record(7, "id", b"p");
+        // forge an absurd id_len; the cap rejects it before allocating
+        enc[8..12].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(decode_record(&enc).is_none());
+        let mut enc = encode_record(7, "id", b"p");
+        enc[12..16].copy_from_slice(&(MAX_PAYLOAD_LEN + 1).to_le_bytes());
+        assert!(decode_record(&enc).is_none());
+    }
+
+    #[test]
+    fn index_entry_roundtrips() {
+        let e = IndexEntry { key: 9, offset: 8, id_len: 3, payload_len: 5 };
+        let enc = encode_index_entry(&e);
+        assert_eq!(decode_index_entry(&enc), Some(e));
+        assert_eq!(e.end(), 8 + record_len(3, 5));
+        assert!(decode_index_entry(&enc[..INDEX_ENTRY_LEN - 1]).is_none());
+    }
+
+    #[test]
+    fn headers_check_magic_and_version() {
+        let h = encode_header(PACK_MAGIC);
+        assert_eq!(check_header(&h, PACK_MAGIC), Some(FORMAT_VERSION));
+        assert_eq!(check_header(&h, INDEX_MAGIC), None, "wrong magic");
+        let mut bad = h;
+        bad[4] = 0xff;
+        assert_eq!(check_header(&bad, PACK_MAGIC), None, "wrong version");
+        assert_eq!(check_header(&h[..7], PACK_MAGIC), None, "truncated");
+    }
+}

@@ -1,0 +1,87 @@
+//! Unified content-addressed artifact store: one append-able **pack
+//! file** per cache domain plus a small **side index**, replacing the
+//! one-pretty-JSON-file-per-entry layout of `results/dse_cache/` and
+//! `results/paper_cache/`. At 10^4–10^5 DSE points the old layout
+//! meant one `open`+`Json::parse` per point per warm sweep; a pack is
+//! one read and one scan.
+//!
+//! Both caches ([`crate::dse::ResultCache`],
+//! [`crate::report::artifacts::ArtifactCache`]) sit on top of
+//! [`PackStore`] behind their existing APIs. Identity semantics are
+//! unchanged: the full identity string is stored *in* each record and
+//! verified on load, so an FNV key collision still degrades to a miss,
+//! never a wrong hit. Existing JSON cache entries remain readable
+//! through a legacy fallback in each cache (see `dse/cache.rs`).
+//!
+//! # On-disk format, byte for byte (version 1)
+//!
+//! All integers are **little-endian**. Hashes/checksums are FNV-1a 64
+//! ([`crate::util::fnv1a_bytes`]).
+//!
+//! ## Pack file (`<domain>.pack`)
+//!
+//! ```text
+//! offset  size  field
+//! 0       4     magic            "RRPK" (52 52 50 4b)
+//! 4       4     u32 version      = 1
+//! 8       ...   records, back to back, no padding
+//! ```
+//!
+//! Each record:
+//!
+//! ```text
+//! offset  size        field
+//! +0      8           u64 key          content hash of the identity string
+//! +8      4           u32 id_len       byte length of the identity string
+//! +12     4           u32 payload_len  byte length of the payload
+//! +16     id_len      id               identity string, UTF-8
+//! +...    payload_len payload          opaque bytes (domain-defined)
+//! +...    8           u64 checksum     FNV-1a 64 over the preceding
+//!                                      16 + id_len + payload_len bytes
+//! ```
+//!
+//! Records are append-only; re-storing a key appends a new record and
+//! **the last record for a key wins**. A write interrupted mid-append
+//! leaves a tail whose checksum (or framing) fails to verify; on the
+//! next open the pack is truncated back to the longest valid record
+//! prefix — the same "corrupt entry = miss, then overwrite" contract
+//! the per-file JSON caches had, minus the file-per-entry cost.
+//!
+//! ## Index file (`<domain>.idx`)
+//!
+//! ```text
+//! offset  size  field
+//! 0       4     magic        "RRIX" (52 52 49 58)
+//! 4       4     u32 version  = 1
+//! 8       24×n  entries
+//! ```
+//!
+//! Each entry (24 bytes):
+//!
+//! ```text
+//! offset  size  field
+//! +0      8     u64 key
+//! +8      8     u64 offset       start of the key's latest record in the pack
+//! +16     4     u32 id_len
+//! +20     4     u32 payload_len
+//! ```
+//!
+//! The index is **purely an accelerator and never authoritative**: on
+//! open it is cross-checked against a full pack scan, and on any
+//! disagreement (missing, corrupt, stale after a tail truncation,
+//! extra/missing keys) it is discarded and rebuilt from the pack.
+//! Fresh-key puts append their entry in put order; an overwrite or a
+//! rebuild rewrites the whole file in ascending key order (`BTreeMap`
+//! iteration). Either way the on-disk bytes are a deterministic
+//! function of the record history — the `no-unordered-iteration` lint
+//! rule covers this module for exactly that reason.
+//!
+//! The format is pinned by `tests/store.rs` against golden files
+//! (`tests/golden/store_v1.{pack,idx}`); any byte-level change must
+//! bump [`format::FORMAT_VERSION`] and regenerate the goldens.
+
+pub mod format;
+pub mod pack;
+
+pub use format::{FORMAT_VERSION, Record};
+pub use pack::{OpenStats, PackStore};

@@ -1,0 +1,470 @@
+//! `PackStore` — one append-able pack file plus a side index, fronted
+//! by an in-memory key map. All mutation goes through a single named
+//! [`crate::util::lockcheck::Mutex`], so a store handle can be cloned
+//! (`Arc` inside) and shared across sweep worker threads.
+//!
+//! Durability model (mirrors the per-file JSON caches it replaces):
+//! a put that is interrupted mid-append leaves a truncated tail record
+//! whose checksum cannot verify; `open` (and the next `put`) truncate
+//! back to the longest valid record prefix, so the pack self-heals at
+//! the cost of the interrupted record only. The side index is purely
+//! an accelerator — whenever it disagrees with the pack (stale, short,
+//! corrupt, or pointing at bytes that no longer verify), it is
+//! discarded and rebuilt from the pack, which is always authoritative.
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use crate::util::lockcheck::Mutex;
+
+use super::format::{
+    check_header, decode_index_entry, decode_record, encode_header,
+    encode_index_entry, encode_record, record_len, IndexEntry, Record,
+    HEADER_LEN, INDEX_ENTRY_LEN, INDEX_MAGIC, PACK_MAGIC,
+};
+
+/// Outcome counters for `open`, surfaced so tests (and curious humans
+/// via `--verbose` style probes) can see what recovery did.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct OpenStats {
+    /// Records live in the in-memory index after open.
+    pub live_records: usize,
+    /// Records found by scanning the pack beyond index coverage.
+    pub tail_scanned: usize,
+    /// True if the side index was unusable and rebuilt from the pack.
+    pub index_rebuilt: bool,
+    /// Bytes of corrupt/truncated tail dropped from the pack.
+    pub truncated_bytes: u64,
+}
+
+struct Inner {
+    pack_path: PathBuf,
+    idx_path: PathBuf,
+    /// key -> latest entry. BTreeMap so every iteration (index rewrite,
+    /// `keys`) is deterministic.
+    index: BTreeMap<u64, IndexEntry>,
+    /// Length of the valid pack prefix; appends go here.
+    pack_len: u64,
+    stats: OpenStats,
+}
+
+/// Handle to one pack-file cache domain. Cheap to clone; all clones
+/// share the same lock and in-memory index.
+#[derive(Clone)]
+pub struct PackStore {
+    inner: Arc<Mutex<Inner>>,
+}
+
+impl PackStore {
+    /// Open (creating if absent) the pack `<dir>/<name>.pack` and its
+    /// side index `<dir>/<name>.idx`. Never fails on corrupt content —
+    /// recovery truncates/rebuilds as described in the module doc.
+    /// Returns an error only for real I/O failures (unwritable dir).
+    pub fn open(dir: &str, name: &str) -> Result<PackStore, String> {
+        fs::create_dir_all(dir)
+            .map_err(|e| format!("store: create {dir}: {e}"))?;
+        let pack_path = Path::new(dir).join(format!("{name}.pack"));
+        let idx_path = Path::new(dir).join(format!("{name}.idx"));
+        let mut stats = OpenStats::default();
+
+        let pack_bytes = match fs::read(&pack_path) {
+            Ok(b) => b,
+            Err(_) => Vec::new(),
+        };
+        // A pack with a bad/missing header is treated as empty: the
+        // cache rebuilds from scratch rather than erroring, exactly
+        // like a corrupt per-file JSON entry was a miss before.
+        let usable = !pack_bytes.is_empty()
+            && check_header(&pack_bytes, PACK_MAGIC).is_some();
+        let (valid_len, records) = if usable {
+            scan_pack(&pack_bytes)
+        } else {
+            (HEADER_LEN, Vec::new())
+        };
+        if usable {
+            stats.truncated_bytes = pack_bytes.len() as u64 - valid_len;
+        }
+
+        // Load the side index and validate it against the pack scan.
+        let mut index = BTreeMap::new();
+        let mut index_ok = false;
+        if let Ok(idx_bytes) = fs::read(&idx_path) {
+            if let Some(loaded) = load_index(&idx_bytes, valid_len) {
+                // The index must agree with the authoritative pack:
+                // same key set, each entry pointing at a record that
+                // decodes to that key.
+                index_ok = index_matches_pack(&loaded, &records);
+                if index_ok {
+                    index = loaded;
+                }
+            }
+        }
+        if !index_ok {
+            stats.index_rebuilt =
+                idx_path.exists() || !records.is_empty();
+            index = records
+                .iter()
+                .map(|(off, r)| {
+                    (
+                        r.key,
+                        IndexEntry {
+                            key: r.key,
+                            offset: *off,
+                            id_len: r.id.len() as u32,
+                            payload_len: r.payload.len() as u32,
+                        },
+                    )
+                })
+                .collect();
+        }
+        stats.live_records = index.len();
+
+        let inner = Inner { pack_path, idx_path, index, pack_len: valid_len, stats };
+        // Materialise a healed pack/index on disk so the next open is
+        // clean. (No-op when nothing was truncated or rebuilt.)
+        if (!usable && !pack_bytes.is_empty()) || stats.truncated_bytes > 0 {
+            write_pack_prefix(&inner, if usable { &pack_bytes } else { &[] })?;
+        } else if !inner.pack_path.exists() {
+            write_pack_prefix(&inner, &[])?;
+        }
+        if !index_ok || !inner.idx_path.exists() {
+            rewrite_index(&inner)?;
+        }
+        Ok(PackStore { inner: Arc::new(Mutex::named("store.pack", inner)) })
+    }
+
+    /// Recovery counters from `open`.
+    pub fn open_stats(&self) -> OpenStats {
+        self.inner.lock().stats
+    }
+
+    /// Number of live (latest-version) records.
+    pub fn len(&self) -> usize {
+        self.inner.lock().index.len()
+    }
+
+    /// True when the store holds no records.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// All live keys, ascending (BTreeMap order — deterministic).
+    pub fn keys(&self) -> Vec<u64> {
+        self.inner.lock().index.keys().copied().collect()
+    }
+
+    /// Fetch the latest record for `key`, verifying the on-disk bytes
+    /// (checksum + key match). A record that fails verification is
+    /// treated as a miss and evicted from the in-memory index so a
+    /// subsequent `put` repairs it.
+    pub fn get(&self, key: u64) -> Option<Record> {
+        let mut inner = self.inner.lock();
+        let entry = *inner.index.get(&key)?;
+        match read_record_at(&inner.pack_path, entry) {
+            Some(rec) if rec.key == key => Some(rec),
+            _ => {
+                inner.index.remove(&key);
+                None
+            }
+        }
+    }
+
+    /// Append (or overwrite — last write wins) the record for `key`.
+    /// The pack is appended and the index entry written through to the
+    /// side file immediately.
+    pub fn put(&self, key: u64, id: &str, payload: &[u8]) -> Result<(), String> {
+        let mut inner = self.inner.lock();
+        let encoded = encode_record(key, id, payload);
+        let offset = inner.pack_len;
+        append_pack(&inner.pack_path, offset, &encoded)?;
+        inner.pack_len = offset + encoded.len() as u64;
+        let entry = IndexEntry {
+            key,
+            offset,
+            id_len: id.len() as u32,
+            payload_len: payload.len() as u32,
+        };
+        let fresh_key = inner.index.insert(key, entry).is_none();
+        if fresh_key {
+            append_index(&inner.idx_path, entry)?;
+        } else {
+            // Overwrite: the old entry for this key is now stale, so
+            // rewrite the (small) index wholesale to keep it 1:1 with
+            // live records.
+            rewrite_index(&inner)?;
+        }
+        Ok(())
+    }
+}
+
+impl std::fmt::Debug for PackStore {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let inner = self.inner.lock();
+        f.debug_struct("PackStore")
+            .field("pack", &inner.pack_path)
+            .field("live_records", &inner.index.len())
+            .field("pack_len", &inner.pack_len)
+            .finish()
+    }
+}
+
+/// Scan the pack body, returning the length of the longest valid
+/// prefix and every record in it (offset, record) in file order.
+fn scan_pack(bytes: &[u8]) -> (u64, Vec<(u64, Record)>) {
+    let mut offset = HEADER_LEN;
+    let mut records = Vec::new();
+    while (offset as usize) < bytes.len() {
+        match decode_record(&bytes[offset as usize..]) {
+            Some((rec, len)) => {
+                records.push((offset, rec));
+                offset += len;
+            }
+            None => break,
+        }
+    }
+    (offset, records)
+}
+
+/// Parse the side index file; `None` if the header is bad. Entries
+/// pointing past `pack_len` (stale index from before a tail
+/// truncation) invalidate the whole index. A truncated final entry is
+/// ignored (interrupted index append).
+fn load_index(bytes: &[u8], pack_len: u64) -> Option<BTreeMap<u64, IndexEntry>> {
+    check_header(bytes, INDEX_MAGIC)?;
+    let mut index = BTreeMap::new();
+    let mut at = HEADER_LEN as usize;
+    while at + INDEX_ENTRY_LEN <= bytes.len() {
+        let e = decode_index_entry(&bytes[at..])?;
+        if e.offset < HEADER_LEN || e.end() > pack_len {
+            return None;
+        }
+        index.insert(e.key, e);
+        at += INDEX_ENTRY_LEN;
+    }
+    Some(index)
+}
+
+/// True when the index is exactly the last-write-wins view of the
+/// scanned records: same key set, and each entry points at a record
+/// with that key and those lengths.
+fn index_matches_pack(
+    index: &BTreeMap<u64, IndexEntry>,
+    records: &[(u64, Record)],
+) -> bool {
+    let mut latest: BTreeMap<u64, (u64, &Record)> = BTreeMap::new();
+    for (off, rec) in records {
+        latest.insert(rec.key, (*off, rec));
+    }
+    if latest.len() != index.len() {
+        return false;
+    }
+    latest.iter().all(|(key, (off, rec))| match index.get(key) {
+        Some(e) => {
+            e.offset == *off
+                && e.id_len == rec.id.len() as u32
+                && e.payload_len == rec.payload.len() as u32
+        }
+        None => false,
+    })
+}
+
+/// Read and decode the record a (trusted-length) index entry points at.
+fn read_record_at(pack_path: &Path, entry: IndexEntry) -> Option<Record> {
+    use std::io::{Read as _, Seek as _, SeekFrom};
+    let mut f = fs::File::open(pack_path).ok()?;
+    f.seek(SeekFrom::Start(entry.offset)).ok()?;
+    let want = record_len(entry.id_len, entry.payload_len) as usize;
+    let mut buf = vec![0u8; want];
+    f.read_exact(&mut buf).ok()?;
+    let (rec, len) = decode_record(&buf)?;
+    if len as usize != want {
+        return None;
+    }
+    Some(rec)
+}
+
+/// Rewrite the pack as header + the valid prefix of `old_bytes`
+/// (callers pass the original file content, or empty to reset).
+fn write_pack_prefix(inner: &Inner, old_bytes: &[u8]) -> Result<(), String> {
+    let mut out = Vec::with_capacity(inner.pack_len as usize);
+    out.extend_from_slice(&encode_header(PACK_MAGIC));
+    if old_bytes.len() as u64 >= inner.pack_len && inner.pack_len > HEADER_LEN {
+        out.extend_from_slice(
+            &old_bytes[HEADER_LEN as usize..inner.pack_len as usize],
+        );
+    }
+    fs::write(&inner.pack_path, &out)
+        .map_err(|e| format!("store: write {:?}: {e}", inner.pack_path))
+}
+
+/// Rewrite the side index from the in-memory map (ascending key order).
+fn rewrite_index(inner: &Inner) -> Result<(), String> {
+    let mut out =
+        Vec::with_capacity(HEADER_LEN as usize + inner.index.len() * INDEX_ENTRY_LEN);
+    out.extend_from_slice(&encode_header(INDEX_MAGIC));
+    for e in inner.index.values() {
+        out.extend_from_slice(&encode_index_entry(e));
+    }
+    fs::write(&inner.idx_path, &out)
+        .map_err(|e| format!("store: write {:?}: {e}", inner.idx_path))
+}
+
+/// Append one encoded record at `offset`, truncating any corrupt tail
+/// first (offset is the end of the valid prefix by construction).
+fn append_pack(pack_path: &Path, offset: u64, encoded: &[u8]) -> Result<(), String> {
+    let f = fs::OpenOptions::new()
+        .write(true)
+        .create(true)
+        .open(pack_path)
+        .map_err(|e| format!("store: open {pack_path:?}: {e}"))?;
+    f.set_len(offset)
+        .map_err(|e| format!("store: truncate {pack_path:?}: {e}"))?;
+    let mut f = f;
+    use std::io::{Seek as _, SeekFrom};
+    f.seek(SeekFrom::Start(offset))
+        .map_err(|e| format!("store: seek {pack_path:?}: {e}"))?;
+    f.write_all(encoded)
+        .map_err(|e| format!("store: append {pack_path:?}: {e}"))
+}
+
+/// Append one index entry to the side file (fast path for new keys).
+fn append_index(idx_path: &Path, entry: IndexEntry) -> Result<(), String> {
+    let mut f = fs::OpenOptions::new()
+        .append(true)
+        .create(true)
+        .open(idx_path)
+        .map_err(|e| format!("store: open {idx_path:?}: {e}"))?;
+    f.write_all(&encode_index_entry(&entry))
+        .map_err(|e| format!("store: append {idx_path:?}: {e}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn temp_dir(tag: &str) -> String {
+        let dir = std::env::temp_dir().join(format!(
+            "rram_store_{tag}_{}",
+            std::process::id()
+        ));
+        let _ = fs::remove_dir_all(&dir);
+        dir.to_string_lossy().to_string()
+    }
+
+    #[test]
+    fn put_get_roundtrip_and_reopen() {
+        let dir = temp_dir("roundtrip");
+        let store = PackStore::open(&dir, "t").expect("open");
+        assert!(store.is_empty());
+        store.put(1, "one", b"alpha").expect("put");
+        store.put(2, "two", b"").expect("put");
+        assert_eq!(store.len(), 2);
+        let rec = store.get(1).expect("hit");
+        assert_eq!((rec.id.as_str(), rec.payload.as_slice()), ("one", &b"alpha"[..]));
+        assert!(store.get(3).is_none());
+        drop(store);
+        let store = PackStore::open(&dir, "t").expect("reopen");
+        assert_eq!(store.open_stats().live_records, 2);
+        assert!(!store.open_stats().index_rebuilt);
+        assert_eq!(store.get(2).expect("hit").payload, b"");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn last_write_wins() {
+        let dir = temp_dir("lww");
+        let store = PackStore::open(&dir, "t").expect("open");
+        store.put(5, "id", b"old").expect("put");
+        store.put(5, "id", b"new").expect("put");
+        assert_eq!(store.len(), 1);
+        assert_eq!(store.get(5).expect("hit").payload, b"new");
+        drop(store);
+        let store = PackStore::open(&dir, "t").expect("reopen");
+        assert_eq!(store.get(5).expect("hit").payload, b"new");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn truncated_tail_self_heals() {
+        let dir = temp_dir("heal");
+        let store = PackStore::open(&dir, "t").expect("open");
+        store.put(1, "keep", b"kept").expect("put");
+        store.put(2, "lose", b"interrupted").expect("put");
+        drop(store);
+        let pack = Path::new(&dir).join("t.pack");
+        let bytes = fs::read(&pack).expect("read pack");
+        fs::write(&pack, &bytes[..bytes.len() - 3]).expect("truncate");
+        let store = PackStore::open(&dir, "t").expect("reopen");
+        let stats = store.open_stats();
+        assert!(stats.truncated_bytes > 0, "tail was dropped");
+        assert_eq!(store.len(), 1);
+        assert_eq!(store.get(1).expect("survivor").payload, b"kept");
+        assert!(store.get(2).is_none());
+        // healed store accepts new writes and reopens cleanly
+        store.put(3, "next", b"fresh").expect("put after heal");
+        drop(store);
+        let store = PackStore::open(&dir, "t").expect("second reopen");
+        assert_eq!(store.open_stats().truncated_bytes, 0);
+        assert_eq!(store.len(), 2);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_index_rebuilds_from_pack() {
+        let dir = temp_dir("idx");
+        let store = PackStore::open(&dir, "t").expect("open");
+        store.put(7, "seven", b"payload7").expect("put");
+        store.put(8, "eight", b"payload8").expect("put");
+        drop(store);
+        let idx = Path::new(&dir).join("t.idx");
+        // garbage index: pack must win
+        fs::write(&idx, b"not an index at all").expect("corrupt idx");
+        let store = PackStore::open(&dir, "t").expect("reopen");
+        assert!(store.open_stats().index_rebuilt);
+        assert_eq!(store.len(), 2);
+        assert_eq!(store.get(7).expect("hit").payload, b"payload7");
+        // missing index also rebuilds
+        drop(store);
+        fs::remove_file(&idx).expect("rm idx");
+        let store = PackStore::open(&dir, "t").expect("reopen no idx");
+        assert_eq!(store.len(), 2);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn index_pack_disagreement_prefers_pack() {
+        let dir = temp_dir("disagree");
+        let store = PackStore::open(&dir, "t").expect("open");
+        store.put(1, "a", b"aa").expect("put");
+        drop(store);
+        // Forge an index claiming a key the pack doesn't have.
+        let idx = Path::new(&dir).join("t.idx");
+        let mut bytes = fs::read(&idx).expect("read idx");
+        let bogus = IndexEntry { key: 99, offset: HEADER_LEN, id_len: 1, payload_len: 2 };
+        bytes.extend_from_slice(&encode_index_entry(&bogus));
+        fs::write(&idx, &bytes).expect("forge idx");
+        let store = PackStore::open(&dir, "t").expect("reopen");
+        assert!(store.open_stats().index_rebuilt, "disagreement forces rebuild");
+        assert_eq!(store.keys(), vec![1]);
+        assert!(store.get(99).is_none());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn garbage_pack_resets_to_empty() {
+        let dir = temp_dir("garbage");
+        fs::create_dir_all(&dir).expect("mkdir");
+        fs::write(Path::new(&dir).join("t.pack"), b"complete nonsense")
+            .expect("garbage pack");
+        let store = PackStore::open(&dir, "t").expect("open");
+        assert!(store.is_empty());
+        store.put(1, "a", b"b").expect("put into reset store");
+        drop(store);
+        let store = PackStore::open(&dir, "t").expect("reopen");
+        assert_eq!(store.len(), 1);
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

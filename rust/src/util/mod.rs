@@ -17,8 +17,15 @@ pub mod threadpool;
 /// shared by the property-test seed derivation, the synthetic-weight
 /// profile seeding and the DSE result-cache keys.
 pub fn fnv1a(s: &str) -> u64 {
+    fnv1a_bytes(s.as_bytes())
+}
+
+/// FNV-1a 64-bit over raw bytes — the record checksum of the binary
+/// artifact store ([`crate::store`]). Identical to [`fnv1a`] on the
+/// string's UTF-8 bytes.
+pub fn fnv1a_bytes(bytes: &[u8]) -> u64 {
     let mut h: u64 = 0xcbf29ce484222325;
-    for b in s.bytes() {
+    for &b in bytes {
         h ^= b as u64;
         h = h.wrapping_mul(0x100000001b3);
     }

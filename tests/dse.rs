@@ -233,6 +233,130 @@ fn sampled_and_exact_sweeps_use_disjoint_cache_entries() {
     let _ = std::fs::remove_dir_all(cache.dir());
 }
 
+/// Backend byte-identity (ISSUE-8): a sweep over a legacy per-file JSON
+/// cache and a sweep over the binary pack store emit identical frontier
+/// bytes — and a binary-backend run over a legacy-seeded directory
+/// completes on cache hits (via the migration fallback), after which
+/// the JSON files are no longer needed.
+#[test]
+fn legacy_and_binary_backends_emit_identical_frontier_bytes() {
+    let dir = std::env::temp_dir()
+        .join(format!("rram-dse-test-backends-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let baseline = run(tiny_spec(42), 2, None);
+
+    // Seed the directory through the legacy writer.
+    let legacy = ResultCache::legacy_json(dir.clone());
+    assert!(!legacy.is_binary());
+    let seeded = SweepRunner {
+        spec: tiny_spec(42),
+        threads: 2,
+        cache: Some(legacy.clone()),
+    }
+    .run();
+    assert_eq!(seeded.cache_hits(), 0, "cold legacy cache");
+    assert_eq!(
+        seeded.frontier_json().to_string_pretty(),
+        baseline,
+        "legacy backend must emit the uncached frontier bytes"
+    );
+
+    // Binary backend over the same directory: every point served from
+    // the legacy JSON entries (and migrated into the pack).
+    let binary = ResultCache::new(dir.clone());
+    assert!(binary.is_binary());
+    let migrated = SweepRunner {
+        spec: tiny_spec(42),
+        threads: 2,
+        cache: Some(binary.clone()),
+    }
+    .run();
+    assert_eq!(
+        migrated.cache_misses(),
+        0,
+        "legacy entries must be served through the fallback"
+    );
+    assert_eq!(migrated.frontier_json().to_string_pretty(), baseline);
+
+    // The migration made the JSON files redundant: remove them and the
+    // next binary run still completes on hits, same bytes.
+    for f in std::fs::read_dir(&dir).unwrap() {
+        let f = f.unwrap().path();
+        if f.extension().is_some_and(|e| e == "json") {
+            std::fs::remove_file(f).unwrap();
+        }
+    }
+    let packed = SweepRunner {
+        spec: tiny_spec(42),
+        threads: 4,
+        cache: Some(ResultCache::new(dir.clone())),
+    }
+    .run();
+    assert_eq!(packed.cache_misses(), 0, "pack now holds every entry");
+    assert_eq!(packed.frontier_json().to_string_pretty(), baseline);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Warm-start byte-identity (ISSUE-8): `run_with(true)` seeds the
+/// frontier from the cache's snapshot; its artifact bytes must equal
+/// the cold extraction's — on the identical grid, on a grown grid
+/// (incremental update path), and on a shrunk grid (soundness
+/// fallback to full extraction).
+#[test]
+fn warm_started_frontier_is_bit_identical_to_cold() {
+    let cache = temp_cache("warm-start");
+
+    // Cold run populates the cache and stores the frontier snapshot.
+    let cold = SweepRunner {
+        spec: tiny_spec(42),
+        threads: 2,
+        cache: Some(cache.clone()),
+    }
+    .run();
+    let cold_bytes = cold.frontier_json().to_string_pretty();
+
+    // Identical grid, warm-started: all hits, identical bytes.
+    let warm = SweepRunner {
+        spec: tiny_spec(42),
+        threads: 4,
+        cache: Some(cache.clone()),
+    }
+    .run_with(true);
+    assert_eq!(warm.cache_misses(), 0);
+    assert_eq!(warm.frontier_json().to_string_pretty(), cold_bytes);
+
+    // Grown grid (an extra OU shape): the snapshot's covered set is a
+    // subset of the new grid, so the incremental update path runs; the
+    // artifact must match a from-scratch sweep of the grown grid.
+    let mut grown = tiny_spec(42);
+    grown.ou.push((16, 8));
+    let grown_fresh = run(grown.clone(), 2, None);
+    let grown_warm = SweepRunner {
+        spec: grown.clone(),
+        threads: 2,
+        cache: Some(cache.clone()),
+    }
+    .run_with(true);
+    assert!(grown_warm.cache_hits() > 0, "old points hit");
+    assert!(grown_warm.cache_misses() > 0, "new points evaluate");
+    assert_eq!(grown_warm.frontier_json().to_string_pretty(), grown_fresh);
+
+    // Shrunk grid: covered keys left the grid, the warm shortcut is
+    // unsound and must silently fall back to full extraction.
+    let mut shrunk = tiny_spec(42);
+    shrunk.ou.truncate(1);
+    let shrunk_fresh = run(shrunk.clone(), 2, None);
+    let shrunk_warm = SweepRunner {
+        spec: shrunk,
+        threads: 2,
+        cache: Some(cache.clone()),
+    }
+    .run_with(true);
+    assert_eq!(shrunk_warm.cache_misses(), 0, "subset grid is all hits");
+    assert_eq!(shrunk_warm.frontier_json().to_string_pretty(), shrunk_fresh);
+    let _ = std::fs::remove_dir_all(cache.dir());
+}
+
 /// Serving-bridge acceptance (ISSUE-5): `serve --auto-tune --tune-exact`
 /// boils down to (1) selecting a frontier point from an exact-mode
 /// sweep of the 48-point `small` grid and (2) building the pool's

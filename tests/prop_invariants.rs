@@ -566,6 +566,78 @@ fn prop_pareto_frontier_sound_complete_order_invariant() {
     });
 }
 
+/// ISSUE-8 extraction pin: the sort-based `from_results` is
+/// **bit-identical** (same member indices, same order) to the retired
+/// O(n²) pairwise pass kept as `from_results_oracle`, across random
+/// grids dense with ties, duplicates, signed zeros and skipped points —
+/// and the incremental `update` over a split result set reproduces the
+/// full extraction exactly.
+#[test]
+fn prop_fast_frontier_matches_oracle_and_update_matches_full() {
+    use rram_pattern_accel::dse::pareto::ParetoFrontier;
+    use rram_pattern_accel::dse::{PointMetrics, PointResult, SweepPoint};
+
+    fn mk(i: usize, outcome: Result<(f64, f64, f64), ()>) -> PointResult {
+        PointResult {
+            index: i,
+            point: SweepPoint {
+                scheme: "pattern".into(),
+                ou_rows: 9,
+                ou_cols: 8,
+                xbar_rows: 512,
+                xbar_cols: 512,
+                n_patterns: 8,
+                pruning: 0.86,
+                zero_detection: true,
+                block_switch_cycles: 2.0,
+            },
+            outcome: match outcome {
+                Ok((area, energy, cycles)) => Ok(PointMetrics {
+                    cycles,
+                    energy_pj: energy,
+                    area_cells: area,
+                    crossbars: 1,
+                    ou_ops: 1.0,
+                    utilization: 0.5,
+                }),
+                Err(()) => Err("skip".into()),
+            },
+            cache_hit: false,
+        }
+    }
+
+    fn coord(rng: &mut Rng) -> f64 {
+        // Small discrete range → heavy ties/duplicates; occasional -0.0
+        // exercises the total_cmp normalization.
+        if rng.chance(0.05) { -0.0 } else { rng.below(6) as f64 }
+    }
+
+    prop::check("pareto fast == oracle (integration)", prop::cases(64), |rng| {
+        let n = 1 + rng.below(120);
+        let results: Vec<PointResult> = (0..n)
+            .map(|i| {
+                let outcome = if rng.chance(0.1) {
+                    Err(())
+                } else {
+                    Ok((coord(rng), coord(rng), coord(rng)))
+                };
+                mk(i, outcome)
+            })
+            .collect();
+        let fast = ParetoFrontier::from_results(&results);
+        let oracle = ParetoFrontier::from_results_oracle(&results);
+        assert_eq!(fast.members, oracle.members, "extraction drifted");
+
+        // Warm-start path: frontier of a prefix, updated with the rest,
+        // equals the full extraction bit for bit.
+        let split = rng.below(n + 1);
+        let mut warm = ParetoFrontier::from_results(&results[..split]);
+        let rest: Vec<usize> = (split..n).collect();
+        warm.update(&results, &rest);
+        assert_eq!(warm.members, fast.members, "update drifted");
+    });
+}
+
 /// Weighted selection always lands on the frontier and responds to the
 /// weights: an all-area objective picks (one of) the minimum-area
 /// frontier point(s), likewise for energy and cycles.
