@@ -8,29 +8,37 @@
 //! handler. Every response must be a 200: a single non-200 under plain
 //! well-formed load is a correctness failure, not a perf number.
 //!
+//! ISSUE-9 runs the same load twice — tracing off (the default
+//! `CoordinatorConfig { trace: None }`, which keeps every span call
+//! inert) and tracing on (a live registry behind `/debug/trace`) — and
+//! reports both, so a tracing-layer regression on the hot path shows up
+//! as a gap between the two lines instead of silently taxing serving.
+//!
 //! Run: `cargo bench --bench http_load` (HTTP_LOAD_SECS overrides the
 //! 2 s default run length; the CI smoke job runs 1 s).
 
 use std::time::Duration;
 
 use rram_pattern_accel::coordinator::{Coordinator, CoordinatorConfig};
+use rram_pattern_accel::obs;
 use rram_pattern_accel::report;
-use rram_pattern_accel::serve_http::client::{run_load, LoadConfig};
+use rram_pattern_accel::serve_http::client::{run_load, LoadConfig, LoadReport};
 use rram_pattern_accel::serve_http::{HttpConfig, HttpServer, MockInferBackend};
-use rram_pattern_accel::util::json::obj;
+use rram_pattern_accel::util::clock;
+use rram_pattern_accel::util::json::{obj, Json};
 use rram_pattern_accel::util::threadpool;
 
 const INPUT_LEN: usize = 64;
 const CLIENTS: usize = 8;
 
-fn main() {
-    let secs: u64 = std::env::var("HTTP_LOAD_SECS")
-        .ok()
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(2);
-    let workers = threadpool::default_threads().min(4);
-
-    println!("ISSUE-7 — HTTP FRONT DOOR LOAD\n");
+/// One closed-loop run against a fresh server; `traced` wires a live
+/// span registry into the pool (the serve-http production default),
+/// `!traced` pins the zero-overhead path where every span site is
+/// inert.
+fn run_phase(traced: bool, secs: u64, workers: usize) -> LoadReport {
+    let trace = traced.then(|| {
+        obs::Registry::new(clock::monotonic(), obs::DEFAULT_RING_CAPACITY)
+    });
     let coord = Coordinator::start_pool(
         move |_worker| MockInferBackend {
             input_len: INPUT_LEN,
@@ -42,6 +50,7 @@ fn main() {
         CoordinatorConfig {
             max_wait: Duration::from_millis(1),
             workers,
+            trace,
             ..Default::default()
         },
         None,
@@ -65,35 +74,56 @@ fn main() {
         duration: Duration::from_secs(secs),
         body,
     };
-    println!(
-        "{CLIENTS} keep-alive clients -> {workers} worker(s), \
-         batch 8, 200 us backend latency, {secs}s run"
-    );
+    let label = if traced { "tracing on " } else { "tracing off" };
     let rep = run_load(&cfg);
-    println!("  {}", rep.line());
+    println!("  [{label}] {}", rep.line());
 
     let stats = server.http_stats();
     println!(
-        "  server side: {} connections, {} requests, {} bad, {} panics",
+        "  [{label}] server side: {} connections, {} requests, {} bad, {} panics",
         stats.connections, stats.requests, stats.bad_requests, stats.handler_panics
     );
     assert_eq!(rep.non_200, 0, "well-formed load must be all 200s");
     assert_eq!(stats.handler_panics, 0, "no handler may panic under load");
     assert!(rep.requests > 0, "load loop produced no requests");
+    server.shutdown();
+    rep
+}
 
-    let out = obj(vec![
-        ("bench", "http_load".into()),
-        ("clients", CLIENTS.into()),
-        ("workers", workers.into()),
-        ("duration_s", (secs as f64).into()),
+fn phase_json(rep: &LoadReport) -> Json {
+    obj(vec![
         ("requests", (rep.requests as f64).into()),
         ("rps", rep.rps().into()),
         ("latency_p50_us", rep.latencies_us.percentile(50.0).into()),
         ("latency_p99_us", rep.latencies_us.percentile(99.0).into()),
         ("latency_max_us", rep.latencies_us.max().into()),
         ("non_200", (rep.non_200 as f64).into()),
+    ])
+}
+
+fn main() {
+    let secs: u64 = std::env::var("HTTP_LOAD_SECS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(2);
+    let workers = threadpool::default_threads().min(4);
+
+    println!("ISSUE-7 — HTTP FRONT DOOR LOAD\n");
+    println!(
+        "{CLIENTS} keep-alive clients -> {workers} worker(s), \
+         batch 8, 200 us backend latency, {secs}s per phase"
+    );
+    let off = run_phase(false, secs, workers);
+    let on = run_phase(true, secs, workers);
+
+    let out = obj(vec![
+        ("bench", "http_load".into()),
+        ("clients", CLIENTS.into()),
+        ("workers", workers.into()),
+        ("duration_s", (secs as f64).into()),
+        ("tracing_off", phase_json(&off)),
+        ("tracing_on", phase_json(&on)),
     ]);
     report::write_json("bench_http_load.json", &out).expect("write");
     println!("\nwrote results/bench_http_load.json");
-    server.shutdown();
 }

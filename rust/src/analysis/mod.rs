@@ -17,7 +17,7 @@
 //!
 //! ### `no-unordered-iteration` (error)
 //! **Where:** serialization/hash-identity scopes — `src/report/`,
-//! `src/dse/`, `src/store/`, `src/util/json.rs`.
+//! `src/dse/`, `src/obs/`, `src/store/`, `src/util/json.rs`.
 //! **Why:** `HashMap`/`HashSet` iteration order varies run to run (and
 //! is seeded per-process by the std hasher), so any artifact or cache
 //! key built by iterating one is nondeterministic. Everything feeding
@@ -27,10 +27,13 @@
 //! sort the pairs first.
 //!
 //! ### `no-wall-clock-in-pure-paths` (error)
-//! **Where:** `src/sim/`, `src/dse/`, `src/report/`, `src/mapping/`.
+//! **Where:** `src/sim/`, `src/dse/`, `src/obs/`, `src/report/`,
+//! `src/mapping/`.
 //! **Why:** pure paths model time as cycle counts; an `Instant::now()`
 //! or `SystemTime` read makes outputs depend on host speed and breaks
-//! replay. The coordinator/serving edge and benches measure real
+//! replay. The tracing layer (`src/obs/`) records caller-supplied
+//! timestamps from an injected `util::clock::Clock` for the same
+//! reason. The coordinator/serving edge and benches measure real
 //! latency and are out of scope (or use a pragma).
 //! **Example:** `let t0 = Instant::now();` inside the simulator flags;
 //! derive durations from `HardwareConfig` cycle counts instead.

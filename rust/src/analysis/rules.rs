@@ -67,11 +67,26 @@ fn severity_of(id: &str) -> Severity {
 }
 
 /// Files whose output feeds serialized artifacts or hash identities:
-/// iteration order there must be deterministic.
-const SCOPE_SERIALIZATION: &[&str] =
-    &["src/report/", "src/dse/", "src/store/", "src/util/json.rs"];
+/// iteration order there must be deterministic. `src/obs/` is in scope
+/// because its Chrome-trace exporter and snapshot ordering feed
+/// byte-stable artifacts.
+const SCOPE_SERIALIZATION: &[&str] = &[
+    "src/report/",
+    "src/dse/",
+    "src/obs/",
+    "src/store/",
+    "src/util/json.rs",
+];
 /// Pure simulation/reporting paths — cycle-accurate, never wall-clock.
-const SCOPE_PURE: &[&str] = &["src/sim/", "src/dse/", "src/report/", "src/mapping/"];
+/// `src/obs/` is in scope too: spans carry caller-supplied timestamps
+/// (the injected `util::clock::Clock`), never their own clock reads.
+const SCOPE_PURE: &[&str] = &[
+    "src/sim/",
+    "src/dse/",
+    "src/obs/",
+    "src/report/",
+    "src/mapping/",
+];
 /// The blessed home of lock wrappers (lockcheck, threadpool, prop).
 const SCOPE_MUTEX_WRAPPERS: &[&str] = &["src/util/"];
 
@@ -416,6 +431,23 @@ mod tests {
         // mention in a comment or string never fires
         let commented = "// Instant::now is banned here\nlet s = \"SystemTime\";\n";
         assert!(run("rust/src/sim/mod.rs", commented).is_empty());
+    }
+
+    /// The tracing layer is covered by both the wall-clock and the
+    /// unordered-iteration scopes: spans must carry injected
+    /// timestamps, and the Chrome exporter feeds byte-stable artifacts.
+    #[test]
+    fn obs_is_in_pure_and_serialization_scope() {
+        let clock = "let t = std::time::Instant::now();\n";
+        assert_eq!(
+            rules_of(&run("rust/src/obs/span.rs", clock)),
+            vec![NO_WALL_CLOCK]
+        );
+        let hash = "use std::collections::HashMap;\n";
+        assert_eq!(
+            rules_of(&run("rust/src/obs/chrome.rs", hash)),
+            vec![NO_UNORDERED_ITERATION]
+        );
     }
 
     #[test]

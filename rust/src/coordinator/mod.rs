@@ -80,6 +80,7 @@ use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use crate::obs::{self, TraceCtx};
 use crate::sim::{CostCalibration, NetworkSimResult};
 use crate::util::lockcheck;
 use crate::util::stats::Summary;
@@ -290,6 +291,14 @@ pub struct CoordinatorConfig {
     /// total outstanding predicted cycles reach this limit
     /// (0 = unlimited).
     pub max_outstanding_cost: f64,
+    /// Tracing registry ([`obs::Registry`]). With one attached, every
+    /// submitted request gets a trace ID (unless the caller already
+    /// assigned one via [`Coordinator::submit_traced`]) and the
+    /// dispatcher/workers record `pool.admit` → `pool.queue` →
+    /// `pool.exec` spans (plus `pool.retry`/`pool.requeue` instants on
+    /// the failure paths) into its ring buffers. `None` (the default)
+    /// keeps the hot path free of clock reads and ring writes.
+    pub trace: Option<Arc<obs::Registry>>,
 }
 
 impl Default for CoordinatorConfig {
@@ -305,6 +314,7 @@ impl Default for CoordinatorConfig {
             quarantine_expiry: None,
             max_requeues: 1,
             max_outstanding_cost: 0.0,
+            trace: None,
         }
     }
 }
@@ -322,6 +332,13 @@ struct Request {
     /// Worker whose batch failure requeued it — avoided on re-dispatch
     /// while any alternative worker exists.
     exclude: Option<usize>,
+    /// Trace identity: the request-scoped trace ID (0 = untraced) and
+    /// the span the next pipeline stage nests under. Requeues keep the
+    /// trace ID — a rescued request stays one trace end to end.
+    trace: TraceCtx,
+    /// Submit time on the registry clock (µs), for queue spans whose
+    /// start predates the worker that records them. 0 when untraced.
+    t_submit_us: u64,
     reply: Sender<Reply>,
 }
 
@@ -348,6 +365,10 @@ pub struct Reply {
     /// Trace-derived cost estimate (present when the coordinator was
     /// started with a [`CostModel`]).
     pub cost: Option<CostEstimate>,
+    /// Trace ID the request was served under (0 when the pool runs
+    /// without an [`obs::Registry`]); the key for correlating this
+    /// reply with its spans in `/debug/trace`.
+    pub trace_id: u64,
 }
 
 impl Reply {
@@ -389,13 +410,67 @@ pub struct Metrics {
     /// predicted cost exceeded the configured limit (also counted in
     /// `failed_requests`).
     pub rejected_overload: AtomicU64,
+    /// Times a worker on this shard *entered* quarantine (the streak
+    /// crossed the threshold while not already quarantined).
+    pub quarantine_events: AtomicU64,
     /// Failure alarm — shared by every shard of one pool, so N workers
     /// trip at the same *total* failure count a single worker would.
     alarm: Arc<AlarmState>,
-    /// Latency samples. A `lockcheck::Mutex`: a worker that panics
-    /// mid-`push` must not wedge `merged_metrics`/`worker_stats` for
-    /// the surviving pool — `lock()` recovers the poisoned summary.
-    latencies_us: lockcheck::Mutex<Summary>,
+    /// Bounded latency/batch-fill accounting. A `lockcheck::Mutex`: a
+    /// worker that panics mid-record must not wedge
+    /// `merged_metrics`/`worker_stats` for the surviving pool —
+    /// `lock()` recovers the poisoned telemetry.
+    telemetry: lockcheck::Mutex<PoolTelemetry>,
+}
+
+/// O(1)-memory latency/queue-depth accounting for one metrics shard:
+/// fixed-bucket histograms for unbounded request counts, plus a
+/// deterministic first-K reservoir so small runs (and the test suite)
+/// keep exact quantiles. This replaced the grow-forever latency vector
+/// — memory no longer scales with requests served.
+#[derive(Debug, Clone)]
+struct PoolTelemetry {
+    latency: obs::FixedHistogram,
+    /// First [`obs::DEFAULT_RESERVOIR_CAP`] exact latency samples.
+    latency_exact: obs::Reservoir,
+    /// Requests per executed batch (queue-depth proxy).
+    batch_fill: obs::FixedHistogram,
+}
+
+impl PoolTelemetry {
+    fn new() -> PoolTelemetry {
+        PoolTelemetry {
+            latency: obs::FixedHistogram::new(obs::LATENCY_BOUNDS_US),
+            latency_exact: obs::Reservoir::new(obs::DEFAULT_RESERVOIR_CAP),
+            batch_fill: obs::FixedHistogram::new(obs::BATCH_FILL_BOUNDS),
+        }
+    }
+
+    fn record_latency(&mut self, us: f64) {
+        self.latency.record(us);
+        self.latency_exact.push(us);
+    }
+
+    fn merge(&mut self, other: &PoolTelemetry) {
+        self.latency.merge(&other.latency);
+        self.latency_exact.merge(&other.latency_exact);
+        self.batch_fill.merge(&other.batch_fill);
+    }
+
+    /// Latency quantile: exact (linear-interpolated over the retained
+    /// samples) while the reservoir still holds everything, histogram
+    /// interpolation after it saturates. `q` in percent (50.0, 99.0).
+    fn latency_percentile(&self, q: f64) -> f64 {
+        if self.latency.count() == 0 {
+            return 0.0;
+        }
+        if self.latency_exact.is_exact() {
+            Summary::from_values(self.latency_exact.values().to_vec())
+                .percentile(q)
+        } else {
+            self.latency.quantile(q / 100.0)
+        }
+    }
 }
 
 /// Plain-data view of one [`Metrics`] shard or a merged pool, produced
@@ -412,6 +487,8 @@ pub struct MetricsSnapshot {
     pub requeued_requests: u64,
     pub deadline_expired: u64,
     pub rejected_overload: u64,
+    /// Quarantine entries across the snapshotted shards.
+    pub quarantine_events: u64,
     pub alarm_threshold: u64,
     pub alarm_tripped: bool,
     pub latency_count: u64,
@@ -419,6 +496,13 @@ pub struct MetricsSnapshot {
     pub latency_p50_us: f64,
     pub latency_p99_us: f64,
     pub latency_max_us: f64,
+    /// Latency histogram, Prometheus cumulative form: `(le, count)`
+    /// per bucket, final bound `f64::INFINITY`. Sum of observations is
+    /// `latency_sum_us`.
+    pub latency_buckets: Vec<(f64, u64)>,
+    pub latency_sum_us: f64,
+    /// Requests-per-batch histogram in the same cumulative form.
+    pub batch_fill_buckets: Vec<(f64, u64)>,
 }
 
 /// Pool-wide failure-alarm state: the threshold plus the failure count
@@ -446,10 +530,11 @@ impl Default for Metrics {
             requeued_requests: AtomicU64::new(0),
             deadline_expired: AtomicU64::new(0),
             rejected_overload: AtomicU64::new(0),
+            quarantine_events: AtomicU64::new(0),
             alarm: Arc::default(),
-            latencies_us: lockcheck::Mutex::named(
-                "metrics.latencies_us",
-                Summary::new(),
+            telemetry: lockcheck::Mutex::named(
+                "metrics.telemetry",
+                PoolTelemetry::new(),
             ),
         }
     }
@@ -461,8 +546,23 @@ impl Metrics {
         Metrics { alarm, ..Default::default() }
     }
 
+    /// Record one terminal request latency (µs). O(1) time and memory:
+    /// one histogram bucket increment plus a bounded reservoir push.
+    pub fn record_latency_us(&self, us: f64) {
+        self.telemetry.lock().record_latency(us);
+    }
+
+    /// Record the fill of one executed batch.
+    pub fn record_batch_fill(&self, fill: usize) {
+        self.telemetry.lock().batch_fill.record(fill as f64);
+    }
+
+    /// Exact latency samples retained in the bounded reservoir (all
+    /// samples while under [`obs::DEFAULT_RESERVOIR_CAP`]; the first K
+    /// thereafter — deterministic, no sampling entropy). Use
+    /// [`Metrics::snapshot`] for totals once past the cap.
     pub fn latency_summary(&self) -> Summary {
-        self.latencies_us.lock().clone()
+        Summary::from_values(self.telemetry.lock().latency_exact.values().to_vec())
     }
 
     pub fn set_alarm_threshold(&self, n: u64) {
@@ -480,18 +580,19 @@ impl Metrics {
         t > 0 && self.alarm.failed.load(Ordering::Relaxed) >= t
     }
 
-    /// Merge shard views into one aggregate: counters sum, latency
-    /// samples concatenate, and the alarm threshold is the largest
-    /// shard threshold. Each terminal reply was recorded on exactly one
-    /// shard (and retried batches on the worker that re-ran them), so
-    /// summing never double-counts — pinned by the unit tests below.
+    /// Merge shard views into one aggregate: counters sum, histograms
+    /// add element-wise, reservoirs concatenate (bounded), and the
+    /// alarm threshold is the largest shard threshold. Each terminal
+    /// reply was recorded on exactly one shard (and retried batches on
+    /// the worker that re-ran them), so summing never double-counts —
+    /// pinned by the unit tests below.
     pub fn merge<'a, I>(shards: I) -> Metrics
     where
         I: IntoIterator<Item = &'a Metrics>,
     {
         let out = Metrics::default();
         let mut threshold = 0u64;
-        let mut latencies = Summary::new();
+        let mut telemetry = PoolTelemetry::new();
         for s in shards {
             let r = Ordering::Relaxed;
             out.requests.fetch_add(s.requests.load(r), r);
@@ -502,8 +603,10 @@ impl Metrics {
             out.requeued_requests.fetch_add(s.requeued_requests.load(r), r);
             out.deadline_expired.fetch_add(s.deadline_expired.load(r), r);
             out.rejected_overload.fetch_add(s.rejected_overload.load(r), r);
+            out.quarantine_events.fetch_add(s.quarantine_events.load(r), r);
             threshold = threshold.max(s.alarm_threshold());
-            latencies.merge(&s.latency_summary());
+            let shard_tel = s.telemetry.lock();
+            telemetry.merge(&shard_tel);
         }
         out.set_alarm_threshold(threshold);
         // the merged alarm is evaluated against the summed failures
@@ -511,7 +614,7 @@ impl Metrics {
         out.alarm
             .failed
             .store(out.failed_requests.load(Ordering::Relaxed), Ordering::Relaxed);
-        *out.latencies_us.lock() = latencies;
+        *out.telemetry.lock() = telemetry;
         out
     }
 
@@ -522,8 +625,7 @@ impl Metrics {
     /// atomics or the latency lock themselves.
     pub fn snapshot(&self) -> MetricsSnapshot {
         let r = Ordering::Relaxed;
-        let lat = self.latency_summary();
-        let pct = |q: f64| if lat.is_empty() { 0.0 } else { lat.percentile(q) };
+        let tel = self.telemetry.lock();
         MetricsSnapshot {
             requests: self.requests.load(r),
             failed_requests: self.failed_requests.load(r),
@@ -533,13 +635,19 @@ impl Metrics {
             requeued_requests: self.requeued_requests.load(r),
             deadline_expired: self.deadline_expired.load(r),
             rejected_overload: self.rejected_overload.load(r),
+            quarantine_events: self.quarantine_events.load(r),
             alarm_threshold: self.alarm_threshold(),
             alarm_tripped: self.failed_alarm(),
-            latency_count: lat.len() as u64,
-            latency_mean_us: if lat.is_empty() { 0.0 } else { lat.mean() },
-            latency_p50_us: pct(50.0),
-            latency_p99_us: pct(99.0),
-            latency_max_us: if lat.is_empty() { 0.0 } else { lat.max() },
+            // exact totals from the histogram (the reservoir is only a
+            // bounded sample; count/mean/max never degrade with volume)
+            latency_count: tel.latency.count(),
+            latency_mean_us: tel.latency.mean(),
+            latency_p50_us: tel.latency_percentile(50.0),
+            latency_p99_us: tel.latency_percentile(99.0),
+            latency_max_us: tel.latency.max(),
+            latency_buckets: tel.latency.buckets(),
+            latency_sum_us: tel.latency.sum(),
+            batch_fill_buckets: tel.batch_fill.buckets(),
         }
     }
 
@@ -630,6 +738,7 @@ impl WorkerState {
             let mut at = self.quarantined_at.lock();
             if at.is_none() {
                 *at = Some(Instant::now());
+                self.metrics.quarantine_events.fetch_add(1, Ordering::Relaxed);
             }
         }
     }
@@ -724,6 +833,7 @@ pub struct Coordinator {
     pub metrics: Arc<Metrics>,
     worker_shards: Vec<Arc<Metrics>>,
     worker_states: Vec<Arc<WorkerState>>,
+    trace: Option<Arc<obs::Registry>>,
     default_deadline: Option<Duration>,
     quarantine_after: u64,
     quarantine_expiry: Option<Duration>,
@@ -871,6 +981,7 @@ impl Coordinator {
             metrics: admission,
             worker_shards,
             worker_states,
+            trace: cfg.trace.clone(),
             default_deadline: cfg.default_deadline,
             quarantine_after: cfg.quarantine_after,
             quarantine_expiry: cfg.quarantine_expiry,
@@ -881,7 +992,7 @@ impl Coordinator {
 
     /// Submit one image; returns the channel the reply arrives on.
     pub fn submit(&self, image: Vec<f32>) -> Receiver<Reply> {
-        self.submit_inner(image, self.default_deadline)
+        self.submit_inner(image, self.default_deadline, TraceCtx::default())
     }
 
     /// Submit with an explicit completion deadline: the batcher
@@ -894,16 +1005,44 @@ impl Coordinator {
         image: Vec<f32>,
         deadline: Duration,
     ) -> Receiver<Reply> {
-        self.submit_inner(image, Some(deadline))
+        self.submit_inner(image, Some(deadline), TraceCtx::default())
+    }
+
+    /// Submit with an explicit trace context: the front door (HTTP
+    /// layer) opens the root span, assigns the trace ID, and hands it
+    /// in here so the pool's spans nest under the HTTP request's.
+    /// `deadline` of `None` falls back to the configured default. With
+    /// a zero trace ID (or no registry attached), behaves exactly like
+    /// [`Coordinator::submit`].
+    pub fn submit_traced(
+        &self,
+        image: Vec<f32>,
+        deadline: Option<Duration>,
+        ctx: TraceCtx,
+    ) -> Receiver<Reply> {
+        self.submit_inner(image, deadline.or(self.default_deadline), ctx)
     }
 
     fn submit_inner(
         &self,
         image: Vec<f32>,
         deadline: Option<Duration>,
+        ctx: TraceCtx,
     ) -> Receiver<Reply> {
         let (rtx, rrx) = channel();
         let now = Instant::now();
+        // Requests get their trace identity at this boundary: keep the
+        // caller's ID if the front door already assigned one, mint a
+        // fresh one otherwise (registry attached), stay untraced (0)
+        // without a registry.
+        let mut trace = ctx;
+        let mut t_submit_us = 0;
+        if let Some(reg) = &self.trace {
+            if trace.trace_id == 0 {
+                trace.trace_id = reg.new_trace();
+            }
+            t_submit_us = reg.now_us();
+        }
         let req = Request {
             image,
             submitted: now,
@@ -911,6 +1050,8 @@ impl Coordinator {
             cost: None,
             requeues: 0,
             exclude: None,
+            trace,
+            t_submit_us,
             reply: rtx,
         };
         // A send failure means the dispatcher exited; the caller sees
@@ -924,6 +1065,11 @@ impl Coordinator {
     /// Number of pool workers.
     pub fn n_workers(&self) -> usize {
         self.worker_states.len()
+    }
+
+    /// The tracing registry the pool was started with, if any.
+    pub fn trace_registry(&self) -> Option<&Arc<obs::Registry>> {
+        self.trace.as_ref()
     }
 
     /// Per-worker metrics shards, in worker order. With `workers == 1`
@@ -1005,6 +1151,7 @@ fn reject(r: Request, metrics: &Metrics, err: String, deadline: bool) {
         queue_us,
         batch_fill: 0,
         cost: r.cost,
+        trace_id: r.trace.trace_id,
     });
 }
 
@@ -1110,6 +1257,11 @@ fn dispatch_loop(
 ) {
     let mut rr = 0usize;
     let mut scratch: Vec<usize> = Vec::with_capacity(states.len());
+    // Tracing state for this dispatcher thread: its own ring, created
+    // once. Untraced pools (`cfg.trace` None) skip every span below at
+    // the cost of one Option check.
+    let trace = cfg.trace.clone();
+    let dbuf = trace.as_ref().map(|t| t.buffer("dispatch"));
 
     // Route one admitted request. Requeued requests skip the overload
     // gate: they were admitted once already, their original charge is
@@ -1120,12 +1272,19 @@ fn dispatch_loop(
                   requeued: bool,
                   rr: &mut usize,
                   scratch: &mut Vec<usize>| {
+        let admit_span = match &trace {
+            Some(t) => t.begin(r.trace.trace_id, r.trace.parent, "pool.admit"),
+            None => obs::ActiveSpan::INERT,
+        };
         if r.cost.is_none() {
             if let Some(m) = &cost_model {
                 r.cost = Some(m.estimate(&r.image));
             }
         }
-        let Some(r) = admit_deadline(r, &metrics) else {
+        let Some(mut r) = admit_deadline(r, &metrics) else {
+            if let (Some(t), Some(buf)) = (&trace, &dbuf) {
+                t.end(buf, admit_span, &[("admitted", 0)]);
+            }
             return;
         };
         // Cost-aware admission: reject outright when the pool's
@@ -1146,6 +1305,9 @@ fn dispatch_loop(
                     ),
                     false,
                 );
+                if let (Some(t), Some(buf)) = (&trace, &dbuf) {
+                    t.end(buf, admit_span, &[("admitted", 0)]);
+                }
                 return;
             }
         }
@@ -1159,6 +1321,11 @@ fn dispatch_loop(
             r.exclude,
             scratch,
         );
+        // Downstream spans (pool.queue/pool.exec on the worker) nest
+        // under this admission span.
+        if admit_span.is_recording() {
+            r.trace.parent = admit_span.span_id;
+        }
         states[wi].charge(r.cost);
         // A send failure means the worker thread died (e.g. backend
         // construction panicked): settle the charge and deliver a
@@ -1177,7 +1344,15 @@ fn dispatch_loop(
                 queue_us,
                 batch_fill: 0,
                 cost: r.cost,
+                trace_id: r.trace.trace_id,
             });
+        }
+        if let (Some(t), Some(buf)) = (&trace, &dbuf) {
+            t.end(
+                buf,
+                admit_span,
+                &[("admitted", 1), ("worker", wi as u64), ("requeued", requeued as u64)],
+            );
         }
     };
 
@@ -1277,6 +1452,11 @@ fn worker_loop<B: InferBackend>(
     let in_len = backend.input_len();
     let out_len = backend.output_len();
     let metrics = state.metrics.clone();
+    // This worker's own span ring; one find-or-create at startup.
+    let trace = cfg.trace.clone();
+    let wbuf = trace
+        .as_ref()
+        .map(|t| t.buffer(&format!("worker-{worker}")));
 
     // Worker-side admission: a request that sat in this worker's queue
     // past its deadline is rejected with a timely error (and its load
@@ -1338,9 +1518,11 @@ fn worker_loop<B: InferBackend>(
         metrics
             .padded_slots
             .fetch_add((bs - fill) as u64, Ordering::Relaxed);
+        metrics.record_batch_fill(fill);
 
         // Execute; a failed batch is re-run up to `max_retries` times on
         // this worker before the error is delivered to every requester.
+        let exec_start_us = trace.as_ref().map(|t| t.now_us()).unwrap_or(0);
         let mut outcome = backend.run_batch(&batch);
         let mut attempts = 0u32;
         while outcome.is_err() && attempts < cfg.max_retries {
@@ -1351,6 +1533,22 @@ fn worker_loop<B: InferBackend>(
                 outcome.as_ref().err().map(String::as_str).unwrap_or(""),
                 cfg.max_retries
             );
+            // Per-request retry instants: each trace in the batch sees
+            // its own marker (the batch spans several traces).
+            if let (Some(t), Some(buf)) = (&trace, &wbuf) {
+                for r in &pending {
+                    let now = t.now_us();
+                    t.record(
+                        buf,
+                        r.trace.trace_id,
+                        r.trace.parent,
+                        "pool.retry",
+                        now,
+                        0,
+                        &[("attempt", attempts as u64)],
+                    );
+                }
+            }
             outcome = backend.run_batch(&batch);
         }
 
@@ -1362,12 +1560,40 @@ fn worker_loop<B: InferBackend>(
                     let queue_us = r.submitted.elapsed().as_micros() as u64;
                     state.settle(r.cost);
                     metrics.requests.fetch_add(1, Ordering::Relaxed);
-                    metrics.latencies_us.lock().push(queue_us as f64);
+                    metrics.record_latency_us(queue_us as f64);
+                    // Two spans per served request: queue (submit →
+                    // execution start, under the admission span) and
+                    // exec (the batch run, under the queue span).
+                    if let (Some(t), Some(buf)) = (&trace, &wbuf) {
+                        let qid = t.record(
+                            buf,
+                            r.trace.trace_id,
+                            r.trace.parent,
+                            "pool.queue",
+                            r.t_submit_us,
+                            exec_start_us.saturating_sub(r.t_submit_us),
+                            &[],
+                        );
+                        let now = t.now_us();
+                        t.record(
+                            buf,
+                            r.trace.trace_id,
+                            qid,
+                            "pool.exec",
+                            exec_start_us,
+                            now.saturating_sub(exec_start_us),
+                            &[
+                                ("fill", fill as u64),
+                                ("attempts", attempts as u64 + 1),
+                            ],
+                        );
+                    }
                     let _ = r.reply.send(Reply {
                         result: Ok(logits),
                         queue_us,
                         batch_fill: fill,
                         cost: r.cost,
+                        trace_id: r.trace.trace_id,
                     });
                 }
             }
@@ -1390,6 +1616,23 @@ fn worker_loop<B: InferBackend>(
                         r.requeues += 1;
                         r.exclude = Some(worker);
                         let cost = r.cost;
+                        // Requeue instant: same trace ID — the rescued
+                        // request's whole journey stays one trace.
+                        if let (Some(t), Some(buf)) = (&trace, &wbuf) {
+                            let now = t.now_us();
+                            t.record(
+                                buf,
+                                r.trace.trace_id,
+                                r.trace.parent,
+                                "pool.requeue",
+                                now,
+                                0,
+                                &[
+                                    ("from_worker", worker as u64),
+                                    ("requeues", r.requeues as u64),
+                                ],
+                            );
+                        }
                         match qtx.send(r) {
                             Ok(()) => {
                                 // Send happens *before* settle: the
@@ -1419,6 +1662,7 @@ fn worker_loop<B: InferBackend>(
                         queue_us,
                         batch_fill: fill,
                         cost: r.cost,
+                        trace_id: r.trace.trace_id,
                     });
                 }
             }
@@ -1683,14 +1927,14 @@ mod tests {
         a.requests.store(3, Ordering::Relaxed);
         a.batches.store(2, Ordering::Relaxed);
         a.retried_batches.store(1, Ordering::Relaxed);
-        a.latencies_us.lock().push(10.0);
-        a.latencies_us.lock().push(20.0);
-        a.latencies_us.lock().push(30.0);
+        a.record_latency_us(10.0);
+        a.record_latency_us(20.0);
+        a.record_latency_us(30.0);
         b.requests.store(2, Ordering::Relaxed);
         b.failed_requests.store(1, Ordering::Relaxed);
         b.deadline_expired.store(1, Ordering::Relaxed);
         b.set_alarm_threshold(4);
-        b.latencies_us.lock().push(40.0);
+        b.record_latency_us(40.0);
         let m = Metrics::merge([&a, &b]);
         assert_eq!(m.requests.load(Ordering::Relaxed), 5);
         assert_eq!(m.batches.load(Ordering::Relaxed), 2);
@@ -1701,6 +1945,13 @@ mod tests {
         let lat = m.latency_summary();
         assert_eq!(lat.len(), 4);
         assert!((lat.mean() - 25.0).abs() < 1e-12);
+        // the histogram carries the same totals (exact count/mean even
+        // past the reservoir cap)
+        let snap = m.snapshot();
+        assert_eq!(snap.latency_count, 4);
+        assert!((snap.latency_mean_us - 25.0).abs() < 1e-12);
+        assert!((snap.latency_sum_us - 100.0).abs() < 1e-12);
+        assert_eq!(snap.latency_max_us, 40.0);
     }
 
     /// A worker that panics while holding the latency lock must not
@@ -1710,10 +1961,10 @@ mod tests {
     #[test]
     fn poisoned_latency_shard_does_not_wedge_survivors() {
         let a = Arc::new(Metrics::default());
-        a.latencies_us.lock().push(10.0);
+        a.record_latency_us(10.0);
         let shard = Arc::clone(&a);
         let worker = std::thread::spawn(move || {
-            let _guard = shard.latencies_us.lock();
+            let _guard = shard.telemetry.lock();
             panic!("worker dies holding the latency lock");
         });
         assert!(worker.join().is_err(), "worker must have panicked");
@@ -1721,9 +1972,9 @@ mod tests {
         // all three read paths survive the poisoned shard
         let summary = a.latency_summary();
         assert_eq!(summary.len(), 1);
-        a.latencies_us.lock().push(20.0);
+        a.record_latency_us(20.0);
         let b = Metrics::default();
-        b.latencies_us.lock().push(30.0);
+        b.record_latency_us(30.0);
         let merged = Metrics::merge([a.as_ref(), &b]);
         assert_eq!(merged.latency_summary().len(), 3);
     }
@@ -2019,13 +2270,19 @@ mod tests {
         assert_eq!(s.latency_p99_us, 0.0);
         assert_eq!(s.latency_max_us, 0.0);
         m.requests.fetch_add(3, Ordering::Relaxed);
-        m.latencies_us.lock().push(100.0);
-        m.latencies_us.lock().push(300.0);
+        m.record_latency_us(100.0);
+        m.record_latency_us(300.0);
         let s = m.snapshot();
         assert_eq!(s.requests, 3);
         assert_eq!(s.latency_count, 2);
         assert_eq!(s.latency_mean_us, 200.0);
         assert_eq!(s.latency_max_us, 300.0);
+        // exact p50 from the reservoir while it holds everything
+        assert_eq!(s.latency_p50_us, 200.0);
+        // cumulative buckets end at +Inf with the full count
+        let last = s.latency_buckets.last().unwrap();
+        assert!(last.0.is_infinite());
+        assert_eq!(last.1, 2);
     }
 
     /// Cross-worker requeue end to end: a pool where worker 0 always

@@ -341,7 +341,26 @@ impl ResultCache {
     }
 
     /// [`ResultCache::load`] with a pre-built sweep environment.
+    ///
+    /// Every call lands on exactly one of the process-wide
+    /// [`crate::obs::counters`] DSE-cache tallies (hit or miss), which
+    /// the `/metrics` exposition exports.
     pub fn load_with(
+        &self,
+        env: &CacheEnv,
+        w: &Workload,
+        p: &SweepPoint,
+    ) -> Option<PointMetrics> {
+        let got = self.load_with_uncounted(env, w, p);
+        if got.is_some() {
+            crate::obs::counters::dse_cache_hit();
+        } else {
+            crate::obs::counters::dse_cache_miss();
+        }
+        got
+    }
+
+    fn load_with_uncounted(
         &self,
         env: &CacheEnv,
         w: &Workload,

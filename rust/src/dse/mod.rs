@@ -41,7 +41,7 @@ pub use pareto::{
     select_config, sensitivity, AxisSensitivity, Objective, ParetoFrontier,
     TunedConfig,
 };
-pub use runner::{SweepOutcome, SweepRunner};
+pub use runner::{SweepOutcome, SweepRunner, SweepStage};
 
 use crate::config::HardwareConfig;
 use crate::nn::{ConvLayer, NetworkSpec};

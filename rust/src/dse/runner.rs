@@ -94,6 +94,47 @@ pub fn evaluate_point(w: &Workload, p: &SweepPoint) -> Result<PointMetrics, Stri
     })
 }
 
+/// The sequential stages of one sweep run, in execution order. The
+/// runner reports stage boundaries through the
+/// [`SweepRunner::run_observed`] callback; it never reads a clock
+/// itself (the `dse` module is a wall-clock-free pure path — timing,
+/// when wanted, is measured by the caller at the CLI boundary).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SweepStage {
+    /// Grid expansion ([`SweepSpec::expand`]).
+    Expand,
+    /// Cache-environment construction ([`CacheEnv::for_sweep`]).
+    Cache,
+    /// The parallel point fan-out (cache load → evaluate → store).
+    Evaluate,
+    /// Pareto frontier extraction (full or warm-started).
+    Frontier,
+    /// Frontier snapshot persistence for future warm starts.
+    Snapshot,
+}
+
+impl SweepStage {
+    /// Every stage, in the order `run_observed` visits them.
+    pub const ALL: [SweepStage; 5] = [
+        SweepStage::Expand,
+        SweepStage::Cache,
+        SweepStage::Evaluate,
+        SweepStage::Frontier,
+        SweepStage::Snapshot,
+    ];
+
+    /// Stable lowercase stage name (profile JSON key).
+    pub fn name(self) -> &'static str {
+        match self {
+            SweepStage::Expand => "expand",
+            SweepStage::Cache => "cache",
+            SweepStage::Evaluate => "evaluate",
+            SweepStage::Frontier => "frontier",
+            SweepStage::Snapshot => "snapshot",
+        }
+    }
+}
+
 /// A configured sweep, ready to run.
 pub struct SweepRunner {
     pub spec: SweepSpec,
@@ -128,10 +169,30 @@ impl SweepRunner {
     /// bit-identical members, so the frontier artifact does not depend
     /// on the flag.
     pub fn run_with(&self, warm_start: bool) -> SweepOutcome {
+        self.run_observed(warm_start, &mut |_, _| {})
+    }
+
+    /// [`SweepRunner::run_with`] with a stage-boundary observer:
+    /// `on_stage(stage, true)` fires when a stage begins and
+    /// `on_stage(stage, false)` when it ends, always from the calling
+    /// thread, always in [`SweepStage::ALL`] order, always strictly
+    /// paired. The runner itself stays wall-clock-free — callers that
+    /// want a timing profile (`rram-accel dse --profile`) read their
+    /// own clock inside the callback.
+    pub fn run_observed(
+        &self,
+        warm_start: bool,
+        on_stage: &mut dyn FnMut(SweepStage, bool),
+    ) -> SweepOutcome {
+        on_stage(SweepStage::Expand, true);
         let points = self.spec.expand();
+        on_stage(SweepStage::Expand, false);
         let w = &self.spec.workload;
         let cache = self.cache.as_ref();
+        on_stage(SweepStage::Cache, true);
         let env = cache.map(|_| CacheEnv::for_sweep(w, &points));
+        on_stage(SweepStage::Cache, false);
+        on_stage(SweepStage::Evaluate, true);
         let results = threadpool::parallel_map_indexed(
             &points,
             self.threads.max(1),
@@ -161,11 +222,15 @@ impl SweepRunner {
                 PointResult { index: i, point: p.clone(), outcome, cache_hit: false }
             },
         );
+        on_stage(SweepStage::Evaluate, false);
+        on_stage(SweepStage::Frontier, true);
         let frontier = match (warm_start, cache, env.as_ref()) {
             (true, Some(c), Some(env)) => warm_frontier(c, env, w, &results)
                 .unwrap_or_else(|| ParetoFrontier::from_results(&results)),
             _ => ParetoFrontier::from_results(&results),
         };
+        on_stage(SweepStage::Frontier, false);
+        on_stage(SweepStage::Snapshot, true);
         if let (Some(c), Some(env)) = (cache, env.as_ref()) {
             let snap = FrontierSnapshot {
                 covered: results
@@ -183,6 +248,7 @@ impl SweepRunner {
                 eprintln!("[dse] frontier snapshot write failed: {e}");
             }
         }
+        on_stage(SweepStage::Snapshot, false);
         SweepOutcome { spec: self.spec.clone(), results, frontier }
     }
 }
@@ -390,6 +456,25 @@ mod tests {
         let bs = evaluate_point(w, &p_bs).unwrap();
         assert_eq!(bs.ou_ops, on.ou_ops);
         assert!(bs.cycles >= on.cycles);
+    }
+
+    #[test]
+    fn run_observed_emits_paired_stages_in_fixed_order() {
+        let runner = SweepRunner { spec: tiny_spec(), threads: 2, cache: None };
+        let mut events: Vec<(SweepStage, bool)> = Vec::new();
+        let observed =
+            runner.run_observed(false, &mut |s, begin| events.push((s, begin)));
+        // begin/end strictly paired, in SweepStage::ALL order
+        assert_eq!(events.len(), 2 * SweepStage::ALL.len());
+        for (i, stage) in SweepStage::ALL.iter().enumerate() {
+            assert_eq!(events[2 * i], (*stage, true), "{events:?}");
+            assert_eq!(events[2 * i + 1], (*stage, false), "{events:?}");
+        }
+        // the observer changes nothing about the outcome
+        let plain = runner.run_with(false);
+        assert_eq!(observed.frontier.members, plain.frontier.members);
+        assert_eq!(observed.evaluated(), plain.evaluated());
+        assert_eq!(SweepStage::Evaluate.name(), "evaluate");
     }
 
     #[test]

@@ -15,7 +15,8 @@
 //! mapping/OU/crossbar configurations and auto-tunes the serving stack
 //! from the Pareto frontier ([`dse`]), a binary content-addressed
 //! artifact store backing the sweep and report caches ([`store`]),
-//! report generation for every
+//! an end-to-end tracing and histogram-metrics layer spanning the
+//! serving pipeline ([`obs`]), report generation for every
 //! paper table and figure ([`report`]), and small from-scratch
 //! utilities ([`util`]) standing in for crates unavailable in this
 //! offline image.
@@ -35,6 +36,7 @@ pub mod coordinator;
 pub mod dse;
 pub mod mapping;
 pub mod nn;
+pub mod obs;
 pub mod pruning;
 pub mod report;
 pub mod runtime;

@@ -13,7 +13,9 @@
 //!               `--zd`/`--block-switch` simulation-policy axes and
 //!               `--exact` trace mode), Pareto frontier as table +
 //!               results/<out>.{json,csv}, cached under
-//!               results/dse_cache/
+//!               results/dse_cache/; `--profile` times the sweep's
+//!               stages from the CLI side (the dse module itself stays
+//!               wall-clock-free) and writes results/dse_profile.json
 //!   serve     — start the sharded serving coordinator over the PJRT
 //!               artifact (`--workers N --balance cost|rr`, per-request
 //!               cost estimates calibrated from exact traces,
@@ -21,12 +23,17 @@
 //!               `--auto-tune [--tune-exact]` builds the pool config
 //!               from the DSE frontier winner)
 //!   serve-http — production HTTP/1.1 front door over the coordinator
-//!               (`POST /v1/infer`, `GET /metrics`, `GET /healthz`;
-//!               std-only server in `rram_pattern_accel::serve_http`
-//!               with bounded request reading and a lazy JSON field
-//!               scanner; `--backend mock` serves without the PJRT
-//!               runtime, `--auto-tune` builds the pool from the DSE
-//!               frontier winner)
+//!               (`POST /v1/infer`, `GET /metrics`, `GET /healthz`,
+//!               `GET /debug/trace`; std-only server in
+//!               `rram_pattern_accel::serve_http` with bounded request
+//!               reading and a lazy JSON field scanner; every request
+//!               is traced end to end through the `obs` registry;
+//!               `--backend mock` serves without the PJRT runtime,
+//!               `--auto-tune` builds the pool from the DSE frontier
+//!               winner)
+//!   trace     — run a traced mock-pool session and export the spans as
+//!               Chrome trace-event JSON (load into Perfetto /
+//!               chrome://tracing); results/trace.json by default
 //!   e2e       — run the SmallCNN end-to-end check (golden + accuracy)
 //!   report    — print every paper table/figure (sampled mode)
 //!   artifacts — run every paper figure in sampled AND exact trace mode
@@ -49,13 +56,14 @@ use rram_pattern_accel::coordinator::{
     BalancePolicy, Coordinator, CoordinatorConfig, CostModel, PjrtBackend,
 };
 use rram_pattern_accel::dse::{
-    self, Objective, ResultCache, SweepRunner, SweepSpec,
+    self, Objective, ResultCache, SweepRunner, SweepSpec, SweepStage,
 };
 use rram_pattern_accel::mapping::{
     index, naive::NaiveMapping, pattern::PatternMapping, scheme_by_name,
     MappingScheme,
 };
 use rram_pattern_accel::nn::{NetworkSpec, Tensor};
+use rram_pattern_accel::obs;
 use rram_pattern_accel::pruning::synthetic::{DatasetProfile, ALL_PROFILES};
 use rram_pattern_accel::report::{
     self,
@@ -82,6 +90,7 @@ fn main() {
         "dse" => cmd_dse(rest),
         "serve" => cmd_serve(rest),
         "serve-http" => cmd_serve_http(rest),
+        "trace" => cmd_trace(rest),
         "e2e" => cmd_e2e(rest),
         "report" => cmd_report(rest),
         "artifacts" => cmd_artifacts(rest),
@@ -89,7 +98,7 @@ fn main() {
         _ => {
             eprintln!(
                 "usage: rram-accel <map|simulate|batch-sim|dse|serve|\
-                 serve-http|e2e|report|artifacts|lint> [options]\n\
+                 serve-http|trace|e2e|report|artifacts|lint> [options]\n\
                  run a subcommand with --help for its options"
             );
             if sub == "help" { 0 } else { 2 }
@@ -386,6 +395,11 @@ fn cmd_dse(rest: Vec<String>) -> i32 {
          (same frontier bytes, less extraction work)",
     )
     .flag("sensitivity", "print the per-axis sensitivity summary")
+    .flag(
+        "profile",
+        "time the sweep stages (expand/cache/evaluate/frontier/snapshot) \
+         from the CLI side and write results/dse_profile.json",
+    )
     .parse(rest)
     {
         Ok(a) => a,
@@ -454,7 +468,60 @@ fn cmd_dse(rest: Vec<String>) -> i32 {
         if spec.workload.exact { "exact" } else { "sampled" },
     );
     let warm_start = args.get_flag("warm-start");
-    let outcome = SweepRunner { spec, threads, cache }.run_with(warm_start);
+    let runner = SweepRunner { spec, threads, cache };
+    let mut profile_json = None;
+    let outcome = if args.get_flag("profile") {
+        // Stage timing is measured here, at the CLI boundary: the dse
+        // module is a wall-clock-free pure path, so the runner only
+        // reports logical stage boundaries and this closure reads the
+        // clock around them.
+        let t0 = std::time::Instant::now();
+        let n_stages = SweepStage::ALL.len();
+        let mut begin_us = vec![0u64; n_stages];
+        let mut wall_us = vec![0u64; n_stages];
+        let outcome = runner.run_observed(warm_start, &mut |stage, begin| {
+            let i = SweepStage::ALL
+                .iter()
+                .position(|s| *s == stage)
+                .expect("stage in ALL");
+            let t = t0.elapsed().as_micros() as u64;
+            if begin {
+                begin_us[i] = t;
+            } else {
+                wall_us[i] += t.saturating_sub(begin_us[i]);
+            }
+        });
+        let stages: Vec<rram_pattern_accel::util::json::Json> = SweepStage::ALL
+            .iter()
+            .enumerate()
+            .map(|(i, s)| {
+                rram_pattern_accel::util::json::obj(vec![
+                    ("name", s.name().into()),
+                    ("wall_us", (wall_us[i] as f64).into()),
+                ])
+            })
+            .collect();
+        profile_json = Some(rram_pattern_accel::util::json::obj(vec![
+            ("grid", outcome.spec.grid.as_str().into()),
+            ("points", outcome.results.len().into()),
+            (
+                "stages",
+                rram_pattern_accel::util::json::Json::Arr(stages),
+            ),
+            (
+                "logical",
+                rram_pattern_accel::util::json::obj(vec![
+                    ("cache_hits", outcome.cache_hits().into()),
+                    ("cache_misses", outcome.cache_misses().into()),
+                    ("evaluated", outcome.evaluated().into()),
+                    ("skipped", outcome.skipped().into()),
+                ]),
+            ),
+        ]));
+        outcome
+    } else {
+        runner.run_with(warm_start)
+    };
     println!("{}", outcome.summary_line());
     print!("{}", outcome.frontier.table(&outcome.results));
     if args.get_flag("sensitivity") {
@@ -491,6 +558,15 @@ fn cmd_dse(rest: Vec<String>) -> i32 {
         Err(e) => {
             write_ok = false;
             eprintln!("write results/{csv_name}: {e}");
+        }
+    }
+    if let Some(pj) = &profile_json {
+        match report::write_json("dse_profile.json", pj) {
+            Ok(()) => println!("wrote results/dse_profile.json"),
+            Err(e) => {
+                write_ok = false;
+                eprintln!("write results/dse_profile.json: {e}");
+            }
         }
     }
     if outcome.frontier.is_empty() {
@@ -863,10 +939,18 @@ fn cmd_serve_http(rest: Vec<String>) -> i32 {
         other => return usage(format!("unknown balance policy {other}")),
     };
     let deadline_ms = args.get_usize("deadline-ms").unwrap_or(0);
+    // Always serve with tracing on: the registry's ring buffers are
+    // bounded and write-cheap, and `GET /debug/trace` only works when
+    // the pool was started with one.
+    let trace_registry = obs::Registry::new(
+        rram_pattern_accel::util::clock::monotonic(),
+        obs::DEFAULT_RING_CAPACITY,
+    );
     let cfg = CoordinatorConfig {
         max_wait: Duration::from_millis(
             args.get_usize("max-wait-ms").unwrap_or(2) as u64
         ),
+        trace: Some(trace_registry),
         default_deadline: if deadline_ms == 0 {
             None
         } else {
@@ -1039,6 +1123,84 @@ fn cmd_serve_http(rest: Vec<String>) -> i32 {
     }
     loop {
         std::thread::sleep(Duration::from_secs(3600));
+    }
+}
+
+/// `rram-accel trace` — drive a traced mock-pool session and export the
+/// collected spans as Chrome trace-event JSON, loadable in Perfetto or
+/// chrome://tracing. This is the offline counterpart of the live
+/// `GET /debug/trace` endpoint: same span schema, same exporter, no
+/// server required.
+fn cmd_trace(rest: Vec<String>) -> i32 {
+    let args = match Args::new(
+        "run a traced mock-pool session and export Chrome trace-event JSON",
+    )
+    .opt("requests", "16", "demo requests to trace")
+    .opt("workers", "2", "pool size: worker threads, one backend each")
+    .opt("input-len", "64", "mock backend: image element count")
+    .opt("mock-delay-us", "50", "mock backend: per-batch latency in us")
+    .opt("out", "trace.json", "artifact name under results/")
+    .parse(rest)
+    {
+        Ok(a) => a,
+        Err(e) => return usage(e),
+    };
+    let n = args.get_usize("requests").unwrap_or(16).max(1);
+    let workers = args.get_usize("workers").unwrap_or(2).max(1);
+    let input_len = args.get_usize("input-len").unwrap_or(64).max(1);
+    let delay =
+        Duration::from_micros(args.get_u64("mock-delay-us").unwrap_or(50));
+
+    let registry = obs::Registry::new(
+        rram_pattern_accel::util::clock::monotonic(),
+        obs::DEFAULT_RING_CAPACITY,
+    );
+    let coord = Coordinator::start_pool(
+        move |_worker| MockInferBackend {
+            input_len,
+            output_len: 10,
+            batch: 8,
+            delay,
+            fail: false,
+        },
+        CoordinatorConfig {
+            workers,
+            trace: Some(registry.clone()),
+            ..Default::default()
+        },
+        None,
+    );
+    let rxs: Vec<_> = (0..n)
+        .map(|i| coord.submit(vec![(i % 7) as f32; input_len]))
+        .collect();
+    let mut failed = 0usize;
+    for rx in rxs {
+        match rx.recv() {
+            Ok(reply) if reply.result.is_ok() => {}
+            _ => failed += 1,
+        }
+    }
+    coord.shutdown();
+
+    let spans = registry.snapshot();
+    let j = obs::chrome_trace_json(&spans);
+    let out = args.get("out").to_string();
+    println!(
+        "[trace] {} requests ({failed} failed) on {workers} worker(s): \
+         {} spans across {} ring buffer(s)",
+        n,
+        spans.len(),
+        registry.buffers().len(),
+    );
+    match report::write_json(&out, &j) {
+        Ok(()) => {
+            println!("wrote results/{out}");
+            0
+        }
+        Err(e) => {
+            eprintln!("write results/{out}: {e}");
+            1
+        }
     }
 }
 

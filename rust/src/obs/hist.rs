@@ -1,0 +1,309 @@
+//! Fixed-bucket histograms and a bounded reservoir.
+//!
+//! [`FixedHistogram`] replaces the grow-forever latency vector the
+//! pool metrics used to carry: memory is O(buckets) regardless of how
+//! many observations are recorded, recording is one binary search plus
+//! three adds, and merging is element-wise. Bucket bounds are static
+//! slices chosen at construction ([`LATENCY_BOUNDS_US`],
+//! [`BATCH_FILL_BOUNDS`]) so merged histograms always agree on shape.
+//!
+//! [`Reservoir`] keeps the first `cap` observations exactly
+//! (deterministic — no sampling RNG, per the repo's no-ambient-entropy
+//! rule). Tests and small runs get exact quantiles from it; once it
+//! saturates, callers fall back to histogram interpolation.
+
+/// Latency bucket upper bounds, microseconds. Log-spaced from 50 µs to
+/// 10 s; observations above the last bound land in the overflow
+/// bucket.
+pub const LATENCY_BOUNDS_US: &[f64] = &[
+    50.0,
+    100.0,
+    250.0,
+    500.0,
+    1_000.0,
+    2_500.0,
+    5_000.0,
+    10_000.0,
+    25_000.0,
+    50_000.0,
+    100_000.0,
+    250_000.0,
+    500_000.0,
+    1_000_000.0,
+    2_500_000.0,
+    10_000_000.0,
+];
+
+/// Batch-fill bucket upper bounds (requests per batch).
+pub const BATCH_FILL_BOUNDS: &[f64] = &[1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0];
+
+/// Default exact-quantile reservoir capacity.
+pub const DEFAULT_RESERVOIR_CAP: usize = 4096;
+
+/// Cumulative-bucket histogram over a static set of upper bounds.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FixedHistogram {
+    bounds: &'static [f64],
+    /// Per-bucket (non-cumulative) counts; last slot is overflow.
+    counts: Vec<u64>,
+    count: u64,
+    sum: f64,
+    max: f64,
+}
+
+impl FixedHistogram {
+    pub fn new(bounds: &'static [f64]) -> FixedHistogram {
+        FixedHistogram {
+            bounds,
+            counts: vec![0; bounds.len() + 1],
+            count: 0,
+            sum: 0.0,
+            max: 0.0,
+        }
+    }
+
+    pub fn record(&mut self, v: f64) {
+        let idx = self
+            .bounds
+            .iter()
+            .position(|&b| v <= b)
+            .unwrap_or(self.bounds.len());
+        self.counts[idx] += 1;
+        self.count += 1;
+        self.sum += v;
+        if v > self.max {
+            self.max = v;
+        }
+    }
+
+    /// Merge another histogram with the same bounds (panics on shape
+    /// mismatch — bounds are compile-time constants, so a mismatch is
+    /// a programming error, not a data error).
+    pub fn merge(&mut self, other: &FixedHistogram) {
+        assert_eq!(
+            self.bounds.len(),
+            other.bounds.len(),
+            "histogram bound sets differ"
+        );
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        if other.max > self.max {
+            self.max = other.max;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Cumulative buckets in Prometheus form: `(le, cumulative_count)`
+    /// pairs, final entry `(f64::INFINITY, total)`.
+    pub fn buckets(&self) -> Vec<(f64, u64)> {
+        let mut out = Vec::with_capacity(self.counts.len());
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            let le = if i < self.bounds.len() {
+                self.bounds[i]
+            } else {
+                f64::INFINITY
+            };
+            out.push((le, cum));
+        }
+        out
+    }
+
+    /// Quantile estimate by linear interpolation inside the bucket
+    /// containing rank `q * (count - 1)`. Exact enough for p50/p99
+    /// reporting once the reservoir has saturated; 0 when empty.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = q.clamp(0.0, 1.0) * (self.count - 1) as f64;
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            let lo_rank = cum as f64;
+            cum += c;
+            let hi_rank = (cum - 1) as f64;
+            if rank <= hi_rank {
+                let lo = if i == 0 { 0.0 } else { self.bounds[i - 1] };
+                let hi = if i < self.bounds.len() {
+                    self.bounds[i]
+                } else {
+                    self.max
+                };
+                if hi_rank <= lo_rank {
+                    return hi.min(self.max);
+                }
+                let frac = (rank - lo_rank) / (hi_rank - lo_rank);
+                return (lo + frac * (hi - lo)).min(self.max);
+            }
+        }
+        self.max
+    }
+}
+
+/// Deterministic first-`cap` reservoir: exact values while small,
+/// bounded forever.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Reservoir {
+    cap: usize,
+    values: Vec<f64>,
+    /// Total observations offered, including those not retained.
+    seen: u64,
+}
+
+impl Reservoir {
+    pub fn new(cap: usize) -> Reservoir {
+        Reservoir { cap: cap.max(1), values: Vec::new(), seen: 0 }
+    }
+
+    pub fn push(&mut self, v: f64) {
+        self.seen += 1;
+        if self.values.len() < self.cap {
+            self.values.push(v);
+        }
+    }
+
+    /// Merge retained values (bounded by our own cap) and the seen
+    /// total.
+    pub fn merge(&mut self, other: &Reservoir) {
+        self.seen += other.seen;
+        for &v in &other.values {
+            if self.values.len() >= self.cap {
+                break;
+            }
+            self.values.push(v);
+        }
+    }
+
+    pub fn values(&self) -> &[f64] {
+        &self.values
+    }
+
+    pub fn seen(&self) -> u64 {
+        self.seen
+    }
+
+    /// True while every observation offered is still retained, i.e.
+    /// quantiles computed from [`values`](Self::values) are exact.
+    pub fn is_exact(&self) -> bool {
+        self.seen <= self.values.len() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_counts_sum_and_buckets() {
+        let mut h = FixedHistogram::new(LATENCY_BOUNDS_US);
+        h.record(40.0);
+        h.record(75.0);
+        h.record(75.0);
+        h.record(20_000_000.0); // overflow
+        assert_eq!(h.count(), 4);
+        assert!((h.sum() - 20_000_190.0).abs() < 1e-6);
+        assert_eq!(h.max(), 20_000_000.0);
+        let b = h.buckets();
+        assert_eq!(b.len(), LATENCY_BOUNDS_US.len() + 1);
+        assert_eq!(b[0], (50.0, 1));
+        assert_eq!(b[1], (100.0, 3));
+        let last = b[b.len() - 1];
+        assert!(last.0.is_infinite());
+        assert_eq!(last.1, 4);
+    }
+
+    #[test]
+    fn histogram_merge_is_elementwise() {
+        let mut a = FixedHistogram::new(BATCH_FILL_BOUNDS);
+        let mut b = FixedHistogram::new(BATCH_FILL_BOUNDS);
+        a.record(1.0);
+        a.record(3.0);
+        b.record(3.0);
+        b.record(100.0);
+        a.merge(&b);
+        assert_eq!(a.count(), 4);
+        assert_eq!(a.max(), 100.0);
+        let buckets = a.buckets();
+        assert_eq!(buckets[0], (1.0, 1));
+        assert_eq!(buckets[2], (4.0, 3));
+        assert_eq!(buckets[buckets.len() - 1].1, 4);
+    }
+
+    #[test]
+    fn histogram_memory_is_constant() {
+        let mut h = FixedHistogram::new(LATENCY_BOUNDS_US);
+        for i in 0..100_000u64 {
+            h.record((i % 7_000) as f64);
+        }
+        assert_eq!(h.count(), 100_000);
+        assert_eq!(h.counts.len(), LATENCY_BOUNDS_US.len() + 1);
+    }
+
+    #[test]
+    fn quantile_interpolates_and_clamps() {
+        let mut h = FixedHistogram::new(LATENCY_BOUNDS_US);
+        assert_eq!(h.quantile(0.5), 0.0);
+        for _ in 0..100 {
+            h.record(200.0);
+        }
+        // All mass in the (100, 250] bucket: any quantile lands there.
+        let p50 = h.quantile(0.5);
+        assert!(p50 > 100.0 && p50 <= 250.0, "p50={p50}");
+        assert!(h.quantile(1.0) <= h.max());
+        assert!(h.quantile(0.0) >= 0.0);
+    }
+
+    #[test]
+    fn reservoir_keeps_first_cap_exactly() {
+        let mut r = Reservoir::new(3);
+        for i in 0..5 {
+            r.push(i as f64);
+        }
+        assert_eq!(r.values(), &[0.0, 1.0, 2.0]);
+        assert_eq!(r.seen(), 5);
+        assert!(!r.is_exact());
+        let mut small = Reservoir::new(8);
+        small.push(1.0);
+        assert!(small.is_exact());
+    }
+
+    #[test]
+    fn reservoir_merge_respects_cap() {
+        let mut a = Reservoir::new(4);
+        a.push(1.0);
+        a.push(2.0);
+        let mut b = Reservoir::new(4);
+        b.push(3.0);
+        b.push(4.0);
+        b.push(5.0);
+        a.merge(&b);
+        assert_eq!(a.values(), &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(a.seen(), 5);
+    }
+}

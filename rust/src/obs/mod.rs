@@ -1,0 +1,136 @@
+//! End-to-end observability: spans, trace export, histograms, and
+//! logical counters.
+//!
+//! # Span schema
+//!
+//! A span ([`SpanRecord`]) is a named, timed interval attributed to a
+//! request-scoped trace:
+//!
+//! * `trace_id` — assigned once per request by [`Registry::new_trace`]
+//!   at the HTTP/coordinator boundary and carried through
+//!   [`TraceCtx`] in the coordinator's `Request` across admission,
+//!   dispatch, batching, retries, and cross-worker requeue (a requeued
+//!   request keeps its ID).
+//! * `span_id` / `parent_id` — process-unique causal links; `parent_id
+//!   == 0` marks a trace root. The serving pipeline emits
+//!   `http.infer` → `http.parse`, then `pool.admit` (dispatcher),
+//!   `pool.queue` → `pool.exec` (worker), with `pool.requeue` /
+//!   `pool.retry` instants on the failure paths — four-plus causally
+//!   linked spans per served request.
+//! * `start_us` / `dur_us` — microseconds on the registry's injected
+//!   [`crate::util::clock::Clock`]. This module never reads wall time:
+//!   it sits inside the `no-wall-clock-in-pure-paths` lint scope, and
+//!   all real clock reads live in `src/util/clock.rs` at the serving
+//!   edge.
+//! * `args` — up to [`MAX_SPAN_ARGS`] `(name, u64)` pairs of logical
+//!   counters (batch fill, attempts, bytes scanned, cache hits).
+//!
+//! Spans land in bounded per-thread/per-role ring buffers
+//! ([`SpanBuf`]): one per long-lived pipeline thread (`dispatch`,
+//! `worker-0`, …), one shared `http` ring for the ephemeral connection
+//! handlers. Rings overwrite oldest and never allocate after setup, so
+//! tracing cost and memory are O(1) per span and bounded overall.
+//!
+//! # Trace-event field mapping
+//!
+//! [`chrome_trace_json`] renders spans as Chrome Trace Event Format
+//! (loadable in Perfetto / `chrome://tracing`): `ph:"X"`, `ts`/`dur`
+//! in microseconds, `pid:1`, `tid` = ring buffer ID, `name` = span
+//! name, and `args` carrying `trace_id`/`span_id`/`parent_id` plus the
+//! logical counters. Output bytes are stable for a pinned clock. The
+//! same document shape is served by `GET /debug/trace?last=N` and
+//! written by `rram-accel trace --out results/trace.json`.
+//!
+//! # Logical-counter convention for pure paths
+//!
+//! Pure code (`src/sim/`, `src/dse/`, `src/report/`, `src/mapping/`)
+//! must stay wall-clock-free, so it is never instrumented with spans
+//! directly. Instead it counts *logical* work — points evaluated,
+//! cache hits/misses, blocks costed — and the caller at the serving or
+//! DSE-runner boundary records those counts into span args (or, for
+//! `dse --profile`, wraps each runner stage with timing measured in
+//! `main`). Process-wide totals that outlive any one call (store/DSE
+//! cache traffic) accumulate in [`counters`] and are exported through
+//! `/metrics`.
+
+pub mod chrome;
+pub mod hist;
+pub mod span;
+
+pub use chrome::chrome_trace_json;
+pub use hist::{
+    FixedHistogram, Reservoir, BATCH_FILL_BOUNDS, DEFAULT_RESERVOIR_CAP,
+    LATENCY_BOUNDS_US,
+};
+pub use span::{
+    ActiveSpan, Registry, SpanBuf, SpanRecord, TraceCtx, DEFAULT_RING_CAPACITY,
+    MAX_SPAN_ARGS,
+};
+
+/// Process-wide logical counters for work done inside pure paths.
+///
+/// Pure code cannot read clocks or own an exporter, but atomics are
+/// fine: the store and DSE cache bump these on every lookup, and the
+/// report layer snapshots them into `/metrics`. Values are
+/// monotonically increasing totals since process start.
+pub mod counters {
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    static STORE_HITS: AtomicU64 = AtomicU64::new(0);
+    static STORE_MISSES: AtomicU64 = AtomicU64::new(0);
+    static DSE_CACHE_HITS: AtomicU64 = AtomicU64::new(0);
+    static DSE_CACHE_MISSES: AtomicU64 = AtomicU64::new(0);
+
+    /// Snapshot of the logical-counter totals.
+    #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+    pub struct CounterSnapshot {
+        pub store_hits: u64,
+        pub store_misses: u64,
+        pub dse_cache_hits: u64,
+        pub dse_cache_misses: u64,
+    }
+
+    pub fn store_hit() {
+        STORE_HITS.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn store_miss() {
+        STORE_MISSES.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn dse_cache_hit() {
+        DSE_CACHE_HITS.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn dse_cache_miss() {
+        DSE_CACHE_MISSES.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn snapshot() -> CounterSnapshot {
+        CounterSnapshot {
+            store_hits: STORE_HITS.load(Ordering::Relaxed),
+            store_misses: STORE_MISSES.load(Ordering::Relaxed),
+            dse_cache_hits: DSE_CACHE_HITS.load(Ordering::Relaxed),
+            dse_cache_misses: DSE_CACHE_MISSES.load(Ordering::Relaxed),
+        }
+    }
+
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+
+        #[test]
+        fn counters_accumulate_monotonically() {
+            let before = snapshot();
+            store_hit();
+            store_miss();
+            dse_cache_hit();
+            dse_cache_miss();
+            let after = snapshot();
+            assert!(after.store_hits >= before.store_hits + 1);
+            assert!(after.store_misses >= before.store_misses + 1);
+            assert!(after.dse_cache_hits >= before.dse_cache_hits + 1);
+            assert!(after.dse_cache_misses >= before.dse_cache_misses + 1);
+        }
+    }
+}

@@ -1,0 +1,489 @@
+//! Spans, per-buffer rings, and the process-wide [`Registry`].
+//!
+//! Everything here is allocation-free after setup: a [`SpanRecord`] is
+//! `Copy` (fixed-size argument array, `&'static str` names), a ring's
+//! slot vector is allocated once at registration, and recording a span
+//! is one clock read plus one slot write under the ring's mutex.
+//! Timestamps come exclusively from the injected
+//! [`crate::util::clock::Clock`] — this module never reads wall time
+//! (it sits inside the `no-wall-clock-in-pure-paths` lint scope).
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::util::clock::Clock;
+use crate::util::lockcheck;
+
+/// Fixed argument capacity of one span record; extra arguments passed
+/// to [`Registry::end`]/[`Registry::record`] are dropped (never
+/// reallocated).
+pub const MAX_SPAN_ARGS: usize = 4;
+
+/// Default per-buffer ring capacity (spans kept per thread/role).
+pub const DEFAULT_RING_CAPACITY: usize = 4096;
+
+/// Trace context carried through a request's life: the request-scoped
+/// trace ID assigned at the HTTP/coordinator boundary, and the span the
+/// next pipeline stage should nest under. `trace_id == 0` means
+/// "untraced" — every recording call is a cheap no-op for it.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TraceCtx {
+    pub trace_id: u64,
+    /// Parent span for the next stage's spans (0 = root).
+    pub parent: u64,
+}
+
+/// One finished span, as stored in a ring slot.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SpanRecord {
+    /// Request-scoped trace this span belongs to (0 = none recorded).
+    pub trace_id: u64,
+    /// Unique (per registry) span ID.
+    pub span_id: u64,
+    /// Enclosing span (0 = root of its trace).
+    pub parent_id: u64,
+    /// Static span name, e.g. `http.infer`, `pool.queue`.
+    pub name: &'static str,
+    /// Start, microseconds on the registry clock.
+    pub start_us: u64,
+    /// Duration in microseconds (0 for instant events).
+    pub dur_us: u64,
+    /// Buffer ID the span was recorded into (Chrome `tid`).
+    pub tid: u64,
+    arg_buf: [(&'static str, u64); MAX_SPAN_ARGS],
+    n_args: u8,
+}
+
+impl SpanRecord {
+    const EMPTY: SpanRecord = SpanRecord {
+        trace_id: 0,
+        span_id: 0,
+        parent_id: 0,
+        name: "",
+        start_us: 0,
+        dur_us: 0,
+        tid: 0,
+        arg_buf: [("", 0); MAX_SPAN_ARGS],
+        n_args: 0,
+    };
+
+    /// The span's recorded `(key, value)` arguments (logical counters:
+    /// bytes scanned, batch fill, cache hits, …).
+    pub fn args(&self) -> &[(&'static str, u64)] {
+        &self.arg_buf[..self.n_args as usize]
+    }
+
+    fn with_args(mut self, args: &[(&'static str, u64)]) -> SpanRecord {
+        let n = args.len().min(MAX_SPAN_ARGS);
+        self.arg_buf[..n].copy_from_slice(&args[..n]);
+        self.n_args = n as u8;
+        self
+    }
+}
+
+/// A span begun but not yet recorded. `span_id == 0` marks an inert
+/// span (tracing disabled or untraced request): [`Registry::end`]
+/// drops it without touching any ring.
+#[derive(Debug, Clone, Copy)]
+pub struct ActiveSpan {
+    pub trace_id: u64,
+    pub span_id: u64,
+    pub parent_id: u64,
+    pub name: &'static str,
+    pub start_us: u64,
+}
+
+impl ActiveSpan {
+    /// An inert span: ending it records nothing.
+    pub const INERT: ActiveSpan = ActiveSpan {
+        trace_id: 0,
+        span_id: 0,
+        parent_id: 0,
+        name: "",
+        start_us: 0,
+    };
+
+    pub fn is_recording(&self) -> bool {
+        self.span_id != 0
+    }
+}
+
+/// Fixed-capacity overwrite-oldest ring (single allocation at
+/// construction).
+struct Ring {
+    slots: Vec<SpanRecord>,
+    /// Next slot to (over)write.
+    next: usize,
+    /// Live records (saturates at capacity).
+    len: usize,
+}
+
+impl Ring {
+    fn push(&mut self, rec: SpanRecord) {
+        let cap = self.slots.len();
+        self.slots[self.next] = rec;
+        self.next = (self.next + 1) % cap;
+        self.len = (self.len + 1).min(cap);
+    }
+
+    /// Live records, oldest first.
+    fn snapshot(&self) -> Vec<SpanRecord> {
+        let cap = self.slots.len();
+        let mut out = Vec::with_capacity(self.len);
+        if self.len < cap {
+            out.extend_from_slice(&self.slots[..self.len]);
+        } else {
+            out.extend_from_slice(&self.slots[self.next..]);
+            out.extend_from_slice(&self.slots[..self.next]);
+        }
+        out
+    }
+}
+
+/// One registered span ring: typically one per long-lived pipeline
+/// thread (`dispatch`, `worker-0`, …); role-shared for ephemeral
+/// threads (every HTTP connection handler records into `http`), which
+/// keeps the buffer set bounded however many connections come and go.
+pub struct SpanBuf {
+    name: String,
+    tid: u64,
+    ring: lockcheck::Mutex<Ring>,
+}
+
+impl SpanBuf {
+    fn new(name: &str, tid: u64, capacity: usize) -> SpanBuf {
+        SpanBuf {
+            name: name.to_string(),
+            tid,
+            ring: lockcheck::Mutex::named(
+                "obs.ring",
+                Ring {
+                    slots: vec![SpanRecord::EMPTY; capacity.max(1)],
+                    next: 0,
+                    len: 0,
+                },
+            ),
+        }
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Buffer ID, used as the Chrome trace `tid`.
+    pub fn tid(&self) -> u64 {
+        self.tid
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.ring.lock().slots.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.ring.lock().len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Live records, oldest first.
+    pub fn snapshot(&self) -> Vec<SpanRecord> {
+        self.ring.lock().snapshot()
+    }
+}
+
+/// Process-wide tracing registry: assigns trace/span IDs, owns the
+/// registered rings, and stamps every record from its injected clock.
+///
+/// Disabled registries (or spans of untraced requests, `trace_id == 0`)
+/// cost one atomic load per call — no clock read, no lock, no write —
+/// which is what bounds the tracing-off overhead on the serving hot
+/// path.
+pub struct Registry {
+    clock: Arc<dyn Clock>,
+    enabled: AtomicBool,
+    capacity: usize,
+    next_trace: AtomicU64,
+    next_span: AtomicU64,
+    bufs: lockcheck::Mutex<Vec<Arc<SpanBuf>>>,
+}
+
+impl std::fmt::Debug for Registry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Registry")
+            .field("enabled", &self.enabled.load(Ordering::Relaxed))
+            .field("capacity", &self.capacity)
+            .finish()
+    }
+}
+
+impl Registry {
+    /// A new enabled registry; `capacity` is the per-buffer ring size.
+    pub fn new(clock: Arc<dyn Clock>, capacity: usize) -> Arc<Registry> {
+        Arc::new(Registry {
+            clock,
+            enabled: AtomicBool::new(true),
+            capacity: capacity.max(1),
+            next_trace: AtomicU64::new(1),
+            next_span: AtomicU64::new(1),
+            bufs: lockcheck::Mutex::named("obs.registry", Vec::new()),
+        })
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::Relaxed);
+    }
+
+    /// Current time on the registry clock (0 when disabled, so callers
+    /// can stamp unconditionally).
+    pub fn now_us(&self) -> u64 {
+        if self.enabled() {
+            self.clock.now_us()
+        } else {
+            0
+        }
+    }
+
+    /// Assign a fresh request-scoped trace ID (0 when disabled, which
+    /// downstream recording treats as "untraced").
+    pub fn new_trace(&self) -> u64 {
+        if self.enabled() {
+            self.next_trace.fetch_add(1, Ordering::Relaxed)
+        } else {
+            0
+        }
+    }
+
+    /// The ring registered under `name`, creating it on first use.
+    /// Call once per thread/role at setup — the lookup scans the
+    /// (small, bounded) buffer list under a lock.
+    pub fn buffer(&self, name: &str) -> Arc<SpanBuf> {
+        let mut bufs = self.bufs.lock();
+        if let Some(b) = bufs.iter().find(|b| b.name == name) {
+            return b.clone();
+        }
+        let b = Arc::new(SpanBuf::new(name, bufs.len() as u64 + 1, self.capacity));
+        bufs.push(b.clone());
+        b
+    }
+
+    /// All registered rings, in registration order.
+    pub fn buffers(&self) -> Vec<Arc<SpanBuf>> {
+        self.bufs.lock().clone()
+    }
+
+    /// Begin a span. Inert (records nothing on `end`) when the
+    /// registry is disabled or the trace ID is 0.
+    pub fn begin(
+        &self,
+        trace_id: u64,
+        parent_id: u64,
+        name: &'static str,
+    ) -> ActiveSpan {
+        if !self.enabled() || trace_id == 0 {
+            return ActiveSpan::INERT;
+        }
+        ActiveSpan {
+            trace_id,
+            span_id: self.next_span.fetch_add(1, Ordering::Relaxed),
+            parent_id,
+            name,
+            start_us: self.clock.now_us(),
+        }
+    }
+
+    /// Finish `span` into `buf`, stamping the duration from the
+    /// registry clock. Returns the span ID (0 if nothing was recorded)
+    /// so follow-up spans can nest under it.
+    pub fn end(
+        &self,
+        buf: &SpanBuf,
+        span: ActiveSpan,
+        args: &[(&'static str, u64)],
+    ) -> u64 {
+        if !span.is_recording() {
+            return 0;
+        }
+        let now = self.clock.now_us();
+        self.record(
+            buf,
+            span.trace_id,
+            span.parent_id,
+            span.name,
+            span.start_us,
+            now.saturating_sub(span.start_us),
+            args,
+        )
+    }
+
+    /// Record a complete span with explicit timing — used when the
+    /// start time predates the recording thread (e.g. a queue span
+    /// whose start is the submit timestamp carried in the request).
+    /// Returns the new span's ID (0 when disabled/untraced).
+    #[allow(clippy::too_many_arguments)]
+    pub fn record(
+        &self,
+        buf: &SpanBuf,
+        trace_id: u64,
+        parent_id: u64,
+        name: &'static str,
+        start_us: u64,
+        dur_us: u64,
+        args: &[(&'static str, u64)],
+    ) -> u64 {
+        if !self.enabled() || trace_id == 0 {
+            return 0;
+        }
+        let span_id = self.next_span.fetch_add(1, Ordering::Relaxed);
+        let rec = SpanRecord {
+            trace_id,
+            span_id,
+            parent_id,
+            name,
+            start_us,
+            dur_us,
+            tid: buf.tid,
+            arg_buf: [("", 0); MAX_SPAN_ARGS],
+            n_args: 0,
+        }
+        .with_args(args);
+        buf.ring.lock().push(rec);
+        span_id
+    }
+
+    /// Merged view of every ring, sorted by `(start_us, span_id)` —
+    /// a stable causal order even when buffers wrapped independently.
+    pub fn snapshot(&self) -> Vec<SpanRecord> {
+        let bufs = self.buffers();
+        let mut out = Vec::new();
+        for b in &bufs {
+            out.extend(b.snapshot());
+        }
+        out.sort_by_key(|r| (r.start_us, r.span_id));
+        out
+    }
+
+    /// The last `n` spans of the merged, time-sorted view.
+    pub fn snapshot_last(&self, n: usize) -> Vec<SpanRecord> {
+        let all = self.snapshot();
+        let skip = all.len().saturating_sub(n);
+        all[skip..].to_vec()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::clock::TestClock;
+
+    fn test_registry(cap: usize) -> (Arc<TestClock>, Arc<Registry>) {
+        let clock = Arc::new(TestClock::new());
+        let reg = Registry::new(clock.clone(), cap);
+        (clock, reg)
+    }
+
+    #[test]
+    fn span_lifecycle_stamps_clock_times() {
+        let (clock, reg) = test_registry(8);
+        let buf = reg.buffer("t");
+        clock.set(100);
+        let t = reg.new_trace();
+        let sp = reg.begin(t, 0, "outer");
+        assert!(sp.is_recording());
+        clock.advance(50);
+        let id = reg.end(&buf, sp, &[("n", 3)]);
+        assert_ne!(id, 0);
+        let snap = buf.snapshot();
+        assert_eq!(snap.len(), 1);
+        assert_eq!(snap[0].name, "outer");
+        assert_eq!(snap[0].start_us, 100);
+        assert_eq!(snap[0].dur_us, 50);
+        assert_eq!(snap[0].trace_id, t);
+        assert_eq!(snap[0].args(), &[("n", 3)]);
+        assert_eq!(snap[0].tid, buf.tid());
+    }
+
+    #[test]
+    fn disabled_registry_records_nothing() {
+        let (_clock, reg) = test_registry(8);
+        reg.set_enabled(false);
+        let buf = reg.buffer("t");
+        assert_eq!(reg.new_trace(), 0);
+        let sp = reg.begin(7, 0, "x");
+        assert!(!sp.is_recording());
+        assert_eq!(reg.end(&buf, sp, &[]), 0);
+        assert_eq!(reg.record(&buf, 7, 0, "y", 1, 2, &[]), 0);
+        assert!(buf.is_empty());
+        assert_eq!(reg.now_us(), 0);
+    }
+
+    #[test]
+    fn untraced_requests_are_inert() {
+        let (_clock, reg) = test_registry(8);
+        let buf = reg.buffer("t");
+        let sp = reg.begin(0, 0, "x");
+        assert!(!sp.is_recording());
+        reg.end(&buf, sp, &[]);
+        assert!(buf.is_empty());
+    }
+
+    #[test]
+    fn ring_overwrites_oldest_beyond_capacity() {
+        let (clock, reg) = test_registry(4);
+        let buf = reg.buffer("t");
+        for i in 0..6u64 {
+            clock.set(i * 10);
+            reg.record(&buf, 1, 0, "e", i * 10, 1, &[("i", i)]);
+        }
+        let snap = buf.snapshot();
+        assert_eq!(snap.len(), 4, "bounded at capacity");
+        // oldest two overwritten; survivors oldest-first
+        let starts: Vec<u64> = snap.iter().map(|r| r.start_us).collect();
+        assert_eq!(starts, vec![20, 30, 40, 50]);
+        assert_eq!(buf.capacity(), 4);
+    }
+
+    #[test]
+    fn buffers_are_named_and_reused() {
+        let (_clock, reg) = test_registry(8);
+        let a = reg.buffer("alpha");
+        let a2 = reg.buffer("alpha");
+        let b = reg.buffer("beta");
+        assert!(Arc::ptr_eq(&a, &a2));
+        assert_eq!(a.tid(), 1);
+        assert_eq!(b.tid(), 2);
+        assert_eq!(reg.buffers().len(), 2);
+    }
+
+    #[test]
+    fn snapshot_merges_rings_in_time_order() {
+        let (_clock, reg) = test_registry(8);
+        let a = reg.buffer("a");
+        let b = reg.buffer("b");
+        reg.record(&a, 1, 0, "late", 100, 5, &[]);
+        reg.record(&b, 1, 0, "early", 10, 5, &[]);
+        reg.record(&a, 2, 0, "mid", 50, 5, &[]);
+        let names: Vec<&str> = reg.snapshot().iter().map(|r| r.name).collect();
+        assert_eq!(names, vec!["early", "mid", "late"]);
+        let last = reg.snapshot_last(2);
+        assert_eq!(last.len(), 2);
+        assert_eq!(last[0].name, "mid");
+    }
+
+    #[test]
+    fn args_beyond_capacity_are_dropped_not_reallocated() {
+        let (_clock, reg) = test_registry(4);
+        let buf = reg.buffer("t");
+        let args: Vec<(&'static str, u64)> =
+            vec![("a", 1), ("b", 2), ("c", 3), ("d", 4), ("e", 5)];
+        reg.record(&buf, 1, 0, "x", 0, 1, &args);
+        let snap = buf.snapshot();
+        assert_eq!(snap[0].args().len(), MAX_SPAN_ARGS);
+        assert_eq!(snap[0].args()[0], ("a", 1));
+    }
+}

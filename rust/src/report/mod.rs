@@ -454,6 +454,14 @@ pub fn metrics_export_text(m: &MetricsSnapshot, workers: &[WorkerStats]) -> Stri
     counter("rram_requeued_requests_total", m.requeued_requests);
     counter("rram_deadline_expired_total", m.deadline_expired);
     counter("rram_rejected_overload_total", m.rejected_overload);
+    counter("rram_quarantine_events_total", m.quarantine_events);
+    // process-wide logical counters from the pure paths (store and DSE
+    // cache traffic accumulate in crate::obs::counters)
+    let cache = crate::obs::counters::snapshot();
+    counter("rram_store_hits_total", cache.store_hits);
+    counter("rram_store_misses_total", cache.store_misses);
+    counter("rram_dse_cache_hits_total", cache.dse_cache_hits);
+    counter("rram_dse_cache_misses_total", cache.dse_cache_misses);
     s.push_str(&format!(
         "# TYPE rram_alarm_tripped gauge\nrram_alarm_tripped {}\n",
         u64::from(m.alarm_tripped)
@@ -471,6 +479,28 @@ pub fn metrics_export_text(m: &MetricsSnapshot, workers: &[WorkerStats]) -> Stri
         m.latency_p99_us,
         m.latency_max_us,
     ));
+    // fixed-bucket histograms (cumulative, Prometheus convention)
+    s.push_str("# TYPE rram_latency_us_hist histogram\n");
+    for (le, c) in &m.latency_buckets {
+        s.push_str(&format!(
+            "rram_latency_us_hist_bucket{{le=\"{}\"}} {c}\n",
+            le_label(*le)
+        ));
+    }
+    s.push_str(&format!(
+        "rram_latency_us_hist_sum {}\nrram_latency_us_hist_count {}\n",
+        m.latency_sum_us, m.latency_count
+    ));
+    s.push_str("# TYPE rram_batch_fill histogram\n");
+    let batch_count =
+        m.batch_fill_buckets.last().map(|&(_, c)| c).unwrap_or(0);
+    for (le, c) in &m.batch_fill_buckets {
+        s.push_str(&format!(
+            "rram_batch_fill_bucket{{le=\"{}\"}} {c}\n",
+            le_label(*le)
+        ));
+    }
+    s.push_str(&format!("rram_batch_fill_count {batch_count}\n"));
     s.push_str("# TYPE rram_worker_requests_total counter\n");
     for w in workers {
         s.push_str(&format!(
@@ -503,6 +533,33 @@ pub fn metrics_export_text(m: &MetricsSnapshot, workers: &[WorkerStats]) -> Stri
     s
 }
 
+/// Prometheus `le` label for a bucket bound: integral bounds print
+/// without decimals, the overflow bucket as `+Inf`.
+fn le_label(le: f64) -> String {
+    if le.is_infinite() {
+        "+Inf".to_string()
+    } else if le.fract() == 0.0 && le >= 0.0 && le < 9_007_199_254_740_992.0 {
+        format!("{}", le as u64)
+    } else {
+        format!("{le}")
+    }
+}
+
+/// Cumulative histogram as JSON: `{"buckets": [{"le", "count"}...],
+/// "sum": f64}` with the same `le` labels as the text exposition.
+fn hist_json(buckets: &[(f64, u64)], sum: f64) -> Json {
+    let arr: Vec<Json> = buckets
+        .iter()
+        .map(|&(le, c)| {
+            obj(vec![
+                ("count", (c as f64).into()),
+                ("le", le_label(le).into()),
+            ])
+        })
+        .collect();
+    obj(vec![("buckets", Json::Arr(arr)), ("sum", sum.into())])
+}
+
 /// The same pool view as [`metrics_export_text`], as a JSON document
 /// (`GET /metrics?format=json`): the merged pool counters plus the
 /// per-worker utilization block.
@@ -519,6 +576,7 @@ pub fn metrics_export_json(m: &MetricsSnapshot, workers: &[WorkerStats]) -> Json
                 ("requeued_requests", (m.requeued_requests as f64).into()),
                 ("deadline_expired", (m.deadline_expired as f64).into()),
                 ("rejected_overload", (m.rejected_overload as f64).into()),
+                ("quarantine_events", (m.quarantine_events as f64).into()),
                 ("alarm_threshold", (m.alarm_threshold as f64).into()),
                 ("alarm_tripped", m.alarm_tripped.into()),
                 ("latency_count", (m.latency_count as f64).into()),
@@ -526,8 +584,22 @@ pub fn metrics_export_json(m: &MetricsSnapshot, workers: &[WorkerStats]) -> Json
                 ("latency_p50_us", m.latency_p50_us.into()),
                 ("latency_p99_us", m.latency_p99_us.into()),
                 ("latency_max_us", m.latency_max_us.into()),
+                (
+                    "latency_hist",
+                    hist_json(&m.latency_buckets, m.latency_sum_us),
+                ),
+                ("batch_fill_hist", hist_json(&m.batch_fill_buckets, 0.0)),
             ]),
         ),
+        ("cache", {
+            let c = crate::obs::counters::snapshot();
+            obj(vec![
+                ("dse_cache_hits", (c.dse_cache_hits as f64).into()),
+                ("dse_cache_misses", (c.dse_cache_misses as f64).into()),
+                ("store_hits", (c.store_hits as f64).into()),
+                ("store_misses", (c.store_misses as f64).into()),
+            ])
+        }),
         ("workers", worker_utilization_json(workers)),
     ])
 }
@@ -718,6 +790,7 @@ mod tests {
             requeued_requests: 0,
             deadline_expired: 1,
             rejected_overload: 1,
+            quarantine_events: 1,
             alarm_threshold: 0,
             alarm_tripped: false,
             latency_count: 8,
@@ -725,6 +798,9 @@ mod tests {
             latency_p50_us: 200.0,
             latency_p99_us: 900.0,
             latency_max_us: 1000.0,
+            latency_buckets: vec![(250.0, 5), (500.0, 7), (f64::INFINITY, 8)],
+            latency_sum_us: 2000.0,
+            batch_fill_buckets: vec![(1.0, 2), (4.0, 4), (f64::INFINITY, 4)],
         };
         let workers = vec![WorkerStats {
             worker: 0,
@@ -741,10 +817,24 @@ mod tests {
         let t = metrics_export_text(&m, &workers);
         assert!(t.contains("rram_requests_total 10"), "{t}");
         assert!(t.contains("rram_deadline_expired_total 1"), "{t}");
+        assert!(t.contains("rram_quarantine_events_total 1"), "{t}");
+        assert!(t.contains("rram_store_hits_total "), "{t}");
+        assert!(t.contains("rram_dse_cache_misses_total "), "{t}");
         assert!(
             t.contains("rram_latency_us{quantile=\"0.99\"} 900"),
             "{t}"
         );
+        assert!(
+            t.contains("rram_latency_us_hist_bucket{le=\"250\"} 5"),
+            "{t}"
+        );
+        assert!(
+            t.contains("rram_latency_us_hist_bucket{le=\"+Inf\"} 8"),
+            "{t}"
+        );
+        assert!(t.contains("rram_latency_us_hist_sum 2000"), "{t}");
+        assert!(t.contains("rram_batch_fill_bucket{le=\"4\"} 4"), "{t}");
+        assert!(t.contains("rram_batch_fill_count 4"), "{t}");
         assert!(
             t.contains("rram_worker_quarantined{worker=\"0\"} 1"),
             "{t}"
@@ -758,6 +848,18 @@ mod tests {
         let j = metrics_export_json(&m, &workers);
         assert_eq!(j.get("pool").get("requests").as_f64(), Some(10.0));
         assert_eq!(j.get("pool").get("latency_p99_us").as_f64(), Some(900.0));
+        assert_eq!(
+            j.get("pool").get("quarantine_events").as_f64(),
+            Some(1.0)
+        );
+        let hist = j.get("pool").get("latency_hist");
+        assert_eq!(hist.get("sum").as_f64(), Some(2000.0));
+        assert_eq!(
+            hist.get("buckets").idx(2).get("le").as_str(),
+            Some("+Inf")
+        );
+        assert_eq!(hist.get("buckets").idx(0).get("count").as_f64(), Some(5.0));
+        assert!(j.get("cache").get("store_hits").as_f64().is_some());
         assert_eq!(
             j.get("workers").get("workers").idx(0).get("outstanding_cost").as_f64(),
             Some(42.0)

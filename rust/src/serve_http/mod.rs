@@ -56,6 +56,32 @@
 //! ([`crate::report::metrics_export_json`] with an added `"http"`
 //! object).
 //!
+//! # Observability
+//!
+//! With the pool started on a [`crate::obs::Registry`]
+//! (`CoordinatorConfig::trace` — `rram-accel serve-http` always wires
+//! one), every `POST /v1/infer` request is served under its own trace:
+//! the front door opens the `http.infer` root span (child `http.parse`
+//! around body scanning), assigns the trace ID, and hands the context
+//! to [`Coordinator::submit_traced`] so the pool's `pool.admit` →
+//! `pool.queue` → `pool.exec` spans (and `pool.retry`/`pool.requeue`
+//! failure instants) nest under it; the reply echoes the ID in
+//! `Reply::trace_id`. Exports:
+//!
+//! * **`GET /debug/trace?last=N`** — the last `N` spans (default 256)
+//!   of the merged per-thread rings as Chrome trace-event JSON
+//!   (`{"traceEvents": [...]}`, loadable in Perfetto /
+//!   `chrome://tracing`). Without a registry, an empty document.
+//! * **`/metrics` histogram series** — the bounded-memory pool
+//!   telemetry: `rram_latency_us_hist_bucket{le="..."}` (+ `_sum`,
+//!   `_count`), `rram_batch_fill_bucket{le="..."}`, plus
+//!   `rram_quarantine_events_total` and the store/DSE cache totals
+//!   `rram_store_{hits,misses}_total` /
+//!   `rram_dse_cache_{hits,misses}_total`.
+//!
+//! Tracing off (no registry) costs the serving path nothing beyond one
+//! `Option` check per request — pinned by `benches/http_load.rs`.
+//!
 //! # Status-code mapping to coordinator outcomes
 //!
 //! | condition                                      | status |
@@ -91,6 +117,7 @@ use std::time::Duration;
 use crate::coordinator::{
     Coordinator, InferBackend, ERR_DEADLINE_PREFIX, ERR_OVERLOAD_PREFIX,
 };
+use crate::obs;
 use crate::report;
 use crate::util::json::{obj, Json};
 use crate::util::threadpool;
@@ -145,6 +172,11 @@ pub struct HttpStats {
 struct Shared {
     coord: Coordinator,
     cfg: HttpConfig,
+    /// Tracing registry (taken from the coordinator) plus the one ring
+    /// all connection-handler threads share — handlers are ephemeral,
+    /// so per-thread rings would grow without bound; one `http` ring
+    /// keeps the buffer set fixed.
+    trace: Option<(Arc<obs::Registry>, Arc<obs::SpanBuf>)>,
     stop: AtomicBool,
     open_connections: AtomicU64,
     connections_total: AtomicU64,
@@ -170,9 +202,14 @@ impl HttpServer {
     pub fn start(coord: Coordinator, cfg: HttpConfig) -> std::io::Result<HttpServer> {
         let listener = TcpListener::bind(&cfg.addr)?;
         let addr = listener.local_addr()?;
+        let trace = coord.trace_registry().cloned().map(|t| {
+            let buf = t.buffer("http");
+            (t, buf)
+        });
         let shared = Arc::new(Shared {
             coord,
             cfg,
+            trace,
             stop: AtomicBool::new(false),
             open_connections: AtomicU64::new(0),
             connections_total: AtomicU64::new(0),
@@ -380,11 +417,34 @@ fn route(shared: &Shared, head: &RequestHead, body: &[u8]) -> Response {
             ]),
         ),
         ("GET", "/metrics") => metrics(shared, query),
-        (_, "/v1/infer") | (_, "/healthz") | (_, "/metrics") => {
+        ("GET", "/debug/trace") => debug_trace(shared, query),
+        (_, "/v1/infer") | (_, "/healthz") | (_, "/metrics")
+        | (_, "/debug/trace") => {
             error_response(405, "method not allowed on this path")
         }
         _ => error_response(404, "unknown path"),
     }
+}
+
+/// `GET /debug/trace?last=N` — the last `N` spans (default 256) of the
+/// registry's merged rings, as Chrome trace-event JSON. Served even
+/// without a registry (empty document) so probes never 404 based on
+/// config.
+fn debug_trace(shared: &Shared, query: &str) -> Response {
+    let Some((t, _)) = &shared.trace else {
+        return json_response(200, obs::chrome_trace_json(&[]));
+    };
+    let mut last = 256usize;
+    for part in query.split('&') {
+        if let Some(v) = part.strip_prefix("last=") {
+            // untrusted input: a non-numeric or overflowing value keeps
+            // the default rather than erroring a diagnostics endpoint
+            if let Ok(n) = v.parse::<usize>() {
+                last = n;
+            }
+        }
+    }
+    json_response(200, obs::chrome_trace_json(&t.snapshot_last(last)))
 }
 
 fn metrics(shared: &Shared, query: &str) -> Response {
@@ -432,7 +492,47 @@ fn metrics(shared: &Shared, query: &str) -> Response {
 }
 
 fn infer(shared: &Shared, body: &[u8]) -> Response {
-    let fields = match scan::scan_infer(body) {
+    // Trace boundary: this request's trace ID is minted here, the
+    // `http.infer` root span wraps the whole handler, and the context
+    // rides into the pool via `submit_traced` so the dispatcher/worker
+    // spans nest under it.
+    let (ctx, root) = match &shared.trace {
+        Some((t, _)) => {
+            let id = t.new_trace();
+            let root = t.begin(id, 0, "http.infer");
+            (obs::TraceCtx { trace_id: id, parent: root.span_id }, root)
+        }
+        None => (obs::TraceCtx::default(), obs::ActiveSpan::INERT),
+    };
+    let resp = infer_inner(shared, body, ctx);
+    if let Some((t, buf)) = &shared.trace {
+        t.end(
+            buf,
+            root,
+            &[
+                ("status", resp.status as u64),
+                ("body_bytes", body.len() as u64),
+            ],
+        );
+    }
+    resp
+}
+
+fn infer_inner(shared: &Shared, body: &[u8], ctx: obs::TraceCtx) -> Response {
+    let parse = match &shared.trace {
+        Some((t, _)) => t.begin(ctx.trace_id, ctx.parent, "http.parse"),
+        None => obs::ActiveSpan::INERT,
+    };
+    let scanned = scan::scan_infer(body);
+    if let Some((t, buf)) = &shared.trace {
+        // logical counters only: bytes offered to the scanner, outcome
+        t.end(
+            buf,
+            parse,
+            &[("bytes", body.len() as u64), ("ok", scanned.is_ok() as u64)],
+        );
+    }
+    let fields = match scanned {
         Ok(f) => f,
         Err(e) => return error_response(400, &e.to_string()),
     };
@@ -458,10 +558,7 @@ fn infer(shared: &Shared, body: &[u8]) -> Response {
         .deadline_us
         .map(Duration::from_micros)
         .or(shared.cfg.default_deadline);
-    let rx = match deadline {
-        Some(d) => shared.coord.submit_with_deadline(fields.image, d),
-        None => shared.coord.submit(fields.image),
-    };
+    let rx = shared.coord.submit_traced(fields.image, deadline, ctx);
     let reply = match rx.recv() {
         Ok(r) => r,
         Err(_) => return error_response(503, "coordinator unavailable"),

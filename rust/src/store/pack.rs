@@ -159,8 +159,21 @@ impl PackStore {
     /// Fetch the latest record for `key`, verifying the on-disk bytes
     /// (checksum + key match). A record that fails verification is
     /// treated as a miss and evicted from the in-memory index so a
-    /// subsequent `put` repairs it.
+    /// subsequent `put` repairs it. Every lookup lands on one of the
+    /// process-wide [`crate::obs::counters`] store tallies (hit or
+    /// miss — a corrupt record counts as a miss), which `/metrics`
+    /// exports.
     pub fn get(&self, key: u64) -> Option<Record> {
+        let got = self.get_uncounted(key);
+        if got.is_some() {
+            crate::obs::counters::store_hit();
+        } else {
+            crate::obs::counters::store_miss();
+        }
+        got
+    }
+
+    fn get_uncounted(&self, key: u64) -> Option<Record> {
         let mut inner = self.inner.lock();
         let entry = *inner.index.get(&key)?;
         match read_record_at(&inner.pack_path, entry) {

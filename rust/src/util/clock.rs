@@ -1,0 +1,108 @@
+//! Injectable microsecond clocks for the observability layer.
+//!
+//! The tracing subsystem ([`crate::obs`]) lives inside the lint's pure
+//! scopes (`no-wall-clock-in-pure-paths` covers `src/obs/`), so it
+//! never reads wall time itself — every timestamp is a `u64`
+//! microsecond count handed in through the [`Clock`] trait. The two
+//! implementations live here, in `src/util/`, the one place the
+//! serving edge is allowed to touch real time:
+//!
+//! * [`MonotonicClock`] — microseconds since its own construction
+//!   (process-relative, monotonic, never negative). This is what
+//!   `serve-http`, the coordinator and the CLI wire in.
+//! * [`TestClock`] — a hand-advanced counter, so tests pin exact span
+//!   timestamps and byte-stable Chrome trace JSON.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Source of monotonic microsecond timestamps for span recording.
+pub trait Clock: Send + Sync {
+    /// Microseconds since the clock's epoch (construction time for
+    /// [`MonotonicClock`], whatever the test set for [`TestClock`]).
+    fn now_us(&self) -> u64;
+}
+
+/// Real monotonic time, relative to construction.
+#[derive(Debug)]
+pub struct MonotonicClock {
+    epoch: Instant,
+}
+
+impl MonotonicClock {
+    pub fn new() -> MonotonicClock {
+        MonotonicClock { epoch: Instant::now() }
+    }
+}
+
+impl Default for MonotonicClock {
+    fn default() -> Self {
+        MonotonicClock::new()
+    }
+}
+
+impl Clock for MonotonicClock {
+    fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+}
+
+/// Convenience: a freshly-epoched real clock, ready to hand to
+/// [`crate::obs::Registry::new`].
+pub fn monotonic() -> Arc<dyn Clock> {
+    Arc::new(MonotonicClock::new())
+}
+
+/// Deterministic clock for tests: starts at 0, moves only when told.
+#[derive(Debug, Default)]
+pub struct TestClock {
+    t: AtomicU64,
+}
+
+impl TestClock {
+    pub fn new() -> TestClock {
+        TestClock::default()
+    }
+
+    /// Jump to an absolute microsecond value.
+    pub fn set(&self, us: u64) {
+        self.t.store(us, Ordering::SeqCst);
+    }
+
+    /// Advance by `us` microseconds.
+    pub fn advance(&self, us: u64) {
+        self.t.fetch_add(us, Ordering::SeqCst);
+    }
+}
+
+impl Clock for TestClock {
+    fn now_us(&self) -> u64 {
+        self.t.load(Ordering::SeqCst)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn monotonic_clock_never_goes_backwards() {
+        let c = MonotonicClock::new();
+        let a = c.now_us();
+        let b = c.now_us();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn test_clock_is_hand_driven() {
+        let c = TestClock::new();
+        assert_eq!(c.now_us(), 0);
+        c.advance(10);
+        assert_eq!(c.now_us(), 10);
+        c.set(1000);
+        assert_eq!(c.now_us(), 1000);
+        c.advance(5);
+        assert_eq!(c.now_us(), 1005);
+    }
+}

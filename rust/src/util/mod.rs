@@ -6,6 +6,7 @@
 
 pub mod bench;
 pub mod cli;
+pub mod clock;
 pub mod json;
 pub mod lockcheck;
 pub mod prop;

@@ -1,0 +1,363 @@
+//! Integration tests for the tracing & profiling layer (`src/obs/`):
+//!
+//!   * ring buffers stay bounded and overwrite oldest-first;
+//!   * a traced pool emits the causally-linked span chain
+//!     root → `pool.admit` → `pool.queue` → `pool.exec`;
+//!   * trace IDs survive the failure paths: per-attempt `pool.retry`
+//!     instants, and a cross-worker requeue keeps the rescued request's
+//!     original trace ID end to end;
+//!   * Chrome trace-event JSON is byte-stable given pinned timestamps
+//!     (the `TestClock`);
+//!   * pool latency telemetry is O(1) in memory under a million-request
+//!     loop, with deterministic quantiles (satellite of ISSUE-9: the
+//!     unbounded `latencies_us` vector is gone).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use rram_pattern_accel::coordinator::{
+    BalancePolicy, Coordinator, CoordinatorConfig, InferBackend, Metrics,
+};
+use rram_pattern_accel::obs::{
+    self, chrome_trace_json, Registry, SpanRecord, TraceCtx,
+    DEFAULT_RESERVOIR_CAP,
+};
+use rram_pattern_accel::util::clock::TestClock;
+
+fn test_registry(cap: usize) -> (Arc<TestClock>, Arc<Registry>) {
+    let clock = Arc::new(TestClock::new());
+    let reg = Registry::new(clock.clone(), cap);
+    (clock, reg)
+}
+
+/// Deterministic single-slot backend: sums the two input elements.
+struct SumBackend;
+
+impl InferBackend for SumBackend {
+    fn input_len(&self) -> usize {
+        2
+    }
+    fn output_len(&self) -> usize {
+        1
+    }
+    fn batch_size(&self) -> usize {
+        1
+    }
+    fn run_batch(&self, batch: &[f32]) -> Result<Vec<f32>, String> {
+        Ok(vec![batch[0] + batch[1]])
+    }
+}
+
+fn find<'a>(spans: &'a [SpanRecord], name: &str) -> Option<&'a SpanRecord> {
+    spans.iter().find(|s| s.name == name)
+}
+
+#[test]
+fn ring_buffers_stay_bounded_under_load() {
+    let (_clock, reg) = test_registry(8);
+    let buf = reg.buffer("load");
+    for i in 0..100u64 {
+        reg.record(&buf, 1, 0, "e", i, 1, &[("i", i)]);
+    }
+    assert_eq!(buf.len(), 8, "ring bounded at capacity");
+    assert_eq!(buf.capacity(), 8);
+    let snap = buf.snapshot();
+    let starts: Vec<u64> = snap.iter().map(|s| s.start_us).collect();
+    assert_eq!(starts, (92..100).collect::<Vec<u64>>(), "oldest overwritten");
+}
+
+/// The acceptance criterion of ISSUE-9: one traced request produces at
+/// least four nested, causally-linked spans (boundary root →
+/// `pool.admit` → `pool.queue` → `pool.exec`), and the reply echoes the
+/// trace ID for correlation.
+#[test]
+fn traced_pool_emits_nested_span_chain() {
+    let (_clock, reg) = test_registry(64);
+    let c = Coordinator::start_pool(
+        |_worker| SumBackend,
+        CoordinatorConfig {
+            max_wait: Duration::from_millis(1),
+            trace: Some(reg.clone()),
+            ..Default::default()
+        },
+        None,
+    );
+    // Emulate the serving boundary the way serve_http does: mint the
+    // trace, open a root span, propagate the context into the pool.
+    let edge = reg.buffer("edge");
+    let trace_id = reg.new_trace();
+    assert_ne!(trace_id, 0);
+    let root = reg.begin(trace_id, 0, "edge.infer");
+    let ctx = TraceCtx { trace_id, parent: root.span_id };
+    let reply = c
+        .submit_traced(vec![2.0, 3.0], None, ctx)
+        .recv_timeout(Duration::from_secs(10))
+        .expect("terminal reply");
+    assert_eq!(reply.result.expect("success")[0], 5.0);
+    assert_eq!(reply.trace_id, trace_id, "reply echoes the trace ID");
+    reg.end(&edge, root, &[("status", 200)]);
+    c.shutdown();
+
+    let spans: Vec<SpanRecord> = reg
+        .snapshot()
+        .into_iter()
+        .filter(|s| s.trace_id == trace_id)
+        .collect();
+    assert!(spans.len() >= 4, "expected >= 4 spans, got {spans:?}");
+    let root_rec = find(&spans, "edge.infer").expect("root span");
+    let admit = find(&spans, "pool.admit").expect("admission span");
+    let queue = find(&spans, "pool.queue").expect("queue span");
+    let exec = find(&spans, "pool.exec").expect("exec span");
+    assert_eq!(root_rec.parent_id, 0, "root has no parent");
+    assert_eq!(admit.parent_id, root_rec.span_id);
+    assert_eq!(queue.parent_id, admit.span_id);
+    assert_eq!(exec.parent_id, queue.span_id);
+    assert!(
+        exec.args().iter().any(|&(k, v)| k == "fill" && v >= 1),
+        "exec span carries the batch fill: {:?}",
+        exec.args()
+    );
+    // the admission span landed in the dispatcher's ring, the
+    // queue/exec spans in the worker's
+    let names: Vec<String> =
+        reg.buffers().iter().map(|b| b.name().to_string()).collect();
+    assert!(names.contains(&"dispatch".to_string()), "{names:?}");
+    assert!(names.contains(&"worker-0".to_string()), "{names:?}");
+}
+
+/// A cross-worker requeue keeps the rescued request's original trace
+/// ID: the whole journey — dead worker, `pool.requeue` instant, rescue
+/// on the sibling — is one trace.
+#[test]
+fn requeued_request_keeps_its_trace_id() {
+    struct DirectedBackend {
+        dead: bool,
+    }
+    impl InferBackend for DirectedBackend {
+        fn input_len(&self) -> usize {
+            2
+        }
+        fn output_len(&self) -> usize {
+            1
+        }
+        fn batch_size(&self) -> usize {
+            1
+        }
+        fn run_batch(&self, batch: &[f32]) -> Result<Vec<f32>, String> {
+            if self.dead {
+                return Err("dead backend".to_string());
+            }
+            Ok(vec![batch[0] + batch[1]])
+        }
+    }
+    let (_clock, reg) = test_registry(64);
+    let c = Coordinator::start_pool(
+        |worker| DirectedBackend { dead: worker == 0 },
+        CoordinatorConfig {
+            max_wait: Duration::from_millis(1),
+            max_retries: 0,
+            workers: 2,
+            balance: BalancePolicy::RoundRobin,
+            quarantine_after: 0, // keep routing to the dead worker
+            max_requeues: 1,
+            trace: Some(reg.clone()),
+            ..Default::default()
+        },
+        None,
+    );
+    let trace_id = reg.new_trace();
+    let ctx = TraceCtx { trace_id, parent: 0 };
+    let reply = c
+        .submit_traced(vec![4.0, 1.0], None, ctx)
+        .recv_timeout(Duration::from_secs(10))
+        .expect("terminal reply");
+    assert_eq!(reply.result.expect("requeue rescues the request")[0], 5.0);
+    assert_eq!(
+        reply.trace_id, trace_id,
+        "requeued request keeps its original trace ID"
+    );
+    c.shutdown();
+
+    let spans: Vec<SpanRecord> = reg
+        .snapshot()
+        .into_iter()
+        .filter(|s| s.trace_id == trace_id)
+        .collect();
+    let requeue = find(&spans, "pool.requeue").expect("requeue instant");
+    assert_eq!(requeue.dur_us, 0, "instant event");
+    assert!(
+        requeue
+            .args()
+            .iter()
+            .any(|&(k, v)| k == "from_worker" && v == 0),
+        "{:?}",
+        requeue.args()
+    );
+    // both admissions (initial + requeue) and the final exec are on
+    // the same trace
+    let admits = spans.iter().filter(|s| s.name == "pool.admit").count();
+    assert_eq!(admits, 2, "{spans:?}");
+    assert!(find(&spans, "pool.exec").is_some(), "{spans:?}");
+}
+
+/// Per-attempt `pool.retry` instants share the request's trace, and the
+/// final `pool.exec` span reports the attempt count.
+#[test]
+fn retry_instants_share_the_trace() {
+    struct FailOnce {
+        calls: AtomicUsize,
+    }
+    impl InferBackend for FailOnce {
+        fn input_len(&self) -> usize {
+            2
+        }
+        fn output_len(&self) -> usize {
+            1
+        }
+        fn batch_size(&self) -> usize {
+            1
+        }
+        fn run_batch(&self, batch: &[f32]) -> Result<Vec<f32>, String> {
+            if self.calls.fetch_add(1, Ordering::SeqCst) == 0 {
+                return Err("transient".to_string());
+            }
+            Ok(vec![batch[0] + batch[1]])
+        }
+    }
+    let (_clock, reg) = test_registry(64);
+    let c = Coordinator::start_pool(
+        |_worker| FailOnce { calls: AtomicUsize::new(0) },
+        CoordinatorConfig {
+            max_wait: Duration::from_millis(1),
+            max_retries: 1,
+            trace: Some(reg.clone()),
+            ..Default::default()
+        },
+        None,
+    );
+    let trace_id = reg.new_trace();
+    let reply = c
+        .submit_traced(vec![1.0, 1.0], None, TraceCtx { trace_id, parent: 0 })
+        .recv_timeout(Duration::from_secs(10))
+        .expect("terminal reply");
+    assert_eq!(reply.result.expect("retry rescues the batch")[0], 2.0);
+    c.shutdown();
+
+    let spans: Vec<SpanRecord> = reg
+        .snapshot()
+        .into_iter()
+        .filter(|s| s.trace_id == trace_id)
+        .collect();
+    let retry = find(&spans, "pool.retry").expect("retry instant");
+    assert!(
+        retry.args().iter().any(|&(k, v)| k == "attempt" && v == 1),
+        "{:?}",
+        retry.args()
+    );
+    let exec = find(&spans, "pool.exec").expect("exec span");
+    assert!(
+        exec.args().iter().any(|&(k, v)| k == "attempts" && v == 2),
+        "{:?}",
+        exec.args()
+    );
+}
+
+/// Chrome trace-event export is byte-stable: two identically-driven
+/// registries with pinned clocks produce identical compact JSON.
+#[test]
+fn chrome_trace_json_is_byte_stable() {
+    let build = || {
+        let (clock, reg) = test_registry(16);
+        let buf = reg.buffer("main");
+        clock.set(100);
+        let t = reg.new_trace();
+        let outer = reg.begin(t, 0, "outer");
+        clock.advance(40);
+        let inner = reg.begin(t, outer.span_id, "inner");
+        clock.advance(10);
+        let inner_id = reg.end(&buf, inner, &[("n", 2)]);
+        assert_ne!(inner_id, 0);
+        clock.advance(5);
+        reg.end(&buf, outer, &[]);
+        chrome_trace_json(&reg.snapshot()).to_string_compact()
+    };
+    let a = build();
+    let b = build();
+    assert_eq!(a, b, "byte-stable given pinned timestamps");
+    assert!(a.starts_with("{\"traceEvents\":["), "{a}");
+
+    // required Chrome trace-event keys, via the parsed form
+    let j = rram_pattern_accel::util::json::Json::parse(&a).expect("valid JSON");
+    let events = j.get("traceEvents");
+    let ev = events.idx(0);
+    assert_eq!(ev.get("ph").as_str(), Some("X"));
+    assert_eq!(ev.get("pid").as_u64(), Some(1));
+    assert!(ev.get("tid").as_u64().is_some());
+    assert!(ev.get("ts").as_u64().is_some());
+    assert!(ev.get("name").as_str().is_some());
+    assert!(ev.get("args").get("trace_id").as_u64().is_some());
+    // snapshot order is (start_us, span_id): outer (ts 100) first,
+    // then inner (ts 140, dur 10)
+    let inner = events.idx(1);
+    assert_eq!(inner.get("ts").as_u64(), Some(140));
+    assert_eq!(inner.get("dur").as_u64(), Some(10));
+}
+
+/// Satellite 1 of ISSUE-9: pool latency telemetry must be O(1) in
+/// memory however many requests pass through — the histogram holds
+/// every sample in fixed buckets, the reservoir caps the exact-quantile
+/// set — and quantiles must be deterministic run to run.
+#[test]
+fn latency_telemetry_is_bounded_and_deterministic() {
+    let run = || {
+        let m = Metrics::default();
+        for i in 0..1_000_000u64 {
+            m.record_latency_us((i % 1_000) as f64);
+        }
+        m
+    };
+    let a = run();
+    // the exact-value reservoir is capped; the histogram counted all
+    assert_eq!(a.latency_summary().len(), DEFAULT_RESERVOIR_CAP);
+    let sa = a.snapshot();
+    assert_eq!(sa.latency_count, 1_000_000);
+    assert!(sa.latency_p99_us > 0.0);
+    let last = *sa.latency_buckets.last().expect("buckets");
+    assert!(last.0.is_infinite());
+    assert_eq!(last.1, 1_000_000, "cumulative buckets cover every sample");
+
+    // bit-deterministic across identical runs, including after a merge
+    let b = run();
+    let sb = b.snapshot();
+    assert_eq!(sa.latency_p50_us, sb.latency_p50_us);
+    assert_eq!(sa.latency_p99_us, sb.latency_p99_us);
+    assert_eq!(sa.latency_mean_us, sb.latency_mean_us);
+    assert_eq!(sa.latency_buckets, sb.latency_buckets);
+    let merged = Metrics::merge([&a, &b]);
+    let sm = merged.snapshot();
+    assert_eq!(sm.latency_count, 2_000_000);
+    assert_eq!(sm.latency_p99_us, sa.latency_p99_us);
+}
+
+/// The process-wide cache counters only ever accumulate, and a store
+/// probe moves exactly one of hit/miss.
+#[test]
+fn cache_counters_accumulate_monotonically() {
+    let before = obs::counters::snapshot();
+    let dir = std::env::temp_dir()
+        .join(format!("rram-obs-it-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let store = rram_pattern_accel::store::PackStore::open(
+        &dir.to_string_lossy(),
+        "obs-test",
+    )
+    .expect("open pack");
+    assert!(store.get(42).is_none(), "cold store misses");
+    store.put(42, "answer", &[1, 2, 3]).expect("put");
+    assert!(store.get(42).is_some(), "hit after put");
+    let after = obs::counters::snapshot();
+    assert!(after.store_misses >= before.store_misses + 1);
+    assert!(after.store_hits >= before.store_hits + 1);
+    let _ = std::fs::remove_dir_all(&dir);
+}

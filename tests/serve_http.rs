@@ -3,7 +3,9 @@
 //! end-to-end tests over loopback — status-code mapping (504/429/502/
 //! 4xx families), exact mock logits, keep-alive, connection caps, and
 //! an arbitrary-byte fuzz asserting the server always answers with a
-//! well-formed status line and never panics a handler.
+//! well-formed status line and never panics a handler. ISSUE-9 adds
+//! end-to-end trace coverage: a traced pool behind the server must
+//! expose the request's nested span chain via `GET /debug/trace`.
 
 use std::io::Cursor;
 use std::time::Duration;
@@ -12,12 +14,14 @@ use rram_pattern_accel::coordinator::{
     Coordinator, CoordinatorConfig, CostModel, ERR_DEADLINE_PREFIX,
     ERR_OVERLOAD_PREFIX,
 };
+use rram_pattern_accel::obs;
 use rram_pattern_accel::serve_http::client::HttpClient;
 use rram_pattern_accel::serve_http::request::{
     read_request, ReadError, MAX_HEADERS,
 };
 use rram_pattern_accel::serve_http::scan::scan_infer;
 use rram_pattern_accel::serve_http::{HttpConfig, HttpServer, MockInferBackend};
+use rram_pattern_accel::util::clock;
 use rram_pattern_accel::util::json::Json;
 use rram_pattern_accel::util::prop;
 use rram_pattern_accel::util::rng::Rng;
@@ -275,6 +279,18 @@ fn healthz_and_metrics_roundtrip() {
         "rram_worker_requests_total{worker=\"1\"}",
         "rram_http_requests_total",
         "rram_http_handler_panics_total 0",
+        // Bounded-telemetry series: the latency/batch-fill histograms
+        // and the previously internal-only counters (quarantine,
+        // store/DSE cache) must all reach the scrape endpoint.
+        "rram_quarantine_events_total 0",
+        "rram_latency_us_hist_bucket{le=\"+Inf\"} 1",
+        "rram_latency_us_hist_count 1",
+        "rram_batch_fill_bucket{le=\"1\"} 1",
+        "rram_batch_fill_count 1",
+        "rram_store_hits_total",
+        "rram_store_misses_total",
+        "rram_dse_cache_hits_total",
+        "rram_dse_cache_misses_total",
     ] {
         assert!(text.contains(series), "missing {series:?} in:\n{text}");
     }
@@ -290,6 +306,96 @@ fn healthz_and_metrics_roundtrip() {
     );
     assert!(j.get("workers").as_arr().is_some());
     assert_eq!(j.get("http").get("handler_panics").as_u64(), Some(0));
+    assert_eq!(j.get("pool").get("quarantine_events").as_f64(), Some(0.0));
+    let hist = j.get("pool").get("latency_hist");
+    assert!(hist.get("sum").as_f64().is_some(), "{}", mj.body_text());
+    assert!(hist.get("buckets").as_arr().is_some(), "{}", mj.body_text());
+    assert!(j.get("cache").get("store_hits").as_f64().is_some());
+    server.shutdown();
+}
+
+/// ISSUE-9 acceptance: one served `POST /v1/infer` produces a trace of
+/// at least four causally-linked spans — `http.infer` → {`http.parse`,
+/// `pool.admit`} → `pool.queue` → `pool.exec` — retrievable as Chrome
+/// trace-event JSON from `GET /debug/trace`.
+#[test]
+fn debug_trace_serves_nested_span_chain() {
+    let server = start_mock(
+        mock(Duration::ZERO, false, 4),
+        CoordinatorConfig {
+            trace: Some(obs::Registry::new(
+                clock::monotonic(),
+                obs::DEFAULT_RING_CAPACITY,
+            )),
+            ..Default::default()
+        },
+        None,
+        HttpConfig::default(),
+    );
+    let mut c = HttpClient::connect(server.addr()).unwrap();
+    let r = c
+        .post("/v1/infer", &infer_body(&[1.0; INPUT_LEN], None, None))
+        .unwrap();
+    assert_eq!(r.status, 200, "{}", r.body_text());
+
+    let t = c.get("/debug/trace").unwrap();
+    assert_eq!(t.status, 200);
+    let j = Json::parse(&t.body_text()).unwrap();
+    let events = j.get("traceEvents").as_arr().expect("traceEvents array");
+
+    // Every exported event is a complete ("X") Chrome event on pid 1
+    // with the timeline fields Perfetto needs.
+    for e in events {
+        assert_eq!(e.get("ph").as_str(), Some("X"), "{}", t.body_text());
+        assert_eq!(e.get("pid").as_u64(), Some(1));
+        assert!(e.get("ts").as_u64().is_some());
+        assert!(e.get("tid").as_u64().is_some());
+        assert!(e.get("name").as_str().is_some());
+    }
+
+    // Walk the one request's trace by its minted ID.
+    let root = events
+        .iter()
+        .find(|e| e.get("name").as_str() == Some("http.infer"))
+        .expect("http.infer span");
+    let trace_id = root.get("args").get("trace_id").as_u64().expect("trace id");
+    assert!(trace_id >= 1);
+    let in_trace: Vec<&Json> = events
+        .iter()
+        .filter(|e| e.get("args").get("trace_id").as_u64() == Some(trace_id))
+        .collect();
+    assert!(
+        in_trace.len() >= 4,
+        "want >= 4 spans in trace {trace_id}, got {}:\n{}",
+        in_trace.len(),
+        t.body_text()
+    );
+    let field = |name: &str, key: &str| -> u64 {
+        in_trace
+            .iter()
+            .find(|e| e.get("name").as_str() == Some(name))
+            .unwrap_or_else(|| panic!("span {name} missing:\n{}", t.body_text()))
+            .get("args")
+            .get(key)
+            .as_u64()
+            .unwrap_or_else(|| panic!("span {name} lacks {key}"))
+    };
+    let root_id = field("http.infer", "span_id");
+    assert_eq!(field("http.parse", "parent_id"), root_id);
+    assert_eq!(field("pool.admit", "parent_id"), root_id);
+    assert_eq!(field("pool.queue", "parent_id"), field("pool.admit", "span_id"));
+    assert_eq!(field("pool.exec", "parent_id"), field("pool.queue", "span_id"));
+
+    // ?last=N truncates to the most recent spans; junk values keep the
+    // default instead of erroring a diagnostics endpoint.
+    let t1 = c.get("/debug/trace?last=1").unwrap();
+    let j1 = Json::parse(&t1.body_text()).unwrap();
+    assert_eq!(j1.get("traceEvents").as_arr().map(|a| a.len()), Some(1));
+    let tbad = c.get("/debug/trace?last=banana").unwrap();
+    assert_eq!(tbad.status, 200);
+    // Non-GET on the path is 405, like the other fixed routes.
+    assert_eq!(c.request("DELETE", "/debug/trace", b"").unwrap().status, 405);
+    assert_eq!(server.http_stats().handler_panics, 0);
     server.shutdown();
 }
 
