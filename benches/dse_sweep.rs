@@ -237,6 +237,9 @@ fn synth_results(n: usize) -> Vec<PointResult> {
         pruning: 0.86,
         zero_detection: true,
         block_switch_cycles: 2.0,
+        cores: 1,
+        noc_bandwidth: 32.0,
+        noc_hop_latency: 4.0,
     };
     (0..n)
         .map(|i| {

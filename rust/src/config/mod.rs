@@ -40,6 +40,18 @@ pub struct HardwareConfig {
     /// Input activation precision (bits); fed bit-serially through the
     /// `dac_bits` DAC over `input_bits / dac_bits` phases (ISAAC-style).
     pub input_bits: usize,
+    /// CIM cores on the chip. `1` (the default) is the paper's
+    /// monolithic accelerator; `> 1` turns on layer-to-core pipelining
+    /// (see `sim::placement`). Cores sit on a linear NoC chain, so the
+    /// hop count between cores `a` and `b` is `|a - b|`.
+    pub cores: usize,
+    /// Interconnect bandwidth between cores, in activation bytes per
+    /// cycle. Transfers of `v` bytes across the NoC cost
+    /// `v / noc_bandwidth` cycles of serialization.
+    pub noc_bandwidth: f64,
+    /// Per-hop NoC latency in cycles, charged once per hop a transfer
+    /// crosses on the chain.
+    pub noc_hop_latency: f64,
 }
 
 impl Default for HardwareConfig {
@@ -60,6 +72,9 @@ impl Default for HardwareConfig {
             dac_msps: 18.0,
             rram_pj_per_ou_op: 4.8,
             input_bits: 8,
+            cores: 1,
+            noc_bandwidth: 32.0,
+            noc_hop_latency: 4.0,
         }
     }
 }
@@ -112,6 +127,25 @@ impl HardwareConfig {
         Ok(hw)
     }
 
+    /// Derive a config from `self` with a different multi-core block,
+    /// validated — how the DSE sweep applies its `cores` ×
+    /// interconnect axes without touching the macro parameters.
+    pub fn with_cores(
+        &self,
+        cores: usize,
+        noc_bandwidth: f64,
+        noc_hop_latency: f64,
+    ) -> Result<HardwareConfig, String> {
+        let hw = HardwareConfig {
+            cores,
+            noc_bandwidth,
+            noc_hop_latency,
+            ..self.clone()
+        };
+        hw.validate()?;
+        Ok(hw)
+    }
+
     /// Config for the SmallCNN functional path, matching the Pallas
     /// kernel quantization (`python/compile/kernels/quant.py` defaults
     /// with `x_bits = 8`).
@@ -141,6 +175,9 @@ impl HardwareConfig {
             ("dac_msps", self.dac_msps.into()),
             ("rram_pj_per_ou_op", self.rram_pj_per_ou_op.into()),
             ("input_bits", self.input_bits.into()),
+            ("cores", self.cores.into()),
+            ("noc_bandwidth", self.noc_bandwidth.into()),
+            ("noc_hop_latency", self.noc_hop_latency.into()),
         ])
     }
 
@@ -164,6 +201,9 @@ impl HardwareConfig {
             dac_msps: f("dac_msps", d.dac_msps),
             rram_pj_per_ou_op: f("rram_pj_per_ou_op", d.rram_pj_per_ou_op),
             input_bits: u("input_bits", d.input_bits),
+            cores: u("cores", d.cores),
+            noc_bandwidth: f("noc_bandwidth", d.noc_bandwidth),
+            noc_hop_latency: f("noc_hop_latency", d.noc_hop_latency),
         };
         cfg.validate()?;
         Ok(cfg)
@@ -190,6 +230,16 @@ impl HardwareConfig {
                 self.ou_cols,
                 self.cells_per_weight()
             ));
+        }
+        if self.cores == 0 {
+            return Err("core count must be positive".into());
+        }
+        if !(self.noc_bandwidth > 0.0) || !self.noc_bandwidth.is_finite() {
+            return Err("noc_bandwidth must be positive and finite".into());
+        }
+        if !(self.noc_hop_latency >= 0.0) || !self.noc_hop_latency.is_finite()
+        {
+            return Err("noc_hop_latency must be non-negative and finite".into());
         }
         Ok(())
     }
@@ -374,6 +424,26 @@ mod tests {
         // everything else stays on the calibrated defaults
         assert_eq!(e.seed, SimConfig::default().seed);
         assert_eq!(s.zero_blob_ratio, SimConfig::default().zero_blob_ratio);
+    }
+
+    #[test]
+    fn multicore_block_roundtrips_and_validates() {
+        let hw = HardwareConfig::default();
+        assert_eq!(hw.cores, 1, "default stays the paper's single core");
+        let mc = hw.with_cores(4, 64.0, 2.0).unwrap();
+        assert_eq!(mc.cores, 4);
+        assert!((mc.noc_bandwidth - 64.0).abs() < 1e-12);
+        // macro parameters come from the base
+        assert_eq!(mc.xbar_rows, hw.xbar_rows);
+        let back = HardwareConfig::from_json(&mc.to_json()).unwrap();
+        assert_eq!(mc, back);
+        // legacy JSON without the multi-core block reads as single-core
+        let legacy = HardwareConfig::from_json(&hw.to_json()).unwrap();
+        assert_eq!(legacy.cores, 1);
+        assert!(hw.with_cores(0, 32.0, 4.0).is_err(), "zero cores");
+        assert!(hw.with_cores(2, 0.0, 4.0).is_err(), "zero bandwidth");
+        assert!(hw.with_cores(2, f64::NAN, 4.0).is_err(), "NaN bandwidth");
+        assert!(hw.with_cores(2, 32.0, -1.0).is_err(), "negative hop");
     }
 
     #[test]

@@ -220,6 +220,20 @@ impl CostModel {
         }
     }
 
+    /// Discount the per-request *cycle* cost by a multi-core pipeline
+    /// speedup (from [`crate::sim::placement`]): with the network's
+    /// layers pipelined over CIM cores, the per-image cycle cost the
+    /// dispatcher balances and admits on is the pipeline's, not the
+    /// single-core total. Energy is untouched — the same work runs,
+    /// just spread over cores. Non-finite or `≤ 1` speedups are
+    /// ignored (a broken placement must not inflate admission).
+    pub fn with_pipeline_speedup(mut self, speedup: f64) -> CostModel {
+        if speedup.is_finite() && speedup > 1.0 {
+            self.dense_cycles /= speedup;
+        }
+        self
+    }
+
     /// Estimate the cost of serving `image` (kept work is clamped to
     /// `[0, 1]` of the dense schedule, per signal).
     pub fn estimate(&self, image: &[f32]) -> CostEstimate {
@@ -1842,6 +1856,24 @@ mod tests {
         // kept work clamps at zero even for an extreme slope
         let all = m.estimate(&[0.0; 4]);
         assert_eq!(all.est_cycles, 0.0);
+    }
+
+    #[test]
+    fn cost_model_pipeline_speedup_scales_cycles_only() {
+        let m = CostModel {
+            dense_cycles: 1000.0,
+            dense_energy_pj: 400.0,
+            skip_slope: 0.0,
+            energy_skip_slope: 0.0,
+        };
+        let fast = m.clone().with_pipeline_speedup(2.0);
+        assert!((fast.dense_cycles - 500.0).abs() < 1e-9);
+        assert_eq!(fast.dense_energy_pj, 400.0);
+        // no-speedup, sub-unity and pathological inputs are ignored
+        for s in [1.0, 0.5, 0.0, -3.0, f64::NAN, f64::INFINITY] {
+            let same = m.clone().with_pipeline_speedup(s);
+            assert_eq!(same.dense_cycles, 1000.0, "speedup {s}");
+        }
     }
 
     #[test]

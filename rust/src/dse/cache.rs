@@ -44,8 +44,12 @@ use super::{PointMetrics, SweepPoint, Workload};
 /// gained the trace mode (`Workload::exact`) and the per-point
 /// simulation-policy axes (zero-detection, block-switch cost). v3: the
 /// binary pack backend (metrics as raw f64 bits; v2 JSON entries are
-/// still readable through the legacy fallback).
-const CACHE_FORMAT: usize = 3;
+/// still readable through the legacy fallback). v4: multi-core points
+/// (`cores` × interconnect axes, pipelined cycle metric) — the point
+/// and base-hardware JSON gained fields too, but the explicit bump
+/// guarantees no stale single-core entry is ever served for the new
+/// semantics.
+const CACHE_FORMAT: usize = 4;
 
 /// The last per-file JSON format — what the read-only legacy fallback
 /// (and the explicit legacy backend) speaks.
@@ -515,6 +519,9 @@ mod tests {
             pruning: 0.86,
             zero_detection: true,
             block_switch_cycles: 2.0,
+            cores: 1,
+            noc_bandwidth: 32.0,
+            noc_hop_latency: 4.0,
         }
     }
 
@@ -612,6 +619,14 @@ mod tests {
         // block-switch axis: miss
         let p_bs = SweepPoint { block_switch_cycles: 0.0, ..point() };
         assert!(c.load(&w_sampled, &p_bs).is_none());
+        // multi-core axes: a single-core entry never serves a
+        // multi-core point (or a different interconnect)
+        let p_mc = SweepPoint { cores: 2, ..point() };
+        assert!(c.load(&w_sampled, &p_mc).is_none());
+        let p_ic = SweepPoint { cores: 2, noc_bandwidth: 64.0, ..point() };
+        c.store(&w_sampled, &p_mc, &metrics()).unwrap();
+        assert!(c.load(&w_sampled, &p_ic).is_none());
+        assert!(c.load(&w_sampled, &p_mc).is_some());
         let _ = std::fs::remove_dir_all(c.dir());
     }
 

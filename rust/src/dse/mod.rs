@@ -68,12 +68,21 @@ pub struct SweepPoint {
     /// `SimConfig::block_switch_cycles` for this point (§IV-C index
     /// decode overhead per pattern-block crossing).
     pub block_switch_cycles: f64,
+    /// CIM cores for this point (`HardwareConfig::cores`); `> 1` routes
+    /// the point through the layer-to-core placement planner
+    /// ([`crate::sim::placement`]) and its pipelined cycle model.
+    pub cores: usize,
+    /// NoC bandwidth, bytes/cycle (`HardwareConfig::noc_bandwidth`).
+    pub noc_bandwidth: f64,
+    /// NoC per-hop latency, cycles (`HardwareConfig::noc_hop_latency`).
+    pub noc_hop_latency: f64,
 }
 
 impl SweepPoint {
-    /// Short human label, e.g. `pattern ou9x8 xb512 p8 s0.86 zd1 bs2`.
+    /// Short human label, e.g. `pattern ou9x8 xb512 p8 s0.86 zd1 bs2`;
+    /// multi-core points append ` c4 bw64 hop2`.
     pub fn label(&self) -> String {
-        format!(
+        let mut l = format!(
             "{} ou{}x{} xb{}x{} p{} s{:.2} zd{} bs{}",
             self.scheme,
             self.ou_rows,
@@ -84,7 +93,14 @@ impl SweepPoint {
             self.pruning,
             self.zero_detection as u8,
             self.block_switch_cycles,
-        )
+        );
+        if self.cores > 1 {
+            l.push_str(&format!(
+                " c{} bw{} hop{}",
+                self.cores, self.noc_bandwidth, self.noc_hop_latency
+            ));
+        }
+        l
     }
 
     /// The point's hardware config on the paper's Table I base.
@@ -92,11 +108,13 @@ impl SweepPoint {
         self.apply_dims(&HardwareConfig::default())
     }
 
-    /// Graft this point's OU / crossbar geometry onto an arbitrary base
-    /// config (e.g. [`HardwareConfig::smallcnn_functional`] when tuning
-    /// the serving stack), validated.
+    /// Graft this point's OU / crossbar geometry and multi-core block
+    /// onto an arbitrary base config (e.g.
+    /// [`HardwareConfig::smallcnn_functional`] when tuning the serving
+    /// stack), validated.
     pub fn apply_dims(&self, base: &HardwareConfig) -> Result<HardwareConfig, String> {
-        base.with_dims(self.ou_rows, self.ou_cols, self.xbar_rows, self.xbar_cols)
+        base.with_dims(self.ou_rows, self.ou_cols, self.xbar_rows, self.xbar_cols)?
+            .with_cores(self.cores, self.noc_bandwidth, self.noc_hop_latency)
     }
 
     /// Canonical JSON (BTreeMap-ordered keys): the cache identity and
@@ -114,6 +132,9 @@ impl SweepPoint {
             ("pruning", self.pruning.into()),
             ("zero_detection", self.zero_detection.into()),
             ("block_switch_cycles", self.block_switch_cycles.into()),
+            ("cores", self.cores.into()),
+            ("noc_bandwidth", self.noc_bandwidth.into()),
+            ("noc_hop_latency", self.noc_hop_latency.into()),
         ])
     }
 }
@@ -213,6 +234,16 @@ pub struct SweepSpec {
     /// `SimConfig::block_switch_cycles` axis (singleton `[2.0]` — the
     /// simulator default — in the named grids).
     pub block_switch: Vec<f64>,
+    /// Core-count axis (singleton `[1]` — the paper's monolithic chip —
+    /// in the named grids; widen via [`SweepSpec::with_core_axes`] or
+    /// the CLI's `--cores`).
+    pub cores: Vec<usize>,
+    /// Interconnect axis: `(noc_bandwidth, noc_hop_latency)` pairs
+    /// (singleton hardware default in the named grids). Single-core
+    /// points collapse this axis — with no inter-core traffic the knobs
+    /// are inert, and expanding them would evaluate bit-identical
+    /// duplicates.
+    pub interconnect: Vec<(f64, f64)>,
     pub workload: Workload,
 }
 
@@ -228,6 +259,8 @@ impl SweepSpec {
             pruning: vec![0.70, 0.86],
             zero_detection: vec![true],
             block_switch: vec![2.0],
+            cores: vec![1],
+            interconnect: vec![(32.0, 4.0)],
             workload: Workload::small(seed),
         }
     }
@@ -249,6 +282,8 @@ impl SweepSpec {
             pruning: vec![0.60, 0.70, 0.80, 0.86, 0.92],
             zero_detection: vec![true],
             block_switch: vec![2.0],
+            cores: vec![1],
+            interconnect: vec![(32.0, 4.0)],
             workload: Workload::small(seed),
         }
     }
@@ -275,6 +310,8 @@ impl SweepSpec {
             pruning: vec![0.60, 0.65, 0.70, 0.75, 0.80, 0.86, 0.92],
             zero_detection: vec![true, false],
             block_switch: vec![2.0, 8.0],
+            cores: vec![1],
+            interconnect: vec![(32.0, 4.0)],
             workload: Workload::small(seed),
         }
     }
@@ -292,6 +329,23 @@ impl SweepSpec {
         self
     }
 
+    /// Widen the multi-core axes: core counts and `(bandwidth,
+    /// hop_latency)` interconnect pairs (empty slices keep the current
+    /// axis). Returns `self` for builder-style use.
+    pub fn with_core_axes(
+        mut self,
+        cores: &[usize],
+        interconnect: &[(f64, f64)],
+    ) -> SweepSpec {
+        if !cores.is_empty() {
+            self.cores = cores.to_vec();
+        }
+        if !interconnect.is_empty() {
+            self.interconnect = interconnect.to_vec();
+        }
+        self
+    }
+
     pub fn by_name(name: &str, seed: u64) -> Option<SweepSpec> {
         match name {
             "small" => Some(SweepSpec::small(seed)),
@@ -302,15 +356,17 @@ impl SweepSpec {
     }
 
     /// Expand the axes into the full grid, scheme-major then OU, xbar,
-    /// pattern count, pruning rate, zero-detection, block-switch cost
-    /// innermost. The order is part of the determinism contract
-    /// (frontier members are reported by index); the singleton
-    /// simulation-policy defaults keep the named grids' historical
-    /// order and point counts. Schemes without an Input Preprocessing
-    /// Unit ([`crate::sim::scheme_has_ipu`]) ignore the
-    /// simulation-policy knobs entirely, so their points keep only the
-    /// leading axis values — expanding them would evaluate bit-identical
-    /// duplicates and report duplicate frontier members.
+    /// pattern count, pruning rate, zero-detection, block-switch cost,
+    /// core count, interconnect innermost. The order is part of the
+    /// determinism contract (frontier members are reported by index);
+    /// the singleton simulation-policy and multi-core defaults keep the
+    /// named grids' historical order and point counts. Schemes without
+    /// an Input Preprocessing Unit ([`crate::sim::scheme_has_ipu`])
+    /// ignore the simulation-policy knobs entirely, and single-core
+    /// points ignore the interconnect knobs — in both cases the inert
+    /// axes collapse to their leading value, because expanding them
+    /// would evaluate bit-identical duplicates and report duplicate
+    /// frontier members.
     pub fn expand(&self) -> Vec<SweepPoint> {
         let mut points = Vec::new();
         for scheme in &self.schemes {
@@ -331,17 +387,33 @@ impl SweepSpec {
                         for &pruning in &self.pruning {
                             for &zero_detection in zd_axis {
                                 for &block_switch_cycles in bs_axis {
-                                    points.push(SweepPoint {
-                                        scheme: scheme.clone(),
-                                        ou_rows,
-                                        ou_cols,
-                                        xbar_rows,
-                                        xbar_cols,
-                                        n_patterns,
-                                        pruning,
-                                        zero_detection,
-                                        block_switch_cycles,
-                                    });
+                                    for &cores in &self.cores {
+                                        let ic_axis: &[(f64, f64)] =
+                                            if cores > 1 {
+                                                &self.interconnect
+                                            } else {
+                                                &self.interconnect[..self
+                                                    .interconnect
+                                                    .len()
+                                                    .min(1)]
+                                            };
+                                        for &(bw, hop) in ic_axis {
+                                            points.push(SweepPoint {
+                                                scheme: scheme.clone(),
+                                                ou_rows,
+                                                ou_cols,
+                                                xbar_rows,
+                                                xbar_cols,
+                                                n_patterns,
+                                                pruning,
+                                                zero_detection,
+                                                block_switch_cycles,
+                                                cores,
+                                                noc_bandwidth: bw,
+                                                noc_hop_latency: hop,
+                                            });
+                                        }
+                                    }
                                 }
                             }
                         }
@@ -384,6 +456,19 @@ impl SweepSpec {
             (
                 "block_switch",
                 Json::Arr(self.block_switch.iter().map(|b| (*b).into()).collect()),
+            ),
+            (
+                "cores",
+                Json::Arr(self.cores.iter().map(|c| (*c).into()).collect()),
+            ),
+            (
+                "interconnect",
+                Json::Arr(
+                    self.interconnect
+                        .iter()
+                        .map(|(b, h)| Json::Arr(vec![(*b).into(), (*h).into()]))
+                        .collect(),
+                ),
             ),
             ("workload", self.workload.to_json()),
         ])
@@ -475,6 +560,9 @@ mod tests {
         // the named grids pin the simulator defaults on every point
         assert!(pts.iter().all(|p| p.zero_detection));
         assert!(pts.iter().all(|p| p.block_switch_cycles == 2.0));
+        // ... and stay single-core on the hardware-default interconnect
+        assert!(pts.iter().all(|p| p.cores == 1));
+        assert!(pts.iter().all(|p| p.noc_bandwidth == 32.0));
         // scheme-major
         assert!(pts[..24].iter().all(|p| p.scheme == "naive"));
         assert!(pts[24..].iter().all(|p| p.scheme == "pattern"));
@@ -520,6 +608,35 @@ mod tests {
     }
 
     #[test]
+    fn core_axes_expand_innermost_and_collapse_single_core() {
+        let spec = SweepSpec::small(42)
+            .with_core_axes(&[1, 2], &[(32.0, 4.0), (64.0, 1.0)]);
+        let pts = spec.expand();
+        // cores=1 collapses the interconnect axis (1 variant), cores=2
+        // expands it (2 variants): 48 × 3
+        assert_eq!(pts.len(), 48 * 3, "single-core interconnect collapse");
+        // interconnect is innermost, cores just outside it
+        assert!(pts[0].cores == 1 && pts[0].noc_bandwidth == 32.0);
+        assert!(pts[1].cores == 2 && pts[1].noc_bandwidth == 32.0);
+        assert!(pts[2].cores == 2 && pts[2].noc_bandwidth == 64.0);
+        assert_eq!(pts[0].pruning, pts[2].pruning);
+        // multi-core reaches the identity and the label
+        assert_ne!(pts[0].to_json(), pts[1].to_json());
+        assert!(pts[2].label().contains("c2 bw64"), "{}", pts[2].label());
+        assert!(!pts[0].label().contains(" c1"), "single-core label stays");
+        // no duplicate identities survive the collapse
+        let ids: Vec<String> =
+            pts.iter().map(|p| p.to_json().to_string_compact()).collect();
+        let mut dedup = ids.clone();
+        dedup.sort();
+        dedup.dedup();
+        assert_eq!(dedup.len(), ids.len(), "duplicate grid points");
+        // empty slices keep the existing axes
+        let kept = SweepSpec::small(42).with_core_axes(&[], &[]);
+        assert_eq!(kept.expand().len(), 48);
+    }
+
+    #[test]
     fn large_grid_hits_dse_scale() {
         let spec = SweepSpec::large(42);
         let pts = spec.expand();
@@ -544,6 +661,9 @@ mod tests {
             pruning: 0.8,
             zero_detection: true,
             block_switch_cycles: 2.0,
+            cores: 1,
+            noc_bandwidth: 32.0,
+            noc_hop_latency: 4.0,
         };
         let hw = p.hardware().expect("valid point");
         assert_eq!(hw.ou_rows, 9);
@@ -567,6 +687,9 @@ mod tests {
             pruning: 0.86,
             zero_detection: true,
             block_switch_cycles: 2.0,
+            cores: 1,
+            noc_bandwidth: 32.0,
+            noc_hop_latency: 4.0,
         };
         let s = p.to_json().to_string_compact();
         // BTreeMap ordering: stable bytes for the cache key

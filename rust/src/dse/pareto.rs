@@ -509,7 +509,7 @@ impl AxisSensitivity {
 /// Group the valid results along each sweep axis, in first-appearance
 /// order (deterministic: results are in grid order).
 pub fn sensitivity(results: &[PointResult]) -> Vec<AxisSensitivity> {
-    let axes: [(&str, fn(&super::SweepPoint) -> String); 7] = [
+    let axes: [(&str, fn(&super::SweepPoint) -> String); 9] = [
         ("scheme", |p| p.scheme.clone()),
         ("ou", |p| format!("{}x{}", p.ou_rows, p.ou_cols)),
         ("xbar", |p| format!("{}x{}", p.xbar_rows, p.xbar_cols)),
@@ -517,6 +517,11 @@ pub fn sensitivity(results: &[PointResult]) -> Vec<AxisSensitivity> {
         ("pruning", |p| format!("{:.2}", p.pruning)),
         ("zero_detection", |p| p.zero_detection.to_string()),
         ("block_switch", |p| p.block_switch_cycles.to_string()),
+        ("cores", |p| p.cores.to_string()),
+        (
+            "interconnect",
+            |p| format!("bw{}hop{}", p.noc_bandwidth, p.noc_hop_latency),
+        ),
     ];
     axes.iter()
         .map(|(axis, labeler)| {
@@ -575,6 +580,9 @@ mod tests {
             pruning: 0.86,
             zero_detection: true,
             block_switch_cycles: 2.0,
+            cores: 1,
+            noc_bandwidth: 32.0,
+            noc_hop_latency: 4.0,
         }
     }
 
@@ -799,7 +807,9 @@ mod tests {
         b.point.scheme = "naive".into();
         let c = result(2, 1.0, 1.0, 40.0); // pattern
         let axes = sensitivity(&[a, b, c]);
-        assert_eq!(axes.len(), 7);
+        assert_eq!(axes.len(), 9);
+        assert_eq!(axes[7].axis, "cores");
+        assert_eq!(axes[8].axis, "interconnect");
         let scheme = &axes[0];
         assert_eq!(scheme.axis, "scheme");
         assert_eq!(scheme.groups.len(), 2);

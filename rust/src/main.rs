@@ -11,11 +11,18 @@
 //!   dse       — design-space exploration: parallel sweep over
 //!               mapping/OU/crossbar/pattern/pruning configs (plus the
 //!               `--zd`/`--block-switch` simulation-policy axes and
-//!               `--exact` trace mode), Pareto frontier as table +
-//!               results/<out>.{json,csv}, cached under
-//!               results/dse_cache/; `--profile` times the sweep's
-//!               stages from the CLI side (the dse module itself stays
-//!               wall-clock-free) and writes results/dse_profile.json
+//!               `--exact` trace mode and the `--cores`/`--noc-bw`/
+//!               `--noc-hop` multi-core scale-out axes), Pareto
+//!               frontier as table + results/<out>.{json,csv}, cached
+//!               under results/dse_cache/; `--profile` times the
+//!               sweep's stages from the CLI side (the dse module
+//!               itself stays wall-clock-free) and writes
+//!               results/dse_profile.json
+//!   place     — layer-to-core placement on a multi-core CIM chip:
+//!               plan the pipeline (greedy-LPT vs optimal-contiguous
+//!               baseline, never worse than the baseline), print the
+//!               per-core utilization + transfer breakdown, emit the
+//!               deterministic results/placement.json artifact
 //!   serve     — start the sharded serving coordinator over the PJRT
 //!               artifact (`--workers N --balance cost|rr`, per-request
 //!               cost estimates calibrated from exact traces,
@@ -88,6 +95,7 @@ fn main() {
         "simulate" => cmd_simulate(rest),
         "batch-sim" => cmd_batch_sim(rest),
         "dse" => cmd_dse(rest),
+        "place" => cmd_place(rest),
         "serve" => cmd_serve(rest),
         "serve-http" => cmd_serve_http(rest),
         "trace" => cmd_trace(rest),
@@ -97,7 +105,7 @@ fn main() {
         "lint" => cmd_lint(rest),
         _ => {
             eprintln!(
-                "usage: rram-accel <map|simulate|batch-sim|dse|serve|\
+                "usage: rram-accel <map|simulate|batch-sim|dse|place|serve|\
                  serve-http|trace|e2e|report|artifacts|lint> [options]\n\
                  run a subcommand with --help for its options"
             );
@@ -387,6 +395,9 @@ fn cmd_dse(rest: Vec<String>) -> i32 {
     .opt("out", "dse_frontier", "artifact basename under results/")
     .opt("zd", "on", "zero-detection axis: on|off|both")
     .opt("block-switch", "2", "block-switch cycle cost axis (comma-separated)")
+    .opt("cores", "1", "CIM core-count axis (comma-separated)")
+    .opt("noc-bw", "32", "NoC bandwidth axis, bytes/cycle (comma-separated)")
+    .opt("noc-hop", "4", "NoC per-hop latency axis, cycles (comma-separated)")
     .flag("exact", "exact traces: cost every output position (no sampling)")
     .flag("no-cache", "evaluate every point fresh")
     .flag(
@@ -435,7 +446,35 @@ fn cmd_dse(rest: Vec<String>) -> i32 {
             }
         }
     }
-    let spec = spec.with_sim_axes(&zd_axis, &bs_axis);
+    let mut core_axis = Vec::new();
+    for part in args.get("cores").split(',') {
+        match part.trim().parse::<usize>() {
+            Ok(v) if v >= 1 => core_axis.push(v),
+            _ => return usage(format!("bad cores value '{}'", part.trim())),
+        }
+    }
+    let mut bw_axis = Vec::new();
+    for part in args.get("noc-bw").split(',') {
+        match part.trim().parse::<f64>() {
+            Ok(v) if v.is_finite() && v > 0.0 => bw_axis.push(v),
+            _ => return usage(format!("bad noc-bw value '{}'", part.trim())),
+        }
+    }
+    let mut hop_axis = Vec::new();
+    for part in args.get("noc-hop").split(',') {
+        match part.trim().parse::<f64>() {
+            Ok(v) if v.is_finite() && v >= 0.0 => hop_axis.push(v),
+            _ => return usage(format!("bad noc-hop value '{}'", part.trim())),
+        }
+    }
+    // Cross bandwidth × hop latency into the interconnect axis.
+    let interconnect: Vec<(f64, f64)> = bw_axis
+        .iter()
+        .flat_map(|&bw| hop_axis.iter().map(move |&hop| (bw, hop)))
+        .collect();
+    let spec = spec
+        .with_sim_axes(&zd_axis, &bs_axis)
+        .with_core_axes(&core_axis, &interconnect);
     let obj = match Objective::parse(args.get("weights")) {
         Ok(o) => o,
         Err(e) => return usage(e),
@@ -577,6 +616,116 @@ fn cmd_dse(rest: Vec<String>) -> i32 {
     } else {
         0
     }
+}
+
+/// `rram-accel place` — plan the layer-to-core placement of a network
+/// on a multi-core CIM chip and report the per-core utilization and
+/// transfer breakdown. The JSON artifact under `results/` is pure
+/// function of the flags: byte-identical across thread counts and
+/// repeated runs.
+fn cmd_place(rest: Vec<String>) -> i32 {
+    let args = match Args::new(
+        "layer-to-core placement + pipelining on a multi-core CIM chip",
+    )
+    .opt("dataset", "cifar10", "cifar10|cifar100|imagenet (synthetic VGG16)")
+    .opt("scheme", "pattern", "naive|pattern|kmeans|ou_sparse")
+    .opt("cores", "4", "CIM cores on the chip")
+    .opt("noc-bw", "32", "NoC bandwidth, bytes per cycle")
+    .opt("noc-hop", "4", "NoC per-hop latency, cycles")
+    .opt("images", "8", "batch size in images")
+    .opt("samples", "64", "sampled positions per layer")
+    .opt("seed", "42", "synthetic weight seed")
+    .opt(
+        "threads",
+        "0",
+        "worker threads (0 = auto; the artifact is thread-invariant)",
+    )
+    .opt("out", "placement", "artifact basename under results/")
+    .flag("no-zero-detect", "disable IPU zero detection (dense transfers)")
+    .flag("json", "write results/<out>.json")
+    .parse(rest)
+    {
+        Ok(a) => a,
+        Err(e) => return usage(e),
+    };
+    let cores = args.get_usize("cores").unwrap_or(4).max(1);
+    let bw = args.get_f64("noc-bw").unwrap_or(32.0);
+    let hop = args.get_f64("noc-hop").unwrap_or(4.0);
+    let hw = match HardwareConfig::default().with_cores(cores, bw, hop) {
+        Ok(hw) => hw,
+        Err(e) => return usage(format!("bad multi-core block: {e}")),
+    };
+    let geom = CellGeometry::from_hw(&hw);
+    let threads = auto_threads(&args);
+    let profile = match DatasetProfile::by_name(args.get("dataset")) {
+        Some(p) => p,
+        None => return usage(format!("unknown dataset {}", args.get("dataset"))),
+    };
+    let scheme = match scheme_by_name(args.get("scheme")) {
+        Some(s) => s,
+        None => return usage(format!("unknown scheme {}", args.get("scheme"))),
+    };
+    let n_images = args.get_usize("images").unwrap_or(8).max(1);
+    let sim_cfg = SimConfig {
+        sample_positions: Some(args.get_usize("samples").unwrap_or(64)),
+        zero_detection: !args.get_flag("no-zero-detect"),
+        ..Default::default()
+    };
+    let seed = args.get_u64("seed").unwrap_or(42);
+
+    let nw = profile.generate(seed);
+    let spec = nw.spec.clone();
+    let mapped = scheme.map_network(&nw, &geom, threads);
+    let batch =
+        sim::simulate_network_batch(&mapped, &spec, &hw, &sim_cfg, n_images, threads);
+    let ipu =
+        sim::scheme_has_ipu(args.get("scheme")) && sim_cfg.zero_detection;
+    let problem = sim::placement::PlacementProblem::from_batch(
+        &batch, &spec, &hw, &sim_cfg, ipu,
+    );
+    let best = sim::placement::plan(&problem);
+    let base = sim::placement::contiguous(&problem);
+    println!("{}", report::placement_table(&best, n_images));
+    println!(
+        "planner max stage {:.0} vs contiguous baseline {:.0} ({})",
+        best.max_stage_time(),
+        base.max_stage_time(),
+        if best.max_stage_time() < base.max_stage_time() {
+            "greedy wins"
+        } else {
+            "baseline kept"
+        },
+    );
+    let makespan = best.pipeline_makespan(n_images);
+    println!(
+        "batch of {}: single-core {:.0} cycles, pipelined {:.0} cycles \
+         ({:.2}x)",
+        n_images,
+        batch.total_cycles(),
+        makespan,
+        batch.total_cycles() / makespan.max(1e-12),
+    );
+    // The never-worse pin is structural; a violation here is a
+    // planner bug, not a tuning issue.
+    let mut exit = 0;
+    if best.max_stage_time() > base.max_stage_time() {
+        exit = 1;
+        eprintln!(
+            "place: planner worse than its contiguous baseline — pin broken"
+        );
+    }
+    if args.get_flag("json") {
+        let j = report::placement_json(&best, n_images, batch.total_cycles());
+        let name = format!("{}.json", args.get("out"));
+        match report::write_json(&name, &j) {
+            Ok(()) => println!("wrote results/{name}"),
+            Err(e) => {
+                exit = 1;
+                eprintln!("write results/{name}: {e}");
+            }
+        }
+    }
+    exit
 }
 
 fn cmd_serve(rest: Vec<String>) -> i32 {
@@ -724,6 +873,10 @@ fn cmd_serve(rest: Vec<String>) -> i32 {
                 HardwareConfig::smallcnn_functional(),
             ),
         };
+    let serve_scheme_name: String = tuned
+        .as_ref()
+        .map(|t| t.point.scheme.clone())
+        .unwrap_or_else(|| "pattern".to_string());
 
     // Per-request cost model, calibrated from *real* exact-mode
     // activation traces over the first test images (per-layer
@@ -735,7 +888,7 @@ fn cmd_serve(rest: Vec<String>) -> i32 {
         let sim_cfg = SimConfig::default();
         let threads = threadpool::default_threads();
         let k = calib_images.min(td.test_x.shape[0]);
-        if k >= 2 {
+        let cm = if k >= 2 {
             let img_len: usize = td.test_x.shape[1..].iter().product();
             let calib_x = Tensor::from_vec(
                 &[k, td.test_x.shape[1], td.test_x.shape[2], td.test_x.shape[3]],
@@ -754,6 +907,30 @@ fn cmd_serve(rest: Vec<String>) -> i32 {
                 &r,
                 sim_cfg.dead_channel_ratio + sim_cfg.zero_blob_ratio,
             )
+        };
+        // A multi-core tuned winner pipelines the serving network over
+        // its cores: the dispatcher balances/admits on the per-image
+        // pipeline throughput cost, not the single-core total.
+        if hw.cores > 1 {
+            let batch = sim::simulate_network_batch(
+                &mapped, &m.spec, &hw, &sim_cfg, 8, threads,
+            );
+            let ipu = sim::scheme_has_ipu(&serve_scheme_name)
+                && sim_cfg.zero_detection;
+            let problem = sim::placement::PlacementProblem::from_batch(
+                &batch, &m.spec, &hw, &sim_cfg, ipu,
+            );
+            let plan = sim::placement::plan(&problem);
+            let speedup = batch.total_cycles()
+                / plan.pipeline_makespan(batch.n_images()).max(1e-12);
+            println!(
+                "[serve] multi-core placement: {} cores ({}), pipeline \
+                 speedup {:.2}x",
+                hw.cores, plan.method, speedup,
+            );
+            cm.with_pipeline_speedup(speedup)
+        } else {
+            cm
         }
     });
     let factory = EngineFactory::new(format!("{dir}/smallcnn_b8.hlo.txt"));

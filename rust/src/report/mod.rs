@@ -12,6 +12,7 @@ use std::path::Path;
 use crate::coordinator::{MetricsSnapshot, WorkerStats};
 use crate::pruning::synthetic::DatasetProfile;
 use crate::pruning::NetworkStats;
+use crate::sim::placement::PlacementPlan;
 use crate::sim::{Comparison, ShardPlan};
 use crate::util::json::{arr_f64, arr_usize, obj, Json};
 use crate::xbar::energy::EnergyLedger;
@@ -336,6 +337,73 @@ pub fn shard_plan_json(plan: &ShardPlan, achieved: &[f64]) -> Json {
         (
             "share_divergence",
             shard_share_divergence(&plan.loads, achieved).into(),
+        ),
+    ])
+}
+
+/// Per-core placement table for the `place` subcommand: one row per
+/// CIM core with its layer set, compute/transfer/stage cycle totals
+/// and utilization against the bottleneck stage.
+pub fn placement_table(plan: &PlacementPlan, n_images: usize) -> String {
+    let stages = plan.stage_times();
+    let util = plan.utilization();
+    let mut s = format!(
+        "placement ({}, {} cores):\n  {:<5} {:<14} {:>16} {:>14} {:>16} {:>7}\n",
+        plan.method,
+        plan.n_cores,
+        "core",
+        "layers",
+        "compute",
+        "transfer",
+        "stage",
+        "util",
+    );
+    for c in 0..plan.n_cores {
+        let layers: Vec<String> = plan
+            .assignment
+            .iter()
+            .enumerate()
+            .filter(|&(_, &a)| a == c)
+            .map(|(l, _)| l.to_string())
+            .collect();
+        s.push_str(&format!(
+            "  {:<5} {:<14} {:>16.0} {:>14.1} {:>16.1} {:>6.1}%\n",
+            c,
+            if layers.is_empty() { "-".to_string() } else { layers.join(",") },
+            plan.compute[c],
+            plan.transfer[c],
+            stages[c],
+            util[c] * 100.0,
+        ));
+    }
+    s.push_str(&format!(
+        "  max stage {:.0}  total transfer {:.1}  pipeline makespan {:.0} \
+         ({} images)",
+        plan.max_stage_time(),
+        plan.total_transfer_cycles(),
+        plan.pipeline_makespan(n_images),
+        n_images,
+    ));
+    s
+}
+
+/// Placement JSON artifact (the `place` subcommand, under `results/`):
+/// the plan with its per-core breakdown plus the pipelined batch
+/// makespan and its speedup over the non-pipelined single-core total.
+pub fn placement_json(
+    plan: &PlacementPlan,
+    n_images: usize,
+    single_core_cycles: f64,
+) -> Json {
+    let makespan = plan.pipeline_makespan(n_images);
+    obj(vec![
+        ("plan", plan.to_json()),
+        ("n_images", n_images.into()),
+        ("pipeline_makespan_cycles", makespan.into()),
+        ("single_core_cycles", single_core_cycles.into()),
+        (
+            "pipeline_speedup",
+            (single_core_cycles / makespan.max(1e-12)).into(),
         ),
     ])
 }
@@ -722,6 +790,33 @@ mod tests {
             j.get("plan").get("n_shards").as_usize(),
             Some(2)
         );
+    }
+
+    #[test]
+    fn placement_emitters() {
+        use crate::sim::placement::{plan, PlacementProblem};
+        let p = PlacementProblem {
+            layer_cycles: vec![10.0, 10.0, 1.0, 1.0],
+            transfer_bytes: vec![1.0, 1.0, 1.0],
+            n_cores: 2,
+            noc_bandwidth: 1000.0,
+            noc_hop_latency: 0.0,
+        };
+        let best = plan(&p);
+        let s = placement_table(&best, 8);
+        assert!(s.contains("placement (greedy-lpt, 2 cores)"), "{s}");
+        assert!(s.contains("max stage"), "{s}");
+        assert!(s.contains("pipeline makespan"), "{s}");
+        let j = placement_json(&best, 8, 22.0);
+        assert_eq!(j.get("n_images").as_usize(), Some(8));
+        assert!(j.get("pipeline_speedup").as_f64().unwrap() > 1.0);
+        assert_eq!(j.get("plan").get("n_cores").as_usize(), Some(2));
+        assert_eq!(
+            j.get("plan").get("utilization").as_arr().map(|a| a.len()),
+            Some(2)
+        );
+        // round-trips through the parser
+        assert_eq!(Json::parse(&j.to_string_compact()).unwrap(), j);
     }
 
     #[test]

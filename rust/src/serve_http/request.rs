@@ -201,7 +201,15 @@ fn parse_head(head: &[u8], max_body: usize) -> Result<RequestHead, ReadError> {
         let (name, value) = line
             .split_once(':')
             .ok_or(ReadError::BadRequest("malformed header line"))?;
-        if name.is_empty() || name.contains(' ') {
+        // RFC 9112 §5.1: the field name is a token — no whitespace of
+        // any kind (space, HTAB, bare CR, ...), no control bytes, no
+        // DEL. Rejecting only ' ' would let `Content-Length\t: N` parse
+        // as an *unknown* header, bypassing the body-length checks and
+        // letting the payload be reparsed as a pipelined request
+        // (request smuggling).
+        if name.is_empty()
+            || name.bytes().any(|b| b <= b' ' || b == 0x7f || !b.is_ascii())
+        {
             return Err(ReadError::BadRequest("malformed header name"));
         }
         let value = value.trim();
@@ -224,10 +232,17 @@ fn parse_head(head: &[u8], max_body: usize) -> Result<RequestHead, ReadError> {
                 "Transfer-Encoding is not supported; use Content-Length",
             ));
         } else if name.eq_ignore_ascii_case("connection") {
-            if value.eq_ignore_ascii_case("close") {
-                connection_close = true;
-            } else if value.eq_ignore_ascii_case("keep-alive") {
-                connection_close = false;
+            // RFC 9110 §7.6.1: Connection carries a comma-separated
+            // token list (`Connection: keep-alive, Upgrade`); comparing
+            // the whole value would match neither branch and silently
+            // keep the default.
+            for token in value.split(',') {
+                let token = token.trim();
+                if token.eq_ignore_ascii_case("close") {
+                    connection_close = true;
+                } else if token.eq_ignore_ascii_case("keep-alive") {
+                    connection_close = false;
+                }
             }
         }
     }
@@ -280,6 +295,61 @@ mod tests {
         assert!(h.connection_close);
         let (h, _) = read_all(b"GET / HTTP/1.0\r\n\r\n", 1024).unwrap();
         assert!(h.connection_close, "HTTP/1.0 defaults to close");
+    }
+
+    #[test]
+    fn connection_token_lists_match_per_token() {
+        // `close` buried in a token list must still close.
+        let (h, _) = read_all(
+            b"GET / HTTP/1.1\r\nConnection: Upgrade, close\r\n\r\n",
+            1024,
+        )
+        .unwrap();
+        assert!(h.connection_close, "close token in a list");
+        // `keep-alive` in a list overrides the HTTP/1.0 close default.
+        let (h, _) = read_all(
+            b"GET / HTTP/1.0\r\nConnection: keep-alive, Upgrade\r\n\r\n",
+            1024,
+        )
+        .unwrap();
+        assert!(!h.connection_close, "keep-alive token in a list");
+        // Case-insensitive, arbitrary whitespace around tokens.
+        let (h, _) = read_all(
+            b"GET / HTTP/1.1\r\nConnection:  Keep-Alive ,  CLOSE \r\n\r\n",
+            1024,
+        )
+        .unwrap();
+        assert!(h.connection_close, "CLOSE recognized case-insensitively");
+        // Unrelated tokens leave the version default untouched.
+        let (h, _) = read_all(
+            b"GET / HTTP/1.1\r\nConnection: Upgrade\r\n\r\n",
+            1024,
+        )
+        .unwrap();
+        assert!(!h.connection_close);
+    }
+
+    #[test]
+    fn whitespace_and_control_bytes_in_header_names_are_rejected() {
+        // The smuggling vector: `Content-Length\t:` must be malformed,
+        // not an unknown header that silently drops the body length.
+        for input in [
+            &b"POST /x HTTP/1.1\r\nContent-Length\t: 4\r\n\r\nabcd"[..],
+            b"POST /x HTTP/1.1\r\nContent-Length : 4\r\n\r\nabcd",
+            b"POST /x HTTP/1.1\r\nContent-Length\r: 4\r\n\r\nabcd",
+            b"POST /x HTTP/1.1\r\nX\x0bY: v\r\n\r\n",
+            b"POST /x HTTP/1.1\r\nX\x01Y: v\r\n\r\n",
+            b"POST /x HTTP/1.1\r\nX\x7fY: v\r\n\r\n",
+        ] {
+            match read_all(input, 1024) {
+                Err(ReadError::BadRequest(m)) => {
+                    assert!(m.contains("header name"), "{m:?} for {input:?}")
+                }
+                other => {
+                    panic!("expected BadRequest for {input:?}, got {other:?}")
+                }
+            }
+        }
     }
 
     #[test]

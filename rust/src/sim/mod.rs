@@ -69,6 +69,7 @@
 //! are bit-exact with independent per-image runs.
 
 pub mod functional;
+pub mod placement;
 pub mod smallcnn;
 pub mod workload;
 
@@ -209,6 +210,21 @@ impl BatchSimResult {
         self.per_image.iter().map(|r| r.total_cycles()).collect()
     }
 
+    /// Per-layer cycles summed across the batch's images (image order
+    /// within each layer), in layer order — the compute costs the
+    /// layer-to-core placement planner ([`placement`]) balances.
+    pub fn layer_cycles(&self) -> Vec<f64> {
+        let n_layers =
+            self.per_image.first().map(|r| r.layers.len()).unwrap_or(0);
+        let mut out = vec![0.0; n_layers];
+        for r in &self.per_image {
+            for (li, l) in r.layers.iter().enumerate() {
+                out[li] += l.cycles;
+            }
+        }
+        out
+    }
+
     /// First-order predicted per-image cost: executed OU ops only, no
     /// block-switch overhead — what a cheap cost model sees before the
     /// full cycle accounting is known. Shard plans are built on these
@@ -279,8 +295,22 @@ pub struct ShardPlan {
     pub loads: Vec<f64>,
 }
 
+/// Clamp one item cost for planning: negatives clamp to 0 (documented
+/// behavior) and NaN — one bad calibration fit away — collapses to 0
+/// too. Without this the LPT comparator is non-total (order-dependent
+/// plans, and `sort_by` may panic outright on its totality check). The
+/// `+ 0.0` collapses -0.0 so `total_cmp` ordering is stable.
+pub(crate) fn plan_cost(c: f64) -> f64 {
+    if c.is_nan() {
+        0.0
+    } else {
+        c.max(0.0) + 0.0
+    }
+}
+
 impl ShardPlan {
-    /// Build a plan under `policy` (negative costs are clamped to 0).
+    /// Build a plan under `policy` (negative and NaN costs are clamped
+    /// to 0).
     pub fn plan(costs: &[f64], n_shards: usize, policy: ShardPolicy) -> ShardPlan {
         match policy {
             ShardPolicy::CostBalanced => Self::cost_balanced(costs, n_shards),
@@ -301,15 +331,13 @@ impl ShardPlan {
     /// and kept if it strictly beats the greedy one.
     pub fn cost_balanced(costs: &[f64], n_shards: usize) -> ShardPlan {
         let n_shards = n_shards.max(1);
-        let mut order: Vec<usize> = (0..costs.len()).collect();
+        let clamped: Vec<f64> = costs.iter().map(|&c| plan_cost(c)).collect();
+        let mut order: Vec<usize> = (0..clamped.len()).collect();
         order.sort_by(|&a, &b| {
-            costs[b]
-                .partial_cmp(&costs[a])
-                .unwrap_or(std::cmp::Ordering::Equal)
-                .then(a.cmp(&b))
+            clamped[b].total_cmp(&clamped[a]).then(a.cmp(&b))
         });
         let mut greedy_loads = vec![0.0; n_shards];
-        let mut assignment = vec![0usize; costs.len()];
+        let mut assignment = vec![0usize; clamped.len()];
         for &i in &order {
             // argmin load, first minimum on ties (deterministic)
             let mut best = 0usize;
@@ -319,7 +347,7 @@ impl ShardPlan {
                 }
             }
             assignment[i] = best;
-            greedy_loads[best] += costs[i].max(0.0);
+            greedy_loads[best] += clamped[i];
         }
         let lpt = Self::from_assignment(
             ShardPolicy::CostBalanced,
@@ -378,7 +406,7 @@ impl ShardPlan {
         );
         let mut loads = vec![0.0; self.n_shards];
         for (i, &s) in self.assignment.iter().enumerate() {
-            loads[s] += costs[i].max(0.0);
+            loads[s] += plan_cost(costs[i]);
         }
         loads
     }

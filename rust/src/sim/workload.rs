@@ -119,6 +119,17 @@ impl LayerTrace {
         z as f64 / self.masks.len().max(1) as f64
     }
 
+    /// Fraction of individual patch *entries* that are zero — mean
+    /// popcount of the 9-bit masks over 9. This is the activation-level
+    /// sparsity the inter-core transfer model discounts by when the
+    /// receiving core's IPU can reconstruct zeros locally
+    /// (`sim::placement::edge_transfer_bytes`).
+    pub fn zero_entry_fraction(&self) -> f64 {
+        let bits: u64 =
+            self.masks.iter().map(|m| m.count_ones() as u64).sum();
+        bits as f64 / (9 * self.masks.len().max(1)) as f64
+    }
+
     /// Collapse this trace into the skippable-position histogram for a
     /// layer's block keys, in O(positions × cin) bitmask work: one
     /// mask→subset lookup table turns every (position, channel) visit

@@ -25,6 +25,8 @@ fn tiny_spec(seed: u64) -> SweepSpec {
         pruning: vec![0.8],
         zero_detection: vec![true],
         block_switch: vec![2.0],
+        cores: vec![1],
+        interconnect: vec![(32.0, 4.0)],
         workload: Workload {
             name: "tiny".into(),
             layers: vec![
@@ -472,6 +474,65 @@ fn exact_auto_tune_matches_hand_computed_selection() {
     assert!((est.input_zero_fraction - 0.5).abs() < 1e-12);
     let keep = (1.0 - cm.skip_slope * 0.5).clamp(0.0, 1.0);
     assert_eq!(est.est_cycles, cm.dense_cycles * keep);
+}
+
+/// ISSUE-10 acceptance: widening the small grid with the multi-core
+/// scale-out axes (`--cores 1,2,4`, fast interconnect) puts at least
+/// one multi-core point on the Pareto frontier — pipelining cuts
+/// cycles at unchanged area/energy — while the frontier stays
+/// byte-identical across thread counts and single-core points keep
+/// their historical metrics bit-for-bit.
+#[test]
+fn multicore_axes_reach_the_frontier_and_stay_deterministic() {
+    let spec = tiny_spec(42).with_core_axes(&[1, 2, 4], &[(1e6, 0.0)]);
+    let a = SweepRunner { spec: spec.clone(), threads: 2, cache: None }.run();
+    let b = SweepRunner { spec, threads: 4, cache: None }.run();
+    assert_eq!(
+        a.frontier_json().to_string_pretty(),
+        b.frontier_json().to_string_pretty(),
+        "multi-core frontier must be thread-invariant"
+    );
+    assert!(
+        a.frontier.members.iter().any(|&i| a.results[i].point.cores > 1),
+        "no multi-core point reached the frontier"
+    );
+    // Multi-core evaluation changes the cycle metric only: every
+    // multi-core point's single-core sibling (same point, cores = 1)
+    // reports bit-identical area/energy/ou_ops, and the near-free
+    // interconnect means pipelining never slows the batch.
+    for r in &a.results {
+        if r.point.cores == 1 {
+            continue;
+        }
+        let Some(m) = r.metrics() else { continue };
+        let sibling = a
+            .results
+            .iter()
+            .find(|o| {
+                o.point.cores == 1
+                    && o.point.scheme == r.point.scheme
+                    && o.point.ou_rows == r.point.ou_rows
+                    && o.point.ou_cols == r.point.ou_cols
+                    && o.point.xbar_rows == r.point.xbar_rows
+                    && o.point.xbar_cols == r.point.xbar_cols
+                    && o.point.n_patterns == r.point.n_patterns
+                    && o.point.pruning == r.point.pruning
+                    && o.point.zero_detection == r.point.zero_detection
+                    && o.point.block_switch_cycles == r.point.block_switch_cycles
+            })
+            .expect("single-core sibling in grid");
+        let sm = sibling.metrics().unwrap();
+        assert_eq!(m.area_cells, sm.area_cells, "area is placement-invariant");
+        assert_eq!(m.energy_pj, sm.energy_pj, "energy is placement-invariant");
+        assert_eq!(m.ou_ops, sm.ou_ops, "work is placement-invariant");
+        assert!(
+            m.cycles <= sm.cycles + 1.0,
+            "pipelining slowed {}: {} vs {}",
+            r.point.label(),
+            m.cycles,
+            sm.cycles
+        );
+    }
 }
 
 /// The auto-tune bridge: a weighted objective selects a frontier point
